@@ -1,0 +1,38 @@
+//! Diagnostic: per-round details of a GREEDY HAR campaign.
+//! Run: cargo run --release --example debug_campaign
+
+use aic::coordinator::experiment::{run_har_policy, HarContext, HarRunSpec};
+use aic::exec::Policy;
+use aic::har::Activity;
+
+fn main() {
+    let ctx = HarContext::build(42 ^ 0xC0FFEE);
+    println!("ceiling accuracy = {:.1}%", 100.0 * ctx.full_accuracy);
+    let spec = HarRunSpec { horizon: 7200.0, sample_period: 60.0, script_seed: 42 };
+    let c = run_har_policy(&ctx, &spec, Policy::Greedy);
+    let mut by_class = vec![(0usize, 0usize); 6]; // (correct, total)
+    let mut feats = Vec::new();
+    for r in c.emitted() {
+        if let Some(o) = &r.output {
+            by_class[o.truth as usize].1 += 1;
+            if o.predicted == o.truth as usize {
+                by_class[o.truth as usize].0 += 1;
+            }
+            feats.push(o.features_used as f64);
+            if feats.len() <= 25 {
+                println!(
+                    "t={:7.0} truth={:<18} pred={:<2} p={}",
+                    r.acquired_at,
+                    o.truth.name(),
+                    o.predicted,
+                    o.features_used
+                );
+            }
+        }
+    }
+    println!("\nmean features used = {:.1}", aic::util::stats::mean(&feats));
+    for a in Activity::ALL {
+        let (c_, t_) = by_class[a as usize];
+        println!("{:<20} {}/{}", a.name(), c_, t_);
+    }
+}

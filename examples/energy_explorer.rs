@@ -1,0 +1,105 @@
+//! Energy design-space explorer: the §4.1 capacitor-sizing study plus
+//! runtime ablations.
+//!
+//! Sweeps the energy-buffer size ("a too large capacitor may take long to
+//! charge ... a too small capacitor may not suffice for worst-case
+//! processing"), the GREEDY safety margin, and the anytime feature order
+//! (magnitude vs reversed — the §5.1 validation of Eq. 6's ordering).
+//!
+//! Run: `cargo run --release --example energy_explorer`
+
+use aic::coordinator::experiment::HarContext;
+use aic::coordinator::metrics::har_accuracy;
+use aic::coordinator::report::{f2, pct, Table};
+use aic::energy::harvester::{kinetic_power_trace, Harvester, KineticConfig};
+use aic::exec::approx::{run as run_approx, ApproxConfig};
+use aic::exec::engine::{Engine, EngineConfig};
+use aic::har::app::{HarProgram, WindowSource};
+use aic::har::dataset::ActivityScript;
+use aic::svm::anytime::AnytimeSvm;
+use aic::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let out = args.get_or("out", "out");
+    let horizon = args.get_f64("hours", 2.0) * 3600.0;
+    let ctx = HarContext::build(42);
+    let script = ActivityScript::generate(horizon, 3);
+    let accel = script.accel_magnitude(50.0);
+    let trace = kinetic_power_trace(&accel, 50.0, &KineticConfig::default());
+
+    // --- Capacitor sweep (the paper's 1470 uF sizing study) ---
+    let mut cap_table = Table::new(
+        "Capacitor sizing sweep (GREEDY, kinetic energy)",
+        &["capacitance (uF)", "results", "accuracy", "mean features", "power cycles"],
+    );
+    for cap_uf in [220.0, 470.0, 1000.0, 1470.0, 2200.0, 4700.0] {
+        let mut cfg = EngineConfig::paper_default(horizon);
+        cfg.capacitor =
+            aic::energy::capacitor::Capacitor::new(cap_uf * 1e-6, 3.6, 3.0, 1.8);
+        cfg.initial_voltage = 3.0;
+        let mut engine = Engine::new(cfg, Harvester::Replay(trace.clone()));
+        let mut prog =
+            HarProgram::new(ctx.asvm.clone(), WindowSource::Script(script.clone()));
+        let c = run_approx(&mut prog, &mut engine, &ApproxConfig::greedy(60.0));
+        let mean_feats = {
+            let v: Vec<f64> = c.emitted().map(|r| r.steps_executed as f64).collect();
+            aic::util::stats::mean(&v)
+        };
+        cap_table.push(vec![
+            format!("{cap_uf:.0}"),
+            c.emitted().count().to_string(),
+            pct(har_accuracy(&c)),
+            f2(mean_feats),
+            c.power_cycles.to_string(),
+        ]);
+    }
+    cap_table.emit(out, "ablation_capacitor").expect("write");
+
+    // --- GREEDY margin sweep ---
+    let mut margin_table = Table::new(
+        "GREEDY safety-margin sweep",
+        &["margin", "results", "lost samples", "accuracy"],
+    );
+    for margin in [1.0, 1.05, 1.2, 1.5, 2.0] {
+        let mut cfg = ApproxConfig::greedy(60.0);
+        cfg.margin = margin;
+        let mut engine =
+            Engine::new(EngineConfig::paper_default(horizon), Harvester::Replay(trace.clone()));
+        let mut prog =
+            HarProgram::new(ctx.asvm.clone(), WindowSource::Script(script.clone()));
+        let c = run_approx(&mut prog, &mut engine, &cfg);
+        let lost = c.rounds.iter().filter(|r| r.emitted_at.is_none()).count();
+        margin_table.push(vec![
+            f2(margin),
+            c.emitted().count().to_string(),
+            lost.to_string(),
+            pct(har_accuracy(&c)),
+        ]);
+    }
+    margin_table.emit(out, "ablation_margin").expect("write");
+
+    // --- Feature-order ablation (§5.1: magnitude order matters) ---
+    let mut order_table = Table::new(
+        "Anytime feature-order ablation (accuracy at fixed prefix)",
+        &["order", "p=20", "p=40", "p=80"],
+    );
+    let (rows, labels) = aic::har::dataset::Corpus::features(&ctx.corpus.test);
+    let ps = [20usize, 40, 80];
+    let magnitude = ctx.asvm.accuracy_curve(&rows, &labels, &ps);
+    let reversed = AnytimeSvm::by_reverse_magnitude(ctx.asvm.svm.clone())
+        .accuracy_curve(&rows, &labels, &ps);
+    order_table.push(vec![
+        "by |coefficient| (paper)".into(),
+        pct(magnitude[0]),
+        pct(magnitude[1]),
+        pct(magnitude[2]),
+    ]);
+    order_table.push(vec![
+        "reversed (worst case)".into(),
+        pct(reversed[0]),
+        pct(reversed[1]),
+        pct(reversed[2]),
+    ]);
+    order_table.emit(out, "ablation_order").expect("write");
+}

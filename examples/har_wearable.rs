@@ -1,0 +1,157 @@
+//! End-to-end validation driver (EXPERIMENTS.md §End-to-end).
+//!
+//! The full HAR system on a realistic workload: a multi-volunteer,
+//! multi-hour wearable campaign where the *same* synthetic wrist motion
+//! powers the device (through the kinetic-transducer model) and produces
+//! the windows it classifies — the paper's §5.3/§5.4 trial, in
+//! simulation. Every policy runs on every volunteer via the device
+//! fleet; the PJRT artifacts replay the emitted classifications in one
+//! batched call as an independent cross-check of the on-device math.
+//!
+//! Run: `cargo run --release --example har_wearable -- [--volunteers 6] [--hours 8]`
+
+use aic::coordinator::experiment::{har_policies, HarContext, HarRunSpec};
+use aic::coordinator::fleet::{run_har_fleet, Assignment};
+use aic::coordinator::metrics::{har_accuracy, har_coherence, same_cycle_fraction};
+use aic::coordinator::report::{pct, ratio, Table};
+use aic::exec::Policy;
+use aic::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let n_volunteers = args.get_usize("volunteers", 6);
+    let hours = args.get_f64("hours", 8.0);
+    let out = args.get_or("out", "out");
+
+    println!("== offline phase: corpus, training, Eq.7 analysis ==");
+    let ctx = HarContext::build(42);
+    println!("ceiling accuracy: {:.1}%", 100.0 * ctx.full_accuracy);
+
+    let spec = HarRunSpec { horizon: hours * 3600.0, ..Default::default() };
+    let volunteers: Vec<u64> = (1..=n_volunteers as u64).collect();
+    let policies = har_policies();
+
+    // Fleet: one device per (volunteer, policy) — 5 policies x N wrists.
+    let assignments: Vec<Assignment> = policies
+        .iter()
+        .flat_map(|&policy| {
+            volunteers.iter().map(move |&v| Assignment { volunteer: v, policy })
+        })
+        .collect();
+    println!(
+        "== running {} simulated devices ({} volunteers x {} policies, {:.0} h each) ==",
+        assignments.len(),
+        n_volunteers,
+        policies.len(),
+        hours
+    );
+    let t0 = std::time::Instant::now();
+    let campaigns = run_har_fleet(&ctx, &spec, &assignments);
+    println!("fleet finished in {:.1}s wall-clock", t0.elapsed().as_secs_f64());
+
+    // Index: campaigns[policy_idx * n_volunteers + vol_idx].
+    let get = |pi: usize, vi: usize| &campaigns[pi * n_volunteers + vi];
+    let cont_idx = policies.iter().position(|p| *p == Policy::Continuous).unwrap();
+    let chin_idx = policies.iter().position(|p| *p == Policy::Chinchilla).unwrap();
+
+    let mut table = Table::new(
+        "HAR wearable campaign (end-to-end validation)",
+        &[
+            "policy",
+            "results",
+            "accuracy",
+            "coherence vs cont",
+            "thrpt vs cont",
+            "thrpt vs chinchilla",
+            "same-cycle",
+            "state energy",
+        ],
+    );
+    for (pi, policy) in policies.iter().enumerate() {
+        let mut results = 0usize;
+        let (mut acc, mut coh, mut tc, mut tch, mut sc, mut se) =
+            (0.0, 0.0, 0.0, 0.0, 0.0, 0.0);
+        for vi in 0..n_volunteers {
+            let c = get(pi, vi);
+            results += c.emitted().count();
+            acc += har_accuracy(c);
+            coh += har_coherence(c, get(cont_idx, vi), spec.sample_period);
+            let cont_thr = get(cont_idx, vi).throughput();
+            let chin_thr = get(chin_idx, vi).throughput();
+            tc += if cont_thr > 0.0 { c.throughput() / cont_thr } else { 0.0 };
+            tch += if chin_thr > 0.0 { c.throughput() / chin_thr } else { 0.0 };
+            sc += same_cycle_fraction(c);
+            let tot = c.app_energy + c.state_energy;
+            se += if tot > 0.0 { c.state_energy / tot } else { 0.0 };
+        }
+        let n = n_volunteers as f64;
+        table.push(vec![
+            policy.name(),
+            results.to_string(),
+            pct(acc / n),
+            pct(coh / n),
+            pct(tc / n),
+            ratio(tch / n),
+            pct(sc / n),
+            pct(se / n),
+        ]);
+    }
+    table.emit(out, "har_wearable").expect("write report");
+
+    // Cross-check: replay the greedy device's emitted feature vectors
+    // through the PJRT svm_prefix artifact in one batched call.
+    match aic::runtime::ArtifactRuntime::load("artifacts") {
+        Ok(rt) => {
+            let n = 140usize;
+            let c = ctx.asvm.svm.classes;
+            // Re-derive classifications for a batch of test windows.
+            let (rows, _) = aic::har::dataset::Corpus::features(&ctx.corpus.test);
+            let batch = 256.min(rows.len());
+            let mut x = vec![0.0f32; 256 * n];
+            for (i, row) in rows.iter().take(batch).enumerate() {
+                let scaled = ctx.asvm.svm.scaler.apply(row);
+                // In anytime order, as the device processes them.
+                for (slot, &j) in ctx.asvm.order.iter().enumerate() {
+                    x[i * n + slot] = scaled[j] as f32;
+                }
+            }
+            let mut w = vec![0.0f32; c * n];
+            for (k, row) in ctx.asvm.svm.weights.iter().enumerate() {
+                for (slot, &j) in ctx.asvm.order.iter().enumerate() {
+                    w[k * n + slot] = row[j] as f32;
+                }
+            }
+            let bias: Vec<f32> = ctx.asvm.svm.bias.iter().map(|&b| b as f32).collect();
+            let mask: Vec<f32> = vec![1.0; n];
+            let outp = rt
+                .execute(
+                    "svm_prefix",
+                    &[
+                        aic::runtime::Tensor::new(vec![256, n], x),
+                        aic::runtime::Tensor::new(vec![c, n], w),
+                        aic::runtime::Tensor::new(vec![c], bias),
+                        aic::runtime::Tensor::new(vec![n], mask),
+                    ],
+                )
+                .expect("pjrt replay");
+            let mut agree = 0usize;
+            for (i, row) in rows.iter().take(batch).enumerate() {
+                let rust_class = ctx.asvm.svm.classify(row);
+                let xla_class = (0..c)
+                    .max_by(|&a, &b| {
+                        outp.data[i * c + a].partial_cmp(&outp.data[i * c + b]).unwrap()
+                    })
+                    .unwrap();
+                if rust_class == xla_class {
+                    agree += 1;
+                }
+            }
+            println!(
+                "PJRT batched replay agreement with on-device math: {}/{batch}",
+                agree
+            );
+            assert!(agree * 100 >= batch * 98, "XLA replay disagrees with Rust path");
+        }
+        Err(e) => println!("(PJRT cross-check skipped: {e})"),
+    }
+}

@@ -1,0 +1,55 @@
+//! Inspect a trained anytime SVM: feature ordering, per-feature
+//! discriminative power, and the accuracy curve — the offline analysis a
+//! deployment would run before provisioning SMART tables.
+//!
+//! Run: `cargo run --release --example inspect_model [--seed N] [--top K]`
+
+use aic::coordinator::experiment::HarContext;
+use aic::har::dataset::Corpus;
+use aic::har::features::feature_name;
+use aic::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let seed = args.get_u64("seed", 42);
+    let top = args.get_usize("top", 25);
+
+    eprintln!("building context (corpus + training)...");
+    let ctx = HarContext::build(seed);
+    let asvm = &ctx.asvm;
+    println!("full-model held-out accuracy: {:.1}%", 100.0 * ctx.full_accuracy);
+
+    // Per-feature aggregate weight magnitude and between-class spread.
+    let (rows, labels) = Corpus::features(&ctx.corpus.train);
+    let scaled: Vec<Vec<f64>> = rows.iter().map(|r| asvm.svm.scaler.apply(r)).collect();
+    println!("\n# anytime order (top {top})");
+    println!("{:<4} {:<18} {:>8} {:>10}", "rank", "feature", "sum|w|", "spread");
+    for (rank, &j) in asvm.order.iter().take(top).enumerate() {
+        let mag: f64 = asvm.svm.weights.iter().map(|w| w[j].abs()).sum();
+        // Between-class spread of the standardised feature.
+        let mut class_mean = vec![0.0; 6];
+        let mut count = vec![0usize; 6];
+        for (r, &l) in scaled.iter().zip(labels.iter()) {
+            class_mean[l] += r[j];
+            count[l] += 1;
+        }
+        for c in 0..6 {
+            class_mean[c] /= count[c].max(1) as f64;
+        }
+        let spread = class_mean.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+            - class_mean.iter().cloned().fold(f64::INFINITY, f64::min);
+        println!("{:<4} {:<18} {:>8.3} {:>10.3}", rank, feature_name(j), mag, spread);
+    }
+
+    // Accuracy curve at a few prefix lengths.
+    let (test_rows, test_labels) = Corpus::features(&ctx.corpus.test);
+    let ps: Vec<usize> = vec![0, 1, 2, 3, 5, 8, 12, 20, 30, 50, 80, 140];
+    let acc = asvm.accuracy_curve(&test_rows, &test_labels, &ps);
+    println!("\n# accuracy by prefix length");
+    for (p, a) in ps.iter().zip(acc.iter()) {
+        println!("p={:<4} accuracy={:.1}%", p, 100.0 * a);
+    }
+
+    // Bias magnitudes (an argmax stuck on biases shows up here).
+    println!("\n# biases: {:?}", asvm.svm.bias);
+}

@@ -1,0 +1,16 @@
+//! §Perf probe: where does one figure campaign spend its time?
+use aic::coordinator::experiment::{run_har_policy, HarContext, HarRunSpec};
+use aic::exec::Policy;
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    let ctx = HarContext::build(42);
+    println!("context build: {:.0} ms", t0.elapsed().as_millis());
+    for policy in [Policy::Continuous, Policy::Chinchilla, Policy::Greedy, Policy::Smart{bound:0.8}] {
+        let t = Instant::now();
+        let spec = HarRunSpec { horizon: 4.0*3600.0, sample_period: 60.0, script_seed: 1 };
+        let c = run_har_policy(&ctx, &spec, policy);
+        println!("{:<12} {:>6.0} ms  rounds={} cycles={}", policy.name(), t.elapsed().as_millis(), c.rounds.len(), c.power_cycles);
+    }
+}

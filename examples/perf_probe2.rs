@@ -1,0 +1,25 @@
+//! §Perf micro-probe: cost split of one GREEDY round.
+use aic::energy::harvester::Harvester;
+use aic::energy::traces::{generate, TraceKind};
+use aic::exec::engine::{Engine, EngineConfig};
+use aic::har::dataset::{ActivityScript};
+use aic::har::features::extract_all;
+use std::time::Instant;
+
+fn main() {
+    let trace = generate(TraceKind::Sim, 1800.0, 0.01, 1);
+    let mut e = Engine::new(EngineConfig::paper_default(1e9), Harvester::Replay(trace));
+    let t = Instant::now();
+    for _ in 0..100 { let _ = e.sleep(57.0); e.cap.set_voltage(3.2); }
+    println!("sleep(57s): {:.0} us/round", t.elapsed().as_micros() as f64 / 100.0);
+
+    let script = ActivityScript::generate(3600.0, 1);
+    let t = Instant::now();
+    for i in 0..100 { let _ = script.window_at(i as f64 * 36.0); }
+    println!("window_at: {:.0} us/round", t.elapsed().as_micros() as f64 / 100.0);
+
+    let lw = script.window_at(100.0);
+    let t = Instant::now();
+    for _ in 0..100 { let _ = extract_all(&lw.window); }
+    println!("extract_all: {:.0} us/round", t.elapsed().as_micros() as f64 / 100.0);
+}

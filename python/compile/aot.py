@@ -1,0 +1,124 @@
+"""AOT lowering: JAX pipelines -> HLO-text artifacts + manifest.
+
+HLO *text* (not `.serialize()`) is the interchange format: jax >= 0.5
+emits HloModuleProtos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Run as `python -m compile.aot --out-dir ../artifacts` (what
+`make artifacts` does). Python never runs again after this: the Rust
+binary loads the artifacts through PJRT.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# Fixed artifact shapes (recorded in the manifest; the Rust runtime
+# asserts against them). Batch sizes are the replay-batch granularity.
+BATCH = 256
+CHANNELS = 6
+WINDOW = 128
+FEATURES = 140
+CLASSES = 6
+CHUNK = 16
+IMG = 160
+E2E_FEATURES = CHANNELS * 9  # channel_features output width
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def entries():
+    """(name, fn, example_args, description) for every artifact."""
+    return [
+        (
+            "svm_prefix",
+            model.svm_prefix,
+            (f32(BATCH, FEATURES), f32(CLASSES, FEATURES), f32(CLASSES), f32(FEATURES)),
+            "masked OvR scores: (x, w, b, mask) -> [B, C]",
+        ),
+        (
+            "svm_incremental",
+            model.svm_incremental,
+            (f32(BATCH, CLASSES), f32(BATCH, CHUNK), f32(CLASSES, CHUNK)),
+            "anytime step: (s, x_chunk, w_chunk) -> [B, C]",
+        ),
+        (
+            "feature_stats",
+            model.feature_stats,
+            (f32(BATCH, WINDOW),),
+            "window stats: x -> [B, 5] (mean, std, energy, min, max)",
+        ),
+        (
+            "spectral_power",
+            model.spectral_power,
+            (f32(BATCH, WINDOW),),
+            "DFT-as-matmul power spectrum: x -> [B, T/2+1]",
+        ),
+        (
+            "har_e2e",
+            model.har_pipeline,
+            (
+                f32(BATCH, CHANNELS, WINDOW),
+                f32(CLASSES, E2E_FEATURES),
+                f32(CLASSES),
+                f32(E2E_FEATURES),
+            ),
+            "windows -> channel features -> masked scores [B, C]",
+        ),
+        (
+            "harris",
+            model.harris_pipeline,
+            (f32(IMG, IMG), f32(IMG)),
+            "perforated Harris response: (img, row_mask) -> [H, W]",
+        ),
+    ]
+
+
+def lower_all(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"format": "hlo-text", "artifacts": {}}
+    for name, fn, args, desc in entries():
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "description": desc,
+            "inputs": [list(a.shape) for a in args],
+            "bytes": len(text),
+        }
+        print(f"lowered {name}: {len(text)} chars -> {path}")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    lower_all(args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

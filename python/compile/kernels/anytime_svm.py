@@ -1,0 +1,104 @@
+"""L1 Pallas kernels for anytime OvR-SVM scoring.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's hot loop
+is a fixed-point MAC chain on a 16-bit MCU. On TPU the same computation —
+scores over a feature *prefix* — becomes an MXU matmul over the batch of
+windows the emulation experiments replay: `S = (X ⊙ mask) @ Wᵀ + b`. The
+prefix knob is a VMEM-resident 0/1 mask so every prefix length shares one
+compiled executable. The incremental (anytime) refinement step is a thin
+matmul over a feature chunk, accumulated into the cached scores exactly
+like the MCU's cached partial sums (§3.2).
+
+All kernels run with interpret=True: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and correctness — not CPU wallclock — is what the
+interpret path validates (see DESIGN.md §Perf for the VMEM/MXU analysis).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Batch tile: one VMEM-resident block of windows. 128 rows matches the
+# MXU systolic dimension; N=140 features and C=6 classes easily co-reside.
+BLOCK_B = 128
+
+
+def _prefix_scores_kernel(x_ref, w_ref, b_ref, mask_ref, o_ref):
+    """One batch block: o = (x * mask) @ w^T + b."""
+    x = x_ref[...]            # [BB, N]
+    mask = mask_ref[...]      # [1, N]
+    w = w_ref[...]            # [C, N]
+    b = b_ref[...]            # [1, C]
+    xm = x * mask             # masked prefix, VPU elementwise
+    # MXU contraction over features.
+    o_ref[...] = jnp.dot(xm, w.T, preferred_element_type=jnp.float32) + b
+
+
+@functools.partial(jax.jit, static_argnames=())
+def prefix_scores(x, w, b, mask):
+    """Masked OvR scores. x: [B, N]; w: [C, N]; b: [C]; mask: [N] -> [B, C].
+
+    B is padded to a multiple of BLOCK_B; the pad is sliced off again, so
+    callers may pass any batch size.
+    """
+    bsz, n = x.shape
+    c = w.shape[0]
+    padded = ((bsz + BLOCK_B - 1) // BLOCK_B) * BLOCK_B
+    xp = jnp.pad(x, ((0, padded - bsz), (0, 0)))
+    grid = (padded // BLOCK_B,)
+    out = pl.pallas_call(
+        _prefix_scores_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_B, n), lambda i: (i, 0)),
+            pl.BlockSpec((c, n), lambda i: (0, 0)),
+            pl.BlockSpec((1, c), lambda i: (0, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_B, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((padded, c), jnp.float32),
+        interpret=True,
+    )(xp, w, b.reshape(1, c), mask.reshape(1, n))
+    return out[:bsz]
+
+
+def _incremental_kernel(s_ref, x_ref, w_ref, o_ref):
+    """One batch block of the anytime step: o = s + x_chunk @ w_chunk^T."""
+    s = s_ref[...]   # [BB, C]
+    x = x_ref[...]   # [BB, K]
+    w = w_ref[...]   # [C, K]
+    o_ref[...] = s + jnp.dot(x, w.T, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def incremental_update(s, x_chunk, w_chunk):
+    """Anytime refinement: fold a feature chunk into cached scores.
+
+    s: [B, C]; x_chunk: [B, K]; w_chunk: [C, K] -> [B, C].
+    """
+    bsz, c = s.shape
+    k = x_chunk.shape[1]
+    padded = ((bsz + BLOCK_B - 1) // BLOCK_B) * BLOCK_B
+    sp = jnp.pad(s, ((0, padded - bsz), (0, 0)))
+    xp = jnp.pad(x_chunk, ((0, padded - bsz), (0, 0)))
+    grid = (padded // BLOCK_B,)
+    out = pl.pallas_call(
+        _incremental_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_B, c), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_B, k), lambda i: (i, 0)),
+            pl.BlockSpec((c, k), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_B, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((padded, c), jnp.float32),
+        interpret=True,
+    )(sp, xp, w_chunk)
+    return out[:bsz]
+
+
+def prefix_mask(n, p, dtype=jnp.float32):
+    """The 0/1 mask selecting the first p entries of an n-feature order."""
+    return (jnp.arange(n) < p).astype(dtype)

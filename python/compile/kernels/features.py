@@ -1,0 +1,87 @@
+"""L1 Pallas kernels for window feature extraction.
+
+Two kernels:
+
+* `window_stats` — time-domain statistics (mean, std, energy, min, max)
+  per window, blocked over the batch; pure VPU work, one VMEM pass.
+* `dft_power` — the spectral features. Hardware adaptation: the MCU runs
+  a radix-2 FFT, whose data-dependent butterflies are hostile to a
+  systolic array; on TPU the *dense DFT matrix multiply* is both exact
+  and MXU-native for the 128-sample windows the paper uses
+  (DESIGN.md §Hardware-Adaptation). The [T, K] DFT matrices are
+  compile-time constants living in VMEM.
+
+interpret=True throughout: the CPU PJRT plugin cannot run Mosaic
+custom-calls (see anytime_svm.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_B = 128
+NUM_STATS = 5
+
+
+def _stats_kernel(x_ref, o_ref):
+    x = x_ref[...]  # [BB, T]
+    t = x.shape[1]
+    mean = jnp.sum(x, axis=1, keepdims=True) / t
+    centred = x - mean
+    var = jnp.sum(centred * centred, axis=1, keepdims=True) / t
+    energy = jnp.sum(x * x, axis=1, keepdims=True) / t
+    mn = jnp.min(x, axis=1, keepdims=True)
+    mx = jnp.max(x, axis=1, keepdims=True)
+    o_ref[...] = jnp.concatenate(
+        [mean, jnp.sqrt(var), energy, mn, mx], axis=1
+    )
+
+
+@functools.partial(jax.jit, static_argnames=())
+def window_stats(x):
+    """Per-window stats. x: [B, T] -> [B, 5] (mean, std, energy, min, max)."""
+    bsz, t = x.shape
+    padded = ((bsz + BLOCK_B - 1) // BLOCK_B) * BLOCK_B
+    xp = jnp.pad(x, ((0, padded - bsz), (0, 0)))
+    out = pl.pallas_call(
+        _stats_kernel,
+        grid=(padded // BLOCK_B,),
+        in_specs=[pl.BlockSpec((BLOCK_B, t), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((BLOCK_B, NUM_STATS), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((padded, NUM_STATS), jnp.float32),
+        interpret=True,
+    )(xp)
+    return out[:bsz]
+
+
+def _dft_kernel(x_ref, re_ref, im_ref, o_ref):
+    x = x_ref[...]        # [BB, T]
+    dre = re_ref[...]     # [T, K]
+    dim = im_ref[...]     # [T, K]
+    re = jnp.dot(x, dre, preferred_element_type=jnp.float32)
+    im = jnp.dot(x, dim, preferred_element_type=jnp.float32)
+    o_ref[...] = (re * re + im * im) / x.shape[1]
+
+
+@functools.partial(jax.jit, static_argnames=())
+def dft_power(x, dft_re, dft_im):
+    """Power spectrum via DFT-as-matmul. x: [B, T]; matrices [T, K] -> [B, K]."""
+    bsz, t = x.shape
+    k = dft_re.shape[1]
+    padded = ((bsz + BLOCK_B - 1) // BLOCK_B) * BLOCK_B
+    xp = jnp.pad(x, ((0, padded - bsz), (0, 0)))
+    out = pl.pallas_call(
+        _dft_kernel,
+        grid=(padded // BLOCK_B,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_B, t), lambda i: (i, 0)),
+            pl.BlockSpec((t, k), lambda i: (0, 0)),
+            pl.BlockSpec((t, k), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_B, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((padded, k), jnp.float32),
+        interpret=True,
+    )(xp, dft_re, dft_im)
+    return out[:bsz]

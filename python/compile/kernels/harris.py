@@ -1,0 +1,73 @@
+"""L1 Pallas kernel for the perforated Harris response.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper perforates
+an MCU loop by *skipping iterations*; data-dependent control flow is
+foreign to a systolic/vector unit, so the same knob — the fraction of rows
+not computed — becomes a multiplicative 0/1 row mask fused into a dense
+response computation. The image (160×160 f32 ≈ 100 KiB) plus its gradient
+products fit comfortably in one VMEM tile, so the kernel runs as a single
+grid cell; skipped rows are zeroed by the mask, exactly matching the
+engine's row-perforation semantics where uncomputed rows hold no response.
+
+interpret=True: CPU PJRT cannot run Mosaic custom-calls (see
+anytime_svm.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile.kernels.ref import HARRIS_K
+
+
+def _harris_kernel(img_ref, mask_ref, o_ref):
+    img = img_ref[...]      # [H, W]
+    mask = mask_ref[...]    # [1, H]
+
+    def shift(a, dy, dx):
+        # Border replication: roll + edge fixups are awkward in VMEM;
+        # slicing a padded copy is one VPU pass.
+        p = jnp.pad(a, ((1, 1), (1, 1)), mode="edge")
+        h, w = a.shape
+        return jax.lax.dynamic_slice(p, (1 + dy, 1 + dx), (h, w))
+
+    ix = (
+        shift(img, -1, 1) + 2.0 * shift(img, 0, 1) + shift(img, 1, 1)
+        - shift(img, -1, -1) - 2.0 * shift(img, 0, -1) - shift(img, 1, -1)
+    )
+    iy = (
+        shift(img, 1, -1) + 2.0 * shift(img, 1, 0) + shift(img, 1, 1)
+        - shift(img, -1, -1) - 2.0 * shift(img, -1, 0) - shift(img, -1, 1)
+    )
+    ixx, ixy, iyy = ix * ix, ix * iy, iy * iy
+
+    def wsum(a):
+        total = jnp.zeros_like(a)
+        for dy in (-1, 0, 1):
+            for dx in (-1, 0, 1):
+                total = total + shift(a, dy, dx)
+        return total
+
+    sxx, sxy, syy = wsum(ixx), wsum(ixy), wsum(iyy)
+    det = sxx * syy - sxy * sxy
+    tr = sxx + syy
+    r = det - HARRIS_K * tr * tr
+    o_ref[...] = r * mask.T  # [H, 1] broadcast over columns
+
+
+@functools.partial(jax.jit, static_argnames=())
+def harris_response(img, row_mask):
+    """Perforated Harris response. img: [H, W]; row_mask: [H] -> [H, W]."""
+    h, w = img.shape
+    return pl.pallas_call(
+        _harris_kernel,
+        in_specs=[
+            pl.BlockSpec((h, w), lambda: (0, 0)),
+            pl.BlockSpec((1, h), lambda: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((h, w), lambda: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, w), jnp.float32),
+        interpret=True,
+    )(img, row_mask.reshape(1, h))

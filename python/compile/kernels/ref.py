@@ -1,0 +1,105 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the correctness references the pytest suite (and the build-time
+`make artifacts` self-check) compares the kernels against. They use only
+plain jax.numpy so they lower to ordinary HLO on any backend.
+"""
+
+import jax.numpy as jnp
+
+# Harris sensitivity used by both kernel and oracle.
+HARRIS_K = 0.04
+
+
+def prefix_scores(x, w, b, mask):
+    """OvR scores using a masked feature subset.
+
+    x: [B, N] standardised features; w: [C, N]; b: [C];
+    mask: [N] 0/1 prefix mask. Returns [B, C].
+    """
+    xm = x * mask[None, :]
+    return xm @ w.T + b[None, :]
+
+
+def incremental_update(s, x_chunk, w_chunk):
+    """Anytime step: fold a feature chunk into cached scores.
+
+    s: [B, C] partial scores; x_chunk: [B, K]; w_chunk: [C, K].
+    Returns [B, C].
+    """
+    return s + x_chunk @ w_chunk.T
+
+
+def window_stats(x):
+    """Per-window statistics: mean, std, energy, min, max.
+
+    x: [B, T]. Returns [B, 5].
+    """
+    mean = jnp.mean(x, axis=1)
+    std = jnp.std(x, axis=1)
+    energy = jnp.mean(x * x, axis=1)
+    mn = jnp.min(x, axis=1)
+    mx = jnp.max(x, axis=1)
+    return jnp.stack([mean, std, energy, mn, mx], axis=1)
+
+
+def dft_matrices(t, dtype=jnp.float32):
+    """Dense DFT matrices for the rfft bins 0..T/2.
+
+    Returns (real [T, T//2+1], imag [T, T//2+1]) such that
+    X @ real, X @ imag give the real/imaginary spectrum parts.
+    """
+    k = jnp.arange(t // 2 + 1, dtype=dtype)
+    n = jnp.arange(t, dtype=dtype)
+    ang = -2.0 * jnp.pi * n[:, None] * k[None, :] / t
+    return jnp.cos(ang).astype(dtype), jnp.sin(ang).astype(dtype)
+
+
+def dft_power(x, dft_re, dft_im):
+    """Power spectrum via DFT-as-matmul (the MXU formulation).
+
+    x: [B, T]; dft_re/dft_im: [T, K]. Returns [B, K] with |X_k|^2 / T.
+    """
+    re = x @ dft_re
+    im = x @ dft_im
+    return (re * re + im * im) / x.shape[1]
+
+
+def harris_response(img, row_mask, k=HARRIS_K):
+    """Harris response with row perforation.
+
+    img: [H, W] grayscale; row_mask: [H] 0/1 (perforated rows output 0).
+    Border-replicated Sobel gradients, 3x3 structure tensor, R = det - k tr^2.
+    Returns [H, W].
+    """
+
+    def shift(a, dy, dx):
+        # Border replication via edge padding then slicing.
+        p = jnp.pad(a, ((1, 1), (1, 1)), mode="edge")
+        h, w = a.shape
+        return p[1 + dy : 1 + dy + h, 1 + dx : 1 + dx + w]
+
+    ix = (
+        shift(img, -1, 1) + 2.0 * shift(img, 0, 1) + shift(img, 1, 1)
+        - shift(img, -1, -1) - 2.0 * shift(img, 0, -1) - shift(img, 1, -1)
+    )
+    iy = (
+        shift(img, 1, -1) + 2.0 * shift(img, 1, 0) + shift(img, 1, 1)
+        - shift(img, -1, -1) - 2.0 * shift(img, -1, 0) - shift(img, -1, 1)
+    )
+    ixx, ixy, iyy = ix * ix, ix * iy, iy * iy
+
+    def window_sum(a):
+        total = jnp.zeros_like(a)
+        for dy in (-1, 0, 1):
+            for dx in (-1, 0, 1):
+                total = total + shift(a, dy, dx)
+        return total
+
+    sxx = window_sum(ixx)
+    sxy = window_sum(ixy)
+    syy = window_sum(iyy)
+    det = sxx * syy - sxy * sxy
+    tr = sxx + syy
+    r = det - k * tr * tr
+    return r * row_mask[:, None]

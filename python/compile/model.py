@@ -1,0 +1,80 @@
+"""L2: the JAX compute pipelines composed from the L1 Pallas kernels.
+
+Python exists only on the compile path: these functions are lowered once
+by aot.py into HLO-text artifacts that the Rust coordinator loads through
+PJRT for accelerated batch replay (runtime/ in the Rust tree). Weights,
+masks and inputs are all runtime *parameters* of the executables, so a
+single artifact serves every model the Rust side trains.
+"""
+
+import jax.numpy as jnp
+
+from compile.kernels import anytime_svm, features, harris
+from compile.kernels.ref import dft_matrices
+
+# Spectral band boundaries in rfft bins for T=128 (matches the Rust
+# feature catalog: ~0.4-1.6, 1.6-3.1, 3.1-6.2, 6.2-25 Hz at 50 Hz).
+BAND_EDGES = (1, 4, 8, 16, 65)
+NUM_BANDS = len(BAND_EDGES) - 1
+
+
+def band_energies(power):
+    """Normalised band energies from a power spectrum [B, K] -> [B, 4]."""
+    total = jnp.sum(power[:, 1:], axis=1, keepdims=True) + 1e-12
+    bands = [
+        jnp.sum(power[:, BAND_EDGES[i] : BAND_EDGES[i + 1]], axis=1, keepdims=True)
+        for i in range(NUM_BANDS)
+    ]
+    return jnp.concatenate(bands, axis=1) / total
+
+
+def channel_features(windows):
+    """Feature block for a batch of multi-channel windows.
+
+    windows: [B, CH, T] -> [B, CH * (5 + 4)] — five time statistics plus
+    four spectral band energies per channel, kernels doing the heavy math.
+    """
+    b, ch, t = windows.shape
+    dre, dim = dft_matrices(t)
+    blocks = []
+    for c in range(ch):
+        x = windows[:, c, :]
+        blocks.append(features.window_stats(x))
+        blocks.append(band_energies(features.dft_power(x, dre, dim)))
+    return jnp.concatenate(blocks, axis=1)
+
+
+def har_pipeline(windows, w, bias, mask):
+    """End-to-end HAR compute graph: windows -> features -> masked scores.
+
+    windows: [B, CH, T]; w: [C, F]; bias: [C]; mask: [F] -> scores [B, C].
+    F must equal CH * 9.
+    """
+    feats = channel_features(windows)
+    return anytime_svm.prefix_scores(feats, w, bias, mask)
+
+
+def svm_prefix(x, w, bias, mask):
+    """Bare prefix-scoring entry point (features precomputed on-device)."""
+    return anytime_svm.prefix_scores(x, w, bias, mask)
+
+
+def svm_incremental(s, x_chunk, w_chunk):
+    """Bare anytime-step entry point."""
+    return anytime_svm.incremental_update(s, x_chunk, w_chunk)
+
+
+def feature_stats(x):
+    """Bare window-statistics entry point."""
+    return features.window_stats(x)
+
+
+def spectral_power(x):
+    """Power spectrum of a batch of windows (DFT matrices baked in)."""
+    dre, dim = dft_matrices(x.shape[1])
+    return features.dft_power(x, dre, dim)
+
+
+def harris_pipeline(img, row_mask):
+    """Perforated Harris response entry point."""
+    return harris.harris_response(img, row_mask)

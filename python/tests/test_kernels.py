@@ -1,0 +1,206 @@
+"""L1 correctness: every Pallas kernel against its pure-jnp oracle.
+
+Hypothesis sweeps shapes (batch sizes that do/don't divide the block,
+feature counts, window lengths, image sizes) and value ranges;
+assert_allclose against ref.py is THE correctness signal for the kernels
+the AOT artifacts are built from.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import anytime_svm, features, harris, ref
+
+SETTLE = dict(max_examples=25, deadline=None)
+
+
+def farr(rng, *shape, lo=-3.0, hi=3.0):
+    return jnp.asarray(rng.uniform(lo, hi, size=shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------- SVM ----
+
+
+@settings(**SETTLE)
+@given(
+    b=st.integers(min_value=1, max_value=300),
+    n=st.integers(min_value=2, max_value=160),
+    c=st.integers(min_value=2, max_value=8),
+    p_frac=st.floats(min_value=0.0, max_value=1.0),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_prefix_scores_matches_ref(b, n, c, p_frac, seed):
+    rng = np.random.default_rng(seed)
+    x = farr(rng, b, n)
+    w = farr(rng, c, n)
+    bias = farr(rng, c)
+    p = int(round(p_frac * n))
+    mask = anytime_svm.prefix_mask(n, p)
+    got = anytime_svm.prefix_scores(x, w, bias, mask)
+    want = ref.prefix_scores(x, w, bias, mask)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(**SETTLE)
+@given(
+    b=st.integers(min_value=1, max_value=300),
+    k=st.integers(min_value=1, max_value=64),
+    c=st.integers(min_value=2, max_value=8),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_incremental_update_matches_ref(b, k, c, seed):
+    rng = np.random.default_rng(seed)
+    s = farr(rng, b, c)
+    x = farr(rng, b, k)
+    w = farr(rng, c, k)
+    got = anytime_svm.incremental_update(s, x, w)
+    want = ref.incremental_update(s, x, w)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_empty_prefix_gives_bias_scores():
+    rng = np.random.default_rng(0)
+    x = farr(rng, 7, 20)
+    w = farr(rng, 3, 20)
+    bias = farr(rng, 3)
+    mask = anytime_svm.prefix_mask(20, 0)
+    got = anytime_svm.prefix_scores(x, w, bias, mask)
+    np.testing.assert_allclose(got, np.tile(bias, (7, 1)), rtol=1e-6)
+
+
+def test_full_prefix_equals_plain_matmul():
+    rng = np.random.default_rng(1)
+    x = farr(rng, 50, 140)
+    w = farr(rng, 6, 140)
+    bias = farr(rng, 6)
+    mask = anytime_svm.prefix_mask(140, 140)
+    got = anytime_svm.prefix_scores(x, w, bias, mask)
+    want = x @ w.T + bias[None, :]
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_incremental_chain_equals_prefix():
+    """Folding features chunk by chunk must equal the one-shot mask path
+    (the anytime invariant the MCU implementation relies on)."""
+    rng = np.random.default_rng(2)
+    n, c, b, chunk = 64, 4, 33, 16
+    x = farr(rng, b, n)
+    w = farr(rng, c, n)
+    bias = farr(rng, c)
+    s = jnp.tile(bias[None, :], (b, 1))
+    for lo in range(0, n, chunk):
+        s = anytime_svm.incremental_update(
+            s, x[:, lo : lo + chunk], w[:, lo : lo + chunk]
+        )
+    want = anytime_svm.prefix_scores(x, w, bias, anytime_svm.prefix_mask(n, n))
+    np.testing.assert_allclose(s, want, rtol=1e-3, atol=1e-3)
+
+
+# ----------------------------------------------------------- features ----
+
+
+@settings(**SETTLE)
+@given(
+    b=st.integers(min_value=1, max_value=300),
+    t=st.sampled_from([32, 64, 128, 100]),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_window_stats_matches_ref(b, t, seed):
+    rng = np.random.default_rng(seed)
+    x = farr(rng, b, t, lo=-5.0, hi=5.0)
+    got = features.window_stats(x)
+    want = ref.window_stats(x)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+
+@settings(**SETTLE)
+@given(
+    b=st.integers(min_value=1, max_value=150),
+    t=st.sampled_from([32, 64, 128]),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_dft_power_matches_ref_and_fft(b, t, seed):
+    rng = np.random.default_rng(seed)
+    x = farr(rng, b, t)
+    dre, dim = ref.dft_matrices(t)
+    got = features.dft_power(x, dre, dim)
+    want = ref.dft_power(x, dre, dim)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+    # And the dense-DFT formulation itself must equal a true rfft.
+    spec = np.abs(np.fft.rfft(np.asarray(x), axis=1)) ** 2 / t
+    np.testing.assert_allclose(np.asarray(want), spec, rtol=1e-2, atol=1e-2)
+
+
+def test_stats_of_constant_window():
+    x = jnp.full((5, 64), 2.5, dtype=jnp.float32)
+    out = np.asarray(features.window_stats(x))
+    np.testing.assert_allclose(out[:, 0], 2.5, rtol=1e-6)  # mean
+    np.testing.assert_allclose(out[:, 1], 0.0, atol=1e-3)  # std
+    np.testing.assert_allclose(out[:, 2], 6.25, rtol=1e-5)  # energy
+    np.testing.assert_allclose(out[:, 3], 2.5, rtol=1e-6)  # min
+    np.testing.assert_allclose(out[:, 4], 2.5, rtol=1e-6)  # max
+
+
+def test_pure_tone_peaks_at_its_bin():
+    t, f = 128, 10
+    n = np.arange(t)
+    x = jnp.asarray(
+        np.tile(np.sin(2 * np.pi * f * n / t), (3, 1)).astype(np.float32)
+    )
+    dre, dim = ref.dft_matrices(t)
+    power = np.asarray(features.dft_power(x, dre, dim))
+    assert np.argmax(power[0]) == f
+
+
+# ------------------------------------------------------------- harris ----
+
+
+@settings(**SETTLE)
+@given(
+    h=st.sampled_from([16, 32, 64]),
+    w=st.sampled_from([16, 32, 64]),
+    keep=st.floats(min_value=0.0, max_value=1.0),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_harris_matches_ref(h, w, keep, seed):
+    rng = np.random.default_rng(seed)
+    img = farr(rng, h, w, lo=0.0, hi=1.0)
+    mask = (np.arange(h) < keep * h).astype(np.float32)
+    rng.shuffle(mask)
+    mask = jnp.asarray(mask)
+    got = harris.harris_response(img, mask)
+    want = ref.harris_response(img, mask)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+
+def test_harris_masked_rows_are_zero():
+    rng = np.random.default_rng(3)
+    img = farr(rng, 32, 32, lo=0.0, hi=1.0)
+    mask = np.ones(32, dtype=np.float32)
+    mask[::2] = 0.0
+    out = np.asarray(harris.harris_response(img, jnp.asarray(mask)))
+    assert np.all(out[::2] == 0.0)
+    assert np.any(out[1::2] != 0.0)
+
+
+def test_harris_flat_image_no_response():
+    img = jnp.zeros((24, 24), dtype=jnp.float32)
+    out = np.asarray(harris.harris_response(img, jnp.ones(24, dtype=jnp.float32)))
+    np.testing.assert_allclose(out, 0.0, atol=1e-6)
+
+
+def test_harris_checkerboard_has_strong_corners():
+    n, cell = 64, 8
+    yy, xx = np.meshgrid(np.arange(n), np.arange(n), indexing="ij")
+    img = jnp.asarray((((yy // cell) + (xx // cell)) % 2).astype(np.float32))
+    out = np.asarray(harris.harris_response(img, jnp.ones(n, dtype=jnp.float32)))
+    # Strong positive responses at lattice crossings.
+    assert out.max() > 1.0
+    # Centres of cells are flat: tiny response.
+    assert abs(out[cell // 2, cell // 2]) < 1e-3
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

@@ -1,0 +1,91 @@
+"""L2 pipeline tests: shapes, composition and numeric sanity."""
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import anytime_svm, ref
+
+
+def rand(rng, *shape, lo=-2.0, hi=2.0):
+    return jnp.asarray(rng.uniform(lo, hi, size=shape).astype(np.float32))
+
+
+def test_channel_features_shape_and_content():
+    rng = np.random.default_rng(0)
+    windows = rand(rng, 10, 6, 128)
+    feats = np.asarray(model.channel_features(windows))
+    assert feats.shape == (10, 6 * 9)
+    assert np.isfinite(feats).all()
+    # First 5 columns are channel-0 stats; check the mean column.
+    np.testing.assert_allclose(
+        feats[:, 0], np.asarray(windows[:, 0, :]).mean(axis=1), rtol=1e-3, atol=1e-4
+    )
+
+
+def test_band_energies_sum_to_one():
+    rng = np.random.default_rng(1)
+    x = rand(rng, 8, 128)
+    dre, dim = ref.dft_matrices(128)
+    power = ref.dft_power(x, dre, dim)
+    bands = np.asarray(model.band_energies(power))
+    assert bands.shape == (8, 4)
+    np.testing.assert_allclose(bands.sum(axis=1), 1.0, atol=1e-3)
+    assert (bands >= 0).all()
+
+
+def test_har_pipeline_end_to_end_shape():
+    rng = np.random.default_rng(2)
+    b, ch, t, c = 12, 6, 128, 6
+    f = ch * 9
+    windows = rand(rng, b, ch, t)
+    w = rand(rng, c, f)
+    bias = rand(rng, c)
+    mask = anytime_svm.prefix_mask(f, f // 2)
+    scores = np.asarray(model.har_pipeline(windows, w, bias, mask))
+    assert scores.shape == (b, c)
+    assert np.isfinite(scores).all()
+
+
+def test_har_pipeline_respects_mask():
+    """Scores with an empty mask are the biases; with a full mask they
+    match the unmasked matmul over the extracted features."""
+    rng = np.random.default_rng(3)
+    b, ch, t, c = 5, 6, 128, 6
+    f = ch * 9
+    windows = rand(rng, b, ch, t)
+    w = rand(rng, c, f)
+    bias = rand(rng, c)
+    empty = np.asarray(
+        model.har_pipeline(windows, w, bias, anytime_svm.prefix_mask(f, 0))
+    )
+    np.testing.assert_allclose(empty, np.tile(bias, (b, 1)), rtol=1e-5, atol=1e-5)
+
+    full = np.asarray(
+        model.har_pipeline(windows, w, bias, anytime_svm.prefix_mask(f, f))
+    )
+    feats = model.channel_features(windows)
+    want = np.asarray(feats @ w.T + bias[None, :])
+    np.testing.assert_allclose(full, want, rtol=1e-3, atol=1e-3)
+
+
+def test_harris_pipeline_matches_kernel_ref():
+    rng = np.random.default_rng(4)
+    img = rand(rng, 40, 40, lo=0.0, hi=1.0)
+    mask = jnp.ones(40, dtype=jnp.float32)
+    got = model.harris_pipeline(img, mask)
+    want = ref.harris_response(img, mask)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+
+def test_pipeline_discriminates_activity_like_signals():
+    """A dynamic (gait-like) batch and a static batch must produce
+    separable features — the property the HAR classifier depends on."""
+    t = 128
+    n = np.arange(t)
+    dynamic = np.tile(3.0 * np.sin(2 * np.pi * 5 * n / t), (4, 6, 1))
+    static = np.full((4, 6, t), 0.05)
+    fd = np.asarray(model.channel_features(jnp.asarray(dynamic, dtype=jnp.float32)))
+    fs = np.asarray(model.channel_features(jnp.asarray(static, dtype=jnp.float32)))
+    # std of channel 0 (column 1): dynamic ≫ static.
+    assert fd[:, 1].min() > 10 * fs[:, 1].max()

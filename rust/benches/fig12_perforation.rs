@@ -1,0 +1,70 @@
+//! Fig. 12 bench: representative corner-detection outputs as a function
+//! of the fraction of loop iterations not executed.
+//!
+//! Paper shape: for the simple picture, more than half of the iterations
+//! may be skipped with an equivalent output; for complex pictures the
+//! observation holds up to ~42 %; beyond that the corner count drops and
+//! spurious detections appear.
+
+use aic::coordinator::experiment::fig12;
+use aic::imgproc::images::Picture;
+use aic::util::bench::Bench;
+
+fn main() {
+    let fast = std::env::var("AIC_BENCH_FAST").is_ok();
+    let b = Bench::new("fig12_perforation");
+    let size = if fast { 96 } else { aic::imgproc::images::EVAL_SIZE };
+    let skips = [0.0, 0.1, 0.2, 0.3, 0.42, 0.5, 0.6, 0.7, 0.85];
+
+    let mut rows_out = Vec::new();
+    b.bench("perforation_sweep", || {
+        rows_out = fig12(size, &skips);
+    });
+
+    let rows: Vec<Vec<String>> = rows_out
+        .iter()
+        .map(|r| {
+            vec![
+                r.picture.name().to_string(),
+                format!("{:.0}%", 100.0 * r.skip_fraction),
+                r.corners.to_string(),
+                r.reference_corners.to_string(),
+                if r.equivalent { "yes".into() } else { "no".into() },
+            ]
+        })
+        .collect();
+    b.report_table(
+        "Fig. 12 — corners vs skipped iterations",
+        &["picture", "skipped", "corners", "reference", "equivalent"],
+        &rows,
+    );
+
+    // Shape: the simple picture survives heavier perforation than the
+    // cluttered one; moderate perforation (<= 42%) keeps close counts.
+    let max_equivalent_skip = |p: Picture| -> f64 {
+        rows_out
+            .iter()
+            .filter(|r| r.picture == p && r.equivalent)
+            .map(|r| r.skip_fraction)
+            .fold(0.0, f64::max)
+    };
+    let simple = max_equivalent_skip(Picture::Checker);
+    let complex = max_equivalent_skip(Picture::Cluttered);
+    println!(
+        "shape: simple survives >= 42% skipping (got {:.0}%) [{}]",
+        100.0 * simple,
+        if simple >= 0.42 { "PASS" } else { "FAIL" }
+    );
+    println!(
+        "shape: simple tolerates >= complex [{}]",
+        if simple >= complex { "PASS" } else { "FAIL" }
+    );
+    let moderate_close = rows_out
+        .iter()
+        .filter(|r| r.skip_fraction <= 0.3)
+        .all(|r| (r.corners as f64) >= 0.7 * r.reference_corners as f64);
+    println!(
+        "shape: <=30% skipping keeps >=70% of corners [{}]",
+        if moderate_close { "PASS" } else { "FAIL" }
+    );
+}

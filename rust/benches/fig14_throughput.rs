@@ -1,0 +1,74 @@
+//! Fig. 14 bench: imaging system throughput normalised to a continuous
+//! execution, per energy trace, AIC vs Chinchilla.
+//!
+//! Paper shape: AIC constantly outperforms Chinchilla (5x headline);
+//! traces richer in energy amplify AIC's gains; RF and SIR — equal total
+//! energy, opposite dynamics — perform similarly under AIC while
+//! Chinchilla suffers on RF's rapid dynamics.
+
+use aic::coordinator::experiment::{img_trace_comparison, ImgRunSpec};
+use aic::energy::traces::TraceKind;
+use aic::util::bench::Bench;
+
+fn main() {
+    let fast = std::env::var("AIC_BENCH_FAST").is_ok();
+    let b = Bench::new("fig14_throughput");
+    let spec = ImgRunSpec {
+        horizon: if fast { 1200.0 } else { 2.0 * 3600.0 },
+        ..Default::default()
+    };
+
+    let mut rows_out = Vec::new();
+    b.bench("per_trace_campaigns", || {
+        rows_out = img_trace_comparison(&spec);
+    });
+
+    let rows: Vec<Vec<String>> = rows_out
+        .iter()
+        .map(|r| {
+            let gain = r.throughput_aic_vs_continuous
+                / r.throughput_chinchilla_vs_continuous.max(1e-9);
+            vec![
+                r.trace.name().to_string(),
+                format!("{:.1}%", 100.0 * r.throughput_aic_vs_continuous),
+                format!("{:.1}%", 100.0 * r.throughput_chinchilla_vs_continuous),
+                format!("{gain:.2}x"),
+            ]
+        })
+        .collect();
+    b.report_table(
+        "Fig. 14 — normalised throughput per trace",
+        &["trace", "AIC", "Chinchilla", "gain"],
+        &rows,
+    );
+
+    let get = |k: TraceKind| rows_out.iter().find(|r| r.trace == k).unwrap();
+    let all_win = rows_out
+        .iter()
+        .all(|r| r.throughput_aic_vs_continuous >= r.throughput_chinchilla_vs_continuous);
+    println!("shape: AIC wins on every trace [{}]", if all_win { "PASS" } else { "FAIL" });
+    let rf = get(TraceKind::Rf);
+    let sir = get(TraceKind::Sir);
+    let rf_sir_close = (rf.throughput_aic_vs_continuous - sir.throughput_aic_vs_continuous)
+        .abs()
+        < 0.5 * sir.throughput_aic_vs_continuous.max(0.02);
+    println!(
+        "shape: AIC on RF ~ SIR (same total energy) [{}]",
+        if rf_sir_close { "PASS" } else { "FAIL" }
+    );
+    let chin_rf_hurts = rf.throughput_chinchilla_vs_continuous
+        <= sir.throughput_chinchilla_vs_continuous + 1e-9;
+    println!(
+        "shape: Chinchilla suffers on RF dynamics [{}]",
+        if chin_rf_hurts { "PASS" } else { "FAIL" }
+    );
+    let som = get(TraceKind::Som);
+    println!(
+        "shape: richest trace (SOM) amplifies AIC gain [{}]",
+        if som.throughput_aic_vs_continuous >= rf.throughput_aic_vs_continuous {
+            "PASS"
+        } else {
+            "FAIL"
+        }
+    );
+}

@@ -1,0 +1,82 @@
+//! Fig. 15 bench: distribution of the latency to produce the corner
+//! output (power cycles), for an energy-rich (SOR) and an energy-poor,
+//! highly dynamic (RF) trace.
+//!
+//! Paper shape: AIC is not shown (always same-cycle by design);
+//! Chinchilla concludes within ~10 cycles under energy abundance (SOR)
+//! and stretches over more cycles under RF.
+
+use aic::coordinator::experiment::{run_img_policy, ImgRunSpec};
+use aic::coordinator::metrics::{latency_histogram, same_cycle_fraction};
+use aic::energy::traces::TraceKind;
+use aic::exec::Policy;
+use aic::util::bench::Bench;
+
+fn main() {
+    let fast = std::env::var("AIC_BENCH_FAST").is_ok();
+    let b = Bench::new("fig15_latency_img");
+    let spec = ImgRunSpec {
+        horizon: if fast { 1200.0 } else { 2.0 * 3600.0 },
+        ..Default::default()
+    };
+
+    let mut results = Vec::new();
+    b.bench("sor_rf_latency", || {
+        results.clear();
+        for trace in [TraceKind::Sor, TraceKind::Rf] {
+            let aic_run = run_img_policy(&spec, trace, Policy::Greedy);
+            let chin = run_img_policy(&spec, trace, Policy::Chinchilla);
+            results.push((trace, aic_run, chin));
+        }
+    });
+
+    let mut rows = Vec::new();
+    for (trace, aic_run, chin) in &results {
+        let h = latency_histogram(chin, 40);
+        let mean = chin
+            .emitted()
+            .map(|r| r.latency_cycles as f64)
+            .sum::<f64>()
+            / chin.emitted().count().max(1) as f64;
+        rows.push(vec![
+            trace.name().to_string(),
+            format!("{:.1}%", 100.0 * same_cycle_fraction(aic_run)),
+            format!("{:.1}%", 100.0 * h.frac(0)),
+            format!("{mean:.1}"),
+        ]);
+    }
+    b.report_table(
+        "Fig. 15 — latency per trace",
+        &["trace", "AIC same-cycle", "Chinchilla same-cycle", "Chinchilla mean cycles"],
+        &rows,
+    );
+
+    for (trace, aic_run, chin) in &results {
+        println!(
+            "shape: AIC same-cycle on {} [{}]",
+            trace.name(),
+            if same_cycle_fraction(aic_run) > 0.999 { "PASS" } else { "FAIL" }
+        );
+        let chin_mean = chin.emitted().map(|r| r.latency_cycles as f64).sum::<f64>()
+            / chin.emitted().count().max(1) as f64;
+        if *trace == TraceKind::Rf {
+            println!(
+                "shape: RF stretches Chinchilla (mean {:.1} cycles) [{}]",
+                chin_mean,
+                if chin_mean >= 1.0 { "PASS" } else { "FAIL" }
+            );
+        }
+    }
+    // SOR should conclude in fewer cycles than RF.
+    let mean_of = |i: usize| -> f64 {
+        let c = &results[i].2;
+        c.emitted().map(|r| r.latency_cycles as f64).sum::<f64>()
+            / c.emitted().count().max(1) as f64
+    };
+    println!(
+        "shape: abundance (SOR {:.1}) beats scarcity (RF {:.1}) [{}]",
+        mean_of(0),
+        mean_of(1),
+        if mean_of(0) <= mean_of(1) { "PASS" } else { "FAIL" }
+    );
+}

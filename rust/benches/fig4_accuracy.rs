@@ -1,0 +1,47 @@
+//! Fig. 4 bench: expected vs measured accuracy as a function of the
+//! number of features used for classification.
+//!
+//! Paper shape: both curves start at chance (16.6 %), rise rapidly over
+//! the first features, flatten out, and top at ~88 %; the expected curve
+//! (Eq. 7 analysis) stays close to the measured one throughout.
+
+use aic::coordinator::experiment::{fig4, HarContext};
+use aic::util::bench::Bench;
+
+fn main() {
+    let b = Bench::new("fig4_accuracy");
+    let ctx = HarContext::build(42);
+    let ps: Vec<usize> = (0..=140).step_by(10).collect();
+
+    // Timing: the Eq. 7 numeric evaluation + the measured sweep.
+    let mut rows_out = Vec::new();
+    b.bench("expected_and_measured_curves", || {
+        rows_out = fig4(&ctx, &ps);
+    });
+
+    let rows: Vec<Vec<String>> = rows_out
+        .iter()
+        .map(|r| {
+            vec![
+                r.p.to_string(),
+                format!("{:.1}%", 100.0 * r.expected),
+                format!("{:.1}%", 100.0 * r.measured),
+                format!("{:+.1}pp", 100.0 * (r.expected - r.measured)),
+            ]
+        })
+        .collect();
+    b.report_table(
+        "Fig. 4 — accuracy vs number of features",
+        &["features", "expected", "measured", "delta"],
+        &rows,
+    );
+
+    // Paper-shape checks (soft: print PASS/FAIL, never panic in benches).
+    let last = rows_out.last().unwrap();
+    let ceiling_ok = last.measured > 0.80 && last.measured < 0.97;
+    let chance_start = rows_out[0].measured < 0.30;
+    let tracks = rows_out.iter().all(|r| (r.expected - r.measured).abs() < 0.25);
+    println!("shape: ceiling ~88% [{}]", if ceiling_ok { "PASS" } else { "FAIL" });
+    println!("shape: starts at chance [{}]", if chance_start { "PASS" } else { "FAIL" });
+    println!("shape: expected tracks measured [{}]", if tracks { "PASS" } else { "FAIL" });
+}

@@ -1,0 +1,73 @@
+//! Fig. 5 bench: emulation experiments — classification accuracy (a) and
+//! system throughput normalised to a continuous execution (b), for
+//! GREEDY, SMART-60, SMART-80 and Chinchilla.
+//!
+//! Paper shape: Chinchilla matches the continuous accuracy ceiling but
+//! loses most of the throughput; the approximate runtimes trade a
+//! bounded accuracy loss (~11 pp worst case) for large throughput gains
+//! (up to 7x Chinchilla); SMART sits above GREEDY in accuracy and below
+//! in throughput, with the higher bound amplifying both effects.
+
+use aic::coordinator::experiment::{har_policy_comparison, HarContext, HarRunSpec};
+use aic::exec::Policy;
+use aic::util::bench::Bench;
+
+fn main() {
+    let fast = std::env::var("AIC_BENCH_FAST").is_ok();
+    let b = Bench::new("fig5_emulation");
+    let ctx = HarContext::build(42);
+    let spec = HarRunSpec {
+        horizon: if fast { 1800.0 } else { 4.0 * 3600.0 },
+        ..Default::default()
+    };
+    let volunteers: Vec<u64> = if fast { vec![1, 2] } else { vec![1, 2, 3, 4, 5, 6] };
+
+    let mut rows_out = Vec::new();
+    b.bench("policy_campaigns", || {
+        rows_out = har_policy_comparison(&ctx, &spec, &volunteers);
+    });
+
+    let rows: Vec<Vec<String>> = rows_out
+        .iter()
+        .map(|r| {
+            vec![
+                r.policy.name(),
+                format!("{:.1}%", 100.0 * r.accuracy),
+                format!("{:.1}%", 100.0 * r.throughput_vs_continuous),
+                format!("{:.1}", r.mean_features),
+                format!("{:.1}%", 100.0 * r.state_energy_fraction),
+            ]
+        })
+        .collect();
+    b.report_table(
+        "Fig. 5 — accuracy and normalised throughput",
+        &["policy", "accuracy", "thrpt vs continuous", "mean features", "state energy frac"],
+        &rows,
+    );
+
+    let get = |p: Policy| rows_out.iter().find(|r| r.policy == p).unwrap();
+    let greedy = get(Policy::Greedy);
+    let chin = get(Policy::Chinchilla);
+    let s80 = get(Policy::Smart { bound: 0.80 });
+    println!(
+        "shape: chinchilla best accuracy [{}]",
+        if chin.accuracy >= greedy.accuracy - 0.02 { "PASS" } else { "FAIL" }
+    );
+    println!(
+        "shape: greedy throughput >> chinchilla ({:.1}x) [{}]",
+        greedy.throughput_vs_continuous / chin.throughput_vs_continuous.max(1e-9),
+        if greedy.throughput_vs_continuous > 1.5 * chin.throughput_vs_continuous {
+            "PASS"
+        } else {
+            "FAIL"
+        }
+    );
+    println!(
+        "shape: smart80 accuracy >= greedy [{}]",
+        if s80.accuracy >= greedy.accuracy - 0.02 { "PASS" } else { "FAIL" }
+    );
+    println!(
+        "shape: approx spends nothing on state [{}]",
+        if greedy.state_energy_fraction == 0.0 { "PASS" } else { "FAIL" }
+    );
+}

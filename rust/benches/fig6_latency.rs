@@ -1,0 +1,65 @@
+//! Fig. 6 bench: emulation — distribution of the latency to return the
+//! classification, in power cycles between acquisition and emission.
+//!
+//! Paper shape: approximate intermittent computing always returns the
+//! result within the same power cycle (by design); Chinchilla's latency
+//! is a function of energy patterns, with a tail reaching tens of cycles.
+
+use aic::coordinator::experiment::{har_latency_histograms, HarContext, HarRunSpec};
+use aic::exec::Policy;
+use aic::util::bench::Bench;
+
+fn main() {
+    let fast = std::env::var("AIC_BENCH_FAST").is_ok();
+    let b = Bench::new("fig6_latency");
+    let ctx = HarContext::build(42);
+    let spec = HarRunSpec {
+        horizon: if fast { 1800.0 } else { 4.0 * 3600.0 },
+        ..Default::default()
+    };
+    let volunteers: Vec<u64> = if fast { vec![1] } else { vec![1, 2, 3, 4] };
+
+    let mut hists = Vec::new();
+    b.bench("latency_distributions", || {
+        hists = har_latency_histograms(&ctx, &spec, &volunteers, 40);
+    });
+
+    let rows: Vec<Vec<String>> = hists
+        .iter()
+        .map(|(policy, h)| {
+            let tail: f64 = (6..h.bins.len()).map(|i| h.frac(i)).sum::<f64>()
+                + h.overflow as f64 / h.count.max(1) as f64;
+            vec![
+                policy.name(),
+                format!("{:.1}%", 100.0 * h.frac(0)),
+                format!("{:.1}%", 100.0 * h.frac(1)),
+                format!("{:.1}%", 100.0 * (2..6).map(|i| h.frac(i)).sum::<f64>()),
+                format!("{:.1}%", 100.0 * tail),
+            ]
+        })
+        .collect();
+    b.report_table(
+        "Fig. 6 — latency distribution (power cycles)",
+        &["policy", "0 cycles", "1 cycle", "2-5", "6+"],
+        &rows,
+    );
+
+    for (policy, h) in &hists {
+        match policy {
+            Policy::Greedy | Policy::Smart { .. } => println!(
+                "shape: {} same-cycle by design [{}]",
+                policy.name(),
+                if h.frac(0) > 0.999 { "PASS" } else { "FAIL" }
+            ),
+            Policy::Chinchilla => {
+                let multi: f64 = 1.0 - h.frac(0);
+                println!(
+                    "shape: chinchilla stretches across cycles ({:.0}%) [{}]",
+                    100.0 * multi,
+                    if multi > 0.2 { "PASS" } else { "FAIL" }
+                );
+            }
+            _ => {}
+        }
+    }
+}

@@ -1,0 +1,68 @@
+//! Fig. 7 bench: real-world experiments — coherence of the classification
+//! against a continuous execution on the same wrist, and throughput
+//! normalised to it (two devices per volunteer, §5.3).
+//!
+//! Paper shape: coherence >= ~91 % for every approximate policy (SMART
+//! above GREEDY); more than half of the continuous execution's
+//! classifications are delivered, with GREEDY highest in throughput
+//! (trend reversed vs coherence).
+
+use aic::coordinator::experiment::{har_policy_comparison, HarContext, HarRunSpec};
+use aic::exec::Policy;
+use aic::util::bench::Bench;
+
+fn main() {
+    let fast = std::env::var("AIC_BENCH_FAST").is_ok();
+    let b = Bench::new("fig7_realworld");
+    let ctx = HarContext::build(42);
+    // §5.3: six volunteers, ~56 h each; scaled-down horizon here.
+    let spec = HarRunSpec {
+        horizon: if fast { 1800.0 } else { 6.0 * 3600.0 },
+        ..Default::default()
+    };
+    let volunteers: Vec<u64> = if fast { vec![11, 12] } else { vec![11, 12, 13, 14, 15, 16] };
+
+    let mut rows_out = Vec::new();
+    b.bench("wrist_pair_campaigns", || {
+        rows_out = har_policy_comparison(&ctx, &spec, &volunteers);
+    });
+
+    let rows: Vec<Vec<String>> = rows_out
+        .iter()
+        .filter(|r| !matches!(r.policy, Policy::Continuous))
+        .map(|r| {
+            vec![
+                r.policy.name(),
+                format!("{:.1}%", 100.0 * r.coherence_vs_continuous),
+                format!("{:.1}%", 100.0 * r.throughput_vs_continuous),
+            ]
+        })
+        .collect();
+    b.report_table(
+        "Fig. 7 — coherence and throughput vs continuous",
+        &["policy", "coherence", "thrpt vs continuous"],
+        &rows,
+    );
+
+    let get = |p: Policy| rows_out.iter().find(|r| r.policy == p).unwrap();
+    let greedy = get(Policy::Greedy);
+    let s80 = get(Policy::Smart { bound: 0.80 });
+    println!(
+        "shape: coherence high for approx ({:.0}%) [{}]",
+        100.0 * greedy.coherence_vs_continuous,
+        if greedy.coherence_vs_continuous > 0.70 { "PASS" } else { "FAIL" }
+    );
+    println!(
+        "shape: smart coherence >= greedy [{}]",
+        if s80.coherence_vs_continuous >= greedy.coherence_vs_continuous - 0.02 {
+            "PASS"
+        } else {
+            "FAIL"
+        }
+    );
+    println!(
+        "shape: >1/3 of continuous results delivered ({:.0}%) [{}]",
+        100.0 * greedy.throughput_vs_continuous,
+        if greedy.throughput_vs_continuous > 0.33 { "PASS" } else { "FAIL" }
+    );
+}

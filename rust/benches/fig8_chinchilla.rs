@@ -1,0 +1,66 @@
+//! Fig. 8 bench: real-world experiments — coherence of the approximate
+//! classification against Chinchilla, and throughput normalised to
+//! GREEDY (§5.4).
+//!
+//! Paper shape: coherence mirrors Fig. 7 (Chinchilla processes all
+//! features like a continuous execution); Chinchilla's throughput is a
+//! small fraction of GREEDY's because single samples stretch across
+//! power cycles, preventing the acquisition of newer samples.
+
+use aic::coordinator::experiment::{har_policy_comparison, HarContext, HarRunSpec};
+use aic::exec::Policy;
+use aic::util::bench::Bench;
+
+fn main() {
+    let fast = std::env::var("AIC_BENCH_FAST").is_ok();
+    let b = Bench::new("fig8_chinchilla");
+    let ctx = HarContext::build(42);
+    // §5.4: another six volunteers, ~58 h each; scaled-down horizon.
+    let spec = HarRunSpec {
+        horizon: if fast { 1800.0 } else { 6.0 * 3600.0 },
+        ..Default::default()
+    };
+    let volunteers: Vec<u64> = if fast { vec![21, 22] } else { vec![21, 22, 23, 24, 25, 26] };
+
+    let mut rows_out = Vec::new();
+    b.bench("chinchilla_pair_campaigns", || {
+        rows_out = har_policy_comparison(&ctx, &spec, &volunteers);
+    });
+
+    let rows: Vec<Vec<String>> = rows_out
+        .iter()
+        .filter(|r| !matches!(r.policy, Policy::Continuous))
+        .map(|r| {
+            vec![
+                r.policy.name(),
+                format!("{:.1}%", 100.0 * r.coherence_vs_chinchilla),
+                format!("{:.1}%", 100.0 * r.throughput_vs_greedy),
+                format!("{:.2}x", r.throughput_vs_chinchilla),
+            ]
+        })
+        .collect();
+    b.report_table(
+        "Fig. 8 — coherence vs Chinchilla, throughput vs GREEDY",
+        &["policy", "coherence vs chinchilla", "thrpt vs greedy", "thrpt vs chinchilla"],
+        &rows,
+    );
+
+    let get = |p: Policy| rows_out.iter().find(|r| r.policy == p).unwrap();
+    let greedy = get(Policy::Greedy);
+    println!(
+        "shape: headline throughput gain over Chinchilla = {:.1}x [{}]",
+        greedy.throughput_vs_chinchilla,
+        if greedy.throughput_vs_chinchilla >= 2.0 { "PASS" } else { "FAIL" }
+    );
+    println!(
+        "shape: greedy tops throughput [{}]",
+        if rows_out
+            .iter()
+            .all(|r| r.throughput_vs_greedy <= 1.0 + 1e-9)
+        {
+            "PASS"
+        } else {
+            "FAIL"
+        }
+    );
+}

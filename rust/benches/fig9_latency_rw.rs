@@ -1,0 +1,66 @@
+//! Fig. 9 bench: real-world experiments — distribution of the latency to
+//! return the classification (power cycles), §5.4.
+//!
+//! Paper shape: identical story to Fig. 6 on the real-world setup —
+//! approximate intermittent computing returns the classification before
+//! the first power failure; Chinchilla stretches across multiple cycles,
+//! including recharge periods.
+
+use aic::coordinator::experiment::{har_latency_histograms, HarContext, HarRunSpec};
+use aic::exec::Policy;
+use aic::util::bench::Bench;
+
+fn main() {
+    let fast = std::env::var("AIC_BENCH_FAST").is_ok();
+    let b = Bench::new("fig9_latency_rw");
+    let ctx = HarContext::build(43); // real-world cohort
+    let spec = HarRunSpec {
+        horizon: if fast { 1800.0 } else { 6.0 * 3600.0 },
+        ..Default::default()
+    };
+    let volunteers: Vec<u64> = if fast { vec![31] } else { vec![31, 32, 33, 34] };
+
+    let mut hists = Vec::new();
+    b.bench("rw_latency_distributions", || {
+        hists = har_latency_histograms(&ctx, &spec, &volunteers, 40);
+    });
+
+    let rows: Vec<Vec<String>> = hists
+        .iter()
+        .map(|(policy, h)| {
+            let p95 = {
+                let mut acc = 0.0;
+                let mut v = h.bins.len() as f64;
+                for i in 0..h.bins.len() {
+                    acc += h.frac(i);
+                    if acc >= 0.95 {
+                        v = i as f64;
+                        break;
+                    }
+                }
+                v
+            };
+            vec![
+                policy.name(),
+                format!("{:.1}%", 100.0 * h.frac(0)),
+                format!("{:.1}%", 100.0 * (1.0 - h.frac(0))),
+                format!("{p95:.0}"),
+            ]
+        })
+        .collect();
+    b.report_table(
+        "Fig. 9 — real-world latency distribution",
+        &["policy", "same cycle", "later cycles", "p95 (cycles)"],
+        &rows,
+    );
+
+    for (policy, h) in &hists {
+        if matches!(policy, Policy::Greedy | Policy::Smart { .. }) {
+            println!(
+                "shape: {} emits before first power failure [{}]",
+                policy.name(),
+                if h.frac(0) > 0.999 { "PASS" } else { "FAIL" }
+            );
+        }
+    }
+}

@@ -1,0 +1,133 @@
+//! Hot-path microbenchmarks (the §Perf deliverable, L3 side).
+//!
+//! Covers the operations dominating campaign wall-clock: the engine's
+//! charge integration and op execution, the anytime scoring step, full
+//! feature extraction, one Harris row, SVM training, and the PJRT
+//! artifact execution path (batched replay).
+
+use aic::energy::harvester::Harvester;
+use aic::energy::mcu::OpCost;
+use aic::exec::engine::{Engine, EngineConfig, Ledger};
+use aic::har::dataset::{generate_window, Volunteer};
+use aic::har::features::extract_all;
+use aic::har::Activity;
+use aic::imgproc::harris::{gradients, response_row, HarrisConfig, ResponseMap};
+use aic::imgproc::images::{render, Picture};
+use aic::svm::train::{train_ovr, TrainConfig};
+use aic::util::bench::{black_box, Bench};
+use aic::util::rng::Rng;
+
+fn main() {
+    let b = Bench::new("hotpath");
+
+    // Engine: charge integration (dominates long recharge ramps).
+    {
+        let mut cfg = EngineConfig::paper_default(1e9);
+        cfg.initial_voltage = 0.0;
+        let trace = aic::energy::traces::generate(
+            aic::energy::traces::TraceKind::Sim,
+            600.0,
+            0.01,
+            1,
+        );
+        let mut e = Engine::new(cfg, Harvester::Replay(trace));
+        b.bench_throughput("engine/charge_until_boot", 1, || {
+            e.cap.set_voltage(0.5);
+            e.now = 0.0;
+            black_box(e.charge_until_boot());
+        });
+    }
+
+    // Engine: op execution (the per-step hot loop).
+    {
+        let mut e = Engine::new(
+            EngineConfig::paper_default(1e12),
+            Harvester::Constant(2e-3),
+        );
+        let cost = OpCost::cycles(10_000);
+        b.bench_throughput("engine/run_op_x1000", 1000, || {
+            for _ in 0..1000 {
+                black_box(e.run_op(&cost, Ledger::App));
+            }
+            e.cap.set_voltage(3.2);
+        });
+    }
+
+    // Anytime scoring step (6 classes).
+    {
+        let ctx = aic::coordinator::experiment::test_context();
+        let mut rng = Rng::new(5);
+        let who = Volunteer::sample(&mut rng);
+        let w = generate_window(Activity::Walking, &who, &mut rng, 0.0);
+        let feats = extract_all(&w);
+        b.bench_throughput("svm/anytime_step_x140", 140, || {
+            let mut st = ctx.asvm.begin();
+            for _ in 0..140 {
+                ctx.asvm.add_feature(&mut st, &feats);
+            }
+            black_box(st.scores[0]);
+        });
+    }
+
+    // Full 140-feature extraction (dominates load_next).
+    {
+        let mut rng = Rng::new(6);
+        let who = Volunteer::sample(&mut rng);
+        let w = generate_window(Activity::Walking, &who, &mut rng, 0.0);
+        b.bench("har/extract_all_140", || {
+            black_box(extract_all(&w));
+        });
+    }
+
+    // One Harris response row at eval size.
+    {
+        let img = render(Picture::Cluttered, 160, 160, 3);
+        let (ix, iy) = gradients(&img);
+        let cfg = HarrisConfig::default();
+        let mut map = ResponseMap::new(160, 160);
+        let mut y = 0usize;
+        b.bench_throughput("imgproc/harris_row_160", 160, || {
+            for _ in 0..160 {
+                response_row(&ix, &iy, &mut map, y % 160, &cfg);
+                y += 1;
+            }
+        });
+    }
+
+    // SVM training (offline path, sets context-build time).
+    {
+        let mut rng = Rng::new(7);
+        let rows: Vec<Vec<f64>> =
+            (0..300).map(|_| (0..140).map(|_| rng.gaussian()).collect()).collect();
+        let labels: Vec<usize> = (0..300).map(|i| i % 6).collect();
+        b.bench("svm/train_300x140", || {
+            black_box(train_ovr(&rows, &labels, 6, &TrainConfig::default()));
+        });
+    }
+
+    // PJRT artifact execution (batched replay), when artifacts exist.
+    match aic::runtime::ArtifactRuntime::load("artifacts") {
+        Ok(rt) => {
+            use aic::runtime::Tensor;
+            let x = Tensor::zeros(vec![256, 140]);
+            let w = Tensor::zeros(vec![6, 140]);
+            let bias = Tensor::zeros(vec![6]);
+            let mask = Tensor::new(
+                vec![140],
+                (0..140).map(|i| if i < 70 { 1.0 } else { 0.0 }).collect(),
+            );
+            b.bench_throughput("pjrt/svm_prefix_b256", 256, || {
+                black_box(
+                    rt.execute("svm_prefix", &[x.clone(), w.clone(), bias.clone(), mask.clone()])
+                        .unwrap(),
+                );
+            });
+            let img = Tensor::zeros(vec![160, 160]);
+            let rmask = Tensor::new(vec![160], vec![1.0; 160]);
+            b.bench("pjrt/harris_160", || {
+                black_box(rt.execute("harris", &[img.clone(), rmask.clone()]).unwrap());
+            });
+        }
+        Err(e) => println!("(pjrt benches skipped: {e})"),
+    }
+}

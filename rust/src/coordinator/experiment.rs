@@ -1,0 +1,494 @@
+//! Per-figure experiment definitions.
+//!
+//! Each paper figure maps to one function here returning structured rows;
+//! the `aic` CLI and the `rust/benches/fig*` benches are thin wrappers.
+//! See DESIGN.md §4 for the experiment index.
+
+use crate::energy::harvester::{kinetic_power_trace, Harvester, KineticConfig};
+use crate::energy::mcu::McuModel;
+use crate::energy::traces::{generate, TraceKind};
+use crate::exec::approx::{run as run_approx, ApproxConfig};
+use crate::exec::chinchilla::{run as run_chinchilla, ChinchillaConfig};
+use crate::exec::continuous::run as run_continuous;
+use crate::exec::engine::{Engine, EngineConfig};
+use crate::exec::{Campaign, Policy};
+use crate::har::app::{smart_table, HarOutput, HarProgram, WindowSource};
+use crate::har::dataset::{ActivityScript, Corpus, CorpusSpec};
+use crate::har::NUM_FEATURES;
+use crate::imgproc::app::{CornerOutput, CornerProgram};
+use crate::svm::analysis::{
+    coherence_curve_model, expected_accuracy, ClassFeatureModel,
+};
+use crate::svm::anytime::AnytimeSvm;
+use crate::svm::train::{train_ovr, TrainConfig};
+
+/// Everything the HAR experiments share: corpus, trained anytime SVM,
+/// fitted class model, measured full accuracy.
+pub struct HarContext {
+    pub asvm: AnytimeSvm,
+    pub class_model: ClassFeatureModel,
+    pub corpus: Corpus,
+    pub full_accuracy: f64,
+}
+
+impl HarContext {
+    /// Build a context (train on the synthetic corpus) from a seed.
+    pub fn build(seed: u64) -> HarContext {
+        HarContext::build_with(&CorpusSpec::default(), seed)
+    }
+
+    pub fn build_with(spec: &CorpusSpec, seed: u64) -> HarContext {
+        let corpus = Corpus::generate(spec, seed);
+        let (rows, labels) = Corpus::features(&corpus.train);
+        let svm = train_ovr(&rows, &labels, 6, &TrainConfig::default());
+        let asvm = AnytimeSvm::by_coefficient_magnitude(svm);
+        let scaled: Vec<Vec<f64>> =
+            rows.iter().map(|r| asvm.svm.scaler.apply(r)).collect();
+        let class_model = ClassFeatureModel::fit(&scaled, &labels, 6);
+        let (test_rows, test_labels) = Corpus::features(&corpus.test);
+        let full_accuracy = asvm.svm.accuracy(&test_rows, &test_labels);
+        HarContext { asvm, class_model, corpus, full_accuracy }
+    }
+}
+
+/// Parameters of one HAR device campaign.
+#[derive(Clone, Debug)]
+pub struct HarRunSpec {
+    /// Campaign horizon, seconds.
+    pub horizon: f64,
+    /// Sampling period (paper: one minute).
+    pub sample_period: f64,
+    /// Seed for the volunteer's activity script (also powers the device).
+    pub script_seed: u64,
+}
+
+impl Default for HarRunSpec {
+    fn default() -> HarRunSpec {
+        HarRunSpec { horizon: 4.0 * 3600.0, sample_period: 60.0, script_seed: 1 }
+    }
+}
+
+/// Run one HAR campaign under `policy`, powered by the kinetic energy of
+/// the same wrist motion that produces the sensor windows.
+pub fn run_har_policy(
+    ctx: &HarContext,
+    spec: &HarRunSpec,
+    policy: Policy,
+) -> Campaign<HarOutput> {
+    let script = ActivityScript::generate(spec.horizon, spec.script_seed);
+    let mcu = McuModel::paper_default();
+    let mut program =
+        HarProgram::new(ctx.asvm.clone(), WindowSource::Script(script.clone()));
+    match policy {
+        Policy::Continuous => {
+            run_continuous(&mut program, &mcu, spec.sample_period, spec.horizon)
+        }
+        _ => {
+            let accel = script.accel_magnitude(50.0);
+            let trace = kinetic_power_trace(&accel, 50.0, &KineticConfig::default());
+            let engine_cfg = EngineConfig::paper_default(spec.horizon);
+            let mut engine = Engine::new(engine_cfg, Harvester::Replay(trace));
+            match policy {
+                Policy::Chinchilla => {
+                    let cfg = ChinchillaConfig {
+                        sample_period: spec.sample_period,
+                        ..Default::default()
+                    };
+                    run_chinchilla(&mut program, &mut engine, &cfg)
+                }
+                Policy::Greedy => {
+                    run_approx(&mut program, &mut engine, &ApproxConfig::greedy(spec.sample_period))
+                }
+                Policy::Smart { bound } => {
+                    let table =
+                        smart_table(&ctx.asvm, &ctx.class_model, ctx.full_accuracy, &mcu);
+                    run_approx(
+                        &mut program,
+                        &mut engine,
+                        &ApproxConfig::smart(spec.sample_period, bound, table),
+                    )
+                }
+                Policy::Continuous => unreachable!(),
+            }
+        }
+    }
+}
+
+/// Fig. 4 — expected vs measured accuracy as a function of `p`.
+pub struct Fig4Row {
+    pub p: usize,
+    pub expected: f64,
+    pub measured: f64,
+}
+
+pub fn fig4(ctx: &HarContext, ps: &[usize]) -> Vec<Fig4Row> {
+    let coh = coherence_curve_model(&ctx.asvm, &ctx.class_model, ps, 3000, 0xF164);
+    let expected = expected_accuracy(&coh, ctx.full_accuracy, 6);
+    let (test_rows, test_labels) = Corpus::features(&ctx.corpus.test);
+    let measured = ctx.asvm.accuracy_curve(&test_rows, &test_labels, ps);
+    ps.iter()
+        .enumerate()
+        .map(|(i, &p)| Fig4Row { p, expected: expected[i], measured: measured[i] })
+        .collect()
+}
+
+/// Figs. 5-9 — one row per policy: accuracy / coherence / throughput /
+/// latency summary over a (multi-volunteer) campaign set.
+pub struct PolicyRow {
+    pub policy: Policy,
+    pub accuracy: f64,
+    pub coherence_vs_continuous: f64,
+    pub coherence_vs_chinchilla: f64,
+    pub throughput_vs_continuous: f64,
+    pub throughput_vs_greedy: f64,
+    pub throughput_vs_chinchilla: f64,
+    pub same_cycle_fraction: f64,
+    pub mean_features: f64,
+    pub state_energy_fraction: f64,
+}
+
+/// The four intermittent policies of §5 plus the continuous ceiling.
+pub fn har_policies() -> Vec<Policy> {
+    vec![
+        Policy::Continuous,
+        Policy::Chinchilla,
+        Policy::Greedy,
+        Policy::Smart { bound: 0.60 },
+        Policy::Smart { bound: 0.80 },
+    ]
+}
+
+/// Run every policy on the same volunteers and summarise (figs. 5-8).
+pub fn har_policy_comparison(
+    ctx: &HarContext,
+    spec: &HarRunSpec,
+    volunteers: &[u64],
+) -> Vec<PolicyRow> {
+    // campaigns[policy][volunteer]; all (policy, volunteer) devices run
+    // in parallel on OS threads (see EXPERIMENTS.md §Perf — this is the
+    // fleet pattern of coordinator::fleet applied to the figure sweeps).
+    let policies = har_policies();
+    let flat: Vec<Campaign<HarOutput>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = policies
+            .iter()
+            .flat_map(|&p| {
+                volunteers.iter().map(move |&v| (p, v)).collect::<Vec<_>>()
+            })
+            .map(|(p, v)| {
+                let s = HarRunSpec { script_seed: v, ..spec.clone() };
+                scope.spawn(move || run_har_policy(ctx, &s, p))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("campaign thread")).collect()
+    });
+    let campaigns: Vec<Vec<Campaign<HarOutput>>> = flat
+        .chunks(volunteers.len())
+        .map(|c| c.to_vec())
+        .collect();
+    summarise_policies(&policies, &campaigns, spec.sample_period)
+}
+
+fn mean(xs: impl Iterator<Item = f64>) -> f64 {
+    let v: Vec<f64> = xs.collect();
+    crate::util::stats::mean(&v)
+}
+
+fn summarise_policies(
+    policies: &[Policy],
+    campaigns: &[Vec<Campaign<HarOutput>>],
+    period: f64,
+) -> Vec<PolicyRow> {
+    let idx_of = |p: Policy| policies.iter().position(|&q| q == p).unwrap();
+    let cont = idx_of(Policy::Continuous);
+    let chin = idx_of(Policy::Chinchilla);
+    let greedy = idx_of(Policy::Greedy);
+    policies
+        .iter()
+        .enumerate()
+        .map(|(i, &policy)| {
+            let n = campaigns[i].len();
+            let per_volunteer = |f: &dyn Fn(usize) -> f64| mean((0..n).map(f));
+            PolicyRow {
+                policy,
+                accuracy: per_volunteer(&|v| super::metrics::har_accuracy(&campaigns[i][v])),
+                coherence_vs_continuous: per_volunteer(&|v| {
+                    super::metrics::har_coherence(&campaigns[i][v], &campaigns[cont][v], period)
+                }),
+                coherence_vs_chinchilla: per_volunteer(&|v| {
+                    super::metrics::har_coherence(&campaigns[i][v], &campaigns[chin][v], period)
+                }),
+                throughput_vs_continuous: per_volunteer(&|v| {
+                    super::metrics::throughput_ratio(&campaigns[i][v], &campaigns[cont][v])
+                }),
+                throughput_vs_greedy: per_volunteer(&|v| {
+                    super::metrics::throughput_ratio(&campaigns[i][v], &campaigns[greedy][v])
+                }),
+                throughput_vs_chinchilla: per_volunteer(&|v| {
+                    super::metrics::throughput_ratio(&campaigns[i][v], &campaigns[chin][v])
+                }),
+                same_cycle_fraction: per_volunteer(&|v| {
+                    super::metrics::same_cycle_fraction(&campaigns[i][v])
+                }),
+                mean_features: per_volunteer(&|v| {
+                    mean(
+                        campaigns[i][v]
+                            .emitted()
+                            .map(|r| r.steps_executed as f64),
+                    )
+                }),
+                state_energy_fraction: per_volunteer(&|v| {
+                    let c = &campaigns[i][v];
+                    let total = c.app_energy + c.state_energy;
+                    if total == 0.0 {
+                        0.0
+                    } else {
+                        c.state_energy / total
+                    }
+                }),
+            }
+        })
+        .collect()
+}
+
+/// Latency distributions (figs. 6 and 9): per-policy histograms over
+/// power-cycle latency.
+pub fn har_latency_histograms(
+    ctx: &HarContext,
+    spec: &HarRunSpec,
+    volunteers: &[u64],
+    max_cycles: usize,
+) -> Vec<(Policy, crate::util::stats::Histogram)> {
+    [Policy::Greedy, Policy::Smart { bound: 0.80 }, Policy::Chinchilla]
+        .iter()
+        .map(|&policy| {
+            let mut h = crate::util::stats::Histogram::new(0.0, max_cycles as f64, max_cycles);
+            for &v in volunteers {
+                let s = HarRunSpec { script_seed: v, ..spec.clone() };
+                let c = run_har_policy(ctx, &s, policy);
+                for r in c.emitted() {
+                    h.add(r.latency_cycles as f64);
+                }
+            }
+            (policy, h)
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------
+// Imaging experiments (§6).
+// ---------------------------------------------------------------------
+
+/// Parameters of one imaging campaign.
+#[derive(Clone, Debug)]
+pub struct ImgRunSpec {
+    pub horizon: f64,
+    /// Timer between rounds when energy is left (paper: 30 s).
+    pub sample_period: f64,
+    pub trace_seed: u64,
+}
+
+impl Default for ImgRunSpec {
+    fn default() -> ImgRunSpec {
+        ImgRunSpec { horizon: 2.0 * 3600.0, sample_period: 30.0, trace_seed: 3 }
+    }
+}
+
+/// Run one imaging campaign under `policy` on the given energy trace.
+pub fn run_img_policy(
+    spec: &ImgRunSpec,
+    trace: TraceKind,
+    policy: Policy,
+) -> Campaign<CornerOutput> {
+    let mcu = McuModel::paper_default();
+    let mut program = CornerProgram::paper_default(spec.trace_seed ^ 0x1196);
+    match policy {
+        Policy::Continuous => {
+            run_continuous(&mut program, &mcu, spec.sample_period, spec.horizon)
+        }
+        _ => {
+            let power = generate(trace, spec.horizon.min(1800.0), 0.01, spec.trace_seed);
+            let engine_cfg = EngineConfig::paper_default(spec.horizon);
+            let mut engine = Engine::new(engine_cfg, Harvester::Replay(power));
+            match policy {
+                Policy::Chinchilla => {
+                    let cfg = ChinchillaConfig {
+                        sample_period: spec.sample_period,
+                        ..Default::default()
+                    };
+                    run_chinchilla(&mut program, &mut engine, &cfg)
+                }
+                _ => run_approx(
+                    &mut program,
+                    &mut engine,
+                    &ApproxConfig::greedy(spec.sample_period),
+                ),
+            }
+        }
+    }
+}
+
+/// Fig. 12 — corner output vs perforation rate per picture kind.
+pub struct Fig12Row {
+    pub picture: crate::imgproc::images::Picture,
+    pub skip_fraction: f64,
+    pub corners: usize,
+    pub reference_corners: usize,
+    pub equivalent: bool,
+}
+
+pub fn fig12(size: usize, skip_fractions: &[f64]) -> Vec<Fig12Row> {
+    use crate::imgproc::equivalence::equivalent;
+    use crate::imgproc::harris::{harris_full, harris_perforated, HarrisConfig};
+    use crate::imgproc::images::{render, Picture};
+    let cfg = HarrisConfig::default();
+    let mut rows = Vec::new();
+    for &picture in &Picture::ALL {
+        let img = render(picture, size, size, 11);
+        let reference = harris_full(&img, &cfg);
+        for &skip in skip_fractions {
+            let run_rows = ((1.0 - skip) * size as f64).round() as usize;
+            let corners = harris_perforated(&img, &cfg, run_rows);
+            rows.push(Fig12Row {
+                picture,
+                skip_fraction: skip,
+                corners: corners.len(),
+                reference_corners: reference.len(),
+                equivalent: equivalent(&reference, &corners),
+            });
+        }
+    }
+    rows
+}
+
+/// Figs. 13-15 rows: per-trace comparison of AIC vs Chinchilla.
+pub struct ImgTraceRow {
+    pub trace: TraceKind,
+    pub equivalence_aic: f64,
+    pub throughput_aic_vs_continuous: f64,
+    pub throughput_chinchilla_vs_continuous: f64,
+    pub aic_same_cycle: f64,
+    pub chinchilla_latency_mean: f64,
+}
+
+/// Fig. 13 proper: per-picture equivalence pooled over all five traces
+/// (the paper reports "at least 84 %" per picture complexity).
+pub fn fig13_by_picture(
+    spec: &ImgRunSpec,
+) -> Vec<(crate::imgproc::images::Picture, f64)> {
+    let size = crate::imgproc::images::EVAL_SIZE;
+    let campaigns: Vec<_> = TraceKind::ALL
+        .iter()
+        .map(|&trace| run_img_policy(spec, trace, Policy::Greedy))
+        .collect();
+    let refs: Vec<&Campaign<CornerOutput>> = campaigns.iter().collect();
+    super::metrics::corner_equivalence_by_picture(&refs, size)
+}
+
+pub fn img_trace_comparison(spec: &ImgRunSpec) -> Vec<ImgTraceRow> {
+    let size = crate::imgproc::images::EVAL_SIZE;
+    // One thread per (trace, policy) device, as in the HAR sweeps.
+    let runs: Vec<Campaign<CornerOutput>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = TraceKind::ALL
+            .iter()
+            .flat_map(|&t| {
+                [Policy::Continuous, Policy::Greedy, Policy::Chinchilla]
+                    .into_iter()
+                    .map(move |p| (t, p))
+            })
+            .map(|(t, p)| scope.spawn(move || run_img_policy(spec, t, p)))
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("imaging thread")).collect()
+    });
+    TraceKind::ALL
+        .iter()
+        .enumerate()
+        .map(|(i, &trace)| {
+            let cont = &runs[i * 3];
+            let aic = &runs[i * 3 + 1];
+            let chin = &runs[i * 3 + 2];
+            let lat = {
+                let v: Vec<f64> =
+                    chin.emitted().map(|r| r.latency_cycles as f64).collect();
+                crate::util::stats::mean(&v)
+            };
+            ImgTraceRow {
+                trace,
+                equivalence_aic: super::metrics::corner_equivalence_fraction(&aic, size),
+                throughput_aic_vs_continuous: super::metrics::throughput_ratio(&aic, &cont),
+                throughput_chinchilla_vs_continuous: super::metrics::throughput_ratio(
+                    &chin, &cont,
+                ),
+                aic_same_cycle: super::metrics::same_cycle_fraction(&aic),
+                chinchilla_latency_mean: lat,
+            }
+        })
+        .collect()
+}
+
+/// A cheap smoke context for tests (small corpus, fast training).
+pub fn test_context() -> HarContext {
+    HarContext::build_with(
+        &CorpusSpec {
+            train_volunteers: 2,
+            test_volunteers: 1,
+            windows_per_volunteer_per_class: 6,
+        },
+        7,
+    )
+}
+
+/// Feature-count sanity for specs.
+pub fn num_features() -> usize {
+    NUM_FEATURES
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig4_curves_rise_to_ceiling() {
+        let ctx = test_context();
+        let rows = fig4(&ctx, &[0, 20, 60, 140]);
+        assert_eq!(rows.len(), 4);
+        // Chance at p=0 (~1/6 measured and modelled).
+        assert!(rows[0].measured < 0.45, "p=0 measured {}", rows[0].measured);
+        // Measured accuracy at p=140 equals the full accuracy.
+        assert!((rows[3].measured - ctx.full_accuracy).abs() < 1e-9);
+        // Expected tracks measured within the paper's visual delta.
+        for r in &rows {
+            assert!(
+                (r.expected - r.measured).abs() < 0.22,
+                "p={}: expected={} measured={}",
+                r.p,
+                r.expected,
+                r.measured
+            );
+        }
+        // Monotone-ish growth.
+        assert!(rows[2].measured > rows[0].measured);
+    }
+
+    #[test]
+    fn greedy_har_campaign_emits_within_cycle() {
+        let ctx = test_context();
+        let spec = HarRunSpec { horizon: 1800.0, ..Default::default() };
+        let c = run_har_policy(&ctx, &spec, Policy::Greedy);
+        assert!(c.emitted().count() > 0, "no results in 30 min");
+        assert!((super::super::metrics::same_cycle_fraction(&c) - 1.0).abs() < 1e-9);
+        assert_eq!(c.state_energy, 0.0, "approx must not manage state");
+    }
+
+    #[test]
+    fn fig12_degrades_gracefully() {
+        let rows = fig12(64, &[0.0, 0.3, 0.8]);
+        assert_eq!(rows.len(), 9);
+        for chunk in rows.chunks(3) {
+            // skip=0 is exactly the reference.
+            assert!(chunk[0].equivalent);
+            assert_eq!(chunk[0].corners, chunk[0].reference_corners);
+            // skip=0.8 finds no more corners than skip=0.3.
+            assert!(chunk[2].corners <= chunk[1].corners + 2);
+        }
+    }
+}

@@ -1,0 +1,252 @@
+//! Campaign metrics.
+//!
+//! The four metrics of §5: classification *accuracy* against ground
+//! truth; *coherence* between two devices' outputs when ground truth is
+//! unavailable (§5.3 aligns BLE packets closer than one sensor window);
+//! system *throughput* (results per unit time, reported normalised);
+//! and *latency* in power cycles between acquisition and emission.
+
+use crate::exec::{Campaign, RoundResult};
+use crate::har::app::HarOutput;
+use crate::imgproc::app::CornerOutput;
+use crate::imgproc::equivalence::equivalent;
+use crate::imgproc::harris::{harris_full, HarrisConfig};
+use crate::imgproc::images::render;
+use crate::util::stats::Histogram;
+use std::collections::HashMap;
+
+/// Classification accuracy over emitted results.
+pub fn har_accuracy(campaign: &Campaign<HarOutput>) -> f64 {
+    let mut total = 0usize;
+    let mut correct = 0usize;
+    for r in campaign.emitted() {
+        if let Some(out) = &r.output {
+            total += 1;
+            if out.predicted == out.truth as usize {
+                correct += 1;
+            }
+        }
+    }
+    if total == 0 {
+        0.0
+    } else {
+        correct as f64 / total as f64
+    }
+}
+
+/// Align two campaigns' emitted rounds by sampling slot and report the
+/// fraction of aligned pairs with identical classifications (§5.3/§5.4's
+/// coherence). Rounds align when their acquisition times fall in the
+/// same `period` slot.
+pub fn har_coherence(
+    a: &Campaign<HarOutput>,
+    b: &Campaign<HarOutput>,
+    period: f64,
+) -> f64 {
+    let slot = |r: &RoundResult<HarOutput>| (r.acquired_at / period).floor() as i64;
+    let mut by_slot: HashMap<i64, usize> = HashMap::new();
+    for r in b.emitted() {
+        if let Some(out) = &r.output {
+            by_slot.insert(slot(r), out.predicted);
+        }
+    }
+    let mut total = 0usize;
+    let mut same = 0usize;
+    for r in a.emitted() {
+        if let Some(out) = &r.output {
+            if let Some(&other) = by_slot.get(&slot(r)) {
+                total += 1;
+                if out.predicted == other {
+                    same += 1;
+                }
+            }
+        }
+    }
+    if total == 0 {
+        0.0
+    } else {
+        same as f64 / total as f64
+    }
+}
+
+/// Throughput of `a` normalised to `b` (emitted results per second).
+pub fn throughput_ratio<O1, O2>(a: &Campaign<O1>, b: &Campaign<O2>) -> f64 {
+    let tb = b.throughput();
+    if tb == 0.0 {
+        0.0
+    } else {
+        a.throughput() / tb
+    }
+}
+
+/// Latency distribution in power cycles over emitted rounds.
+pub fn latency_histogram<O>(campaign: &Campaign<O>, max_cycles: usize) -> Histogram {
+    let mut h = Histogram::new(0.0, max_cycles as f64, max_cycles);
+    for r in campaign.emitted() {
+        h.add(r.latency_cycles as f64);
+    }
+    h
+}
+
+/// Fraction of emitted rounds delivered within the acquisition cycle.
+pub fn same_cycle_fraction<O>(campaign: &Campaign<O>) -> f64 {
+    let mut total = 0usize;
+    let mut same = 0usize;
+    for r in campaign.emitted() {
+        total += 1;
+        if r.latency_cycles == 0 {
+            same += 1;
+        }
+    }
+    if total == 0 {
+        0.0
+    } else {
+        same as f64 / total as f64
+    }
+}
+
+/// Imaging: per-picture-kind equivalence pooled over several campaigns
+/// (the paper's Fig. 13 aggregates across all energy traces).
+pub fn corner_equivalence_by_picture(
+    campaigns: &[&Campaign<CornerOutput>],
+    size: usize,
+) -> Vec<(crate::imgproc::images::Picture, f64)> {
+    let cfg = HarrisConfig::default();
+    let mut cache: HashMap<(&'static str, u64), Vec<crate::imgproc::Corner>> = HashMap::new();
+    let mut counts: HashMap<&'static str, (usize, usize)> = HashMap::new();
+    for campaign in campaigns {
+        for r in campaign.emitted() {
+            if let Some(out) = &r.output {
+                let key = (out.picture.name(), out.picture_seed);
+                let reference = cache.entry(key).or_insert_with(|| {
+                    harris_full(&render(out.picture, size, size, out.picture_seed), &cfg)
+                });
+                let entry = counts.entry(out.picture.name()).or_insert((0, 0));
+                entry.1 += 1;
+                if equivalent(reference, &out.corners) {
+                    entry.0 += 1;
+                }
+            }
+        }
+    }
+    crate::imgproc::images::Picture::ALL
+        .iter()
+        .map(|&p| {
+            let (ok, total) = counts.get(p.name()).copied().unwrap_or((0, 0));
+            (p, if total == 0 { 0.0 } else { ok as f64 / total as f64 })
+        })
+        .collect()
+}
+
+/// Imaging: fraction of emitted outputs equivalent (paper §6.3 metric) to
+/// the unperforated reference for the same picture. Reference detections
+/// are cached per (picture, seed).
+pub fn corner_equivalence_fraction(campaign: &Campaign<CornerOutput>, size: usize) -> f64 {
+    let cfg = HarrisConfig::default();
+    let mut cache: HashMap<(&'static str, u64), Vec<crate::imgproc::Corner>> = HashMap::new();
+    let mut total = 0usize;
+    let mut ok = 0usize;
+    for r in campaign.emitted() {
+        if let Some(out) = &r.output {
+            let key = (out.picture.name(), out.picture_seed);
+            let reference = cache.entry(key).or_insert_with(|| {
+                harris_full(&render(out.picture, size, size, out.picture_seed), &cfg)
+            });
+            total += 1;
+            if equivalent(reference, &out.corners) {
+                ok += 1;
+            }
+        }
+    }
+    if total == 0 {
+        0.0
+    } else {
+        ok as f64 / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::har::Activity;
+
+    fn round(
+        sample_id: u64,
+        t: f64,
+        predicted: usize,
+        truth: Activity,
+        latency: u64,
+    ) -> RoundResult<HarOutput> {
+        RoundResult {
+            sample_id,
+            acquired_at: t,
+            emitted_at: Some(t + 1.0),
+            latency_cycles: latency,
+            steps_executed: 10,
+            output: Some(HarOutput { predicted, truth, features_used: 10 }),
+        }
+    }
+
+    fn campaign(rounds: Vec<RoundResult<HarOutput>>, duration: f64) -> Campaign<HarOutput> {
+        Campaign {
+            rounds,
+            duration,
+            power_failures: 0,
+            power_cycles: 1,
+            app_energy: 0.0,
+            state_energy: 0.0,
+        }
+    }
+
+    #[test]
+    fn accuracy_counts_matches() {
+        let c = campaign(
+            vec![
+                round(0, 0.0, 0, Activity::Walking, 0),
+                round(1, 60.0, 3, Activity::Sitting, 0),
+                round(2, 120.0, 5, Activity::Sitting, 0),
+            ],
+            180.0,
+        );
+        assert!((har_accuracy(&c) - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn coherence_aligns_by_slot() {
+        let a = campaign(
+            vec![
+                round(0, 1.0, 0, Activity::Walking, 0),
+                round(1, 61.0, 1, Activity::Walking, 0),
+                round(2, 121.0, 2, Activity::Walking, 0),
+            ],
+            180.0,
+        );
+        let b = campaign(
+            vec![
+                round(0, 2.0, 0, Activity::Walking, 0), // same slot, same class
+                round(1, 62.0, 4, Activity::Walking, 0), // same slot, differs
+                // slot 2 missing in b
+            ],
+            180.0,
+        );
+        assert!((har_coherence(&a, &b, 60.0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn throughput_ratio_and_latency() {
+        let a = campaign(vec![round(0, 0.0, 0, Activity::Walking, 0)], 100.0);
+        let b = campaign(
+            vec![
+                round(0, 0.0, 0, Activity::Walking, 2),
+                round(1, 50.0, 0, Activity::Walking, 7),
+            ],
+            100.0,
+        );
+        assert!((throughput_ratio(&a, &b) - 0.5).abs() < 1e-12);
+        let h = latency_histogram(&b, 10);
+        assert_eq!(h.bins[2], 1);
+        assert_eq!(h.bins[7], 1);
+        assert_eq!(same_cycle_fraction(&b), 0.0);
+        assert_eq!(same_cycle_fraction(&a), 1.0);
+    }
+}

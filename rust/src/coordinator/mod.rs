@@ -1,0 +1,16 @@
+//! Experiment coordination: the layer that reproduces the paper's
+//! evaluation.
+//!
+//! * [`metrics`] — accuracy, coherence (the §5.3 alignment rule),
+//!   throughput ratios and latency distributions over campaigns.
+//! * [`experiment`] — the per-figure experiment definitions: HAR contexts
+//!   (corpus → training → Eq. 7 tables → kinetic-powered campaigns) and
+//!   imaging campaigns over the five energy traces.
+//! * [`fleet`] — multi-device / multi-volunteer orchestration on OS
+//!   threads (the paper's 12 prototypes and 15 volunteers).
+//! * [`report`] — figure data as markdown tables + CSV under `out/`.
+
+pub mod experiment;
+pub mod fleet;
+pub mod metrics;
+pub mod report;

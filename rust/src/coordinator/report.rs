@@ -1,0 +1,153 @@
+//! Figure-data rendering: markdown tables to stdout, CSV + JSON to `out/`.
+
+use crate::util::json::{self, Value};
+use std::io::Write;
+use std::path::Path;
+
+/// A figure's tabular data.
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, row: Vec<String>) {
+        assert_eq!(row.len(), self.header.len(), "row width mismatch");
+        self.rows.push(row);
+    }
+
+    /// Render as a markdown table.
+    pub fn to_markdown(&self) -> String {
+        let mut s = format!("### {}\n\n", self.title);
+        s += &format!("| {} |\n", self.header.join(" | "));
+        s += &format!("|{}|\n", self.header.iter().map(|_| "---").collect::<Vec<_>>().join("|"));
+        for row in &self.rows {
+            s += &format!("| {} |\n", row.join(" | "));
+        }
+        s
+    }
+
+    /// Render as CSV.
+    pub fn to_csv(&self) -> String {
+        let esc = |cell: &str| -> String {
+            if cell.contains(',') || cell.contains('"') {
+                format!("\"{}\"", cell.replace('"', "\"\""))
+            } else {
+                cell.to_string()
+            }
+        };
+        let mut s = self.header.iter().map(|h| esc(h)).collect::<Vec<_>>().join(",") + "\n";
+        for row in &self.rows {
+            s += &(row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(",") + "\n");
+        }
+        s
+    }
+
+    /// As a JSON value (for machine consumption).
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("title", self.title.as_str().into()),
+            (
+                "header",
+                Value::Arr(self.header.iter().map(|h| h.as_str().into()).collect()),
+            ),
+            (
+                "rows",
+                Value::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| Value::Arr(r.iter().map(|c| c.as_str().into()).collect()))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Print to stdout and persist CSV + JSON under `out_dir/<stem>.*`.
+    pub fn emit(&self, out_dir: &str, stem: &str) -> std::io::Result<()> {
+        println!("{}", self.to_markdown());
+        let dir = Path::new(out_dir);
+        std::fs::create_dir_all(dir)?;
+        let mut csv = std::fs::File::create(dir.join(format!("{stem}.csv")))?;
+        csv.write_all(self.to_csv().as_bytes())?;
+        let mut js = std::fs::File::create(dir.join(format!("{stem}.json")))?;
+        js.write_all(json::to_string_pretty(&self.to_json()).as_bytes())?;
+        Ok(())
+    }
+}
+
+/// Format helpers used by the figure benches.
+pub fn pct(x: f64) -> String {
+    format!("{:.1}%", 100.0 * x)
+}
+
+pub fn ratio(x: f64) -> String {
+    format!("{x:.2}x")
+}
+
+pub fn f2(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table() -> Table {
+        let mut t = Table::new("fig-test", &["a", "b"]);
+        t.push(vec!["1".into(), "x,y".into()]);
+        t
+    }
+
+    #[test]
+    fn markdown_and_csv_render() {
+        let t = table();
+        let md = t.to_markdown();
+        assert!(md.contains("| a | b |"));
+        assert!(md.contains("| 1 | x,y |"));
+        let csv = t.to_csv();
+        assert!(csv.contains("\"x,y\""));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let t = table();
+        let v = t.to_json();
+        assert_eq!(v.get("title").as_str(), Some("fig-test"));
+        assert_eq!(v.get("rows").at(0).at(1).as_str(), Some("x,y"));
+    }
+
+    #[test]
+    fn emit_writes_files() {
+        let t = table();
+        let dir = std::env::temp_dir().join("aic_report_test");
+        let dir_s = dir.to_str().unwrap();
+        t.emit(dir_s, "fig_test").unwrap();
+        assert!(dir.join("fig_test.csv").exists());
+        assert!(dir.join("fig_test.json").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn formatting_helpers() {
+        assert_eq!(pct(0.834), "83.4%");
+        assert_eq!(ratio(7.0), "7.00x");
+        assert_eq!(f2(1.234), "1.23");
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn row_width_enforced() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.push(vec!["only-one".into()]);
+    }
+}

@@ -1,0 +1,171 @@
+//! The capacitor energy buffer.
+//!
+//! The prototype uses a 1470 µF capacitor chosen "through a mixed
+//! analytical and experimental approach" (§4.1): large enough for
+//! worst-case single-cycle processing, small enough to recharge quickly.
+//! State is the voltage `v`; energy is ½CV². The device operates while
+//! `v >= v_off` (brown-out threshold) and, after dying, restarts only once
+//! `v >= v_on` (the booster's VBAT_OK rising threshold), giving the
+//! classic intermittent duty cycle.
+
+/// Capacitor + supervisor thresholds.
+#[derive(Clone, Debug)]
+pub struct Capacitor {
+    /// Capacitance in farads (paper: 1470e-6).
+    pub capacitance: f64,
+    /// Rail ceiling enforced by the charger (BQ25505 OV threshold).
+    pub v_max: f64,
+    /// Turn-on (VBAT_OK rising) threshold: device boots at/above this.
+    pub v_on: f64,
+    /// Brown-out threshold: device dies below this.
+    pub v_off: f64,
+    /// Current voltage.
+    v: f64,
+}
+
+impl Capacitor {
+    /// The paper's buffer: 1470 µF, 3.6 V rail, boot at 3.0 V, die at 1.8 V
+    /// (MSP430 minimum supply at 8 MHz).
+    pub fn paper_default() -> Capacitor {
+        Capacitor::new(1470e-6, 3.6, 3.0, 1.8)
+    }
+
+    pub fn new(capacitance: f64, v_max: f64, v_on: f64, v_off: f64) -> Capacitor {
+        assert!(capacitance > 0.0);
+        assert!(v_max >= v_on && v_on > v_off && v_off > 0.0);
+        Capacitor { capacitance, v_max, v_on, v_off, v: 0.0 }
+    }
+
+    /// Current voltage (what the LTC1417 ADC reads).
+    #[inline]
+    pub fn voltage(&self) -> f64 {
+        self.v
+    }
+
+    /// Stored energy, joules.
+    #[inline]
+    pub fn energy(&self) -> f64 {
+        0.5 * self.capacitance * self.v * self.v
+    }
+
+    /// Energy available before brown-out: ½C(v² − v_off²), clamped at 0.
+    ///
+    /// This is the budget the GREEDY/SMART policies divide between useful
+    /// computation and the final BLE transmission.
+    #[inline]
+    pub fn usable_energy(&self) -> f64 {
+        let e = 0.5 * self.capacitance * (self.v * self.v - self.v_off * self.v_off);
+        e.max(0.0)
+    }
+
+    /// Energy needed to charge from `v_off` to `v_on` (one recharge ramp).
+    pub fn recharge_energy(&self) -> f64 {
+        0.5 * self.capacitance * (self.v_on * self.v_on - self.v_off * self.v_off)
+    }
+
+    /// Deposit `joules` from the charger (clamped to the rail ceiling).
+    pub fn charge(&mut self, joules: f64) {
+        debug_assert!(joules >= 0.0);
+        let e = self.energy() + joules;
+        self.v = (2.0 * e / self.capacitance).sqrt().min(self.v_max);
+    }
+
+    /// Withdraw `joules` for a load operation. Returns `false` (and drains
+    /// to the floor) if the buffer held less than requested — the caller
+    /// treats that as a brown-out mid-operation.
+    #[must_use]
+    pub fn discharge(&mut self, joules: f64) -> bool {
+        debug_assert!(joules >= 0.0);
+        let e = self.energy() - joules;
+        if e <= 0.0 {
+            self.v = 0.0;
+            return false;
+        }
+        self.v = (2.0 * e / self.capacitance).sqrt();
+        true
+    }
+
+    /// True while the MCU can run.
+    #[inline]
+    pub fn alive(&self) -> bool {
+        self.v >= self.v_off
+    }
+
+    /// True when a dead device may boot.
+    #[inline]
+    pub fn can_boot(&self) -> bool {
+        self.v >= self.v_on
+    }
+
+    /// Force the voltage (test setup / cold start).
+    pub fn set_voltage(&mut self, v: f64) {
+        self.v = v.clamp(0.0, self.v_max);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn energy_matches_half_cv2() {
+        let mut c = Capacitor::paper_default();
+        c.set_voltage(3.0);
+        assert!((c.energy() - 0.5 * 1470e-6 * 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn usable_energy_is_above_brownout_only() {
+        let mut c = Capacitor::paper_default();
+        c.set_voltage(1.8);
+        assert_eq!(c.usable_energy(), 0.0);
+        c.set_voltage(3.0);
+        let want = 0.5 * 1470e-6 * (9.0 - 1.8 * 1.8);
+        assert!((c.usable_energy() - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn charge_clamps_at_rail() {
+        let mut c = Capacitor::paper_default();
+        c.set_voltage(3.5);
+        c.charge(1.0); // a full joule, way past the rail
+        assert!((c.voltage() - 3.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn discharge_roundtrip() {
+        let mut c = Capacitor::paper_default();
+        c.set_voltage(3.0);
+        let e0 = c.energy();
+        assert!(c.discharge(1e-3));
+        assert!((c.energy() - (e0 - 1e-3)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn overdraw_reports_failure() {
+        let mut c = Capacitor::paper_default();
+        c.set_voltage(2.0);
+        assert!(!c.discharge(1.0));
+        assert_eq!(c.voltage(), 0.0);
+        assert!(!c.alive());
+    }
+
+    #[test]
+    fn lifecycle_thresholds() {
+        let mut c = Capacitor::paper_default();
+        c.set_voltage(2.5);
+        assert!(c.alive());
+        assert!(!c.can_boot());
+        c.set_voltage(3.05);
+        assert!(c.can_boot());
+        c.set_voltage(1.7);
+        assert!(!c.alive());
+    }
+
+    #[test]
+    fn recharge_energy_positive_and_consistent() {
+        let c = Capacitor::paper_default();
+        let want = 0.5 * 1470e-6 * (9.0 - 3.24);
+        assert!((c.recharge_energy() - want).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,166 @@
+//! Offline energy estimation (the paper's EPIC role, §4.2/§6.2).
+//!
+//! Given the per-step cost vectors of a pipeline and the MCU model, the
+//! estimator produces the tables the run-time policies consult:
+//!
+//! * cumulative energy to execute the first `k` steps (GREEDY's
+//!   look-ahead: "is there just enough left to emit?"),
+//! * for the SMART policy, the map from a user accuracy bound `A` to the
+//!   minimum number of features `p'` whose *expected* accuracy (from the
+//!   Eq. 7 analysis or a measured curve) meets `A`, together with the
+//!   energy needed to process those `p'` features and emit.
+//!
+//! The estimator runs offline on the same cost model the engine charges
+//! online, mirroring the paper's setup where EPIC profiles the firmware
+//! that later runs on the device.
+
+use crate::energy::mcu::{McuModel, OpCost};
+
+/// Energy profile of a step pipeline.
+#[derive(Clone, Debug)]
+pub struct EnergyProfile {
+    /// Energy of each step, joules.
+    pub step_energy: Vec<f64>,
+    /// `cumulative[k]` = energy of steps `0..k` (so `[0] == 0`).
+    pub cumulative: Vec<f64>,
+    /// Duration of each step, seconds.
+    pub step_duration: Vec<f64>,
+}
+
+impl EnergyProfile {
+    /// Profile a pipeline described by per-step cost vectors.
+    pub fn from_costs(mcu: &McuModel, costs: &[OpCost]) -> EnergyProfile {
+        let step_energy: Vec<f64> = costs.iter().map(|c| mcu.energy(c)).collect();
+        let step_duration: Vec<f64> = costs.iter().map(|c| mcu.duration(c)).collect();
+        let mut cumulative = Vec::with_capacity(costs.len() + 1);
+        let mut acc = 0.0;
+        cumulative.push(0.0);
+        for &e in &step_energy {
+            acc += e;
+            cumulative.push(acc);
+        }
+        EnergyProfile { step_energy, cumulative, step_duration }
+    }
+
+    /// Total pipeline energy.
+    pub fn total(&self) -> f64 {
+        *self.cumulative.last().unwrap_or(&0.0)
+    }
+
+    /// Energy of steps `from..to`.
+    pub fn span(&self, from: usize, to: usize) -> f64 {
+        self.cumulative[to] - self.cumulative[from]
+    }
+
+    /// Largest `k` such that steps `0..k` plus `reserve` fit in `budget`.
+    pub fn max_steps_within(&self, budget: f64, reserve: f64) -> usize {
+        // cumulative is sorted; binary search for budget - reserve.
+        let avail = budget - reserve;
+        if avail < 0.0 {
+            return 0;
+        }
+        match self
+            .cumulative
+            .binary_search_by(|e| e.partial_cmp(&avail).unwrap())
+        {
+            Ok(k) => k,
+            Err(ins) => ins.saturating_sub(1),
+        }
+    }
+}
+
+/// SMART's offline lookup table: accuracy bound → (p', energy incl. emit).
+#[derive(Clone, Debug)]
+pub struct SmartTable {
+    /// `expected_accuracy[p]` for classifications using `p` features
+    /// (p = 0..=n), from the Eq. 7 analysis or an emulation sweep.
+    pub expected_accuracy: Vec<f64>,
+    /// Cumulative energy to process the first `p` features.
+    pub cumulative_energy: Vec<f64>,
+    /// Energy to emit the result (BLE packet).
+    pub emit_energy: f64,
+}
+
+impl SmartTable {
+    pub fn new(expected_accuracy: Vec<f64>, profile: &EnergyProfile, emit_energy: f64) -> SmartTable {
+        assert_eq!(expected_accuracy.len(), profile.cumulative.len());
+        SmartTable {
+            expected_accuracy,
+            cumulative_energy: profile.cumulative.clone(),
+            emit_energy,
+        }
+    }
+
+    /// Minimum feature count whose expected accuracy meets `bound`
+    /// (None if even all features fall short).
+    pub fn min_features_for(&self, bound: f64) -> Option<usize> {
+        self.expected_accuracy.iter().position(|&a| a >= bound)
+    }
+
+    /// Energy required to meet `bound`: features plus the final emission.
+    pub fn energy_for(&self, bound: f64) -> Option<f64> {
+        self.min_features_for(bound)
+            .map(|p| self.cumulative_energy[p] + self.emit_energy)
+    }
+
+    /// SMART's gate: can the current budget deliver accuracy >= bound?
+    pub fn feasible(&self, budget: f64, bound: f64) -> Option<usize> {
+        let p = self.min_features_for(bound)?;
+        if self.cumulative_energy[p] + self.emit_energy <= budget {
+            Some(p)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mcu() -> McuModel {
+        McuModel::paper_default()
+    }
+
+    fn costs(n: usize) -> Vec<OpCost> {
+        (0..n).map(|i| OpCost::cycles(1000 * (i as u64 + 1))).collect()
+    }
+
+    #[test]
+    fn cumulative_is_prefix_sum() {
+        let p = EnergyProfile::from_costs(&mcu(), &costs(4));
+        assert_eq!(p.cumulative.len(), 5);
+        assert_eq!(p.cumulative[0], 0.0);
+        for k in 1..=4 {
+            let direct: f64 = p.step_energy[..k].iter().sum();
+            assert!((p.cumulative[k] - direct).abs() < 1e-18);
+        }
+        assert!((p.span(1, 3) - (p.step_energy[1] + p.step_energy[2])).abs() < 1e-18);
+    }
+
+    #[test]
+    fn max_steps_within_budget() {
+        let p = EnergyProfile::from_costs(&mcu(), &costs(4));
+        assert_eq!(p.max_steps_within(p.total() + 1e-9, 0.0), 4);
+        assert_eq!(p.max_steps_within(p.cumulative[2] + 1e-15, 0.0), 2);
+        assert_eq!(p.max_steps_within(0.0, 0.0), 0);
+        assert_eq!(p.max_steps_within(1.0, 2.0), 0); // reserve exceeds budget
+        // Reserve shaves off the last step.
+        let reserve = p.step_energy[3];
+        assert!(p.max_steps_within(p.total(), reserve + 1e-15) < 4);
+    }
+
+    #[test]
+    fn smart_table_lookup() {
+        let profile = EnergyProfile::from_costs(&mcu(), &costs(4));
+        let acc = vec![0.166, 0.5, 0.7, 0.82, 0.88];
+        let t = SmartTable::new(acc, &profile, 50e-6);
+        assert_eq!(t.min_features_for(0.8), Some(3));
+        assert_eq!(t.min_features_for(0.95), None);
+        let e = t.energy_for(0.8).unwrap();
+        assert!((e - (profile.cumulative[3] + 50e-6)).abs() < 1e-15);
+        // Feasibility gate.
+        assert_eq!(t.feasible(e + 1e-9, 0.8), Some(3));
+        assert_eq!(t.feasible(e - 1e-6, 0.8), None);
+    }
+}

@@ -1,0 +1,27 @@
+//! Energy substrate: everything between the ambient environment and the
+//! MCU's energy ledger.
+//!
+//! The paper's testbed is a kinetic/solar/RF harvester feeding a BQ25505
+//! booster that charges a 1470 µF capacitor powering an MSP430-FR5659.
+//! This module models that chain:
+//!
+//! * [`harvester`] — ambient power sources (trace replay, kinetic
+//!   transducer, constant), fed by [`traces`] (synthetic RF / solar
+//!   profiles matching the paper's five traces).
+//! * [`booster`] — BQ25505-like boost charger efficiency model.
+//! * [`capacitor`] — the energy buffer: ½CV², turn-on / brown-out
+//!   thresholds, usable-energy queries (the "ADC read" the SMART policy
+//!   performs).
+//! * [`mcu`] — MSP430-class cost model: CPU cycles, FRAM reads/writes with
+//!   wait-state penalties, ADC, BLE, sensors. Single source of truth for
+//!   every nanojoule charged anywhere in the simulator.
+//! * [`estimator`] — the offline energy-estimation tool (the paper uses
+//!   EPIC): profiles a step program against the MCU model and builds the
+//!   lookup tables the SMART policy consults at run time.
+
+pub mod booster;
+pub mod capacitor;
+pub mod estimator;
+pub mod harvester;
+pub mod mcu;
+pub mod traces;

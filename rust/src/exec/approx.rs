@@ -1,0 +1,313 @@
+//! Approximate intermittent computing — the paper's contribution.
+//!
+//! Both policies bound every stateful computation to the current power
+//! cycle: the approximation knob (feature count / perforated iterations)
+//! is chosen so that the result is **emitted before the first power
+//! failure**, so no persistent state ever exists and every joule goes to
+//! useful processing.
+//!
+//! * **GREEDY** (§4.3): keeps adding steps while the remaining budget
+//!   covers the next step *plus* the final BLE emission, then emits. Any
+//!   energy harvested while running is captured automatically because the
+//!   budget is re-read from the capacitor before every step.
+//! * **SMART** (§4.3): reads the capacitor through the ADC, consults the
+//!   offline [`SmartTable`] for the minimum step count `p'` meeting the
+//!   user accuracy bound `A`; skips the round if infeasible, otherwise
+//!   runs `p'` steps unconditionally and then continues in GREEDY mode.
+
+use crate::energy::estimator::SmartTable;
+use crate::exec::engine::{Engine, Ledger, OpOutcome};
+use crate::exec::{Campaign, RoundResult, StepProgram};
+
+/// Approximate runtime configuration.
+#[derive(Clone, Debug)]
+pub struct ApproxConfig {
+    /// Seconds between sampling slots (the paper's "one minute").
+    pub sample_period: f64,
+    /// Safety margin multiplier on the look-ahead (step + emit) cost;
+    /// models the prototype's conservative tuning so the emission
+    /// reliably precedes the power failure.
+    pub margin: f64,
+    /// SMART's accuracy lower bound; `None` = GREEDY.
+    pub smart: Option<SmartPolicy>,
+}
+
+/// SMART's offline-provisioned decision inputs.
+#[derive(Clone, Debug)]
+pub struct SmartPolicy {
+    /// User accuracy bound `A`.
+    pub bound: f64,
+    /// Offline lookup table from the estimator + Eq. 7 analysis.
+    pub table: SmartTable,
+}
+
+impl ApproxConfig {
+    pub fn greedy(sample_period: f64) -> ApproxConfig {
+        ApproxConfig { sample_period, margin: 1.05, smart: None }
+    }
+
+    pub fn smart(sample_period: f64, bound: f64, table: SmartTable) -> ApproxConfig {
+        ApproxConfig {
+            sample_period,
+            margin: 1.05,
+            smart: Some(SmartPolicy { bound, table }),
+        }
+    }
+}
+
+/// Run the approximate-intermittent runtime until the campaign horizon or
+/// the end of the input stream.
+pub fn run<P: StepProgram>(
+    program: &mut P,
+    engine: &mut Engine,
+    cfg: &ApproxConfig,
+) -> Campaign<P::Output> {
+    let mut rounds: Vec<RoundResult<P::Output>> = Vec::new();
+    let mut sample_id = 0u64;
+
+    'campaign: while !engine.out_of_time() {
+        if !engine.cap.alive() && !engine.charge_until_boot() {
+            break;
+        }
+        if !program.load_next(engine.now) {
+            break;
+        }
+        let acquired_at = engine.now;
+        let acquired_cycle = engine.cycles;
+
+        // Acquire the sensor window. A brown-out here loses the sample;
+        // there is no retry state — we just move on after recharging.
+        if engine.run_op(&program.acquire_cost(), Ledger::App) == OpOutcome::BrownOut {
+            rounds.push(lost(sample_id, acquired_at));
+            sample_id += 1;
+            continue 'campaign;
+        }
+
+        let emit_energy = engine.mcu.energy(&program.emit_cost());
+        let total = program.num_steps();
+        let mut k = 0usize; // steps executed so far
+
+        // SMART gate: is the budget enough for the accuracy bound?
+        if let Some(smart) = &cfg.smart {
+            let budget = match engine.read_budget() {
+                Some(b) => b,
+                None => {
+                    rounds.push(lost(sample_id, acquired_at));
+                    sample_id += 1;
+                    continue 'campaign;
+                }
+            };
+            match smart.table.feasible(budget, smart.bound) {
+                None => {
+                    // Skip this round: record the dropped sample, sleep.
+                    rounds.push(RoundResult {
+                        sample_id,
+                        acquired_at,
+                        emitted_at: None,
+                        latency_cycles: 0,
+                        steps_executed: 0,
+                        output: None,
+                    });
+                    sample_id += 1;
+                    let _ = engine.sleep_until_next_slot(cfg.sample_period);
+                    continue 'campaign;
+                }
+                Some(p_required) => {
+                    // Run p' steps unconditionally; the table guarantees
+                    // they plus the emission fit the budget.
+                    program.plan(p_required.min(total));
+                    while k < program.planned_steps() {
+                        let cost = program.step_cost(k);
+                        if engine.run_op(&cost, Ledger::App) == OpOutcome::BrownOut {
+                            rounds.push(lost(sample_id, acquired_at));
+                            sample_id += 1;
+                            continue 'campaign;
+                        }
+                        program.execute_step(k);
+                        k += 1;
+                    }
+                }
+            }
+        }
+
+        // GREEDY refinement: extend the plan step by step while the live
+        // budget covers (next step + emission) with margin.
+        while k < total {
+            let next_cost = engine.mcu.energy(&program.step_cost_preview(k));
+            let needed = (next_cost + emit_energy) * cfg.margin;
+            if engine.cap.usable_energy() < needed {
+                break;
+            }
+            program.plan(k + 1);
+            let cost = program.step_cost(k);
+            if engine.run_op(&cost, Ledger::App) == OpOutcome::BrownOut {
+                rounds.push(lost(sample_id, acquired_at));
+                sample_id += 1;
+                continue 'campaign;
+            }
+            program.execute_step(k);
+            k += 1;
+        }
+
+        // Emit — by construction within the same power cycle.
+        match engine.run_op(&program.emit_cost(), Ledger::App) {
+            OpOutcome::Done => {
+                rounds.push(RoundResult {
+                    sample_id,
+                    acquired_at,
+                    emitted_at: Some(engine.now),
+                    latency_cycles: engine.cycles - acquired_cycle,
+                    steps_executed: k,
+                    output: Some(program.output()),
+                });
+            }
+            OpOutcome::BrownOut => {
+                rounds.push(lost(sample_id, acquired_at));
+            }
+        }
+        sample_id += 1;
+
+        // Sleep to the next sampling slot; if we die, the loop recharges.
+        let _ = engine.sleep_until_next_slot(cfg.sample_period);
+    }
+
+    Campaign {
+        rounds,
+        duration: engine.now,
+        power_failures: engine.failures,
+        power_cycles: engine.cycles,
+        app_energy: engine.app_energy,
+        state_energy: engine.state_energy,
+    }
+}
+
+fn lost<O>(sample_id: u64, acquired_at: f64) -> RoundResult<O> {
+    RoundResult {
+        sample_id,
+        acquired_at,
+        emitted_at: None,
+        latency_cycles: 0,
+        steps_executed: 0,
+        output: None,
+    }
+}
+
+/// Cost preview used by the GREEDY look-ahead: the cost step `k` *will*
+/// have once planned. Default planning is monotone so previewing via a
+/// temporary plan is exact; programs expose it directly to avoid
+/// mutating the plan for a read.
+trait StepCostPreview {
+    fn step_cost_preview(&self, k: usize) -> crate::energy::mcu::OpCost;
+}
+
+impl<P: StepProgram> StepCostPreview for P {
+    fn step_cost_preview(&self, k: usize) -> crate::energy::mcu::OpCost {
+        // Planned steps are nested prefixes; cost of step k is defined by
+        // the program for any k < num_steps() regardless of current plan.
+        self.step_cost(k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energy::estimator::{EnergyProfile, SmartTable};
+    use crate::energy::harvester::Harvester;
+    use crate::energy::mcu::{McuModel, OpCost};
+    use crate::exec::engine::EngineConfig;
+    use crate::exec::program::SyntheticProgram;
+
+    fn engine(power: f64, max_time: f64) -> Engine {
+        Engine::new(EngineConfig::paper_default(max_time), Harvester::Constant(power))
+    }
+
+    #[test]
+    fn greedy_always_emits_within_same_cycle() {
+        // Expensive program (17 mJ > buffer): GREEDY must truncate.
+        let mut p = SyntheticProgram::new(20, 140, 400_000);
+        let mut e = engine(1.5e-3, 3600.0 * 2.0);
+        let c = run(&mut p, &mut e, &ApproxConfig::greedy(60.0));
+        let emitted: Vec<_> = c.rounds.iter().filter(|r| r.emitted_at.is_some()).collect();
+        assert!(!emitted.is_empty());
+        // The paper's key guarantee: latency is zero power cycles.
+        assert!(emitted.iter().all(|r| r.latency_cycles == 0));
+        // And the plan was truncated below full precision.
+        assert!(emitted.iter().any(|r| r.steps_executed < 140));
+        // No persistent state was ever managed.
+        assert_eq!(c.state_energy, 0.0);
+    }
+
+    #[test]
+    fn greedy_uses_all_steps_when_energy_abounds() {
+        let mut p = SyntheticProgram::new(5, 10, 10_000);
+        let mut e = engine(3e-3, 3600.0);
+        let c = run(&mut p, &mut e, &ApproxConfig::greedy(60.0));
+        assert!(c.rounds.iter().all(|r| r.steps_executed == 10));
+    }
+
+    fn smart_table(steps: usize, cycles: u64, acc_at_full: f64) -> SmartTable {
+        let mcu = McuModel::paper_default();
+        let costs: Vec<OpCost> = (0..steps).map(|_| OpCost::cycles(cycles)).collect();
+        let profile = EnergyProfile::from_costs(&mcu, &costs);
+        // Linear accuracy curve from 1/6 to acc_at_full.
+        let acc: Vec<f64> = (0..=steps)
+            .map(|p| 1.0 / 6.0 + (acc_at_full - 1.0 / 6.0) * p as f64 / steps as f64)
+            .collect();
+        let emit = mcu.energy(&OpCost { cycles: 500, ble_bytes: 1, ..Default::default() });
+        SmartTable::new(acc, &profile, emit)
+    }
+
+    #[test]
+    fn smart_skips_when_budget_insufficient() {
+        let mut p = SyntheticProgram::new(10, 140, 400_000);
+        // Tiny harvest: buffer starts at v_on and barely recharges.
+        let mut e = engine(5e-6, 3600.0 * 2.0);
+        let table = smart_table(140, 400_000, 0.88);
+        // Demand an accuracy needing ~all features: infeasible per cycle.
+        let c = run(&mut p, &mut e, &ApproxConfig::smart(60.0, 0.87, table));
+        let skipped = c.rounds.iter().filter(|r| r.emitted_at.is_none()).count();
+        assert!(skipped > 0, "SMART should skip under energy scarcity");
+    }
+
+    #[test]
+    fn smart_meets_bound_on_processed_samples() {
+        let mut p = SyntheticProgram::new(10, 140, 100_000);
+        let mut e = engine(2e-3, 3600.0);
+        let table = smart_table(140, 100_000, 0.88);
+        let bound = 0.60;
+        let required = table.min_features_for(bound).unwrap();
+        let c = run(&mut p, &mut e, &ApproxConfig::smart(60.0, bound, table));
+        for r in c.rounds.iter().filter(|r| r.emitted_at.is_some()) {
+            assert!(
+                r.steps_executed >= required,
+                "emitted with {} < required {}",
+                r.steps_executed,
+                required
+            );
+        }
+    }
+
+    #[test]
+    fn greedy_beats_chinchilla_throughput() {
+        // The paper's headline: same program, same energy, approx emits
+        // far more results.
+        let horizon = 3600.0 * 2.0;
+        let mut pg = SyntheticProgram::new(100_000, 140, 400_000);
+        let mut eg = engine(0.12e-3, horizon);
+        let greedy = run(&mut pg, &mut eg, &ApproxConfig::greedy(60.0));
+
+        let mut pc = SyntheticProgram::new(100_000, 140, 400_000);
+        let mut ec = engine(0.12e-3, horizon);
+        let chin = crate::exec::chinchilla::run(
+            &mut pc,
+            &mut ec,
+            &crate::exec::chinchilla::ChinchillaConfig::default(),
+        );
+        let tg = greedy.emitted().count();
+        let tc = chin.emitted().count();
+        assert!(
+            tg as f64 >= 2.0 * tc.max(1) as f64,
+            "greedy={tg} chinchilla={tc}"
+        );
+    }
+}

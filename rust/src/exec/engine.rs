@@ -1,0 +1,344 @@
+//! The intermittent device engine.
+//!
+//! A discrete-event simulation of one energy-harvesting device: the
+//! harvester output flows through the booster into the capacitor; every
+//! operation the runtime performs is charged atomically against the
+//! buffer; crossing the brown-out threshold kills the device; the engine
+//! then replays the recharge ramp until the turn-on threshold and counts a
+//! new power cycle. This is the role MSPSim + the Ekho-style replay supply
+//! play in the paper (§5, §6.3).
+
+use crate::energy::booster::Booster;
+use crate::energy::capacitor::Capacitor;
+use crate::energy::harvester::Harvester;
+use crate::energy::mcu::{McuModel, OpCost};
+
+/// Which ledger an energy expense belongs to (Fig. 1's split between
+/// "useful computations" and "managing persistent state").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Ledger {
+    /// Useful application processing: sensing, feature/loop steps, emission.
+    App,
+    /// Persistent-state management: checkpoints, restores, WAR versioning.
+    State,
+}
+
+/// Result of attempting an operation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpOutcome {
+    /// Completed; device still alive.
+    Done,
+    /// The buffer crossed brown-out during the operation: the operation
+    /// did NOT take effect and all volatile state is lost.
+    BrownOut,
+}
+
+/// Engine configuration.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    pub capacitor: Capacitor,
+    pub booster: Booster,
+    pub mcu: McuModel,
+    /// Integration step for charging/sleeping, seconds.
+    pub charge_dt: f64,
+    /// Campaign horizon: absolute time at which the simulation stops.
+    pub max_time: f64,
+    /// Initial capacitor voltage (e.g. `v_on` to boot immediately).
+    pub initial_voltage: f64,
+}
+
+impl EngineConfig {
+    /// Paper-default device on the given horizon.
+    pub fn paper_default(max_time: f64) -> EngineConfig {
+        let capacitor = Capacitor::paper_default();
+        let initial_voltage = capacitor.v_on;
+        EngineConfig {
+            capacitor,
+            booster: Booster::paper_default(),
+            mcu: McuModel::paper_default(),
+            charge_dt: 0.02,
+            max_time,
+            initial_voltage,
+        }
+    }
+}
+
+/// The simulated device.
+pub struct Engine {
+    pub cap: Capacitor,
+    pub booster: Booster,
+    pub mcu: McuModel,
+    pub harvester: Harvester,
+    /// Absolute simulation time, seconds.
+    pub now: f64,
+    /// Power cycles so far (boot events; the first boot is cycle 1).
+    pub cycles: u64,
+    /// Power failures (brown-outs) so far.
+    pub failures: u64,
+    /// Joules billed to useful application processing.
+    pub app_energy: f64,
+    /// Joules billed to persistent-state management.
+    pub state_energy: f64,
+    charge_dt: f64,
+    max_time: f64,
+}
+
+impl Engine {
+    pub fn new(cfg: EngineConfig, harvester: Harvester) -> Engine {
+        let mut cap = cfg.capacitor;
+        cap.set_voltage(cfg.initial_voltage);
+        Engine {
+            cap,
+            booster: cfg.booster,
+            mcu: cfg.mcu,
+            harvester,
+            now: 0.0,
+            cycles: if cfg.initial_voltage > 0.0 { 1 } else { 0 },
+            failures: 0,
+            app_energy: 0.0,
+            state_energy: 0.0,
+            charge_dt: cfg.charge_dt,
+            max_time: cfg.max_time,
+        }
+    }
+
+    /// True once the campaign horizon is reached.
+    #[inline]
+    pub fn out_of_time(&self) -> bool {
+        self.now >= self.max_time
+    }
+
+    /// Integrate harvesting over `[now, now+dt)` without advancing time.
+    #[inline]
+    fn harvest_into_buffer(&mut self, t: f64, dt: f64) {
+        let p_raw = self.harvester.power_at(t);
+        let p_out = self.booster.output_power(p_raw, self.cap.voltage());
+        if p_out > 0.0 {
+            self.cap.charge(p_out * dt);
+        }
+    }
+
+    /// Advance `secs` of pure charging (device off — no load at all).
+    fn advance_charging(&mut self, secs: f64) {
+        let mut remaining = secs;
+        while remaining > 0.0 {
+            let dt = remaining.min(self.charge_dt);
+            self.harvest_into_buffer(self.now, dt);
+            self.now += dt;
+            remaining -= dt;
+        }
+    }
+
+    /// Device is dead: charge until boot is possible, then boot (counting
+    /// a power cycle and paying the boot cost). Returns `false` if the
+    /// campaign horizon expires first.
+    pub fn charge_until_boot(&mut self) -> bool {
+        while !self.cap.can_boot() {
+            if self.out_of_time() {
+                return false;
+            }
+            self.advance_charging(self.charge_dt);
+        }
+        self.cycles += 1;
+        // Boot/runtime-init cost; billed to App (every runtime pays it).
+        let boot = self.mcu.boot_energy;
+        self.app_energy += boot;
+        let _ = self.cap.discharge(boot);
+        true
+    }
+
+    /// Execute one atomic operation: harvest over its duration, then
+    /// withdraw its energy. On brown-out the operation is void and the
+    /// buffer is left just below the brown-out threshold (the device
+    /// consumed down to V_off and died).
+    pub fn run_op(&mut self, cost: &OpCost, ledger: Ledger) -> OpOutcome {
+        if !self.cap.alive() {
+            return self.brown_out();
+        }
+        let duration = self.mcu.duration(cost);
+        let energy = self.mcu.energy(cost);
+        // Harvest while the op runs (ops are ms-scale; chunk long ones).
+        let mut remaining = duration;
+        while remaining > 0.0 {
+            let dt = remaining.min(self.charge_dt);
+            self.harvest_into_buffer(self.now, dt);
+            self.now += dt;
+            remaining -= dt;
+        }
+        let ok = self.cap.discharge(energy);
+        if !ok || !self.cap.alive() {
+            return self.brown_out();
+        }
+        match ledger {
+            Ledger::App => self.app_energy += energy,
+            Ledger::State => self.state_energy += energy,
+        }
+        OpOutcome::Done
+    }
+
+    fn brown_out(&mut self) -> OpOutcome {
+        self.failures += 1;
+        // Physically the device dies crossing V_off; the residual charge
+        // sits just below the threshold.
+        self.cap.set_voltage(self.cap.v_off * 0.995);
+        OpOutcome::BrownOut
+    }
+
+    /// Sleep in LPM3 for `secs` (harvesting continues, sleep current is
+    /// drawn). Returns `false` if the device browned out while sleeping.
+    ///
+    /// Adaptive stride: when the buffer is comfortably above brown-out
+    /// the integration step widens 5x — sleep draw is ~µW-scale, so the
+    /// voltage cannot cross a threshold within one wide step, and the
+    /// harvest integral only smooths over sub-step burst boundaries
+    /// (see EXPERIMENTS.md §Perf).
+    pub fn sleep(&mut self, secs: f64) -> bool {
+        let mut remaining = secs;
+        let wide = self.charge_dt * 5.0;
+        let safe_v = self.cap.v_off + 0.05;
+        while remaining > 0.0 {
+            if self.out_of_time() {
+                return true; // horizon reached while alive
+            }
+            let dt = if self.cap.voltage() > safe_v {
+                remaining.min(wide)
+            } else {
+                remaining.min(self.charge_dt)
+            };
+            self.harvest_into_buffer(self.now, dt);
+            let ok = self.cap.discharge(self.mcu.sleep_energy(dt));
+            self.now += dt;
+            remaining -= dt;
+            if !ok || !self.cap.alive() {
+                self.brown_out();
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Sleep until the next multiple of `period` strictly after `now`.
+    pub fn sleep_until_next_slot(&mut self, period: f64) -> bool {
+        let next = ((self.now / period).floor() + 1.0) * period;
+        self.sleep(next - self.now)
+    }
+
+    /// The SMART policy's energy introspection: one ADC conversion, then
+    /// read the usable budget. Returns `None` on brown-out during the read.
+    pub fn read_budget(&mut self) -> Option<f64> {
+        let cost = OpCost { adc_reads: 1, ..Default::default() };
+        match self.run_op(&cost, Ledger::App) {
+            OpOutcome::Done => Some(self.cap.usable_energy()),
+            OpOutcome::BrownOut => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine_with(power: f64, max_time: f64) -> Engine {
+        Engine::new(EngineConfig::paper_default(max_time), Harvester::Constant(power))
+    }
+
+    #[test]
+    fn boots_when_charged() {
+        let mut cfg = EngineConfig::paper_default(3600.0);
+        cfg.initial_voltage = 0.0;
+        let mut e = Engine::new(cfg, Harvester::Constant(2e-3));
+        assert_eq!(e.cycles, 0);
+        assert!(e.charge_until_boot());
+        assert_eq!(e.cycles, 1);
+        assert!(e.cap.alive());
+        assert!(e.now > 0.0);
+    }
+
+    #[test]
+    fn never_boots_without_power() {
+        let mut cfg = EngineConfig::paper_default(10.0);
+        cfg.initial_voltage = 0.0;
+        let mut e = Engine::new(cfg, Harvester::Constant(0.0));
+        assert!(!e.charge_until_boot());
+        assert!(e.out_of_time());
+    }
+
+    #[test]
+    fn op_charges_energy_and_time() {
+        let mut e = engine_with(0.0, 3600.0);
+        let v0 = e.cap.voltage();
+        let t0 = e.now;
+        let out = e.run_op(&OpCost::cycles(8_000), Ledger::App);
+        assert_eq!(out, OpOutcome::Done);
+        assert!(e.cap.voltage() < v0);
+        assert!((e.now - t0 - 1e-3).abs() < 1e-9); // 8k cycles @ 8 MHz = 1 ms
+        assert!(e.app_energy > 0.0);
+        assert_eq!(e.state_energy, 0.0);
+    }
+
+    #[test]
+    fn big_op_browns_out_and_is_void() {
+        let mut e = engine_with(0.0, 3600.0);
+        // An op far beyond the buffer: ~1 J.
+        let out = e.run_op(&OpCost::cycles(3_000_000_000), Ledger::App);
+        assert_eq!(out, OpOutcome::BrownOut);
+        assert_eq!(e.failures, 1);
+        assert!(!e.cap.alive());
+        assert!(!e.cap.can_boot());
+        // Void: nothing billed.
+        assert_eq!(e.app_energy, 0.0);
+    }
+
+    #[test]
+    fn state_ledger_separated() {
+        let mut e = engine_with(0.0, 3600.0);
+        let cost = OpCost { fram_writes: 100, cycles: 200, ..Default::default() };
+        assert_eq!(e.run_op(&cost, Ledger::State), OpOutcome::Done);
+        assert!(e.state_energy > 0.0);
+        assert_eq!(e.app_energy, 0.0);
+    }
+
+    #[test]
+    fn sleep_discharges_slowly_but_can_kill() {
+        let mut e = engine_with(0.0, 1e7);
+        assert!(e.sleep(60.0)); // 84 µJ of sleep: fine
+        // Hours of sleep with zero harvest eventually browns out.
+        let alive = e.sleep(4.0 * 3600.0);
+        assert!(!alive);
+        assert_eq!(e.failures, 1);
+    }
+
+    #[test]
+    fn harvesting_during_sleep_sustains() {
+        let mut e = engine_with(1e-3, 1e5);
+        assert!(e.sleep(3600.0));
+        assert!(e.cap.alive());
+    }
+
+    #[test]
+    fn slot_alignment() {
+        let mut e = engine_with(2e-3, 1e5);
+        e.now = 61.0;
+        assert!(e.sleep_until_next_slot(60.0));
+        assert!((e.now - 120.0).abs() < 0.05, "now={}", e.now);
+    }
+
+    #[test]
+    fn budget_read_costs_one_adc() {
+        let mut e = engine_with(0.0, 3600.0);
+        let before = e.cap.usable_energy();
+        let b = e.read_budget().unwrap();
+        assert!(b < before);
+        assert!(b > 0.0);
+    }
+
+    #[test]
+    fn recovery_cycle_after_brownout() {
+        let mut e = engine_with(2e-3, 1e6);
+        let _ = e.run_op(&OpCost::cycles(3_000_000_000), Ledger::App);
+        assert!(!e.cap.alive());
+        assert!(e.charge_until_boot());
+        assert_eq!(e.cycles, 2);
+        assert!(e.cap.alive());
+    }
+}

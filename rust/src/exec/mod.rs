@@ -1,0 +1,99 @@
+//! Intermittent execution: the step-program model, the discrete-event
+//! device engine, and the four runtimes the paper compares.
+//!
+//! * [`program`] — [`program::StepProgram`]: a stateful computation as a
+//!   sequence of atomic, energy-accounted steps with an approximation
+//!   *plan* knob (anytime feature prefix for HAR, loop perforation for
+//!   imaging).
+//! * [`engine`] — the device simulator: capacitor + booster + harvester
+//!   integration, brown-out, reboot, power-cycle accounting.
+//! * [`continuous`] — battery-powered baseline (the accuracy/throughput
+//!   ceiling every figure normalises against).
+//! * [`chinchilla`] — the regular-intermittent-computing baseline
+//!   (checkpoints on FRAM with dynamic disabling, per Maeng & Lucia).
+//! * [`approx`] — the paper's contribution: the GREEDY and SMART
+//!   approximate-intermittent runtimes that finish (and emit) within the
+//!   current power cycle, needing no persistent state at all.
+
+pub mod approx;
+pub mod chinchilla;
+pub mod continuous;
+pub mod engine;
+pub mod program;
+
+pub use program::StepProgram;
+
+/// Which runtime drives the device.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Policy {
+    /// Battery-powered, never browns out; the normalisation ceiling.
+    Continuous,
+    /// Regular intermittent computing: checkpoints on FRAM (Chinchilla).
+    Chinchilla,
+    /// Approximate intermittent computing, greedy: spend every joule on
+    /// the current sample, always emit before dying.
+    Greedy,
+    /// Approximate intermittent computing with an accuracy lower bound:
+    /// skip samples the current budget cannot classify at `bound`.
+    Smart { bound: f64 },
+}
+
+impl Policy {
+    pub fn name(&self) -> String {
+        match self {
+            Policy::Continuous => "continuous".into(),
+            Policy::Chinchilla => "chinchilla".into(),
+            Policy::Greedy => "greedy".into(),
+            Policy::Smart { bound } => format!("smart{:02}", (bound * 100.0).round() as u32),
+        }
+    }
+}
+
+/// One emitted (or skipped/lost) application round.
+#[derive(Clone, Debug)]
+pub struct RoundResult<O> {
+    /// Input (sample) ordinal within the campaign.
+    pub sample_id: u64,
+    /// Absolute time the sensor window was acquired.
+    pub acquired_at: f64,
+    /// Absolute time the result reached the user (BLE), if it did.
+    pub emitted_at: Option<f64>,
+    /// Power cycles between acquisition and emission (0 = same cycle).
+    pub latency_cycles: u64,
+    /// Steps actually executed for this sample (features / iterations).
+    pub steps_executed: usize,
+    /// The application output, if emitted.
+    pub output: Option<O>,
+}
+
+/// Outcome of a whole campaign on one device.
+#[derive(Clone, Debug)]
+pub struct Campaign<O> {
+    /// Emitted results (and, for SMART, skipped samples with `output: None`).
+    pub rounds: Vec<RoundResult<O>>,
+    /// Total simulated wall-clock time, seconds.
+    pub duration: f64,
+    /// Power failures experienced.
+    pub power_failures: u64,
+    /// Reboots (power cycles) experienced.
+    pub power_cycles: u64,
+    /// Joules spent on application processing (steps + emit + sensing).
+    pub app_energy: f64,
+    /// Joules spent on state management (checkpoint/restore/WAR on NVM).
+    pub state_energy: f64,
+}
+
+impl<O> Campaign<O> {
+    /// Results actually delivered to the user.
+    pub fn emitted(&self) -> impl Iterator<Item = &RoundResult<O>> {
+        self.rounds.iter().filter(|r| r.emitted_at.is_some())
+    }
+
+    /// Throughput: results delivered per second of campaign time.
+    pub fn throughput(&self) -> f64 {
+        if self.duration == 0.0 {
+            return 0.0;
+        }
+        self.emitted().count() as f64 / self.duration
+    }
+}

@@ -1,0 +1,189 @@
+//! The step-program model.
+//!
+//! Both applications — HAR classification and Harris corner detection —
+//! are expressed as a sequence of atomic *steps* with per-step cost
+//! vectors. The approximation knob of the paper (Fig. 10) maps onto the
+//! model uniformly:
+//!
+//! | | Anytime SVM | Loop perforation |
+//! |---|---|---|
+//! | knob | number of features | loop iterations |
+//! | energy estimation | single feature | single loop iteration |
+//! | output | activity class | number/position of corners |
+//!
+//! [`StepProgram::plan`] selects how many steps the current round will run
+//! (a feature prefix, or a spread subset of loop rows); the runtimes then
+//! execute planned steps one at a time, each atomically charged to the
+//! capacitor by the engine.
+
+use crate::energy::mcu::OpCost;
+
+/// A stateful computation over a stream of inputs, broken into atomic,
+/// energy-accounted steps with an approximation plan.
+pub trait StepProgram {
+    /// Application output (activity class, corner list, ...).
+    type Output: Clone;
+
+    /// Acquire the next input sample at absolute time `now` (inputs may
+    /// be time-dependent, e.g. a volunteer's activity script). Returns
+    /// `false` when the input stream is exhausted (campaign over).
+    fn load_next(&mut self, now: f64) -> bool;
+
+    /// Sensor/acquisition cost for one input.
+    fn acquire_cost(&self) -> OpCost;
+
+    /// Total number of steps a *precise* execution runs for this input.
+    fn num_steps(&self) -> usize;
+
+    /// Restrict this round to `k <= num_steps()` steps. For HAR this is
+    /// the anytime feature prefix; for imaging a uniformly-spread subset
+    /// of loop iterations. May be called again mid-round with a larger
+    /// `k` (GREEDY refining as energy arrives); never smaller mid-round.
+    fn plan(&mut self, k: usize);
+
+    /// Steps currently planned.
+    fn planned_steps(&self) -> usize;
+
+    /// Cost vector of planned step `j` (`j < planned_steps()`).
+    fn step_cost(&self, j: usize) -> OpCost;
+
+    /// Execute planned step `j`, mutating the round state.
+    fn execute_step(&mut self, j: usize);
+
+    /// Live state after `j` planned steps, in 16-bit words — what a
+    /// checkpointing runtime must persist (input + partial results).
+    fn state_words(&self, j: usize) -> u64;
+
+    /// Words written by step `j` that need WAR (write-after-read)
+    /// versioning under a mixed-volatility runtime; the intermittence-
+    /// anomaly protection cost charged by Chinchilla per executed step.
+    fn war_words(&self, j: usize) -> u64 {
+        let _ = j;
+        0
+    }
+
+    /// Cost of emitting the result (BLE packet).
+    fn emit_cost(&self) -> OpCost;
+
+    /// Current output given the steps executed so far.
+    fn output(&self) -> Self::Output;
+
+    /// Drop all volatile round state (reboot without a checkpoint, or
+    /// starting over on the same input).
+    fn reset_round(&mut self);
+}
+
+/// A synthetic program for engine/runtime tests: `n` equal-cost steps;
+/// the output is the number of steps executed (so tests can assert
+/// exactly how much work survived).
+#[derive(Clone, Debug)]
+pub struct SyntheticProgram {
+    pub total_inputs: u64,
+    pub steps: usize,
+    pub cycles_per_step: u64,
+    pub state_words_per_step: u64,
+    loaded: u64,
+    planned: usize,
+    executed: usize,
+}
+
+impl SyntheticProgram {
+    pub fn new(total_inputs: u64, steps: usize, cycles_per_step: u64) -> SyntheticProgram {
+        SyntheticProgram {
+            total_inputs,
+            steps,
+            cycles_per_step,
+            state_words_per_step: 8,
+            loaded: 0,
+            planned: 0,
+            executed: 0,
+        }
+    }
+}
+
+impl StepProgram for SyntheticProgram {
+    type Output = usize;
+
+    fn load_next(&mut self, _now: f64) -> bool {
+        if self.loaded >= self.total_inputs {
+            return false;
+        }
+        self.loaded += 1;
+        self.executed = 0;
+        self.planned = self.steps;
+        true
+    }
+
+    fn acquire_cost(&self) -> OpCost {
+        OpCost { cycles: 2_000, sensor_secs: 0.01, ..Default::default() }
+    }
+
+    fn num_steps(&self) -> usize {
+        self.steps
+    }
+
+    fn plan(&mut self, k: usize) {
+        debug_assert!(k <= self.steps);
+        self.planned = k;
+    }
+
+    fn planned_steps(&self) -> usize {
+        self.planned
+    }
+
+    fn step_cost(&self, _j: usize) -> OpCost {
+        OpCost::cycles(self.cycles_per_step)
+    }
+
+    fn execute_step(&mut self, j: usize) {
+        debug_assert_eq!(j, self.executed, "steps must run in order");
+        self.executed += 1;
+    }
+
+    fn state_words(&self, j: usize) -> u64 {
+        16 + self.state_words_per_step * j as u64
+    }
+
+    fn war_words(&self, _j: usize) -> u64 {
+        2
+    }
+
+    fn emit_cost(&self) -> OpCost {
+        OpCost { cycles: 500, ble_bytes: 1, ..Default::default() }
+    }
+
+    fn output(&self) -> usize {
+        self.executed
+    }
+
+    fn reset_round(&mut self) {
+        self.executed = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_program_lifecycle() {
+        let mut p = SyntheticProgram::new(2, 5, 1000);
+        assert!(p.load_next(0.0));
+        assert_eq!(p.planned_steps(), 5);
+        p.plan(3);
+        assert_eq!(p.planned_steps(), 3);
+        p.execute_step(0);
+        p.execute_step(1);
+        assert_eq!(p.output(), 2);
+        p.reset_round();
+        assert_eq!(p.output(), 0);
+        assert!(p.load_next(0.0));
+        assert!(!p.load_next(0.0));
+    }
+
+    #[test]
+    fn state_grows_with_progress() {
+        let p = SyntheticProgram::new(1, 10, 100);
+        assert!(p.state_words(5) > p.state_words(0));
+    }
+}

@@ -1,0 +1,259 @@
+//! The HAR classification pipeline as a step program (§4.3).
+//!
+//! Acquire a 2.56 s sensor window → process features one at a time in
+//! anytime order (each step = extract one feature and fold it into the
+//! cached per-class scores) → emit the 1-byte classification over BLE.
+//! The per-step costs come from the feature catalog; the simulation
+//! computes the actual feature values eagerly at acquisition (the math is
+//! identical either way — the *energy* is charged per executed step).
+
+use crate::energy::estimator::{EnergyProfile, SmartTable};
+use crate::energy::mcu::{McuModel, OpCost};
+use crate::exec::program::StepProgram;
+use crate::har::dataset::{ActivityScript, LabelledWindow};
+use crate::har::features::{extract_all, feature_cost};
+use crate::har::{Activity, NUM_FEATURES};
+use crate::svm::analysis::{coherence_curve_model, expected_accuracy, ClassFeatureModel};
+use crate::svm::anytime::{AnytimeSvm, ScoreState};
+
+/// Where the program's sensor windows come from.
+pub enum WindowSource {
+    /// A fixed list (emulation replay, §5.1-5.2); ends when exhausted.
+    List(Vec<LabelledWindow>),
+    /// A volunteer's activity script sampled at acquisition time
+    /// (real-world campaigns, §5.3-5.4); never ends.
+    Script(ActivityScript),
+}
+
+/// Classification output delivered over BLE (plus ground truth carried
+/// along for the metrics layer; it does not influence execution).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HarOutput {
+    pub predicted: usize,
+    pub truth: Activity,
+    pub features_used: usize,
+}
+
+/// The HAR pipeline program.
+pub struct HarProgram {
+    pub asvm: AnytimeSvm,
+    source: WindowSource,
+    cursor: usize,
+    /// Cached full feature vector for the current window.
+    features: Vec<f64>,
+    truth: Activity,
+    state: ScoreState,
+    planned: usize,
+    /// Per-step costs in anytime order (step j = feature order[j]).
+    step_costs: Vec<OpCost>,
+}
+
+impl HarProgram {
+    pub fn new(asvm: AnytimeSvm, source: WindowSource) -> HarProgram {
+        let step_costs =
+            asvm.order.iter().map(|&j| feature_cost(j)).collect::<Vec<_>>();
+        let state = asvm.begin();
+        HarProgram {
+            asvm,
+            source,
+            cursor: 0,
+            features: Vec::new(),
+            truth: Activity::Walking,
+            state,
+            planned: 0,
+            step_costs,
+        }
+    }
+
+    /// Energy profile of the full anytime pipeline (for SMART tables and
+    /// the figure benches).
+    pub fn energy_profile(&self, mcu: &McuModel) -> EnergyProfile {
+        EnergyProfile::from_costs(mcu, &self.step_costs)
+    }
+}
+
+/// Build SMART's offline lookup table: Eq. 7 expected-accuracy curve (via
+/// the fitted class model) + the estimator's cumulative energy.
+pub fn smart_table(
+    asvm: &AnytimeSvm,
+    model: &ClassFeatureModel,
+    full_accuracy: f64,
+    mcu: &McuModel,
+) -> SmartTable {
+    let ps: Vec<usize> = (0..=NUM_FEATURES).collect();
+    let coherence = coherence_curve_model(asvm, model, &ps, 3000, 0xE97);
+    let acc = expected_accuracy(&coherence, full_accuracy, asvm.svm.classes);
+    let costs: Vec<OpCost> = asvm.order.iter().map(|&j| feature_cost(j)).collect();
+    let profile = EnergyProfile::from_costs(mcu, &costs);
+    let emit = mcu.energy(&OpCost { cycles: 800, ble_bytes: 1, ..Default::default() });
+    SmartTable::new(acc, &profile, emit)
+}
+
+impl StepProgram for HarProgram {
+    type Output = HarOutput;
+
+    fn load_next(&mut self, now: f64) -> bool {
+        let lw = match &self.source {
+            WindowSource::List(list) => {
+                if self.cursor >= list.len() {
+                    return false;
+                }
+                let lw = list[self.cursor].clone();
+                self.cursor += 1;
+                lw
+            }
+            WindowSource::Script(script) => script.window_at(now),
+        };
+        self.features = extract_all(&lw.window);
+        self.truth = lw.label;
+        self.state = self.asvm.begin();
+        self.planned = NUM_FEATURES;
+        true
+    }
+
+    fn acquire_cost(&self) -> OpCost {
+        // 2.56 s of sensor duty plus windowing/filter bookkeeping.
+        OpCost { cycles: 60_000, sensor_secs: 2.56, ..Default::default() }
+    }
+
+    fn num_steps(&self) -> usize {
+        NUM_FEATURES
+    }
+
+    fn plan(&mut self, k: usize) {
+        debug_assert!(k <= NUM_FEATURES);
+        self.planned = k;
+    }
+
+    fn planned_steps(&self) -> usize {
+        self.planned
+    }
+
+    fn step_cost(&self, j: usize) -> OpCost {
+        self.step_costs[j]
+    }
+
+    fn execute_step(&mut self, j: usize) {
+        debug_assert_eq!(j, self.state.used, "anytime steps run in order");
+        self.asvm.add_feature(&mut self.state, &self.features);
+    }
+
+    fn state_words(&self, j: usize) -> u64 {
+        // Raw window (128 × 6 16-bit words) + per-class Q30 scores +
+        // cursor/bookkeeping + one word per already-extracted feature.
+        768 + 2 * self.asvm.svm.classes as u64 + 8 + j as u64
+    }
+
+    fn war_words(&self, _j: usize) -> u64 {
+        // Score accumulators are read-modify-write: 2 words per class.
+        2 * self.asvm.svm.classes as u64
+    }
+
+    fn emit_cost(&self) -> OpCost {
+        OpCost { cycles: 800, ble_bytes: 1, ..Default::default() }
+    }
+
+    fn output(&self) -> HarOutput {
+        HarOutput {
+            predicted: self.asvm.classify(&self.state),
+            truth: self.truth,
+            features_used: self.state.used,
+        }
+    }
+
+    fn reset_round(&mut self) {
+        self.state = self.asvm.begin();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::har::dataset::{Corpus, CorpusSpec};
+    use crate::svm::train::{train_ovr, TrainConfig};
+
+    fn trained_asvm() -> (AnytimeSvm, Corpus) {
+        let spec = CorpusSpec {
+            train_volunteers: 3,
+            test_volunteers: 1,
+            windows_per_volunteer_per_class: 8,
+        };
+        let corpus = Corpus::generate(&spec, 42);
+        let (rows, labels) = Corpus::features(&corpus.train);
+        let svm = train_ovr(&rows, &labels, 6, &TrainConfig::default());
+        (AnytimeSvm::by_coefficient_magnitude(svm), corpus)
+    }
+
+    #[test]
+    fn program_runs_a_full_round() {
+        let (asvm, corpus) = trained_asvm();
+        let mut prog = HarProgram::new(asvm, WindowSource::List(corpus.test.clone()));
+        assert!(prog.load_next(0.0));
+        prog.plan(30);
+        for j in 0..30 {
+            prog.execute_step(j);
+        }
+        let out = prog.output();
+        assert_eq!(out.features_used, 30);
+        assert!(out.predicted < 6);
+    }
+
+    #[test]
+    fn full_execution_matches_direct_svm() {
+        let (asvm, corpus) = trained_asvm();
+        let direct = asvm.clone();
+        let mut prog = HarProgram::new(asvm, WindowSource::List(corpus.test.clone()));
+        for lw in corpus.test.iter().take(10) {
+            assert!(prog.load_next(0.0));
+            for j in 0..prog.num_steps() {
+                prog.execute_step(j);
+            }
+            let want = direct.svm.classify(&extract_all(&lw.window));
+            assert_eq!(prog.output().predicted, want);
+        }
+    }
+
+    #[test]
+    fn trained_model_beats_chance_by_far_on_held_out_volunteers() {
+        let (asvm, corpus) = trained_asvm();
+        let (rows, labels) = Corpus::features(&corpus.test);
+        let acc = asvm.svm.accuracy(&rows, &labels);
+        assert!(acc > 0.7, "held-out accuracy {acc}");
+    }
+
+    #[test]
+    fn smart_table_monotone_and_priced() {
+        let (asvm, corpus) = trained_asvm();
+        let (rows, labels) = Corpus::features(&corpus.train);
+        let scaled: Vec<Vec<f64>> =
+            rows.iter().map(|r| asvm.svm.scaler.apply(r)).collect();
+        let model = ClassFeatureModel::fit(&scaled, &labels, 6);
+        let mcu = McuModel::paper_default();
+        let table = smart_table(&asvm, &model, 0.88, &mcu);
+        assert_eq!(table.expected_accuracy.len(), NUM_FEATURES + 1);
+        // Accuracy must reach the ceiling at full prefix.
+        assert!((table.expected_accuracy[NUM_FEATURES] - 0.88).abs() < 1e-9);
+        // Energy strictly increasing.
+        for p in 1..=NUM_FEATURES {
+            assert!(table.cumulative_energy[p] > table.cumulative_energy[p - 1]);
+        }
+        // A 60 % bound needs strictly fewer features than an 85 % bound.
+        let p60 = table.min_features_for(0.60);
+        let p85 = table.min_features_for(0.85);
+        if let (Some(a), Some(b)) = (p60, p85) {
+            assert!(a < b, "p60={a} p85={b}");
+        }
+    }
+
+    #[test]
+    fn script_source_loads_time_dependent_windows() {
+        let (asvm, _) = trained_asvm();
+        let script = ActivityScript::generate(3600.0, 3);
+        let truth_at_100 = script.activity_at(100.0);
+        let mut prog = HarProgram::new(asvm, WindowSource::Script(script));
+        assert!(prog.load_next(100.0));
+        assert_eq!(prog.output().truth, truth_at_100);
+        // Script sources never exhaust.
+        assert!(prog.load_next(2e6));
+    }
+}

@@ -1,0 +1,327 @@
+//! The 140-feature catalog (§4.2).
+//!
+//! Features are computed from Butterworth-filtered sensor windows: eight
+//! channels (3-axis body acceleration after gravity separation, 3-axis
+//! angular velocity, and the two magnitudes), time-domain statistics,
+//! DFT-based spectral features, jerk statistics, inter-axis correlations,
+//! gravity posture and aggregate activity measures — the linearly
+//! separable subset the paper limits itself to. Every feature carries an
+//! MCU cost vector (dominated by the extraction processing, which is why
+//! per-feature energy varies, §4.2); the catalog order is the canonical
+//! feature index used by the SVM and the AOT artifacts.
+
+use crate::energy::mcu::OpCost;
+use crate::har::dataset::Window;
+use crate::har::{NUM_FEATURES, SAMPLE_RATE_HZ, WINDOW_LEN};
+use crate::util::dsp::Cascade;
+use crate::util::fft::power_spectrum;
+use crate::util::stats;
+
+/// Preprocessed channels ready for feature extraction.
+#[derive(Clone, Debug)]
+pub struct Preprocessed {
+    /// body-ax, body-ay, body-az, gx, gy, gz, |body accel|, |gyro|.
+    pub channels: [Vec<f64>; 8],
+    /// Gravity components per accel axis (means of the 0.3 Hz low-pass).
+    pub gravity: [f64; 3],
+}
+
+/// Preprocess a raw window: 3rd-order Butterworth low-pass at 20 Hz
+/// (§4.2: 99 % of signal energy below 20 Hz), then gravity separation
+/// with a 0.3 Hz low-pass.
+pub fn preprocess(w: &Window) -> Preprocessed {
+    let fs = SAMPLE_RATE_HZ;
+    let n = WINDOW_LEN;
+    let mut noise_filter = Cascade::butterworth_lowpass(3, 20.0, fs);
+    let mut grav_filter = Cascade::butterworth_lowpass(3, 0.3, fs);
+
+    let mut body = [vec![0.0; n], vec![0.0; n], vec![0.0; n]];
+    let mut gravity = [0.0; 3];
+    for axis in 0..3 {
+        noise_filter.reset();
+        let filtered = noise_filter.filter(&w.accel[axis]);
+        grav_filter.reset();
+        // Prime the slow gravity filter to the window mean to avoid the
+        // long settle transient a streaming implementation would not see.
+        let mean = stats::mean(&filtered);
+        for _ in 0..256 {
+            grav_filter.step(mean);
+        }
+        let grav = grav_filter.filter(&filtered);
+        gravity[axis] = stats::mean(&grav);
+        for t in 0..n {
+            body[axis][t] = filtered[t] - grav[t];
+        }
+    }
+    let mut gyro = [vec![0.0; n], vec![0.0; n], vec![0.0; n]];
+    for axis in 0..3 {
+        noise_filter.reset();
+        gyro[axis] = noise_filter.filter(&w.gyro[axis]);
+    }
+    let amag: Vec<f64> = (0..n)
+        .map(|t| (body[0][t].powi(2) + body[1][t].powi(2) + body[2][t].powi(2)).sqrt())
+        .collect();
+    let gmag: Vec<f64> = (0..n)
+        .map(|t| (gyro[0][t].powi(2) + gyro[1][t].powi(2) + gyro[2][t].powi(2)).sqrt())
+        .collect();
+    let [bx, by, bz] = body;
+    let [gx, gy, gz] = gyro;
+    Preprocessed { channels: [bx, by, bz, gx, gy, gz, amag, gmag], gravity }
+}
+
+/// Time-domain statistic kinds (per channel).
+const TIME_KINDS: usize = 7; // mean, std, mad, min, max, energy, iqr
+/// Frequency-domain kinds (per channel).
+const FREQ_KINDS: usize = 7; // 4 band energies, centroid, peak, entropy
+const CHANNELS: usize = 8;
+
+/// Human-readable feature name for index `idx`.
+pub fn feature_name(idx: usize) -> String {
+    let ch_names = ["bax", "bay", "baz", "gyx", "gyy", "gyz", "amag", "gmag"];
+    if idx < 56 {
+        let (ch, k) = (idx / TIME_KINDS, idx % TIME_KINDS);
+        let kind = ["mean", "std", "mad", "min", "max", "energy", "iqr"][k];
+        format!("{}_{}", ch_names[ch], kind)
+    } else if idx < 112 {
+        let r = idx - 56;
+        let (ch, k) = (r / FREQ_KINDS, r % FREQ_KINDS);
+        let kind =
+            ["band0", "band1", "band2", "band3", "centroid", "peakbin", "sentropy"][k];
+        format!("{}_{}", ch_names[ch], kind)
+    } else if idx < 128 {
+        let r = idx - 112;
+        let (ch, k) = (r / 2, r % 2);
+        format!("{}_jerk_{}", ch_names[ch], ["mean", "std"][k])
+    } else if idx < 134 {
+        let pairs = ["ax_ay", "ax_az", "ay_az", "gx_gy", "gx_gz", "gy_gz"];
+        format!("corr_{}", pairs[idx - 128])
+    } else if idx < 137 {
+        format!("gravity_{}", ["x", "y", "z"][idx - 134])
+    } else {
+        ["sma_accel", "sma_gyro", "total_power"][idx - 137].to_string()
+    }
+}
+
+/// MCU cost of extracting feature `idx` from the raw window (the paper
+/// profiles this per feature with EPIC; costs vary because of the
+/// processing needed to *compute* the feature, §4.2). Spectral features
+/// carry an amortised share of the channel DFT.
+pub fn feature_cost(idx: usize) -> OpCost {
+    let cycles: u64 = if idx < 56 {
+        match idx % TIME_KINDS {
+            0 => 80_000,     // mean
+            1 => 70_000,     // std
+            2 => 220_000,     // mad (needs a sort)
+            3 | 4 => 70_000, // min / max
+            5 => 100_000,     // energy
+            _ => 240_000,     // iqr (sort + interpolate)
+        }
+    } else if idx < 112 {
+        match (idx - 56) % FREQ_KINDS {
+            0..=3 => 280_000, // band energies (incl. amortised DFT share)
+            4 => 310_000,     // spectral centroid
+            5 => 180_000,     // peak bin
+            _ => 340_000,     // spectral entropy
+        }
+    } else if idx < 128 {
+        if (idx - 112) % 2 == 0 {
+            140_000 // jerk mean
+        } else {
+            160_000 // jerk std
+        }
+    } else if idx < 134 {
+        180_000 // correlation
+    } else if idx < 137 {
+        65_000 // gravity mean
+    } else {
+        70_000 // sma / total power
+    };
+    OpCost::cycles(cycles)
+}
+
+/// All 140 feature cost vectors, in catalog order.
+pub fn all_costs() -> Vec<OpCost> {
+    (0..NUM_FEATURES).map(feature_cost).collect()
+}
+
+/// Quantile from an already-sorted slice (one sort per channel instead
+/// of one per quantile call — see EXPERIMENTS.md §Perf).
+fn quantile_sorted(sorted: &[f64], q: f64) -> f64 {
+    let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        sorted[lo] + (pos - lo as f64) * (sorted[hi] - sorted[lo])
+    }
+}
+
+fn mad_from_sorted(xs: &[f64], sorted: &[f64]) -> f64 {
+    let med = quantile_sorted(sorted, 0.5);
+    let mut dev: Vec<f64> = xs.iter().map(|x| (x - med).abs()).collect();
+    dev.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    quantile_sorted(&dev, 0.5)
+}
+
+fn spectral(ch: &[f64]) -> [f64; FREQ_KINDS] {
+    let ps = power_spectrum(ch); // bins 0..=64
+    let total: f64 = ps[1..].iter().sum::<f64>().max(1e-12);
+    // Bands: (1..4), (4..8), (8..16), (16..=64) bins ≈ 0.4-1.6, 1.6-3.1,
+    // 3.1-6.2, 6.2-25 Hz.
+    let band = |a: usize, b: usize| -> f64 { ps[a..b].iter().sum::<f64>() / total };
+    let centroid =
+        ps[1..].iter().enumerate().map(|(i, &p)| (i + 1) as f64 * p).sum::<f64>() / total;
+    let peak = ps[1..]
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| (i + 1) as f64)
+        .unwrap_or(0.0);
+    let entropy = -ps[1..]
+        .iter()
+        .map(|&p| {
+            let q = p / total;
+            if q > 1e-15 {
+                q * q.ln()
+            } else {
+                0.0
+            }
+        })
+        .sum::<f64>();
+    [band(1, 4), band(4, 8), band(8, 16), band(16, 65), centroid, peak, entropy]
+}
+
+/// Extract the full 140-feature vector (catalog order) from a raw window.
+pub fn extract_all(w: &Window) -> Vec<f64> {
+    let prep = preprocess(w);
+    extract_from_preprocessed(&prep)
+}
+
+/// Extraction given preprocessed channels (the cached form the app uses).
+pub fn extract_from_preprocessed(prep: &Preprocessed) -> Vec<f64> {
+    let mut out = Vec::with_capacity(NUM_FEATURES);
+    // Time stats.
+    for ch in prep.channels.iter() {
+        let mean = stats::mean(ch);
+        let std = stats::std_dev(ch);
+        let mut sorted = ch.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        out.push(mean);
+        out.push(std);
+        out.push(mad_from_sorted(ch, &sorted));
+        out.push(ch.iter().cloned().fold(f64::INFINITY, f64::min));
+        out.push(ch.iter().cloned().fold(f64::NEG_INFINITY, f64::max));
+        out.push(ch.iter().map(|x| x * x).sum::<f64>() / ch.len() as f64);
+        out.push(quantile_sorted(&sorted, 0.75) - quantile_sorted(&sorted, 0.25));
+    }
+    // Spectral.
+    for ch in prep.channels.iter() {
+        out.extend_from_slice(&spectral(ch));
+    }
+    // Jerk (first difference) mean-abs and std.
+    for ch in prep.channels.iter() {
+        let jerk: Vec<f64> =
+            ch.windows(2).map(|p| (p[1] - p[0]) * SAMPLE_RATE_HZ).collect();
+        out.push(jerk.iter().map(|j| j.abs()).sum::<f64>() / jerk.len() as f64);
+        out.push(stats::std_dev(&jerk));
+    }
+    // Correlations.
+    let c = &prep.channels;
+    for (a, b) in [(0, 1), (0, 2), (1, 2), (3, 4), (3, 5), (4, 5)] {
+        out.push(stats::correlation(&c[a], &c[b]));
+    }
+    // Gravity posture.
+    out.extend_from_slice(&prep.gravity);
+    // Signal magnitude areas + total power.
+    let sma_a = (0..WINDOW_LEN)
+        .map(|t| c[0][t].abs() + c[1][t].abs() + c[2][t].abs())
+        .sum::<f64>()
+        / WINDOW_LEN as f64;
+    let sma_g = (0..WINDOW_LEN)
+        .map(|t| c[3][t].abs() + c[4][t].abs() + c[5][t].abs())
+        .sum::<f64>()
+        / WINDOW_LEN as f64;
+    let power = c[6].iter().map(|x| x * x).sum::<f64>() / WINDOW_LEN as f64;
+    out.push(sma_a);
+    out.push(sma_g);
+    out.push(power);
+    debug_assert_eq!(out.len(), NUM_FEATURES);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::har::dataset::{generate_window, Volunteer};
+    use crate::har::Activity;
+    use crate::util::rng::Rng;
+
+    fn sample(activity: Activity, seed: u64) -> Window {
+        let mut rng = Rng::new(seed);
+        let who = Volunteer::sample(&mut rng);
+        generate_window(activity, &who, &mut rng, 0.0)
+    }
+
+    #[test]
+    fn catalog_has_140_features_with_names_and_costs() {
+        let w = sample(Activity::Walking, 1);
+        let f = extract_all(&w);
+        assert_eq!(f.len(), NUM_FEATURES);
+        assert!(f.iter().all(|v| v.is_finite()));
+        let names: std::collections::HashSet<String> =
+            (0..NUM_FEATURES).map(feature_name).collect();
+        assert_eq!(names.len(), NUM_FEATURES, "names must be unique");
+        assert_eq!(all_costs().len(), NUM_FEATURES);
+        assert!(all_costs().iter().all(|c| c.cycles > 0));
+    }
+
+    #[test]
+    fn full_pipeline_energy_in_paper_regime() {
+        // Total extraction cost should be a handful of buffer-fulls: the
+        // intermittent regime of §5 (see DESIGN.md §5).
+        let mcu = crate::energy::mcu::McuModel::paper_default();
+        let total: f64 = all_costs().iter().map(|c| mcu.energy(c)).sum();
+        assert!(
+            (5e-3..20e-3).contains(&total),
+            "total feature energy {total} J out of expected range"
+        );
+    }
+
+    #[test]
+    fn walking_and_laying_differ_in_dynamic_features() {
+        let walk = extract_all(&sample(Activity::Walking, 2));
+        let lay = extract_all(&sample(Activity::Laying, 2));
+        // baz std (idx 2*7+1 = 15) much larger while walking.
+        assert!(walk[15] > 3.0 * lay[15], "walk={} lay={}", walk[15], lay[15]);
+        // total_power (idx 139).
+        assert!(walk[139] > 3.0 * lay[139]);
+    }
+
+    #[test]
+    fn gravity_features_separate_postures() {
+        let stand = extract_all(&sample(Activity::Standing, 3));
+        let lay = extract_all(&sample(Activity::Laying, 3));
+        // gravity_z = idx 136, gravity_x = idx 134.
+        assert!(stand[136] > lay[136] + 4.0);
+        assert!(lay[134] > stand[134] + 2.0);
+    }
+
+    #[test]
+    fn spectral_peak_tracks_gait_frequency() {
+        let mut rng = Rng::new(4);
+        let who = Volunteer { gait_hz: 2.0, ..Volunteer::sample(&mut rng) };
+        let w = generate_window(Activity::Walking, &who, &mut rng, 0.0);
+        let f = extract_all(&w);
+        // baz peak bin: idx 56 + 2*7 + 5 = 75. 2 Hz at 50 Hz/128 bins →
+        // bin ≈ 5.1; harmonics may push the peak to ~2x that.
+        let peak_bin = f[75];
+        assert!((3.0..=12.0).contains(&peak_bin), "peak_bin={peak_bin}");
+    }
+
+    #[test]
+    fn extraction_is_deterministic() {
+        let w = sample(Activity::Sitting, 5);
+        assert_eq!(extract_all(&w), extract_all(&w));
+    }
+}

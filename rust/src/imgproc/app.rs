@@ -1,0 +1,246 @@
+//! The corner-detection pipeline as a step program (§6.3).
+//!
+//! Whenever the device wakes with new energy it loads one of the test
+//! pictures (round-robin over kinds × seeds, mirroring the paper's
+//! "randomly loads one of the test pictures"), computes Harris responses
+//! row by row in the perforation schedule, and stores/emits the corner
+//! list. Each step is one image row (one iteration of the perforated
+//! loop, the unit the energy estimator prices, Fig. 10).
+
+use crate::energy::mcu::OpCost;
+use crate::exec::program::StepProgram;
+use crate::imgproc::harris::{
+    detect, gradients, response_row, row_schedule, HarrisConfig, ResponseMap,
+};
+use crate::imgproc::images::{render, Picture, EVAL_SIZE};
+use crate::imgproc::{Corner, Image};
+use crate::util::rng::Rng;
+
+/// Corner output: what the device stores on FRAM / emits.
+#[derive(Clone, Debug)]
+pub struct CornerOutput {
+    pub picture: Picture,
+    pub picture_seed: u64,
+    pub corners: Vec<Corner>,
+    pub rows_computed: usize,
+    pub total_rows: usize,
+}
+
+/// Per-pixel cost of one perforated-loop iteration row (structure tensor
+/// + response in software fixed point on the MSP430).
+pub const CYCLES_PER_PIXEL: u64 = 600;
+
+/// The imaging program.
+pub struct CornerProgram {
+    cfg: HarrisConfig,
+    size: usize,
+    /// Picture pool: (kind, seed) pairs cycled per round.
+    pool: Vec<(Picture, u64)>,
+    rng: Rng,
+    // Current round state.
+    picture: (Picture, u64),
+    image: Image,
+    ix: Vec<f64>,
+    iy: Vec<f64>,
+    map: ResponseMap,
+    schedule: Vec<usize>,
+    executed: usize,
+    planned: usize,
+}
+
+impl CornerProgram {
+    /// Build with the standard test pool: all picture kinds × `seeds`.
+    pub fn new(cfg: HarrisConfig, size: usize, seeds: &[u64], rng_seed: u64) -> CornerProgram {
+        let pool: Vec<(Picture, u64)> = Picture::ALL
+            .iter()
+            .flat_map(|&k| seeds.iter().map(move |&s| (k, s)))
+            .collect();
+        assert!(!pool.is_empty());
+        CornerProgram {
+            cfg,
+            size,
+            pool,
+            rng: Rng::new(rng_seed),
+            picture: (Picture::Checker, 0),
+            image: Image::new(1, 1),
+            ix: Vec::new(),
+            iy: Vec::new(),
+            map: ResponseMap::new(1, 1),
+            schedule: Vec::new(),
+            executed: 0,
+            planned: 0,
+        }
+    }
+
+    /// Paper-like evaluation program: 160×160 pictures, 4 seeds per kind.
+    pub fn paper_default(rng_seed: u64) -> CornerProgram {
+        CornerProgram::new(HarrisConfig::default(), EVAL_SIZE, &[11, 22, 33, 44], rng_seed)
+    }
+
+    /// The reference (unperforated) output for the current picture.
+    pub fn reference_corners(&self) -> Vec<Corner> {
+        crate::imgproc::harris::harris_full(&self.image, &self.cfg)
+    }
+
+    /// Total row count (steps of a precise execution).
+    pub fn rows(&self) -> usize {
+        self.size
+    }
+}
+
+impl StepProgram for CornerProgram {
+    type Output = CornerOutput;
+
+    fn load_next(&mut self, _now: f64) -> bool {
+        self.picture = *self.rng.choose(&self.pool);
+        self.image = render(self.picture.0, self.size, self.size, self.picture.1);
+        let (ix, iy) = gradients(&self.image);
+        self.ix = ix;
+        self.iy = iy;
+        self.map = ResponseMap::new(self.size, self.size);
+        self.schedule = row_schedule(self.size);
+        self.executed = 0;
+        self.planned = self.size;
+        true
+    }
+
+    fn acquire_cost(&self) -> OpCost {
+        // Image load from FRAM (the paper stores test pictures there;
+        // the camera-acquisition cost is factored out, §6.3) plus the
+        // gradient prologue.
+        OpCost {
+            cycles: 200_000 + (self.size * self.size) as u64 * 60,
+            fram_reads: (self.size * self.size) as u64 / 2,
+            ..Default::default()
+        }
+    }
+
+    fn num_steps(&self) -> usize {
+        self.size
+    }
+
+    fn plan(&mut self, k: usize) {
+        debug_assert!(k <= self.size);
+        self.planned = k;
+    }
+
+    fn planned_steps(&self) -> usize {
+        self.planned
+    }
+
+    fn step_cost(&self, _j: usize) -> OpCost {
+        OpCost::cycles(self.size as u64 * CYCLES_PER_PIXEL)
+    }
+
+    fn execute_step(&mut self, j: usize) {
+        debug_assert_eq!(j, self.executed, "rows run in schedule order");
+        let y = self.schedule[j];
+        response_row(&self.ix, &self.iy, &mut self.map, y, &self.cfg);
+        self.executed += 1;
+    }
+
+    fn state_words(&self, j: usize) -> u64 {
+        // Checkpointing runtimes must persist the response rows computed
+        // so far (the image itself already lives in FRAM).
+        (j * self.size) as u64 + 32
+    }
+
+    fn war_words(&self, _j: usize) -> u64 {
+        // Row writes are idempotent (each row written once): no WAR cost.
+        0
+    }
+
+    fn emit_cost(&self) -> OpCost {
+        // Store the corner list + summary packet.
+        OpCost { cycles: 4_000, ble_bytes: 8, ..Default::default() }
+    }
+
+    fn output(&self) -> CornerOutput {
+        CornerOutput {
+            picture: self.picture.0,
+            picture_seed: self.picture.1,
+            corners: detect(&self.map, &self.cfg),
+            rows_computed: self.executed,
+            total_rows: self.size,
+        }
+    }
+
+    fn reset_round(&mut self) {
+        self.map = ResponseMap::new(self.size, self.size);
+        self.executed = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energy::mcu::McuModel;
+    use crate::imgproc::equivalence::equivalent;
+
+    #[test]
+    fn full_execution_matches_reference_detector() {
+        let mut prog = CornerProgram::new(HarrisConfig::default(), 64, &[7], 1);
+        assert!(prog.load_next(0.0));
+        for j in 0..prog.num_steps() {
+            prog.execute_step(j);
+        }
+        let out = prog.output();
+        let reference = prog.reference_corners();
+        assert_eq!(out.corners.len(), reference.len());
+        assert!(equivalent(&reference, &out.corners));
+        assert_eq!(out.rows_computed, 64);
+    }
+
+    #[test]
+    fn partial_execution_still_detects_most_corners() {
+        let mut prog = CornerProgram::new(HarrisConfig::default(), 64, &[7], 1);
+        assert!(prog.load_next(0.0));
+        prog.plan(40); // 62% of rows
+        for j in 0..40 {
+            prog.execute_step(j);
+        }
+        let out = prog.output();
+        let reference = prog.reference_corners();
+        assert!(
+            out.corners.len() as f64 >= 0.6 * reference.len() as f64,
+            "partial {} vs full {}",
+            out.corners.len(),
+            reference.len()
+        );
+    }
+
+    #[test]
+    fn image_energy_in_paper_regime() {
+        // Whole-image processing should be on the order of one buffer
+        // charge (~5-10 mJ), forcing intermittence on weak traces.
+        let prog = CornerProgram::paper_default(1);
+        let mcu = McuModel::paper_default();
+        let total: f64 = (0..160)
+            .map(|_| mcu.energy(&OpCost::cycles(160 * CYCLES_PER_PIXEL)))
+            .sum();
+        assert!((4e-3..12e-3).contains(&total), "image energy {total}");
+        let _ = prog;
+    }
+
+    #[test]
+    fn pool_cycles_through_pictures() {
+        let mut prog = CornerProgram::paper_default(5);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..30 {
+            assert!(prog.load_next(0.0));
+            seen.insert((prog.picture.0.name(), prog.picture.1));
+        }
+        assert!(seen.len() >= 6, "picture pool under-sampled: {}", seen.len());
+    }
+
+    #[test]
+    fn reset_round_clears_partial_state() {
+        let mut prog = CornerProgram::new(HarrisConfig::default(), 32, &[3], 2);
+        assert!(prog.load_next(0.0));
+        prog.execute_step(0);
+        assert_eq!(prog.output().rows_computed, 1);
+        prog.reset_round();
+        assert_eq!(prog.output().rows_computed, 0);
+        assert!(prog.output().corners.is_empty());
+    }
+}

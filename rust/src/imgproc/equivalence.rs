@@ -1,0 +1,107 @@
+//! The paper's corner-equivalence metric (§6.3).
+//!
+//! Two outputs are *equivalent* when (i) the same number of corners
+//! appears, and (ii) each corner of the approximate output lies closer to
+//! its counterpart in the reference output than to any other reference
+//! corner — so corners can shift slightly but cannot be confused with a
+//! different one.
+
+use crate::imgproc::Corner;
+
+fn d2(a: &Corner, b: &Corner) -> f64 {
+    let dx = a.x as f64 - b.x as f64;
+    let dy = a.y as f64 - b.y as f64;
+    dx * dx + dy * dy
+}
+
+/// The paper's binary equivalence check.
+pub fn equivalent(reference: &[Corner], approx: &[Corner]) -> bool {
+    if reference.len() != approx.len() {
+        return false;
+    }
+    if reference.is_empty() {
+        return true;
+    }
+    // Each approx corner's nearest reference corner must be unique
+    // (a bijection) — otherwise two corners were confused.
+    let mut claimed = vec![false; reference.len()];
+    for a in approx {
+        let mut best = 0usize;
+        let mut best_d = f64::INFINITY;
+        for (i, r) in reference.iter().enumerate() {
+            let d = d2(a, r);
+            if d < best_d {
+                best_d = d;
+                best = i;
+            }
+        }
+        if claimed[best] {
+            return false; // two approx corners map to the same reference
+        }
+        claimed[best] = true;
+    }
+    true
+}
+
+/// Mean position error between matched corners (only meaningful when the
+/// outputs are equivalent; returns None otherwise).
+pub fn mean_position_error(reference: &[Corner], approx: &[Corner]) -> Option<f64> {
+    if !equivalent(reference, approx) {
+        return None;
+    }
+    if reference.is_empty() {
+        return Some(0.0);
+    }
+    let mut total = 0.0;
+    for a in approx {
+        let d = reference.iter().map(|r| d2(a, r)).fold(f64::INFINITY, f64::min);
+        total += d.sqrt();
+    }
+    Some(total / approx.len() as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn c(x: usize, y: usize) -> Corner {
+        Corner { x, y, response: 1.0 }
+    }
+
+    #[test]
+    fn identical_sets_are_equivalent() {
+        let r = vec![c(10, 10), c(40, 40), c(10, 40)];
+        assert!(equivalent(&r, &r));
+        assert_eq!(mean_position_error(&r, &r), Some(0.0));
+    }
+
+    #[test]
+    fn count_mismatch_is_not_equivalent() {
+        let r = vec![c(10, 10), c(40, 40)];
+        let a = vec![c(10, 10)];
+        assert!(!equivalent(&r, &a));
+        assert!(mean_position_error(&r, &a).is_none());
+    }
+
+    #[test]
+    fn small_shifts_are_equivalent() {
+        let r = vec![c(10, 10), c(40, 40), c(10, 40)];
+        let a = vec![c(11, 10), c(39, 41), c(10, 42)];
+        assert!(equivalent(&r, &a));
+        let err = mean_position_error(&r, &a).unwrap();
+        assert!(err > 0.0 && err < 3.0);
+    }
+
+    #[test]
+    fn confusion_is_rejected() {
+        // Two approx corners both nearest to the same reference corner.
+        let r = vec![c(10, 10), c(50, 50)];
+        let a = vec![c(11, 10), c(12, 11)];
+        assert!(!equivalent(&r, &a));
+    }
+
+    #[test]
+    fn empty_outputs_are_equivalent() {
+        assert!(equivalent(&[], &[]));
+    }
+}

@@ -1,0 +1,296 @@
+//! Harris corner detection with loop perforation (§6.2).
+//!
+//! The detector is the paper's iterative image-processing workload: Sobel
+//! gradients, 3×3 structure-tensor sums, the Harris response
+//! `R = det(M) − k·tr(M)²`, thresholding and non-maximum suppression.
+//! The *row loop* of the response computation is the perforated loop: a
+//! perforated execution computes only a subset of rows, chosen in
+//! bit-reversed (van der Corput) order so that any prefix of the schedule
+//! is near-uniformly spread over the image — skipped rows cost nothing
+//! and contribute no response. Corners whose blobs span surviving rows
+//! are still found (slightly displaced); beyond ~40-50 % skipping,
+//! detections drop or split, exactly the degradation Fig. 12 shows.
+
+use crate::imgproc::{Corner, Image};
+
+/// Harris detector parameters.
+#[derive(Clone, Debug)]
+pub struct HarrisConfig {
+    /// Harris sensitivity k (classically 0.04-0.06).
+    pub k: f64,
+    /// Absolute response threshold (images are in [0,1]).
+    pub threshold: f64,
+    /// Non-maximum suppression radius, pixels.
+    pub nms_radius: usize,
+}
+
+impl Default for HarrisConfig {
+    fn default() -> HarrisConfig {
+        HarrisConfig { k: 0.04, threshold: 0.8, nms_radius: 2 }
+    }
+}
+
+/// Sobel gradient images (Ix, Iy).
+pub fn gradients(img: &Image) -> (Vec<f64>, Vec<f64>) {
+    let (w, h) = (img.width, img.height);
+    let mut ix = vec![0.0; w * h];
+    let mut iy = vec![0.0; w * h];
+    for y in 0..h {
+        for x in 0..w {
+            let p = |dx: isize, dy: isize| img.at_clamped(x as isize + dx, y as isize + dy);
+            ix[y * w + x] = (p(1, -1) + 2.0 * p(1, 0) + p(1, 1))
+                - (p(-1, -1) + 2.0 * p(-1, 0) + p(-1, 1));
+            iy[y * w + x] = (p(-1, 1) + 2.0 * p(0, 1) + p(1, 1))
+                - (p(-1, -1) + 2.0 * p(0, -1) + p(1, -1));
+        }
+    }
+    (ix, iy)
+}
+
+/// Partial Harris response map: rows are filled in as the (possibly
+/// perforated) loop executes.
+#[derive(Clone, Debug)]
+pub struct ResponseMap {
+    pub width: usize,
+    pub height: usize,
+    pub r: Vec<f64>,
+    /// Whether each row has been computed.
+    pub row_done: Vec<bool>,
+}
+
+impl ResponseMap {
+    pub fn new(width: usize, height: usize) -> ResponseMap {
+        ResponseMap { width, height, r: vec![0.0; width * height], row_done: vec![false; height] }
+    }
+
+    /// Fraction of rows computed.
+    pub fn coverage(&self) -> f64 {
+        self.row_done.iter().filter(|&&d| d).count() as f64 / self.height.max(1) as f64
+    }
+}
+
+/// Compute one row of the Harris response from the gradient images.
+pub fn response_row(
+    ix: &[f64],
+    iy: &[f64],
+    map: &mut ResponseMap,
+    y: usize,
+    cfg: &HarrisConfig,
+) {
+    let (w, h) = (map.width, map.height);
+    debug_assert!(y < h);
+    for x in 0..w {
+        // 3x3 structure tensor around (x, y).
+        let (mut sxx, mut sxy, mut syy) = (0.0, 0.0, 0.0);
+        for dy in -1isize..=1 {
+            for dx in -1isize..=1 {
+                let xi = (x as isize + dx).clamp(0, w as isize - 1) as usize;
+                let yi = (y as isize + dy).clamp(0, h as isize - 1) as usize;
+                let gx = ix[yi * w + xi];
+                let gy = iy[yi * w + xi];
+                sxx += gx * gx;
+                sxy += gx * gy;
+                syy += gy * gy;
+            }
+        }
+        let det = sxx * syy - sxy * sxy;
+        let tr = sxx + syy;
+        map.r[y * w + x] = det - cfg.k * tr * tr;
+    }
+    map.row_done[y] = true;
+}
+
+/// Threshold + NMS over the computed rows. Missing rows contribute
+/// nothing (their responses read as 0, below any sensible threshold).
+pub fn detect(map: &ResponseMap, cfg: &HarrisConfig) -> Vec<Corner> {
+    let (w, h) = (map.width, map.height);
+    let rad = cfg.nms_radius as isize;
+    let mut corners = Vec::new();
+    for y in 0..h {
+        if !map.row_done[y] {
+            continue;
+        }
+        for x in 0..w {
+            let v = map.r[y * w + x];
+            if v < cfg.threshold {
+                continue;
+            }
+            let mut is_max = true;
+            'nms: for dy in -rad..=rad {
+                for dx in -rad..=rad {
+                    if dx == 0 && dy == 0 {
+                        continue;
+                    }
+                    let xi = x as isize + dx;
+                    let yi = y as isize + dy;
+                    if xi < 0 || yi < 0 || xi >= w as isize || yi >= h as isize {
+                        continue;
+                    }
+                    let (xi, yi) = (xi as usize, yi as usize);
+                    if !map.row_done[yi] {
+                        continue;
+                    }
+                    let u = map.r[yi * w + xi];
+                    // Strictly-greater on one side to break plateau ties.
+                    if u > v || (u == v && (yi, xi) < (y, x)) {
+                        is_max = false;
+                        break 'nms;
+                    }
+                }
+            }
+            if is_max {
+                corners.push(Corner { x, y, response: v });
+            }
+        }
+    }
+    corners
+}
+
+/// The perforation schedule: rows in bit-reversed order, so the first `k`
+/// entries of the schedule are near-uniformly spread for every `k`
+/// (nested plans, as the GREEDY runtime extends them mid-round).
+pub fn row_schedule(height: usize) -> Vec<usize> {
+    let bits = (usize::BITS - (height.max(2) - 1).leading_zeros()) as usize;
+    let mut order: Vec<usize> = (0..(1usize << bits))
+        .map(|i| {
+            let mut r = 0usize;
+            for b in 0..bits {
+                if i & (1 << b) != 0 {
+                    r |= 1 << (bits - 1 - b);
+                }
+            }
+            r
+        })
+        .filter(|&r| r < height)
+        .collect();
+    debug_assert_eq!(order.len(), height);
+    // Stable de-dup is unnecessary: bit reversal is a permutation.
+    order.dedup();
+    order
+}
+
+/// Full (unperforated) Harris detection.
+pub fn harris_full(img: &Image, cfg: &HarrisConfig) -> Vec<Corner> {
+    let (ix, iy) = gradients(img);
+    let mut map = ResponseMap::new(img.width, img.height);
+    for y in 0..img.height {
+        response_row(&ix, &iy, &mut map, y, cfg);
+    }
+    detect(&map, cfg)
+}
+
+/// Perforated Harris: execute only the first `rows_to_run` entries of the
+/// bit-reversed schedule (`skip_fraction = 1 - rows_to_run/height`).
+pub fn harris_perforated(img: &Image, cfg: &HarrisConfig, rows_to_run: usize) -> Vec<Corner> {
+    let (ix, iy) = gradients(img);
+    let mut map = ResponseMap::new(img.width, img.height);
+    for &y in row_schedule(img.height).iter().take(rows_to_run.min(img.height)) {
+        response_row(&ix, &iy, &mut map, y, cfg);
+    }
+    detect(&map, cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::imgproc::images::{render, Picture};
+
+    #[test]
+    fn checkerboard_corners_found() {
+        let img = render(Picture::Checker, 64, 64, 1);
+        let corners = harris_full(&img, &HarrisConfig::default());
+        // 8x8 cells → 7x7 interior lattice crossings.
+        assert!(
+            (30..=70).contains(&corners.len()),
+            "expected ~49 corners, got {}",
+            corners.len()
+        );
+        // Corners should sit near multiples of 8.
+        for c in &corners {
+            let dx = (c.x as f64 / 8.0).round() * 8.0 - c.x as f64;
+            let dy = (c.y as f64 / 8.0).round() * 8.0 - c.y as f64;
+            assert!(dx.abs() <= 2.5 && dy.abs() <= 2.5, "corner off-lattice: {c:?}");
+        }
+    }
+
+    #[test]
+    fn flat_image_has_no_corners() {
+        let img = Image::new(32, 32);
+        assert!(harris_full(&img, &HarrisConfig::default()).is_empty());
+    }
+
+    #[test]
+    fn edges_are_not_corners() {
+        // A single vertical step edge: strong gradients, no corner.
+        let mut img = Image::new(48, 48);
+        for y in 0..48 {
+            for x in 24..48 {
+                img.set(x, y, 1.0);
+            }
+        }
+        let corners = harris_full(&img, &HarrisConfig::default());
+        assert!(corners.is_empty(), "step edge produced corners: {corners:?}");
+    }
+
+    #[test]
+    fn row_schedule_is_a_spread_permutation() {
+        for h in [7usize, 64, 160, 200] {
+            let sched = row_schedule(h);
+            assert_eq!(sched.len(), h);
+            let mut sorted = sched.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, (0..h).collect::<Vec<_>>());
+            // The first half of the schedule must cover the image evenly:
+            // max gap between consecutive chosen rows <= 4 * ideal gap.
+            let mut half: Vec<usize> = sched[..h / 2].to_vec();
+            half.sort_unstable();
+            let max_gap = half.windows(2).map(|w| w[1] - w[0]).max().unwrap_or(0);
+            assert!(max_gap <= 8, "h={h} max_gap={max_gap}");
+        }
+    }
+
+    #[test]
+    fn mild_perforation_preserves_corner_count() {
+        let img = render(Picture::Checker, 64, 64, 1);
+        let cfg = HarrisConfig::default();
+        let full = harris_full(&img, &cfg);
+        // Run 70% of rows.
+        let p70 = harris_perforated(&img, &cfg, 64 * 7 / 10);
+        let ratio = p70.len() as f64 / full.len().max(1) as f64;
+        assert!(
+            (0.8..=1.25).contains(&ratio),
+            "70% rows: {} vs full {}",
+            p70.len(),
+            full.len()
+        );
+    }
+
+    #[test]
+    fn extreme_perforation_degrades() {
+        let img = render(Picture::Cluttered, 96, 96, 2);
+        let cfg = HarrisConfig::default();
+        let full = harris_full(&img, &cfg).len();
+        let tiny = harris_perforated(&img, &cfg, 10).len();
+        assert!(tiny < full, "10/96 rows should find fewer corners: {tiny} vs {full}");
+    }
+
+    #[test]
+    fn perforation_is_monotone_in_coverage() {
+        // More rows never loses *computed* coverage (the schedule nests).
+        let img = render(Picture::Polygons, 80, 80, 3);
+        let (ix, iy) = gradients(&img);
+        let cfg = HarrisConfig::default();
+        let sched = row_schedule(80);
+        let mut map = ResponseMap::new(80, 80);
+        let mut last_coverage = 0.0;
+        for chunk in sched.chunks(20) {
+            for &y in chunk {
+                response_row(&ix, &iy, &mut map, y, &cfg);
+            }
+            let c = map.coverage();
+            assert!(c > last_coverage);
+            last_coverage = c;
+        }
+        assert!((last_coverage - 1.0).abs() < 1e-12);
+    }
+}

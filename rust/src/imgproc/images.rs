@@ -1,0 +1,201 @@
+//! Synthetic test pictures.
+//!
+//! The paper stores a set of test pictures on FRAM and grades outputs by
+//! picture complexity (Fig. 12: a simple test pattern, then progressively
+//! busier scenes). The three generators here span the same range:
+//! a checkerboard (simple, strong isolated corners), a polygon scene
+//! (medium), and a cluttered blocks-and-texture scene (complex). All are
+//! seeded and deterministic.
+
+use crate::imgproc::Image;
+use crate::util::rng::Rng;
+
+/// Picture complexity classes, mirroring Fig. 12(a)-(c).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Picture {
+    /// Checkerboard — the "simple test" of Fig. 12(a).
+    Checker,
+    /// A few filled convex polygons.
+    Polygons,
+    /// Many overlapping rectangles plus texture noise.
+    Cluttered,
+}
+
+impl Picture {
+    pub const ALL: [Picture; 3] = [Picture::Checker, Picture::Polygons, Picture::Cluttered];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Picture::Checker => "checker",
+            Picture::Polygons => "polygons",
+            Picture::Cluttered => "cluttered",
+        }
+    }
+}
+
+/// Render a test picture at the given size.
+pub fn render(kind: Picture, width: usize, height: usize, seed: u64) -> Image {
+    match kind {
+        Picture::Checker => checkerboard(width, height, 8),
+        Picture::Polygons => polygons(width, height, seed, 5),
+        Picture::Cluttered => cluttered(width, height, seed),
+    }
+}
+
+/// Standard evaluation size (the paper cites ~25 KB per capture [52]:
+/// 160×160 at 8 bpp).
+pub const EVAL_SIZE: usize = 160;
+
+fn checkerboard(width: usize, height: usize, cells: usize) -> Image {
+    let mut img = Image::new(width, height);
+    let cw = width / cells;
+    let ch = height / cells;
+    for y in 0..height {
+        for x in 0..width {
+            let v = ((x / cw.max(1)) + (y / ch.max(1))) % 2;
+            img.set(x, y, v as f64);
+        }
+    }
+    img
+}
+
+/// Fill a convex polygon given vertices (scanline test via cross products).
+fn fill_convex(img: &mut Image, pts: &[(f64, f64)], value: f64) {
+    let inside = |x: f64, y: f64| -> bool {
+        let n = pts.len();
+        let mut sign = 0i8;
+        for i in 0..n {
+            let (x1, y1) = pts[i];
+            let (x2, y2) = pts[(i + 1) % n];
+            let cross = (x2 - x1) * (y - y1) - (y2 - y1) * (x - x1);
+            let s = if cross > 0.0 {
+                1
+            } else if cross < 0.0 {
+                -1
+            } else {
+                0
+            };
+            if s != 0 {
+                if sign == 0 {
+                    sign = s;
+                } else if sign != s {
+                    return false;
+                }
+            }
+        }
+        true
+    };
+    for y in 0..img.height {
+        for x in 0..img.width {
+            if inside(x as f64 + 0.5, y as f64 + 0.5) {
+                img.set(x, y, value);
+            }
+        }
+    }
+}
+
+fn polygons(width: usize, height: usize, seed: u64, count: usize) -> Image {
+    let mut rng = Rng::new(seed ^ 0x90170);
+    let mut img = Image::new(width, height);
+    // Mid-gray background so both darker and lighter shapes give edges.
+    for v in img.data.iter_mut() {
+        *v = 0.5;
+    }
+    for i in 0..count {
+        let cx = rng.range(0.2, 0.8) * width as f64;
+        let cy = rng.range(0.2, 0.8) * height as f64;
+        let r = rng.range(0.08, 0.22) * width as f64;
+        let sides = 3 + rng.index(3); // triangles to pentagons
+        let phase = rng.range(0.0, std::f64::consts::TAU);
+        let pts: Vec<(f64, f64)> = (0..sides)
+            .map(|k| {
+                let a = phase + std::f64::consts::TAU * k as f64 / sides as f64;
+                (cx + r * a.cos(), cy + r * a.sin())
+            })
+            .collect();
+        let shade = if i % 2 == 0 { 0.95 } else { 0.05 };
+        fill_convex(&mut img, &pts, shade);
+    }
+    img
+}
+
+fn cluttered(width: usize, height: usize, seed: u64) -> Image {
+    let mut rng = Rng::new(seed ^ 0xC1077);
+    let mut img = Image::new(width, height);
+    for v in img.data.iter_mut() {
+        *v = 0.5;
+    }
+    // Overlapping axis-aligned rectangles: dense corner population.
+    for _ in 0..14 {
+        let x0 = rng.index(width * 3 / 4);
+        let y0 = rng.index(height * 3 / 4);
+        let w = 8 + rng.index(width / 3);
+        let h = 8 + rng.index(height / 3);
+        let shade = rng.range(0.0, 1.0);
+        for y in y0..(y0 + h).min(height) {
+            for x in x0..(x0 + w).min(width) {
+                img.set(x, y, shade);
+            }
+        }
+    }
+    // Mild texture noise (robustness to which motivates approximation).
+    for v in img.data.iter_mut() {
+        *v = (*v + 0.02 * rng.gaussian()).clamp(0.0, 1.0);
+    }
+    img
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_rendering() {
+        for kind in Picture::ALL {
+            let a = render(kind, 64, 64, 5);
+            let b = render(kind, 64, 64, 5);
+            assert_eq!(a, b, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn values_in_unit_range() {
+        for kind in Picture::ALL {
+            let img = render(kind, 80, 80, 9);
+            assert!(img.data.iter().all(|&v| (0.0..=1.0).contains(&v)), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn checkerboard_alternates() {
+        let img = checkerboard(64, 64, 8);
+        assert_eq!(img.at(0, 0), 0.0);
+        assert_eq!(img.at(8, 0), 1.0);
+        assert_eq!(img.at(8, 8), 0.0);
+    }
+
+    #[test]
+    fn complexity_ordering_by_edge_content() {
+        // Edge energy (sum of |gradient|) should grow from the sparse
+        // polygon scene to the cluttered one.
+        let edge_energy = |img: &Image| -> f64 {
+            let mut e = 0.0;
+            for y in 0..img.height {
+                for x in 1..img.width {
+                    e += (img.at(x, y) - img.at(x - 1, y)).abs();
+                }
+            }
+            e
+        };
+        let medium = edge_energy(&render(Picture::Polygons, 96, 96, 3));
+        let complex = edge_energy(&render(Picture::Cluttered, 96, 96, 3));
+        assert!(complex > medium, "cluttered should be busier than polygons");
+    }
+
+    #[test]
+    fn clamped_access() {
+        let img = checkerboard(16, 16, 4);
+        assert_eq!(img.at_clamped(-5, -5), img.at(0, 0));
+        assert_eq!(img.at_clamped(100, 100), img.at(15, 15));
+    }
+}

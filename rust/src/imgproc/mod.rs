@@ -1,0 +1,57 @@
+//! Embedded image processing (the paper's second application, §6).
+//!
+//! * [`images`] — synthetic test pictures (simple shapes → complex
+//!   scenes) standing in for the FRAM-stored test set of §6.3.
+//! * [`harris`] — Harris corner detection with a *row perforation* knob:
+//!   the iterative response loop skips a chosen fraction of rows, trading
+//!   output quality for energy exactly as the paper's loop perforation.
+//! * [`equivalence`] — the paper's output metric: corner sets are
+//!   *equivalent* when the count matches and each corner is closest to
+//!   its counterpart (§6.3).
+//! * [`app`] — the corner pipeline as a [`crate::exec::StepProgram`]
+//!   whose steps are row groups of the perforated loop.
+
+pub mod app;
+pub mod equivalence;
+pub mod harris;
+pub mod images;
+
+/// A grayscale image, row-major, values in [0, 1].
+#[derive(Clone, Debug, PartialEq)]
+pub struct Image {
+    pub width: usize,
+    pub height: usize,
+    pub data: Vec<f64>,
+}
+
+impl Image {
+    pub fn new(width: usize, height: usize) -> Image {
+        Image { width, height, data: vec![0.0; width * height] }
+    }
+
+    #[inline]
+    pub fn at(&self, x: usize, y: usize) -> f64 {
+        self.data[y * self.width + x]
+    }
+
+    #[inline]
+    pub fn set(&mut self, x: usize, y: usize, v: f64) {
+        self.data[y * self.width + x] = v;
+    }
+
+    /// Clamped access (border replication).
+    #[inline]
+    pub fn at_clamped(&self, x: isize, y: isize) -> f64 {
+        let xi = x.clamp(0, self.width as isize - 1) as usize;
+        let yi = y.clamp(0, self.height as isize - 1) as usize;
+        self.at(xi, yi)
+    }
+}
+
+/// A detected corner: position plus response strength.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Corner {
+    pub x: usize,
+    pub y: usize,
+    pub response: f64,
+}

@@ -1,0 +1,40 @@
+//! # Approximate Intermittent Computing (AIC)
+//!
+//! Reproduction of *"The Case for Approximate Intermittent Computing"*
+//! (Bambusi, Cerizzi, Lee, Mottola — 2021): a framework for running
+//! data-processing pipelines on batteryless, energy-harvesting devices by
+//! trading output accuracy for the guarantee that every computation
+//! finishes **within a single power cycle**, eliminating persistent state
+//! (checkpoints on NVM) entirely.
+//!
+//! The crate is the Layer-3 coordinator of a three-layer Rust + JAX +
+//! Pallas stack:
+//!
+//! * **L1** — Pallas kernels (`python/compile/kernels/`): anytime-SVM
+//!   prefix scoring, DFT/statistics feature extraction, perforated Harris
+//!   corner response. Compile-time only.
+//! * **L2** — JAX pipelines (`python/compile/model.py`) AOT-lowered to HLO
+//!   text artifacts (`artifacts/*.hlo.txt`).
+//! * **L3** — this crate: the intermittent-execution engine, the energy
+//!   substrate, the GREEDY/SMART approximate runtimes and the Chinchilla /
+//!   continuous baselines, the application pipelines (human activity
+//!   recognition, embedded image processing), the PJRT runtime that loads
+//!   the AOT artifacts for accelerated batch replay, and the experiment
+//!   coordinator that regenerates every figure of the paper.
+//!
+//! See `DESIGN.md` for the system inventory and the per-figure experiment
+//! index, and `EXPERIMENTS.md` for measured-vs-paper results.
+
+pub mod util;
+pub mod energy;
+pub mod exec;
+pub mod svm;
+pub mod har;
+pub mod imgproc;
+pub mod runtime;
+pub mod coordinator;
+
+/// Convenience re-exports for examples and benches.
+pub mod prelude {
+    pub use crate::util::rng::Rng;
+}

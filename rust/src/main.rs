@@ -1,0 +1,365 @@
+//! `aic` — the Approximate Intermittent Computing coordinator CLI.
+//!
+//! Subcommands regenerate each figure of the paper (writing markdown to
+//! stdout and CSV/JSON under `--out`), inspect the energy traces, check
+//! the AOT artifacts through PJRT, and run free-form simulations.
+
+use aic::coordinator::experiment::{
+    self, fig12, fig4, har_latency_histograms, har_policy_comparison,
+    img_trace_comparison, HarContext, HarRunSpec, ImgRunSpec,
+};
+use aic::coordinator::report::{f2, pct, ratio, Table};
+use aic::energy::traces::{generate, TraceKind};
+use aic::exec::Policy;
+use aic::util::cli::Args;
+
+const USAGE: &str = "aic — approximate intermittent computing (paper reproduction)
+
+USAGE: aic <command> [--out out] [--fast] [options]
+
+COMMANDS:
+  fig4            expected vs measured accuracy vs feature count
+  fig5            emulation: accuracy + throughput per policy
+  fig6            emulation: latency distribution (power cycles)
+  fig7            real-world: coherence + throughput vs continuous
+  fig8            real-world: coherence + throughput vs Chinchilla
+  fig9            real-world: latency distribution
+  fig12           corner output vs perforation rate
+  fig13           corner equivalence per energy trace
+  fig14           imaging throughput per energy trace
+  fig15           imaging latency distribution per trace
+  all             every figure in sequence
+  traces          synthetic energy trace statistics (Fig. 11)
+  artifacts-check load + execute every AOT artifact through PJRT
+  simulate        one campaign: --policy greedy|smart60|smart80|chinchilla
+                  --trace rf|som|sim|sor|sir|kinetic --horizon secs
+
+OPTIONS:
+  --out DIR       output directory for CSV/JSON (default: out)
+  --fast          smaller campaigns (CI-friendly)
+  --seed N        base seed (default 42)
+";
+
+fn main() {
+    let args = Args::from_env_with_flags(&["fast", "help"]);
+    let out = args.get_or("out", "out").to_string();
+    let fast = args.flag("fast");
+    let seed = args.get_u64("seed", 42);
+    let cmd = args.command().unwrap_or("help").to_string();
+    match cmd.as_str() {
+        "fig4" => run_fig4(&out, seed),
+        "fig5" | "fig6" => run_fig56(&out, seed, fast, &cmd),
+        "fig7" | "fig8" | "fig9" => run_fig789(&out, seed, fast, &cmd),
+        "fig12" => run_fig12(&out, fast),
+        "fig13" | "fig14" | "fig15" => run_fig131415(&out, seed, fast, &cmd),
+        "all" => {
+            run_fig4(&out, seed);
+            run_fig56(&out, seed, fast, "fig5");
+            run_fig56(&out, seed, fast, "fig6");
+            run_fig789(&out, seed, fast, "fig7");
+            run_fig789(&out, seed, fast, "fig8");
+            run_fig789(&out, seed, fast, "fig9");
+            run_fig12(&out, fast);
+            run_fig131415(&out, seed, fast, "fig13");
+            run_fig131415(&out, seed, fast, "fig14");
+            run_fig131415(&out, seed, fast, "fig15");
+        }
+        "traces" => run_traces(&out, seed),
+        "artifacts-check" => run_artifacts_check(args.get_or("artifacts", "artifacts")),
+        "simulate" => run_simulate(&args, seed),
+        _ => print!("{USAGE}"),
+    }
+}
+
+fn context(seed: u64, fast: bool) -> HarContext {
+    if fast {
+        experiment::test_context()
+    } else {
+        HarContext::build(seed)
+    }
+}
+
+fn volunteers(fast: bool) -> Vec<u64> {
+    if fast {
+        vec![1, 2]
+    } else {
+        vec![1, 2, 3, 4, 5, 6]
+    }
+}
+
+fn har_spec(fast: bool) -> HarRunSpec {
+    HarRunSpec {
+        horizon: if fast { 1800.0 } else { 4.0 * 3600.0 },
+        ..Default::default()
+    }
+}
+
+fn run_fig4(out: &str, seed: u64) {
+    let ctx = context(seed, false);
+    let ps: Vec<usize> = (0..=140).step_by(10).collect();
+    let rows = fig4(&ctx, &ps);
+    let mut t = Table::new(
+        "Fig. 4 — expected vs measured accuracy vs number of features",
+        &["features", "expected", "measured"],
+    );
+    for r in rows {
+        t.push(vec![r.p.to_string(), pct(r.expected), pct(r.measured)]);
+    }
+    t.emit(out, "fig4").expect("write fig4");
+}
+
+fn run_fig56(out: &str, seed: u64, fast: bool, which: &str) {
+    let ctx = context(seed, fast);
+    let spec = har_spec(fast);
+    if which == "fig5" {
+        let rows = har_policy_comparison(&ctx, &spec, &volunteers(fast));
+        let mut t = Table::new(
+            "Fig. 5 — emulation: accuracy and throughput normalised to continuous",
+            &["policy", "accuracy", "thrpt vs continuous", "mean features", "state energy"],
+        );
+        for r in rows {
+            t.push(vec![
+                r.policy.name(),
+                pct(r.accuracy),
+                pct(r.throughput_vs_continuous),
+                f2(r.mean_features),
+                pct(r.state_energy_fraction),
+            ]);
+        }
+        t.emit(out, "fig5").expect("write fig5");
+    } else {
+        let hists = har_latency_histograms(&ctx, &spec, &volunteers(fast), 40);
+        let mut t = Table::new(
+            "Fig. 6 — emulation: latency distribution in power cycles",
+            &["policy", "cycle0", "cycle1", "cycle2-5", "cycle6-15", "cycle16+"],
+        );
+        for (policy, h) in hists {
+            let range =
+                |a: usize, b: usize| -> f64 { (a..b.min(h.bins.len())).map(|i| h.frac(i)).sum() };
+            t.push(vec![
+                policy.name(),
+                pct(h.frac(0)),
+                pct(h.frac(1)),
+                pct(range(2, 6)),
+                pct(range(6, 16)),
+                pct(range(16, 40) + h.overflow as f64 / h.count.max(1) as f64),
+            ]);
+        }
+        t.emit(out, "fig6").expect("write fig6");
+    }
+}
+
+fn run_fig789(out: &str, seed: u64, fast: bool, which: &str) {
+    let ctx = context(seed, fast);
+    let spec = har_spec(fast);
+    match which {
+        "fig7" => {
+            let rows = har_policy_comparison(&ctx, &spec, &volunteers(fast));
+            let mut t = Table::new(
+                "Fig. 7 — real-world: coherence and throughput vs continuous",
+                &["policy", "coherence vs continuous", "thrpt vs continuous"],
+            );
+            for r in rows.iter().filter(|r| !matches!(r.policy, Policy::Continuous)) {
+                t.push(vec![
+                    r.policy.name(),
+                    pct(r.coherence_vs_continuous),
+                    pct(r.throughput_vs_continuous),
+                ]);
+            }
+            t.emit(out, "fig7").expect("write fig7");
+        }
+        "fig8" => {
+            let rows = har_policy_comparison(&ctx, &spec, &volunteers(fast));
+            let mut t = Table::new(
+                "Fig. 8 — real-world: coherence vs Chinchilla, throughput vs GREEDY",
+                &["policy", "coherence vs chinchilla", "thrpt vs greedy", "thrpt vs chinchilla"],
+            );
+            for r in rows.iter().filter(|r| !matches!(r.policy, Policy::Continuous)) {
+                t.push(vec![
+                    r.policy.name(),
+                    pct(r.coherence_vs_chinchilla),
+                    pct(r.throughput_vs_greedy),
+                    ratio(r.throughput_vs_chinchilla),
+                ]);
+            }
+            t.emit(out, "fig8").expect("write fig8");
+        }
+        _ => {
+            let hists = har_latency_histograms(&ctx, &spec, &volunteers(fast), 40);
+            let mut t = Table::new(
+                "Fig. 9 — real-world: latency distribution in power cycles",
+                &["policy", "same cycle", "1 cycle", "2+ cycles"],
+            );
+            for (policy, h) in hists {
+                let rest: f64 = (2..h.bins.len()).map(|i| h.frac(i)).sum::<f64>()
+                    + h.overflow as f64 / h.count.max(1) as f64;
+                t.push(vec![policy.name(), pct(h.frac(0)), pct(h.frac(1)), pct(rest)]);
+            }
+            t.emit(out, "fig9").expect("write fig9");
+        }
+    }
+}
+
+fn run_fig12(out: &str, fast: bool) {
+    let size = if fast { 96 } else { aic::imgproc::images::EVAL_SIZE };
+    let rows = fig12(size, &[0.0, 0.2, 0.42, 0.55, 0.7, 0.85]);
+    let mut t = Table::new(
+        "Fig. 12 — corner detection output vs fraction of loop iterations skipped",
+        &["picture", "skipped", "corners", "reference", "equivalent"],
+    );
+    for r in rows {
+        t.push(vec![
+            r.picture.name().to_string(),
+            pct(r.skip_fraction),
+            r.corners.to_string(),
+            r.reference_corners.to_string(),
+            r.equivalent.to_string(),
+        ]);
+    }
+    t.emit(out, "fig12").expect("write fig12");
+}
+
+fn run_fig131415(out: &str, seed: u64, fast: bool, which: &str) {
+    let spec = ImgRunSpec {
+        horizon: if fast { 1200.0 } else { 2.0 * 3600.0 },
+        trace_seed: seed,
+        ..Default::default()
+    };
+    let rows = img_trace_comparison(&spec);
+    match which {
+        "fig13" => {
+            let mut t = Table::new(
+                "Fig. 13 — corner info equivalent to a continuous execution",
+                &["picture", "equivalent corner info (pooled over traces)"],
+            );
+            for (picture, eq) in experiment::fig13_by_picture(&spec) {
+                t.push(vec![picture.name().to_string(), pct(eq)]);
+            }
+            let mut per_trace = Table::new(
+                "Fig. 13 (suppl.) — equivalence per energy trace",
+                &["trace", "equivalent corner info"],
+            );
+            for r in &rows {
+                per_trace.push(vec![r.trace.name().to_string(), pct(r.equivalence_aic)]);
+            }
+            t.emit(out, "fig13").expect("write fig13");
+            per_trace.emit(out, "fig13_per_trace").expect("write fig13 suppl");
+        }
+        "fig14" => {
+            let mut t = Table::new(
+                "Fig. 14 — imaging throughput normalised to continuous",
+                &["trace", "AIC", "Chinchilla", "AIC/Chinchilla"],
+            );
+            for r in &rows {
+                let gain = if r.throughput_chinchilla_vs_continuous > 0.0 {
+                    r.throughput_aic_vs_continuous / r.throughput_chinchilla_vs_continuous
+                } else {
+                    f64::INFINITY
+                };
+                t.push(vec![
+                    r.trace.name().to_string(),
+                    pct(r.throughput_aic_vs_continuous),
+                    pct(r.throughput_chinchilla_vs_continuous),
+                    ratio(gain),
+                ]);
+            }
+            t.emit(out, "fig14").expect("write fig14");
+        }
+        _ => {
+            let mut t = Table::new(
+                "Fig. 15 — latency to produce the corner output (power cycles)",
+                &["trace", "AIC same-cycle", "Chinchilla mean latency"],
+            );
+            for r in &rows {
+                t.push(vec![
+                    r.trace.name().to_string(),
+                    pct(r.aic_same_cycle),
+                    f2(r.chinchilla_latency_mean),
+                ]);
+            }
+            t.emit(out, "fig15").expect("write fig15");
+        }
+    }
+}
+
+fn run_traces(out: &str, seed: u64) {
+    let mut t = Table::new(
+        "Fig. 11 — synthetic energy traces",
+        &["trace", "mean power (uW)", "total energy (J/h)", "variability (cv)"],
+    );
+    for kind in TraceKind::ALL {
+        let tr = generate(kind, 3600.0, 0.01, seed);
+        t.push(vec![
+            kind.name().to_string(),
+            format!("{:.1}", tr.mean_power() * 1e6),
+            format!("{:.3}", tr.total_energy()),
+            f2(tr.variability()),
+        ]);
+    }
+    t.emit(out, "fig11_traces").expect("write traces");
+}
+
+fn run_artifacts_check(dir: &str) {
+    use aic::runtime::{ArtifactRuntime, Tensor};
+    let rt = match ArtifactRuntime::load(dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("artifact load failed: {e:#}");
+            std::process::exit(1);
+        }
+    };
+    println!("loaded {} artifacts on {} device(s)", rt.names().len(), rt.device_count());
+    for name in rt.names() {
+        let shapes = rt.input_shapes(&name);
+        let inputs: Vec<Tensor> = shapes.iter().map(|s| Tensor::zeros(s.clone())).collect();
+        match rt.execute(&name, &inputs) {
+            Ok(out) => println!("  {name}: inputs {shapes:?} -> output {:?} OK", out.shape),
+            Err(e) => {
+                eprintln!("  {name}: FAILED: {e:#}");
+                std::process::exit(1);
+            }
+        }
+    }
+    println!("artifacts-check OK");
+}
+
+fn run_simulate(args: &Args, seed: u64) {
+    let policy = match args.get_or("policy", "greedy") {
+        "chinchilla" => Policy::Chinchilla,
+        "smart60" => Policy::Smart { bound: 0.60 },
+        "smart80" => Policy::Smart { bound: 0.80 },
+        "continuous" => Policy::Continuous,
+        _ => Policy::Greedy,
+    };
+    let horizon = args.get_f64("horizon", 3600.0);
+    let trace = args.get_or("trace", "kinetic").to_string();
+    if trace == "kinetic" {
+        let ctx = HarContext::build(seed ^ 0xC0FFEE);
+        let spec = HarRunSpec { horizon, sample_period: 60.0, script_seed: seed };
+        let c = experiment::run_har_policy(&ctx, &spec, policy);
+        println!(
+            "HAR {}: {} results, {} cycles, {} failures, acc {}, app {:.2} mJ, state {:.2} mJ",
+            policy.name(),
+            c.emitted().count(),
+            c.power_cycles,
+            c.power_failures,
+            pct(aic::coordinator::metrics::har_accuracy(&c)),
+            c.app_energy * 1e3,
+            c.state_energy * 1e3,
+        );
+    } else {
+        let kind = TraceKind::from_name(&trace).unwrap_or(TraceKind::Som);
+        let spec = ImgRunSpec { horizon, trace_seed: seed, ..Default::default() };
+        let c = experiment::run_img_policy(&spec, kind, policy);
+        println!(
+            "IMG {} on {}: {} results, {} cycles, {} failures, app {:.2} mJ, state {:.2} mJ",
+            policy.name(),
+            kind.name(),
+            c.emitted().count(),
+            c.power_cycles,
+            c.power_failures,
+            c.app_energy * 1e3,
+            c.state_energy * 1e3,
+        );
+    }
+}

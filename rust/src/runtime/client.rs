@@ -1,0 +1,158 @@
+//! PJRT client wrapper: HLO-text artifacts → compiled executables.
+//!
+//! Follows the load_hlo reference (/opt/xla-example): text is the
+//! interchange format because xla_extension 0.5.1 rejects jax ≥ 0.5
+//! serialized protos (64-bit instruction ids); `HloModuleProto::
+//! from_text_file` reassigns ids and round-trips cleanly. Every artifact
+//! is lowered with `return_tuple=True`, so outputs unwrap with
+//! `to_tuple1`.
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json;
+
+/// A shaped f32 tensor travelling to/from the PJRT executables.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let len = shape.iter().product();
+        Tensor { shape, data: vec![0.0; len] }
+    }
+
+    pub fn scalar_vec(data: Vec<f32>) -> Tensor {
+        Tensor { shape: vec![data.len()], data }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = xla::Literal::vec1(&self.data);
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        Ok(lit.reshape(&dims)?)
+    }
+}
+
+/// Compiled artifact registry backed by the PJRT CPU client.
+pub struct ArtifactRuntime {
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Parsed manifest (shapes, descriptions).
+    pub manifest: json::Value,
+    dir: PathBuf,
+}
+
+impl ArtifactRuntime {
+    /// Load every artifact listed in `<dir>/manifest.json` and compile it.
+    pub fn load(dir: impl AsRef<Path>) -> Result<ArtifactRuntime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let manifest_text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} (run `make artifacts`)"))?;
+        let manifest = json::parse(&manifest_text)
+            .map_err(|e| anyhow!("manifest parse error: {e}"))?;
+        let client = xla::PjRtClient::cpu()?;
+        let mut executables = HashMap::new();
+        let arts = manifest
+            .get("artifacts")
+            .as_obj()
+            .ok_or_else(|| anyhow!("manifest missing 'artifacts'"))?;
+        for (name, meta) in arts {
+            let file = meta
+                .get("file")
+                .as_str()
+                .ok_or_else(|| anyhow!("artifact {name} missing file"))?;
+            let path = dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact {name}"))?;
+            executables.insert(name.clone(), exe);
+        }
+        Ok(ArtifactRuntime { client, executables, manifest, dir })
+    }
+
+    /// Names of the loaded artifacts.
+    pub fn names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.executables.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Expected input shapes for an artifact, from the manifest.
+    pub fn input_shapes(&self, name: &str) -> Vec<Vec<usize>> {
+        self.manifest
+            .get("artifacts")
+            .get(name)
+            .get("inputs")
+            .as_arr()
+            .map(|arr| {
+                arr.iter()
+                    .map(|shape| {
+                        shape
+                            .as_arr()
+                            .map(|dims| dims.iter().filter_map(|d| d.as_usize()).collect())
+                            .unwrap_or_default()
+                    })
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+
+    /// Execute an artifact with the given inputs; returns the first (and
+    /// only) element of the lowered 1-tuple as a flat f32 tensor.
+    pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Tensor> {
+        let exe = self
+            .executables
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}' in {:?}", self.dir))?;
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        let shape = out.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = out.to_vec::<f32>()?;
+        Ok(Tensor::new(dims, data))
+    }
+
+    /// Number of PJRT devices (CPU: 1).
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_shape_checks() {
+        let t = Tensor::new(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.shape, vec![2, 3]);
+        let z = Tensor::zeros(vec![4, 5]);
+        assert_eq!(z.data.len(), 20);
+    }
+
+    #[test]
+    #[should_panic]
+    fn tensor_shape_mismatch_panics() {
+        let _ = Tensor::new(vec![2, 3], vec![0.0; 5]);
+    }
+
+    // Execution against real artifacts lives in rust/tests/
+    // integration_runtime.rs (requires `make artifacts` first).
+}

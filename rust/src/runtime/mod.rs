@@ -1,0 +1,13 @@
+//! PJRT runtime: load and execute the AOT artifacts.
+//!
+//! The compile path (python/compile/aot.py, run once by `make artifacts`)
+//! lowers the L2 JAX pipelines to HLO *text*; this module is the request
+//! path: a [`client::ArtifactRuntime`] compiles each artifact on the PJRT
+//! CPU client at startup and executes it with concrete buffers — Python
+//! never runs here. The emulation experiments use it to replay thousands
+//! of device rounds as one batched call, cross-checked against the
+//! pure-Rust twins in the integration tests.
+
+pub mod client;
+
+pub use client::{ArtifactRuntime, Tensor};

@@ -1,0 +1,351 @@
+//! The Eq. 7 analytic accuracy model.
+//!
+//! §3.2 ties the approximation knob (feature count `p`) to the expected
+//! accuracy: the probability that the prefix classification is coherent
+//! with the full-feature one,
+//!
+//! `P(class_p == class_n) = 2 ∫₀^∞ f_{S_p}(k) (1 − F_{R_p}(k)) dk`  (Eq. 7)
+//!
+//! where `S_p` is the partial score and `R_p` the residual contribution
+//! of the unprocessed features. Both are sums of per-feature terms
+//! `c_j·x_j`, so with (approximately) independent features they are
+//! normal with moments accumulated from training data.
+//!
+//! * binary case, zero-mean symmetric: Eq. 7 verbatim, by quadrature;
+//! * binary case, general means: the sign-coherence double integral;
+//! * multi-class: the fitted-Gaussian model evaluated by deterministic
+//!   Monte Carlo over class-score vectors (the "computed numerically"
+//!   route the paper takes for Eq. 8/9), yielding the whole curve
+//!   `p → P(class_p == class_n)` in one pass.
+
+use crate::svm::anytime::AnytimeSvm;
+use crate::svm::model::argmax;
+use crate::util::rng::Rng;
+use crate::util::stats::{integrate_to_inf, normal_cdf, normal_pdf};
+
+/// Moments of the per-feature score contributions `z_j = c_j·x_j` for one
+/// binary problem, in anytime processing order.
+#[derive(Clone, Debug)]
+pub struct TermMoments {
+    pub mean: Vec<f64>,
+    pub var: Vec<f64>,
+}
+
+impl TermMoments {
+    /// Estimate from data: `z_ij = c_j·x_ij` over rows of standardised
+    /// features and one weight vector, in the given feature order.
+    pub fn estimate(weights: &[f64], rows_scaled: &[Vec<f64>], order: &[usize]) -> TermMoments {
+        let m = rows_scaled.len().max(1) as f64;
+        let mut mean = vec![0.0; order.len()];
+        let mut var = vec![0.0; order.len()];
+        for (k, &j) in order.iter().enumerate() {
+            let mut s = 0.0;
+            let mut s2 = 0.0;
+            for r in rows_scaled {
+                let z = weights[j] * r[j];
+                s += z;
+                s2 += z * z;
+            }
+            mean[k] = s / m;
+            var[k] = (s2 / m - mean[k] * mean[k]).max(0.0);
+        }
+        TermMoments { mean, var }
+    }
+
+    /// Moments of `S_p` (prefix sum of the first `p` terms).
+    pub fn prefix(&self, p: usize) -> (f64, f64) {
+        (self.mean[..p].iter().sum(), self.var[..p].iter().sum())
+    }
+
+    /// Moments of `R_p` (residual: terms `p..n`).
+    pub fn residual(&self, p: usize) -> (f64, f64) {
+        (self.mean[p..].iter().sum(), self.var[p..].iter().sum())
+    }
+}
+
+/// Eq. 7 for the symmetric zero-mean binary case:
+/// `2 ∫₀^∞ f_S(k)·(1 − F_R(k)) dk` with S ~ N(0, var_s), R ~ N(0, var_r).
+pub fn coherence_binary_symmetric(var_s: f64, var_r: f64) -> f64 {
+    if var_s <= 0.0 {
+        // No processed signal: the sign of S is degenerate; coherence is
+        // the chance level 1/2.
+        return 0.5;
+    }
+    if var_r <= 0.0 {
+        return 1.0; // nothing left out
+    }
+    let sd_s = var_s.sqrt();
+    let sd_r = var_r.sqrt();
+    2.0 * integrate_to_inf(
+        |k| normal_pdf(k, 0.0, sd_s) * (1.0 - normal_cdf(-k, 0.0, sd_r)),
+        0.0,
+        200,
+    )
+}
+
+/// General binary sign-coherence: `P(sign(S) == sign(S + R))` with
+/// independent `S ~ N(mu_s, var_s)` and `R ~ N(mu_r, var_r)`.
+pub fn coherence_binary(mu_s: f64, var_s: f64, mu_r: f64, var_r: f64) -> f64 {
+    if var_s <= 1e-18 {
+        // Degenerate S: sign fixed at sign(mu_s).
+        if var_r <= 1e-18 {
+            return if (mu_s + mu_r) * mu_s >= 0.0 { 1.0 } else { 0.0 };
+        }
+        let sd_r = var_r.sqrt();
+        return if mu_s >= 0.0 {
+            1.0 - normal_cdf(-mu_s, mu_r, sd_r)
+        } else {
+            normal_cdf(-mu_s, mu_r, sd_r)
+        };
+    }
+    if var_r <= 1e-18 {
+        // Deterministic residual shift.
+        let sd_s = var_s.sqrt();
+        // P(S>0, S+mu_r>0) + P(S<0, S+mu_r<0)
+        let a = 0.0f64.max(-mu_r);
+        let b = 0.0f64.min(-mu_r);
+        return (1.0 - normal_cdf(a, mu_s, sd_s)) + normal_cdf(b, mu_s, sd_s);
+    }
+    let sd_s = var_s.sqrt();
+    let sd_r = var_r.sqrt();
+    // P(S>0, R>-S): integrate f_S(k)·(1-F_R(-k)) over k>0,
+    // plus P(S<0, R<-S): integrate f_S(k)·F_R(-k) over k<0 (k→-k).
+    let pos = integrate_to_inf(
+        |k| normal_pdf(k, mu_s, sd_s) * (1.0 - normal_cdf(-k, mu_r, sd_r)),
+        0.0,
+        200,
+    );
+    let neg = integrate_to_inf(
+        |k| normal_pdf(-k, mu_s, sd_s) * normal_cdf(k, mu_r, sd_r),
+        0.0,
+        200,
+    );
+    pos + neg
+}
+
+/// Per-class per-feature Gaussian input model fitted on training data
+/// (standardised features), the generative model behind the multi-class
+/// numeric evaluation.
+#[derive(Clone, Debug)]
+pub struct ClassFeatureModel {
+    pub classes: usize,
+    /// `mean[c][j]`, `var[c][j]` of standardised feature j in class c.
+    pub mean: Vec<Vec<f64>>,
+    pub var: Vec<Vec<f64>>,
+    /// Class prior (fraction of training data).
+    pub prior: Vec<f64>,
+}
+
+impl ClassFeatureModel {
+    pub fn fit(rows_scaled: &[Vec<f64>], labels: &[usize], classes: usize) -> ClassFeatureModel {
+        let n = rows_scaled[0].len();
+        let mut mean = vec![vec![0.0; n]; classes];
+        let mut var = vec![vec![0.0; n]; classes];
+        let mut count = vec![0usize; classes];
+        for (r, &l) in rows_scaled.iter().zip(labels) {
+            count[l] += 1;
+            for (j, &v) in r.iter().enumerate() {
+                mean[l][j] += v;
+            }
+        }
+        for c in 0..classes {
+            let m = count[c].max(1) as f64;
+            for j in 0..n {
+                mean[c][j] /= m;
+            }
+        }
+        for (r, &l) in rows_scaled.iter().zip(labels) {
+            for (j, &v) in r.iter().enumerate() {
+                let d = v - mean[l][j];
+                var[l][j] += d * d;
+            }
+        }
+        for c in 0..classes {
+            let m = count[c].max(1) as f64;
+            for j in 0..n {
+                var[c][j] = (var[c][j] / m).max(1e-12);
+            }
+        }
+        let total: usize = count.iter().sum();
+        let prior = count.iter().map(|&k| k as f64 / total.max(1) as f64).collect();
+        ClassFeatureModel { classes, mean, var, prior }
+    }
+}
+
+/// The multi-class Eq. 7/8/9 evaluation: for each prefix length in `ps`,
+/// the probability that the prefix argmax equals the full argmax, under
+/// the fitted Gaussian input model. Deterministic given the seed.
+pub fn coherence_curve_model(
+    asvm: &AnytimeSvm,
+    model: &ClassFeatureModel,
+    ps: &[usize],
+    draws: usize,
+    seed: u64,
+) -> Vec<f64> {
+    let classes = asvm.svm.classes;
+    let n = asvm.svm.features;
+    let mut rng = Rng::new(seed);
+    let mut agree = vec![0usize; ps.len()];
+    let mut total = 0usize;
+    for c in 0..classes {
+        let share = (draws as f64 * model.prior[c]).round() as usize;
+        for _ in 0..share.max(1) {
+            // Draw a standardised feature vector from class c's model.
+            let x: Vec<f64> = (0..n)
+                .map(|j| model.mean[c][j] + model.var[c][j].sqrt() * rng.gaussian())
+                .collect();
+            // Per-class score contributions in anytime order.
+            let mut scores = asvm.svm.bias.clone();
+            let full: Vec<f64> = (0..classes)
+                .map(|h| {
+                    asvm.svm.bias[h]
+                        + asvm.svm.weights[h].iter().zip(&x).map(|(w, v)| w * v).sum::<f64>()
+                })
+                .collect();
+            let full_class = argmax(&full);
+            let mut pi = 0;
+            for used in 0..=n {
+                if pi < ps.len() && ps[pi] == used {
+                    if argmax(&scores) == full_class {
+                        agree[pi] += 1;
+                    }
+                    pi += 1;
+                }
+                if used < n {
+                    let j = asvm.order[used];
+                    for (h, s) in scores.iter_mut().enumerate() {
+                        *s += asvm.svm.weights[h][j] * x[j];
+                    }
+                }
+            }
+            total += 1;
+        }
+    }
+    agree.iter().map(|&a| a as f64 / total.max(1) as f64).collect()
+}
+
+/// Expected *accuracy* as a function of the prefix length: coherent
+/// prefixes inherit the full model's accuracy; incoherent ones are right
+/// at roughly chance (the paper's Fig. 4 blue curve starts at 1/c).
+pub fn expected_accuracy(coherence: &[f64], full_accuracy: f64, classes: usize) -> Vec<f64> {
+    coherence
+        .iter()
+        .map(|&q| q * full_accuracy + (1.0 - q) / classes as f64)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::svm::train::{train_ovr, TrainConfig};
+
+    #[test]
+    fn symmetric_formula_limits() {
+        // All variance processed → certain coherence.
+        assert!((coherence_binary_symmetric(1.0, 0.0) - 1.0).abs() < 1e-9);
+        // Nothing processed → chance.
+        assert!((coherence_binary_symmetric(0.0, 1.0) - 0.5).abs() < 1e-9);
+        // Equal split: P = 3/4 for symmetric normals.
+        let p = coherence_binary_symmetric(1.0, 1.0);
+        assert!((p - 0.75).abs() < 1e-6, "p={p}");
+        // Monotone in processed share.
+        let lo = coherence_binary_symmetric(0.2, 0.8);
+        let hi = coherence_binary_symmetric(0.8, 0.2);
+        assert!(hi > lo);
+    }
+
+    #[test]
+    fn general_binary_reduces_to_symmetric() {
+        let a = coherence_binary(0.0, 2.0, 0.0, 1.0);
+        let b = coherence_binary_symmetric(2.0, 1.0);
+        assert!((a - b).abs() < 1e-6, "a={a} b={b}");
+    }
+
+    #[test]
+    fn general_binary_against_monte_carlo() {
+        let mut rng = Rng::new(123);
+        for &(mu_s, var_s, mu_r, var_r) in
+            &[(0.5, 1.0, -0.2, 0.5), (-1.0, 0.3, 0.4, 2.0), (0.0, 1.0, 1.0, 1.0)]
+        {
+            let analytic = coherence_binary(mu_s, var_s, mu_r, var_r);
+            let n = 200_000;
+            let mut agree = 0;
+            for _ in 0..n {
+                let s = mu_s + var_s.sqrt() * rng.gaussian();
+                let r = mu_r + var_r.sqrt() * rng.gaussian();
+                if (s > 0.0) == (s + r > 0.0) {
+                    agree += 1;
+                }
+            }
+            let mc = agree as f64 / n as f64;
+            assert!(
+                (analytic - mc).abs() < 5e-3,
+                "analytic={analytic} mc={mc} case=({mu_s},{var_s},{mu_r},{var_r})"
+            );
+        }
+    }
+
+    #[test]
+    fn term_moments_prefix_residual_partition() {
+        let weights = vec![2.0, -1.0, 0.5];
+        let rows = vec![vec![1.0, 0.0, 2.0], vec![-1.0, 1.0, 0.0], vec![0.0, -1.0, 1.0]];
+        let order = vec![0, 2, 1];
+        let tm = TermMoments::estimate(&weights, &rows, &order);
+        let (ms, vs) = tm.prefix(2);
+        let (mr, vr) = tm.residual(2);
+        let (mt, vt) = tm.prefix(3);
+        assert!((ms + mr - mt).abs() < 1e-12);
+        assert!((vs + vr - vt).abs() < 1e-12);
+    }
+
+    /// The model-based multi-class curve should track the empirical curve
+    /// on data drawn from the same distribution.
+    #[test]
+    fn model_curve_tracks_empirical_curve() {
+        // Build a 4-class planted problem (as in anytime tests).
+        let mut rng = Rng::new(7);
+        let n = 30;
+        let mut dirs = vec![vec![0.0; n]; 4];
+        let mut drng = Rng::new(99);
+        for d in dirs.iter_mut() {
+            for (j, v) in d.iter_mut().enumerate() {
+                *v = drng.gaussian() * 0.85f64.powi(j as i32);
+            }
+        }
+        let mut rows = Vec::new();
+        let mut labels = Vec::new();
+        for c in 0..4 {
+            for _ in 0..150 {
+                rows.push(
+                    (0..n).map(|j| dirs[c][j] * 2.0 + rng.gaussian()).collect::<Vec<f64>>(),
+                );
+                labels.push(c);
+            }
+        }
+        let svm = train_ovr(&rows, &labels, 4, &TrainConfig::default());
+        let asvm = AnytimeSvm::by_coefficient_magnitude(svm);
+        let scaled: Vec<Vec<f64>> = rows.iter().map(|r| asvm.svm.scaler.apply(r)).collect();
+        let model = ClassFeatureModel::fit(&scaled, &labels, 4);
+        let ps = [0usize, 5, 10, 20, 30];
+        let expected = coherence_curve_model(&asvm, &model, &ps, 4000, 5);
+        let measured = asvm.coherence_curve(&rows, &ps);
+        for (i, &p) in ps.iter().enumerate() {
+            assert!(
+                (expected[i] - measured[i]).abs() < 0.12,
+                "p={p}: expected={} measured={}",
+                expected[i],
+                measured[i]
+            );
+        }
+        // And the curve must rise to 1 at p = n.
+        assert!((expected[4] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn expected_accuracy_interpolates_chance_to_ceiling() {
+        let acc = expected_accuracy(&[1.0 / 6.0, 0.5, 1.0], 0.88, 6);
+        assert!(acc[0] < 0.30);
+        assert!((acc[2] - 0.88).abs() < 1e-12);
+        assert!(acc[0] < acc[1] && acc[1] < acc[2]);
+    }
+}

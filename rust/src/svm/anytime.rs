@@ -1,0 +1,222 @@
+//! Anytime support-vector machines (§3.2).
+//!
+//! The classification `wᵢ·x = Σⱼ wᵢⱼxⱼ` is computed incrementally over a
+//! feature *prefix*: features are processed in decreasing aggregate
+//! coefficient magnitude — the order Eq. 6 suggests, since features with
+//! small `cⱼ` contribute little to the residual `R` that could flip the
+//! argmax — caching partial per-class scores so that each additional
+//! feature is one multiply-add per class plus the feature's extraction
+//! cost. Stopping after `p` features yields exactly the paper's
+//! approximate classification (Eq. 2).
+
+use crate::svm::model::{argmax, OvrSvm};
+
+/// An OvR SVM plus the anytime processing order.
+#[derive(Clone, Debug)]
+pub struct AnytimeSvm {
+    pub svm: OvrSvm,
+    /// Feature indices in processing order (most important first).
+    pub order: Vec<usize>,
+}
+
+impl AnytimeSvm {
+    /// Order features by `Σ_c |w_cj|` descending — the magnitude ordering
+    /// §3.2 derives and §5.1 validates.
+    pub fn by_coefficient_magnitude(svm: OvrSvm) -> AnytimeSvm {
+        let n = svm.features;
+        let mut idx: Vec<usize> = (0..n).collect();
+        let mag: Vec<f64> = (0..n)
+            .map(|j| svm.weights.iter().map(|w| w[j].abs()).sum())
+            .collect();
+        idx.sort_by(|&a, &b| mag[b].partial_cmp(&mag[a]).unwrap());
+        AnytimeSvm { svm, order: idx }
+    }
+
+    /// A deliberately bad (ascending-magnitude) order, used by the
+    /// ablation bench to confirm the ordering matters.
+    pub fn by_reverse_magnitude(svm: OvrSvm) -> AnytimeSvm {
+        let mut a = AnytimeSvm::by_coefficient_magnitude(svm);
+        a.order.reverse();
+        a
+    }
+
+    /// Start a classification round: scores begin at the biases.
+    pub fn begin(&self) -> ScoreState {
+        ScoreState { scores: self.svm.bias.clone(), used: 0 }
+    }
+
+    /// Fold the next feature (in anytime order) into the partial scores.
+    /// `raw` is the full raw feature vector (extraction of the single
+    /// feature is the caller's energy-accounted step).
+    pub fn add_feature(&self, state: &mut ScoreState, raw: &[f64]) {
+        let j = self.order[state.used];
+        let xj = self.svm.scaler.apply_one(j, raw[j]);
+        for (c, s) in state.scores.iter_mut().enumerate() {
+            *s += self.svm.weights[c][j] * xj;
+        }
+        state.used += 1;
+    }
+
+    /// Classification from the current partial scores (Eq. 9 argmax).
+    pub fn classify(&self, state: &ScoreState) -> usize {
+        argmax(&state.scores)
+    }
+
+    /// Convenience: classification using exactly `p` features.
+    pub fn classify_with(&self, raw: &[f64], p: usize) -> usize {
+        let mut st = self.begin();
+        for _ in 0..p.min(self.order.len()) {
+            self.add_feature(&mut st, raw);
+        }
+        self.classify(&st)
+    }
+
+    /// Coherence of prefix classifications with the full classification,
+    /// measured over a dataset: `out[p] = P(class_p == class_n)` (§3.2's
+    /// empirical counterpart, plotted in Fig. 4).
+    pub fn coherence_curve(&self, rows: &[Vec<f64>], ps: &[usize]) -> Vec<f64> {
+        let mut agree = vec![0usize; ps.len()];
+        for raw in rows {
+            let full = self.svm.classify(raw);
+            let mut st = self.begin();
+            let mut pi = 0;
+            for used in 0..=self.order.len() {
+                if pi < ps.len() && ps[pi] == used {
+                    if self.classify(&st) == full {
+                        agree[pi] += 1;
+                    }
+                    pi += 1;
+                }
+                if used < self.order.len() {
+                    self.add_feature(&mut st, raw);
+                }
+            }
+        }
+        agree.iter().map(|&a| a as f64 / rows.len().max(1) as f64).collect()
+    }
+
+    /// Accuracy against labels for each prefix length in `ps` (Fig. 4's
+    /// "measured accuracy").
+    pub fn accuracy_curve(&self, rows: &[Vec<f64>], labels: &[usize], ps: &[usize]) -> Vec<f64> {
+        let mut correct = vec![0usize; ps.len()];
+        for (raw, &label) in rows.iter().zip(labels) {
+            let mut st = self.begin();
+            let mut pi = 0;
+            for used in 0..=self.order.len() {
+                if pi < ps.len() && ps[pi] == used {
+                    if self.classify(&st) == label {
+                        correct[pi] += 1;
+                    }
+                    pi += 1;
+                }
+                if used < self.order.len() {
+                    self.add_feature(&mut st, raw);
+                }
+            }
+        }
+        correct.iter().map(|&a| a as f64 / rows.len().max(1) as f64).collect()
+    }
+}
+
+/// Cached partial per-class scores (the volatile round state of §4.3 —
+/// small enough that *no* persistent state is needed).
+#[derive(Clone, Debug)]
+pub struct ScoreState {
+    pub scores: Vec<f64>,
+    /// Features folded in so far.
+    pub used: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::svm::train::{train_ovr, TrainConfig};
+    use crate::util::rng::Rng;
+
+    /// 4-class problem with planted importance decay: feature j carries
+    /// signal ∝ decay^j.
+    fn planted(n_features: usize, per_class: usize, seed: u64) -> (Vec<Vec<f64>>, Vec<usize>) {
+        let mut rng = Rng::new(seed);
+        let classes = 4;
+        // Random unit directions per class, scaled by importance decay.
+        let mut dirs = vec![vec![0.0; n_features]; classes];
+        let mut drng = Rng::new(999);
+        for d in dirs.iter_mut() {
+            for (j, v) in d.iter_mut().enumerate() {
+                *v = drng.gaussian() * 0.85f64.powi(j as i32);
+            }
+        }
+        let mut rows = Vec::new();
+        let mut labels = Vec::new();
+        for c in 0..classes {
+            for _ in 0..per_class {
+                let x: Vec<f64> = (0..n_features)
+                    .map(|j| dirs[c][j] * 2.0 + rng.gaussian())
+                    .collect();
+                rows.push(x);
+                labels.push(c);
+            }
+        }
+        (rows, labels)
+    }
+
+    fn trained() -> (AnytimeSvm, Vec<Vec<f64>>, Vec<usize>) {
+        let (rows, labels) = planted(40, 100, 11);
+        let svm = train_ovr(&rows, &labels, 4, &TrainConfig::default());
+        let (test_rows, test_labels) = planted(40, 60, 12);
+        (AnytimeSvm::by_coefficient_magnitude(svm), test_rows, test_labels)
+    }
+
+    #[test]
+    fn full_prefix_equals_direct_classification() {
+        let (asvm, rows, _) = trained();
+        for raw in rows.iter().take(50) {
+            assert_eq!(asvm.classify_with(raw, 40), asvm.svm.classify(raw));
+        }
+    }
+
+    #[test]
+    fn incremental_matches_subset_classification() {
+        let (asvm, rows, _) = trained();
+        for raw in rows.iter().take(20) {
+            for p in [1usize, 5, 17, 33] {
+                let inc = asvm.classify_with(raw, p);
+                let direct = asvm.svm.classify_subset(raw, &asvm.order[..p]);
+                assert_eq!(inc, direct, "p={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn coherence_grows_with_prefix_and_hits_one() {
+        let (asvm, rows, _) = trained();
+        let ps = [0usize, 5, 10, 20, 40];
+        let curve = asvm.coherence_curve(&rows, &ps);
+        assert!((curve[4] - 1.0).abs() < 1e-12, "full prefix must be coherent");
+        assert!(curve[3] > curve[1], "coherence should grow: {curve:?}");
+        assert!(curve[1] > curve[0], "coherence should grow: {curve:?}");
+    }
+
+    #[test]
+    fn magnitude_order_dominates_reverse_order() {
+        let (asvm, rows, _) = trained();
+        let rev = AnytimeSvm::by_reverse_magnitude(asvm.svm.clone());
+        let ps = [10usize];
+        let good = asvm.coherence_curve(&rows, &ps)[0];
+        let bad = rev.coherence_curve(&rows, &ps)[0];
+        assert!(
+            good > bad + 0.1,
+            "magnitude order {good} should beat reverse {bad}"
+        );
+    }
+
+    #[test]
+    fn accuracy_curve_saturates_at_full_model_accuracy() {
+        let (asvm, rows, labels) = trained();
+        let ps = [0usize, 10, 40];
+        let acc = asvm.accuracy_curve(&rows, &labels, &ps);
+        let full = asvm.svm.accuracy(&rows, &labels);
+        assert!((acc[2] - full).abs() < 1e-12);
+        assert!(acc[0] < acc[2], "chance start below ceiling: {acc:?}");
+    }
+}

@@ -1,0 +1,21 @@
+//! Support-vector machines and the anytime variation of §3.
+//!
+//! * [`model`] — one-versus-rest linear SVM (the hardware-friendly
+//!   formulation of Anguita et al. the paper builds on), with f32 and Q15
+//!   fixed-point scoring paths (the MCU has no FPU, §4.3).
+//! * [`train`] — Pegasos-style stochastic sub-gradient training with
+//!   feature standardisation (the offline phase of §4.2).
+//! * [`anytime`] — incremental prefix classification: features are
+//!   processed in decreasing hyperplane-coefficient magnitude (the
+//!   ordering Eq. 6 suggests), caching partial scores so accuracy can be
+//!   refined as energy allows.
+//! * [`analysis`] — the Eq. 7 accuracy model: the probability that a
+//!   classification with `p < n` features is coherent with the
+//!   full-feature one, closed-form for the binary case and fitted
+//!   Monte-Carlo for the multi-class case, both "computed numerically"
+//!   as the paper prescribes.
+
+pub mod analysis;
+pub mod anytime;
+pub mod model;
+pub mod train;

@@ -1,0 +1,285 @@
+//! One-versus-rest linear SVM.
+//!
+//! The classifier of Anguita et al. [4] as the paper uses it: `c`
+//! hyperplanes over `n` features restricted to the linearly separable
+//! subset (no kernels, §4.2). Scoring is a plain inner product, which is
+//! what makes the anytime prefix decomposition of §3.2 possible.
+
+use crate::util::fixed::{Acc, Q15};
+
+/// Feature standardiser fitted on the training set (mean/std per
+/// feature). The MCU applies it as part of feature extraction.
+#[derive(Clone, Debug)]
+pub struct Scaler {
+    pub mean: Vec<f64>,
+    pub std: Vec<f64>,
+}
+
+impl Scaler {
+    /// Fit on row-major data (`rows × n`).
+    pub fn fit(rows: &[Vec<f64>]) -> Scaler {
+        assert!(!rows.is_empty());
+        let n = rows[0].len();
+        let m = rows.len() as f64;
+        let mut mean = vec![0.0; n];
+        for r in rows {
+            for (j, &v) in r.iter().enumerate() {
+                mean[j] += v;
+            }
+        }
+        for mj in &mut mean {
+            *mj /= m;
+        }
+        let mut std = vec![0.0; n];
+        for r in rows {
+            for (j, &v) in r.iter().enumerate() {
+                std[j] += (v - mean[j]) * (v - mean[j]);
+            }
+        }
+        for sj in &mut std {
+            *sj = (*sj / m).sqrt();
+            if *sj < 1e-9 {
+                *sj = 1.0; // constant feature: leave centred at zero
+            }
+        }
+        Scaler { mean, std }
+    }
+
+    pub fn apply(&self, x: &[f64]) -> Vec<f64> {
+        x.iter()
+            .enumerate()
+            .map(|(j, &v)| (v - self.mean[j]) / self.std[j])
+            .collect()
+    }
+
+    pub fn apply_one(&self, j: usize, v: f64) -> f64 {
+        (v - self.mean[j]) / self.std[j]
+    }
+}
+
+/// OvR linear SVM over standardised features.
+#[derive(Clone, Debug)]
+pub struct OvrSvm {
+    pub classes: usize,
+    pub features: usize,
+    /// `weights[c][j]`: hyperplane coefficients.
+    pub weights: Vec<Vec<f64>>,
+    /// Per-class bias.
+    pub bias: Vec<f64>,
+    /// Standardiser applied to raw features before scoring.
+    pub scaler: Scaler,
+}
+
+impl OvrSvm {
+    /// Per-class decision scores for a *raw* (unscaled) feature vector.
+    pub fn scores(&self, raw: &[f64]) -> Vec<f64> {
+        let x = self.scaler.apply(raw);
+        self.scores_scaled(&x)
+    }
+
+    /// Per-class decision scores for an already-standardised vector.
+    pub fn scores_scaled(&self, x: &[f64]) -> Vec<f64> {
+        self.weights
+            .iter()
+            .zip(self.bias.iter())
+            .map(|(w, b)| b + w.iter().zip(x.iter()).map(|(wi, xi)| wi * xi).sum::<f64>())
+            .collect()
+    }
+
+    /// OvR classification: class whose hyperplane scores highest (Eq. 9).
+    pub fn classify(&self, raw: &[f64]) -> usize {
+        argmax(&self.scores(raw))
+    }
+
+    /// Classification using only the features listed in `subset`
+    /// (Eq. 2's approximation; remaining features contribute zero, i.e.
+    /// their standardised mean).
+    pub fn classify_subset(&self, raw: &[f64], subset: &[usize]) -> usize {
+        let mut scores = self.bias.clone();
+        for &j in subset {
+            let xj = self.scaler.apply_one(j, raw[j]);
+            for (c, s) in scores.iter_mut().enumerate() {
+                *s += self.weights[c][j] * xj;
+            }
+        }
+        argmax(&scores)
+    }
+
+    /// Accuracy over a labelled set.
+    pub fn accuracy(&self, rows: &[Vec<f64>], labels: &[usize]) -> f64 {
+        assert_eq!(rows.len(), labels.len());
+        if rows.is_empty() {
+            return 0.0;
+        }
+        let correct = rows
+            .iter()
+            .zip(labels)
+            .filter(|(r, &l)| self.classify(r) == l)
+            .count();
+        correct as f64 / rows.len() as f64
+    }
+}
+
+/// Index of the maximum (first wins ties) — Eq. 9.
+pub fn argmax(xs: &[f64]) -> usize {
+    let mut best = 0;
+    for (i, &v) in xs.iter().enumerate().skip(1) {
+        if v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Q15 fixed-point twin of [`OvrSvm`] — what the MSP430 firmware runs
+/// (§4.3). Weights share one scale; scores accumulate exactly in Q30, so
+/// the argmax is comparable across classes without renormalising.
+#[derive(Clone, Debug)]
+pub struct FixedOvrSvm {
+    pub classes: usize,
+    pub features: usize,
+    pub weights: Vec<Vec<Q15>>,
+    pub bias: Vec<Acc>,
+    /// f64 scale such that `w_f64 = w_q15.to_f64() * scale`.
+    pub weight_scale: f64,
+    /// Input quantisation scale (features mapped into [-1,1) by this).
+    pub input_scale: f64,
+}
+
+impl FixedOvrSvm {
+    /// Quantise a trained f64 model. `input_scale` should cover the
+    /// standardised feature range (±4 σ covers essentially everything).
+    pub fn quantise(svm: &OvrSvm, input_scale: f64) -> FixedOvrSvm {
+        let wmax = svm
+            .weights
+            .iter()
+            .flatten()
+            .fold(0.0f64, |m, w| m.max(w.abs()))
+            .max(1e-12);
+        let weight_scale = wmax * 1.0001;
+        let weights: Vec<Vec<Q15>> = svm
+            .weights
+            .iter()
+            .map(|row| row.iter().map(|&w| Q15::from_f64(w / weight_scale)).collect())
+            .collect();
+        // Bias mapped into the Q30 accumulator domain:
+        // acc_f64 = (w/wscale)·(x/xscale) summed ⇒ bias/(wscale·xscale).
+        let bias: Vec<Acc> = svm
+            .bias
+            .iter()
+            .map(|&b| {
+                let v = b / (weight_scale * input_scale);
+                Acc((v * (1u64 << 30) as f64) as i64)
+            })
+            .collect();
+        FixedOvrSvm {
+            classes: svm.classes,
+            features: svm.features,
+            weights,
+            bias,
+            weight_scale,
+            input_scale,
+        }
+    }
+
+    /// Classify a standardised f64 vector through the Q15 path.
+    pub fn classify_scaled(&self, x: &[f64]) -> usize {
+        let xq: Vec<Q15> =
+            x.iter().map(|&v| Q15::from_f64(v / self.input_scale)).collect();
+        let mut best = 0usize;
+        let mut best_acc = Acc(i64::MIN);
+        for c in 0..self.classes {
+            let mut acc = self.bias[c];
+            for (w, q) in self.weights[c].iter().zip(xq.iter()) {
+                acc.mac(*w, *q);
+            }
+            if acc > best_acc {
+                best_acc = acc;
+                best = c;
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Hand-built 3-class model over 4 features.
+    fn toy() -> OvrSvm {
+        OvrSvm {
+            classes: 3,
+            features: 4,
+            weights: vec![
+                vec![1.0, 0.0, 0.0, 0.1],
+                vec![0.0, 1.0, 0.0, -0.1],
+                vec![0.0, 0.0, 1.0, 0.0],
+            ],
+            bias: vec![0.0, 0.0, 0.0],
+            scaler: Scaler { mean: vec![0.0; 4], std: vec![1.0; 4] },
+        }
+    }
+
+    #[test]
+    fn classify_picks_matching_axis() {
+        let svm = toy();
+        assert_eq!(svm.classify(&[2.0, 0.1, 0.1, 0.0]), 0);
+        assert_eq!(svm.classify(&[0.1, 2.0, 0.1, 0.0]), 1);
+        assert_eq!(svm.classify(&[0.1, 0.1, 2.0, 0.0]), 2);
+    }
+
+    #[test]
+    fn subset_classification_matches_prefix_formula() {
+        let svm = toy();
+        // Using only feature 1, class 1 wins when x1 > 0.
+        assert_eq!(svm.classify_subset(&[5.0, 1.0, 0.0, 0.0], &[1]), 1);
+        // With all features it flips to class 0.
+        assert_eq!(svm.classify(&[5.0, 1.0, 0.0, 0.0]), 0);
+    }
+
+    #[test]
+    fn scaler_fit_and_apply() {
+        let rows = vec![vec![1.0, 10.0], vec![3.0, 10.0], vec![5.0, 10.0]];
+        let s = Scaler::fit(&rows);
+        assert!((s.mean[0] - 3.0).abs() < 1e-12);
+        let x = s.apply(&[3.0, 10.0]);
+        assert!(x[0].abs() < 1e-12);
+        assert!(x[1].abs() < 1e-12); // constant feature centred
+        // Std of col 0 is sqrt(8/3).
+        let want = (8.0f64 / 3.0).sqrt();
+        assert!((s.std[0] - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn accuracy_counts_matches() {
+        let svm = toy();
+        let rows = vec![
+            vec![2.0, 0.0, 0.0, 0.0],
+            vec![0.0, 2.0, 0.0, 0.0],
+            vec![0.0, 0.0, 2.0, 0.0],
+            vec![2.0, 0.0, 0.0, 0.0],
+        ];
+        let labels = vec![0, 1, 2, 1]; // last is wrong on purpose
+        assert!((svm.accuracy(&rows, &labels) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fixed_point_agrees_with_float_on_clear_margins() {
+        let svm = toy();
+        let fx = FixedOvrSvm::quantise(&svm, 8.0);
+        let mut rng = crate::util::rng::Rng::new(77);
+        let mut agree = 0;
+        let total = 500;
+        for _ in 0..total {
+            let x: Vec<f64> = (0..4).map(|_| rng.range(-3.0, 3.0)).collect();
+            let f = argmax(&svm.scores_scaled(&x));
+            let q = fx.classify_scaled(&x);
+            if f == q {
+                agree += 1;
+            }
+        }
+        // Quantisation flips only near-tie samples.
+        assert!(agree as f64 / total as f64 > 0.97, "agree={agree}/{total}");
+    }
+}

@@ -1,0 +1,183 @@
+//! Pegasos-style training for the OvR linear SVM.
+//!
+//! The paper trains offline with scikit's SVM (§4.2); here the offline
+//! phase is a deterministic stochastic sub-gradient solver for the same
+//! primal objective, `λ/2·||w||² + mean(hinge)`, one binary problem per
+//! class. Training runs in milliseconds for the corpus sizes the
+//! experiments use and is exactly reproducible from the seed.
+
+use crate::svm::model::{OvrSvm, Scaler};
+use crate::util::rng::Rng;
+
+/// Training hyper-parameters.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// Regularisation λ of the Pegasos objective.
+    pub lambda: f64,
+    /// Number of epochs over the data.
+    pub epochs: usize,
+    /// RNG seed for sample order.
+    pub seed: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> TrainConfig {
+        TrainConfig { lambda: 3e-3, epochs: 30, seed: 0x5EED }
+    }
+}
+
+/// Train a one-versus-rest linear SVM on raw (unscaled) features.
+pub fn train_ovr(
+    rows: &[Vec<f64>],
+    labels: &[usize],
+    classes: usize,
+    cfg: &TrainConfig,
+) -> OvrSvm {
+    assert_eq!(rows.len(), labels.len());
+    assert!(!rows.is_empty());
+    let n = rows[0].len();
+    let scaler = Scaler::fit(rows);
+    let data: Vec<Vec<f64>> = rows.iter().map(|r| scaler.apply(r)).collect();
+
+    let mut weights = vec![vec![0.0; n]; classes];
+    let mut bias = vec![0.0; classes];
+    for c in 0..classes {
+        let y: Vec<f64> =
+            labels.iter().map(|&l| if l == c { 1.0 } else { -1.0 }).collect();
+        let (mut w, mut b) = pegasos(&data, &y, cfg, c as u64);
+        // Normalise the hyperplane to unit ||w||: OvR argmax compares
+        // scores across independently-trained binary problems, which is
+        // only meaningful when each score is a geometric margin.
+        let norm = w.iter().map(|x| x * x).sum::<f64>().sqrt().max(1e-12);
+        for wj in w.iter_mut() {
+            *wj /= norm;
+        }
+        b /= norm;
+        weights[c] = w;
+        bias[c] = b;
+    }
+    OvrSvm { classes, features: n, weights, bias, scaler }
+}
+
+/// Pegasos primal solver for one binary problem. The bias is trained as
+/// an augmented, regularised weight over a constant pseudo-feature — the
+/// unregularised-bias variant diverges under Pegasos' aggressive early
+/// step sizes (eta = 1/(λt)).
+fn pegasos(data: &[Vec<f64>], y: &[f64], cfg: &TrainConfig, class_tag: u64) -> (Vec<f64>, f64) {
+    let m = data.len();
+    let n = data[0].len();
+    let mut rng = Rng::new(cfg.seed ^ class_tag.wrapping_mul(0x9E3779B97F4A7C15));
+    let mut w = vec![0.0; n];
+    let mut b = 0.0;
+    let mut t = 0u64;
+    let mut order: Vec<usize> = (0..m).collect();
+    // Iterate averaging over the second half of training: averaged
+    // Pegasos converges O(1/T) and yields far better-calibrated scores,
+    // which the OvR argmax depends on.
+    let mut w_avg = vec![0.0; n];
+    let mut b_avg = 0.0;
+    let mut avg_count = 0u64;
+    let total_iters = (cfg.epochs * m) as u64;
+    for _ in 0..cfg.epochs {
+        rng.shuffle(&mut order);
+        for &i in &order {
+            t += 1;
+            let eta = 1.0 / (cfg.lambda * t as f64);
+            let margin =
+                y[i] * (b + w.iter().zip(&data[i]).map(|(wj, xj)| wj * xj).sum::<f64>());
+            // Regularisation shrink (bias included: augmented feature).
+            let shrink = 1.0 - eta * cfg.lambda;
+            for wj in w.iter_mut() {
+                *wj *= shrink;
+            }
+            b *= shrink;
+            if margin < 1.0 {
+                for (wj, xj) in w.iter_mut().zip(&data[i]) {
+                    *wj += eta * y[i] * xj;
+                }
+                b += eta * y[i]; // constant pseudo-feature value 1
+            }
+            if t > total_iters / 2 {
+                for (aj, wj) in w_avg.iter_mut().zip(&w) {
+                    *aj += wj;
+                }
+                b_avg += b;
+                avg_count += 1;
+            }
+        }
+    }
+    if avg_count > 0 {
+        for aj in w_avg.iter_mut() {
+            *aj /= avg_count as f64;
+        }
+        b_avg /= avg_count as f64;
+        (w_avg, b_avg)
+    } else {
+        (w, b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Three Gaussian blobs in 5-D (two informative dims, three noise).
+    fn blobs(n_per: usize, seed: u64) -> (Vec<Vec<f64>>, Vec<usize>) {
+        let mut rng = Rng::new(seed);
+        let centers = [[3.0, 0.0], [-3.0, 3.0], [0.0, -3.0]];
+        let mut rows = Vec::new();
+        let mut labels = Vec::new();
+        for (c, center) in centers.iter().enumerate() {
+            for _ in 0..n_per {
+                let mut x = vec![
+                    center[0] + rng.gaussian() * 0.8,
+                    center[1] + rng.gaussian() * 0.8,
+                ];
+                for _ in 0..3 {
+                    x.push(rng.gaussian()); // pure noise dims
+                }
+                rows.push(x);
+                labels.push(c);
+            }
+        }
+        (rows, labels)
+    }
+
+    #[test]
+    fn separable_blobs_reach_high_accuracy() {
+        let (rows, labels) = blobs(120, 1);
+        let svm = train_ovr(&rows, &labels, 3, &TrainConfig::default());
+        let acc = svm.accuracy(&rows, &labels);
+        assert!(acc > 0.95, "train accuracy {acc}");
+        // Held-out set from a different seed.
+        let (test_rows, test_labels) = blobs(60, 2);
+        let test_acc = svm.accuracy(&test_rows, &test_labels);
+        assert!(test_acc > 0.93, "test accuracy {test_acc}");
+    }
+
+    #[test]
+    fn informative_features_get_larger_weights() {
+        let (rows, labels) = blobs(150, 3);
+        let svm = train_ovr(&rows, &labels, 3, &TrainConfig::default());
+        // Aggregate |w| per feature across classes.
+        let mag = |j: usize| -> f64 {
+            (0..3).map(|c| svm.weights[c][j].abs()).sum()
+        };
+        let informative = mag(0) + mag(1);
+        let noise = mag(2) + mag(3) + mag(4);
+        assert!(
+            informative > 3.0 * noise,
+            "informative={informative} noise={noise}"
+        );
+    }
+
+    #[test]
+    fn training_is_deterministic() {
+        let (rows, labels) = blobs(50, 4);
+        let a = train_ovr(&rows, &labels, 3, &TrainConfig::default());
+        let b = train_ovr(&rows, &labels, 3, &TrainConfig::default());
+        assert_eq!(a.weights, b.weights);
+        assert_eq!(a.bias, b.bias);
+    }
+}

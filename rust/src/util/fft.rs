@@ -1,0 +1,152 @@
+//! Radix-2 FFT for the Rust-side (MCU-faithful) feature extractor.
+//!
+//! The paper's HAR pipeline computes FFT-derived features (band energies,
+//! spectral centroid) on-device; this module is the Rust twin of the
+//! DFT-as-matmul Pallas kernel (`python/compile/kernels/features.py`).
+//! Iterative in-place Cooley-Tukey, power-of-two lengths only — windows in
+//! this codebase are 128 samples.
+
+use std::f64::consts::PI;
+
+/// In-place iterative radix-2 FFT over interleaved (re, im) pairs.
+///
+/// `re.len()` must be a power of two. Forward transform; no normalisation
+/// (matches numpy's convention).
+pub fn fft_inplace(re: &mut [f64], im: &mut [f64]) {
+    let n = re.len();
+    assert_eq!(n, im.len());
+    assert!(n.is_power_of_two(), "fft length must be a power of two");
+    if n <= 1 {
+        return;
+    }
+    // Bit-reversal permutation.
+    let mut j = 0usize;
+    for i in 1..n {
+        let mut bit = n >> 1;
+        while j & bit != 0 {
+            j ^= bit;
+            bit >>= 1;
+        }
+        j |= bit;
+        if i < j {
+            re.swap(i, j);
+            im.swap(i, j);
+        }
+    }
+    // Butterflies.
+    let mut len = 2;
+    while len <= n {
+        let ang = -2.0 * PI / len as f64;
+        let (wr, wi) = (ang.cos(), ang.sin());
+        let mut i = 0;
+        while i < n {
+            let (mut cr, mut ci) = (1.0f64, 0.0f64);
+            for k in 0..len / 2 {
+                let (ur, ui) = (re[i + k], im[i + k]);
+                let (vr, vi) = (
+                    re[i + k + len / 2] * cr - im[i + k + len / 2] * ci,
+                    re[i + k + len / 2] * ci + im[i + k + len / 2] * cr,
+                );
+                re[i + k] = ur + vr;
+                im[i + k] = ui + vi;
+                re[i + k + len / 2] = ur - vr;
+                im[i + k + len / 2] = ui - vi;
+                let ncr = cr * wr - ci * wi;
+                ci = cr * wi + ci * wr;
+                cr = ncr;
+            }
+            i += len;
+        }
+        len <<= 1;
+    }
+}
+
+/// Magnitude spectrum of a real signal: `|FFT(x)|` for bins `0..n/2+1`.
+pub fn magnitude_spectrum(x: &[f64]) -> Vec<f64> {
+    let n = x.len();
+    let mut re = x.to_vec();
+    let mut im = vec![0.0; n];
+    fft_inplace(&mut re, &mut im);
+    (0..=n / 2).map(|k| (re[k] * re[k] + im[k] * im[k]).sqrt()).collect()
+}
+
+/// Power spectral density estimate (periodogram, no window).
+pub fn power_spectrum(x: &[f64]) -> Vec<f64> {
+    let n = x.len() as f64;
+    magnitude_spectrum(x).iter().map(|m| m * m / n).collect()
+}
+
+/// Naive O(n^2) DFT used as a test oracle and as the exact twin of the
+/// DFT-matrix Pallas kernel.
+pub fn dft_naive(x: &[f64]) -> (Vec<f64>, Vec<f64>) {
+    let n = x.len();
+    let mut re = vec![0.0; n];
+    let mut im = vec![0.0; n];
+    for (k, (rk, ik)) in re.iter_mut().zip(im.iter_mut()).enumerate() {
+        for (j, &xj) in x.iter().enumerate() {
+            let ang = -2.0 * PI * (k * j) as f64 / n as f64;
+            *rk += xj * ang.cos();
+            *ik += xj * ang.sin();
+        }
+    }
+    (re, im)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fft_matches_naive_dft() {
+        let mut rng = crate::util::rng::Rng::new(3);
+        let x: Vec<f64> = (0..64).map(|_| rng.gaussian()).collect();
+        let (re_ref, im_ref) = dft_naive(&x);
+        let mut re = x.clone();
+        let mut im = vec![0.0; 64];
+        fft_inplace(&mut re, &mut im);
+        for k in 0..64 {
+            assert!((re[k] - re_ref[k]).abs() < 1e-9, "re[{k}]");
+            assert!((im[k] - im_ref[k]).abs() < 1e-9, "im[{k}]");
+        }
+    }
+
+    #[test]
+    fn pure_tone_peaks_at_its_bin() {
+        let n = 128;
+        let f = 10; // bin index
+        let x: Vec<f64> =
+            (0..n).map(|i| (2.0 * PI * f as f64 * i as f64 / n as f64).sin()).collect();
+        let mag = magnitude_spectrum(&x);
+        let peak = mag
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(peak, f);
+        assert!((mag[f] - n as f64 / 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn parseval_energy_identity() {
+        let mut rng = crate::util::rng::Rng::new(9);
+        let x: Vec<f64> = (0..128).map(|_| rng.gaussian()).collect();
+        let time_energy: f64 = x.iter().map(|v| v * v).sum();
+        let mut re = x.clone();
+        let mut im = vec![0.0; 128];
+        fft_inplace(&mut re, &mut im);
+        let freq_energy: f64 =
+            re.iter().zip(im.iter()).map(|(r, i)| r * r + i * i).sum::<f64>() / 128.0;
+        assert!((time_energy - freq_energy).abs() < 1e-8 * time_energy);
+    }
+
+    #[test]
+    fn dc_signal() {
+        let x = vec![3.0; 32];
+        let mag = magnitude_spectrum(&x);
+        assert!((mag[0] - 96.0).abs() < 1e-9);
+        for &m in &mag[1..] {
+            assert!(m.abs() < 1e-9);
+        }
+    }
+}

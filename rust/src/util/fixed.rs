@@ -1,0 +1,156 @@
+//! Q15 fixed-point arithmetic.
+//!
+//! The paper's prototype runs on an MSP430 with no FPU; both classification
+//! implementations use fixed point (§4.3). This module provides the
+//! MCU-faithful arithmetic so the simulated device computes *exactly* what
+//! the 16-bit hardware would, and tests can bound the Q15-vs-f32
+//! classification disagreement.
+//!
+//! Q15: value = raw / 2^15, range [-1, 1). Dot products accumulate in a
+//! 32-bit Q30 register exactly like the MSP430's hardware multiplier
+//! (MPY32) would, then renormalise once — matching the prototype's
+//! space-efficient inner loop.
+
+/// A Q15 fixed-point number (16-bit, 15 fractional bits).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub struct Q15(pub i16);
+
+pub const Q15_ONE_RAW: i32 = 1 << 15;
+
+impl Q15 {
+    pub const MAX: Q15 = Q15(i16::MAX);
+    pub const MIN: Q15 = Q15(i16::MIN);
+    pub const ZERO: Q15 = Q15(0);
+
+    /// Convert from f64, saturating to [-1, 1 - 2^-15].
+    pub fn from_f64(x: f64) -> Q15 {
+        let scaled = (x * Q15_ONE_RAW as f64).round();
+        Q15(scaled.clamp(i16::MIN as f64, i16::MAX as f64) as i16)
+    }
+
+    pub fn to_f64(self) -> f64 {
+        self.0 as f64 / Q15_ONE_RAW as f64
+    }
+
+    /// Saturating addition.
+    pub fn sat_add(self, other: Q15) -> Q15 {
+        Q15(self.0.saturating_add(other.0))
+    }
+
+    /// Saturating subtraction.
+    pub fn sat_sub(self, other: Q15) -> Q15 {
+        Q15(self.0.saturating_sub(other.0))
+    }
+
+    /// Q15 x Q15 -> Q15 with rounding, as the MSP430 MPY32 sequence does.
+    pub fn mul(self, other: Q15) -> Q15 {
+        let prod = self.0 as i32 * other.0 as i32; // Q30
+        let rounded = (prod + (1 << 14)) >> 15;
+        Q15(rounded.clamp(i16::MIN as i32, i16::MAX as i32) as i16)
+    }
+}
+
+/// A Q30 accumulator for long dot products (i64 backing register:
+/// the MSP430 prototype chains the 32-bit MAC through a software-extended
+/// 48-bit accumulator for n=140-length dot products; i64 is a superset).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Acc(pub i64);
+
+impl Acc {
+    pub const ZERO: Acc = Acc(0);
+
+    /// Multiply-accumulate: acc += a * b (Q30 product, exact).
+    #[inline]
+    pub fn mac(&mut self, a: Q15, b: Q15) {
+        self.0 += a.0 as i64 * b.0 as i64;
+    }
+
+    /// Collapse to Q15 with rounding and saturation.
+    pub fn to_q15(self) -> Q15 {
+        let rounded = (self.0 + (1 << 14)) >> 15;
+        Q15(rounded.clamp(i16::MIN as i64, i16::MAX as i64) as i16)
+    }
+
+    /// Exact value as f64 (Q30 scale).
+    pub fn to_f64(self) -> f64 {
+        self.0 as f64 / (Q15_ONE_RAW as f64 * Q15_ONE_RAW as f64)
+    }
+}
+
+/// Fixed-point dot product over Q15 slices, returning the exact Q30 sum.
+pub fn dot_q15(a: &[Q15], b: &[Q15]) -> Acc {
+    assert_eq!(a.len(), b.len());
+    let mut acc = Acc::ZERO;
+    for (x, y) in a.iter().zip(b.iter()) {
+        acc.mac(*x, *y);
+    }
+    acc
+}
+
+/// Quantise an f64 slice to Q15 with a shared scale factor so the largest
+/// magnitude maps near +-1. Returns (values, scale) with x ~= q.to_f64()*scale.
+pub fn quantise_slice(xs: &[f64]) -> (Vec<Q15>, f64) {
+    let maxab = xs.iter().fold(0.0f64, |m, x| m.max(x.abs()));
+    let scale = if maxab == 0.0 { 1.0 } else { maxab * 1.0001 };
+    (xs.iter().map(|x| Q15::from_f64(x / scale)).collect(), scale)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_within_lsb() {
+        for i in -100..=100 {
+            let x = i as f64 / 101.0;
+            let q = Q15::from_f64(x);
+            assert!((q.to_f64() - x).abs() <= 1.0 / Q15_ONE_RAW as f64, "x={x}");
+        }
+    }
+
+    #[test]
+    fn saturation() {
+        assert_eq!(Q15::from_f64(5.0), Q15::MAX);
+        assert_eq!(Q15::from_f64(-5.0), Q15::MIN);
+        assert_eq!(Q15::MAX.sat_add(Q15::MAX), Q15::MAX);
+        assert_eq!(Q15::MIN.sat_sub(Q15::MAX), Q15::MIN);
+    }
+
+    #[test]
+    fn mul_matches_float_within_lsb() {
+        let cases = [(0.5, 0.5), (0.25, -0.75), (-0.99, -0.99), (0.1, 0.3)];
+        for (a, b) in cases {
+            let q = Q15::from_f64(a).mul(Q15::from_f64(b));
+            assert!((q.to_f64() - a * b).abs() < 2.0 / Q15_ONE_RAW as f64, "{a}*{b}");
+        }
+    }
+
+    #[test]
+    fn dot_product_accuracy() {
+        let mut rng = crate::util::rng::Rng::new(21);
+        let a: Vec<f64> = (0..140).map(|_| rng.range(-0.08, 0.08)).collect();
+        let b: Vec<f64> = (0..140).map(|_| rng.range(-0.08, 0.08)).collect();
+        let qa: Vec<Q15> = a.iter().map(|&x| Q15::from_f64(x)).collect();
+        let qb: Vec<Q15> = b.iter().map(|&x| Q15::from_f64(x)).collect();
+        let exact: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        let got = dot_q15(&qa, &qb).to_f64();
+        // 140 products, each with ~2^-16 quantisation error on each operand.
+        assert!((got - exact).abs() < 1e-3, "got={got} exact={exact}");
+    }
+
+    #[test]
+    fn quantise_slice_preserves_ratios() {
+        let xs = [3.0, -1.5, 0.75, 6.0];
+        let (qs, scale) = quantise_slice(&xs);
+        for (q, x) in qs.iter().zip(&xs) {
+            assert!((q.to_f64() * scale - x).abs() < scale / 16384.0);
+        }
+    }
+
+    #[test]
+    fn acc_collapse_rounds() {
+        let mut acc = Acc::ZERO;
+        acc.mac(Q15::from_f64(0.5), Q15::from_f64(0.5));
+        assert!((acc.to_q15().to_f64() - 0.25).abs() < 1.0 / Q15_ONE_RAW as f64);
+    }
+}

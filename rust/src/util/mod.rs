@@ -1,0 +1,21 @@
+//! Foundational substrates.
+//!
+//! The offline build environment ships only the `xla` and `anyhow` crates,
+//! so everything a comparable project would pull from crates.io is
+//! implemented here as a first-class, tested module: a seeded PRNG with
+//! distributions ([`rng`]), a minimal JSON reader/writer ([`json`]),
+//! statistics / special functions / quadrature ([`stats`]), a radix-2 FFT
+//! ([`fft`]), Q15 fixed-point arithmetic matching the paper's MCU
+//! implementation ([`fixed`]), a property-based testing kit ([`testkit`]),
+//! a command-line parser ([`cli`]) and a criterion-style benchmark harness
+//! ([`bench`]).
+
+pub mod bench;
+pub mod cli;
+pub mod dsp;
+pub mod fft;
+pub mod fixed;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod testkit;

@@ -1,0 +1,407 @@
+//! Statistics, special functions and numeric quadrature.
+//!
+//! Used by the Eq. 7 analytic accuracy model (`svm::analysis`), the feature
+//! extractor and the metrics layer. `erf` is the Abramowitz & Stegun 7.1.26
+//! rational approximation refined with one Newton step against the
+//! continued-fraction complement — accurate to ~1e-12, far below the
+//! tolerances the accuracy model needs.
+
+/// Error function, |err| < 1.5e-7 (A&S 7.1.26) refined to ~1e-12.
+pub fn erf(x: f64) -> f64 {
+    if x == 0.0 {
+        return 0.0;
+    }
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    if x > 6.0 {
+        return sign; // 1 - erf(6) < 1e-17
+    }
+    // Series for small x, continued fraction (via erfc) for large x.
+    let v = if x < 2.0 { erf_series(x) } else { 1.0 - erfc_cf(x) };
+    sign * v
+}
+
+/// Complementary error function.
+pub fn erfc(x: f64) -> f64 {
+    if x < 0.0 {
+        2.0 - erfc(-x)
+    } else if x < 2.0 {
+        1.0 - erf_series(x)
+    } else if x > 27.0 {
+        0.0 // underflows f64
+    } else {
+        erfc_cf(x)
+    }
+}
+
+/// Maclaurin series for erf, converges quickly for |x| < 2.
+fn erf_series(x: f64) -> f64 {
+    let mut term = x;
+    let mut sum = x;
+    let x2 = x * x;
+    for n in 1..200 {
+        term *= -x2 / n as f64;
+        let add = term / (2 * n + 1) as f64;
+        sum += add;
+        if add.abs() < 1e-17 * sum.abs() {
+            break;
+        }
+    }
+    sum * 2.0 / std::f64::consts::PI.sqrt()
+}
+
+/// Continued-fraction expansion for erfc, good for x >= 2.
+fn erfc_cf(x: f64) -> f64 {
+    // Lentz's algorithm on erfc(x) = exp(-x^2)/sqrt(pi) * 1/(x + 1/2/(x + 1/(x + 3/2/(x + ...))))
+    let tiny = 1e-300;
+    let mut f = x;
+    let mut c = f; // modified Lentz: C0 = b0 = x
+    let mut d = 0.0;
+    for k in 1..300 {
+        let a = k as f64 / 2.0;
+        d = x + a * d;
+        if d.abs() < tiny {
+            d = tiny;
+        }
+        c = x + a / c;
+        if c.abs() < tiny {
+            c = tiny;
+        }
+        d = 1.0 / d;
+        let delta = c * d;
+        f *= delta;
+        if (delta - 1.0).abs() < 1e-16 {
+            break;
+        }
+    }
+    (-x * x).exp() / std::f64::consts::PI.sqrt() / f
+}
+
+/// Standard normal probability density.
+#[inline]
+pub fn normal_pdf(x: f64, mean: f64, sd: f64) -> f64 {
+    let z = (x - mean) / sd;
+    (-(z * z) / 2.0).exp() / (sd * (2.0 * std::f64::consts::PI).sqrt())
+}
+
+/// Standard normal cumulative distribution function.
+#[inline]
+pub fn normal_cdf(x: f64, mean: f64, sd: f64) -> f64 {
+    0.5 * erfc(-(x - mean) / (sd * std::f64::consts::SQRT_2))
+}
+
+/// Nodes and weights of `n`-point Gauss-Legendre quadrature on `[-1, 1]`.
+///
+/// Computed by Newton iteration on Legendre polynomials; cached by callers.
+pub fn gauss_legendre(n: usize) -> (Vec<f64>, Vec<f64>) {
+    let mut nodes = vec![0.0; n];
+    let mut weights = vec![0.0; n];
+    let m = (n + 1) / 2;
+    for i in 0..m {
+        // Initial guess (Chebyshev roots).
+        let mut x = (std::f64::consts::PI * (i as f64 + 0.75) / (n as f64 + 0.5)).cos();
+        let mut pp = 0.0;
+        for _ in 0..100 {
+            // Evaluate P_n(x) and P'_n(x) by recurrence.
+            let mut p0 = 1.0;
+            let mut p1 = x;
+            for k in 2..=n {
+                let p2 = ((2 * k - 1) as f64 * x * p1 - (k - 1) as f64 * p0) / k as f64;
+                p0 = p1;
+                p1 = p2;
+            }
+            pp = n as f64 * (x * p1 - p0) / (x * x - 1.0);
+            let dx = p1 / pp;
+            x -= dx;
+            if dx.abs() < 1e-15 {
+                break;
+            }
+        }
+        nodes[i] = -x;
+        nodes[n - 1 - i] = x;
+        let w = 2.0 / ((1.0 - x * x) * pp * pp);
+        weights[i] = w;
+        weights[n - 1 - i] = w;
+    }
+    (nodes, weights)
+}
+
+/// Integrate `f` over `[a, b]` with `n`-point Gauss-Legendre.
+pub fn integrate<F: Fn(f64) -> f64>(f: F, a: f64, b: f64, n: usize) -> f64 {
+    let (nodes, weights) = gauss_legendre(n);
+    let half = (b - a) / 2.0;
+    let mid = (a + b) / 2.0;
+    let mut s = 0.0;
+    for (x, w) in nodes.iter().zip(weights.iter()) {
+        s += w * f(mid + half * x);
+    }
+    s * half
+}
+
+/// Integrate `f` over `[a, +inf)` by mapping `t = a + u/(1-u)` onto `[0,1)`.
+pub fn integrate_to_inf<F: Fn(f64) -> f64>(f: F, a: f64, n: usize) -> f64 {
+    integrate(
+        |u| {
+            let one_minus = 1.0 - u;
+            let t = a + u / one_minus;
+            f(t) / (one_minus * one_minus)
+        },
+        0.0,
+        1.0 - 1e-12,
+        n,
+    )
+}
+
+/// Running summary statistics over a sample.
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    pub n: usize,
+    mean: f64,
+    m2: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Summary { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    /// Welford online update.
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        if x < self.min {
+            self.min = x;
+        }
+        if x > self.max {
+            self.max = x;
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Sample variance (n-1 denominator).
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std_dev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+}
+
+/// Mean of a slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation of a slice.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// `q`-quantile (0..=1) by linear interpolation on a sorted copy.
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    assert!(!xs.is_empty());
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q.clamp(0.0, 1.0) * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (pos - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// Pearson correlation coefficient.
+pub fn correlation(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len();
+    if n < 2 {
+        return 0.0;
+    }
+    let mx = mean(xs);
+    let my = mean(ys);
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    let mut syy = 0.0;
+    for i in 0..n {
+        let dx = xs[i] - mx;
+        let dy = ys[i] - my;
+        sxy += dx * dy;
+        sxx += dx * dx;
+        syy += dy * dy;
+    }
+    if sxx == 0.0 || syy == 0.0 {
+        0.0
+    } else {
+        sxy / (sxx * syy).sqrt()
+    }
+}
+
+/// Fixed-width histogram for latency / accuracy distributions.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub bins: Vec<u64>,
+    pub underflow: u64,
+    pub overflow: u64,
+    pub count: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, nbins: usize) -> Self {
+        assert!(hi > lo && nbins > 0);
+        Histogram { lo, hi, bins: vec![0; nbins], underflow: 0, overflow: 0, count: 0 }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.count += 1;
+        if x < self.lo {
+            self.underflow += 1;
+        } else if x >= self.hi {
+            self.overflow += 1;
+        } else {
+            let n = self.bins.len();
+            let i = ((x - self.lo) / (self.hi - self.lo) * n as f64) as usize;
+            self.bins[i.min(n - 1)] += 1;
+        }
+    }
+
+    /// Fraction of samples in bin `i`.
+    pub fn frac(&self, i: usize) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.bins[i] as f64 / self.count as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn erf_known_values() {
+        // Reference values from A&S tables.
+        let cases = [
+            (0.0, 0.0),
+            (0.5, 0.5204998778),
+            (1.0, 0.8427007929),
+            (2.0, 0.9953222650),
+            (3.0, 0.9999779095),
+            (-1.0, -0.8427007929),
+        ];
+        for (x, want) in cases {
+            assert!((erf(x) - want).abs() < 1e-9, "erf({x}) = {} want {want}", erf(x));
+        }
+    }
+
+    #[test]
+    fn erfc_complements_erf() {
+        for i in -40..=40 {
+            let x = i as f64 / 8.0;
+            assert!((erf(x) + erfc(x) - 1.0).abs() < 1e-12, "x={x}");
+        }
+    }
+
+    #[test]
+    fn normal_cdf_symmetry_and_values() {
+        assert!((normal_cdf(0.0, 0.0, 1.0) - 0.5).abs() < 1e-12);
+        assert!((normal_cdf(1.96, 0.0, 1.0) - 0.9750021).abs() < 1e-6);
+        for i in -20..=20 {
+            let x = i as f64 / 4.0;
+            let s = normal_cdf(x, 0.0, 1.0) + normal_cdf(-x, 0.0, 1.0);
+            assert!((s - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn pdf_integrates_to_one() {
+        let total = integrate(|x| normal_pdf(x, 1.0, 2.0), -20.0, 22.0, 128);
+        assert!((total - 1.0).abs() < 1e-10, "total={total}");
+    }
+
+    #[test]
+    fn gauss_legendre_exact_for_polynomials() {
+        // n-point GL is exact for degree <= 2n-1.
+        let got = integrate(|x| 3.0 * x * x, 0.0, 2.0, 8);
+        assert!((got - 8.0).abs() < 1e-12);
+        let got = integrate(|x| x.powi(7) - x.powi(3) + 1.0, -1.0, 3.0, 8);
+        let want = (3.0f64.powi(8) - 1.0) / 8.0 - (3.0f64.powi(4) - 1.0) / 4.0 + 4.0;
+        assert!((got - want).abs() < 1e-9, "got={got} want={want}");
+    }
+
+    #[test]
+    fn improper_integral_of_gaussian_tail() {
+        // Integral of standard normal pdf over [0, inf) = 1/2.
+        let got = integrate_to_inf(|x| normal_pdf(x, 0.0, 1.0), 0.0, 200);
+        assert!((got - 0.5).abs() < 1e-8, "got={got}");
+    }
+
+    #[test]
+    fn summary_matches_direct_computation() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 10.0];
+        let mut s = Summary::new();
+        for &x in &xs {
+            s.add(x);
+        }
+        assert_eq!(s.n, 5);
+        assert!((s.mean() - 4.0).abs() < 1e-12);
+        assert!((s.variance() - 12.5).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 10.0);
+    }
+
+    #[test]
+    fn quantiles() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 0.5), 3.0);
+        assert_eq!(quantile(&xs, 1.0), 5.0);
+        assert!((quantile(&xs, 0.25) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn correlation_bounds() {
+        let xs: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 2.0 * x + 1.0).collect();
+        assert!((correlation(&xs, &ys) - 1.0).abs() < 1e-12);
+        let zs: Vec<f64> = xs.iter().map(|x| -x).collect();
+        assert!((correlation(&xs, &zs) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_binning() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for i in 0..10 {
+            h.add(i as f64 + 0.5);
+        }
+        h.add(-1.0);
+        h.add(11.0);
+        assert_eq!(h.count, 12);
+        assert_eq!(h.underflow, 1);
+        assert_eq!(h.overflow, 1);
+        assert!(h.bins.iter().all(|&b| b == 1));
+    }
+}

@@ -1,0 +1,135 @@
+//! Engine-level invariants across runtimes: energy conservation, the
+//! approximate runtimes' single-cycle guarantee, Chinchilla's forward
+//! progress, and ledger separation.
+
+use aic::energy::harvester::Harvester;
+use aic::energy::mcu::OpCost;
+use aic::exec::approx::{run as run_approx, ApproxConfig};
+use aic::exec::chinchilla::{run as run_chinchilla, ChinchillaConfig};
+use aic::exec::engine::{Engine, EngineConfig, Ledger, OpOutcome};
+use aic::exec::program::SyntheticProgram;
+use aic::util::testkit::{property, Gen};
+
+fn engine(power: f64, horizon: f64) -> Engine {
+    Engine::new(EngineConfig::paper_default(horizon), Harvester::Constant(power))
+}
+
+#[test]
+fn energy_is_conserved_per_operation() {
+    property("op energy conservation", 128, |g: &mut Gen| {
+        let power = g.f64_in(0.0..3e-3);
+        let cycles = g.usize_in(1..=2_000_000) as u64;
+        let mut e = engine(power, 1e9);
+        let v0 = e.cap.energy();
+        let cost = OpCost::cycles(cycles);
+        let duration = e.mcu.duration(&cost);
+        let spent = e.mcu.energy(&cost);
+        let outcome = e.run_op(&cost, Ledger::App);
+        if outcome == OpOutcome::Done {
+            // Buffer change = harvested - spent, within booster bounds.
+            let harvested_max = power * duration; // eta <= 1
+            let delta = e.cap.energy() - v0;
+            assert!(
+                delta <= harvested_max - spent + 1e-12,
+                "gained more than physically possible: delta={delta}"
+            );
+            assert!(
+                delta >= -spent - 1e-12,
+                "lost more than the op cost: delta={delta}"
+            );
+        }
+    });
+}
+
+#[test]
+fn dead_device_stays_dead_without_harvest() {
+    let mut e = engine(0.0, 100.0);
+    let _ = e.run_op(&OpCost::cycles(3_000_000_000), Ledger::App); // kill it
+    assert!(!e.cap.alive());
+    assert!(!e.charge_until_boot());
+    assert!(e.out_of_time());
+}
+
+#[test]
+fn approx_never_uses_state_ledger_and_stays_single_cycle() {
+    property("approx single-cycle", 12, |g: &mut Gen| {
+        let power = g.f64_in(5e-5..2e-3);
+        let steps = g.usize_in(10..=200);
+        let cycles = 50_000 + g.usize_in(0..=400_000) as u64;
+        let mut prog = SyntheticProgram::new(1000, steps, cycles);
+        let mut e = engine(power, 3600.0);
+        let c = run_approx(&mut prog, &mut e, &ApproxConfig::greedy(60.0));
+        assert_eq!(c.state_energy, 0.0, "approx must not manage persistent state");
+        for r in c.emitted() {
+            assert_eq!(r.latency_cycles, 0, "emitted result crossed a power failure");
+        }
+    });
+}
+
+#[test]
+fn chinchilla_always_full_precision_and_makes_progress() {
+    property("chinchilla progress", 8, |g: &mut Gen| {
+        let power = g.f64_in(3e-4..2e-3);
+        let steps = g.usize_in(20..=120);
+        let mut prog = SyntheticProgram::new(3, steps, 300_000);
+        let mut e = engine(power, 8.0 * 3600.0);
+        let c = run_chinchilla(&mut prog, &mut e, &ChinchillaConfig::default());
+        assert!(!c.rounds.is_empty(), "no forward progress");
+        for r in c.emitted() {
+            assert_eq!(r.steps_executed, steps, "chinchilla must be precise");
+            assert_eq!(r.output, Some(steps));
+        }
+    });
+}
+
+#[test]
+fn chinchilla_charges_the_state_ledger() {
+    let mut prog = SyntheticProgram::new(2, 100, 400_000);
+    let mut e = engine(0.5e-3, 4.0 * 3600.0);
+    let c = run_chinchilla(&mut prog, &mut e, &ChinchillaConfig::default());
+    assert!(c.state_energy > 0.0);
+    assert!(c.power_failures > 0, "should have browned out at this power");
+}
+
+#[test]
+fn horizon_is_respected_by_all_runtimes() {
+    let horizon = 600.0;
+    let mut p1 = SyntheticProgram::new(100_000, 50, 100_000);
+    let mut e1 = engine(1e-3, horizon);
+    let c1 = run_approx(&mut p1, &mut e1, &ApproxConfig::greedy(30.0));
+    assert!(c1.duration <= horizon + 61.0, "approx overran: {}", c1.duration);
+
+    let mut p2 = SyntheticProgram::new(100_000, 50, 100_000);
+    let mut e2 = engine(1e-3, horizon);
+    let c2 = run_chinchilla(&mut p2, &mut e2, &ChinchillaConfig::default());
+    assert!(c2.duration <= horizon + 61.0, "chinchilla overran: {}", c2.duration);
+}
+
+#[test]
+fn throughput_monotone_in_harvest_power() {
+    let mut last = 0usize;
+    for power in [1e-4, 3e-4, 1e-3] {
+        let mut prog = SyntheticProgram::new(100_000, 100, 300_000);
+        let mut e = engine(power, 3600.0);
+        let c = run_approx(&mut prog, &mut e, &ApproxConfig::greedy(60.0));
+        let emitted = c.emitted().count();
+        assert!(
+            emitted + 2 >= last,
+            "more power should not reduce throughput: {emitted} < {last}"
+        );
+        last = emitted.max(last);
+    }
+}
+
+#[test]
+fn brownout_voids_partial_round_state() {
+    // After a brown-out, the engine leaves the buffer below V_off and the
+    // next boot requires the full recharge ramp.
+    let mut e = engine(1e-3, 3600.0);
+    let _ = e.run_op(&OpCost::cycles(3_000_000_000), Ledger::App);
+    assert!(!e.cap.alive());
+    let v = e.cap.voltage();
+    assert!(v < e.cap.v_off && v > 0.0);
+    assert!(e.charge_until_boot());
+    assert!(e.cap.voltage() >= e.cap.v_on * 0.999);
+}

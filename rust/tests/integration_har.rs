@@ -1,0 +1,123 @@
+//! End-to-end HAR integration: corpus → training → campaigns under every
+//! policy, checking the paper's qualitative relations hold on a small
+//! but non-trivial configuration.
+
+use aic::coordinator::experiment::{
+    fig4, har_policy_comparison, run_har_policy, HarContext, HarRunSpec,
+};
+use aic::coordinator::metrics::{har_accuracy, same_cycle_fraction};
+use aic::exec::Policy;
+use aic::har::dataset::CorpusSpec;
+
+fn small_ctx() -> HarContext {
+    HarContext::build_with(
+        &CorpusSpec {
+            train_volunteers: 4,
+            test_volunteers: 2,
+            windows_per_volunteer_per_class: 10,
+        },
+        404,
+    )
+}
+
+#[test]
+fn training_reaches_a_sane_ceiling() {
+    let ctx = small_ctx();
+    assert!(
+        (0.6..=1.0).contains(&ctx.full_accuracy),
+        "ceiling {} out of range",
+        ctx.full_accuracy
+    );
+}
+
+#[test]
+fn fig4_expected_tracks_measured() {
+    let ctx = small_ctx();
+    let ps = [0usize, 20, 60, 100, 140];
+    let rows = fig4(&ctx, &ps);
+    // Both curves end at the ceiling and start near chance.
+    assert!(rows[0].measured < 0.4);
+    assert!((rows[4].measured - ctx.full_accuracy).abs() < 1e-9);
+    for r in &rows {
+        assert!(
+            (r.expected - r.measured).abs() < 0.30,
+            "p={}: expected {} vs measured {}",
+            r.p,
+            r.expected,
+            r.measured
+        );
+    }
+}
+
+#[test]
+fn greedy_campaign_single_cycle_and_accurate_enough() {
+    let ctx = small_ctx();
+    let spec = HarRunSpec { horizon: 3600.0, sample_period: 60.0, script_seed: 5 };
+    let c = run_har_policy(&ctx, &spec, Policy::Greedy);
+    assert!(c.emitted().count() >= 5, "too few results");
+    assert!((same_cycle_fraction(&c) - 1.0).abs() < 1e-9);
+    assert_eq!(c.state_energy, 0.0);
+    // Accuracy above chance by a wide margin.
+    assert!(har_accuracy(&c) > 0.35, "accuracy {}", har_accuracy(&c));
+}
+
+#[test]
+fn policy_relations_match_paper() {
+    let ctx = small_ctx();
+    let spec = HarRunSpec { horizon: 2.0 * 3600.0, ..Default::default() };
+    let rows = har_policy_comparison(&ctx, &spec, &[3, 4]);
+    let get = |p: Policy| rows.iter().find(|r| r.policy == p).unwrap();
+    let cont = get(Policy::Continuous);
+    let chin = get(Policy::Chinchilla);
+    let greedy = get(Policy::Greedy);
+
+    // Continuous is the throughput ceiling.
+    assert!((cont.throughput_vs_continuous - 1.0).abs() < 1e-9);
+    assert!(greedy.throughput_vs_continuous <= 1.0 + 1e-9);
+    // The paper's central claim: approx beats Chinchilla in throughput.
+    assert!(
+        greedy.throughput_vs_continuous > chin.throughput_vs_continuous,
+        "greedy {} <= chinchilla {}",
+        greedy.throughput_vs_continuous,
+        chin.throughput_vs_continuous
+    );
+    // Chinchilla processes every feature.
+    assert!((chin.mean_features - 140.0).abs() < 1e-9);
+    // GREEDY truncates.
+    assert!(greedy.mean_features < 139.0);
+    // Approx policies never touch the state ledger.
+    assert_eq!(greedy.state_energy_fraction, 0.0);
+    assert!(chin.state_energy_fraction > 0.0);
+}
+
+#[test]
+fn smart_bound_orders_accuracy_and_throughput() {
+    let ctx = small_ctx();
+    let spec = HarRunSpec { horizon: 2.0 * 3600.0, ..Default::default() };
+    let rows = har_policy_comparison(&ctx, &spec, &[7, 8]);
+    let get = |p: Policy| rows.iter().find(|r| r.policy == p).unwrap();
+    let s60 = get(Policy::Smart { bound: 0.60 });
+    let s80 = get(Policy::Smart { bound: 0.80 });
+    // Higher bound -> no more throughput (it drops samples instead).
+    assert!(
+        s80.throughput_vs_continuous <= s60.throughput_vs_continuous + 0.05,
+        "smart80 {} should not out-throughput smart60 {}",
+        s80.throughput_vs_continuous,
+        s60.throughput_vs_continuous
+    );
+}
+
+#[test]
+fn identical_seeds_reproduce_campaigns_exactly() {
+    let ctx = small_ctx();
+    let spec = HarRunSpec { horizon: 1200.0, sample_period: 60.0, script_seed: 9 };
+    let a = run_har_policy(&ctx, &spec, Policy::Greedy);
+    let b = run_har_policy(&ctx, &spec, Policy::Greedy);
+    assert_eq!(a.rounds.len(), b.rounds.len());
+    assert_eq!(a.power_cycles, b.power_cycles);
+    assert_eq!(a.app_energy, b.app_energy);
+    for (ra, rb) in a.rounds.iter().zip(b.rounds.iter()) {
+        assert_eq!(ra.emitted_at, rb.emitted_at);
+        assert_eq!(ra.steps_executed, rb.steps_executed);
+    }
+}

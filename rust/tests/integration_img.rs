@@ -1,0 +1,92 @@
+//! End-to-end imaging integration: perforated Harris campaigns across
+//! energy traces, equivalence accounting, and the §6.3 relations.
+
+use aic::coordinator::experiment::{fig12, run_img_policy, ImgRunSpec};
+use aic::coordinator::metrics::{
+    corner_equivalence_fraction, same_cycle_fraction, throughput_ratio,
+};
+use aic::energy::traces::TraceKind;
+use aic::exec::Policy;
+use aic::imgproc::equivalence::equivalent;
+use aic::imgproc::harris::{harris_full, harris_perforated, HarrisConfig};
+use aic::imgproc::images::{render, Picture};
+
+#[test]
+fn zero_perforation_is_exactly_the_reference() {
+    for picture in Picture::ALL {
+        let img = render(picture, 96, 96, 17);
+        let cfg = HarrisConfig::default();
+        let full = harris_full(&img, &cfg);
+        let p0 = harris_perforated(&img, &cfg, 96);
+        assert_eq!(full.len(), p0.len(), "{picture:?}");
+        assert!(equivalent(&full, &p0), "{picture:?}");
+    }
+}
+
+#[test]
+fn fig12_simple_survives_heavier_perforation_than_complex() {
+    let rows = fig12(128, &[0.0, 0.25, 0.42, 0.55, 0.7]);
+    let max_ok = |p: Picture| -> f64 {
+        rows.iter()
+            .filter(|r| r.picture == p && r.equivalent)
+            .map(|r| r.skip_fraction)
+            .fold(0.0, f64::max)
+    };
+    assert!(max_ok(Picture::Checker) >= 0.42, "checker should survive 42%");
+    assert!(max_ok(Picture::Checker) >= max_ok(Picture::Cluttered));
+}
+
+#[test]
+fn greedy_imaging_emits_same_cycle_on_every_trace() {
+    let spec = ImgRunSpec { horizon: 900.0, ..Default::default() };
+    for trace in TraceKind::ALL {
+        let c = run_img_policy(&spec, trace, Policy::Greedy);
+        if c.emitted().count() > 0 {
+            assert!(
+                (same_cycle_fraction(&c) - 1.0).abs() < 1e-9,
+                "{trace:?} emitted across cycles"
+            );
+        }
+        assert_eq!(c.state_energy, 0.0);
+    }
+}
+
+#[test]
+fn equivalence_high_on_rich_trace() {
+    let spec = ImgRunSpec { horizon: 1200.0, ..Default::default() };
+    let c = run_img_policy(&spec, TraceKind::Som, Policy::Greedy);
+    assert!(c.emitted().count() >= 5, "SOM should sustain many rounds");
+    let eq = corner_equivalence_fraction(&c, aic::imgproc::images::EVAL_SIZE);
+    assert!(eq >= 0.6, "equivalence {eq} too low on the richest trace");
+}
+
+#[test]
+fn aic_beats_chinchilla_on_weak_trace() {
+    let spec = ImgRunSpec { horizon: 1800.0, ..Default::default() };
+    let aic_run = run_img_policy(&spec, TraceKind::Sim, Policy::Greedy);
+    let chin = run_img_policy(&spec, TraceKind::Sim, Policy::Chinchilla);
+    let ratio = throughput_ratio(&aic_run, &chin);
+    assert!(
+        ratio > 1.0 || chin.emitted().count() == 0,
+        "AIC/Chinchilla ratio {ratio} on SIM"
+    );
+}
+
+#[test]
+fn chinchilla_imaging_is_precise() {
+    let spec = ImgRunSpec { horizon: 1800.0, ..Default::default() };
+    let c = run_img_policy(&spec, TraceKind::Sor, Policy::Chinchilla);
+    for r in c.emitted() {
+        let out = r.output.as_ref().unwrap();
+        assert_eq!(out.rows_computed, out.total_rows, "chinchilla must not perforate");
+    }
+}
+
+#[test]
+fn imaging_campaigns_are_deterministic() {
+    let spec = ImgRunSpec { horizon: 600.0, ..Default::default() };
+    let a = run_img_policy(&spec, TraceKind::Rf, Policy::Greedy);
+    let b = run_img_policy(&spec, TraceKind::Rf, Policy::Greedy);
+    assert_eq!(a.rounds.len(), b.rounds.len());
+    assert_eq!(a.power_cycles, b.power_cycles);
+}

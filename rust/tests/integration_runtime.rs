@@ -1,0 +1,219 @@
+//! PJRT runtime integration: load the AOT artifacts and cross-check
+//! their numerics against the pure-Rust twins.
+//!
+//! Requires `make artifacts` (skipped with a clear message otherwise —
+//! `make test` guarantees the ordering).
+
+use aic::runtime::{ArtifactRuntime, Tensor};
+use aic::util::rng::Rng;
+
+fn runtime() -> Option<ArtifactRuntime> {
+    match ArtifactRuntime::load("artifacts") {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP: artifacts not built ({e}); run `make artifacts`");
+            None
+        }
+    }
+}
+
+fn rand_vec(rng: &mut Rng, n: usize, scale: f64) -> Vec<f32> {
+    (0..n).map(|_| (rng.gaussian() * scale) as f32).collect()
+}
+
+#[test]
+fn all_manifest_artifacts_load_and_execute() {
+    let Some(rt) = runtime() else { return };
+    assert_eq!(
+        rt.names(),
+        vec![
+            "feature_stats",
+            "har_e2e",
+            "harris",
+            "spectral_power",
+            "svm_incremental",
+            "svm_prefix"
+        ]
+    );
+    for name in rt.names() {
+        let shapes = rt.input_shapes(&name);
+        assert!(!shapes.is_empty(), "{name} missing input shapes");
+        let inputs: Vec<Tensor> = shapes.iter().map(|s| Tensor::zeros(s.clone())).collect();
+        let out = rt.execute(&name, &inputs).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert!(!out.data.is_empty());
+    }
+}
+
+#[test]
+fn svm_prefix_matches_rust_scores() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(1);
+    let (b, n, c) = (256usize, 140usize, 6usize);
+    let x = rand_vec(&mut rng, b * n, 1.0);
+    let w = rand_vec(&mut rng, c * n, 0.2);
+    let bias = rand_vec(&mut rng, c, 0.5);
+    let p = 77usize;
+    let mask: Vec<f32> = (0..n).map(|j| if j < p { 1.0 } else { 0.0 }).collect();
+    let out = rt
+        .execute(
+            "svm_prefix",
+            &[
+                Tensor::new(vec![b, n], x.clone()),
+                Tensor::new(vec![c, n], w.clone()),
+                Tensor::new(vec![c], bias.clone()),
+                Tensor::new(vec![n], mask),
+            ],
+        )
+        .unwrap();
+    assert_eq!(out.shape, vec![b, c]);
+    // Rust twin: masked dot products.
+    for i in 0..b {
+        for k in 0..c {
+            let mut s = bias[k] as f64;
+            for j in 0..p {
+                s += x[i * n + j] as f64 * w[k * n + j] as f64;
+            }
+            let got = out.data[i * c + k] as f64;
+            assert!(
+                (got - s).abs() < 1e-2 * (1.0 + s.abs()),
+                "b={i} c={k}: got {got} want {s}"
+            );
+        }
+    }
+}
+
+#[test]
+fn spectral_power_matches_rust_fft() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(2);
+    let (b, t) = (256usize, 128usize);
+    let x = rand_vec(&mut rng, b * t, 1.0);
+    let out = rt.execute("spectral_power", &[Tensor::new(vec![b, t], x.clone())]).unwrap();
+    assert_eq!(out.shape, vec![b, t / 2 + 1]);
+    // Check a few rows against the Rust radix-2 FFT.
+    for &row in &[0usize, 17, 255] {
+        let signal: Vec<f64> = (0..t).map(|i| x[row * t + i] as f64).collect();
+        let ps = aic::util::fft::power_spectrum(&signal);
+        for k in 0..=t / 2 {
+            let got = out.data[row * (t / 2 + 1) + k] as f64;
+            assert!(
+                (got - ps[k]).abs() < 1e-2 * (1.0 + ps[k]),
+                "row={row} bin={k}: got {got} want {}",
+                ps[k]
+            );
+        }
+    }
+}
+
+#[test]
+fn feature_stats_matches_rust_stats() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(3);
+    let (b, t) = (256usize, 128usize);
+    let x = rand_vec(&mut rng, b * t, 2.0);
+    let out = rt.execute("feature_stats", &[Tensor::new(vec![b, t], x.clone())]).unwrap();
+    assert_eq!(out.shape, vec![b, 5]);
+    for &row in &[0usize, 100, 255] {
+        let signal: Vec<f64> = (0..t).map(|i| x[row * t + i] as f64).collect();
+        let mean = aic::util::stats::mean(&signal);
+        let std = aic::util::stats::std_dev(&signal);
+        let energy = signal.iter().map(|v| v * v).sum::<f64>() / t as f64;
+        let mn = signal.iter().cloned().fold(f64::INFINITY, f64::min);
+        let mx = signal.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let want = [mean, std, energy, mn, mx];
+        for (k, w) in want.iter().enumerate() {
+            let got = out.data[row * 5 + k] as f64;
+            assert!(
+                (got - w).abs() < 1e-3 * (1.0 + w.abs()),
+                "row={row} stat={k}: got {got} want {w}"
+            );
+        }
+    }
+}
+
+#[test]
+fn harris_artifact_matches_rust_detector_responses() {
+    let Some(rt) = runtime() else { return };
+    use aic::imgproc::harris::{gradients, response_row, HarrisConfig, ResponseMap};
+    use aic::imgproc::images::{render, Picture};
+    let size = 160usize;
+    let img = render(Picture::Checker, size, size, 7);
+    let data: Vec<f32> = img.data.iter().map(|&v| v as f32).collect();
+    let mask = vec![1.0f32; size];
+    let out = rt
+        .execute(
+            "harris",
+            &[Tensor::new(vec![size, size], data), Tensor::new(vec![size], mask)],
+        )
+        .unwrap();
+    assert_eq!(out.shape, vec![size, size]);
+    // Rust twin.
+    let (ix, iy) = gradients(&img);
+    let cfg = HarrisConfig::default();
+    let mut map = ResponseMap::new(size, size);
+    for y in 0..size {
+        response_row(&ix, &iy, &mut map, y, &cfg);
+    }
+    let mut max_abs: f64 = 0.0;
+    for v in &map.r {
+        max_abs = max_abs.max(v.abs());
+    }
+    for y in (8..size - 8).step_by(16) {
+        for xcoord in (8..size - 8).step_by(16) {
+            let got = out.data[y * size + xcoord] as f64;
+            let want = map.r[y * size + xcoord];
+            assert!(
+                (got - want).abs() < 1e-3 * max_abs,
+                "({xcoord},{y}): got {got} want {want}"
+            );
+        }
+    }
+}
+
+#[test]
+fn svm_incremental_chain_equals_prefix_artifact() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(4);
+    let (b, c, chunk) = (256usize, 6usize, 16usize);
+    let n = 64usize; // 4 chunks
+    let x = rand_vec(&mut rng, b * n, 1.0);
+    let w = rand_vec(&mut rng, c * n, 0.2);
+    let bias = rand_vec(&mut rng, c, 0.5);
+    // Chain incremental updates.
+    let mut s: Vec<f32> = (0..b).flat_map(|_| bias.clone()).collect();
+    for lo in (0..n).step_by(chunk) {
+        let xc: Vec<f32> = (0..b)
+            .flat_map(|i| (lo..lo + chunk).map(move |j| (i, j)))
+            .map(|(i, j)| x[i * n + j])
+            .collect();
+        let wc: Vec<f32> = (0..c)
+            .flat_map(|k| (lo..lo + chunk).map(move |j| (k, j)))
+            .map(|(k, j)| w[k * n + j])
+            .collect();
+        let out = rt
+            .execute(
+                "svm_incremental",
+                &[
+                    Tensor::new(vec![b, c], s.clone()),
+                    Tensor::new(vec![b, chunk], xc),
+                    Tensor::new(vec![c, chunk], wc),
+                ],
+            )
+            .unwrap();
+        s = out.data;
+    }
+    // Compare against direct dot products.
+    for i in (0..b).step_by(37) {
+        for k in 0..c {
+            let mut want = bias[k] as f64;
+            for j in 0..n {
+                want += x[i * n + j] as f64 * w[k * n + j] as f64;
+            }
+            let got = s[i * c + k] as f64;
+            assert!(
+                (got - want).abs() < 1e-2 * (1.0 + want.abs()),
+                "b={i} c={k}: got {got} want {want}"
+            );
+        }
+    }
+}

@@ -1,0 +1,153 @@
+//! Cross-module property tests via the in-tree testkit.
+
+use aic::energy::capacitor::Capacitor;
+use aic::energy::estimator::EnergyProfile;
+use aic::energy::mcu::{McuModel, OpCost};
+use aic::imgproc::equivalence::equivalent;
+use aic::imgproc::Corner;
+use aic::svm::analysis::{coherence_binary, coherence_binary_symmetric};
+use aic::util::fixed::{dot_q15, Q15};
+use aic::util::testkit::{property, Gen};
+
+#[test]
+fn capacitor_charge_discharge_roundtrip() {
+    property("capacitor roundtrip", 256, |g: &mut Gen| {
+        let mut cap = Capacitor::paper_default();
+        cap.set_voltage(g.f64_in(2.0..3.5));
+        let e0 = cap.energy();
+        let de = g.f64_in(0.0..1e-3);
+        cap.charge(de);
+        let gained = cap.energy() - e0;
+        assert!(gained <= de + 1e-15, "charged more than deposited");
+        if cap.voltage() < cap.v_max - 1e-9 {
+            assert!((gained - de).abs() < 1e-12, "lost energy without hitting rail");
+        }
+        let ok = cap.discharge(gained.min(cap.energy() * 0.5));
+        assert!(ok);
+    });
+}
+
+#[test]
+fn usable_energy_never_exceeds_total() {
+    property("usable <= total", 256, |g: &mut Gen| {
+        let mut cap = Capacitor::paper_default();
+        cap.set_voltage(g.f64_in(0.0..3.6));
+        assert!(cap.usable_energy() <= cap.energy() + 1e-15);
+        assert!(cap.usable_energy() >= 0.0);
+    });
+}
+
+#[test]
+fn mcu_energy_is_additive_and_monotone() {
+    property("mcu additivity", 256, |g: &mut Gen| {
+        let m = McuModel::paper_default();
+        let a = OpCost {
+            cycles: g.usize_in(0..=1_000_000) as u64,
+            fram_reads: g.usize_in(0..=1000) as u64,
+            fram_writes: g.usize_in(0..=1000) as u64,
+            ..Default::default()
+        };
+        let b = OpCost::cycles(g.usize_in(0..=1_000_000) as u64);
+        let sum = m.energy(&a.plus(&b));
+        assert!((sum - m.energy(&a) - m.energy(&b)).abs() < 1e-15);
+        let bigger = OpCost { cycles: a.cycles + 1, ..a };
+        assert!(m.energy(&bigger) > m.energy(&a));
+    });
+}
+
+#[test]
+fn energy_profile_prefix_sums_consistent() {
+    property("profile prefix sums", 128, |g: &mut Gen| {
+        let m = McuModel::paper_default();
+        let n = g.usize_in(1..=50);
+        let costs: Vec<OpCost> =
+            (0..n).map(|_| OpCost::cycles(1 + g.usize_in(0..=500_000) as u64)).collect();
+        let p = EnergyProfile::from_costs(&m, &costs);
+        // span(0, n) == total; max_steps_within(total) == n.
+        assert!((p.span(0, n) - p.total()).abs() < 1e-15);
+        assert_eq!(p.max_steps_within(p.total() + 1e-12, 0.0), n);
+        // Any budget returns a k whose cumulative fits.
+        let budget = g.f64_in(0.0..p.total() * 1.2);
+        let k = p.max_steps_within(budget, 0.0);
+        assert!(p.cumulative[k] <= budget + 1e-15);
+        if k < n {
+            assert!(p.cumulative[k + 1] > budget - 1e-12);
+        }
+    });
+}
+
+#[test]
+fn q15_dot_product_tracks_float() {
+    property("q15 dot", 128, |g: &mut Gen| {
+        let n = g.usize_in(1..=140);
+        let a: Vec<f64> = (0..n).map(|_| g.f64_in(-0.05..0.05)).collect();
+        let b: Vec<f64> = (0..n).map(|_| g.f64_in(-0.05..0.05)).collect();
+        let qa: Vec<Q15> = a.iter().map(|&x| Q15::from_f64(x)).collect();
+        let qb: Vec<Q15> = b.iter().map(|&x| Q15::from_f64(x)).collect();
+        let exact: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        let got = dot_q15(&qa, &qb).to_f64();
+        assert!((got - exact).abs() < 4e-3, "got={got} exact={exact} n={n}");
+    });
+}
+
+#[test]
+fn coherence_formulas_agree_in_zero_mean_case() {
+    property("Eq.7 consistency", 64, |g: &mut Gen| {
+        let var_s = g.f64_in(0.01..5.0);
+        let var_r = g.f64_in(0.01..5.0);
+        let a = coherence_binary_symmetric(var_s, var_r);
+        let b = coherence_binary(0.0, var_s, 0.0, var_r);
+        assert!((a - b).abs() < 1e-6, "symmetric {a} vs general {b}");
+        // Bounds: coherence in [0.5, 1] for zero-mean.
+        assert!((0.5..=1.0 + 1e-9).contains(&a), "a={a}");
+    });
+}
+
+#[test]
+fn coherence_monotone_in_processed_variance() {
+    property("Eq.7 monotonicity", 64, |g: &mut Gen| {
+        let total = g.f64_in(0.5..4.0);
+        let f1 = g.f64_in(0.05..0.45);
+        let f2 = f1 + 0.3;
+        let lo = coherence_binary_symmetric(total * f1, total * (1.0 - f1));
+        let hi = coherence_binary_symmetric(total * f2, total * (1.0 - f2));
+        assert!(hi >= lo - 1e-9, "processing more must not reduce coherence");
+    });
+}
+
+#[test]
+fn equivalence_is_reflexive_and_shift_tolerant() {
+    property("equivalence reflexive", 128, |g: &mut Gen| {
+        let n = g.usize_in(0..=12);
+        let mut corners = Vec::new();
+        for _ in 0..n {
+            corners.push(Corner {
+                x: g.usize_in(0..=100) * 13 % 150,
+                y: g.usize_in(0..=100) * 7 % 150,
+                response: 1.0,
+            });
+        }
+        corners.dedup_by(|a, b| a.x == b.x && a.y == b.y);
+        assert!(equivalent(&corners, &corners));
+        // Dropping one corner breaks equivalence.
+        if corners.len() > 1 {
+            assert!(!equivalent(&corners, &corners[1..]));
+        }
+    });
+}
+
+#[test]
+fn trace_generation_energy_scales_with_duration() {
+    property("trace energy scaling", 16, |g: &mut Gen| {
+        use aic::energy::traces::{generate, TraceKind};
+        let kind = *g.pick(&TraceKind::ALL);
+        let seed = g.usize_in(0..=1000) as u64;
+        let short = generate(kind, 120.0, 0.01, seed);
+        let long = generate(kind, 480.0, 0.01, seed);
+        let ratio = long.total_energy() / short.total_energy().max(1e-12);
+        assert!(
+            (1.5..12.0).contains(&ratio),
+            "{kind:?}: 4x duration gave {ratio}x energy"
+        );
+    });
+}
