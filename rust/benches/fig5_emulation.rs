@@ -70,4 +70,19 @@ fn main() {
         "shape: approx spends nothing on state [{}]",
         if greedy.state_energy_fraction == 0.0 { "PASS" } else { "FAIL" }
     );
+    let alpaca = get(Policy::Alpaca);
+    println!(
+        "shape: alpaca precise like chinchilla [{}]",
+        if alpaca.accuracy >= chin.accuracy - 0.02 { "PASS" } else { "FAIL" }
+    );
+    println!(
+        "shape: alpaca state overhead below chinchilla ({:.1}% vs {:.1}%) [{}]",
+        100.0 * alpaca.state_energy_fraction,
+        100.0 * chin.state_energy_fraction,
+        if alpaca.state_energy_fraction < chin.state_energy_fraction {
+            "PASS"
+        } else {
+            "FAIL"
+        }
+    );
 }

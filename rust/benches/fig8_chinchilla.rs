@@ -56,11 +56,18 @@ fn main() {
         "shape: greedy tops throughput [{}]",
         if rows_out
             .iter()
+            .filter(|r| !matches!(r.policy, Policy::Continuous))
             .all(|r| r.throughput_vs_greedy <= 1.0 + 1e-9)
         {
             "PASS"
         } else {
             "FAIL"
         }
+    );
+    let alpaca = get(Policy::Alpaca);
+    println!(
+        "shape: greedy also beats the task-based baseline ({:.1}x alpaca) [{}]",
+        1.0 / alpaca.throughput_vs_greedy.max(1e-9),
+        if alpaca.throughput_vs_greedy <= 1.0 + 1e-9 { "PASS" } else { "FAIL" }
     );
 }

@@ -4,14 +4,13 @@
 //! the `aic` CLI and the `rust/benches/fig*` benches are thin wrappers.
 //! See DESIGN.md §4 for the experiment index.
 
+use crate::coordinator::fleet::run_fleet;
+use crate::energy::estimator::{EnergyProfile, SmartTable};
 use crate::energy::harvester::{kinetic_power_trace, Harvester, KineticConfig};
-use crate::energy::mcu::McuModel;
+use crate::energy::mcu::{McuModel, OpCost};
 use crate::energy::traces::{generate, TraceKind};
-use crate::exec::approx::{run as run_approx, ApproxConfig};
-use crate::exec::chinchilla::{run as run_chinchilla, ChinchillaConfig};
-use crate::exec::continuous::run as run_continuous;
 use crate::exec::engine::{Engine, EngineConfig};
-use crate::exec::{Campaign, Policy};
+use crate::exec::{Campaign, Policy, Runtime, RuntimeSpec, StepProgram};
 use crate::har::app::{smart_table, HarOutput, HarProgram, WindowSource};
 use crate::har::dataset::{ActivityScript, Corpus, CorpusSpec};
 use crate::har::NUM_FEATURES;
@@ -68,50 +67,115 @@ impl Default for HarRunSpec {
     }
 }
 
-/// Run one HAR campaign under `policy`, powered by the kinetic energy of
-/// the same wrist motion that produces the sensor windows.
+/// A simulated application the coordinator can campaign with: how to
+/// build the program, the harvester powering the device, and the knobs
+/// the runtimes need. Implementing this — nothing else — is what it
+/// takes to give a new application the full fleet/figure machinery.
+pub trait Workload: Sync {
+    type Prog: StepProgram;
+
+    /// Seconds between sampling slots.
+    fn sample_period(&self) -> f64;
+
+    /// Campaign horizon, seconds.
+    fn horizon(&self) -> f64;
+
+    /// Build the step program for one device (deterministic in `seed`).
+    fn program(&self, seed: u64) -> Self::Prog;
+
+    /// Build the energy harvester for one device (deterministic in
+    /// `seed`). Not called for `Policy::Continuous` devices.
+    fn harvester(&self, seed: u64) -> Harvester;
+
+    /// SMART's offline lookup table for the device built from `seed`
+    /// (it must price the same program [`Workload::program`] returns).
+    /// Only consulted for `Policy::Smart` devices; workloads that cannot
+    /// provision one return `None` and SMART campaigns on them panic
+    /// loudly.
+    fn smart_table(&self, seed: u64) -> Option<SmartTable> {
+        let _ = seed;
+        None
+    }
+}
+
+/// Run one campaign of `workload` under `policy` — the single generic
+/// driver behind every HAR and imaging figure. Continuous devices run on
+/// a battery ([`Engine::powered`]); everything else harvests through the
+/// workload's supply.
+pub fn run_campaign<W: Workload>(
+    workload: &W,
+    seed: u64,
+    policy: Policy,
+) -> Campaign<<W::Prog as StepProgram>::Output> {
+    let mut program = workload.program(seed);
+    let mut engine = match policy {
+        Policy::Continuous => Engine::powered(McuModel::paper_default(), workload.horizon()),
+        _ => Engine::new(
+            EngineConfig::paper_default(workload.horizon()),
+            workload.harvester(seed),
+        ),
+    };
+    let mut spec = RuntimeSpec::new(workload.sample_period());
+    if let Policy::Smart { .. } = policy {
+        spec.smart_table = workload.smart_table(seed);
+    }
+    policy.runtime::<W::Prog>(&spec).run(&mut program, &mut engine)
+}
+
+/// The HAR workload: the device is powered by the kinetic energy of the
+/// same wrist motion that produces the sensor windows; `seed` selects
+/// the volunteer's activity script.
+pub struct HarWorkload<'a> {
+    pub ctx: &'a HarContext,
+    pub spec: HarRunSpec,
+}
+
+impl Workload for HarWorkload<'_> {
+    type Prog = HarProgram;
+
+    fn sample_period(&self) -> f64 {
+        self.spec.sample_period
+    }
+
+    fn horizon(&self) -> f64 {
+        self.spec.horizon
+    }
+
+    fn program(&self, seed: u64) -> HarProgram {
+        let script = ActivityScript::generate(self.spec.horizon, seed);
+        HarProgram::new(self.ctx.asvm.clone(), WindowSource::Script(script))
+    }
+
+    fn harvester(&self, seed: u64) -> Harvester {
+        // The same deterministic script that feeds the classifier also
+        // shakes the harvester.
+        let script = ActivityScript::generate(self.spec.horizon, seed);
+        let accel = script.accel_magnitude(50.0);
+        Harvester::Replay(kinetic_power_trace(&accel, 50.0, &KineticConfig::default()))
+    }
+
+    fn smart_table(&self, _seed: u64) -> Option<SmartTable> {
+        // The table prices the anytime feature pipeline, which is the
+        // same for every volunteer; the seed only varies the inputs.
+        let mcu = McuModel::paper_default();
+        Some(smart_table(
+            &self.ctx.asvm,
+            &self.ctx.class_model,
+            self.ctx.full_accuracy,
+            &mcu,
+        ))
+    }
+}
+
+/// Run one HAR campaign under `policy`. Thin wrapper over
+/// [`run_campaign`] with [`HarWorkload`].
 pub fn run_har_policy(
     ctx: &HarContext,
     spec: &HarRunSpec,
     policy: Policy,
 ) -> Campaign<HarOutput> {
-    let script = ActivityScript::generate(spec.horizon, spec.script_seed);
-    let mcu = McuModel::paper_default();
-    let mut program =
-        HarProgram::new(ctx.asvm.clone(), WindowSource::Script(script.clone()));
-    match policy {
-        Policy::Continuous => {
-            run_continuous(&mut program, &mcu, spec.sample_period, spec.horizon)
-        }
-        _ => {
-            let accel = script.accel_magnitude(50.0);
-            let trace = kinetic_power_trace(&accel, 50.0, &KineticConfig::default());
-            let engine_cfg = EngineConfig::paper_default(spec.horizon);
-            let mut engine = Engine::new(engine_cfg, Harvester::Replay(trace));
-            match policy {
-                Policy::Chinchilla => {
-                    let cfg = ChinchillaConfig {
-                        sample_period: spec.sample_period,
-                        ..Default::default()
-                    };
-                    run_chinchilla(&mut program, &mut engine, &cfg)
-                }
-                Policy::Greedy => {
-                    run_approx(&mut program, &mut engine, &ApproxConfig::greedy(spec.sample_period))
-                }
-                Policy::Smart { bound } => {
-                    let table =
-                        smart_table(&ctx.asvm, &ctx.class_model, ctx.full_accuracy, &mcu);
-                    run_approx(
-                        &mut program,
-                        &mut engine,
-                        &ApproxConfig::smart(spec.sample_period, bound, table),
-                    )
-                }
-                Policy::Continuous => unreachable!(),
-            }
-        }
-    }
+    let workload = HarWorkload { ctx, spec: spec.clone() };
+    run_campaign(&workload, spec.script_seed, policy)
 }
 
 /// Fig. 4 — expected vs measured accuracy as a function of `p`.
@@ -147,11 +211,14 @@ pub struct PolicyRow {
     pub state_energy_fraction: f64,
 }
 
-/// The four intermittent policies of §5 plus the continuous ceiling.
+/// The five intermittent policies of §5 plus the continuous ceiling:
+/// both regular-intermittent baselines (checkpointing Chinchilla and
+/// task-based Alpaca) and the approximate runtimes.
 pub fn har_policies() -> Vec<Policy> {
     vec![
         Policy::Continuous,
         Policy::Chinchilla,
+        Policy::Alpaca,
         Policy::Greedy,
         Policy::Smart { bound: 0.60 },
         Policy::Smart { bound: 0.80 },
@@ -164,22 +231,20 @@ pub fn har_policy_comparison(
     spec: &HarRunSpec,
     volunteers: &[u64],
 ) -> Vec<PolicyRow> {
-    // campaigns[policy][volunteer]; all (policy, volunteer) devices run
-    // in parallel on OS threads (see EXPERIMENTS.md §Perf — this is the
-    // fleet pattern of coordinator::fleet applied to the figure sweeps).
+    // campaigns[policy][volunteer]; every (policy, volunteer) pair is one
+    // independent simulated device, dispatched through the bounded fleet
+    // pool (see EXPERIMENTS.md §Perf).
     let policies = har_policies();
-    let flat: Vec<Campaign<HarOutput>> = std::thread::scope(|scope| {
-        let handles: Vec<_> = policies
-            .iter()
-            .flat_map(|&p| {
-                volunteers.iter().map(move |&v| (p, v)).collect::<Vec<_>>()
-            })
-            .map(|(p, v)| {
-                let s = HarRunSpec { script_seed: v, ..spec.clone() };
-                scope.spawn(move || run_har_policy(ctx, &s, p))
-            })
-            .collect();
-        handles.into_iter().map(|h| h.join().expect("campaign thread")).collect()
+    if volunteers.is_empty() {
+        return Vec::new();
+    }
+    let jobs: Vec<(Policy, u64)> = policies
+        .iter()
+        .flat_map(|&p| volunteers.iter().map(move |&v| (p, v)))
+        .collect();
+    let flat: Vec<Campaign<HarOutput>> = run_fleet(&jobs, None, |&(p, v)| {
+        let s = HarRunSpec { script_seed: v, ..spec.clone() };
+        run_har_policy(ctx, &s, p)
     });
     let campaigns: Vec<Vec<Campaign<HarOutput>>> = flat
         .chunks(volunteers.len())
@@ -258,13 +323,34 @@ pub fn har_latency_histograms(
     volunteers: &[u64],
     max_cycles: usize,
 ) -> Vec<(Policy, crate::util::stats::Histogram)> {
-    [Policy::Greedy, Policy::Smart { bound: 0.80 }, Policy::Chinchilla]
+    let policies = [
+        Policy::Greedy,
+        Policy::Smart { bound: 0.80 },
+        Policy::Chinchilla,
+        Policy::Alpaca,
+    ];
+    if volunteers.is_empty() {
+        return policies
+            .iter()
+            .map(|&p| {
+                (p, crate::util::stats::Histogram::new(0.0, max_cycles as f64, max_cycles))
+            })
+            .collect();
+    }
+    let jobs: Vec<(Policy, u64)> = policies
         .iter()
-        .map(|&policy| {
+        .flat_map(|&p| volunteers.iter().map(move |&v| (p, v)))
+        .collect();
+    let flat: Vec<Campaign<HarOutput>> = run_fleet(&jobs, None, |&(p, v)| {
+        let s = HarRunSpec { script_seed: v, ..spec.clone() };
+        run_har_policy(ctx, &s, p)
+    });
+    policies
+        .iter()
+        .zip(flat.chunks(volunteers.len()))
+        .map(|(&policy, campaigns)| {
             let mut h = crate::util::stats::Histogram::new(0.0, max_cycles as f64, max_cycles);
-            for &v in volunteers {
-                let s = HarRunSpec { script_seed: v, ..spec.clone() };
-                let c = run_har_policy(ctx, &s, policy);
+            for c in campaigns {
                 for r in c.emitted() {
                     h.add(r.latency_cycles as f64);
                 }
@@ -293,38 +379,58 @@ impl Default for ImgRunSpec {
     }
 }
 
+/// The imaging workload: Harris corner detection over the synthetic
+/// picture pool, powered by one of the §6 ambient energy traces; `seed`
+/// selects the trace realisation and the picture order.
+pub struct ImgWorkload {
+    pub spec: ImgRunSpec,
+    pub trace: TraceKind,
+}
+
+impl Workload for ImgWorkload {
+    type Prog = CornerProgram;
+
+    fn sample_period(&self) -> f64 {
+        self.spec.sample_period
+    }
+
+    fn horizon(&self) -> f64 {
+        self.spec.horizon
+    }
+
+    fn program(&self, seed: u64) -> CornerProgram {
+        CornerProgram::paper_default(seed ^ 0x1196)
+    }
+
+    fn harvester(&self, seed: u64) -> Harvester {
+        Harvester::Replay(generate(self.trace, self.spec.horizon.min(1800.0), 0.01, seed))
+    }
+
+    fn smart_table(&self, seed: u64) -> Option<SmartTable> {
+        // SMART's "accuracy" proxy for imaging: the fraction of response
+        // rows computed (Fig. 12 shows corner equivalence degrading
+        // with the perforation rate, monotone in rows to first order).
+        // Price the same program the campaign runs.
+        let prog = self.program(seed);
+        let mcu = McuModel::paper_default();
+        let total = prog.num_steps();
+        let costs: Vec<OpCost> = (0..total).map(|j| prog.step_cost(j)).collect();
+        let profile = EnergyProfile::from_costs(&mcu, &costs);
+        let acc: Vec<f64> = (0..=total).map(|p| p as f64 / total as f64).collect();
+        let emit = mcu.energy(&prog.emit_cost());
+        Some(SmartTable::new(acc, &profile, emit))
+    }
+}
+
 /// Run one imaging campaign under `policy` on the given energy trace.
+/// Thin wrapper over [`run_campaign`] with [`ImgWorkload`].
 pub fn run_img_policy(
     spec: &ImgRunSpec,
     trace: TraceKind,
     policy: Policy,
 ) -> Campaign<CornerOutput> {
-    let mcu = McuModel::paper_default();
-    let mut program = CornerProgram::paper_default(spec.trace_seed ^ 0x1196);
-    match policy {
-        Policy::Continuous => {
-            run_continuous(&mut program, &mcu, spec.sample_period, spec.horizon)
-        }
-        _ => {
-            let power = generate(trace, spec.horizon.min(1800.0), 0.01, spec.trace_seed);
-            let engine_cfg = EngineConfig::paper_default(spec.horizon);
-            let mut engine = Engine::new(engine_cfg, Harvester::Replay(power));
-            match policy {
-                Policy::Chinchilla => {
-                    let cfg = ChinchillaConfig {
-                        sample_period: spec.sample_period,
-                        ..Default::default()
-                    };
-                    run_chinchilla(&mut program, &mut engine, &cfg)
-                }
-                _ => run_approx(
-                    &mut program,
-                    &mut engine,
-                    &ApproxConfig::greedy(spec.sample_period),
-                ),
-            }
-        }
-    }
+    let workload = ImgWorkload { spec: spec.clone(), trace };
+    run_campaign(&workload, spec.trace_seed, policy)
 }
 
 /// Fig. 12 — corner output vs perforation rate per picture kind.
@@ -376,29 +482,25 @@ pub fn fig13_by_picture(
     spec: &ImgRunSpec,
 ) -> Vec<(crate::imgproc::images::Picture, f64)> {
     let size = crate::imgproc::images::EVAL_SIZE;
-    let campaigns: Vec<_> = TraceKind::ALL
-        .iter()
-        .map(|&trace| run_img_policy(spec, trace, Policy::Greedy))
-        .collect();
+    let campaigns: Vec<_> =
+        run_fleet(&TraceKind::ALL, None, |&trace| run_img_policy(spec, trace, Policy::Greedy));
     let refs: Vec<&Campaign<CornerOutput>> = campaigns.iter().collect();
     super::metrics::corner_equivalence_by_picture(&refs, size)
 }
 
 pub fn img_trace_comparison(spec: &ImgRunSpec) -> Vec<ImgTraceRow> {
     let size = crate::imgproc::images::EVAL_SIZE;
-    // One thread per (trace, policy) device, as in the HAR sweeps.
-    let runs: Vec<Campaign<CornerOutput>> = std::thread::scope(|scope| {
-        let handles: Vec<_> = TraceKind::ALL
-            .iter()
-            .flat_map(|&t| {
-                [Policy::Continuous, Policy::Greedy, Policy::Chinchilla]
-                    .into_iter()
-                    .map(move |p| (t, p))
-            })
-            .map(|(t, p)| scope.spawn(move || run_img_policy(spec, t, p)))
-            .collect();
-        handles.into_iter().map(|h| h.join().expect("imaging thread")).collect()
-    });
+    // One fleet job per (trace, policy) device, as in the HAR sweeps.
+    let jobs: Vec<(TraceKind, Policy)> = TraceKind::ALL
+        .iter()
+        .flat_map(|&t| {
+            [Policy::Continuous, Policy::Greedy, Policy::Chinchilla]
+                .into_iter()
+                .map(move |p| (t, p))
+        })
+        .collect();
+    let runs: Vec<Campaign<CornerOutput>> =
+        run_fleet(&jobs, None, |&(t, p)| run_img_policy(spec, t, p));
     TraceKind::ALL
         .iter()
         .enumerate()

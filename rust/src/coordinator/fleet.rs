@@ -1,40 +1,104 @@
 //! Device-fleet orchestration.
 //!
 //! The paper manufactures 12 identical prototypes and runs 15 volunteers
-//! across 24 days. Fleet runs parallelise that across OS threads: each
-//! (volunteer, policy) pair is one independent simulated device; the
-//! coordinator joins the results deterministically (ordering never
-//! depends on thread scheduling).
+//! across 24 days. Fleet runs parallelise that: each job (a volunteer's
+//! wrist device, an imaging device on an energy trace, a figure sweep
+//! cell) is one independent simulated device, executed on a **bounded
+//! worker pool** capped at the machine's available parallelism. Results
+//! are returned **in job order** — never in completion order — so fleet
+//! output is deterministic whatever the pool size or thread scheduling.
 
-use crate::coordinator::experiment::{run_har_policy, HarContext, HarRunSpec};
+use crate::coordinator::experiment::{
+    run_har_policy, run_img_policy, HarContext, HarRunSpec, ImgRunSpec,
+};
+use crate::energy::traces::TraceKind;
 use crate::exec::{Campaign, Policy};
 use crate::har::app::HarOutput;
+use crate::imgproc::app::CornerOutput;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
-/// One fleet assignment: a simulated device on a volunteer's wrist.
+/// The pool cap: one worker per available core.
+pub fn max_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Run `run` over every job on a bounded worker pool and return the
+/// results **in job order**.
+///
+/// `workers` requests a pool size; it is clamped to
+/// `[1, available_parallelism]` and never exceeds the job count. Workers
+/// pull job indices from a shared counter, so an expensive job never
+/// head-of-line-blocks the rest of the fleet; each result lands in the
+/// slot of its job index, which makes the output independent of both the
+/// pool size and the OS scheduler.
+pub fn run_fleet<J, T, F>(jobs: &[J], workers: Option<usize>, run: F) -> Vec<T>
+where
+    J: Sync,
+    T: Send,
+    F: Fn(&J) -> T + Sync,
+{
+    let cap = max_workers();
+    let workers = workers.unwrap_or(cap).clamp(1, cap).min(jobs.len().max(1));
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<T>>> = jobs.iter().map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= jobs.len() {
+                    break;
+                }
+                let result = run(&jobs[i]);
+                *slots[i].lock().expect("fleet slot poisoned") = Some(result);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|slot| {
+            slot.into_inner()
+                .expect("fleet slot poisoned")
+                .expect("fleet job did not complete")
+        })
+        .collect()
+}
+
+/// One HAR fleet assignment: a simulated device on a volunteer's wrist.
 #[derive(Clone, Debug)]
 pub struct Assignment {
     pub volunteer: u64,
     pub policy: Policy,
 }
 
-/// Run all assignments in parallel (bounded by available cores via the
-/// OS scheduler; each campaign is single-threaded and independent).
+/// Run all HAR assignments on the bounded pool; results in assignment
+/// order.
 pub fn run_har_fleet(
     ctx: &HarContext,
     spec: &HarRunSpec,
     assignments: &[Assignment],
 ) -> Vec<Campaign<HarOutput>> {
-    std::thread::scope(|scope| {
-        let handles: Vec<_> = assignments
-            .iter()
-            .map(|a| {
-                let spec = HarRunSpec { script_seed: a.volunteer, ..spec.clone() };
-                let policy = a.policy;
-                scope.spawn(move || run_har_policy(ctx, &spec, policy))
-            })
-            .collect();
-        handles.into_iter().map(|h| h.join().expect("device thread panicked")).collect()
+    run_fleet(assignments, None, |a| {
+        let spec = HarRunSpec { script_seed: a.volunteer, ..spec.clone() };
+        run_har_policy(ctx, &spec, a.policy)
     })
+}
+
+/// One imaging fleet assignment: a simulated device on an ambient energy
+/// trace.
+#[derive(Clone, Debug)]
+pub struct ImgAssignment {
+    pub trace: TraceKind,
+    pub policy: Policy,
+}
+
+/// Run all imaging assignments on the bounded pool; results in
+/// assignment order — the imgproc twin of [`run_har_fleet`].
+pub fn run_img_fleet(
+    spec: &ImgRunSpec,
+    assignments: &[ImgAssignment],
+) -> Vec<Campaign<CornerOutput>> {
+    run_fleet(assignments, None, |a| run_img_policy(spec, a.trace, a.policy))
 }
 
 /// The paper's §5.3 wrist setup: per volunteer, one device under `policy`
@@ -57,6 +121,22 @@ mod tests {
     use crate::coordinator::experiment::test_context;
 
     #[test]
+    fn pool_preserves_job_order_for_any_worker_count() {
+        let jobs: Vec<usize> = (0..37).collect();
+        let reference: Vec<usize> = jobs.iter().map(|j| j * j).collect();
+        for workers in [1, 2, 3, 8, 64] {
+            let got = run_fleet(&jobs, Some(workers), |&j| j * j);
+            assert_eq!(got, reference, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn pool_handles_empty_job_lists() {
+        let got: Vec<usize> = run_fleet(&[] as &[usize], None, |&j| j);
+        assert!(got.is_empty());
+    }
+
+    #[test]
     fn fleet_runs_match_sequential_runs() {
         let ctx = test_context();
         let spec = HarRunSpec { horizon: 900.0, ..Default::default() };
@@ -72,6 +152,21 @@ mod tests {
             &HarRunSpec { script_seed: 1, ..spec.clone() },
             Policy::Greedy,
         );
+        assert_eq!(fleet[0].rounds.len(), solo.rounds.len());
+        assert_eq!(fleet[0].power_cycles, solo.power_cycles);
+    }
+
+    #[test]
+    fn img_fleet_has_har_parity() {
+        let spec = ImgRunSpec { horizon: 400.0, ..Default::default() };
+        let assignments = vec![
+            ImgAssignment { trace: TraceKind::Som, policy: Policy::Greedy },
+            ImgAssignment { trace: TraceKind::Rf, policy: Policy::Greedy },
+        ];
+        let fleet = run_img_fleet(&spec, &assignments);
+        assert_eq!(fleet.len(), 2);
+        // Deterministic twin of the sequential run.
+        let solo = run_img_policy(&spec, TraceKind::Som, Policy::Greedy);
         assert_eq!(fleet[0].rounds.len(), solo.rounds.len());
         assert_eq!(fleet[0].power_cycles, solo.power_cycles);
     }

@@ -3,11 +3,15 @@
 //!
 //! * [`metrics`] — accuracy, coherence (the §5.3 alignment rule),
 //!   throughput ratios and latency distributions over campaigns.
-//! * [`experiment`] — the per-figure experiment definitions: HAR contexts
-//!   (corpus → training → Eq. 7 tables → kinetic-powered campaigns) and
-//!   imaging campaigns over the five energy traces.
-//! * [`fleet`] — multi-device / multi-volunteer orchestration on OS
-//!   threads (the paper's 12 prototypes and 15 volunteers).
+//! * [`experiment`] — the [`experiment::Workload`] abstraction (how a
+//!   workload builds its program, harvester, and SMART table), the
+//!   generic [`experiment::run_campaign`] driver, and the per-figure
+//!   experiment definitions: HAR contexts (corpus → training → Eq. 7
+//!   tables → kinetic-powered campaigns) and imaging campaigns over the
+//!   five energy traces.
+//! * [`fleet`] — workload-generic multi-device orchestration (the
+//!   paper's 12 prototypes and 15 volunteers) on a bounded worker pool
+//!   with deterministic, job-ordered results.
 //! * [`report`] — figure data as markdown tables + CSV under `out/`.
 
 pub mod experiment;

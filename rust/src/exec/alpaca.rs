@@ -1,0 +1,300 @@
+//! The Alpaca baseline: task-based intermittent computing without
+//! checkpoints (Maeng, Colin & Lucia, OOPSLA'17).
+//!
+//! Instead of snapshotting volatile state, the program is decomposed into
+//! *tasks* of a few steps each. A task reads task-shared variables that
+//! live in FRAM, keeps its work in *privatization buffers* (redo-log
+//! copies of every task-shared word it will overwrite), and at the task
+//! boundary atomically *commits* the buffers back to the task-shared
+//! state (a two-phase swap). A power failure therefore never corrupts
+//! state: on reboot the runtime re-reads the committed task-shared
+//! variables and re-executes the interrupted task from its start —
+//! redo-at-task-granularity rather than restore-from-checkpoint.
+//!
+//! Compared with Chinchilla, Alpaca pays no checkpoint-sized FRAM bursts
+//! (commits write only the task's delta) but re-executes more work per
+//! failure (a whole task) and pays privatization writes on every
+//! WAR-prone step. Like Chinchilla — and unlike the approximate
+//! runtimes — it is always precise: results are emitted at maximum
+//! accuracy, stretched across as many power cycles as the energy trace
+//! dictates.
+
+use crate::energy::mcu::OpCost;
+use crate::exec::engine::{Engine, Ledger, OpOutcome};
+use crate::exec::runtime::{RoundDriver, RoundOutcome, RoundStrategy, Runtime};
+use crate::exec::{Campaign, StepProgram};
+
+/// Alpaca tuning knobs.
+#[derive(Clone, Debug)]
+pub struct AlpacaConfig {
+    /// Steps per task (the task decomposition granularity). Small tasks
+    /// waste energy on commits; large tasks waste energy on re-execution
+    /// after every failure.
+    pub steps_per_task: usize,
+    /// Fixed cycles per task commit (the two-phase pointer swap and
+    /// bookkeeping before the FRAM burst).
+    pub commit_cycles: u64,
+    /// Fixed cycles to re-enter the interrupted task after a reboot
+    /// (task dispatcher + reading the task-shared variables).
+    pub restore_cycles: u64,
+    /// Seconds between sampling slots.
+    pub sample_period: f64,
+}
+
+impl Default for AlpacaConfig {
+    fn default() -> AlpacaConfig {
+        AlpacaConfig {
+            steps_per_task: 8,
+            commit_cycles: 300,
+            restore_cycles: 250,
+            sample_period: 60.0,
+        }
+    }
+}
+
+/// The Alpaca executor in [`Runtime`] form.
+pub struct AlpacaRuntime {
+    pub cfg: AlpacaConfig,
+}
+
+impl AlpacaRuntime {
+    pub fn new(cfg: AlpacaConfig) -> AlpacaRuntime {
+        AlpacaRuntime { cfg }
+    }
+
+    /// Reboot recovery: pay the dispatcher + task-shared reads, then
+    /// rebuild the program state the committed FRAM variables encode by
+    /// replaying the committed prefix (replay is free — the energy was
+    /// billed when the commits were written).
+    fn reenter<P: StepProgram>(&self, program: &mut P, engine: &mut Engine, committed: usize) {
+        let cost = OpCost {
+            cycles: self.cfg.restore_cycles,
+            fram_reads: program.state_words(committed),
+            ..Default::default()
+        };
+        let _ = engine.run_op(&cost, Ledger::State);
+        program.reset_round();
+        for j in 0..committed {
+            program.execute_step(j);
+        }
+    }
+}
+
+impl<P: StepProgram> RoundStrategy<P> for AlpacaRuntime {
+    fn round(&self, program: &mut P, engine: &mut Engine) -> RoundOutcome<P::Output> {
+        let cfg = &self.cfg;
+        program.plan(program.num_steps()); // Alpaca is always precise.
+
+        // Acquire the sensor window; commit the raw input into the
+        // task-shared FRAM state so the sample survives power failures.
+        loop {
+            if engine.run_op(&program.acquire_cost(), Ledger::App) == OpOutcome::Done {
+                let persist = OpCost {
+                    cycles: cfg.commit_cycles,
+                    fram_writes: program.state_words(0),
+                    ..Default::default()
+                };
+                if engine.run_op(&persist, Ledger::State) == OpOutcome::Done {
+                    break;
+                }
+            }
+            // Brown-out during acquisition: window lost; reboot, retry
+            // with a fresh window (the same logical sample).
+            program.reset_round();
+            if !engine.charge_until_boot() {
+                return RoundOutcome::Expired;
+            }
+        }
+
+        let total = program.planned_steps();
+        let mut committed = 0usize; // first step of the current task
+        let mut k = 0usize; // next step to run
+
+        'tasks: while committed < total {
+            let task_end = (committed + cfg.steps_per_task.max(1)).min(total);
+
+            // Execute the task's steps, privatizing WAR-prone words as
+            // redo-log copies in FRAM.
+            while k < task_end {
+                let step_cost = program.step_cost(k);
+                if engine.run_op(&step_cost, Ledger::App) == OpOutcome::BrownOut {
+                    if !engine.charge_until_boot() {
+                        return RoundOutcome::Expired;
+                    }
+                    self.reenter(program, engine, committed);
+                    k = committed;
+                    continue 'tasks;
+                }
+                let war = program.war_words(k);
+                if war > 0 {
+                    let privatize = OpCost { fram_writes: war, ..Default::default() };
+                    if engine.run_op(&privatize, Ledger::State) == OpOutcome::BrownOut {
+                        if !engine.charge_until_boot() {
+                            return RoundOutcome::Expired;
+                        }
+                        self.reenter(program, engine, committed);
+                        k = committed;
+                        continue 'tasks;
+                    }
+                }
+                program.execute_step(k);
+                k += 1;
+            }
+
+            // Two-phase commit: swap the privatization buffers into the
+            // task-shared state. Only the task's delta is written — this
+            // is Alpaca's edge over checkpoint-sized FRAM bursts.
+            let delta = program
+                .state_words(task_end)
+                .saturating_sub(program.state_words(committed))
+                .max(1);
+            let commit = OpCost {
+                cycles: cfg.commit_cycles,
+                fram_writes: delta,
+                ..Default::default()
+            };
+            match engine.run_op(&commit, Ledger::State) {
+                OpOutcome::Done => committed = task_end,
+                OpOutcome::BrownOut => {
+                    // The swap did not happen: the task redoes entirely.
+                    if !engine.charge_until_boot() {
+                        return RoundOutcome::Expired;
+                    }
+                    self.reenter(program, engine, committed);
+                    k = committed;
+                }
+            }
+        }
+
+        // Emit; the result lives in task-shared FRAM, so retries survive
+        // power failures by re-entering the (fully committed) state.
+        loop {
+            match engine.run_op(&program.emit_cost(), Ledger::App) {
+                OpOutcome::Done => {
+                    return RoundOutcome::Emitted {
+                        emitted_at: engine.now,
+                        steps: total,
+                        output: program.output(),
+                    };
+                }
+                OpOutcome::BrownOut => {
+                    if !engine.charge_until_boot() {
+                        return RoundOutcome::Expired;
+                    }
+                    self.reenter(program, engine, total);
+                }
+            }
+        }
+    }
+}
+
+impl<P: StepProgram> Runtime<P> for AlpacaRuntime {
+    fn run(&self, program: &mut P, engine: &mut Engine) -> Campaign<P::Output> {
+        RoundDriver::new(self.cfg.sample_period).drive(program, engine, self)
+    }
+}
+
+/// Run the Alpaca baseline on the given engine until the campaign horizon
+/// or the input stream ends. Thin wrapper over [`AlpacaRuntime`].
+pub fn run<P: StepProgram>(
+    program: &mut P,
+    engine: &mut Engine,
+    cfg: &AlpacaConfig,
+) -> Campaign<P::Output> {
+    AlpacaRuntime::new(cfg.clone()).run(program, engine)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energy::harvester::Harvester;
+    use crate::exec::engine::EngineConfig;
+    use crate::exec::program::SyntheticProgram;
+
+    fn engine(power: f64, max_time: f64) -> Engine {
+        Engine::new(EngineConfig::paper_default(max_time), Harvester::Constant(power))
+    }
+
+    #[test]
+    fn always_full_precision() {
+        // 140 steps x 400k cycles ≈ 17 mJ ≫ the ~7 mJ usable buffer:
+        // every sample needs several power cycles, yet outputs stay
+        // precise.
+        let mut p = SyntheticProgram::new(4, 140, 400_000);
+        let mut e = engine(0.5e-3, 4.0 * 3600.0);
+        let c = run(&mut p, &mut e, &AlpacaConfig::default());
+        assert_eq!(c.rounds.len(), 4);
+        assert!(c.rounds.iter().all(|r| r.emitted_at.is_some()));
+        assert!(c.rounds.iter().all(|r| r.output == Some(140)));
+        assert!(c.power_failures > 0, "should have browned out");
+        // Commits + privatization cost real energy.
+        assert!(c.state_energy > 0.0);
+    }
+
+    #[test]
+    fn latency_spans_cycles_under_scarcity() {
+        let mut p = SyntheticProgram::new(3, 140, 400_000);
+        let mut e = engine(1.0e-3, 6.0 * 3600.0);
+        let c = run(&mut p, &mut e, &AlpacaConfig::default());
+        let max_latency = c.rounds.iter().map(|r| r.latency_cycles).max().unwrap_or(0);
+        assert!(max_latency >= 1, "expected multi-cycle latency");
+    }
+
+    #[test]
+    fn single_cycle_when_program_is_tiny() {
+        let mut p = SyntheticProgram::new(3, 4, 1_000);
+        let mut e = engine(2e-3, 3600.0);
+        let c = run(&mut p, &mut e, &AlpacaConfig::default());
+        assert_eq!(c.rounds.len(), 3);
+        assert!(c.rounds.iter().all(|r| r.latency_cycles == 0));
+    }
+
+    #[test]
+    fn commits_are_cheaper_than_chinchilla_checkpoints() {
+        // Same program, same energy: Alpaca's delta-commits should bill
+        // less to the state ledger than Chinchilla's cumulative-state
+        // checkpoints on a program whose live state grows with progress.
+        let horizon = 4.0 * 3600.0;
+        let mut pa = SyntheticProgram::new(3, 140, 400_000);
+        let mut ea = engine(0.5e-3, horizon);
+        let alpaca = run(&mut pa, &mut ea, &AlpacaConfig::default());
+
+        let mut pc = SyntheticProgram::new(3, 140, 400_000);
+        let mut ec = engine(0.5e-3, horizon);
+        let chin = crate::exec::chinchilla::run(
+            &mut pc,
+            &mut ec,
+            &crate::exec::chinchilla::ChinchillaConfig::default(),
+        );
+        assert!(
+            alpaca.state_energy < chin.state_energy,
+            "alpaca {} >= chinchilla {}",
+            alpaca.state_energy,
+            chin.state_energy
+        );
+    }
+
+    #[test]
+    fn task_granularity_trades_commits_for_redo() {
+        // One huge task commits once but redoes everything on failure;
+        // with abundant energy (no failures) it must be the cheaper
+        // state-ledger option.
+        let mut p1 = SyntheticProgram::new(2, 40, 10_000);
+        let mut e1 = engine(3e-3, 3600.0);
+        let coarse = AlpacaConfig { steps_per_task: 40, ..Default::default() };
+        let c1 = run(&mut p1, &mut e1, &coarse);
+
+        let mut p2 = SyntheticProgram::new(2, 40, 10_000);
+        let mut e2 = engine(3e-3, 3600.0);
+        let fine = AlpacaConfig { steps_per_task: 1, ..Default::default() };
+        let c2 = run(&mut p2, &mut e2, &fine);
+
+        assert!(c1.power_failures == 0 && c2.power_failures == 0);
+        assert!(
+            c1.state_energy < c2.state_energy,
+            "coarse {} >= fine {}",
+            c1.state_energy,
+            c2.state_energy
+        );
+    }
+}

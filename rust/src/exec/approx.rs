@@ -17,7 +17,8 @@
 
 use crate::energy::estimator::SmartTable;
 use crate::exec::engine::{Engine, Ledger, OpOutcome};
-use crate::exec::{Campaign, RoundResult, StepProgram};
+use crate::exec::runtime::{RoundDriver, RoundOutcome, RoundStrategy, Runtime};
+use crate::exec::{Campaign, StepProgram};
 
 /// Approximate runtime configuration.
 #[derive(Clone, Debug)]
@@ -55,32 +56,24 @@ impl ApproxConfig {
     }
 }
 
-/// Run the approximate-intermittent runtime until the campaign horizon or
-/// the end of the input stream.
-pub fn run<P: StepProgram>(
-    program: &mut P,
-    engine: &mut Engine,
-    cfg: &ApproxConfig,
-) -> Campaign<P::Output> {
-    let mut rounds: Vec<RoundResult<P::Output>> = Vec::new();
-    let mut sample_id = 0u64;
+/// The GREEDY/SMART executor in [`Runtime`] form.
+pub struct ApproxRuntime {
+    pub cfg: ApproxConfig,
+}
 
-    'campaign: while !engine.out_of_time() {
-        if !engine.cap.alive() && !engine.charge_until_boot() {
-            break;
-        }
-        if !program.load_next(engine.now) {
-            break;
-        }
-        let acquired_at = engine.now;
-        let acquired_cycle = engine.cycles;
+impl ApproxRuntime {
+    pub fn new(cfg: ApproxConfig) -> ApproxRuntime {
+        ApproxRuntime { cfg }
+    }
+}
 
+impl<P: StepProgram> RoundStrategy<P> for ApproxRuntime {
+    fn round(&self, program: &mut P, engine: &mut Engine) -> RoundOutcome<P::Output> {
+        let cfg = &self.cfg;
         // Acquire the sensor window. A brown-out here loses the sample;
         // there is no retry state — we just move on after recharging.
         if engine.run_op(&program.acquire_cost(), Ledger::App) == OpOutcome::BrownOut {
-            rounds.push(lost(sample_id, acquired_at));
-            sample_id += 1;
-            continue 'campaign;
+            return RoundOutcome::Dropped { steps: 0, sleep: false };
         }
 
         let emit_energy = engine.mcu.energy(&program.emit_cost());
@@ -91,27 +84,12 @@ pub fn run<P: StepProgram>(
         if let Some(smart) = &cfg.smart {
             let budget = match engine.read_budget() {
                 Some(b) => b,
-                None => {
-                    rounds.push(lost(sample_id, acquired_at));
-                    sample_id += 1;
-                    continue 'campaign;
-                }
+                None => return RoundOutcome::Dropped { steps: 0, sleep: false },
             };
             match smart.table.feasible(budget, smart.bound) {
-                None => {
-                    // Skip this round: record the dropped sample, sleep.
-                    rounds.push(RoundResult {
-                        sample_id,
-                        acquired_at,
-                        emitted_at: None,
-                        latency_cycles: 0,
-                        steps_executed: 0,
-                        output: None,
-                    });
-                    sample_id += 1;
-                    let _ = engine.sleep_until_next_slot(cfg.sample_period);
-                    continue 'campaign;
-                }
+                // Infeasible: skip this round deliberately and wait for
+                // the next sampling slot.
+                None => return RoundOutcome::Dropped { steps: 0, sleep: true },
                 Some(p_required) => {
                     // Run p' steps unconditionally; the table guarantees
                     // they plus the emission fit the budget.
@@ -119,9 +97,7 @@ pub fn run<P: StepProgram>(
                     while k < program.planned_steps() {
                         let cost = program.step_cost(k);
                         if engine.run_op(&cost, Ledger::App) == OpOutcome::BrownOut {
-                            rounds.push(lost(sample_id, acquired_at));
-                            sample_id += 1;
-                            continue 'campaign;
+                            return RoundOutcome::Dropped { steps: k, sleep: false };
                         }
                         program.execute_step(k);
                         k += 1;
@@ -131,9 +107,11 @@ pub fn run<P: StepProgram>(
         }
 
         // GREEDY refinement: extend the plan step by step while the live
-        // budget covers (next step + emission) with margin.
+        // budget covers (next step + emission) with margin. Planned steps
+        // are nested prefixes, so previewing step k's cost before
+        // planning it is exact.
         while k < total {
-            let next_cost = engine.mcu.energy(&program.step_cost_preview(k));
+            let next_cost = engine.mcu.energy(&program.step_cost(k));
             let needed = (next_cost + emit_energy) * cfg.margin;
             if engine.cap.usable_energy() < needed {
                 break;
@@ -141,9 +119,7 @@ pub fn run<P: StepProgram>(
             program.plan(k + 1);
             let cost = program.step_cost(k);
             if engine.run_op(&cost, Ledger::App) == OpOutcome::BrownOut {
-                rounds.push(lost(sample_id, acquired_at));
-                sample_id += 1;
-                continue 'campaign;
+                return RoundOutcome::Dropped { steps: k, sleep: false };
             }
             program.execute_step(k);
             k += 1;
@@ -151,61 +127,30 @@ pub fn run<P: StepProgram>(
 
         // Emit — by construction within the same power cycle.
         match engine.run_op(&program.emit_cost(), Ledger::App) {
-            OpOutcome::Done => {
-                rounds.push(RoundResult {
-                    sample_id,
-                    acquired_at,
-                    emitted_at: Some(engine.now),
-                    latency_cycles: engine.cycles - acquired_cycle,
-                    steps_executed: k,
-                    output: Some(program.output()),
-                });
-            }
-            OpOutcome::BrownOut => {
-                rounds.push(lost(sample_id, acquired_at));
-            }
+            OpOutcome::Done => RoundOutcome::Emitted {
+                emitted_at: engine.now,
+                steps: k,
+                output: program.output(),
+            },
+            OpOutcome::BrownOut => RoundOutcome::Dropped { steps: k, sleep: true },
         }
-        sample_id += 1;
-
-        // Sleep to the next sampling slot; if we die, the loop recharges.
-        let _ = engine.sleep_until_next_slot(cfg.sample_period);
-    }
-
-    Campaign {
-        rounds,
-        duration: engine.now,
-        power_failures: engine.failures,
-        power_cycles: engine.cycles,
-        app_energy: engine.app_energy,
-        state_energy: engine.state_energy,
     }
 }
 
-fn lost<O>(sample_id: u64, acquired_at: f64) -> RoundResult<O> {
-    RoundResult {
-        sample_id,
-        acquired_at,
-        emitted_at: None,
-        latency_cycles: 0,
-        steps_executed: 0,
-        output: None,
+impl<P: StepProgram> Runtime<P> for ApproxRuntime {
+    fn run(&self, program: &mut P, engine: &mut Engine) -> Campaign<P::Output> {
+        RoundDriver::new(self.cfg.sample_period).drive(program, engine, self)
     }
 }
 
-/// Cost preview used by the GREEDY look-ahead: the cost step `k` *will*
-/// have once planned. Default planning is monotone so previewing via a
-/// temporary plan is exact; programs expose it directly to avoid
-/// mutating the plan for a read.
-trait StepCostPreview {
-    fn step_cost_preview(&self, k: usize) -> crate::energy::mcu::OpCost;
-}
-
-impl<P: StepProgram> StepCostPreview for P {
-    fn step_cost_preview(&self, k: usize) -> crate::energy::mcu::OpCost {
-        // Planned steps are nested prefixes; cost of step k is defined by
-        // the program for any k < num_steps() regardless of current plan.
-        self.step_cost(k)
-    }
+/// Run the approximate-intermittent runtime until the campaign horizon or
+/// the end of the input stream. Thin wrapper over [`ApproxRuntime`].
+pub fn run<P: StepProgram>(
+    program: &mut P,
+    engine: &mut Engine,
+    cfg: &ApproxConfig,
+) -> Campaign<P::Output> {
+    ApproxRuntime::new(cfg.clone()).run(program, engine)
 }
 
 #[cfg(test)]

@@ -17,7 +17,8 @@
 
 use crate::energy::mcu::OpCost;
 use crate::exec::engine::{Engine, Ledger, OpOutcome};
-use crate::exec::{Campaign, RoundResult, StepProgram};
+use crate::exec::runtime::{RoundDriver, RoundOutcome, RoundStrategy, Runtime};
+use crate::exec::{Campaign, StepProgram};
 
 /// Chinchilla tuning knobs.
 #[derive(Clone, Debug)]
@@ -43,27 +44,21 @@ impl Default for ChinchillaConfig {
     }
 }
 
-/// Run the Chinchilla baseline on the given engine until the campaign
-/// horizon or the input stream ends.
-pub fn run<P: StepProgram>(
-    program: &mut P,
-    engine: &mut Engine,
-    cfg: &ChinchillaConfig,
-) -> Campaign<P::Output> {
-    let mut rounds: Vec<RoundResult<P::Output>> = Vec::new();
-    let mut sample_id = 0u64;
+/// The Chinchilla baseline in [`Runtime`] form.
+pub struct ChinchillaRuntime {
+    pub cfg: ChinchillaConfig,
+}
 
-    'campaign: while !engine.out_of_time() {
-        // Make sure we are alive before acquiring.
-        if !engine.cap.alive() && !engine.charge_until_boot() {
-            break;
-        }
-        if !program.load_next(engine.now) {
-            break;
-        }
+impl ChinchillaRuntime {
+    pub fn new(cfg: ChinchillaConfig) -> ChinchillaRuntime {
+        ChinchillaRuntime { cfg }
+    }
+}
+
+impl<P: StepProgram> RoundStrategy<P> for ChinchillaRuntime {
+    fn round(&self, program: &mut P, engine: &mut Engine) -> RoundOutcome<P::Output> {
+        let cfg = &self.cfg;
         program.plan(program.num_steps()); // Chinchilla is always precise.
-        let acquired_at = engine.now;
-        let acquired_cycle = engine.cycles;
 
         // Acquire the sensor window; persist the raw input to FRAM so the
         // sample can survive power failures (state ledger).
@@ -81,7 +76,7 @@ pub fn run<P: StepProgram>(
             // with a fresh window (counts as the same logical sample).
             program.reset_round();
             if !engine.charge_until_boot() {
-                break 'campaign;
+                return RoundOutcome::Expired;
             }
         }
 
@@ -91,7 +86,6 @@ pub fn run<P: StepProgram>(
         let mut last_ckpt = 0usize; // step index the FRAM state reflects
         let mut interval = 1u64; // steps between checkpoints
         let mut survived_in_interval = 0u64;
-        let mut emitted_at = None;
 
         'process: loop {
             if k >= total {
@@ -99,12 +93,15 @@ pub fn run<P: StepProgram>(
                 // by the last checkpoint, which for k == total we force).
                 match engine.run_op(&program.emit_cost(), Ledger::App) {
                     OpOutcome::Done => {
-                        emitted_at = Some(engine.now);
-                        break 'process;
+                        return RoundOutcome::Emitted {
+                            emitted_at: engine.now,
+                            steps: total,
+                            output: program.output(),
+                        };
                     }
                     OpOutcome::BrownOut => {
                         if !engine.charge_until_boot() {
-                            break 'campaign;
+                            return RoundOutcome::Expired;
                         }
                         restore(program, engine, cfg, last_ckpt);
                         k = last_ckpt;
@@ -136,7 +133,7 @@ pub fn run<P: StepProgram>(
                     }
                     OpOutcome::BrownOut => {
                         if !engine.charge_until_boot() {
-                            break 'campaign;
+                            return RoundOutcome::Expired;
                         }
                         restore(program, engine, cfg, last_ckpt);
                         k = last_ckpt;
@@ -157,7 +154,7 @@ pub fn run<P: StepProgram>(
                         let cost = OpCost { fram_writes: war, ..Default::default() };
                         if engine.run_op(&cost, Ledger::State) == OpOutcome::BrownOut {
                             if !engine.charge_until_boot() {
-                                break 'campaign;
+                                return RoundOutcome::Expired;
                             }
                             restore(program, engine, cfg, last_ckpt);
                             k = last_ckpt;
@@ -171,7 +168,7 @@ pub fn run<P: StepProgram>(
                 }
                 OpOutcome::BrownOut => {
                     if !engine.charge_until_boot() {
-                        break 'campaign;
+                        return RoundOutcome::Expired;
                     }
                     restore(program, engine, cfg, last_ckpt);
                     k = last_ckpt;
@@ -180,32 +177,24 @@ pub fn run<P: StepProgram>(
                 }
             }
         }
-
-        let latency_cycles = engine.cycles - acquired_cycle;
-        rounds.push(RoundResult {
-            sample_id,
-            acquired_at,
-            emitted_at,
-            latency_cycles,
-            steps_executed: total,
-            output: emitted_at.map(|_| program.output()),
-        });
-        sample_id += 1;
-
-        // Sleep to the next sampling slot (recharge happens implicitly).
-        if emitted_at.is_some() && !engine.sleep_until_next_slot(cfg.sample_period) {
-            // Died while sleeping; the loop head recharges.
-        }
     }
+}
 
-    Campaign {
-        rounds,
-        duration: engine.now,
-        power_failures: engine.failures,
-        power_cycles: engine.cycles,
-        app_energy: engine.app_energy,
-        state_energy: engine.state_energy,
+impl<P: StepProgram> Runtime<P> for ChinchillaRuntime {
+    fn run(&self, program: &mut P, engine: &mut Engine) -> Campaign<P::Output> {
+        RoundDriver::new(self.cfg.sample_period).drive(program, engine, self)
     }
+}
+
+/// Run the Chinchilla baseline on the given engine until the campaign
+/// horizon or the input stream ends. Thin wrapper over
+/// [`ChinchillaRuntime`].
+pub fn run<P: StepProgram>(
+    program: &mut P,
+    engine: &mut Engine,
+    cfg: &ChinchillaConfig,
+) -> Campaign<P::Output> {
+    ChinchillaRuntime::new(cfg.clone()).run(program, engine)
 }
 
 /// Pay the restore cost and rebuild program state to `last_ckpt` by

@@ -3,62 +3,74 @@
 //! The ceiling every paper figure normalises against: processes every
 //! sampling slot with *all* steps (maximum accuracy), never browns out.
 //! Time still flows through the MCU model so throughput is measured in the
-//! same units as the intermittent runtimes.
+//! same units as the intermittent runtimes. Through [`Engine::powered`]
+//! the baseline shares the [`RoundDriver`] with every other policy — the
+//! only per-round behaviour it contributes is "run everything, emit".
 
 use crate::energy::mcu::McuModel;
-use crate::exec::{Campaign, RoundResult, StepProgram};
+use crate::exec::engine::{Engine, Ledger, OpOutcome};
+use crate::exec::runtime::{RoundDriver, RoundOutcome, RoundStrategy, Runtime};
+use crate::exec::{Campaign, StepProgram};
+
+/// The continuous (battery-powered) executor in [`Runtime`] form. Pair
+/// it with an [`Engine::powered`] engine; on a harvesting engine it
+/// behaves like an unprotected runtime and loses every sample a
+/// brown-out touches.
+pub struct ContinuousRuntime {
+    /// Seconds between sampling slots.
+    pub sample_period: f64,
+}
+
+impl ContinuousRuntime {
+    pub fn new(sample_period: f64) -> ContinuousRuntime {
+        ContinuousRuntime { sample_period }
+    }
+}
+
+impl<P: StepProgram> RoundStrategy<P> for ContinuousRuntime {
+    fn round(&self, program: &mut P, engine: &mut Engine) -> RoundOutcome<P::Output> {
+        if engine.run_op(&program.acquire_cost(), Ledger::App) == OpOutcome::BrownOut {
+            return RoundOutcome::Dropped { steps: 0, sleep: false };
+        }
+        // All steps, maximum accuracy.
+        program.plan(program.num_steps());
+        for j in 0..program.planned_steps() {
+            let cost = program.step_cost(j);
+            if engine.run_op(&cost, Ledger::App) == OpOutcome::BrownOut {
+                return RoundOutcome::Dropped { steps: j, sleep: false };
+            }
+            program.execute_step(j);
+        }
+        match engine.run_op(&program.emit_cost(), Ledger::App) {
+            OpOutcome::Done => RoundOutcome::Emitted {
+                emitted_at: engine.now,
+                steps: program.planned_steps(),
+                output: program.output(),
+            },
+            OpOutcome::BrownOut => {
+                RoundOutcome::Dropped { steps: program.planned_steps(), sleep: true }
+            }
+        }
+    }
+}
+
+impl<P: StepProgram> Runtime<P> for ContinuousRuntime {
+    fn run(&self, program: &mut P, engine: &mut Engine) -> Campaign<P::Output> {
+        RoundDriver::new(self.sample_period).drive(program, engine, self)
+    }
+}
 
 /// Run the continuous baseline: one full-precision round every
 /// `sample_period` seconds until `max_time` or the input stream ends.
+/// Thin wrapper over [`ContinuousRuntime`] on a powered engine.
 pub fn run<P: StepProgram>(
     program: &mut P,
     mcu: &McuModel,
     sample_period: f64,
     max_time: f64,
 ) -> Campaign<P::Output> {
-    let mut rounds = Vec::new();
-    let mut now = 0.0;
-    let mut sample_id = 0u64;
-    let mut app_energy = 0.0;
-    while now < max_time && program.load_next(now) {
-        let acquired_at = now;
-        // Acquire.
-        let ac = program.acquire_cost();
-        now += mcu.duration(&ac);
-        app_energy += mcu.energy(&ac);
-        // All steps.
-        program.plan(program.num_steps());
-        for j in 0..program.planned_steps() {
-            let cost = program.step_cost(j);
-            now += mcu.duration(&cost);
-            app_energy += mcu.energy(&cost);
-            program.execute_step(j);
-        }
-        // Emit.
-        let ec = program.emit_cost();
-        now += mcu.duration(&ec);
-        app_energy += mcu.energy(&ec);
-        rounds.push(RoundResult {
-            sample_id,
-            acquired_at,
-            emitted_at: Some(now),
-            latency_cycles: 0,
-            steps_executed: program.planned_steps(),
-            output: Some(program.output()),
-        });
-        sample_id += 1;
-        // Sleep to the next sampling slot.
-        let next = ((now / sample_period).floor() + 1.0) * sample_period;
-        now = next;
-    }
-    Campaign {
-        rounds,
-        duration: now.min(max_time),
-        power_failures: 0,
-        power_cycles: 0,
-        app_energy,
-        state_energy: 0.0,
-    }
+    let mut engine = Engine::powered(mcu.clone(), max_time);
+    ContinuousRuntime::new(sample_period).run(program, &mut engine)
 }
 
 #[cfg(test)]
@@ -94,5 +106,14 @@ mod tests {
         let c = run(&mut p, &mcu, 60.0, 1e6);
         assert!(c.app_energy > 0.0);
         assert_eq!(c.state_energy, 0.0);
+    }
+
+    #[test]
+    fn powered_campaign_counts_no_power_cycles() {
+        let mut p = SyntheticProgram::new(4, 5, 1000);
+        let mcu = McuModel::paper_default();
+        let c = run(&mut p, &mcu, 60.0, 1e6);
+        assert_eq!(c.power_cycles, 0);
+        assert!(c.rounds.iter().all(|r| r.emitted_at.is_some()));
     }
 }

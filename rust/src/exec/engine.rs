@@ -79,6 +79,10 @@ pub struct Engine {
     pub app_energy: f64,
     /// Joules billed to persistent-state management.
     pub state_energy: f64,
+    /// Battery mode: the buffer is bottomless, operations advance time
+    /// and bill the ledgers but never discharge the capacitor, and the
+    /// device cannot brown out. The continuous baseline runs on this.
+    powered: bool,
     charge_dt: f64,
     max_time: f64,
 }
@@ -97,15 +101,52 @@ impl Engine {
             failures: 0,
             app_energy: 0.0,
             state_energy: 0.0,
+            powered: false,
             charge_dt: cfg.charge_dt,
             max_time: cfg.max_time,
         }
+    }
+
+    /// A battery-powered device on the given horizon: time and energy
+    /// are accounted through the same MCU model as the intermittent
+    /// runtimes, but the device never browns out. `power_cycles` stays 0
+    /// — there are no boot events on a battery.
+    pub fn powered(mcu: McuModel, max_time: f64) -> Engine {
+        // Same paper-default device as the harvesting engines — one
+        // source of truth for the hardware constants.
+        let mut cfg = EngineConfig::paper_default(max_time);
+        cfg.mcu = mcu;
+        cfg.initial_voltage = cfg.capacitor.v_max;
+        let mut engine = Engine::new(cfg, Harvester::Constant(0.0));
+        engine.powered = true;
+        engine.cycles = 0; // a battery counts no boot events
+        engine
     }
 
     /// True once the campaign horizon is reached.
     #[inline]
     pub fn out_of_time(&self) -> bool {
         self.now >= self.max_time
+    }
+
+    /// The campaign horizon, seconds.
+    #[inline]
+    pub fn horizon(&self) -> f64 {
+        self.max_time
+    }
+
+    /// The campaign duration to report. A battery-powered device stops
+    /// observing at the horizon even if its last operations ran a little
+    /// past it (matching the continuous baseline's historical
+    /// accounting); a harvesting device reports the real elapsed time,
+    /// which may overrun the horizon by the tail of the last round.
+    #[inline]
+    pub fn campaign_duration(&self) -> f64 {
+        if self.powered {
+            self.now.min(self.max_time)
+        } else {
+            self.now
+        }
     }
 
     /// Integrate harvesting over `[now, now+dt)` without advancing time.
@@ -133,6 +174,10 @@ impl Engine {
     /// a power cycle and paying the boot cost). Returns `false` if the
     /// campaign horizon expires first.
     pub fn charge_until_boot(&mut self) -> bool {
+        if self.powered {
+            // A battery never dies; there is nothing to recharge.
+            return !self.out_of_time();
+        }
         while !self.cap.can_boot() {
             if self.out_of_time() {
                 return false;
@@ -152,11 +197,19 @@ impl Engine {
     /// buffer is left just below the brown-out threshold (the device
     /// consumed down to V_off and died).
     pub fn run_op(&mut self, cost: &OpCost, ledger: Ledger) -> OpOutcome {
+        let duration = self.mcu.duration(cost);
+        let energy = self.mcu.energy(cost);
+        if self.powered {
+            self.now += duration;
+            match ledger {
+                Ledger::App => self.app_energy += energy,
+                Ledger::State => self.state_energy += energy,
+            }
+            return OpOutcome::Done;
+        }
         if !self.cap.alive() {
             return self.brown_out();
         }
-        let duration = self.mcu.duration(cost);
-        let energy = self.mcu.energy(cost);
         // Harvest while the op runs (ops are ms-scale; chunk long ones).
         let mut remaining = duration;
         while remaining > 0.0 {
@@ -193,6 +246,13 @@ impl Engine {
     /// harvest integral only smooths over sub-step burst boundaries
     /// (see EXPERIMENTS.md §Perf).
     pub fn sleep(&mut self, secs: f64) -> bool {
+        if self.powered {
+            // Never sleep past the campaign horizon: the reported
+            // duration must stop at `max_time`, exactly like the
+            // harvesting branch below (which re-checks per chunk).
+            self.now = (self.now + secs).min(self.max_time.max(self.now));
+            return true;
+        }
         let mut remaining = secs;
         let wide = self.charge_dt * 5.0;
         let safe_v = self.cap.v_off + 0.05;
@@ -330,6 +390,21 @@ mod tests {
         let b = e.read_budget().unwrap();
         assert!(b < before);
         assert!(b > 0.0);
+    }
+
+    #[test]
+    fn powered_engine_never_browns_out() {
+        let mut e = Engine::powered(McuModel::paper_default(), 1e9);
+        // An op that would kill any capacitor-backed device (~1 J).
+        assert_eq!(e.run_op(&OpCost::cycles(3_000_000_000), Ledger::App), OpOutcome::Done);
+        assert_eq!(e.failures, 0);
+        assert_eq!(e.cycles, 0);
+        assert!(e.app_energy > 0.9);
+        assert!(e.cap.alive());
+        // Sleeping for hours is free of brown-out risk too.
+        assert!(e.sleep(8.0 * 3600.0));
+        assert!(e.charge_until_boot());
+        assert_eq!(e.cycles, 0, "a battery counts no boot events");
     }
 
     #[test]

@@ -1,5 +1,6 @@
 //! Intermittent execution: the step-program model, the discrete-event
-//! device engine, and the four runtimes the paper compares.
+//! device engine, the runtime abstraction, and the policies the paper
+//! compares (plus the Alpaca task-based baseline).
 //!
 //! * [`program`] — [`program::StepProgram`]: a stateful computation as a
 //!   sequence of atomic, energy-accounted steps with an approximation
@@ -7,21 +8,31 @@
 //!   imaging).
 //! * [`engine`] — the device simulator: capacitor + booster + harvester
 //!   integration, brown-out, reboot, power-cycle accounting.
+//! * [`runtime`] — the [`runtime::Runtime`] trait every policy
+//!   implements, plus the shared [`runtime::RoundDriver`] that owns the
+//!   boot/recharge/acquire/emit/bookkeeping loop; policies contribute
+//!   only their per-round strategy.
 //! * [`continuous`] — battery-powered baseline (the accuracy/throughput
 //!   ceiling every figure normalises against).
 //! * [`chinchilla`] — the regular-intermittent-computing baseline
 //!   (checkpoints on FRAM with dynamic disabling, per Maeng & Lucia).
+//! * [`alpaca`] — the second regular-intermittent baseline: task-based
+//!   execution with privatization buffers instead of checkpoints, per
+//!   Maeng, Colin & Lucia.
 //! * [`approx`] — the paper's contribution: the GREEDY and SMART
 //!   approximate-intermittent runtimes that finish (and emit) within the
 //!   current power cycle, needing no persistent state at all.
 
+pub mod alpaca;
 pub mod approx;
 pub mod chinchilla;
 pub mod continuous;
 pub mod engine;
 pub mod program;
+pub mod runtime;
 
 pub use program::StepProgram;
+pub use runtime::{RoundDriver, RoundOutcome, RoundStrategy, Runtime, RuntimeSpec};
 
 /// Which runtime drives the device.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -30,6 +41,9 @@ pub enum Policy {
     Continuous,
     /// Regular intermittent computing: checkpoints on FRAM (Chinchilla).
     Chinchilla,
+    /// Regular intermittent computing, task-based: privatization buffers
+    /// and task-granularity redo instead of checkpoints (Alpaca).
+    Alpaca,
     /// Approximate intermittent computing, greedy: spend every joule on
     /// the current sample, always emit before dying.
     Greedy,
@@ -43,8 +57,77 @@ impl Policy {
         match self {
             Policy::Continuous => "continuous".into(),
             Policy::Chinchilla => "chinchilla".into(),
+            Policy::Alpaca => "alpaca".into(),
             Policy::Greedy => "greedy".into(),
             Policy::Smart { bound } => format!("smart{:02}", (bound * 100.0).round() as u32),
+        }
+    }
+
+    /// Instantiate the runtime that executes this policy.
+    ///
+    /// The [`RuntimeSpec`] carries the workload-provided knobs: the
+    /// sampling period for every policy, and the offline lookup table
+    /// SMART consults (panics if a `Smart` policy is constructed without
+    /// one — that is a wiring bug, not a runtime condition).
+    pub fn runtime<P: StepProgram>(&self, spec: &RuntimeSpec) -> Box<dyn Runtime<P>> {
+        match *self {
+            Policy::Continuous => {
+                Box::new(continuous::ContinuousRuntime::new(spec.sample_period))
+            }
+            Policy::Chinchilla => Box::new(chinchilla::ChinchillaRuntime::new(
+                chinchilla::ChinchillaConfig {
+                    sample_period: spec.sample_period,
+                    ..Default::default()
+                },
+            )),
+            Policy::Alpaca => Box::new(alpaca::AlpacaRuntime::new(alpaca::AlpacaConfig {
+                sample_period: spec.sample_period,
+                ..Default::default()
+            })),
+            Policy::Greedy => Box::new(approx::ApproxRuntime::new(ApproxConfig::greedy(
+                spec.sample_period,
+            ))),
+            Policy::Smart { bound } => {
+                let table = spec
+                    .smart_table
+                    .clone()
+                    .expect("Policy::Smart needs RuntimeSpec::smart_table");
+                Box::new(approx::ApproxRuntime::new(ApproxConfig::smart(
+                    spec.sample_period,
+                    bound,
+                    table,
+                )))
+            }
+        }
+    }
+}
+
+use approx::ApproxConfig;
+
+impl std::str::FromStr for Policy {
+    type Err = String;
+
+    /// Parse a CLI policy name: `continuous`, `chinchilla`, `alpaca`,
+    /// `greedy`, or `smartNN` (`NN` = accuracy bound in percent, e.g.
+    /// `smart60`, `smart80`). Unknown names are an error — no silent
+    /// fallback.
+    fn from_str(s: &str) -> Result<Policy, String> {
+        match s {
+            "continuous" => Ok(Policy::Continuous),
+            "chinchilla" => Ok(Policy::Chinchilla),
+            "alpaca" => Ok(Policy::Alpaca),
+            "greedy" => Ok(Policy::Greedy),
+            _ => s
+                .strip_prefix("smart")
+                .and_then(|pct| pct.parse::<u32>().ok())
+                .filter(|&pct| pct <= 100)
+                .map(|pct| Policy::Smart { bound: pct as f64 / 100.0 })
+                .ok_or_else(|| {
+                    format!(
+                        "unknown policy '{s}' \
+                         (expected greedy|smartNN|chinchilla|alpaca|continuous)"
+                    )
+                }),
         }
     }
 }
@@ -95,5 +178,33 @@ impl<O> Campaign<O> {
             return 0.0;
         }
         self.emitted().count() as f64 / self.duration
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_names_round_trip_through_from_str() {
+        for policy in [
+            Policy::Continuous,
+            Policy::Chinchilla,
+            Policy::Alpaca,
+            Policy::Greedy,
+            Policy::Smart { bound: 0.60 },
+            Policy::Smart { bound: 0.80 },
+        ] {
+            let parsed: Policy = policy.name().parse().expect("round trip");
+            assert_eq!(parsed, policy, "{}", policy.name());
+        }
+    }
+
+    #[test]
+    fn unknown_policy_is_an_error_not_a_fallback() {
+        assert!("gredy".parse::<Policy>().is_err());
+        assert!("".parse::<Policy>().is_err());
+        assert!("smartly".parse::<Policy>().is_err());
+        assert!("smart999".parse::<Policy>().is_err());
     }
 }

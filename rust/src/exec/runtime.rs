@@ -1,0 +1,215 @@
+//! The runtime abstraction: one trait all four policies implement, and
+//! the shared round driver that owns the campaign boilerplate.
+//!
+//! Before this module existed, the continuous / Chinchilla / approximate
+//! executors were free functions with divergent signatures, and every
+//! coordinator path re-dispatched over [`Policy`](crate::exec::Policy)
+//! by hand. Now:
+//!
+//! * [`Runtime`] — `run(&self, &mut P, &mut Engine) -> Campaign` is the
+//!   single entry point the coordinator calls, whatever the policy.
+//! * [`RoundDriver`] — owns the per-campaign loop every policy shares:
+//!   recharge-to-boot, input acquisition slots, round bookkeeping
+//!   (sample ids, latency in power cycles, the sleep to the next slot)
+//!   and the final [`Campaign`] assembly. Policies implement only
+//!   [`RoundStrategy::round`], their per-sample strategy.
+//! * [`RuntimeSpec`] — the workload-provided knobs
+//!   ([`Policy::runtime`](crate::exec::Policy::runtime) turns a policy
+//!   plus a spec into a boxed runtime).
+//!
+//! The continuous baseline participates through the engine's *powered*
+//! mode (see [`Engine::powered`]): a battery is an energy-harvesting
+//! device whose buffer never browns out, so the same driver and the same
+//! ledgers apply and every figure keeps comparing like with like.
+
+use crate::energy::estimator::SmartTable;
+use crate::exec::engine::Engine;
+use crate::exec::{Campaign, RoundResult, StepProgram};
+
+/// A policy's executable form: drives `program` on `engine` until the
+/// campaign horizon or the end of the input stream.
+pub trait Runtime<P: StepProgram> {
+    fn run(&self, program: &mut P, engine: &mut Engine) -> Campaign<P::Output>;
+}
+
+/// What one acquired sample came to.
+pub enum RoundOutcome<O> {
+    /// The result reached the user.
+    Emitted {
+        /// Absolute time of the emission.
+        emitted_at: f64,
+        /// Steps actually executed for this sample.
+        steps: usize,
+        /// The application output.
+        output: O,
+    },
+    /// The sample is recorded without an emission — lost to a brown-out
+    /// or deliberately skipped. `steps` records the work executed before
+    /// the drop (0 for a skip); `sleep` says whether the runtime waits
+    /// for the next sampling slot (a deliberate skip) or goes straight
+    /// back to recharging (a mid-round power failure).
+    Dropped { steps: usize, sleep: bool },
+    /// The campaign horizon expired mid-round: the partial round is not
+    /// recorded and the campaign ends.
+    Expired,
+}
+
+/// The per-sample strategy a policy contributes to the shared driver.
+pub trait RoundStrategy<P: StepProgram> {
+    /// Drive one sample to an outcome. Called with the input already
+    /// loaded ([`StepProgram::load_next`] succeeded) and the device
+    /// alive; everything else — including surviving brown-outs — is the
+    /// strategy's business.
+    fn round(&self, program: &mut P, engine: &mut Engine) -> RoundOutcome<P::Output>;
+}
+
+/// The campaign loop shared by every runtime.
+pub struct RoundDriver {
+    /// Seconds between sampling slots.
+    pub sample_period: f64,
+}
+
+impl RoundDriver {
+    pub fn new(sample_period: f64) -> RoundDriver {
+        RoundDriver { sample_period }
+    }
+
+    /// Run the campaign: boot/recharge, acquire each slot's sample, hand
+    /// it to the strategy, account the outcome, sleep to the next slot.
+    pub fn drive<P, S>(
+        &self,
+        program: &mut P,
+        engine: &mut Engine,
+        strategy: &S,
+    ) -> Campaign<P::Output>
+    where
+        P: StepProgram,
+        S: RoundStrategy<P> + ?Sized,
+    {
+        let mut rounds: Vec<RoundResult<P::Output>> = Vec::new();
+        let mut sample_id = 0u64;
+        while !engine.out_of_time() {
+            if !engine.cap.alive() && !engine.charge_until_boot() {
+                break;
+            }
+            if !program.load_next(engine.now) {
+                break;
+            }
+            let acquired_at = engine.now;
+            let acquired_cycle = engine.cycles;
+            match strategy.round(program, engine) {
+                RoundOutcome::Emitted { emitted_at, steps, output } => {
+                    rounds.push(RoundResult {
+                        sample_id,
+                        acquired_at,
+                        emitted_at: Some(emitted_at),
+                        latency_cycles: engine.cycles - acquired_cycle,
+                        steps_executed: steps,
+                        output: Some(output),
+                    });
+                    sample_id += 1;
+                    let _ = engine.sleep_until_next_slot(self.sample_period);
+                }
+                RoundOutcome::Dropped { steps, sleep } => {
+                    rounds.push(RoundResult {
+                        sample_id,
+                        acquired_at,
+                        emitted_at: None,
+                        latency_cycles: 0,
+                        steps_executed: steps,
+                        output: None,
+                    });
+                    sample_id += 1;
+                    if sleep {
+                        let _ = engine.sleep_until_next_slot(self.sample_period);
+                    }
+                }
+                RoundOutcome::Expired => break,
+            }
+        }
+        Campaign {
+            rounds,
+            duration: engine.campaign_duration(),
+            power_failures: engine.failures,
+            power_cycles: engine.cycles,
+            app_energy: engine.app_energy,
+            state_energy: engine.state_energy,
+        }
+    }
+}
+
+/// The workload-provided knobs a [`Policy`](crate::exec::Policy) needs to
+/// instantiate its runtime.
+#[derive(Clone, Debug, Default)]
+pub struct RuntimeSpec {
+    /// Seconds between sampling slots.
+    pub sample_period: f64,
+    /// SMART's offline lookup table; required only for `Policy::Smart`.
+    pub smart_table: Option<SmartTable>,
+}
+
+impl RuntimeSpec {
+    pub fn new(sample_period: f64) -> RuntimeSpec {
+        RuntimeSpec { sample_period, smart_table: None }
+    }
+
+    pub fn with_smart_table(mut self, table: SmartTable) -> RuntimeSpec {
+        self.smart_table = Some(table);
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energy::harvester::Harvester;
+    use crate::energy::mcu::McuModel;
+    use crate::exec::engine::EngineConfig;
+    use crate::exec::program::SyntheticProgram;
+    use crate::exec::Policy;
+
+    fn engine(power: f64, horizon: f64) -> Engine {
+        Engine::new(EngineConfig::paper_default(horizon), Harvester::Constant(power))
+    }
+
+    #[test]
+    fn every_policy_constructs_and_runs_through_the_trait() {
+        for policy in [
+            Policy::Continuous,
+            Policy::Chinchilla,
+            Policy::Alpaca,
+            Policy::Greedy,
+        ] {
+            let mut p = SyntheticProgram::new(5, 10, 10_000);
+            let mut e = match policy {
+                Policy::Continuous => Engine::powered(McuModel::paper_default(), 1200.0),
+                _ => engine(2e-3, 1200.0),
+            };
+            let rt = policy.runtime::<SyntheticProgram>(&RuntimeSpec::new(60.0));
+            let c = rt.run(&mut p, &mut e);
+            assert!(
+                c.emitted().count() > 0,
+                "{} emitted nothing under abundant energy",
+                policy.name()
+            );
+            assert!(c.rounds.len() as u64 <= 5, "{}", policy.name());
+        }
+    }
+
+    #[test]
+    fn driver_assigns_contiguous_sample_ids() {
+        let mut p = SyntheticProgram::new(8, 5, 5_000);
+        let mut e = engine(2e-3, 3600.0);
+        let rt = Policy::Greedy.runtime::<SyntheticProgram>(&RuntimeSpec::new(60.0));
+        let c = rt.run(&mut p, &mut e);
+        for (i, r) in c.rounds.iter().enumerate() {
+            assert_eq!(r.sample_id, i as u64);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "smart_table")]
+    fn smart_without_table_is_a_loud_error() {
+        let _ = Policy::Smart { bound: 0.8 }.runtime::<SyntheticProgram>(&RuntimeSpec::new(60.0));
+    }
+}

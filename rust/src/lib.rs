@@ -15,12 +15,14 @@
 //!   corner response. Compile-time only.
 //! * **L2** — JAX pipelines (`python/compile/model.py`) AOT-lowered to HLO
 //!   text artifacts (`artifacts/*.hlo.txt`).
-//! * **L3** — this crate: the intermittent-execution engine, the energy
-//!   substrate, the GREEDY/SMART approximate runtimes and the Chinchilla /
-//!   continuous baselines, the application pipelines (human activity
-//!   recognition, embedded image processing), the PJRT runtime that loads
-//!   the AOT artifacts for accelerated batch replay, and the experiment
-//!   coordinator that regenerates every figure of the paper.
+//! * **L3** — this crate: the intermittent-execution engine and the
+//!   [`exec::Runtime`] trait, the energy substrate, the GREEDY/SMART
+//!   approximate runtimes and the Chinchilla / Alpaca / continuous
+//!   baselines, the application pipelines (human activity recognition,
+//!   embedded image processing), the PJRT runtime that loads the AOT
+//!   artifacts for accelerated batch replay (behind the `pjrt` feature),
+//!   and the workload-generic experiment coordinator + fleet that
+//!   regenerate every figure of the paper.
 //!
 //! See `DESIGN.md` for the system inventory and the per-figure experiment
 //! index, and `EXPERIMENTS.md` for measured-vs-paper results.

@@ -31,7 +31,7 @@ COMMANDS:
   all             every figure in sequence
   traces          synthetic energy trace statistics (Fig. 11)
   artifacts-check load + execute every AOT artifact through PJRT
-  simulate        one campaign: --policy greedy|smart60|smart80|chinchilla
+  simulate        one campaign: --policy greedy|smartNN|chinchilla|alpaca|continuous
                   --trace rf|som|sim|sor|sir|kinetic --horizon secs
 
 OPTIONS:
@@ -324,12 +324,14 @@ fn run_artifacts_check(dir: &str) {
 }
 
 fn run_simulate(args: &Args, seed: u64) {
-    let policy = match args.get_or("policy", "greedy") {
-        "chinchilla" => Policy::Chinchilla,
-        "smart60" => Policy::Smart { bound: 0.60 },
-        "smart80" => Policy::Smart { bound: 0.80 },
-        "continuous" => Policy::Continuous,
-        _ => Policy::Greedy,
+    // Unknown names are an error, not a silent Greedy fallback.
+    let policy: Policy = match args.get_or("policy", "greedy").parse() {
+        Ok(policy) => policy,
+        Err(e) => {
+            eprintln!("error: {e}\n");
+            eprint!("{USAGE}");
+            std::process::exit(2);
+        }
     };
     let horizon = args.get_f64("horizon", 3600.0);
     let trace = args.get_or("trace", "kinetic").to_string();
@@ -348,7 +350,15 @@ fn run_simulate(args: &Args, seed: u64) {
             c.state_energy * 1e3,
         );
     } else {
-        let kind = TraceKind::from_name(&trace).unwrap_or(TraceKind::Som);
+        // Like --policy: an unknown trace is an error, not a silent Som.
+        let kind = match TraceKind::from_name(&trace) {
+            Some(kind) => kind,
+            None => {
+                eprintln!("error: unknown trace '{trace}' (expected rf|som|sim|sor|sir|kinetic)\n");
+                eprint!("{USAGE}");
+                std::process::exit(2);
+            }
+        };
         let spec = ImgRunSpec { horizon, trace_seed: seed, ..Default::default() };
         let c = experiment::run_img_policy(&spec, kind, policy);
         println!(

@@ -7,7 +7,20 @@
 //! never runs here. The emulation experiments use it to replay thousands
 //! of device rounds as one batched call, cross-checked against the
 //! pure-Rust twins in the integration tests.
+//!
+//! The real client depends on the `xla` crate (and the XLA toolchain
+//! underneath it), so it is gated behind the off-by-default `pjrt`
+//! feature. Without the feature, [`stub::ArtifactRuntime`] keeps the
+//! same surface: `load` always errors, so artifact-dependent tests and
+//! benches skip themselves exactly as they do when `make artifacts` has
+//! not run.
 
+#[cfg(feature = "pjrt")]
 pub mod client;
+#[cfg(not(feature = "pjrt"))]
+pub mod stub;
 
+#[cfg(feature = "pjrt")]
 pub use client::{ArtifactRuntime, Tensor};
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{ArtifactRuntime, Tensor};

@@ -1,0 +1,98 @@
+//! Dependency-free stand-in for the PJRT client (`--no-default-features`
+//! builds, i.e. whenever the `pjrt` feature is off).
+//!
+//! [`Tensor`] is the same pure-Rust container the real client exposes;
+//! [`ArtifactRuntime::load`] always fails with a clear message, which the
+//! artifact tests and benches already treat as "skip" (it is the same
+//! path they take when `make artifacts` has not run).
+
+use std::fmt;
+use std::path::Path;
+
+/// A shaped f32 tensor travelling to/from the PJRT executables.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let len = shape.iter().product();
+        Tensor { shape, data: vec![0.0; len] }
+    }
+
+    pub fn scalar_vec(data: Vec<f32>) -> Tensor {
+        Tensor { shape: vec![data.len()], data }
+    }
+}
+
+/// Error produced by every operation of the stubbed runtime.
+#[derive(Clone, Debug)]
+pub struct PjrtUnavailable;
+
+impl fmt::Display for PjrtUnavailable {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "built without the `pjrt` feature; \
+             rebuild with `--features pjrt` and the XLA toolchain"
+        )
+    }
+}
+
+impl std::error::Error for PjrtUnavailable {}
+
+/// Stubbed artifact registry: construction always fails.
+pub struct ArtifactRuntime {
+    // Uninhabited: a stub runtime can never actually exist, which makes
+    // every method body trivially unreachable.
+    never: std::convert::Infallible,
+}
+
+impl ArtifactRuntime {
+    /// Always fails: the PJRT client is not compiled in.
+    pub fn load(_dir: impl AsRef<Path>) -> Result<ArtifactRuntime, PjrtUnavailable> {
+        Err(PjrtUnavailable)
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        match self.never {}
+    }
+
+    pub fn device_count(&self) -> usize {
+        match self.never {}
+    }
+
+    pub fn input_shapes(&self, _name: &str) -> Vec<Vec<usize>> {
+        match self.never {}
+    }
+
+    pub fn execute(&self, _name: &str, _inputs: &[Tensor]) -> Result<Tensor, PjrtUnavailable> {
+        match self.never {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_reports_the_missing_feature() {
+        let err = ArtifactRuntime::load("artifacts").err().expect("stub must fail");
+        assert!(err.to_string().contains("pjrt"));
+    }
+
+    #[test]
+    fn tensor_is_fully_functional() {
+        let t = Tensor::zeros(vec![2, 3]);
+        assert_eq!(t.data.len(), 6);
+        let s = Tensor::scalar_vec(vec![1.0, 2.0]);
+        assert_eq!(s.shape, vec![2]);
+    }
+}

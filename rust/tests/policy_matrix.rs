@@ -1,0 +1,169 @@
+//! Cross-runtime invariants: every `Policy` is driven over the same
+//! `SyntheticProgram` through the `Runtime` trait, and the paper's
+//! structural guarantees are asserted uniformly — plus fleet determinism
+//! across worker-pool sizes.
+
+use aic::coordinator::fleet::run_fleet;
+use aic::energy::estimator::{EnergyProfile, SmartTable};
+use aic::energy::harvester::Harvester;
+use aic::energy::mcu::{McuModel, OpCost};
+use aic::exec::engine::{Engine, EngineConfig};
+use aic::exec::program::SyntheticProgram;
+#[allow(unused_imports)]
+use aic::exec::Runtime;
+use aic::exec::{Campaign, Policy, RuntimeSpec};
+
+const STEPS: usize = 60;
+const CYCLES_PER_STEP: u64 = 200_000;
+const INPUTS: u64 = 50;
+const HORIZON: f64 = 2.0 * 3600.0;
+
+fn all_policies() -> Vec<Policy> {
+    vec![
+        Policy::Continuous,
+        Policy::Chinchilla,
+        Policy::Alpaca,
+        Policy::Greedy,
+        Policy::Smart { bound: 0.60 },
+    ]
+}
+
+/// A SMART table for the synthetic program: linear accuracy from chance
+/// to 0.9 over the step count.
+fn synthetic_table() -> SmartTable {
+    let mcu = McuModel::paper_default();
+    let costs: Vec<OpCost> = (0..STEPS).map(|_| OpCost::cycles(CYCLES_PER_STEP)).collect();
+    let profile = EnergyProfile::from_costs(&mcu, &costs);
+    let acc: Vec<f64> = (0..=STEPS)
+        .map(|p| 1.0 / 6.0 + (0.9 - 1.0 / 6.0) * p as f64 / STEPS as f64)
+        .collect();
+    let emit = mcu.energy(&OpCost { cycles: 500, ble_bytes: 1, ..Default::default() });
+    SmartTable::new(acc, &profile, emit)
+}
+
+fn run_policy(policy: Policy, power: f64) -> Campaign<usize> {
+    let mut program = SyntheticProgram::new(INPUTS, STEPS, CYCLES_PER_STEP);
+    let mut engine = match policy {
+        Policy::Continuous => Engine::powered(McuModel::paper_default(), HORIZON),
+        _ => Engine::new(EngineConfig::paper_default(HORIZON), Harvester::Constant(power)),
+    };
+    let mut spec = RuntimeSpec::new(60.0);
+    if let Policy::Smart { .. } = policy {
+        spec = spec.with_smart_table(synthetic_table());
+    }
+    policy.runtime::<SyntheticProgram>(&spec).run(&mut program, &mut engine)
+}
+
+#[test]
+fn emitted_never_exceeds_loaded_samples() {
+    for policy in all_policies() {
+        for power in [0.3e-3, 1.5e-3] {
+            let c = run_policy(policy, power);
+            let emitted = c.emitted().count();
+            assert!(
+                emitted <= c.rounds.len(),
+                "{}: emitted {} > rounds {}",
+                policy.name(),
+                emitted,
+                c.rounds.len()
+            );
+            assert!(
+                c.rounds.len() as u64 <= INPUTS,
+                "{}: {} rounds for {} inputs",
+                policy.name(),
+                c.rounds.len(),
+                INPUTS
+            );
+        }
+    }
+}
+
+#[test]
+fn ledgers_are_non_negative_everywhere() {
+    for policy in all_policies() {
+        let c = run_policy(policy, 0.8e-3);
+        assert!(c.app_energy >= 0.0, "{}", policy.name());
+        assert!(c.state_energy >= 0.0, "{}", policy.name());
+        assert!(
+            c.app_energy > 0.0,
+            "{}: campaign did no useful work at all",
+            policy.name()
+        );
+    }
+}
+
+#[test]
+fn stateless_policies_never_touch_the_state_ledger() {
+    for policy in [
+        Policy::Continuous,
+        Policy::Greedy,
+        Policy::Smart { bound: 0.60 },
+    ] {
+        for power in [0.3e-3, 1.5e-3] {
+            let c = run_policy(policy, power);
+            assert_eq!(
+                c.state_energy,
+                0.0,
+                "{}: managed persistent state",
+                policy.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn precise_policies_always_emit_full_precision() {
+    // 60 steps × 200k cycles ≈ 3.7 mJ: a few power cycles per sample at
+    // the weak setting, none at the strong one — precision must hold in
+    // both regimes.
+    for policy in [Policy::Chinchilla, Policy::Alpaca, Policy::Continuous] {
+        for power in [0.4e-3, 2e-3] {
+            let c = run_policy(policy, power);
+            assert!(c.emitted().count() > 0, "{}: nothing emitted", policy.name());
+            for r in c.emitted() {
+                assert_eq!(
+                    r.output,
+                    Some(STEPS),
+                    "{}: emitted a truncated result",
+                    policy.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn approximate_policies_emit_within_the_acquisition_cycle() {
+    for policy in [Policy::Greedy, Policy::Smart { bound: 0.60 }] {
+        let c = run_policy(policy, 0.5e-3);
+        for r in c.emitted() {
+            assert_eq!(r.latency_cycles, 0, "{}", policy.name());
+        }
+    }
+}
+
+#[test]
+fn fleet_results_are_identical_across_worker_pool_sizes() {
+    let jobs: Vec<(Policy, f64)> = all_policies()
+        .into_iter()
+        .flat_map(|p| [(p, 0.4e-3), (p, 1.2e-3)])
+        .collect();
+    let reference: Vec<Campaign<usize>> =
+        run_fleet(&jobs, Some(1), |&(p, power)| run_policy(p, power));
+    for workers in [2, 4, 16] {
+        let got = run_fleet(&jobs, Some(workers), |&(p, power)| run_policy(p, power));
+        assert_eq!(got.len(), reference.len());
+        for (i, (a, b)) in reference.iter().zip(got.iter()).enumerate() {
+            assert_eq!(a.rounds.len(), b.rounds.len(), "job {i} workers {workers}");
+            assert_eq!(a.power_cycles, b.power_cycles, "job {i} workers {workers}");
+            assert_eq!(a.power_failures, b.power_failures, "job {i} workers {workers}");
+            assert_eq!(a.app_energy, b.app_energy, "job {i} workers {workers}");
+            assert_eq!(a.state_energy, b.state_energy, "job {i} workers {workers}");
+            for (ra, rb) in a.rounds.iter().zip(b.rounds.iter()) {
+                assert_eq!(ra.emitted_at, rb.emitted_at, "job {i} workers {workers}");
+                assert_eq!(ra.steps_executed, rb.steps_executed);
+                assert_eq!(ra.output, rb.output);
+            }
+        }
+    }
+}
