@@ -19,6 +19,9 @@ use aic::util::rng::Rng;
 
 fn main() {
     let b = Bench::new("hotpath");
+    // The engine benches honour AIC_ENGINE: `AIC_ENGINE=step` times the
+    // fixed-step reference integrator (the BENCH_before baseline),
+    // unset/`analytic` times the event-driven engine.
 
     // Engine: charge integration (dominates long recharge ramps).
     {
@@ -38,11 +41,17 @@ fn main() {
         });
     }
 
-    // Engine: op execution (the per-step hot loop).
+    // Engine: op execution (the per-step hot loop) on a replay supply.
     {
+        let trace = aic::energy::traces::generate(
+            aic::energy::traces::TraceKind::Sim,
+            600.0,
+            0.01,
+            2,
+        );
         let mut e = Engine::new(
             EngineConfig::paper_default(1e12),
-            Harvester::Constant(2e-3),
+            Harvester::Replay(trace),
         );
         let cost = OpCost::cycles(10_000);
         b.bench_throughput("engine/run_op_x1000", 1000, || {
@@ -50,6 +59,25 @@ fn main() {
                 black_box(e.run_op(&cost, Ledger::App));
             }
             e.cap.set_voltage(3.2);
+        });
+    }
+
+    // Engine: one hour of LPM3 sleep (dominates inter-slot idling).
+    {
+        let trace = aic::energy::traces::generate(
+            aic::energy::traces::TraceKind::Sim,
+            600.0,
+            0.01,
+            3,
+        );
+        let mut e = Engine::new(
+            EngineConfig::paper_default(1e12),
+            Harvester::Replay(trace),
+        );
+        b.bench_throughput("engine/sleep_3600s", 3600, || {
+            e.cap.set_voltage(3.3);
+            e.now = 0.0;
+            black_box(e.sleep(3600.0));
         });
     }
 

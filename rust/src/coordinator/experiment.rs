@@ -23,6 +23,12 @@ use crate::svm::train::{train_ovr, TrainConfig};
 
 /// Everything the HAR experiments share: corpus, trained anytime SVM,
 /// fitted class model, measured full accuracy.
+///
+/// Training the OVR SVM is the expensive part of a figure sweep, and
+/// the result is identical for every (policy, volunteer) cell — so
+/// build the context **once per sweep** and share it read-only (`&ctx`)
+/// across all fleet jobs (`aic all` does exactly this; determinism
+/// under sharing is asserted by `tests/policy_matrix.rs`).
 pub struct HarContext {
     pub asvm: AnytimeSvm,
     pub class_model: ClassFeatureModel,

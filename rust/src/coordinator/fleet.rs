@@ -18,8 +18,16 @@ use crate::imgproc::app::CornerOutput;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
-/// The pool cap: one worker per available core.
+/// The pool cap: one worker per available core, overridable with
+/// `AIC_WORKERS` (useful for CI smoke runs and contention experiments —
+/// results are identical for any pool size, see [`run_fleet`]).
 pub fn max_workers() -> usize {
+    if let Some(n) = std::env::var("AIC_WORKERS").ok().and_then(|s| s.parse::<usize>().ok())
+    {
+        if n > 0 {
+            return n;
+        }
+    }
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
 }
 

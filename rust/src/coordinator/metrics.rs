@@ -11,9 +11,42 @@ use crate::har::app::HarOutput;
 use crate::imgproc::app::CornerOutput;
 use crate::imgproc::equivalence::equivalent;
 use crate::imgproc::harris::{harris_full, HarrisConfig};
-use crate::imgproc::images::render;
+use crate::imgproc::images::{render, Picture};
+use crate::imgproc::Corner;
 use crate::util::stats::Histogram;
 use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Process-wide memo of full-precision Harris reference maps, keyed by
+/// `(picture, seed, size)`. Figs. 13-15 evaluate every emitted round of
+/// every (policy, trace) cell against the same handful of reference
+/// pictures; before this cache each metric call recomputed
+/// `harris_full(render(...))` per campaign. The map is tiny (corner
+/// lists for the synthetic picture pool) and rendering is deterministic,
+/// so sharing across fleet threads is safe.
+static HARRIS_REFS: OnceLock<Mutex<HashMap<(&'static str, u64, usize), Arc<Vec<Corner>>>>> =
+    OnceLock::new();
+
+/// The full-precision Harris detections for `(picture, seed)` rendered at
+/// `size`, computed once per process.
+pub fn harris_reference(picture: Picture, seed: u64, size: usize) -> Arc<Vec<Corner>> {
+    let cache = HARRIS_REFS.get_or_init(|| Mutex::new(HashMap::new()));
+    let key = (picture.name(), seed, size);
+    if let Some(found) = cache.lock().expect("harris memo poisoned").get(&key) {
+        return Arc::clone(found);
+    }
+    // Render outside the lock: first-comers may race, but the result is
+    // deterministic and only one insertion wins.
+    let computed =
+        Arc::new(harris_full(&render(picture, size, size, seed), &HarrisConfig::default()));
+    Arc::clone(
+        cache
+            .lock()
+            .expect("harris memo poisoned")
+            .entry(key)
+            .or_insert(computed),
+    )
+}
 
 /// Classification accuracy over emitted results.
 pub fn har_accuracy(campaign: &Campaign<HarOutput>) -> f64 {
@@ -111,19 +144,14 @@ pub fn corner_equivalence_by_picture(
     campaigns: &[&Campaign<CornerOutput>],
     size: usize,
 ) -> Vec<(crate::imgproc::images::Picture, f64)> {
-    let cfg = HarrisConfig::default();
-    let mut cache: HashMap<(&'static str, u64), Vec<crate::imgproc::Corner>> = HashMap::new();
     let mut counts: HashMap<&'static str, (usize, usize)> = HashMap::new();
     for campaign in campaigns {
         for r in campaign.emitted() {
             if let Some(out) = &r.output {
-                let key = (out.picture.name(), out.picture_seed);
-                let reference = cache.entry(key).or_insert_with(|| {
-                    harris_full(&render(out.picture, size, size, out.picture_seed), &cfg)
-                });
+                let reference = harris_reference(out.picture, out.picture_seed, size);
                 let entry = counts.entry(out.picture.name()).or_insert((0, 0));
                 entry.1 += 1;
-                if equivalent(reference, &out.corners) {
+                if equivalent(&reference, &out.corners) {
                     entry.0 += 1;
                 }
             }
@@ -142,18 +170,13 @@ pub fn corner_equivalence_by_picture(
 /// the unperforated reference for the same picture. Reference detections
 /// are cached per (picture, seed).
 pub fn corner_equivalence_fraction(campaign: &Campaign<CornerOutput>, size: usize) -> f64 {
-    let cfg = HarrisConfig::default();
-    let mut cache: HashMap<(&'static str, u64), Vec<crate::imgproc::Corner>> = HashMap::new();
     let mut total = 0usize;
     let mut ok = 0usize;
     for r in campaign.emitted() {
         if let Some(out) = &r.output {
-            let key = (out.picture.name(), out.picture_seed);
-            let reference = cache.entry(key).or_insert_with(|| {
-                harris_full(&render(out.picture, size, size, out.picture_seed), &cfg)
-            });
+            let reference = harris_reference(out.picture, out.picture_seed, size);
             total += 1;
-            if equivalent(reference, &out.corners) {
+            if equivalent(&reference, &out.corners) {
                 ok += 1;
             }
         }

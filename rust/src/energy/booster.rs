@@ -24,6 +24,13 @@ pub struct Booster {
 }
 
 impl Booster {
+    /// Buffer voltage below which the cold-start gate can engage. Above
+    /// it, [`Booster::output_power`] does not depend on the buffer
+    /// voltage at all — the property that makes the capacitor's energy
+    /// trajectory *linear* within one constant-power harvester segment
+    /// and gives the analytic engine its closed-form threshold crossings.
+    pub const COLD_GATE_V: f64 = 0.05;
+
     /// Parameters in the regime of the BQ25505 used by the prototype.
     pub fn paper_default() -> Booster {
         Booster {
@@ -44,15 +51,23 @@ impl Booster {
         self.eta_min + (self.eta_max - self.eta_min) * p_in / (p_in + self.knee_power)
     }
 
+    /// Power delivered to the capacitor for `p_in` watts harvested once
+    /// the buffer is warm (above [`Booster::COLD_GATE_V`]). Voltage-
+    /// independent: constant within a constant-power harvester segment.
+    #[inline]
+    pub fn warm_output_power(&self, p_in: f64) -> f64 {
+        (p_in * self.efficiency(p_in) - self.quiescent).max(0.0)
+    }
+
     /// Power delivered to the capacitor for `p_in` watts harvested.
     ///
     /// `buffer_voltage` gates cold start: a dead buffer needs
     /// `cold_start_power` before any charge accumulates.
     pub fn output_power(&self, p_in: f64, buffer_voltage: f64) -> f64 {
-        if buffer_voltage <= 0.05 && p_in < self.cold_start_power {
+        if buffer_voltage <= Booster::COLD_GATE_V && p_in < self.cold_start_power {
             return 0.0;
         }
-        (p_in * self.efficiency(p_in) - self.quiescent).max(0.0)
+        self.warm_output_power(p_in)
     }
 }
 
@@ -80,6 +95,19 @@ mod tests {
         assert_eq!(b.output_power(10e-6, 0.0), 0.0); // too weak to cold-start
         assert!(b.output_power(10e-6, 2.0) > 0.0); // warm buffer: fine
         assert!(b.output_power(100e-6, 0.0) > 0.0); // strong enough to cold-start
+    }
+
+    #[test]
+    fn output_is_voltage_independent_above_the_cold_gate() {
+        // The linearity property the analytic engine relies on: for any
+        // warm buffer voltage the output depends on input power only.
+        let b = Booster::paper_default();
+        for p in [0.0, 1e-6, 10e-6, 100e-6, 1e-3, 5e-3] {
+            let warm = b.warm_output_power(p);
+            for v in [0.06, 0.5, 1.8, 3.0, 3.6] {
+                assert_eq!(b.output_power(p, v), warm, "p={p} v={v}");
+            }
+        }
     }
 
     #[test]

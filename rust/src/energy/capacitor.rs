@@ -3,10 +3,18 @@
 //! The prototype uses a 1470 µF capacitor chosen "through a mixed
 //! analytical and experimental approach" (§4.1): large enough for
 //! worst-case single-cycle processing, small enough to recharge quickly.
-//! State is the voltage `v`; energy is ½CV². The device operates while
-//! `v >= v_off` (brown-out threshold) and, after dying, restarts only once
-//! `v >= v_on` (the booster's VBAT_OK rising threshold), giving the
-//! classic intermittent duty cycle.
+//! The device operates while `v >= v_off` (brown-out threshold) and, after
+//! dying, restarts only once `v >= v_on` (the booster's VBAT_OK rising
+//! threshold), giving the classic intermittent duty cycle.
+//!
+//! State is the stored energy `e` (joules); voltage is the derived view
+//! `v = sqrt(2e/C)`. Working in energy space makes the hot operations —
+//! `charge`, `discharge`, `alive`, `can_boot`, `usable_energy` — straight
+//! adds and compares with no square roots, and it is the coordinate in
+//! which the analytic engine's segment stepping is *linear*: under a
+//! constant net power `p` the trajectory is `e(t) = e₀ + p·t`, so every
+//! threshold crossing has the closed form `t = (e_thr − e₀)/p` (see
+//! [`Capacitor::time_to_energy`]).
 
 /// Capacitor + supervisor thresholds.
 #[derive(Clone, Debug)]
@@ -19,8 +27,12 @@ pub struct Capacitor {
     pub v_on: f64,
     /// Brown-out threshold: device dies below this.
     pub v_off: f64,
-    /// Current voltage.
-    v: f64,
+    /// Current stored energy, joules (½CV²).
+    e: f64,
+    /// Cached energy levels of the three thresholds.
+    e_max: f64,
+    e_on: f64,
+    e_off: f64,
 }
 
 impl Capacitor {
@@ -33,73 +45,136 @@ impl Capacitor {
     pub fn new(capacitance: f64, v_max: f64, v_on: f64, v_off: f64) -> Capacitor {
         assert!(capacitance > 0.0);
         assert!(v_max >= v_on && v_on > v_off && v_off > 0.0);
-        Capacitor { capacitance, v_max, v_on, v_off, v: 0.0 }
+        let half_c = 0.5 * capacitance;
+        Capacitor {
+            capacitance,
+            v_max,
+            v_on,
+            v_off,
+            e: 0.0,
+            e_max: half_c * v_max * v_max,
+            e_on: half_c * v_on * v_on,
+            e_off: half_c * v_off * v_off,
+        }
     }
 
     /// Current voltage (what the LTC1417 ADC reads).
     #[inline]
     pub fn voltage(&self) -> f64 {
-        self.v
+        (2.0 * self.e / self.capacitance).sqrt()
     }
 
     /// Stored energy, joules.
     #[inline]
     pub fn energy(&self) -> f64 {
-        0.5 * self.capacitance * self.v * self.v
+        self.e
     }
 
-    /// Energy available before brown-out: ½C(v² − v_off²), clamped at 0.
+    /// Stored energy at an arbitrary voltage: ½Cv².
+    #[inline]
+    pub fn energy_at(&self, v: f64) -> f64 {
+        0.5 * self.capacitance * v * v
+    }
+
+    /// Energy level of the rail ceiling `v_max`.
+    #[inline]
+    pub fn max_energy(&self) -> f64 {
+        self.e_max
+    }
+
+    /// Energy level of the turn-on threshold `v_on`.
+    #[inline]
+    pub fn boot_energy_level(&self) -> f64 {
+        self.e_on
+    }
+
+    /// Energy level of the brown-out threshold `v_off`.
+    #[inline]
+    pub fn brownout_energy_level(&self) -> f64 {
+        self.e_off
+    }
+
+    /// Energy available before brown-out: `e − ½Cv_off²`, clamped at 0.
     ///
     /// This is the budget the GREEDY/SMART policies divide between useful
     /// computation and the final BLE transmission.
     #[inline]
     pub fn usable_energy(&self) -> f64 {
-        let e = 0.5 * self.capacitance * (self.v * self.v - self.v_off * self.v_off);
-        e.max(0.0)
+        (self.e - self.e_off).max(0.0)
     }
 
     /// Energy needed to charge from `v_off` to `v_on` (one recharge ramp).
     pub fn recharge_energy(&self) -> f64 {
-        0.5 * self.capacitance * (self.v_on * self.v_on - self.v_off * self.v_off)
+        self.e_on - self.e_off
+    }
+
+    /// Closed-form threshold crossing: seconds until the buffer reaches
+    /// `target` joules under a constant net power `net_power` (harvest
+    /// minus load, watts). `Some(0.0)` if already there; `None` if the
+    /// target is unreachable (net power pointing the wrong way or zero).
+    /// Ignores the rail clamp — callers cap the result at the time the
+    /// rail would be hit when `target > e_max` matters.
+    ///
+    /// This is the same `(e_thr − e₀)/p` arithmetic the analytic engine
+    /// applies per segment (inlined there against its running energy
+    /// local, with segment-boundary and horizon capping); this helper
+    /// exposes the closed form for tests and tooling.
+    pub fn time_to_energy(&self, target: f64, net_power: f64) -> Option<f64> {
+        let gap = target - self.e;
+        if gap == 0.0 {
+            return Some(0.0);
+        }
+        if net_power == 0.0 || (gap > 0.0) != (net_power > 0.0) {
+            return None;
+        }
+        Some(gap / net_power)
     }
 
     /// Deposit `joules` from the charger (clamped to the rail ceiling).
+    #[inline]
     pub fn charge(&mut self, joules: f64) {
         debug_assert!(joules >= 0.0);
-        let e = self.energy() + joules;
-        self.v = (2.0 * e / self.capacitance).sqrt().min(self.v_max);
+        self.e = (self.e + joules).min(self.e_max);
     }
 
     /// Withdraw `joules` for a load operation. Returns `false` (and drains
     /// to the floor) if the buffer held less than requested — the caller
     /// treats that as a brown-out mid-operation.
     #[must_use]
+    #[inline]
     pub fn discharge(&mut self, joules: f64) -> bool {
         debug_assert!(joules >= 0.0);
-        let e = self.energy() - joules;
+        let e = self.e - joules;
         if e <= 0.0 {
-            self.v = 0.0;
+            self.e = 0.0;
             return false;
         }
-        self.v = (2.0 * e / self.capacitance).sqrt();
+        self.e = e;
         true
     }
 
     /// True while the MCU can run.
     #[inline]
     pub fn alive(&self) -> bool {
-        self.v >= self.v_off
+        self.e >= self.e_off
     }
 
     /// True when a dead device may boot.
     #[inline]
     pub fn can_boot(&self) -> bool {
-        self.v >= self.v_on
+        self.e >= self.e_on
     }
 
     /// Force the voltage (test setup / cold start).
     pub fn set_voltage(&mut self, v: f64) {
-        self.v = v.clamp(0.0, self.v_max);
+        let v = v.clamp(0.0, self.v_max);
+        self.e = self.energy_at(v);
+    }
+
+    /// Force the stored energy (the analytic engine's write-back path),
+    /// clamped to `[0, e_max]`.
+    pub fn set_energy(&mut self, e: f64) {
+        self.e = e.clamp(0.0, self.e_max);
     }
 }
 
@@ -130,6 +205,7 @@ mod tests {
         c.set_voltage(3.5);
         c.charge(1.0); // a full joule, way past the rail
         assert!((c.voltage() - 3.6).abs() < 1e-12);
+        assert_eq!(c.energy(), c.max_energy());
     }
 
     #[test]
@@ -167,5 +243,42 @@ mod tests {
         let c = Capacitor::paper_default();
         let want = 0.5 * 1470e-6 * (9.0 - 3.24);
         assert!((c.recharge_energy() - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn energy_levels_match_threshold_voltages() {
+        let c = Capacitor::paper_default();
+        assert!((c.boot_energy_level() - c.energy_at(c.v_on)).abs() < 1e-18);
+        assert!((c.brownout_energy_level() - c.energy_at(c.v_off)).abs() < 1e-18);
+        assert!((c.max_energy() - c.energy_at(c.v_max)).abs() < 1e-18);
+    }
+
+    #[test]
+    fn set_energy_roundtrips_and_clamps() {
+        let mut c = Capacitor::paper_default();
+        c.set_energy(3e-3);
+        assert!((c.energy() - 3e-3).abs() < 1e-15);
+        c.set_energy(1.0); // way past the rail
+        assert_eq!(c.energy(), c.max_energy());
+        c.set_energy(-1.0);
+        assert_eq!(c.energy(), 0.0);
+    }
+
+    #[test]
+    fn time_to_energy_closed_form() {
+        let mut c = Capacitor::paper_default();
+        c.set_voltage(2.0);
+        let e0 = c.energy();
+        // Charging up: gap / net power.
+        let t = c.time_to_energy(c.boot_energy_level(), 1e-3).unwrap();
+        assert!((t - (c.boot_energy_level() - e0) / 1e-3).abs() < 1e-9);
+        // Unreachable: no power, or wrong sign.
+        assert!(c.time_to_energy(c.boot_energy_level(), 0.0).is_none());
+        assert!(c.time_to_energy(c.boot_energy_level(), -1e-3).is_none());
+        // Draining down to brown-out.
+        let td = c.time_to_energy(c.brownout_energy_level(), -1e-6).unwrap();
+        assert!((td - (e0 - c.brownout_energy_level()) / 1e-6).abs() < 1e-6);
+        // Already there.
+        assert_eq!(c.time_to_energy(e0, 1e-3), Some(0.0));
     }
 }

@@ -13,7 +13,7 @@
 //!   proportional to the squared filtered velocity, saturating at the
 //!   transducer's rated output.
 
-use crate::energy::traces::PowerTrace;
+use crate::energy::traces::{Piecewise, PowerTrace};
 use crate::util::dsp::Biquad;
 
 /// A source of ambient power.
@@ -41,6 +41,88 @@ impl Harvester {
             Harvester::Constant(p) => *p,
             Harvester::Replay(trace) => trace.mean_power(),
         }
+    }
+
+    /// The harvester's output as run-length-coalesced constant-power
+    /// segments (one infinite segment for [`Harvester::Constant`]). The
+    /// event-driven engine builds its stepping tables from this.
+    pub fn piecewise(&self) -> Piecewise {
+        match self {
+            Harvester::Constant(p) => Piecewise::constant(*p),
+            Harvester::Replay(trace) => trace.piecewise(),
+        }
+    }
+
+    /// Infinite iterator of constant-power segments covering `[t, ∞)`,
+    /// wrapping around the trace end exactly like
+    /// [`Harvester::power_at`]. The first yielded segment is the one
+    /// containing `t` (its `start` may precede `t`).
+    pub fn segments(&self, t: f64) -> Segments {
+        Segments::new(self.piecewise(), t)
+    }
+}
+
+/// One constant-power span of harvester output, in absolute time.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Segment {
+    /// Absolute start time, seconds.
+    pub start: f64,
+    /// Absolute end time, seconds (`f64::INFINITY` for a constant source).
+    pub end: f64,
+    /// Raw harvester power over the span, watts.
+    pub power: f64,
+}
+
+/// Infinite segment iterator over a (wrapping) harvester — see
+/// [`Harvester::segments`].
+#[derive(Clone, Debug)]
+pub struct Segments {
+    pw: Piecewise,
+    idx: usize,
+    epoch: u64,
+}
+
+impl Segments {
+    fn new(pw: Piecewise, t: f64) -> Segments {
+        let (epoch, idx) = pw.locate(t);
+        Segments { pw, idx, epoch }
+    }
+
+    fn epoch_start(&self) -> f64 {
+        if self.epoch == 0 {
+            0.0
+        } else {
+            self.epoch as f64 * self.pw.period
+        }
+    }
+}
+
+impl Iterator for Segments {
+    type Item = Segment;
+
+    fn next(&mut self) -> Option<Segment> {
+        let base = self.epoch_start();
+        // The last segment of a period ends exactly at (epoch+1)·period
+        // so consecutive periods tile with no float seam — the same rule
+        // the engine's stepping cursor applies.
+        let end = if self.pw.period.is_finite() && self.idx + 1 == self.pw.len() {
+            (self.epoch + 1) as f64 * self.pw.period
+        } else {
+            base + self.pw.ends[self.idx]
+        };
+        let seg = Segment {
+            start: base + self.pw.start(self.idx),
+            end,
+            power: self.pw.powers[self.idx],
+        };
+        if self.idx + 1 < self.pw.len() {
+            self.idx += 1;
+        } else if self.pw.period.is_finite() {
+            self.idx = 0;
+            self.epoch += 1;
+        }
+        // A never-ending segment (constant source) is yielded forever.
+        Some(seg)
     }
 }
 
@@ -104,6 +186,44 @@ mod tests {
         assert_eq!(h.power_at(0.0), 1e-3);
         assert_eq!(h.power_at(1e6), 1e-3);
         assert_eq!(h.mean_power(), 1e-3);
+    }
+
+    #[test]
+    fn constant_segments_are_one_infinite_span() {
+        let h = Harvester::Constant(2e-3);
+        let mut segs = h.segments(123.0);
+        let s = segs.next().unwrap();
+        assert_eq!(s.start, 0.0);
+        assert!(s.end.is_infinite());
+        assert_eq!(s.power, 2e-3);
+        // The iterator never ends.
+        assert_eq!(segs.next().unwrap().power, 2e-3);
+    }
+
+    #[test]
+    fn replay_segments_tile_time_and_match_power_at() {
+        let trace = PowerTrace { dt: 0.5, samples: vec![1.0, 1.0, 3.0, 0.0] };
+        let h = Harvester::Replay(trace);
+        // From t=0: [0,1)@1, [1,1.5)@3, [1.5,2)@0, then the wrap.
+        let segs: Vec<Segment> = h.segments(0.0).take(5).collect();
+        assert_eq!(segs[0], Segment { start: 0.0, end: 1.0, power: 1.0 });
+        assert_eq!(segs[1], Segment { start: 1.0, end: 1.5, power: 3.0 });
+        assert_eq!(segs[2], Segment { start: 1.5, end: 2.0, power: 0.0 });
+        assert_eq!(segs[3], Segment { start: 2.0, end: 3.0, power: 1.0 });
+        // Contiguous tiling, and powers agree with point sampling.
+        for w in segs.windows(2) {
+            assert_eq!(w[0].end, w[1].start);
+        }
+        for s in &segs {
+            let mid = 0.5 * (s.start + s.end.min(s.start + 1.0));
+            assert_eq!(s.power, h.power_at(mid), "segment {s:?}");
+        }
+        // Seeking into the middle starts at the covering segment.
+        let first = h.segments(1.2).next().unwrap();
+        assert_eq!(first, Segment { start: 1.0, end: 1.5, power: 3.0 });
+        // Seeking past one period wraps.
+        let wrapped = h.segments(2.7).next().unwrap();
+        assert_eq!(wrapped, Segment { start: 2.0, end: 3.0, power: 1.0 });
     }
 
     #[test]

@@ -63,6 +63,110 @@ impl PowerTrace {
         }
         crate::util::stats::std_dev(&self.samples) / m
     }
+
+    /// Piecewise-constant view of the trace: adjacent equal samples are
+    /// run-length coalesced into constant-power segments. Segment `i`
+    /// covers `[ends[i-1], ends[i])` (with `ends[-1] = 0`) at `powers[i]`
+    /// watts, and the pattern repeats with `period` — exactly the
+    /// wrapping replay [`PowerTrace::power_at`] implements. This is what
+    /// the event-driven engine steps over: bursty traces (RF's long off
+    /// runs) collapse to a handful of segments per burst cycle.
+    pub fn piecewise(&self) -> Piecewise {
+        if self.samples.is_empty() {
+            return Piecewise::constant(0.0);
+        }
+        let n = self.samples.len();
+        let mut ends = Vec::new();
+        let mut powers = Vec::new();
+        let mut i = 0usize;
+        while i < n {
+            let p = self.samples[i];
+            let mut j = i + 1;
+            while j < n && self.samples[j] == p {
+                j += 1;
+            }
+            // Segment boundaries are exact grid multiples — no float
+            // accumulation drift over long traces.
+            ends.push(j as f64 * self.dt);
+            powers.push(p);
+            i = j;
+        }
+        let period = n as f64 * self.dt;
+        Piecewise { ends, powers, period }
+    }
+}
+
+/// Run-length-coalesced constant-power segments of a (wrapping) trace.
+/// `period == f64::INFINITY` encodes a single never-ending segment (a
+/// constant source).
+#[derive(Clone, Debug)]
+pub struct Piecewise {
+    /// End time of each segment within one period, strictly increasing;
+    /// the last entry equals `period` (or ∞ for a constant source).
+    pub ends: Vec<f64>,
+    /// Raw harvester power of each segment, watts.
+    pub powers: Vec<f64>,
+    /// Repetition period, seconds.
+    pub period: f64,
+}
+
+impl Piecewise {
+    /// A single infinite segment at `p` watts.
+    pub fn constant(p: f64) -> Piecewise {
+        Piecewise { ends: vec![f64::INFINITY], powers: vec![p], period: f64::INFINITY }
+    }
+
+    /// Number of segments per period.
+    pub fn len(&self) -> usize {
+        self.ends.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ends.is_empty()
+    }
+
+    /// Start time of segment `i` within the period.
+    #[inline]
+    pub fn start(&self, i: usize) -> f64 {
+        if i == 0 {
+            0.0
+        } else {
+            self.ends[i - 1]
+        }
+    }
+
+    /// Locate absolute time `t ≥ 0` in the wrapping pattern: returns
+    /// `(epoch, idx)` where `epoch` counts whole elapsed periods and
+    /// `idx` is the covering segment, with the float-rounding of `t /
+    /// period` corrected at the period seams. Shared by the segment
+    /// iterator and the engine's stepping cursor so the wrap arithmetic
+    /// lives in exactly one place.
+    pub fn locate(&self, t: f64) -> (u64, usize) {
+        if !self.period.is_finite() {
+            return (0, 0);
+        }
+        let mut k = (t / self.period) as u64;
+        let mut phase = t - k as f64 * self.period;
+        if phase < 0.0 {
+            k = k.saturating_sub(1);
+            phase = (t - k as f64 * self.period).max(0.0);
+        }
+        if phase >= self.period {
+            k += 1;
+            phase = (t - k as f64 * self.period).max(0.0);
+        }
+        let idx = self.ends.partition_point(|&e| e <= phase).min(self.len() - 1);
+        (k, idx)
+    }
+
+    /// Raw energy content of one period, joules (∑ pᵢ·lenᵢ; infinite
+    /// sources report 0 — they have no finite period to sum).
+    pub fn energy_per_period(&self) -> f64 {
+        if !self.period.is_finite() {
+            return 0.0;
+        }
+        (0..self.len()).map(|i| self.powers[i] * (self.ends[i] - self.start(i))).sum()
+    }
 }
 
 /// The five paper traces.
@@ -281,6 +385,53 @@ mod tests {
         for kind in TraceKind::ALL {
             assert!(trace(kind).samples.iter().all(|&p| p >= 0.0), "{:?}", kind);
         }
+    }
+
+    #[test]
+    fn piecewise_preserves_energy_and_matches_sampling() {
+        for kind in TraceKind::ALL {
+            let t = trace(kind);
+            let pw = t.piecewise();
+            assert!((pw.period - t.duration()).abs() < 1e-9, "{kind:?}");
+            assert_eq!(*pw.ends.last().unwrap(), pw.period, "{kind:?}");
+            // Energy per period equals the trace's total energy.
+            let rel = (pw.energy_per_period() - t.total_energy()).abs()
+                / t.total_energy().max(1e-18);
+            assert!(rel < 1e-9, "{kind:?}: rel={rel}");
+            // Segment powers agree with point sampling (probe mid-sample
+            // to stay clear of boundary rounding).
+            let mut seg = 0usize;
+            for s in 0..t.samples.len() {
+                let mid = (s as f64 + 0.5) * t.dt;
+                while pw.ends[seg] <= mid {
+                    seg += 1;
+                }
+                assert_eq!(pw.powers[seg], t.power_at(mid), "{kind:?} sample {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn piecewise_coalesces_rf_off_runs() {
+        // RF is mostly exact-zero off time: run-length coalescing must
+        // shrink it far below one segment per sample.
+        let t = trace(TraceKind::Rf);
+        let pw = t.piecewise();
+        assert!(
+            pw.len() * 4 < t.samples.len(),
+            "RF: {} segments for {} samples",
+            pw.len(),
+            t.samples.len()
+        );
+    }
+
+    #[test]
+    fn piecewise_of_empty_trace_is_constant_zero() {
+        let t = PowerTrace { dt: 0.01, samples: vec![] };
+        let pw = t.piecewise();
+        assert_eq!(pw.len(), 1);
+        assert_eq!(pw.powers[0], 0.0);
+        assert!(!pw.period.is_finite());
     }
 
     #[test]

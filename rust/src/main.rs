@@ -38,6 +38,8 @@ OPTIONS:
   --out DIR       output directory for CSV/JSON (default: out)
   --fast          smaller campaigns (CI-friendly)
   --seed N        base seed (default 42)
+  --engine E      device integrator: analytic (default, event-driven) or
+                  step (the fixed-step reference engine)
 ";
 
 fn main() {
@@ -45,20 +47,44 @@ fn main() {
     let out = args.get_or("out", "out").to_string();
     let fast = args.flag("fast");
     let seed = args.get_u64("seed", 42);
+    // The integrator escape hatch: every campaign builds its engine via
+    // EngineConfig::paper_default, which honours AIC_ENGINE.
+    if let Some(spelling) = args.get("engine") {
+        match aic::exec::engine::EngineKind::parse(spelling) {
+            Some(kind) => std::env::set_var("AIC_ENGINE", kind.label()),
+            None => {
+                eprintln!("error: unknown engine '{spelling}' (expected analytic|step)\n");
+                eprint!("{USAGE}");
+                std::process::exit(2);
+            }
+        }
+    }
     let cmd = args.command().unwrap_or("help").to_string();
     match cmd.as_str() {
-        "fig4" => run_fig4(&out, seed),
-        "fig5" | "fig6" => run_fig56(&out, seed, fast, &cmd),
-        "fig7" | "fig8" | "fig9" => run_fig789(&out, seed, fast, &cmd),
+        // fig4 always reports full-fidelity accuracy curves, even in
+        // --fast sweeps (its cost is training, not campaigning).
+        "fig4" => run_fig4(&context(seed, false), &out),
+        "fig5" | "fig6" => run_fig56(&context(seed, fast), &out, fast, &cmd),
+        "fig7" | "fig8" | "fig9" => run_fig789(&context(seed, fast), &out, fast, &cmd),
         "fig12" => run_fig12(&out, fast),
         "fig13" | "fig14" | "fig15" => run_fig131415(&out, seed, fast, &cmd),
         "all" => {
-            run_fig4(&out, seed);
-            run_fig56(&out, seed, fast, "fig5");
-            run_fig56(&out, seed, fast, "fig6");
-            run_fig789(&out, seed, fast, "fig7");
-            run_fig789(&out, seed, fast, "fig8");
-            run_fig789(&out, seed, fast, "fig9");
+            // One HAR context for the whole sweep: the corpus, the
+            // trained OVR SVM and the fitted class model are identical
+            // across figs. 4-9, so train once and share read-only
+            // across every figure's fleet jobs.
+            let ctx = context(seed, fast);
+            if fast {
+                // Keep fig4 full-fidelity (see the single-command arm).
+                run_fig4(&context(seed, false), &out);
+            } else {
+                run_fig4(&ctx, &out);
+            }
+            run_fig56(&ctx, &out, fast, "fig5");
+            run_fig56(&ctx, &out, fast, "fig6");
+            run_fig789(&ctx, &out, fast, "fig7");
+            run_fig789(&ctx, &out, fast, "fig8");
+            run_fig789(&ctx, &out, fast, "fig9");
             run_fig12(&out, fast);
             run_fig131415(&out, seed, fast, "fig13");
             run_fig131415(&out, seed, fast, "fig14");
@@ -94,10 +120,9 @@ fn har_spec(fast: bool) -> HarRunSpec {
     }
 }
 
-fn run_fig4(out: &str, seed: u64) {
-    let ctx = context(seed, false);
+fn run_fig4(ctx: &HarContext, out: &str) {
     let ps: Vec<usize> = (0..=140).step_by(10).collect();
-    let rows = fig4(&ctx, &ps);
+    let rows = fig4(ctx, &ps);
     let mut t = Table::new(
         "Fig. 4 — expected vs measured accuracy vs number of features",
         &["features", "expected", "measured"],
@@ -108,11 +133,10 @@ fn run_fig4(out: &str, seed: u64) {
     t.emit(out, "fig4").expect("write fig4");
 }
 
-fn run_fig56(out: &str, seed: u64, fast: bool, which: &str) {
-    let ctx = context(seed, fast);
+fn run_fig56(ctx: &HarContext, out: &str, fast: bool, which: &str) {
     let spec = har_spec(fast);
     if which == "fig5" {
-        let rows = har_policy_comparison(&ctx, &spec, &volunteers(fast));
+        let rows = har_policy_comparison(ctx, &spec, &volunteers(fast));
         let mut t = Table::new(
             "Fig. 5 — emulation: accuracy and throughput normalised to continuous",
             &["policy", "accuracy", "thrpt vs continuous", "mean features", "state energy"],
@@ -128,7 +152,7 @@ fn run_fig56(out: &str, seed: u64, fast: bool, which: &str) {
         }
         t.emit(out, "fig5").expect("write fig5");
     } else {
-        let hists = har_latency_histograms(&ctx, &spec, &volunteers(fast), 40);
+        let hists = har_latency_histograms(ctx, &spec, &volunteers(fast), 40);
         let mut t = Table::new(
             "Fig. 6 — emulation: latency distribution in power cycles",
             &["policy", "cycle0", "cycle1", "cycle2-5", "cycle6-15", "cycle16+"],
@@ -149,12 +173,11 @@ fn run_fig56(out: &str, seed: u64, fast: bool, which: &str) {
     }
 }
 
-fn run_fig789(out: &str, seed: u64, fast: bool, which: &str) {
-    let ctx = context(seed, fast);
+fn run_fig789(ctx: &HarContext, out: &str, fast: bool, which: &str) {
     let spec = har_spec(fast);
     match which {
         "fig7" => {
-            let rows = har_policy_comparison(&ctx, &spec, &volunteers(fast));
+            let rows = har_policy_comparison(ctx, &spec, &volunteers(fast));
             let mut t = Table::new(
                 "Fig. 7 — real-world: coherence and throughput vs continuous",
                 &["policy", "coherence vs continuous", "thrpt vs continuous"],
@@ -169,7 +192,7 @@ fn run_fig789(out: &str, seed: u64, fast: bool, which: &str) {
             t.emit(out, "fig7").expect("write fig7");
         }
         "fig8" => {
-            let rows = har_policy_comparison(&ctx, &spec, &volunteers(fast));
+            let rows = har_policy_comparison(ctx, &spec, &volunteers(fast));
             let mut t = Table::new(
                 "Fig. 8 — real-world: coherence vs Chinchilla, throughput vs GREEDY",
                 &["policy", "coherence vs chinchilla", "thrpt vs greedy", "thrpt vs chinchilla"],
@@ -185,7 +208,7 @@ fn run_fig789(out: &str, seed: u64, fast: bool, which: &str) {
             t.emit(out, "fig8").expect("write fig8");
         }
         _ => {
-            let hists = har_latency_histograms(&ctx, &spec, &volunteers(fast), 40);
+            let hists = har_latency_histograms(ctx, &spec, &volunteers(fast), 40);
             let mut t = Table::new(
                 "Fig. 9 — real-world: latency distribution in power cycles",
                 &["policy", "same cycle", "1 cycle", "2+ cycles"],

@@ -1,0 +1,326 @@
+//! Golden-trajectory equivalence: the analytic event-driven engine must
+//! reproduce the fixed-step reference engine (the original integrator,
+//! preserved behind `EngineKind::FixedStep`).
+//!
+//! Three layers of evidence:
+//!
+//! 1. **Exact-on-constants properties** — with a constant harvester the
+//!    reference integrator computes the same piecewise-linear energy
+//!    trajectory as the closed forms, so boot times agree to one stride,
+//!    ledger totals to float noise.
+//! 2. **Fine-grained-limit properties** — on randomized replay traces
+//!    the reference with `charge_dt → 0` converges to the exact integral
+//!    the analytic engine computes; a 1 ms reference must agree closely.
+//! 3. **Campaign goldens** — full GREEDY and Chinchilla campaigns on all
+//!    five ambient traces plus the kinetic HAR harvester, compared at
+//!    the paper's `charge_dt = 0.02`: per-round outcomes, power-cycle
+//!    counts and ledger totals within tolerance of the discretisation
+//!    error the reference itself carries.
+
+use aic::energy::harvester::{kinetic_power_trace, Harvester, KineticConfig};
+use aic::energy::mcu::OpCost;
+use aic::energy::traces::{generate, PowerTrace, TraceKind};
+use aic::exec::approx::{run as run_approx, ApproxConfig};
+use aic::exec::chinchilla::{run as run_chinchilla, ChinchillaConfig};
+use aic::exec::engine::{Engine, EngineConfig, EngineKind, Ledger};
+use aic::exec::program::SyntheticProgram;
+use aic::exec::Campaign;
+use aic::util::rng::Rng;
+use aic::util::testkit::{property, Gen};
+use std::f64::consts::PI;
+
+/// An (analytic, fixed-step reference) engine pair on the same device.
+fn engines(h: &Harvester, horizon: f64, v0: f64, ref_dt: f64) -> (Engine, Engine) {
+    let mut ac = EngineConfig::paper_default(horizon);
+    ac.kind = EngineKind::Analytic;
+    ac.initial_voltage = v0;
+    let mut rc = EngineConfig::reference(horizon);
+    rc.initial_voltage = v0;
+    rc.charge_dt = ref_dt;
+    (Engine::new(ac, h.clone()), Engine::new(rc, h.clone()))
+}
+
+#[test]
+fn constant_harvester_boot_times_agree() {
+    property("analytic boot vs reference", 48, |g: &mut Gen| {
+        let power = g.f64_in(0.2e-3..3e-3);
+        let v0 = g.f64_in(0.0..2.9);
+        let dt = 1e-3;
+        let (mut a, mut r) = engines(&Harvester::Constant(power), 1e5, v0, dt);
+        assert!(a.charge_until_boot(), "analytic never booted at {power} W");
+        assert!(r.charge_until_boot(), "reference never booted at {power} W");
+        assert!(
+            (a.now - r.now).abs() <= dt + 1e-9,
+            "power={power} v0={v0}: boot at {} (analytic) vs {} (reference)",
+            a.now,
+            r.now
+        );
+        assert_eq!(a.cycles, r.cycles);
+        // Reference overshoots V_on by at most one stride of charge.
+        assert!(
+            (a.cap.energy() - r.cap.energy()).abs() <= power * dt + 1e-12,
+            "boot energy {} vs {}",
+            a.cap.energy(),
+            r.cap.energy()
+        );
+    });
+}
+
+#[test]
+fn constant_harvester_sleep_brownout_times_agree() {
+    property("analytic sleep vs reference", 12, |g: &mut Gen| {
+        // Output power ~0 (below the booster's quiescent draw): the
+        // V_off crossing is a pure linear drain with an exact answer.
+        let power = g.f64_in(0.0..1.5e-6);
+        let v0 = g.f64_in(2.2..3.4);
+        let dt = 5e-3;
+        let (mut a, mut r) = engines(&Harvester::Constant(power), 5e7, v0, dt);
+        assert!(!a.sleep(4e6), "analytic survived an unsurvivable sleep");
+        assert!(!r.sleep(4e6), "reference survived an unsurvivable sleep");
+        // Reference detects the crossing within one wide (5×) stride.
+        assert!(
+            (a.now - r.now).abs() <= 5.0 * dt + 1e-6,
+            "power={power} v0={v0}: died at {} (analytic) vs {} (reference)",
+            a.now,
+            r.now
+        );
+        assert_eq!(a.failures, 1);
+        assert_eq!(r.failures, 1);
+    });
+}
+
+#[test]
+fn constant_harvester_op_sequences_match_exactly() {
+    property("analytic ops vs reference", 24, |g: &mut Gen| {
+        let power = g.f64_in(0.0..2e-3);
+        let v0 = g.f64_in(2.4..3.5);
+        let (mut a, mut r) = engines(&Harvester::Constant(power), 1e9, v0, 0.02);
+        for i in 0..25 {
+            let cost = OpCost {
+                cycles: 1_000 + g.usize_in(0..=400_000) as u64,
+                fram_writes: g.usize_in(0..=50) as u64,
+                ble_bytes: if g.bool() { 20 } else { 0 },
+                ..Default::default()
+            };
+            let ledger = if g.bool() { Ledger::App } else { Ledger::State };
+            let oa = a.run_op(&cost, ledger);
+            let or = r.run_op(&cost, ledger);
+            assert_eq!(oa, or, "op {i} diverged (power={power} v0={v0})");
+        }
+        let rel = |x: f64, y: f64| (x - y).abs() / x.abs().max(y.abs()).max(1e-12);
+        assert!((a.now - r.now).abs() < 1e-6, "time {} vs {}", a.now, r.now);
+        assert!(
+            rel(a.app_energy, r.app_energy) < 1e-9,
+            "app ledger {} vs {}",
+            a.app_energy,
+            r.app_energy
+        );
+        assert!(
+            rel(a.state_energy, r.state_energy) < 1e-9,
+            "state ledger {} vs {}",
+            a.state_energy,
+            r.state_energy
+        );
+        assert!(
+            (a.cap.energy() - r.cap.energy()).abs() < 1e-9,
+            "buffer {} vs {}",
+            a.cap.energy(),
+            r.cap.energy()
+        );
+        assert_eq!(a.failures, r.failures);
+    });
+}
+
+/// Random wrapping replay trace: zero-biased so RF-like off runs occur.
+fn random_trace(g: &mut Gen) -> PowerTrace {
+    let n = g.usize_in(10..=120).max(2);
+    let dt = g.f64_in(0.05..0.4).max(0.01);
+    let samples: Vec<f64> = (0..n)
+        .map(|_| if g.bool() { 0.0 } else { g.f64_in(0.0..2.5e-3).max(0.0) })
+        .collect();
+    PowerTrace { dt, samples }
+}
+
+#[test]
+fn random_replay_boot_matches_fine_grained_reference() {
+    property("analytic replay boot", 20, |g: &mut Gen| {
+        let horizon = 2e4;
+        let h = Harvester::Replay(random_trace(g));
+        // A 1 ms reference approaches the exact integral the analytic
+        // engine computes in closed form.
+        let (mut a, mut r) = engines(&h, horizon, 1.0, 1e-3);
+        let ab = a.charge_until_boot();
+        let rb = r.charge_until_boot();
+        match (ab, rb) {
+            (true, true) => {
+                if r.now < 0.95 * horizon {
+                    assert!(
+                        (a.now - r.now).abs() <= 0.02 * r.now.max(1.0) + 0.1,
+                        "boot at {} (analytic) vs {} (reference)",
+                        a.now,
+                        r.now
+                    );
+                }
+            }
+            (false, false) => {}
+            // A disagreement is only legitimate right at the horizon.
+            (true, false) => assert!(
+                a.now > 0.9 * horizon,
+                "analytic booted at {} but the reference never did",
+                a.now
+            ),
+            (false, true) => assert!(
+                r.now > 0.9 * horizon,
+                "reference booted at {} but the analytic engine never did",
+                r.now
+            ),
+        }
+    });
+}
+
+#[test]
+fn random_replay_sleep_tracks_fine_grained_reference() {
+    property("analytic replay sleep", 16, |g: &mut Gen| {
+        let h = Harvester::Replay(random_trace(g));
+        let v0 = g.f64_in(2.6..3.3);
+        let (mut a, mut r) = engines(&h, 1e6, v0, 1e-3);
+        // 40 s of sleep drains ~56 µJ against a ≥2.6 V buffer: both
+        // stay alive, so this isolates the energy integral (including
+        // the rail clamp) from brown-out edge effects.
+        assert!(a.sleep(40.0));
+        assert!(r.sleep(40.0));
+        assert!((a.now - r.now).abs() < 1e-6, "time {} vs {}", a.now, r.now);
+        assert!(
+            (a.cap.energy() - r.cap.energy()).abs() < 2e-5,
+            "v0={v0}: buffer {} vs {} after sleep",
+            a.cap.energy(),
+            r.cap.energy()
+        );
+    });
+}
+
+// ---------------------------------------------------------------------
+// Campaign goldens: all five ambient traces + the kinetic harvester.
+// ---------------------------------------------------------------------
+
+fn synthetic_walking(secs: f64, fs: f64) -> Vec<f64> {
+    let mut rng = Rng::new(77);
+    (0..(secs * fs) as usize)
+        .map(|i| {
+            let t = i as f64 / fs;
+            6.0 * (2.0 * PI * 2.0 * t).sin() + 0.4 * rng.gaussian()
+        })
+        .collect()
+}
+
+/// The six supplies the paper campaigns on: RF/SOM/SIM/SOR/SIR replay
+/// traces plus the kinetic wrist harvester.
+fn supplies() -> Vec<(String, Harvester)> {
+    let mut out: Vec<(String, Harvester)> = TraceKind::ALL
+        .iter()
+        .map(|&k| (k.name().to_string(), Harvester::Replay(generate(k, 600.0, 0.01, 11))))
+        .collect();
+    let accel = synthetic_walking(120.0, 50.0);
+    out.push((
+        "kinetic".to_string(),
+        Harvester::Replay(kinetic_power_trace(&accel, 50.0, &KineticConfig::default())),
+    ));
+    out
+}
+
+/// Per-round outcomes, power-cycle counts and ledger totals within the
+/// tolerance the reference's own 0.02 s discretisation introduces.
+fn assert_campaigns_close(name: &str, a: &Campaign<usize>, r: &Campaign<usize>) {
+    let du = |x: u64, y: u64| x.abs_diff(y);
+    assert!(
+        du(a.power_cycles, r.power_cycles) <= (r.power_cycles / 7).max(3),
+        "{name}: power cycles {} (analytic) vs {} (reference)",
+        a.power_cycles,
+        r.power_cycles
+    );
+    assert!(
+        du(a.power_failures, r.power_failures) <= (r.power_failures / 7).max(3),
+        "{name}: failures {} vs {}",
+        a.power_failures,
+        r.power_failures
+    );
+    assert!(
+        (a.rounds.len() as i64 - r.rounds.len() as i64).abs() <= 3,
+        "{name}: rounds {} vs {}",
+        a.rounds.len(),
+        r.rounds.len()
+    );
+    let ea = a.app_energy + a.state_energy;
+    let er = r.app_energy + r.state_energy;
+    assert!(
+        (ea - er).abs() / er.max(1e-12) < 0.08,
+        "{name}: ledger total {ea} vs {er}"
+    );
+    let emitted_a = a.emitted().count() as i64;
+    let emitted_r = r.emitted().count() as i64;
+    assert!(
+        (emitted_a - emitted_r).abs() <= 3,
+        "{name}: emitted {emitted_a} vs {emitted_r}"
+    );
+    let aligned = a.rounds.len().min(r.rounds.len());
+    let mut outcome_mismatches = 0usize;
+    for (i, (ra, rr)) in a.rounds.iter().zip(r.rounds.iter()).enumerate() {
+        if ra.emitted_at.is_some() != rr.emitted_at.is_some() {
+            outcome_mismatches += 1;
+        }
+        assert!(
+            (ra.steps_executed as i64 - rr.steps_executed as i64).abs() <= 12,
+            "{name} round {i}: steps {} vs {}",
+            ra.steps_executed,
+            rr.steps_executed
+        );
+        // Boot-time jitter bounds the acquisition skew: one stride of
+        // discretisation, amplified at worst by one burst gap on the
+        // bursty traces (waiting out the next burst). Slot sleeps
+        // re-align the engines every round, so skew does not compound.
+        assert!(
+            (ra.acquired_at - rr.acquired_at).abs() <= 30.0,
+            "{name} round {i}: acquired at {} vs {}",
+            ra.acquired_at,
+            rr.acquired_at
+        );
+    }
+    assert!(
+        outcome_mismatches * 5 <= aligned.max(1),
+        "{name}: {outcome_mismatches}/{aligned} rounds flipped emitted/dropped"
+    );
+}
+
+#[test]
+fn golden_greedy_campaigns_match_reference_on_all_supplies() {
+    for (name, h) in supplies() {
+        let (mut a, mut r) = engines(&h, 1800.0, 3.0, 0.02);
+        let mut pa = SyntheticProgram::new(1000, 140, 300_000);
+        let mut pr = SyntheticProgram::new(1000, 140, 300_000);
+        let ca = run_approx(&mut pa, &mut a, &ApproxConfig::greedy(60.0));
+        let cr = run_approx(&mut pr, &mut r, &ApproxConfig::greedy(60.0));
+        assert!(
+            cr.emitted().count() > 0,
+            "{name}: reference GREEDY campaign emitted nothing"
+        );
+        assert_campaigns_close(&name, &ca, &cr);
+    }
+}
+
+#[test]
+fn golden_chinchilla_campaigns_match_reference_on_all_supplies() {
+    for (name, h) in supplies() {
+        let (mut a, mut r) = engines(&h, 1800.0, 3.0, 0.02);
+        let mut pa = SyntheticProgram::new(1000, 60, 300_000);
+        let mut pr = SyntheticProgram::new(1000, 60, 300_000);
+        let ca = run_chinchilla(&mut pa, &mut a, &ChinchillaConfig::default());
+        let cr = run_chinchilla(&mut pr, &mut r, &ChinchillaConfig::default());
+        assert_campaigns_close(&name, &ca, &cr);
+        // Chinchilla is precise under both integrators.
+        for c in [&ca, &cr] {
+            for round in c.emitted() {
+                assert_eq!(round.output, Some(60), "{name}: truncated emission");
+            }
+        }
+    }
+}

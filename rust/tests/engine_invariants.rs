@@ -131,5 +131,10 @@ fn brownout_voids_partial_round_state() {
     let v = e.cap.voltage();
     assert!(v < e.cap.v_off && v > 0.0);
     assert!(e.charge_until_boot());
-    assert!(e.cap.voltage() >= e.cap.v_on * 0.999);
+    // Back at V_on minus exactly the boot cost: the analytic engine
+    // boots at the threshold crossing itself (the fixed-step reference
+    // overshoots by up to one stride of charge).
+    let after_boot =
+        (2.0 * (e.cap.boot_energy_level() - e.mcu.boot_energy) / e.cap.capacitance).sqrt();
+    assert!(e.cap.voltage() >= after_boot - 1e-9, "v={}", e.cap.voltage());
 }

@@ -3,6 +3,7 @@
 //! structural guarantees are asserted uniformly — plus fleet determinism
 //! across worker-pool sizes.
 
+use aic::coordinator::experiment::{run_har_policy, test_context, HarRunSpec};
 use aic::coordinator::fleet::run_fleet;
 use aic::energy::estimator::{EnergyProfile, SmartTable};
 use aic::energy::harvester::Harvester;
@@ -138,6 +139,36 @@ fn approximate_policies_emit_within_the_acquisition_cycle() {
         let c = run_policy(policy, 0.5e-3);
         for r in c.emitted() {
             assert_eq!(r.latency_cycles, 0, "{}", policy.name());
+        }
+    }
+}
+
+#[test]
+fn shared_har_context_fleet_is_deterministic_across_pool_sizes() {
+    // Figure sweeps train the HAR context once and share it read-only
+    // across every fleet job; determinism must not depend on the pool
+    // size the shared context is consumed under.
+    let ctx = test_context();
+    let spec = HarRunSpec { horizon: 900.0, ..Default::default() };
+    let jobs: Vec<(Policy, u64)> = [Policy::Greedy, Policy::Chinchilla]
+        .iter()
+        .flat_map(|&p| [1u64, 2u64].map(|v| (p, v)))
+        .collect();
+    let run_job = |&(p, v): &(Policy, u64)| {
+        run_har_policy(&ctx, &HarRunSpec { script_seed: v, ..spec.clone() }, p)
+    };
+    let reference = run_fleet(&jobs, Some(1), run_job);
+    for workers in [2, 8] {
+        let got = run_fleet(&jobs, Some(workers), run_job);
+        assert_eq!(got.len(), reference.len());
+        for (i, (a, b)) in reference.iter().zip(got.iter()).enumerate() {
+            assert_eq!(a.rounds.len(), b.rounds.len(), "job {i} workers {workers}");
+            assert_eq!(a.power_cycles, b.power_cycles, "job {i} workers {workers}");
+            assert_eq!(a.app_energy, b.app_energy, "job {i} workers {workers}");
+            for (ra, rb) in a.rounds.iter().zip(b.rounds.iter()) {
+                assert_eq!(ra.emitted_at, rb.emitted_at, "job {i} workers {workers}");
+                assert_eq!(ra.steps_executed, rb.steps_executed);
+            }
         }
     }
 }
