@@ -6,19 +6,24 @@
 //! observation holds up to ~42 %; beyond that the corner count drops and
 //! spurious detections appear.
 
-use aic::coordinator::experiment::fig12;
+use aic::coordinator::scenario::{builtin, WorkloadSpec};
 use aic::imgproc::images::Picture;
 use aic::util::bench::Bench;
 
 fn main() {
     let fast = std::env::var("AIC_BENCH_FAST").is_ok();
     let b = Bench::new("fig12_perforation");
-    let size = if fast { 96 } else { aic::imgproc::images::EVAL_SIZE };
-    let skips = [0.0, 0.1, 0.2, 0.3, 0.42, 0.5, 0.6, 0.7, 0.85];
+    // The bench sweeps a denser skip grid than the figure scenario.
+    let sc = builtin("fig12", 42).expect("fig12 scenario").with_workload(
+        WorkloadSpec::Perforation {
+            size: if fast { 96 } else { aic::imgproc::images::EVAL_SIZE },
+            skips: vec![0.0, 0.1, 0.2, 0.3, 0.42, 0.5, 0.6, 0.7, 0.85],
+        },
+    );
 
     let mut rows_out = Vec::new();
     b.bench("perforation_sweep", || {
-        rows_out = fig12(size, &skips);
+        rows_out = sc.run(false).perforation_rows().to_vec();
     });
 
     let rows: Vec<Vec<String>> = rows_out

@@ -4,27 +4,26 @@
 //! Paper shape: approximate intermittent computing returns an equivalent
 //! output in at least 84 % of the cases across all five traces.
 
-use aic::coordinator::experiment::{img_trace_comparison, ImgRunSpec};
+use aic::coordinator::scenario::builtin;
 use aic::util::bench::Bench;
 
 fn main() {
     let fast = std::env::var("AIC_BENCH_FAST").is_ok();
     let b = Bench::new("fig13_equivalence");
-    let spec = ImgRunSpec {
-        horizon: if fast { 1200.0 } else { 2.0 * 3600.0 },
-        ..Default::default()
-    };
+    // Historical bench realisation: trace seed 3 (the old ImgRunSpec
+    // default); --fast shrinks the horizon via the scenario's fast mode.
+    let sc = builtin("fig13", 3).expect("fig13 scenario");
 
     let mut rows_out = Vec::new();
     b.bench("per_trace_campaigns", || {
-        rows_out = img_trace_comparison(&spec);
+        rows_out = sc.run(fast).img_trace_rows();
     });
 
     let rows: Vec<Vec<String>> = rows_out
         .iter()
         .map(|r| {
             vec![
-                r.trace.name().to_string(),
+                r.harvester.name().to_string(),
                 format!("{:.1}%", 100.0 * r.equivalence_aic),
             ]
         })

@@ -6,21 +6,20 @@
 //! energy, opposite dynamics — perform similarly under AIC while
 //! Chinchilla suffers on RF's rapid dynamics.
 
-use aic::coordinator::experiment::{img_trace_comparison, ImgRunSpec};
+use aic::coordinator::scenario::{builtin, HarvesterSpec, ImgTraceRow};
 use aic::energy::traces::TraceKind;
 use aic::util::bench::Bench;
 
 fn main() {
     let fast = std::env::var("AIC_BENCH_FAST").is_ok();
     let b = Bench::new("fig14_throughput");
-    let spec = ImgRunSpec {
-        horizon: if fast { 1200.0 } else { 2.0 * 3600.0 },
-        ..Default::default()
-    };
+    // Historical bench realisation: trace seed 3 (the old ImgRunSpec
+    // default); --fast shrinks the horizon via the scenario's fast mode.
+    let sc = builtin("fig14", 3).expect("fig14 scenario");
 
-    let mut rows_out = Vec::new();
+    let mut rows_out: Vec<ImgTraceRow> = Vec::new();
     b.bench("per_trace_campaigns", || {
-        rows_out = img_trace_comparison(&spec);
+        rows_out = sc.run(fast).img_trace_rows();
     });
 
     let rows: Vec<Vec<String>> = rows_out
@@ -29,7 +28,7 @@ fn main() {
             let gain = r.throughput_aic_vs_continuous
                 / r.throughput_chinchilla_vs_continuous.max(1e-9);
             vec![
-                r.trace.name().to_string(),
+                r.harvester.name().to_string(),
                 format!("{:.1}%", 100.0 * r.throughput_aic_vs_continuous),
                 format!("{:.1}%", 100.0 * r.throughput_chinchilla_vs_continuous),
                 format!("{gain:.2}x"),
@@ -42,7 +41,9 @@ fn main() {
         &rows,
     );
 
-    let get = |k: TraceKind| rows_out.iter().find(|r| r.trace == k).unwrap();
+    let get = |k: TraceKind| {
+        rows_out.iter().find(|r| r.harvester == HarvesterSpec::Ambient(k)).unwrap()
+    };
     let all_win = rows_out
         .iter()
         .all(|r| r.throughput_aic_vs_continuous >= r.throughput_chinchilla_vs_continuous);

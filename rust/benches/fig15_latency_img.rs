@@ -6,8 +6,8 @@
 //! Chinchilla concludes within ~10 cycles under energy abundance (SOR)
 //! and stretches over more cycles under RF.
 
-use aic::coordinator::experiment::{run_img_policy, ImgRunSpec};
 use aic::coordinator::metrics::{latency_histogram, same_cycle_fraction};
+use aic::coordinator::scenario::{builtin, HarvesterSpec, SweepRun};
 use aic::energy::traces::TraceKind;
 use aic::exec::Policy;
 use aic::util::bench::Bench;
@@ -15,20 +15,32 @@ use aic::util::bench::Bench;
 fn main() {
     let fast = std::env::var("AIC_BENCH_FAST").is_ok();
     let b = Bench::new("fig15_latency_img");
-    let spec = ImgRunSpec {
-        horizon: if fast { 1200.0 } else { 2.0 * 3600.0 },
-        ..Default::default()
-    };
+    // The historical bench grid: SOR + RF only, no continuous baseline,
+    // trace seed 3 (the old ImgRunSpec default).
+    let sc = builtin("fig15", 3)
+        .expect("fig15 scenario")
+        .with_harvesters(vec![
+            HarvesterSpec::Ambient(TraceKind::Sor),
+            HarvesterSpec::Ambient(TraceKind::Rf),
+        ])
+        .with_policies(vec![Policy::Greedy, Policy::Chinchilla]);
 
-    let mut results = Vec::new();
+    let mut run_out: Option<SweepRun> = None;
     b.bench("sor_rf_latency", || {
-        results.clear();
-        for trace in [TraceKind::Sor, TraceKind::Rf] {
-            let aic_run = run_img_policy(&spec, trace, Policy::Greedy);
-            let chin = run_img_policy(&spec, trace, Policy::Chinchilla);
-            results.push((trace, aic_run, chin));
-        }
+        run_out = Some(sc.run(fast));
     });
+    let run = run_out.expect("bench ran at least once");
+    let g = run.policy_index(Policy::Greedy).unwrap();
+    let c = run.policy_index(Policy::Chinchilla).unwrap();
+    let results: Vec<_> = [TraceKind::Sor, TraceKind::Rf]
+        .iter()
+        .enumerate()
+        .map(|(hi, &trace)| {
+            let aic_run = &run.img_campaigns()[run.cell_index(hi, 0, g, 0)];
+            let chin = &run.img_campaigns()[run.cell_index(hi, 0, c, 0)];
+            (trace, aic_run, chin)
+        })
+        .collect();
 
     let mut rows = Vec::new();
     for (trace, aic_run, chin) in &results {
@@ -69,7 +81,7 @@ fn main() {
     }
     // SOR should conclude in fewer cycles than RF.
     let mean_of = |i: usize| -> f64 {
-        let c = &results[i].2;
+        let c = results[i].2;
         c.emitted().map(|r| r.latency_cycles as f64).sum::<f64>()
             / c.emitted().count().max(1) as f64
     };

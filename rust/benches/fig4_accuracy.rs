@@ -5,18 +5,18 @@
 //! the first features, flatten out, and top at ~88 %; the expected curve
 //! (Eq. 7 analysis) stays close to the measured one throughout.
 
-use aic::coordinator::experiment::{fig4, HarContext};
+use aic::coordinator::scenario::builtin;
 use aic::util::bench::Bench;
 
 fn main() {
     let b = Bench::new("fig4_accuracy");
-    let ctx = HarContext::build(42);
-    let ps: Vec<usize> = (0..=140).step_by(10).collect();
+    let sc = builtin("fig4", 42).expect("fig4 scenario");
+    // Train once outside the timed region (the curve is the deliverable).
+    let ctx = sc.har_context();
 
-    // Timing: the Eq. 7 numeric evaluation + the measured sweep.
     let mut rows_out = Vec::new();
     b.bench("expected_and_measured_curves", || {
-        rows_out = fig4(&ctx, &ps);
+        rows_out = sc.run_with(false, Some(&ctx), None).accuracy_rows().to_vec();
     });
 
     let rows: Vec<Vec<String>> = rows_out

@@ -5,23 +5,24 @@
 //! result within the same power cycle (by design); Chinchilla's latency
 //! is a function of energy patterns, with a tail reaching tens of cycles.
 
-use aic::coordinator::experiment::{har_latency_histograms, HarContext, HarRunSpec};
+use aic::coordinator::scenario::builtin;
 use aic::exec::Policy;
 use aic::util::bench::Bench;
 
 fn main() {
     let fast = std::env::var("AIC_BENCH_FAST").is_ok();
     let b = Bench::new("fig6_latency");
-    let ctx = HarContext::build(42);
-    let spec = HarRunSpec {
-        horizon: if fast { 1800.0 } else { 4.0 * 3600.0 },
-        ..Default::default()
-    };
-    let volunteers: Vec<u64> = if fast { vec![1] } else { vec![1, 2, 3, 4] };
+    let mut sc = builtin("fig6", 42)
+        .expect("fig6 scenario")
+        .with_seeds(if fast { vec![1] } else { vec![1, 2, 3, 4] });
+    if fast {
+        sc = sc.with_horizon(1800.0);
+    }
+    let ctx = sc.har_context();
 
     let mut hists = Vec::new();
     b.bench("latency_distributions", || {
-        hists = har_latency_histograms(&ctx, &spec, &volunteers, 40);
+        hists = sc.run_with(false, Some(&ctx), None).latency_histograms(40);
     });
 
     let rows: Vec<Vec<String>> = hists

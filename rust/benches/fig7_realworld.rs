@@ -7,24 +7,23 @@
 //! classifications are delivered, with GREEDY highest in throughput
 //! (trend reversed vs coherence).
 
-use aic::coordinator::experiment::{har_policy_comparison, HarContext, HarRunSpec};
+use aic::coordinator::scenario::builtin;
 use aic::exec::Policy;
 use aic::util::bench::Bench;
 
 fn main() {
     let fast = std::env::var("AIC_BENCH_FAST").is_ok();
     let b = Bench::new("fig7_realworld");
-    let ctx = HarContext::build(42);
     // §5.3: six volunteers, ~56 h each; scaled-down horizon here.
-    let spec = HarRunSpec {
-        horizon: if fast { 1800.0 } else { 6.0 * 3600.0 },
-        ..Default::default()
-    };
-    let volunteers: Vec<u64> = if fast { vec![11, 12] } else { vec![11, 12, 13, 14, 15, 16] };
+    let sc = builtin("fig7", 42)
+        .expect("fig7 scenario")
+        .with_horizon(if fast { 1800.0 } else { 6.0 * 3600.0 })
+        .with_seeds(if fast { vec![11, 12] } else { vec![11, 12, 13, 14, 15, 16] });
+    let ctx = sc.har_context();
 
     let mut rows_out = Vec::new();
     b.bench("wrist_pair_campaigns", || {
-        rows_out = har_policy_comparison(&ctx, &spec, &volunteers);
+        rows_out = sc.run_with(false, Some(&ctx), None).policy_rows();
     });
 
     let rows: Vec<Vec<String>> = rows_out

@@ -7,24 +7,23 @@
 //! small fraction of GREEDY's because single samples stretch across
 //! power cycles, preventing the acquisition of newer samples.
 
-use aic::coordinator::experiment::{har_policy_comparison, HarContext, HarRunSpec};
+use aic::coordinator::scenario::builtin;
 use aic::exec::Policy;
 use aic::util::bench::Bench;
 
 fn main() {
     let fast = std::env::var("AIC_BENCH_FAST").is_ok();
     let b = Bench::new("fig8_chinchilla");
-    let ctx = HarContext::build(42);
     // §5.4: another six volunteers, ~58 h each; scaled-down horizon.
-    let spec = HarRunSpec {
-        horizon: if fast { 1800.0 } else { 6.0 * 3600.0 },
-        ..Default::default()
-    };
-    let volunteers: Vec<u64> = if fast { vec![21, 22] } else { vec![21, 22, 23, 24, 25, 26] };
+    let sc = builtin("fig8", 42)
+        .expect("fig8 scenario")
+        .with_horizon(if fast { 1800.0 } else { 6.0 * 3600.0 })
+        .with_seeds(if fast { vec![21, 22] } else { vec![21, 22, 23, 24, 25, 26] });
+    let ctx = sc.har_context();
 
     let mut rows_out = Vec::new();
     b.bench("chinchilla_pair_campaigns", || {
-        rows_out = har_policy_comparison(&ctx, &spec, &volunteers);
+        rows_out = sc.run_with(false, Some(&ctx), None).policy_rows();
     });
 
     let rows: Vec<Vec<String>> = rows_out

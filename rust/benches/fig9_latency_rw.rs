@@ -6,23 +6,23 @@
 //! the first power failure; Chinchilla stretches across multiple cycles,
 //! including recharge periods.
 
-use aic::coordinator::experiment::{har_latency_histograms, HarContext, HarRunSpec};
+use aic::coordinator::scenario::builtin;
 use aic::exec::Policy;
 use aic::util::bench::Bench;
 
 fn main() {
     let fast = std::env::var("AIC_BENCH_FAST").is_ok();
     let b = Bench::new("fig9_latency_rw");
-    let ctx = HarContext::build(43); // real-world cohort
-    let spec = HarRunSpec {
-        horizon: if fast { 1800.0 } else { 6.0 * 3600.0 },
-        ..Default::default()
-    };
-    let volunteers: Vec<u64> = if fast { vec![31] } else { vec![31, 32, 33, 34] };
+    // Real-world cohort: its own training seed and volunteers.
+    let sc = builtin("fig9", 43)
+        .expect("fig9 scenario")
+        .with_horizon(if fast { 1800.0 } else { 6.0 * 3600.0 })
+        .with_seeds(if fast { vec![31] } else { vec![31, 32, 33, 34] });
+    let ctx = sc.har_context();
 
     let mut hists = Vec::new();
     b.bench("rw_latency_distributions", || {
-        hists = har_latency_histograms(&ctx, &spec, &volunteers, 40);
+        hists = sc.run_with(false, Some(&ctx), None).latency_histograms(40);
     });
 
     let rows: Vec<Vec<String>> = hists

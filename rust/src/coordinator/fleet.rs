@@ -1,20 +1,16 @@
 //! Device-fleet orchestration.
 //!
 //! The paper manufactures 12 identical prototypes and runs 15 volunteers
-//! across 24 days. Fleet runs parallelise that: each job (a volunteer's
-//! wrist device, an imaging device on an energy trace, a figure sweep
-//! cell) is one independent simulated device, executed on a **bounded
-//! worker pool** capped at the machine's available parallelism. Results
-//! are returned **in job order** — never in completion order — so fleet
-//! output is deterministic whatever the pool size or thread scheduling.
+//! across 24 days. Fleet runs parallelise that: each job (one scenario
+//! grid cell — a volunteer's wrist device, an imaging device on an
+//! energy trace) is one independent simulated device, executed on a
+//! **bounded worker pool** capped at the machine's available
+//! parallelism. Results are returned **in job order** — never in
+//! completion order — so fleet output is deterministic whatever the
+//! pool size or thread scheduling. The scenario layer
+//! (`coordinator/scenario.rs`) expands every sweep into a job plan and
+//! dispatches it here; there is no per-workload fleet wiring anymore.
 
-use crate::coordinator::experiment::{
-    run_har_policy, run_img_policy, HarContext, HarRunSpec, ImgRunSpec,
-};
-use crate::energy::traces::TraceKind;
-use crate::exec::{Campaign, Policy};
-use crate::har::app::HarOutput;
-use crate::imgproc::app::CornerOutput;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
@@ -72,61 +68,14 @@ where
         .collect()
 }
 
-/// One HAR fleet assignment: a simulated device on a volunteer's wrist.
-#[derive(Clone, Debug)]
-pub struct Assignment {
-    pub volunteer: u64,
-    pub policy: Policy,
-}
-
-/// Run all HAR assignments on the bounded pool; results in assignment
-/// order.
-pub fn run_har_fleet(
-    ctx: &HarContext,
-    spec: &HarRunSpec,
-    assignments: &[Assignment],
-) -> Vec<Campaign<HarOutput>> {
-    run_fleet(assignments, None, |a| {
-        let spec = HarRunSpec { script_seed: a.volunteer, ..spec.clone() };
-        run_har_policy(ctx, &spec, a.policy)
-    })
-}
-
-/// One imaging fleet assignment: a simulated device on an ambient energy
-/// trace.
-#[derive(Clone, Debug)]
-pub struct ImgAssignment {
-    pub trace: TraceKind,
-    pub policy: Policy,
-}
-
-/// Run all imaging assignments on the bounded pool; results in
-/// assignment order — the imgproc twin of [`run_har_fleet`].
-pub fn run_img_fleet(
-    spec: &ImgRunSpec,
-    assignments: &[ImgAssignment],
-) -> Vec<Campaign<CornerOutput>> {
-    run_fleet(assignments, None, |a| run_img_policy(spec, a.trace, a.policy))
-}
-
-/// The paper's §5.3 wrist setup: per volunteer, one device under `policy`
-/// and one continuous reference on the same motion (same script seed).
-pub fn wrist_pairs(volunteers: &[u64], policy: Policy) -> Vec<Assignment> {
-    volunteers
-        .iter()
-        .flat_map(|&v| {
-            [
-                Assignment { volunteer: v, policy },
-                Assignment { volunteer: v, policy: Policy::Continuous },
-            ]
-        })
-        .collect()
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::experiment::test_context;
+    use crate::coordinator::experiment::{
+        run_har_policy, run_img_policy, test_context, HarRunSpec, ImgRunSpec,
+    };
+    use crate::energy::traces::TraceKind;
+    use crate::exec::Policy;
 
     #[test]
     fn pool_preserves_job_order_for_any_worker_count() {
@@ -148,13 +97,12 @@ mod tests {
     fn fleet_runs_match_sequential_runs() {
         let ctx = test_context();
         let spec = HarRunSpec { horizon: 900.0, ..Default::default() };
-        let assignments = vec![
-            Assignment { volunteer: 1, policy: Policy::Greedy },
-            Assignment { volunteer: 2, policy: Policy::Greedy },
-        ];
-        let fleet = run_har_fleet(&ctx, &spec, &assignments);
+        let jobs = [(1u64, Policy::Greedy), (2u64, Policy::Greedy)];
+        let fleet = run_fleet(&jobs, None, |&(v, p)| {
+            run_har_policy(&ctx, &HarRunSpec { script_seed: v, ..spec.clone() }, p)
+        });
         assert_eq!(fleet.len(), 2);
-        // Determinism: a sequential run of the same assignment agrees.
+        // Determinism: a sequential run of the same cell agrees.
         let solo = run_har_policy(
             &ctx,
             &HarRunSpec { script_seed: 1, ..spec.clone() },
@@ -167,23 +115,12 @@ mod tests {
     #[test]
     fn img_fleet_has_har_parity() {
         let spec = ImgRunSpec { horizon: 400.0, ..Default::default() };
-        let assignments = vec![
-            ImgAssignment { trace: TraceKind::Som, policy: Policy::Greedy },
-            ImgAssignment { trace: TraceKind::Rf, policy: Policy::Greedy },
-        ];
-        let fleet = run_img_fleet(&spec, &assignments);
+        let jobs = [(TraceKind::Som, Policy::Greedy), (TraceKind::Rf, Policy::Greedy)];
+        let fleet = run_fleet(&jobs, None, |&(t, p)| run_img_policy(&spec, t, p));
         assert_eq!(fleet.len(), 2);
         // Deterministic twin of the sequential run.
         let solo = run_img_policy(&spec, TraceKind::Som, Policy::Greedy);
         assert_eq!(fleet[0].rounds.len(), solo.rounds.len());
         assert_eq!(fleet[0].power_cycles, solo.power_cycles);
-    }
-
-    #[test]
-    fn wrist_pairs_shape() {
-        let pairs = wrist_pairs(&[10, 11], Policy::Greedy);
-        assert_eq!(pairs.len(), 4);
-        assert_eq!(pairs[0].volunteer, 10);
-        assert_eq!(pairs[1].policy, Policy::Continuous);
     }
 }

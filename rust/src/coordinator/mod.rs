@@ -1,20 +1,25 @@
-//! Experiment coordination: the layer that reproduces the paper's
-//! evaluation.
+//! Experiment coordination: the layer that reproduces — and generalises
+//! — the paper's evaluation.
 //!
 //! * [`metrics`] — accuracy, coherence (the §5.3 alignment rule),
 //!   throughput ratios and latency distributions over campaigns.
 //! * [`experiment`] — the [`experiment::Workload`] abstraction (how a
-//!   workload builds its program, harvester, and SMART table), the
-//!   generic [`experiment::run_campaign`] driver, and the per-figure
-//!   experiment definitions: HAR contexts (corpus → training → Eq. 7
-//!   tables → kinetic-powered campaigns) and imaging campaigns over the
-//!   five energy traces.
+//!   workload builds its program, harvester, and SMART table) and the
+//!   generic [`experiment::run_campaign_on`] driver behind every grid
+//!   cell, plus the HAR/imaging workloads and their training context.
+//! * [`scenario`] — the declarative sweep API: a serialisable
+//!   [`scenario::Scenario`] (workload × harvesters × devices × policies
+//!   × seeds + projection) expands into a deterministic job plan; every
+//!   paper figure is a named built-in scenario, and `aic sweep` runs
+//!   arbitrary grids from JSON files.
 //! * [`fleet`] — workload-generic multi-device orchestration (the
 //!   paper's 12 prototypes and 15 volunteers) on a bounded worker pool
 //!   with deterministic, job-ordered results.
-//! * [`report`] — figure data as markdown tables + CSV under `out/`.
+//! * [`sink`] — where tables go: markdown/CSV/JSON streaming sinks and
+//!   in-memory capture.
 
 pub mod experiment;
 pub mod fleet;
 pub mod metrics;
-pub mod report;
+pub mod scenario;
+pub mod sink;

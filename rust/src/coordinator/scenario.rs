@@ -1,0 +1,1860 @@
+//! Declarative scenarios: a sweep is data, not code.
+//!
+//! A [`Scenario`] is one serialisable spec describing a whole campaign
+//! grid — workload × harvesters × device knobs × policies × seeds —
+//! plus the derived-metric [`Projection`] that turns the grid into
+//! tables. Every paper figure (figs. 4–15) is a *named built-in
+//! scenario* ([`builtin`]); arbitrary grids the paper never printed —
+//! HAR on the five ambient traces, imaging on the kinetic harvester,
+//! capacitor-size × policy sweeps — are JSON files fed to
+//! `aic sweep --scenario file.json`, with zero new Rust.
+//!
+//! The pipeline is strictly staged:
+//!
+//! ```text
+//! Scenario ──resolve(fast)──► Scenario ──plan()──► JobPlan (deterministic cells)
+//!                                                     │ run_fleet (job-ordered)
+//!                                                     ▼
+//!                         SweepRun { grid } ──projections──► Vec<TableData> ──► Sink
+//! ```
+//!
+//! The plan is a pure function of the spec, and the fleet returns
+//! results in job order, so every sweep is deterministic for any
+//! `AIC_WORKERS` setting. JSON round-trips losslessly
+//! (`to_json_string` → [`Scenario::parse`] → identical plan), which is
+//! what makes scenario files a stable interchange format.
+
+use crate::coordinator::experiment::{
+    run_campaign_on, HarContext, HarRunSpec, HarWorkload, ImgRunSpec, ImgWorkload,
+};
+use crate::coordinator::fleet::run_fleet;
+use crate::coordinator::metrics;
+use crate::coordinator::sink::{f2, pct, ratio, TableData};
+use crate::energy::capacitor::Capacitor;
+use crate::energy::harvester::{kinetic_power_trace, Harvester, KineticConfig};
+use crate::energy::traces::{generate, TraceKind};
+use crate::exec::engine::{EngineConfig, EngineKind};
+use crate::exec::{Campaign, Policy};
+use crate::har::app::HarOutput;
+use crate::har::dataset::{ActivityScript, Corpus, CorpusSpec};
+use crate::imgproc::app::CornerOutput;
+use crate::imgproc::images::{Picture, EVAL_SIZE};
+use crate::util::json::{self, Value};
+use crate::util::stats::Histogram;
+
+// ---------------------------------------------------------------------
+// Spec axes.
+// ---------------------------------------------------------------------
+
+/// Which energy supply powers a device cell.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HarvesterSpec {
+    /// Kinetic energy of the volunteer's wrist motion; the seed selects
+    /// the activity script (the paper's §5 HAR supply).
+    Kinetic,
+    /// One of the §6 ambient traces; the seed selects the realisation.
+    Ambient(TraceKind),
+}
+
+impl HarvesterSpec {
+    pub fn name(&self) -> &'static str {
+        match self {
+            HarvesterSpec::Kinetic => "kinetic",
+            HarvesterSpec::Ambient(kind) => kind.name(),
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<HarvesterSpec> {
+        if s == "kinetic" {
+            Some(HarvesterSpec::Kinetic)
+        } else {
+            TraceKind::from_name(s).map(HarvesterSpec::Ambient)
+        }
+    }
+
+    /// Build the supply for one device (deterministic in `seed`). The
+    /// kinetic arm derives the trace from the same activity script that
+    /// feeds the HAR classifier; ambient traces are capped at one 30-min
+    /// realisation and replayed periodically, as the imaging figures
+    /// always did.
+    pub fn build(&self, horizon: f64, seed: u64) -> Harvester {
+        match self {
+            HarvesterSpec::Kinetic => {
+                let script = ActivityScript::generate(horizon, seed);
+                let accel = script.accel_magnitude(50.0);
+                Harvester::Replay(kinetic_power_trace(&accel, 50.0, &KineticConfig::default()))
+            }
+            HarvesterSpec::Ambient(kind) => {
+                Harvester::Replay(generate(*kind, horizon.min(1800.0), 0.01, seed))
+            }
+        }
+    }
+}
+
+/// Device knobs of one cell: capacitor sizing/thresholds and the energy
+/// integrator. `None` fields keep the paper defaults; `engine: None`
+/// keeps the `AIC_ENGINE` environment variable as a read-only fallback
+/// (the CLI's `--engine` flag lands here instead of mutating the
+/// process environment).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct DeviceSpec {
+    /// Buffer capacitance, farads (paper: 1470e-6).
+    pub capacitance: Option<f64>,
+    /// Turn-on threshold, volts (paper: 3.0).
+    pub v_on: Option<f64>,
+    /// Brown-out threshold, volts (paper: 1.8).
+    pub v_off: Option<f64>,
+    /// Energy integrator; `None` defers to `AIC_ENGINE`.
+    pub engine: Option<EngineKind>,
+}
+
+impl DeviceSpec {
+    /// The engine configuration this spec selects on `horizon`. With no
+    /// overrides this is exactly [`EngineConfig::paper_default`].
+    pub fn engine_config(&self, horizon: f64) -> EngineConfig {
+        let mut cfg = EngineConfig::paper_default(horizon);
+        let (base_c, base_vmax, base_von, base_voff) = {
+            let b = &cfg.capacitor;
+            (b.capacitance, b.v_max, b.v_on, b.v_off)
+        };
+        let cap = Capacitor::new(
+            self.capacitance.unwrap_or(base_c),
+            base_vmax,
+            self.v_on.unwrap_or(base_von),
+            self.v_off.unwrap_or(base_voff),
+        );
+        cfg.initial_voltage = cap.v_on;
+        cfg.capacitor = cap;
+        if let Some(kind) = self.engine {
+            cfg.kind = kind;
+        }
+        cfg
+    }
+
+    /// Short human label for table rows ("paper" when all-default).
+    pub fn label(&self) -> String {
+        if *self == DeviceSpec::default() {
+            return "paper".to_string();
+        }
+        let mut parts = Vec::new();
+        if let Some(c) = self.capacitance {
+            parts.push(format!("C={c}"));
+        }
+        if let Some(v) = self.v_on {
+            parts.push(format!("Von={v}"));
+        }
+        if let Some(v) = self.v_off {
+            parts.push(format!("Voff={v}"));
+        }
+        if let Some(k) = self.engine {
+            parts.push(format!("engine={}", k.label()));
+        }
+        parts.join(" ")
+    }
+
+    fn to_json(&self) -> Value {
+        let mut pairs: Vec<(&str, Value)> = Vec::new();
+        if let Some(c) = self.capacitance {
+            pairs.push(("capacitance", c.into()));
+        }
+        if let Some(v) = self.v_on {
+            pairs.push(("v_on", v.into()));
+        }
+        if let Some(v) = self.v_off {
+            pairs.push(("v_off", v.into()));
+        }
+        if let Some(k) = self.engine {
+            pairs.push(("engine", k.label().into()));
+        }
+        Value::obj(pairs)
+    }
+
+    fn from_json(v: &Value) -> Result<DeviceSpec, String> {
+        let obj = v.as_obj().ok_or("device must be a JSON object")?;
+        for key in obj.keys() {
+            if !["capacitance", "v_on", "v_off", "engine"].contains(&key.as_str()) {
+                return Err(format!("unknown device key '{key}'"));
+            }
+        }
+        let engine = match opt_str(v, "engine")? {
+            None => None,
+            Some(s) => Some(
+                EngineKind::parse(s)
+                    .ok_or_else(|| format!("unknown engine '{s}' (expected analytic|step)"))?,
+            ),
+        };
+        Ok(DeviceSpec {
+            capacitance: opt_f64(v, "capacitance")?,
+            v_on: opt_f64(v, "v_on")?,
+            v_off: opt_f64(v, "v_off")?,
+            engine,
+        })
+    }
+}
+
+/// What the grid computes per cell.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WorkloadSpec {
+    /// HAR campaigns: seeds are volunteers' activity scripts.
+    Har,
+    /// Harris imaging campaigns: seeds are trace/picture realisations.
+    Img,
+    /// Fig. 4 offline analysis: expected vs measured accuracy per
+    /// anytime prefix length.
+    AccuracyCurve { ps: Vec<usize> },
+    /// Fig. 12 offline analysis: corner output per perforation rate.
+    Perforation { size: usize, skips: Vec<f64> },
+}
+
+impl WorkloadSpec {
+    pub fn is_campaign(&self) -> bool {
+        matches!(self, WorkloadSpec::Har | WorkloadSpec::Img)
+    }
+
+    fn to_json(&self) -> Value {
+        match self {
+            WorkloadSpec::Har => "har".into(),
+            WorkloadSpec::Img => "img".into(),
+            WorkloadSpec::AccuracyCurve { ps } => Value::obj(vec![
+                ("kind", "accuracy-curve".into()),
+                ("ps", Value::Arr(ps.iter().map(|&p| Value::Num(p as f64)).collect())),
+            ]),
+            WorkloadSpec::Perforation { size, skips } => Value::obj(vec![
+                ("kind", "perforation".into()),
+                ("size", (*size).into()),
+                ("skips", Value::nums(skips)),
+            ]),
+        }
+    }
+
+    fn from_json(v: &Value) -> Result<WorkloadSpec, String> {
+        if let Some(s) = v.as_str() {
+            return match s {
+                "har" => Ok(WorkloadSpec::Har),
+                "img" => Ok(WorkloadSpec::Img),
+                _ => Err(format!("unknown workload '{s}' (expected har|img or an object)")),
+            };
+        }
+        let obj = v.as_obj().ok_or("workload must be a string or an object")?;
+        match v.get("kind").as_str() {
+            Some("accuracy-curve") => {
+                for key in obj.keys() {
+                    if !["kind", "ps"].contains(&key.as_str()) {
+                        return Err(format!("unknown workload key '{key}'"));
+                    }
+                }
+                let ps = v
+                    .get("ps")
+                    .as_arr()
+                    .ok_or("accuracy-curve needs a 'ps' array")?
+                    .iter()
+                    .map(|p| {
+                        p.as_u64()
+                            .map(|n| n as usize)
+                            .ok_or_else(|| "'ps' entries must be unsigned integers".to_string())
+                    })
+                    .collect::<Result<Vec<usize>, String>>()?;
+                Ok(WorkloadSpec::AccuracyCurve { ps })
+            }
+            Some("perforation") => {
+                for key in obj.keys() {
+                    if !["kind", "size", "skips"].contains(&key.as_str()) {
+                        return Err(format!("unknown workload key '{key}'"));
+                    }
+                }
+                let size = v
+                    .get("size")
+                    .as_u64()
+                    .map(|n| n as usize)
+                    .ok_or("perforation needs an unsigned integer 'size'")?;
+                let skips = v
+                    .get("skips")
+                    .as_arr()
+                    .ok_or("perforation needs a 'skips' array")?
+                    .iter()
+                    .map(|s| s.as_f64().ok_or_else(|| "'skips' entries must be numbers".to_string()))
+                    .collect::<Result<Vec<f64>, String>>()?;
+                Ok(WorkloadSpec::Perforation { size, skips })
+            }
+            _ => Err("workload object needs kind: accuracy-curve|perforation".to_string()),
+        }
+    }
+}
+
+/// HAR corpus/training parameters (ignored by non-HAR workloads).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Training {
+    pub train_volunteers: usize,
+    pub test_volunteers: usize,
+    pub windows_per_volunteer_per_class: usize,
+    pub seed: u64,
+}
+
+impl Training {
+    /// Full-fidelity training on the default corpus.
+    pub fn full(seed: u64) -> Training {
+        let d = CorpusSpec::default();
+        Training {
+            train_volunteers: d.train_volunteers,
+            test_volunteers: d.test_volunteers,
+            windows_per_volunteer_per_class: d.windows_per_volunteer_per_class,
+            seed,
+        }
+    }
+
+    /// The CI-sized corpus `experiment::test_context` trains on.
+    pub fn tiny() -> Training {
+        Training {
+            train_volunteers: 2,
+            test_volunteers: 1,
+            windows_per_volunteer_per_class: 6,
+            seed: 7,
+        }
+    }
+
+    pub fn corpus_spec(&self) -> CorpusSpec {
+        CorpusSpec {
+            train_volunteers: self.train_volunteers,
+            test_volunteers: self.test_volunteers,
+            windows_per_volunteer_per_class: self.windows_per_volunteer_per_class,
+        }
+    }
+
+    /// Train the shared HAR context this spec describes (the expensive,
+    /// once-per-sweep step).
+    pub fn context(&self) -> HarContext {
+        HarContext::build_with(&self.corpus_spec(), self.seed)
+    }
+
+    fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("train_volunteers", self.train_volunteers.into()),
+            ("test_volunteers", self.test_volunteers.into()),
+            ("windows", self.windows_per_volunteer_per_class.into()),
+            ("seed", Value::Num(self.seed as f64)),
+        ])
+    }
+
+    fn from_json(v: &Value, base: Training) -> Result<Training, String> {
+        let obj = v.as_obj().ok_or("training must be a JSON object")?;
+        for key in obj.keys() {
+            if !["train_volunteers", "test_volunteers", "windows", "seed"]
+                .contains(&key.as_str())
+            {
+                return Err(format!("unknown training key '{key}'"));
+            }
+        }
+        Ok(Training {
+            train_volunteers: opt_usize(v, "train_volunteers")?.unwrap_or(base.train_volunteers),
+            test_volunteers: opt_usize(v, "test_volunteers")?.unwrap_or(base.test_volunteers),
+            windows_per_volunteer_per_class: opt_usize(v, "windows")?
+                .unwrap_or(base.windows_per_volunteer_per_class),
+            seed: opt_u64(v, "seed")?.unwrap_or(base.seed),
+        })
+    }
+}
+
+/// What `--fast` does to this scenario (CI-sized sweeps). One place for
+/// the scaling the CLI helpers and every bench used to duplicate.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FastMode {
+    /// Replacement campaign horizon, seconds.
+    pub horizon: Option<f64>,
+    /// Keep only the first N seeds.
+    pub max_seeds: Option<usize>,
+    /// Swap training for [`Training::tiny`].
+    pub tiny_corpus: bool,
+    /// Replacement evaluation size for `Perforation` workloads.
+    pub img_size: Option<usize>,
+}
+
+impl FastMode {
+    /// `--fast` changes nothing (fig. 4 reports full fidelity always).
+    pub fn none() -> FastMode {
+        FastMode::default()
+    }
+
+    fn to_json(&self) -> Value {
+        let mut pairs: Vec<(&str, Value)> = Vec::new();
+        if let Some(h) = self.horizon {
+            pairs.push(("horizon", h.into()));
+        }
+        if let Some(n) = self.max_seeds {
+            pairs.push(("max_seeds", n.into()));
+        }
+        if self.tiny_corpus {
+            pairs.push(("tiny_corpus", true.into()));
+        }
+        if let Some(s) = self.img_size {
+            pairs.push(("img_size", s.into()));
+        }
+        Value::obj(pairs)
+    }
+
+    fn from_json(v: &Value) -> Result<FastMode, String> {
+        let obj = v.as_obj().ok_or("fast must be a JSON object")?;
+        for key in obj.keys() {
+            if !["horizon", "max_seeds", "tiny_corpus", "img_size"].contains(&key.as_str()) {
+                return Err(format!("unknown fast key '{key}'"));
+            }
+        }
+        Ok(FastMode {
+            horizon: opt_f64(v, "horizon")?,
+            max_seeds: opt_usize(v, "max_seeds")?,
+            tiny_corpus: opt_bool(v, "tiny_corpus")?.unwrap_or(false),
+            img_size: opt_usize(v, "img_size")?,
+        })
+    }
+}
+
+/// The derived-metric view rendered from the grid — each paper figure is
+/// one of these plus a scenario; custom sweeps default to [`Cells`].
+///
+/// [`Cells`]: Projection::Cells
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Projection {
+    /// One row per grid cell with the standard campaign metrics.
+    Cells,
+    /// Figs. 5: per-policy accuracy/throughput summary.
+    PolicyAccuracy,
+    /// Fig. 7: per-policy coherence + throughput vs continuous.
+    PolicyCoherence,
+    /// Fig. 8: per-policy coherence vs Chinchilla, throughput vs GREEDY.
+    PolicyVsChinchilla,
+    /// Fig. 6: latency distribution buckets (emulation framing).
+    LatencyEmulation,
+    /// Fig. 9: latency distribution buckets (real-world framing).
+    LatencyRealWorld,
+    /// Fig. 4: expected vs measured accuracy curve.
+    AccuracyCurve,
+    /// Fig. 12: corner output vs perforation rate.
+    Perforation,
+    /// Fig. 13: per-picture equivalence + per-trace supplementary table.
+    ImgEquivalence,
+    /// Fig. 14: imaging throughput normalised to continuous.
+    ImgThroughput,
+    /// Fig. 15: imaging latency per trace.
+    ImgLatency,
+}
+
+impl Projection {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Projection::Cells => "cells",
+            Projection::PolicyAccuracy => "policy-accuracy",
+            Projection::PolicyCoherence => "policy-coherence",
+            Projection::PolicyVsChinchilla => "policy-vs-chinchilla",
+            Projection::LatencyEmulation => "latency-emulation",
+            Projection::LatencyRealWorld => "latency-real-world",
+            Projection::AccuracyCurve => "accuracy-curve",
+            Projection::Perforation => "perforation",
+            Projection::ImgEquivalence => "img-equivalence",
+            Projection::ImgThroughput => "img-throughput",
+            Projection::ImgLatency => "img-latency",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Projection> {
+        [
+            Projection::Cells,
+            Projection::PolicyAccuracy,
+            Projection::PolicyCoherence,
+            Projection::PolicyVsChinchilla,
+            Projection::LatencyEmulation,
+            Projection::LatencyRealWorld,
+            Projection::AccuracyCurve,
+            Projection::Perforation,
+            Projection::ImgEquivalence,
+            Projection::ImgThroughput,
+            Projection::ImgLatency,
+        ]
+        .into_iter()
+        .find(|p| p.name() == s)
+    }
+}
+
+/// Latency histograms count power cycles into this many unit bins (the
+/// paper's figures saturate far below it).
+pub const LATENCY_CYCLES: usize = 40;
+
+// ---------------------------------------------------------------------
+// The scenario itself.
+// ---------------------------------------------------------------------
+
+/// One declarative sweep. Build with [`Scenario::new`] + `with_*`
+/// chainers, load from JSON with [`Scenario::parse`], or take a paper
+/// figure from [`builtin`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct Scenario {
+    /// File stem for outputs and the `aic <name>` registry key.
+    pub name: String,
+    /// Table title.
+    pub title: String,
+    pub workload: WorkloadSpec,
+    pub policies: Vec<Policy>,
+    pub harvesters: Vec<HarvesterSpec>,
+    pub devices: Vec<DeviceSpec>,
+    /// Per-cell seeds: volunteers (HAR) or trace realisations (imaging).
+    pub seeds: Vec<u64>,
+    /// Campaign horizon, seconds.
+    pub horizon: f64,
+    /// Seconds between sampling slots.
+    pub sample_period: f64,
+    pub training: Training,
+    pub fast: FastMode,
+    pub projection: Projection,
+}
+
+impl Scenario {
+    /// A scenario with workload-appropriate defaults: HAR defaults to
+    /// the kinetic wrist supply on the paper's 4 h horizon, imaging to
+    /// the five ambient traces on 2 h.
+    pub fn new(name: &str, workload: WorkloadSpec) -> Scenario {
+        let (horizon, sample_period, harvesters) = match &workload {
+            WorkloadSpec::Har => (4.0 * 3600.0, 60.0, vec![HarvesterSpec::Kinetic]),
+            WorkloadSpec::Img => (
+                2.0 * 3600.0,
+                30.0,
+                TraceKind::ALL.iter().map(|&k| HarvesterSpec::Ambient(k)).collect(),
+            ),
+            _ => (0.0, 0.0, Vec::new()),
+        };
+        Scenario {
+            name: name.to_string(),
+            title: name.to_string(),
+            workload,
+            policies: vec![Policy::Greedy],
+            harvesters,
+            devices: vec![DeviceSpec::default()],
+            seeds: vec![1],
+            horizon,
+            sample_period,
+            training: Training::full(42),
+            fast: FastMode::none(),
+            projection: Projection::Cells,
+        }
+    }
+
+    pub fn with_title(mut self, title: &str) -> Scenario {
+        self.title = title.to_string();
+        self
+    }
+
+    pub fn with_workload(mut self, workload: WorkloadSpec) -> Scenario {
+        self.workload = workload;
+        self
+    }
+
+    pub fn with_policies(mut self, policies: Vec<Policy>) -> Scenario {
+        self.policies = policies;
+        self
+    }
+
+    pub fn with_harvesters(mut self, harvesters: Vec<HarvesterSpec>) -> Scenario {
+        self.harvesters = harvesters;
+        self
+    }
+
+    pub fn with_devices(mut self, devices: Vec<DeviceSpec>) -> Scenario {
+        self.devices = devices;
+        self
+    }
+
+    pub fn with_seeds(mut self, seeds: Vec<u64>) -> Scenario {
+        self.seeds = seeds;
+        self
+    }
+
+    pub fn with_horizon(mut self, horizon: f64) -> Scenario {
+        self.horizon = horizon;
+        self
+    }
+
+    pub fn with_sample_period(mut self, period: f64) -> Scenario {
+        self.sample_period = period;
+        self
+    }
+
+    pub fn with_training(mut self, training: Training) -> Scenario {
+        self.training = training;
+        self
+    }
+
+    pub fn with_fast(mut self, fast: FastMode) -> Scenario {
+        self.fast = fast;
+        self
+    }
+
+    pub fn with_projection(mut self, projection: Projection) -> Scenario {
+        self.projection = projection;
+        self
+    }
+
+    /// Force the integrator on every device cell (the CLI `--engine`
+    /// flag — no `set_var`, no process-global state).
+    pub fn with_engine(mut self, kind: EngineKind) -> Scenario {
+        for d in &mut self.devices {
+            d.engine = Some(kind);
+        }
+        self
+    }
+
+    /// Apply the scenario's own `--fast` scaling.
+    pub fn resolve(&self, fast: bool) -> Scenario {
+        if !fast {
+            return self.clone();
+        }
+        let mut s = self.clone();
+        if let Some(h) = s.fast.horizon {
+            s.horizon = h;
+        }
+        if let Some(n) = s.fast.max_seeds {
+            s.seeds.truncate(n.max(1));
+        }
+        if s.fast.tiny_corpus {
+            s.training = Training::tiny();
+        }
+        let img_size = s.fast.img_size;
+        if let WorkloadSpec::Perforation { size, .. } = &mut s.workload {
+            if let Some(n) = img_size {
+                *size = n;
+            }
+        }
+        s
+    }
+
+    /// Expand into the deterministic job plan: the exact cells, in the
+    /// exact order, the fleet will run (harvesters ▸ devices ▸ policies
+    /// ▸ seeds). A pure function of the spec.
+    pub fn plan(&self) -> JobPlan {
+        match &self.workload {
+            WorkloadSpec::Har | WorkloadSpec::Img => {
+                let mut cells = Vec::new();
+                for &harvester in &self.harvesters {
+                    for &device in &self.devices {
+                        for &policy in &self.policies {
+                            for &seed in &self.seeds {
+                                cells.push(CampaignCell { harvester, device, policy, seed });
+                            }
+                        }
+                    }
+                }
+                JobPlan::Campaigns(cells)
+            }
+            WorkloadSpec::AccuracyCurve { ps } => JobPlan::Accuracy(ps.clone()),
+            WorkloadSpec::Perforation { skips, .. } => JobPlan::Perforation(
+                Picture::ALL
+                    .iter()
+                    .flat_map(|&pic| skips.iter().map(move |&s| (pic, s)))
+                    .collect(),
+            ),
+        }
+    }
+
+    /// Train the HAR context this scenario's (unresolved) training spec
+    /// describes — callers that run several HAR scenarios share one.
+    pub fn har_context(&self) -> HarContext {
+        self.training.context()
+    }
+
+    /// Run the sweep: resolve `--fast`, expand the plan, dispatch every
+    /// cell on the bounded fleet pool, and wrap the job-ordered grid.
+    pub fn run(&self, fast: bool) -> SweepRun {
+        self.run_with(fast, None, None)
+    }
+
+    /// [`run`](Scenario::run) with a pre-trained HAR context (must come
+    /// from a [`Training`] equal to this scenario's resolved one — this
+    /// is how `aic all` trains once for figs. 4–9) and/or an explicit
+    /// fleet worker cap (determinism tests).
+    pub fn run_with(
+        &self,
+        fast: bool,
+        ctx: Option<&HarContext>,
+        workers: Option<usize>,
+    ) -> SweepRun {
+        let s = self.resolve(fast);
+        let plan = s.plan();
+        let grid = match (&s.workload, &plan) {
+            (WorkloadSpec::Har, JobPlan::Campaigns(cells)) => {
+                let owned = if ctx.is_none() { Some(s.training.context()) } else { None };
+                let ctx = match ctx {
+                    Some(c) => c,
+                    None => owned.as_ref().unwrap(),
+                };
+                GridData::Har(run_fleet(cells, workers, |cell| {
+                    let spec = HarRunSpec {
+                        horizon: s.horizon,
+                        sample_period: s.sample_period,
+                        script_seed: cell.seed,
+                    };
+                    let workload = HarWorkload { ctx, spec, harvester: cell.harvester };
+                    run_campaign_on(&workload, cell.seed, cell.policy, &cell.device)
+                }))
+            }
+            (WorkloadSpec::Img, JobPlan::Campaigns(cells)) => {
+                GridData::Img(run_fleet(cells, workers, |cell| {
+                    let spec = ImgRunSpec {
+                        horizon: s.horizon,
+                        sample_period: s.sample_period,
+                        trace_seed: cell.seed,
+                    };
+                    let workload = ImgWorkload { spec, harvester: cell.harvester };
+                    run_campaign_on(&workload, cell.seed, cell.policy, &cell.device)
+                }))
+            }
+            (WorkloadSpec::AccuracyCurve { ps }, _) => {
+                let owned = if ctx.is_none() { Some(s.training.context()) } else { None };
+                let ctx = match ctx {
+                    Some(c) => c,
+                    None => owned.as_ref().unwrap(),
+                };
+                GridData::Accuracy(accuracy_rows(ctx, ps))
+            }
+            (WorkloadSpec::Perforation { size, skips }, _) => {
+                GridData::Perforation(perforation_rows(*size, skips))
+            }
+            _ => unreachable!("plan kind always matches the workload kind"),
+        };
+        SweepRun { scenario: s, grid }
+    }
+
+    // -----------------------------------------------------------------
+    // JSON.
+    // -----------------------------------------------------------------
+
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("name", self.name.as_str().into()),
+            ("title", self.title.as_str().into()),
+            ("workload", self.workload.to_json()),
+            (
+                "policies",
+                Value::Arr(self.policies.iter().map(|p| p.name().into()).collect()),
+            ),
+            (
+                "harvesters",
+                Value::Arr(self.harvesters.iter().map(|h| h.name().into()).collect()),
+            ),
+            ("devices", Value::Arr(self.devices.iter().map(|d| d.to_json()).collect())),
+            (
+                "seeds",
+                Value::Arr(self.seeds.iter().map(|&s| Value::Num(s as f64)).collect()),
+            ),
+            ("horizon", self.horizon.into()),
+            ("sample_period", self.sample_period.into()),
+            ("training", self.training.to_json()),
+            ("fast", self.fast.to_json()),
+            ("projection", self.projection.name().into()),
+        ])
+    }
+
+    pub fn to_json_string(&self) -> String {
+        json::to_string_pretty(&self.to_json())
+    }
+
+    /// Parse a scenario document (the `aic sweep --scenario` format).
+    pub fn parse(text: &str) -> Result<Scenario, String> {
+        let v = json::parse(text).map_err(|e| e.to_string())?;
+        Scenario::from_json(&v)
+    }
+
+    pub fn from_json(v: &Value) -> Result<Scenario, String> {
+        const KEYS: [&str; 12] = [
+            "name",
+            "title",
+            "workload",
+            "policies",
+            "harvesters",
+            "devices",
+            "seeds",
+            "horizon",
+            "sample_period",
+            "training",
+            "fast",
+            "projection",
+        ];
+        let obj = v.as_obj().ok_or("scenario must be a JSON object")?;
+        for key in obj.keys() {
+            if !KEYS.contains(&key.as_str()) {
+                return Err(format!("unknown scenario key '{key}'"));
+            }
+        }
+        let name = v.get("name").as_str().ok_or("scenario needs a string 'name'")?;
+        let workload = WorkloadSpec::from_json(v.get("workload"))?;
+        let mut s = Scenario::new(name, workload);
+        if let Some(t) = opt_str(v, "title")? {
+            s.title = t.to_string();
+        }
+        if let Some(items) = opt_arr(v, "policies")? {
+            s.policies = items
+                .iter()
+                .map(|p| {
+                    p.as_str()
+                        .ok_or_else(|| "'policies' entries must be strings".to_string())?
+                        .parse::<Policy>()
+                })
+                .collect::<Result<Vec<Policy>, String>>()?;
+        }
+        if let Some(items) = opt_arr(v, "harvesters")? {
+            s.harvesters = items
+                .iter()
+                .map(|h| {
+                    let name =
+                        h.as_str().ok_or_else(|| "'harvesters' entries must be strings".to_string())?;
+                    HarvesterSpec::from_name(name).ok_or_else(|| format!(
+                        "unknown harvester '{name}' (expected kinetic|rf|som|sim|sor|sir)"
+                    ))
+                })
+                .collect::<Result<Vec<HarvesterSpec>, String>>()?;
+        }
+        if let Some(items) = opt_arr(v, "devices")? {
+            s.devices = items
+                .iter()
+                .map(DeviceSpec::from_json)
+                .collect::<Result<Vec<DeviceSpec>, String>>()?;
+        }
+        if let Some(items) = opt_arr(v, "seeds")? {
+            s.seeds = items
+                .iter()
+                .map(|x| x.as_u64().ok_or_else(|| "'seeds' entries must be unsigned integers".to_string()))
+                .collect::<Result<Vec<u64>, String>>()?;
+        }
+        if let Some(h) = opt_f64(v, "horizon")? {
+            s.horizon = h;
+        }
+        if let Some(p) = opt_f64(v, "sample_period")? {
+            s.sample_period = p;
+        }
+        if !matches!(v.get("training"), Value::Null) {
+            s.training = Training::from_json(v.get("training"), s.training.clone())?;
+        }
+        if !matches!(v.get("fast"), Value::Null) {
+            s.fast = FastMode::from_json(v.get("fast"))?;
+        }
+        if let Some(p) = opt_str(v, "projection")? {
+            s.projection =
+                Projection::from_name(p).ok_or_else(|| format!("unknown projection '{p}'"))?;
+        }
+        s.validate()?;
+        Ok(s)
+    }
+
+    /// Structural validation (campaign grids must be non-empty and the
+    /// projection must fit the workload).
+    pub fn validate(&self) -> Result<(), String> {
+        use Projection::*;
+        if self.workload.is_campaign() {
+            if self.policies.is_empty() {
+                return Err("scenario has no policies".to_string());
+            }
+            if self.harvesters.is_empty() {
+                return Err("scenario has no harvesters".to_string());
+            }
+            if self.devices.is_empty() {
+                return Err("scenario has no devices".to_string());
+            }
+            if self.seeds.is_empty() {
+                return Err("scenario has no seeds".to_string());
+            }
+            if self.horizon <= 0.0 {
+                return Err("campaign horizon must be positive".to_string());
+            }
+            if self.sample_period <= 0.0 {
+                return Err("sample_period must be positive".to_string());
+            }
+            // Device physics: catch impossible knob combinations here,
+            // not as a Capacitor::new assert inside a fleet worker.
+            let base = Capacitor::paper_default();
+            for (i, d) in self.devices.iter().enumerate() {
+                let c = d.capacitance.unwrap_or(base.capacitance);
+                let v_on = d.v_on.unwrap_or(base.v_on);
+                let v_off = d.v_off.unwrap_or(base.v_off);
+                if c <= 0.0 {
+                    return Err(format!("device {i}: capacitance must be positive"));
+                }
+                if v_off <= 0.0 || v_on <= v_off || v_on > base.v_max {
+                    return Err(format!(
+                        "device {i}: thresholds must satisfy 0 < v_off < v_on <= {} \
+                         (got v_on={v_on}, v_off={v_off})",
+                        base.v_max
+                    ));
+                }
+            }
+        }
+        let ok = match &self.workload {
+            WorkloadSpec::Har => matches!(
+                self.projection,
+                Cells
+                    | PolicyAccuracy
+                    | PolicyCoherence
+                    | PolicyVsChinchilla
+                    | LatencyEmulation
+                    | LatencyRealWorld
+            ),
+            WorkloadSpec::Img => {
+                matches!(self.projection, Cells | ImgEquivalence | ImgThroughput | ImgLatency)
+            }
+            WorkloadSpec::AccuracyCurve { .. } => {
+                matches!(self.projection, Cells | AccuracyCurve)
+            }
+            WorkloadSpec::Perforation { .. } => matches!(self.projection, Cells | Perforation),
+        };
+        if !ok {
+            return Err(format!(
+                "projection '{}' does not fit this workload",
+                self.projection.name()
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// One campaign cell of the grid.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CampaignCell {
+    pub harvester: HarvesterSpec,
+    pub device: DeviceSpec,
+    pub policy: Policy,
+    pub seed: u64,
+}
+
+/// The deterministic expansion of a scenario: what the fleet runs.
+#[derive(Clone, Debug, PartialEq)]
+pub enum JobPlan {
+    Campaigns(Vec<CampaignCell>),
+    Accuracy(Vec<usize>),
+    Perforation(Vec<(Picture, f64)>),
+}
+
+impl JobPlan {
+    pub fn len(&self) -> usize {
+        match self {
+            JobPlan::Campaigns(c) => c.len(),
+            JobPlan::Accuracy(p) => p.len(),
+            JobPlan::Perforation(p) => p.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+fn opt_str<'a>(v: &'a Value, key: &str) -> Result<Option<&'a str>, String> {
+    match v.get(key) {
+        Value::Null => Ok(None),
+        other => other.as_str().map(Some).ok_or_else(|| format!("'{key}' must be a string")),
+    }
+}
+
+// Typed optional accessors: a present-but-mistyped value is a hard error,
+// never a silent fall-back to the default (same contract as unknown keys).
+fn opt_f64(v: &Value, key: &str) -> Result<Option<f64>, String> {
+    match v.get(key) {
+        Value::Null => Ok(None),
+        other => other.as_f64().map(Some).ok_or_else(|| format!("'{key}' must be a number")),
+    }
+}
+
+fn opt_usize(v: &Value, key: &str) -> Result<Option<usize>, String> {
+    match v.get(key) {
+        Value::Null => Ok(None),
+        other => other
+            .as_u64()
+            .map(|n| Some(n as usize))
+            .ok_or_else(|| format!("'{key}' must be an unsigned integer")),
+    }
+}
+
+fn opt_u64(v: &Value, key: &str) -> Result<Option<u64>, String> {
+    match v.get(key) {
+        Value::Null => Ok(None),
+        other => {
+            other.as_u64().map(Some).ok_or_else(|| format!("'{key}' must be an unsigned integer"))
+        }
+    }
+}
+
+fn opt_bool(v: &Value, key: &str) -> Result<Option<bool>, String> {
+    match v.get(key) {
+        Value::Null => Ok(None),
+        other => other.as_bool().map(Some).ok_or_else(|| format!("'{key}' must be a boolean")),
+    }
+}
+
+fn opt_arr<'a>(v: &'a Value, key: &str) -> Result<Option<&'a [Value]>, String> {
+    match v.get(key) {
+        Value::Null => Ok(None),
+        other => other.as_arr().map(Some).ok_or_else(|| format!("'{key}' must be an array")),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Grid results and projections.
+// ---------------------------------------------------------------------
+
+/// Fig. 4 row — expected vs measured accuracy for one prefix length.
+#[derive(Clone, Debug)]
+pub struct Fig4Row {
+    pub p: usize,
+    pub expected: f64,
+    pub measured: f64,
+}
+
+/// Fig. 12 row — corner output at one (picture, perforation) cell.
+#[derive(Clone, Debug)]
+pub struct Fig12Row {
+    pub picture: Picture,
+    pub skip_fraction: f64,
+    pub corners: usize,
+    pub reference_corners: usize,
+    pub equivalent: bool,
+}
+
+/// Figs. 5/7/8 row — one policy summarised over every (harvester,
+/// device, seed) unit of the grid. Columns against a reference policy
+/// (continuous / Chinchilla / GREEDY) are 0 when the grid omits it.
+#[derive(Clone, Debug)]
+pub struct PolicyRow {
+    pub policy: Policy,
+    pub accuracy: f64,
+    pub coherence_vs_continuous: f64,
+    pub coherence_vs_chinchilla: f64,
+    pub throughput_vs_continuous: f64,
+    pub throughput_vs_greedy: f64,
+    pub throughput_vs_chinchilla: f64,
+    pub same_cycle_fraction: f64,
+    pub mean_features: f64,
+    pub state_energy_fraction: f64,
+}
+
+/// Figs. 13–15 row — one harvester (energy trace) summarised: AIC vs
+/// Chinchilla, normalised to continuous.
+#[derive(Clone, Debug)]
+pub struct ImgTraceRow {
+    pub harvester: HarvesterSpec,
+    pub equivalence_aic: f64,
+    pub throughput_aic_vs_continuous: f64,
+    pub throughput_chinchilla_vs_continuous: f64,
+    pub aic_same_cycle: f64,
+    pub chinchilla_latency_mean: f64,
+}
+
+/// The campaigns (or analysis rows) a sweep produced, in plan order.
+pub enum GridData {
+    Har(Vec<Campaign<HarOutput>>),
+    Img(Vec<Campaign<CornerOutput>>),
+    Accuracy(Vec<Fig4Row>),
+    Perforation(Vec<Fig12Row>),
+}
+
+/// A completed sweep: the resolved scenario plus its grid, with the
+/// derived-metric projections as methods.
+pub struct SweepRun {
+    pub scenario: Scenario,
+    pub grid: GridData,
+}
+
+fn mean(xs: impl Iterator<Item = f64>) -> f64 {
+    let v: Vec<f64> = xs.collect();
+    crate::util::stats::mean(&v)
+}
+
+impl SweepRun {
+    pub fn har_campaigns(&self) -> &[Campaign<HarOutput>] {
+        match &self.grid {
+            GridData::Har(c) => c,
+            _ => panic!("scenario '{}' did not produce a HAR grid", self.scenario.name),
+        }
+    }
+
+    pub fn img_campaigns(&self) -> &[Campaign<CornerOutput>] {
+        match &self.grid {
+            GridData::Img(c) => c,
+            _ => panic!("scenario '{}' did not produce an imaging grid", self.scenario.name),
+        }
+    }
+
+    pub fn accuracy_rows(&self) -> &[Fig4Row] {
+        match &self.grid {
+            GridData::Accuracy(r) => r,
+            _ => panic!("scenario '{}' did not produce an accuracy curve", self.scenario.name),
+        }
+    }
+
+    pub fn perforation_rows(&self) -> &[Fig12Row] {
+        match &self.grid {
+            GridData::Perforation(r) => r,
+            _ => panic!("scenario '{}' did not produce a perforation sweep", self.scenario.name),
+        }
+    }
+
+    /// Grid index of the cell (harvester, device, policy, seed) — the
+    /// plan order.
+    pub fn cell_index(&self, h: usize, d: usize, p: usize, s: usize) -> usize {
+        let sc = &self.scenario;
+        ((h * sc.devices.len() + d) * sc.policies.len() + p) * sc.seeds.len() + s
+    }
+
+    /// Position of `policy` in the scenario's policy axis.
+    pub fn policy_index(&self, policy: Policy) -> Option<usize> {
+        self.scenario.policies.iter().position(|&q| q == policy)
+    }
+
+    /// Number of (harvester, device, seed) units per policy.
+    fn unit_count(&self) -> usize {
+        let sc = &self.scenario;
+        sc.harvesters.len() * sc.devices.len() * sc.seeds.len()
+    }
+
+    /// Grid index of policy `p` on unit `u` (units iterate harvesters ▸
+    /// devices ▸ seeds, matching plan order).
+    fn campaign_of(&self, p: usize, u: usize) -> usize {
+        let sc = &self.scenario;
+        let (d_n, s_n) = (sc.devices.len(), sc.seeds.len());
+        let h = u / (d_n * s_n);
+        let d = (u / s_n) % d_n;
+        let s = u % s_n;
+        self.cell_index(h, d, p, s)
+    }
+
+    /// Figs. 5/7/8 — per-policy summary over every unit; references
+    /// (continuous / Chinchilla / GREEDY) align pairwise on the unit.
+    pub fn policy_rows(&self) -> Vec<PolicyRow> {
+        let sc = &self.scenario;
+        let campaigns = self.har_campaigns();
+        let units = self.unit_count();
+        let period = sc.sample_period;
+        let pos = |q: Policy| sc.policies.iter().position(|&x| x == q);
+        let cont = pos(Policy::Continuous);
+        let chin = pos(Policy::Chinchilla);
+        let greedy = pos(Policy::Greedy);
+        let at = |p: usize, u: usize| &campaigns[self.campaign_of(p, u)];
+        // Monomorphic view of the generic ratio for the &dyn projections.
+        fn thr(a: &Campaign<HarOutput>, b: &Campaign<HarOutput>) -> f64 {
+            metrics::throughput_ratio(a, b)
+        }
+        sc.policies
+            .iter()
+            .enumerate()
+            .map(|(i, &policy)| {
+                let per_unit = |f: &dyn Fn(usize) -> f64| mean((0..units).map(f));
+                let vs = |r: Option<usize>,
+                          f: &dyn Fn(&Campaign<HarOutput>, &Campaign<HarOutput>) -> f64|
+                 -> f64 {
+                    match r {
+                        Some(r) => per_unit(&|u| f(at(i, u), at(r, u))),
+                        None => 0.0,
+                    }
+                };
+                PolicyRow {
+                    policy,
+                    accuracy: per_unit(&|u| metrics::har_accuracy(at(i, u))),
+                    coherence_vs_continuous: vs(cont, &|a, b| {
+                        metrics::har_coherence(a, b, period)
+                    }),
+                    coherence_vs_chinchilla: vs(chin, &|a, b| {
+                        metrics::har_coherence(a, b, period)
+                    }),
+                    throughput_vs_continuous: vs(cont, &thr),
+                    throughput_vs_greedy: vs(greedy, &thr),
+                    throughput_vs_chinchilla: vs(chin, &thr),
+                    same_cycle_fraction: per_unit(&|u| {
+                        metrics::same_cycle_fraction(at(i, u))
+                    }),
+                    mean_features: per_unit(&|u| {
+                        mean(at(i, u).emitted().map(|r| r.steps_executed as f64))
+                    }),
+                    state_energy_fraction: per_unit(&|u| {
+                        let c = at(i, u);
+                        let total = c.app_energy + c.state_energy;
+                        if total == 0.0 {
+                            0.0
+                        } else {
+                            c.state_energy / total
+                        }
+                    }),
+                }
+            })
+            .collect()
+    }
+
+    /// Figs. 6/9 — per-policy latency histogram pooled over every unit.
+    pub fn latency_histograms(&self, max_cycles: usize) -> Vec<(Policy, Histogram)> {
+        let campaigns = self.har_campaigns();
+        let units = self.unit_count();
+        self.scenario
+            .policies
+            .iter()
+            .enumerate()
+            .map(|(i, &policy)| {
+                let mut h = Histogram::new(0.0, max_cycles as f64, max_cycles);
+                for u in 0..units {
+                    for r in campaigns[self.campaign_of(i, u)].emitted() {
+                        h.add(r.latency_cycles as f64);
+                    }
+                }
+                (policy, h)
+            })
+            .collect()
+    }
+
+    /// Figs. 13–15 — one row per harvester, averaged over (device, seed)
+    /// units within it.
+    pub fn img_trace_rows(&self) -> Vec<ImgTraceRow> {
+        let sc = &self.scenario;
+        let campaigns = self.img_campaigns();
+        let size = EVAL_SIZE;
+        let cont = self.policy_index(Policy::Continuous);
+        let chin = self.policy_index(Policy::Chinchilla);
+        let greedy = self.policy_index(Policy::Greedy);
+        let (d_n, p_n, s_n) = (sc.devices.len(), sc.policies.len(), sc.seeds.len());
+        sc.harvesters
+            .iter()
+            .enumerate()
+            .map(|(hi, &harvester)| {
+                let local_units = d_n * s_n;
+                let at = |p: usize, lu: usize| {
+                    let d = lu / s_n;
+                    let s = lu % s_n;
+                    &campaigns[((hi * d_n + d) * p_n + p) * s_n + s]
+                };
+                let per = |f: &dyn Fn(usize) -> f64| mean((0..local_units).map(f));
+                let ratio_of = |a: Option<usize>, b: Option<usize>| match (a, b) {
+                    (Some(a), Some(b)) => {
+                        per(&|u| metrics::throughput_ratio(at(a, u), at(b, u)))
+                    }
+                    _ => 0.0,
+                };
+                ImgTraceRow {
+                    harvester,
+                    equivalence_aic: greedy
+                        .map(|g| per(&|u| metrics::corner_equivalence_fraction(at(g, u), size)))
+                        .unwrap_or(0.0),
+                    throughput_aic_vs_continuous: ratio_of(greedy, cont),
+                    throughput_chinchilla_vs_continuous: ratio_of(chin, cont),
+                    aic_same_cycle: greedy
+                        .map(|g| per(&|u| metrics::same_cycle_fraction(at(g, u))))
+                        .unwrap_or(0.0),
+                    chinchilla_latency_mean: chin
+                        .map(|c| {
+                            per(&|u| mean(at(c, u).emitted().map(|r| r.latency_cycles as f64)))
+                        })
+                        .unwrap_or(0.0),
+                }
+            })
+            .collect()
+    }
+
+    /// Fig. 13 proper — per-picture equivalence pooled over every GREEDY
+    /// campaign in the grid (the paper pools across all five traces).
+    pub fn equivalence_by_picture(&self) -> Vec<(Picture, f64)> {
+        let campaigns = self.img_campaigns();
+        let Some(g) = self.policy_index(Policy::Greedy) else {
+            return Picture::ALL.iter().map(|&p| (p, 0.0)).collect();
+        };
+        let refs: Vec<&Campaign<CornerOutput>> =
+            (0..self.unit_count()).map(|u| &campaigns[self.campaign_of(g, u)]).collect();
+        metrics::corner_equivalence_by_picture(&refs, EVAL_SIZE)
+    }
+
+    /// Render the scenario's projection: the tables a sink consumes.
+    pub fn tables(&self) -> Vec<TableData> {
+        let sc = &self.scenario;
+        let name = sc.name.as_str();
+        let title = sc.title.as_str();
+        match sc.projection {
+            Projection::AccuracyCurve => vec![self.accuracy_table(name, title)],
+            Projection::Perforation => vec![self.perforation_table(name, title)],
+            Projection::PolicyAccuracy => {
+                let mut t = TableData::new(
+                    name,
+                    title,
+                    &["policy", "accuracy", "thrpt vs continuous", "mean features", "state energy"],
+                );
+                for r in self.policy_rows() {
+                    t.push(vec![
+                        r.policy.name(),
+                        pct(r.accuracy),
+                        pct(r.throughput_vs_continuous),
+                        f2(r.mean_features),
+                        pct(r.state_energy_fraction),
+                    ]);
+                }
+                vec![t]
+            }
+            Projection::PolicyCoherence => {
+                let mut t = TableData::new(
+                    name,
+                    title,
+                    &["policy", "coherence vs continuous", "thrpt vs continuous"],
+                );
+                for r in self
+                    .policy_rows()
+                    .iter()
+                    .filter(|r| !matches!(r.policy, Policy::Continuous))
+                {
+                    t.push(vec![
+                        r.policy.name(),
+                        pct(r.coherence_vs_continuous),
+                        pct(r.throughput_vs_continuous),
+                    ]);
+                }
+                vec![t]
+            }
+            Projection::PolicyVsChinchilla => {
+                let mut t = TableData::new(
+                    name,
+                    title,
+                    &["policy", "coherence vs chinchilla", "thrpt vs greedy", "thrpt vs chinchilla"],
+                );
+                for r in self
+                    .policy_rows()
+                    .iter()
+                    .filter(|r| !matches!(r.policy, Policy::Continuous))
+                {
+                    t.push(vec![
+                        r.policy.name(),
+                        pct(r.coherence_vs_chinchilla),
+                        pct(r.throughput_vs_greedy),
+                        ratio(r.throughput_vs_chinchilla),
+                    ]);
+                }
+                vec![t]
+            }
+            Projection::LatencyEmulation => {
+                let mut t = TableData::new(
+                    name,
+                    title,
+                    &["policy", "cycle0", "cycle1", "cycle2-5", "cycle6-15", "cycle16+"],
+                );
+                for (policy, h) in self.latency_histograms(LATENCY_CYCLES) {
+                    let range = |a: usize, b: usize| -> f64 {
+                        (a..b.min(h.bins.len())).map(|i| h.frac(i)).sum()
+                    };
+                    t.push(vec![
+                        policy.name(),
+                        pct(h.frac(0)),
+                        pct(h.frac(1)),
+                        pct(range(2, 6)),
+                        pct(range(6, 16)),
+                        pct(range(16, LATENCY_CYCLES)
+                            + h.overflow as f64 / h.count.max(1) as f64),
+                    ]);
+                }
+                vec![t]
+            }
+            Projection::LatencyRealWorld => {
+                let mut t =
+                    TableData::new(name, title, &["policy", "same cycle", "1 cycle", "2+ cycles"]);
+                for (policy, h) in self.latency_histograms(LATENCY_CYCLES) {
+                    let rest: f64 = (2..h.bins.len()).map(|i| h.frac(i)).sum::<f64>()
+                        + h.overflow as f64 / h.count.max(1) as f64;
+                    t.push(vec![policy.name(), pct(h.frac(0)), pct(h.frac(1)), pct(rest)]);
+                }
+                vec![t]
+            }
+            Projection::ImgEquivalence => {
+                let mut t = TableData::new(
+                    name,
+                    title,
+                    &["picture", "equivalent corner info (pooled over traces)"],
+                );
+                for (picture, eq) in self.equivalence_by_picture() {
+                    t.push(vec![picture.name().to_string(), pct(eq)]);
+                }
+                let mut per_trace = TableData::new(
+                    &format!("{name}_per_trace"),
+                    &format!("{title} (suppl.: per energy trace)"),
+                    &["trace", "equivalent corner info"],
+                );
+                for r in self.img_trace_rows() {
+                    per_trace.push(vec![r.harvester.name().to_string(), pct(r.equivalence_aic)]);
+                }
+                vec![t, per_trace]
+            }
+            Projection::ImgThroughput => {
+                let mut t = TableData::new(
+                    name,
+                    title,
+                    &["trace", "AIC", "Chinchilla", "AIC/Chinchilla"],
+                );
+                for r in self.img_trace_rows() {
+                    let gain = if r.throughput_chinchilla_vs_continuous > 0.0 {
+                        r.throughput_aic_vs_continuous / r.throughput_chinchilla_vs_continuous
+                    } else {
+                        f64::INFINITY
+                    };
+                    t.push(vec![
+                        r.harvester.name().to_string(),
+                        pct(r.throughput_aic_vs_continuous),
+                        pct(r.throughput_chinchilla_vs_continuous),
+                        ratio(gain),
+                    ]);
+                }
+                vec![t]
+            }
+            Projection::ImgLatency => {
+                let mut t = TableData::new(
+                    name,
+                    title,
+                    &["trace", "AIC same-cycle", "Chinchilla mean latency"],
+                );
+                for r in self.img_trace_rows() {
+                    t.push(vec![
+                        r.harvester.name().to_string(),
+                        pct(r.aic_same_cycle),
+                        f2(r.chinchilla_latency_mean),
+                    ]);
+                }
+                vec![t]
+            }
+            Projection::Cells => match &self.grid {
+                GridData::Accuracy(_) => vec![self.accuracy_table(name, title)],
+                GridData::Perforation(_) => vec![self.perforation_table(name, title)],
+                GridData::Har(_) | GridData::Img(_) => vec![self.cells_table(name, title)],
+            },
+        }
+    }
+
+    fn accuracy_table(&self, name: &str, title: &str) -> TableData {
+        let mut t = TableData::new(name, title, &["features", "expected", "measured"]);
+        for r in self.accuracy_rows() {
+            t.push(vec![r.p.to_string(), pct(r.expected), pct(r.measured)]);
+        }
+        t
+    }
+
+    fn perforation_table(&self, name: &str, title: &str) -> TableData {
+        let mut t = TableData::new(
+            name,
+            title,
+            &["picture", "skipped", "corners", "reference", "equivalent"],
+        );
+        for r in self.perforation_rows() {
+            t.push(vec![
+                r.picture.name().to_string(),
+                pct(r.skip_fraction),
+                r.corners.to_string(),
+                r.reference_corners.to_string(),
+                r.equivalent.to_string(),
+            ]);
+        }
+        t
+    }
+
+    /// The generic sweep view: one row per grid cell, standard metrics.
+    /// "quality" is classification accuracy for HAR cells and the §6.3
+    /// corner-equivalence fraction for imaging cells.
+    fn cells_table(&self, name: &str, title: &str) -> TableData {
+        let mut t = TableData::new(
+            name,
+            title,
+            &[
+                "harvester", "device", "policy", "seed", "emitted", "cycles", "failures",
+                "quality", "same cycle", "app mJ", "state mJ",
+            ],
+        );
+        let JobPlan::Campaigns(cells) = self.scenario.plan() else {
+            unreachable!("cells_table is only called on campaign grids");
+        };
+        let mut push =
+            |cell: &CampaignCell, emitted: usize, cycles: u64, failures: u64, quality: f64,
+             same_cycle: f64, app: f64, state: f64| {
+                t.push(vec![
+                    cell.harvester.name().to_string(),
+                    cell.device.label(),
+                    cell.policy.name(),
+                    cell.seed.to_string(),
+                    emitted.to_string(),
+                    cycles.to_string(),
+                    failures.to_string(),
+                    pct(quality),
+                    pct(same_cycle),
+                    f2(app * 1e3),
+                    f2(state * 1e3),
+                ]);
+            };
+        match &self.grid {
+            GridData::Har(campaigns) => {
+                for (cell, c) in cells.iter().zip(campaigns) {
+                    push(
+                        cell,
+                        c.emitted().count(),
+                        c.power_cycles,
+                        c.power_failures,
+                        metrics::har_accuracy(c),
+                        metrics::same_cycle_fraction(c),
+                        c.app_energy,
+                        c.state_energy,
+                    );
+                }
+            }
+            GridData::Img(campaigns) => {
+                for (cell, c) in cells.iter().zip(campaigns) {
+                    push(
+                        cell,
+                        c.emitted().count(),
+                        c.power_cycles,
+                        c.power_failures,
+                        metrics::corner_equivalence_fraction(c, EVAL_SIZE),
+                        metrics::same_cycle_fraction(c),
+                        c.app_energy,
+                        c.state_energy,
+                    );
+                }
+            }
+            _ => unreachable!("cells_table is only called on campaign grids"),
+        }
+        t
+    }
+}
+
+// ---------------------------------------------------------------------
+// Offline analyses (figs. 4 and 12).
+// ---------------------------------------------------------------------
+
+/// Fig. 4 — expected (Eq. 7) vs measured accuracy per prefix length.
+/// The whole curve is evaluated in one pass: the coherence model shares
+/// its Monte-Carlo draw across prefix lengths, so per-p splitting would
+/// change the numbers.
+pub fn accuracy_rows(ctx: &HarContext, ps: &[usize]) -> Vec<Fig4Row> {
+    use crate::svm::analysis::{coherence_curve_model, expected_accuracy};
+    let coh = coherence_curve_model(&ctx.asvm, &ctx.class_model, ps, 3000, 0xF164);
+    let expected = expected_accuracy(&coh, ctx.full_accuracy, 6);
+    let (test_rows, test_labels) = Corpus::features(&ctx.corpus.test);
+    let measured = ctx.asvm.accuracy_curve(&test_rows, &test_labels, ps);
+    ps.iter()
+        .enumerate()
+        .map(|(i, &p)| Fig4Row { p, expected: expected[i], measured: measured[i] })
+        .collect()
+}
+
+/// Fig. 12 — corner output vs perforation rate per picture kind.
+pub fn perforation_rows(size: usize, skips: &[f64]) -> Vec<Fig12Row> {
+    use crate::imgproc::equivalence::equivalent;
+    use crate::imgproc::harris::{harris_full, harris_perforated, HarrisConfig};
+    use crate::imgproc::images::render;
+    let cfg = HarrisConfig::default();
+    let mut rows = Vec::new();
+    for &picture in &Picture::ALL {
+        let img = render(picture, size, size, 11);
+        let reference = harris_full(&img, &cfg);
+        for &skip in skips {
+            let run_rows = ((1.0 - skip) * size as f64).round() as usize;
+            let corners = harris_perforated(&img, &cfg, run_rows);
+            rows.push(Fig12Row {
+                picture,
+                skip_fraction: skip,
+                corners: corners.len(),
+                reference_corners: reference.len(),
+                equivalent: equivalent(&reference, &corners),
+            });
+        }
+    }
+    rows
+}
+
+// ---------------------------------------------------------------------
+// Named built-in scenarios (the figure registry).
+// ---------------------------------------------------------------------
+
+/// The five intermittent policies of §5 plus the continuous ceiling.
+pub fn har_policies() -> Vec<Policy> {
+    vec![
+        Policy::Continuous,
+        Policy::Chinchilla,
+        Policy::Alpaca,
+        Policy::Greedy,
+        Policy::Smart { bound: 0.60 },
+        Policy::Smart { bound: 0.80 },
+    ]
+}
+
+/// The policies the latency figures (6 and 9) compare.
+pub fn latency_policies() -> Vec<Policy> {
+    vec![Policy::Greedy, Policy::Smart { bound: 0.80 }, Policy::Chinchilla, Policy::Alpaca]
+}
+
+/// Every figure the `aic` CLI knows by name.
+pub const BUILTIN_NAMES: [&str; 10] =
+    ["fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig12", "fig13", "fig14", "fig15"];
+
+/// The named figure scenarios. `seed` is the CLI base seed: it seeds HAR
+/// training and is the single trace realisation of the imaging figures.
+pub fn builtin(name: &str, seed: u64) -> Option<Scenario> {
+    let har_fast =
+        FastMode { horizon: Some(1800.0), max_seeds: Some(2), tiny_corpus: true, img_size: None };
+    let har_fig = |n: &str, title: &str, policies: Vec<Policy>, proj: Projection| {
+        Scenario::new(n, WorkloadSpec::Har)
+            .with_title(title)
+            .with_policies(policies)
+            .with_seeds(vec![1, 2, 3, 4, 5, 6])
+            .with_training(Training::full(seed))
+            .with_fast(har_fast.clone())
+            .with_projection(proj)
+    };
+    let img_fig = |n: &str, title: &str, proj: Projection| {
+        Scenario::new(n, WorkloadSpec::Img)
+            .with_title(title)
+            .with_policies(vec![Policy::Continuous, Policy::Greedy, Policy::Chinchilla])
+            .with_seeds(vec![seed])
+            .with_fast(FastMode { horizon: Some(1200.0), ..FastMode::none() })
+            .with_projection(proj)
+    };
+    Some(match name {
+        "fig4" => Scenario::new(
+            "fig4",
+            WorkloadSpec::AccuracyCurve { ps: (0..=140).step_by(10).collect() },
+        )
+        .with_title("Fig. 4 — expected vs measured accuracy vs number of features")
+        .with_training(Training::full(seed))
+        .with_projection(Projection::AccuracyCurve),
+        "fig5" => har_fig(
+            "fig5",
+            "Fig. 5 — emulation: accuracy and throughput normalised to continuous",
+            har_policies(),
+            Projection::PolicyAccuracy,
+        ),
+        "fig6" => har_fig(
+            "fig6",
+            "Fig. 6 — emulation: latency distribution in power cycles",
+            latency_policies(),
+            Projection::LatencyEmulation,
+        ),
+        "fig7" => har_fig(
+            "fig7",
+            "Fig. 7 — real-world: coherence and throughput vs continuous",
+            har_policies(),
+            Projection::PolicyCoherence,
+        ),
+        "fig8" => har_fig(
+            "fig8",
+            "Fig. 8 — real-world: coherence vs Chinchilla, throughput vs GREEDY",
+            har_policies(),
+            Projection::PolicyVsChinchilla,
+        ),
+        "fig9" => har_fig(
+            "fig9",
+            "Fig. 9 — real-world: latency distribution in power cycles",
+            latency_policies(),
+            Projection::LatencyRealWorld,
+        ),
+        "fig12" => Scenario::new(
+            "fig12",
+            WorkloadSpec::Perforation {
+                size: EVAL_SIZE,
+                skips: vec![0.0, 0.2, 0.42, 0.55, 0.7, 0.85],
+            },
+        )
+        .with_title("Fig. 12 — corner detection output vs fraction of loop iterations skipped")
+        .with_fast(FastMode { img_size: Some(96), ..FastMode::none() })
+        .with_projection(Projection::Perforation),
+        "fig13" => img_fig(
+            "fig13",
+            "Fig. 13 — corner info equivalent to a continuous execution",
+            Projection::ImgEquivalence,
+        ),
+        "fig14" => img_fig(
+            "fig14",
+            "Fig. 14 — imaging throughput normalised to continuous",
+            Projection::ImgThroughput,
+        ),
+        "fig15" => img_fig(
+            "fig15",
+            "Fig. 15 — latency to produce the corner output (power cycles)",
+            Projection::ImgLatency,
+        ),
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::experiment::test_context;
+
+    #[test]
+    fn builder_defaults_follow_workload() {
+        let har = Scenario::new("h", WorkloadSpec::Har);
+        assert_eq!(har.harvesters, vec![HarvesterSpec::Kinetic]);
+        assert_eq!(har.horizon, 4.0 * 3600.0);
+        let img = Scenario::new("i", WorkloadSpec::Img);
+        assert_eq!(img.harvesters.len(), 5);
+        assert_eq!(img.sample_period, 30.0);
+    }
+
+    #[test]
+    fn plan_order_is_harvester_device_policy_seed() {
+        let sc = Scenario::new("t", WorkloadSpec::Har)
+            .with_policies(vec![Policy::Greedy, Policy::Continuous])
+            .with_harvesters(vec![
+                HarvesterSpec::Kinetic,
+                HarvesterSpec::Ambient(TraceKind::Som),
+            ])
+            .with_seeds(vec![1, 2]);
+        let JobPlan::Campaigns(cells) = sc.plan() else { panic!("campaign plan") };
+        assert_eq!(cells.len(), 8);
+        assert_eq!(cells[0].harvester, HarvesterSpec::Kinetic);
+        assert_eq!(cells[0].policy, Policy::Greedy);
+        assert_eq!(cells[0].seed, 1);
+        assert_eq!(cells[1].seed, 2);
+        assert_eq!(cells[2].policy, Policy::Continuous);
+        assert_eq!(cells[4].harvester, HarvesterSpec::Ambient(TraceKind::Som));
+    }
+
+    #[test]
+    fn fast_resolution_applies_the_spec_scaling() {
+        let sc = builtin("fig5", 42).unwrap();
+        let fast = sc.resolve(true);
+        assert_eq!(fast.horizon, 1800.0);
+        assert_eq!(fast.seeds, vec![1, 2]);
+        assert_eq!(fast.training, Training::tiny());
+        // fig4 opts out of fast scaling entirely.
+        let fig4 = builtin("fig4", 42).unwrap();
+        assert_eq!(fig4.resolve(true), fig4);
+        // fig12 swaps the evaluation size only.
+        let fig12 = builtin("fig12", 42).unwrap().resolve(true);
+        assert!(matches!(fig12.workload, WorkloadSpec::Perforation { size: 96, .. }));
+    }
+
+    #[test]
+    fn json_round_trip_is_lossless() {
+        let sc = Scenario::new("custom", WorkloadSpec::Har)
+            .with_policies(vec![Policy::Greedy, Policy::Smart { bound: 0.80 }])
+            .with_harvesters(vec![
+                HarvesterSpec::Ambient(TraceKind::Rf),
+                HarvesterSpec::Kinetic,
+            ])
+            .with_devices(vec![
+                DeviceSpec::default(),
+                DeviceSpec { capacitance: Some(2940e-6), ..DeviceSpec::default() },
+            ])
+            .with_seeds(vec![3, 5])
+            .with_horizon(1234.5)
+            .with_fast(FastMode { horizon: Some(300.0), ..FastMode::none() });
+        let parsed = Scenario::parse(&sc.to_json_string()).expect("round trip");
+        assert_eq!(parsed, sc);
+        assert_eq!(parsed.plan(), sc.plan());
+    }
+
+    #[test]
+    fn parse_rejects_unknown_keys_and_bad_values() {
+        assert!(Scenario::parse(r#"{"name":"x","workload":"har","bogus":1}"#).is_err());
+        assert!(Scenario::parse(r#"{"name":"x","workload":"nope"}"#).is_err());
+        assert!(Scenario::parse(r#"{"name":"x","workload":"har","policies":["gredy"]}"#)
+            .is_err());
+        assert!(Scenario::parse(r#"{"name":"x","workload":"har","harvesters":["mars"]}"#)
+            .is_err());
+        assert!(Scenario::parse(r#"{"name":"x","workload":"har","seeds":[]}"#).is_err());
+        assert!(Scenario::parse(
+            r#"{"name":"x","workload":"img","projection":"policy-accuracy"}"#
+        )
+        .is_err());
+        // Mistyped values are hard errors, not silent defaults.
+        assert!(Scenario::parse(r#"{"name":"x","workload":"har","horizon":"900"}"#).is_err());
+        assert!(Scenario::parse(
+            r#"{"name":"x","workload":"har","devices":[{"capacitance":"0.00147"}]}"#
+        )
+        .is_err());
+        assert!(Scenario::parse(
+            r#"{"name":"x","workload":"har","training":{"windows":6.5}}"#
+        )
+        .is_err());
+        // Impossible device physics fail at parse time, not mid-fleet.
+        assert!(Scenario::parse(
+            r#"{"name":"x","workload":"har","devices":[{"v_off":3.5}]}"#
+        )
+        .is_err());
+        assert!(Scenario::parse(
+            r#"{"name":"x","workload":"har","devices":[{"capacitance":0}]}"#
+        )
+        .is_err());
+        assert!(Scenario::parse(
+            r#"{"name":"x","workload":"har","devices":[{"v_on":4.0}]}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn engine_override_lands_in_every_device() {
+        let sc = builtin("fig5", 42).unwrap().with_engine(EngineKind::FixedStep);
+        assert!(sc.devices.iter().all(|d| d.engine == Some(EngineKind::FixedStep)));
+        let cfg = sc.devices[0].engine_config(10.0);
+        assert_eq!(cfg.kind, EngineKind::FixedStep);
+    }
+
+    #[test]
+    fn default_device_is_the_paper_device() {
+        let cfg = DeviceSpec::default().engine_config(100.0);
+        let paper = EngineConfig::paper_default(100.0);
+        assert_eq!(cfg.capacitor.capacitance, paper.capacitor.capacitance);
+        assert_eq!(cfg.capacitor.v_on, paper.capacitor.v_on);
+        assert_eq!(cfg.capacitor.v_off, paper.capacitor.v_off);
+        assert_eq!(cfg.initial_voltage, paper.initial_voltage);
+        assert_eq!(DeviceSpec::default().label(), "paper");
+    }
+
+    #[test]
+    fn fig4_curves_rise_to_ceiling() {
+        let ctx = test_context();
+        let rows = accuracy_rows(&ctx, &[0, 20, 60, 140]);
+        assert_eq!(rows.len(), 4);
+        // Chance at p=0 (~1/6 measured and modelled).
+        assert!(rows[0].measured < 0.45, "p=0 measured {}", rows[0].measured);
+        // Measured accuracy at p=140 equals the full accuracy.
+        assert!((rows[3].measured - ctx.full_accuracy).abs() < 1e-9);
+        // Expected tracks measured within the paper's visual delta.
+        for r in &rows {
+            assert!(
+                (r.expected - r.measured).abs() < 0.22,
+                "p={}: expected={} measured={}",
+                r.p,
+                r.expected,
+                r.measured
+            );
+        }
+        // Monotone-ish growth.
+        assert!(rows[2].measured > rows[0].measured);
+    }
+
+    #[test]
+    fn fig12_degrades_gracefully() {
+        let rows = perforation_rows(64, &[0.0, 0.3, 0.8]);
+        assert_eq!(rows.len(), 9);
+        for chunk in rows.chunks(3) {
+            // skip=0 is exactly the reference.
+            assert!(chunk[0].equivalent);
+            assert_eq!(chunk[0].corners, chunk[0].reference_corners);
+            // skip=0.8 finds no more corners than skip=0.3.
+            assert!(chunk[2].corners <= chunk[1].corners + 2);
+        }
+    }
+
+    #[test]
+    fn cells_projection_emits_one_row_per_cell() {
+        let ctx = test_context();
+        let sc = Scenario::new("mini", WorkloadSpec::Har)
+            .with_policies(vec![Policy::Greedy, Policy::Continuous])
+            .with_seeds(vec![1, 2])
+            .with_horizon(900.0);
+        let run = sc.run_with(false, Some(&ctx), None);
+        let tables = run.tables();
+        assert_eq!(tables.len(), 1);
+        assert_eq!(tables[0].rows.len(), 4);
+        assert_eq!(tables[0].rows[0][0], "kinetic");
+        assert_eq!(tables[0].rows[0][2], "greedy");
+    }
+
+    #[test]
+    fn builtin_registry_covers_every_figure() {
+        for name in BUILTIN_NAMES {
+            let sc = builtin(name, 42).unwrap_or_else(|| panic!("{name} missing"));
+            assert_eq!(sc.name, name);
+            sc.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert!(!sc.plan().is_empty(), "{name} plan empty");
+        }
+        assert!(builtin("fig99", 42).is_none());
+    }
+}

@@ -1,0 +1,389 @@
+//! Row sinks: where sweep/figure tables go.
+//!
+//! A scenario run produces [`TableData`] — titled, headered string rows.
+//! The [`Sink`] trait is the single row-streaming abstraction behind
+//! every output format: markdown to stdout, CSV and JSON files under
+//! `out/`, or in-memory capture for tests and parity checks. The `aic`
+//! CLI fans every table out to all three file-facing sinks at once
+//! ([`standard`]), which is exactly what the retired `report::Table`
+//! used to hard-code.
+
+use crate::util::json::{self, Value};
+use std::io::{self, Write};
+use std::path::PathBuf;
+
+/// One rendered table of a sweep: the unit every sink consumes.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TableData {
+    /// File stem for CSV/JSON sinks (`out/<stem>.csv`).
+    pub stem: String,
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl TableData {
+    pub fn new(stem: &str, title: &str, header: &[&str]) -> TableData {
+        TableData {
+            stem: stem.to_string(),
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, row: Vec<String>) {
+        assert_eq!(row.len(), self.header.len(), "row width mismatch");
+        self.rows.push(row);
+    }
+
+    /// Render as a markdown table.
+    pub fn to_markdown(&self) -> String {
+        let mut s = format!("### {}\n\n", self.title);
+        s += &format!("| {} |\n", self.header.join(" | "));
+        s += &format!("|{}|\n", self.header.iter().map(|_| "---").collect::<Vec<_>>().join("|"));
+        for row in &self.rows {
+            s += &format!("| {} |\n", row.join(" | "));
+        }
+        s
+    }
+
+    /// Render as CSV.
+    pub fn to_csv(&self) -> String {
+        let mut s = self.header.iter().map(|h| csv_escape(h)).collect::<Vec<_>>().join(",") + "\n";
+        for row in &self.rows {
+            s += &(row.iter().map(|c| csv_escape(c)).collect::<Vec<_>>().join(",") + "\n");
+        }
+        s
+    }
+
+    /// As a JSON value (for machine consumption).
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("title", self.title.as_str().into()),
+            (
+                "header",
+                Value::Arr(self.header.iter().map(|h| h.as_str().into()).collect()),
+            ),
+            (
+                "rows",
+                Value::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| Value::Arr(r.iter().map(|c| c.as_str().into()).collect()))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+fn csv_escape(cell: &str) -> String {
+    if cell.contains(',') || cell.contains('"') {
+        format!("\"{}\"", cell.replace('"', "\"\""))
+    } else {
+        cell.to_string()
+    }
+}
+
+/// A destination for table rows. `begin` opens a table, `row` streams one
+/// data row, `finish` closes it; `table` is the convenience driver.
+pub trait Sink {
+    fn begin(&mut self, stem: &str, title: &str, header: &[String]) -> io::Result<()>;
+    fn row(&mut self, cells: &[String]) -> io::Result<()>;
+    fn finish(&mut self) -> io::Result<()>;
+
+    fn table(&mut self, t: &TableData) -> io::Result<()> {
+        self.begin(&t.stem, &t.title, &t.header)?;
+        for row in &t.rows {
+            self.row(row)?;
+        }
+        self.finish()
+    }
+}
+
+/// Send every table to a sink in order.
+pub fn emit_all(tables: &[TableData], sink: &mut dyn Sink) -> io::Result<()> {
+    for t in tables {
+        sink.table(t)?;
+    }
+    Ok(())
+}
+
+/// Markdown tables streamed to a writer (stdout for the CLI).
+pub struct MarkdownSink<W: Write> {
+    out: W,
+}
+
+impl<W: Write> MarkdownSink<W> {
+    pub fn new(out: W) -> MarkdownSink<W> {
+        MarkdownSink { out }
+    }
+}
+
+/// Markdown to stdout — what the CLI prints while the file sinks write.
+pub fn markdown_stdout() -> MarkdownSink<io::Stdout> {
+    MarkdownSink::new(io::stdout())
+}
+
+impl<W: Write> Sink for MarkdownSink<W> {
+    fn begin(&mut self, _stem: &str, title: &str, header: &[String]) -> io::Result<()> {
+        writeln!(self.out, "### {title}")?;
+        writeln!(self.out)?;
+        writeln!(self.out, "| {} |", header.join(" | "))?;
+        writeln!(self.out, "|{}|", header.iter().map(|_| "---").collect::<Vec<_>>().join("|"))
+    }
+
+    fn row(&mut self, cells: &[String]) -> io::Result<()> {
+        writeln!(self.out, "| {} |", cells.join(" | "))
+    }
+
+    fn finish(&mut self) -> io::Result<()> {
+        writeln!(self.out)
+    }
+}
+
+/// One `<stem>.csv` per table under `dir`, rows streamed as they arrive.
+pub struct CsvSink {
+    dir: PathBuf,
+    file: Option<io::BufWriter<std::fs::File>>,
+}
+
+impl CsvSink {
+    pub fn new(dir: &str) -> CsvSink {
+        CsvSink { dir: PathBuf::from(dir), file: None }
+    }
+}
+
+impl Sink for CsvSink {
+    fn begin(&mut self, stem: &str, _title: &str, header: &[String]) -> io::Result<()> {
+        std::fs::create_dir_all(&self.dir)?;
+        let mut f = io::BufWriter::new(std::fs::File::create(
+            self.dir.join(format!("{stem}.csv")),
+        )?);
+        writeln!(f, "{}", header.iter().map(|h| csv_escape(h)).collect::<Vec<_>>().join(","))?;
+        self.file = Some(f);
+        Ok(())
+    }
+
+    fn row(&mut self, cells: &[String]) -> io::Result<()> {
+        let f = self.file.as_mut().expect("CsvSink::row before begin");
+        writeln!(f, "{}", cells.iter().map(|c| csv_escape(c)).collect::<Vec<_>>().join(","))
+    }
+
+    fn finish(&mut self) -> io::Result<()> {
+        if let Some(mut f) = self.file.take() {
+            f.flush()?;
+        }
+        Ok(())
+    }
+}
+
+/// One `<stem>.json` per table under `dir` (same document shape the
+/// retired `report::Table::emit` wrote: `{title, header, rows}`).
+pub struct JsonSink {
+    dir: PathBuf,
+    current: Option<TableData>,
+}
+
+impl JsonSink {
+    pub fn new(dir: &str) -> JsonSink {
+        JsonSink { dir: PathBuf::from(dir), current: None }
+    }
+}
+
+impl Sink for JsonSink {
+    fn begin(&mut self, stem: &str, title: &str, header: &[String]) -> io::Result<()> {
+        self.current = Some(TableData {
+            stem: stem.to_string(),
+            title: title.to_string(),
+            header: header.to_vec(),
+            rows: Vec::new(),
+        });
+        Ok(())
+    }
+
+    fn row(&mut self, cells: &[String]) -> io::Result<()> {
+        self.current
+            .as_mut()
+            .expect("JsonSink::row before begin")
+            .rows
+            .push(cells.to_vec());
+        Ok(())
+    }
+
+    fn finish(&mut self) -> io::Result<()> {
+        if let Some(t) = self.current.take() {
+            std::fs::create_dir_all(&self.dir)?;
+            std::fs::write(
+                self.dir.join(format!("{}.json", t.stem)),
+                json::to_string_pretty(&t.to_json()),
+            )?;
+        }
+        Ok(())
+    }
+}
+
+/// Captures tables in memory — parity tests and programmatic consumers.
+#[derive(Default)]
+pub struct MemorySink {
+    pub tables: Vec<TableData>,
+}
+
+impl MemorySink {
+    pub fn new() -> MemorySink {
+        MemorySink::default()
+    }
+}
+
+impl Sink for MemorySink {
+    fn begin(&mut self, stem: &str, title: &str, header: &[String]) -> io::Result<()> {
+        self.tables.push(TableData {
+            stem: stem.to_string(),
+            title: title.to_string(),
+            header: header.to_vec(),
+            rows: Vec::new(),
+        });
+        Ok(())
+    }
+
+    fn row(&mut self, cells: &[String]) -> io::Result<()> {
+        self.tables.last_mut().expect("MemorySink::row before begin").rows.push(cells.to_vec());
+        Ok(())
+    }
+
+    fn finish(&mut self) -> io::Result<()> {
+        Ok(())
+    }
+}
+
+/// Fans every call out to several sinks.
+pub struct Fanout {
+    pub sinks: Vec<Box<dyn Sink>>,
+}
+
+impl Sink for Fanout {
+    fn begin(&mut self, stem: &str, title: &str, header: &[String]) -> io::Result<()> {
+        for s in &mut self.sinks {
+            s.begin(stem, title, header)?;
+        }
+        Ok(())
+    }
+
+    fn row(&mut self, cells: &[String]) -> io::Result<()> {
+        for s in &mut self.sinks {
+            s.row(cells)?;
+        }
+        Ok(())
+    }
+
+    fn finish(&mut self) -> io::Result<()> {
+        for s in &mut self.sinks {
+            s.finish()?;
+        }
+        Ok(())
+    }
+}
+
+/// The CLI's output fan: markdown on stdout plus CSV + JSON files under
+/// `out_dir` — byte-compatible with the retired `Table::emit`.
+pub fn standard(out_dir: &str) -> Fanout {
+    Fanout {
+        sinks: vec![
+            Box::new(markdown_stdout()),
+            Box::new(CsvSink::new(out_dir)),
+            Box::new(JsonSink::new(out_dir)),
+        ],
+    }
+}
+
+/// Format helpers shared by the projections and the figure benches.
+pub fn pct(x: f64) -> String {
+    format!("{:.1}%", 100.0 * x)
+}
+
+pub fn ratio(x: f64) -> String {
+    format!("{x:.2}x")
+}
+
+pub fn f2(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table() -> TableData {
+        let mut t = TableData::new("fig_test", "fig-test", &["a", "b"]);
+        t.push(vec!["1".into(), "x,y".into()]);
+        t
+    }
+
+    #[test]
+    fn markdown_and_csv_render() {
+        let t = table();
+        let md = t.to_markdown();
+        assert!(md.contains("| a | b |"));
+        assert!(md.contains("| 1 | x,y |"));
+        let csv = t.to_csv();
+        assert!(csv.contains("\"x,y\""));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let t = table();
+        let v = t.to_json();
+        assert_eq!(v.get("title").as_str(), Some("fig-test"));
+        assert_eq!(v.get("rows").at(0).at(1).as_str(), Some("x,y"));
+    }
+
+    #[test]
+    fn file_sinks_write_files() {
+        let t = table();
+        let dir = std::env::temp_dir().join("aic_sink_test");
+        let dir_s = dir.to_str().unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut fan = Fanout {
+            sinks: vec![Box::new(CsvSink::new(dir_s)), Box::new(JsonSink::new(dir_s))],
+        };
+        fan.table(&t).unwrap();
+        let csv = std::fs::read_to_string(dir.join("fig_test.csv")).unwrap();
+        assert_eq!(csv, t.to_csv());
+        let js = std::fs::read_to_string(dir.join("fig_test.json")).unwrap();
+        assert_eq!(json::parse(&js).unwrap(), t.to_json());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn markdown_sink_matches_to_markdown() {
+        let t = table();
+        let mut buf = Vec::new();
+        MarkdownSink::new(&mut buf).table(&t).unwrap();
+        // Streamed output == buffered render + the trailing blank line the
+        // old `println!("{}", to_markdown())` produced.
+        assert_eq!(String::from_utf8(buf).unwrap(), t.to_markdown() + "\n");
+    }
+
+    #[test]
+    fn memory_sink_captures_tables() {
+        let t = table();
+        let mut m = MemorySink::new();
+        emit_all(&[t.clone()], &mut m).unwrap();
+        assert_eq!(m.tables, vec![t]);
+    }
+
+    #[test]
+    fn formatting_helpers() {
+        assert_eq!(pct(0.834), "83.4%");
+        assert_eq!(ratio(7.0), "7.00x");
+        assert_eq!(f2(1.234), "1.23");
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn row_width_enforced() {
+        let mut t = TableData::new("t", "t", &["a", "b"]);
+        t.push(vec!["only-one".into()]);
+    }
+}

@@ -21,11 +21,12 @@
 //!   baselines, the application pipelines (human activity recognition,
 //!   embedded image processing), the PJRT runtime that loads the AOT
 //!   artifacts for accelerated batch replay (behind the `pjrt` feature),
-//!   and the workload-generic experiment coordinator + fleet that
-//!   regenerate every figure of the paper.
+//!   and the declarative scenario coordinator + fleet that regenerate
+//!   every figure of the paper and run arbitrary sweep grids
+//!   ([`coordinator::scenario`]).
 //!
-//! See `DESIGN.md` for the system inventory and the per-figure experiment
-//! index, and `EXPERIMENTS.md` for measured-vs-paper results.
+//! See `DESIGN.md` for the system inventory and the scenario index, and
+//! `EXPERIMENTS.md` for measured-vs-paper results.
 
 pub mod util;
 pub mod energy;

@@ -1,15 +1,16 @@
 //! `aic` — the Approximate Intermittent Computing coordinator CLI.
 //!
-//! Subcommands regenerate each figure of the paper (writing markdown to
-//! stdout and CSV/JSON under `--out`), inspect the energy traces, check
-//! the AOT artifacts through PJRT, and run free-form simulations.
+//! Every figure of the paper is a named built-in scenario, and `sweep`
+//! runs arbitrary campaign grids from a JSON scenario file (writing
+//! markdown to stdout and CSV/JSON under `--out`). The remaining
+//! subcommands inspect the energy traces, check the AOT artifacts
+//! through PJRT, and run free-form single-device simulations.
 
-use aic::coordinator::experiment::{
-    self, fig12, fig4, har_latency_histograms, har_policy_comparison,
-    img_trace_comparison, HarContext, HarRunSpec, ImgRunSpec,
-};
-use aic::coordinator::report::{f2, pct, ratio, Table};
+use aic::coordinator::experiment::{self, HarContext, HarRunSpec, ImgRunSpec};
+use aic::coordinator::scenario::{builtin, DeviceSpec, HarvesterSpec, Scenario, BUILTIN_NAMES};
+use aic::coordinator::sink::{self, pct, TableData};
 use aic::energy::traces::{generate, TraceKind};
+use aic::exec::engine::EngineKind;
 use aic::exec::Policy;
 use aic::util::cli::Args;
 
@@ -29,6 +30,9 @@ COMMANDS:
   fig14           imaging throughput per energy trace
   fig15           imaging latency distribution per trace
   all             every figure in sequence
+  sweep FILE      run a scenario file: any workload x harvester x device
+                  x policy x seed grid (also: --scenario FILE); see
+                  examples/scenarios/*.json
   traces          synthetic energy trace statistics (Fig. 11)
   artifacts-check load + execute every AOT artifact through PJRT
   simulate        one campaign: --policy greedy|smartNN|chinchilla|alpaca|continuous
@@ -36,10 +40,13 @@ COMMANDS:
 
 OPTIONS:
   --out DIR       output directory for CSV/JSON (default: out)
-  --fast          smaller campaigns (CI-friendly)
-  --seed N        base seed (default 42)
+  --fast          smaller campaigns (each scenario's own fast-mode scaling)
+  --seed N        base seed for figure scenarios and simulate (default 42;
+                  sweep takes its seeds from the scenario file)
   --engine E      device integrator: analytic (default, event-driven) or
-                  step (the fixed-step reference engine)
+                  step (the fixed-step reference engine); threaded through
+                  the scenario's device spec (AIC_ENGINE stays a read-only
+                  fallback)
 ";
 
 fn main() {
@@ -47,266 +54,115 @@ fn main() {
     let out = args.get_or("out", "out").to_string();
     let fast = args.flag("fast");
     let seed = args.get_u64("seed", 42);
-    // The integrator escape hatch: every campaign builds its engine via
-    // EngineConfig::paper_default, which honours AIC_ENGINE.
-    if let Some(spelling) = args.get("engine") {
-        match aic::exec::engine::EngineKind::parse(spelling) {
-            Some(kind) => std::env::set_var("AIC_ENGINE", kind.label()),
+    // The integrator escape hatch: lands in every device spec of the
+    // scenario instead of mutating the process environment (set_var is
+    // racy with the fleet's worker threads).
+    let engine = match args.get("engine") {
+        None => None,
+        Some(spelling) => match EngineKind::parse(spelling) {
+            Some(kind) => Some(kind),
             None => {
                 eprintln!("error: unknown engine '{spelling}' (expected analytic|step)\n");
                 eprint!("{USAGE}");
                 std::process::exit(2);
             }
-        }
-    }
+        },
+    };
     let cmd = args.command().unwrap_or("help").to_string();
     match cmd.as_str() {
-        // fig4 always reports full-fidelity accuracy curves, even in
-        // --fast sweeps (its cost is training, not campaigning).
-        "fig4" => run_fig4(&context(seed, false), &out),
-        "fig5" | "fig6" => run_fig56(&context(seed, fast), &out, fast, &cmd),
-        "fig7" | "fig8" | "fig9" => run_fig789(&context(seed, fast), &out, fast, &cmd),
-        "fig12" => run_fig12(&out, fast),
-        "fig13" | "fig14" | "fig15" => run_fig131415(&out, seed, fast, &cmd),
-        "all" => {
-            // One HAR context for the whole sweep: the corpus, the
-            // trained OVR SVM and the fitted class model are identical
-            // across figs. 4-9, so train once and share read-only
-            // across every figure's fleet jobs.
-            let ctx = context(seed, fast);
-            if fast {
-                // Keep fig4 full-fidelity (see the single-command arm).
-                run_fig4(&context(seed, false), &out);
-            } else {
-                run_fig4(&ctx, &out);
-            }
-            run_fig56(&ctx, &out, fast, "fig5");
-            run_fig56(&ctx, &out, fast, "fig6");
-            run_fig789(&ctx, &out, fast, "fig7");
-            run_fig789(&ctx, &out, fast, "fig8");
-            run_fig789(&ctx, &out, fast, "fig9");
-            run_fig12(&out, fast);
-            run_fig131415(&out, seed, fast, "fig13");
-            run_fig131415(&out, seed, fast, "fig14");
-            run_fig131415(&out, seed, fast, "fig15");
-        }
+        "all" => run_all(seed, fast, engine, &out),
+        "sweep" => run_sweep(&args, fast, engine, &out),
         "traces" => run_traces(&out, seed),
         "artifacts-check" => run_artifacts_check(args.get_or("artifacts", "artifacts")),
-        "simulate" => run_simulate(&args, seed),
+        "simulate" => run_simulate(&args, seed, engine),
+        name if BUILTIN_NAMES.contains(&name) => {
+            run_figure(name, seed, fast, engine, &out, None)
+        }
         _ => print!("{USAGE}"),
     }
 }
 
-fn context(seed: u64, fast: bool) -> HarContext {
+fn emit(tables: &[TableData], out: &str) {
+    let mut sinks = sink::standard(out);
+    sink::emit_all(tables, &mut sinks).expect("write figure data");
+}
+
+/// Run one named figure scenario. `ctx` shares an already-trained HAR
+/// context across figures (`aic all`).
+fn run_figure(
+    name: &str,
+    seed: u64,
+    fast: bool,
+    engine: Option<EngineKind>,
+    out: &str,
+    ctx: Option<&HarContext>,
+) {
+    let mut sc = builtin(name, seed).expect("known figure scenario");
+    if let Some(kind) = engine {
+        sc = sc.with_engine(kind);
+    }
+    let run = sc.run_with(fast, ctx, None);
+    emit(&run.tables(), out);
+}
+
+fn run_all(seed: u64, fast: bool, engine: Option<EngineKind>, out: &str) {
+    // One HAR context for the whole sweep: the corpus, the trained OVR
+    // SVM and the fitted class model are identical across figs. 4-9, so
+    // train once and share read-only across every figure's fleet jobs.
+    // fig4 always reports full-fidelity curves: in --fast runs it trains
+    // its own full context while figs. 5-9 share the CI-sized one.
     if fast {
-        experiment::test_context()
+        run_figure("fig4", seed, false, engine, out, None);
+        let ctx = builtin("fig5", seed).expect("fig5").resolve(true).har_context();
+        for name in ["fig5", "fig6", "fig7", "fig8", "fig9"] {
+            run_figure(name, seed, true, engine, out, Some(&ctx));
+        }
     } else {
-        HarContext::build(seed)
-    }
-}
-
-fn volunteers(fast: bool) -> Vec<u64> {
-    if fast {
-        vec![1, 2]
-    } else {
-        vec![1, 2, 3, 4, 5, 6]
-    }
-}
-
-fn har_spec(fast: bool) -> HarRunSpec {
-    HarRunSpec {
-        horizon: if fast { 1800.0 } else { 4.0 * 3600.0 },
-        ..Default::default()
-    }
-}
-
-fn run_fig4(ctx: &HarContext, out: &str) {
-    let ps: Vec<usize> = (0..=140).step_by(10).collect();
-    let rows = fig4(ctx, &ps);
-    let mut t = Table::new(
-        "Fig. 4 — expected vs measured accuracy vs number of features",
-        &["features", "expected", "measured"],
-    );
-    for r in rows {
-        t.push(vec![r.p.to_string(), pct(r.expected), pct(r.measured)]);
-    }
-    t.emit(out, "fig4").expect("write fig4");
-}
-
-fn run_fig56(ctx: &HarContext, out: &str, fast: bool, which: &str) {
-    let spec = har_spec(fast);
-    if which == "fig5" {
-        let rows = har_policy_comparison(ctx, &spec, &volunteers(fast));
-        let mut t = Table::new(
-            "Fig. 5 — emulation: accuracy and throughput normalised to continuous",
-            &["policy", "accuracy", "thrpt vs continuous", "mean features", "state energy"],
-        );
-        for r in rows {
-            t.push(vec![
-                r.policy.name(),
-                pct(r.accuracy),
-                pct(r.throughput_vs_continuous),
-                f2(r.mean_features),
-                pct(r.state_energy_fraction),
-            ]);
-        }
-        t.emit(out, "fig5").expect("write fig5");
-    } else {
-        let hists = har_latency_histograms(ctx, &spec, &volunteers(fast), 40);
-        let mut t = Table::new(
-            "Fig. 6 — emulation: latency distribution in power cycles",
-            &["policy", "cycle0", "cycle1", "cycle2-5", "cycle6-15", "cycle16+"],
-        );
-        for (policy, h) in hists {
-            let range =
-                |a: usize, b: usize| -> f64 { (a..b.min(h.bins.len())).map(|i| h.frac(i)).sum() };
-            t.push(vec![
-                policy.name(),
-                pct(h.frac(0)),
-                pct(h.frac(1)),
-                pct(range(2, 6)),
-                pct(range(6, 16)),
-                pct(range(16, 40) + h.overflow as f64 / h.count.max(1) as f64),
-            ]);
-        }
-        t.emit(out, "fig6").expect("write fig6");
-    }
-}
-
-fn run_fig789(ctx: &HarContext, out: &str, fast: bool, which: &str) {
-    let spec = har_spec(fast);
-    match which {
-        "fig7" => {
-            let rows = har_policy_comparison(ctx, &spec, &volunteers(fast));
-            let mut t = Table::new(
-                "Fig. 7 — real-world: coherence and throughput vs continuous",
-                &["policy", "coherence vs continuous", "thrpt vs continuous"],
-            );
-            for r in rows.iter().filter(|r| !matches!(r.policy, Policy::Continuous)) {
-                t.push(vec![
-                    r.policy.name(),
-                    pct(r.coherence_vs_continuous),
-                    pct(r.throughput_vs_continuous),
-                ]);
-            }
-            t.emit(out, "fig7").expect("write fig7");
-        }
-        "fig8" => {
-            let rows = har_policy_comparison(ctx, &spec, &volunteers(fast));
-            let mut t = Table::new(
-                "Fig. 8 — real-world: coherence vs Chinchilla, throughput vs GREEDY",
-                &["policy", "coherence vs chinchilla", "thrpt vs greedy", "thrpt vs chinchilla"],
-            );
-            for r in rows.iter().filter(|r| !matches!(r.policy, Policy::Continuous)) {
-                t.push(vec![
-                    r.policy.name(),
-                    pct(r.coherence_vs_chinchilla),
-                    pct(r.throughput_vs_greedy),
-                    ratio(r.throughput_vs_chinchilla),
-                ]);
-            }
-            t.emit(out, "fig8").expect("write fig8");
-        }
-        _ => {
-            let hists = har_latency_histograms(ctx, &spec, &volunteers(fast), 40);
-            let mut t = Table::new(
-                "Fig. 9 — real-world: latency distribution in power cycles",
-                &["policy", "same cycle", "1 cycle", "2+ cycles"],
-            );
-            for (policy, h) in hists {
-                let rest: f64 = (2..h.bins.len()).map(|i| h.frac(i)).sum::<f64>()
-                    + h.overflow as f64 / h.count.max(1) as f64;
-                t.push(vec![policy.name(), pct(h.frac(0)), pct(h.frac(1)), pct(rest)]);
-            }
-            t.emit(out, "fig9").expect("write fig9");
+        let ctx = builtin("fig5", seed).expect("fig5").har_context();
+        for name in ["fig4", "fig5", "fig6", "fig7", "fig8", "fig9"] {
+            run_figure(name, seed, false, engine, out, Some(&ctx));
         }
     }
-}
-
-fn run_fig12(out: &str, fast: bool) {
-    let size = if fast { 96 } else { aic::imgproc::images::EVAL_SIZE };
-    let rows = fig12(size, &[0.0, 0.2, 0.42, 0.55, 0.7, 0.85]);
-    let mut t = Table::new(
-        "Fig. 12 — corner detection output vs fraction of loop iterations skipped",
-        &["picture", "skipped", "corners", "reference", "equivalent"],
-    );
-    for r in rows {
-        t.push(vec![
-            r.picture.name().to_string(),
-            pct(r.skip_fraction),
-            r.corners.to_string(),
-            r.reference_corners.to_string(),
-            r.equivalent.to_string(),
-        ]);
+    for name in ["fig12", "fig13", "fig14", "fig15"] {
+        run_figure(name, seed, fast, engine, out, None);
     }
-    t.emit(out, "fig12").expect("write fig12");
 }
 
-fn run_fig131415(out: &str, seed: u64, fast: bool, which: &str) {
-    let spec = ImgRunSpec {
-        horizon: if fast { 1200.0 } else { 2.0 * 3600.0 },
-        trace_seed: seed,
-        ..Default::default()
+fn run_sweep(args: &Args, fast: bool, engine: Option<EngineKind>, out: &str) {
+    if args.get("seed").is_some() {
+        // Seeds are part of the grid: every cell's seed comes from the
+        // scenario file, so a global --seed would be misleading.
+        eprintln!("note: --seed is ignored by sweep (seeds come from the scenario file)");
+    }
+    let Some(path) = args.get("scenario").or_else(|| args.positional_at(1)) else {
+        eprintln!("error: sweep needs a scenario file (aic sweep file.json)\n");
+        eprint!("{USAGE}");
+        std::process::exit(2);
     };
-    let rows = img_trace_comparison(&spec);
-    match which {
-        "fig13" => {
-            let mut t = Table::new(
-                "Fig. 13 — corner info equivalent to a continuous execution",
-                &["picture", "equivalent corner info (pooled over traces)"],
-            );
-            for (picture, eq) in experiment::fig13_by_picture(&spec) {
-                t.push(vec![picture.name().to_string(), pct(eq)]);
-            }
-            let mut per_trace = Table::new(
-                "Fig. 13 (suppl.) — equivalence per energy trace",
-                &["trace", "equivalent corner info"],
-            );
-            for r in &rows {
-                per_trace.push(vec![r.trace.name().to_string(), pct(r.equivalence_aic)]);
-            }
-            t.emit(out, "fig13").expect("write fig13");
-            per_trace.emit(out, "fig13_per_trace").expect("write fig13 suppl");
+    let text = match std::fs::read_to_string(path) {
+        Ok(text) => text,
+        Err(e) => {
+            eprintln!("error: cannot read scenario '{path}': {e}");
+            std::process::exit(2);
         }
-        "fig14" => {
-            let mut t = Table::new(
-                "Fig. 14 — imaging throughput normalised to continuous",
-                &["trace", "AIC", "Chinchilla", "AIC/Chinchilla"],
-            );
-            for r in &rows {
-                let gain = if r.throughput_chinchilla_vs_continuous > 0.0 {
-                    r.throughput_aic_vs_continuous / r.throughput_chinchilla_vs_continuous
-                } else {
-                    f64::INFINITY
-                };
-                t.push(vec![
-                    r.trace.name().to_string(),
-                    pct(r.throughput_aic_vs_continuous),
-                    pct(r.throughput_chinchilla_vs_continuous),
-                    ratio(gain),
-                ]);
-            }
-            t.emit(out, "fig14").expect("write fig14");
+    };
+    let mut sc = match Scenario::parse(&text) {
+        Ok(sc) => sc,
+        Err(e) => {
+            eprintln!("error: scenario '{path}': {e}");
+            std::process::exit(2);
         }
-        _ => {
-            let mut t = Table::new(
-                "Fig. 15 — latency to produce the corner output (power cycles)",
-                &["trace", "AIC same-cycle", "Chinchilla mean latency"],
-            );
-            for r in &rows {
-                t.push(vec![
-                    r.trace.name().to_string(),
-                    pct(r.aic_same_cycle),
-                    f2(r.chinchilla_latency_mean),
-                ]);
-            }
-            t.emit(out, "fig15").expect("write fig15");
-        }
+    };
+    if let Some(kind) = engine {
+        sc = sc.with_engine(kind);
     }
+    let run = sc.run(fast);
+    emit(&run.tables(), out);
 }
 
 fn run_traces(out: &str, seed: u64) {
-    let mut t = Table::new(
+    let mut t = TableData::new(
+        "fig11_traces",
         "Fig. 11 — synthetic energy traces",
         &["trace", "mean power (uW)", "total energy (J/h)", "variability (cv)"],
     );
@@ -316,10 +172,10 @@ fn run_traces(out: &str, seed: u64) {
             kind.name().to_string(),
             format!("{:.1}", tr.mean_power() * 1e6),
             format!("{:.3}", tr.total_energy()),
-            f2(tr.variability()),
+            format!("{:.2}", tr.variability()),
         ]);
     }
-    t.emit(out, "fig11_traces").expect("write traces");
+    emit(&[t], out);
 }
 
 fn run_artifacts_check(dir: &str) {
@@ -346,7 +202,7 @@ fn run_artifacts_check(dir: &str) {
     println!("artifacts-check OK");
 }
 
-fn run_simulate(args: &Args, seed: u64) {
+fn run_simulate(args: &Args, seed: u64, engine: Option<EngineKind>) {
     // Unknown names are an error, not a silent Greedy fallback.
     let policy: Policy = match args.get_or("policy", "greedy").parse() {
         Ok(policy) => policy,
@@ -358,10 +214,17 @@ fn run_simulate(args: &Args, seed: u64) {
     };
     let horizon = args.get_f64("horizon", 3600.0);
     let trace = args.get_or("trace", "kinetic").to_string();
+    let device = DeviceSpec { engine, ..DeviceSpec::default() };
     if trace == "kinetic" {
         let ctx = HarContext::build(seed ^ 0xC0FFEE);
         let spec = HarRunSpec { horizon, sample_period: 60.0, script_seed: seed };
-        let c = experiment::run_har_policy(&ctx, &spec, policy);
+        let c = experiment::run_har_policy_on(
+            &ctx,
+            &spec,
+            HarvesterSpec::Kinetic,
+            policy,
+            &device,
+        );
         println!(
             "HAR {}: {} results, {} cycles, {} failures, acc {}, app {:.2} mJ, state {:.2} mJ",
             policy.name(),
@@ -383,7 +246,12 @@ fn run_simulate(args: &Args, seed: u64) {
             }
         };
         let spec = ImgRunSpec { horizon, trace_seed: seed, ..Default::default() };
-        let c = experiment::run_img_policy(&spec, kind, policy);
+        let c = experiment::run_img_policy_on(
+            &spec,
+            HarvesterSpec::Ambient(kind),
+            policy,
+            &device,
+        );
         println!(
             "IMG {} on {}: {} results, {} cycles, {} failures, app {:.2} mJ, state {:.2} mJ",
             policy.name(),

@@ -93,6 +93,12 @@ impl Args {
     pub fn command(&self) -> Option<&str> {
         self.positional.first().map(|s| s.as_str())
     }
+
+    /// The i-th positional argument (0 = the subcommand) — lets
+    /// `aic sweep file.json` spell the scenario path without a flag.
+    pub fn positional_at(&self, i: usize) -> Option<&str> {
+        self.positional.get(i).map(|s| s.as_str())
+    }
 }
 
 #[cfg(test)]
@@ -119,6 +125,14 @@ mod tests {
         assert_eq!(a.get_or("trace", "som"), "som");
         assert_eq!(a.get_f64("bound", 0.8), 0.8);
         assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn positional_access() {
+        let a = args("sweep grid.json");
+        assert_eq!(a.command(), Some("sweep"));
+        assert_eq!(a.positional_at(1), Some("grid.json"));
+        assert_eq!(a.positional_at(2), None);
     }
 
     #[test]

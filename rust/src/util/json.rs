@@ -32,6 +32,12 @@ impl Value {
         self.as_f64().map(|n| n as usize)
     }
 
+    /// Strict unsigned-integer view: rejects negatives and fractions
+    /// (scenario seeds and sizes must round-trip exactly).
+    pub fn as_u64(&self) -> Option<u64> {
+        self.as_f64().filter(|n| *n >= 0.0 && n.fract() == 0.0).map(|n| n as u64)
+    }
+
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::Str(s) => Some(s),

@@ -2,9 +2,8 @@
 //! policy, checking the paper's qualitative relations hold on a small
 //! but non-trivial configuration.
 
-use aic::coordinator::experiment::{
-    fig4, har_policy_comparison, run_har_policy, HarContext, HarRunSpec,
-};
+use aic::coordinator::experiment::{run_har_policy, HarContext, HarRunSpec};
+use aic::coordinator::scenario::{accuracy_rows, har_policies, PolicyRow, Scenario, WorkloadSpec};
 use aic::coordinator::metrics::{har_accuracy, same_cycle_fraction};
 use aic::exec::Policy;
 use aic::har::dataset::CorpusSpec;
@@ -18,6 +17,18 @@ fn small_ctx() -> HarContext {
         },
         404,
     )
+}
+
+/// The scenario-driven equivalent of the retired
+/// `har_policy_comparison`: every §5 policy on the given volunteers.
+fn comparison_rows(ctx: &HarContext, spec: &HarRunSpec, volunteers: Vec<u64>) -> Vec<PolicyRow> {
+    Scenario::new("t", WorkloadSpec::Har)
+        .with_policies(har_policies())
+        .with_horizon(spec.horizon)
+        .with_sample_period(spec.sample_period)
+        .with_seeds(volunteers)
+        .run_with(false, Some(ctx), None)
+        .policy_rows()
 }
 
 #[test]
@@ -34,7 +45,7 @@ fn training_reaches_a_sane_ceiling() {
 fn fig4_expected_tracks_measured() {
     let ctx = small_ctx();
     let ps = [0usize, 20, 60, 100, 140];
-    let rows = fig4(&ctx, &ps);
+    let rows = accuracy_rows(&ctx, &ps);
     // Both curves end at the ceiling and start near chance.
     assert!(rows[0].measured < 0.4);
     assert!((rows[4].measured - ctx.full_accuracy).abs() < 1e-9);
@@ -65,7 +76,7 @@ fn greedy_campaign_single_cycle_and_accurate_enough() {
 fn policy_relations_match_paper() {
     let ctx = small_ctx();
     let spec = HarRunSpec { horizon: 2.0 * 3600.0, ..Default::default() };
-    let rows = har_policy_comparison(&ctx, &spec, &[3, 4]);
+    let rows = comparison_rows(&ctx, &spec, vec![3, 4]);
     let get = |p: Policy| rows.iter().find(|r| r.policy == p).unwrap();
     let cont = get(Policy::Continuous);
     let chin = get(Policy::Chinchilla);
@@ -94,7 +105,7 @@ fn policy_relations_match_paper() {
 fn smart_bound_orders_accuracy_and_throughput() {
     let ctx = small_ctx();
     let spec = HarRunSpec { horizon: 2.0 * 3600.0, ..Default::default() };
-    let rows = har_policy_comparison(&ctx, &spec, &[7, 8]);
+    let rows = comparison_rows(&ctx, &spec, vec![7, 8]);
     let get = |p: Policy| rows.iter().find(|r| r.policy == p).unwrap();
     let s60 = get(Policy::Smart { bound: 0.60 });
     let s80 = get(Policy::Smart { bound: 0.80 });

@@ -1,7 +1,8 @@
 //! End-to-end imaging integration: perforated Harris campaigns across
 //! energy traces, equivalence accounting, and the §6.3 relations.
 
-use aic::coordinator::experiment::{fig12, run_img_policy, ImgRunSpec};
+use aic::coordinator::experiment::{run_img_policy, ImgRunSpec};
+use aic::coordinator::scenario::perforation_rows;
 use aic::coordinator::metrics::{
     corner_equivalence_fraction, same_cycle_fraction, throughput_ratio,
 };
@@ -25,7 +26,7 @@ fn zero_perforation_is_exactly_the_reference() {
 
 #[test]
 fn fig12_simple_survives_heavier_perforation_than_complex() {
-    let rows = fig12(128, &[0.0, 0.25, 0.42, 0.55, 0.7]);
+    let rows = perforation_rows(128, &[0.0, 0.25, 0.42, 0.55, 0.7]);
     let max_ok = |p: Picture| -> f64 {
         rows.iter()
             .filter(|r| r.picture == p && r.equivalent)

@@ -1,0 +1,222 @@
+//! The scenario API's contract tests: lossless JSON round-trips with
+//! identical job plans, row-level parity of the scenario-driven figures
+//! against the retired per-figure wiring (figs. 5 and 13), fleet
+//! determinism for any worker-pool size, and a parse gate over the
+//! committed example scenarios in `examples/scenarios/`.
+
+use aic::coordinator::experiment::{run_har_policy, run_img_policy, HarRunSpec, ImgRunSpec};
+use aic::coordinator::metrics;
+use aic::coordinator::scenario::{
+    builtin, har_policies, HarvesterSpec, Scenario, Training, WorkloadSpec, BUILTIN_NAMES,
+};
+use aic::coordinator::sink::pct;
+use aic::energy::traces::TraceKind;
+use aic::exec::{Campaign, Policy};
+use aic::har::app::HarOutput;
+use aic::imgproc::images::EVAL_SIZE;
+use aic::util::stats::mean;
+
+#[test]
+fn builtin_scenarios_round_trip_through_json() {
+    for name in BUILTIN_NAMES {
+        let sc = builtin(name, 42).unwrap();
+        let text = sc.to_json_string();
+        let parsed = Scenario::parse(&text).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_eq!(parsed, sc, "{name}: scenario changed across the round trip");
+        assert_eq!(parsed.plan(), sc.plan(), "{name}: job plan changed");
+        // The fast resolution survives the round trip too.
+        assert_eq!(parsed.resolve(true).plan(), sc.resolve(true).plan(), "{name}: fast plan");
+    }
+}
+
+#[test]
+fn example_scenarios_parse_and_round_trip() {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/../examples/scenarios");
+    let mut seen = 0;
+    for entry in std::fs::read_dir(dir).expect("examples/scenarios missing") {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("json") {
+            continue;
+        }
+        seen += 1;
+        let text = std::fs::read_to_string(&path).unwrap();
+        let sc = Scenario::parse(&text)
+            .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+        assert!(!sc.plan().is_empty(), "{}: expands to an empty grid", path.display());
+        let rt = Scenario::parse(&sc.to_json_string()).unwrap();
+        assert_eq!(rt.plan(), sc.plan(), "{}: plan changed across round trip", path.display());
+    }
+    assert!(seen >= 1, "no committed example scenarios found in {dir}");
+}
+
+/// Fig. 5 parity: the scenario-driven sweep reproduces — bit for bit —
+/// what the retired `har_policy_comparison`/`summarise_policies` wiring
+/// computed, down to the formatted table rows the CLI prints.
+#[test]
+fn scenario_fig5_matches_legacy_rows() {
+    // The CLI's `aic fig5 --fast` configuration (tiny corpus, two
+    // volunteers, 30-minute horizon) keeps the oracle affordable.
+    let sc = builtin("fig5", 42).unwrap().resolve(true);
+    assert_eq!(sc.training, Training::tiny());
+    let ctx = sc.har_context();
+    let run = sc.run_with(false, Some(&ctx), None);
+    let rows = run.policy_rows();
+
+    // --- the legacy oracle: one campaign per (policy, volunteer), then
+    // the exact summarise_policies arithmetic ---------------------------
+    let policies = har_policies();
+    let volunteers = sc.seeds.clone();
+    let spec =
+        HarRunSpec { horizon: sc.horizon, sample_period: sc.sample_period, script_seed: 0 };
+    let campaigns: Vec<Vec<Campaign<HarOutput>>> = policies
+        .iter()
+        .map(|&p| {
+            volunteers
+                .iter()
+                .map(|&v| {
+                    run_har_policy(&ctx, &HarRunSpec { script_seed: v, ..spec.clone() }, p)
+                })
+                .collect()
+        })
+        .collect();
+    let idx = |p: Policy| policies.iter().position(|&q| q == p).unwrap();
+    let (cont, chin, greedy) =
+        (idx(Policy::Continuous), idx(Policy::Chinchilla), idx(Policy::Greedy));
+    let per_volunteer = |f: &dyn Fn(usize) -> f64| -> f64 {
+        let v: Vec<f64> = (0..volunteers.len()).map(f).collect();
+        mean(&v)
+    };
+
+    assert_eq!(rows.len(), policies.len());
+    for (i, &policy) in policies.iter().enumerate() {
+        let r = &rows[i];
+        assert_eq!(r.policy, policy);
+        let accuracy = per_volunteer(&|v| metrics::har_accuracy(&campaigns[i][v]));
+        let coh_cont = per_volunteer(&|v| {
+            metrics::har_coherence(&campaigns[i][v], &campaigns[cont][v], spec.sample_period)
+        });
+        let coh_chin = per_volunteer(&|v| {
+            metrics::har_coherence(&campaigns[i][v], &campaigns[chin][v], spec.sample_period)
+        });
+        let thr_cont = per_volunteer(&|v| {
+            metrics::throughput_ratio(&campaigns[i][v], &campaigns[cont][v])
+        });
+        let thr_greedy = per_volunteer(&|v| {
+            metrics::throughput_ratio(&campaigns[i][v], &campaigns[greedy][v])
+        });
+        let thr_chin = per_volunteer(&|v| {
+            metrics::throughput_ratio(&campaigns[i][v], &campaigns[chin][v])
+        });
+        let mean_features = per_volunteer(&|v| {
+            let steps: Vec<f64> =
+                campaigns[i][v].emitted().map(|r| r.steps_executed as f64).collect();
+            mean(&steps)
+        });
+        let state_frac = per_volunteer(&|v| {
+            let c = &campaigns[i][v];
+            let total = c.app_energy + c.state_energy;
+            if total == 0.0 {
+                0.0
+            } else {
+                c.state_energy / total
+            }
+        });
+        // Bit-for-bit: same campaigns, same means, same order.
+        assert_eq!(r.accuracy, accuracy, "{policy:?} accuracy");
+        assert_eq!(r.coherence_vs_continuous, coh_cont, "{policy:?} coherence/cont");
+        assert_eq!(r.coherence_vs_chinchilla, coh_chin, "{policy:?} coherence/chin");
+        assert_eq!(r.throughput_vs_continuous, thr_cont, "{policy:?} thrpt/cont");
+        assert_eq!(r.throughput_vs_greedy, thr_greedy, "{policy:?} thrpt/greedy");
+        assert_eq!(r.throughput_vs_chinchilla, thr_chin, "{policy:?} thrpt/chin");
+        assert_eq!(r.mean_features, mean_features, "{policy:?} mean features");
+        assert_eq!(r.state_energy_fraction, state_frac, "{policy:?} state fraction");
+    }
+
+    // The rendered table matches the legacy CLI formatting row for row.
+    let tables = run.tables();
+    assert_eq!(tables.len(), 1);
+    for (i, row) in tables[0].rows.iter().enumerate() {
+        let r = &rows[i];
+        let expected = vec![
+            r.policy.name(),
+            pct(r.accuracy),
+            pct(r.throughput_vs_continuous),
+            format!("{:.2}", r.mean_features),
+            pct(r.state_energy_fraction),
+        ];
+        assert_eq!(row, &expected, "fig5 row {i}");
+    }
+}
+
+/// Fig. 13 parity: the scenario-driven sweep reproduces the retired
+/// `fig13_by_picture` + `img_trace_comparison` tables row for row.
+#[test]
+fn scenario_fig13_matches_legacy_rows() {
+    // Short horizon keeps the 5-trace x 3-policy grid affordable.
+    let sc = builtin("fig13", 9).unwrap().with_horizon(600.0);
+    let run = sc.run(false);
+    let tables = run.tables();
+    assert_eq!(tables.len(), 2, "fig13 emits the pooled + per-trace tables");
+
+    // --- the legacy oracle: one GREEDY campaign per trace -------------
+    let spec = ImgRunSpec { horizon: 600.0, sample_period: 30.0, trace_seed: 9 };
+    let greedy: Vec<_> = TraceKind::ALL
+        .iter()
+        .map(|&t| run_img_policy(&spec, t, Policy::Greedy))
+        .collect();
+    let refs: Vec<&Campaign<_>> = greedy.iter().collect();
+    let by_picture = metrics::corner_equivalence_by_picture(&refs, EVAL_SIZE);
+    let expected_pooled: Vec<Vec<String>> = by_picture
+        .iter()
+        .map(|(picture, eq)| vec![picture.name().to_string(), pct(*eq)])
+        .collect();
+    assert_eq!(tables[0].rows, expected_pooled, "fig13 pooled-by-picture rows");
+
+    let expected_per_trace: Vec<Vec<String>> = TraceKind::ALL
+        .iter()
+        .zip(&greedy)
+        .map(|(t, c)| {
+            vec![t.name().to_string(), pct(metrics::corner_equivalence_fraction(c, EVAL_SIZE))]
+        })
+        .collect();
+    assert_eq!(tables[1].rows, expected_per_trace, "fig13 per-trace rows");
+}
+
+/// The acceptance gate: a sweep's rows are identical under any worker
+/// pool size (`AIC_WORKERS` equivalent), on a grid mixing harvesters.
+#[test]
+fn sweep_rows_identical_for_any_worker_count() {
+    let sc = Scenario::new("workers", WorkloadSpec::Har)
+        .with_training(Training::tiny())
+        .with_policies(vec![Policy::Greedy, Policy::Continuous])
+        .with_harvesters(vec![
+            HarvesterSpec::Kinetic,
+            HarvesterSpec::Ambient(TraceKind::Som),
+        ])
+        .with_seeds(vec![1, 2])
+        .with_horizon(900.0);
+    let ctx = sc.har_context();
+    let one = sc.run_with(false, Some(&ctx), Some(1)).tables();
+    let many = sc.run_with(false, Some(&ctx), Some(7)).tables();
+    assert_eq!(one, many, "sweep output depends on the pool size");
+    // 2 harvesters x 2 policies x 2 seeds = 8 cells, one row each.
+    assert_eq!(one[0].rows.len(), 8);
+}
+
+/// The committed HAR-on-ambient-traces scenario (the grid no hard-coded
+/// figure ever covered) runs end-to-end in fast mode.
+#[test]
+fn har_ambient_example_runs_fast() {
+    let path = concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/../examples/scenarios/har_ambient.json"
+    );
+    let sc = Scenario::parse(&std::fs::read_to_string(path).unwrap()).unwrap();
+    assert!(
+        sc.harvesters.iter().all(|h| matches!(h, HarvesterSpec::Ambient(_))),
+        "the example is about ambient supplies"
+    );
+    let run = sc.run(true);
+    let tables = run.tables();
+    assert_eq!(tables[0].rows.len(), run.scenario.plan().len());
+}
