@@ -1,0 +1,99 @@
+//! Audio hot-path bench: the anytime acoustic event detection pipeline.
+//!
+//! Times the operations dominating an audio campaign's wall-clock — the
+//! Goertzel refinement step, window synthesis, and threshold
+//! classification — then runs the builtin audio grid and checks the
+//! paper-shaped property: detection accuracy is monotonically
+//! non-decreasing in completed refinement steps.
+
+use aic::audio::detector::SpectralDetector;
+use aic::audio::stream::{labelled_windows, AudioScript};
+use aic::audio::NUM_PROBES;
+use aic::coordinator::scenario::builtin;
+use aic::energy::mcu::McuModel;
+use aic::util::bench::{black_box, Bench};
+
+fn main() {
+    let fast = std::env::var("AIC_BENCH_FAST").is_ok();
+    let b = Bench::new("audio_anytime");
+    let detector = SpectralDetector::paper_default();
+
+    // The refinement hot loop: all 63 Goertzel probes over one window.
+    {
+        let windows = labelled_windows(1, 3);
+        let w = windows.last().unwrap();
+        b.bench_throughput("audio/goertzel_probe_x63", NUM_PROBES as u64, || {
+            let mut acc = 0.0;
+            for j in 0..NUM_PROBES {
+                acc += detector.probe(&w.samples, j);
+            }
+            black_box(acc);
+        });
+    }
+
+    // Window synthesis (dominates load_next on script sources).
+    {
+        let script = AudioScript::generate(3600.0, 7);
+        let mut t = 0.0;
+        b.bench("audio/window_at", || {
+            black_box(script.window_at(t).samples[0]);
+            t += 30.0;
+        });
+    }
+
+    // Threshold classification from a full probe table.
+    {
+        let windows = labelled_windows(1, 9);
+        let powers: Vec<Vec<f64>> = windows
+            .iter()
+            .map(|w| (0..NUM_PROBES).map(|j| detector.probe(&w.samples, j)).collect())
+            .collect();
+        let mut i = 0usize;
+        b.bench("audio/classify_full", || {
+            black_box(detector.classify(&powers[i % powers.len()]));
+            i += 1;
+        });
+    }
+
+    // The builtin audio grid end-to-end (the campaign hot path).
+    let sc = builtin("audio", 3).expect("audio scenario");
+    let mut rows_out = Vec::new();
+    b.bench("audio/builtin_grid", || {
+        rows_out = sc.run(fast).audio_policy_rows();
+    });
+    let rows: Vec<Vec<String>> = rows_out
+        .iter()
+        .map(|r| {
+            vec![
+                r.policy.name(),
+                format!("{:.1}%", 100.0 * r.accuracy),
+                format!("{:.1}", r.mean_probes),
+                format!("{:.1}%", 100.0 * r.same_cycle_fraction),
+            ]
+        })
+        .collect();
+    b.report_table(
+        "Audio — detection accuracy / refinement depth per policy",
+        &["policy", "accuracy", "mean probes", "same cycle"],
+        &rows,
+    );
+
+    // Shape: the anytime knob — accuracy monotone in refinement steps,
+    // priced monotone in energy through the estimator.
+    let windows = labelled_windows(4, 0xBE9C4);
+    let ps: Vec<usize> = (0..=NUM_PROBES).collect();
+    let curve = detector.accuracy_curve(&windows, &ps);
+    let monotone = curve.windows(2).all(|w| w[1] >= w[0] - 1e-12);
+    let profile = aic::audio::app::smart_table(&detector, &McuModel::paper_default());
+    let priced = profile
+        .cumulative_energy
+        .windows(2)
+        .all(|w| w[1] > w[0]);
+    println!(
+        "shape: accuracy monotone non-decreasing in refinement steps \
+         (start {:.0}%, end {:.0}%) and strictly priced [{}]",
+        100.0 * curve[0],
+        100.0 * curve[NUM_PROBES],
+        if monotone && priced && curve[NUM_PROBES] >= 0.99 { "PASS" } else { "FAIL" }
+    );
+}

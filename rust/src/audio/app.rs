@@ -1,0 +1,278 @@
+//! The acoustic event pipeline as a step program.
+//!
+//! Acquire a 16 ms microphone window → run Goertzel band-energy probes
+//! in coarse-to-fine refinement order (each step = one probe folded into
+//! the running band table) → emit the 2-byte classification over BLE.
+//! The probe values are computed when the step executes; the *energy* is
+//! charged per executed step through the same estimator/engine path as
+//! the HAR features and the Harris rows (Fig. 10's uniform knob model).
+
+use crate::audio::detector::SpectralDetector;
+use crate::audio::stream::{AudioScript, AudioWindow};
+use crate::energy::estimator::{EnergyProfile, SmartTable};
+use crate::energy::mcu::{McuModel, OpCost};
+use crate::exec::program::StepProgram;
+
+/// Cycles of one Goertzel band-energy pass over the 128-sample window:
+/// the software-floating-point multiply–accumulate recurrence on an
+/// FPU-less MSP430 (~300 cycles/sample) plus the magnitude epilogue.
+/// Prices the full 63-step refinement at ≈ 2.3 mJ — roughly half a
+/// buffer charge, the regime where the anytime knob matters.
+pub const CYCLES_PER_PROBE: u64 = 120_000;
+
+/// Cost vector of refinement step `j` (uniform: every probe is one
+/// Goertzel pass over the same window).
+pub fn probe_cost(_j: usize) -> OpCost {
+    OpCost::cycles(CYCLES_PER_PROBE)
+}
+
+/// Classification output delivered over BLE (ground truth carried along
+/// for the metrics layer; it does not influence execution).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct AudioOutput {
+    /// Detected class (0 = silence/no event).
+    pub predicted: usize,
+    /// Scene ground truth.
+    pub truth: usize,
+    /// Refinement steps completed for this window.
+    pub probes_used: usize,
+}
+
+/// Where the program's audio windows come from.
+pub enum AudioSource {
+    /// A fixed labelled list (emulation replay); ends when exhausted.
+    List(Vec<AudioWindow>),
+    /// A deterministic event script sampled at acquisition time
+    /// (campaigns); never ends.
+    Script(AudioScript),
+}
+
+/// The acoustic event detection program.
+pub struct AudioProgram {
+    pub detector: SpectralDetector,
+    source: AudioSource,
+    cursor: usize,
+    /// Current window samples.
+    window: Vec<f64>,
+    truth: usize,
+    /// Probe powers completed this round (`powers[j]` = step `j`).
+    powers: Vec<f64>,
+    planned: usize,
+}
+
+impl AudioProgram {
+    pub fn new(detector: SpectralDetector, source: AudioSource) -> AudioProgram {
+        AudioProgram {
+            detector,
+            source,
+            cursor: 0,
+            window: Vec::new(),
+            truth: 0,
+            powers: Vec::new(),
+            planned: 0,
+        }
+    }
+
+    /// Energy profile of the full refinement pipeline (for SMART tables
+    /// and the benches) — priced through the existing estimator path.
+    pub fn energy_profile(&self, mcu: &McuModel) -> EnergyProfile {
+        let costs: Vec<OpCost> = (0..self.detector.num_probes()).map(probe_cost).collect();
+        EnergyProfile::from_costs(mcu, &costs)
+    }
+}
+
+/// Build SMART's offline lookup table for the audio pipeline: the
+/// analytic expected-accuracy curve of the refinement schedule plus the
+/// estimator's cumulative probe energy.
+pub fn smart_table(detector: &SpectralDetector, mcu: &McuModel) -> SmartTable {
+    let acc = detector.expected_accuracy();
+    let costs: Vec<OpCost> = (0..detector.num_probes()).map(probe_cost).collect();
+    let profile = EnergyProfile::from_costs(mcu, &costs);
+    let emit = mcu.energy(&OpCost { cycles: 900, ble_bytes: 2, ..Default::default() });
+    SmartTable::new(acc, &profile, emit)
+}
+
+impl StepProgram for AudioProgram {
+    type Output = AudioOutput;
+
+    fn load_next(&mut self, now: f64) -> bool {
+        let w = match &self.source {
+            AudioSource::List(list) => {
+                if self.cursor >= list.len() {
+                    return false;
+                }
+                let w = list[self.cursor].clone();
+                self.cursor += 1;
+                w
+            }
+            AudioSource::Script(script) => script.window_at(now),
+        };
+        self.window = w.samples;
+        self.truth = w.label;
+        self.powers.clear();
+        self.planned = self.detector.num_probes();
+        true
+    }
+
+    fn acquire_cost(&self) -> OpCost {
+        // 16 ms of microphone + amplifier duty plus DMA/window setup.
+        OpCost { cycles: 30_000, sensor_secs: 0.016, ..Default::default() }
+    }
+
+    fn num_steps(&self) -> usize {
+        self.detector.num_probes()
+    }
+
+    fn plan(&mut self, k: usize) {
+        debug_assert!(k <= self.detector.num_probes());
+        self.planned = k;
+    }
+
+    fn planned_steps(&self) -> usize {
+        self.planned
+    }
+
+    fn step_cost(&self, j: usize) -> OpCost {
+        probe_cost(j)
+    }
+
+    fn execute_step(&mut self, j: usize) {
+        debug_assert_eq!(j, self.powers.len(), "refinement steps run in order");
+        let p = self.detector.probe(&self.window, j);
+        self.powers.push(p);
+    }
+
+    fn state_words(&self, j: usize) -> u64 {
+        // Window samples (128 × 16-bit) + two words per completed probe
+        // + running argmax and bookkeeping.
+        128 + 2 * j as u64 + 8
+    }
+
+    fn war_words(&self, _j: usize) -> u64 {
+        // The running best-probe accumulator is read-modify-write.
+        4
+    }
+
+    fn emit_cost(&self) -> OpCost {
+        OpCost { cycles: 900, ble_bytes: 2, ..Default::default() }
+    }
+
+    fn output(&self) -> AudioOutput {
+        AudioOutput {
+            predicted: self.detector.classify(&self.powers),
+            truth: self.truth,
+            probes_used: self.powers.len(),
+        }
+    }
+
+    fn reset_round(&mut self) {
+        self.powers.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::audio::stream::labelled_windows;
+    use crate::audio::{NUM_AUDIO_CLASSES, NUM_PROBES};
+
+    fn program_on_list(per_class: usize, seed: u64) -> AudioProgram {
+        AudioProgram::new(
+            SpectralDetector::paper_default(),
+            AudioSource::List(labelled_windows(per_class, seed)),
+        )
+    }
+
+    #[test]
+    fn program_runs_a_full_round() {
+        let mut prog = program_on_list(1, 4);
+        assert!(prog.load_next(0.0));
+        assert_eq!(prog.num_steps(), NUM_PROBES);
+        prog.plan(20);
+        for j in 0..20 {
+            prog.execute_step(j);
+        }
+        let out = prog.output();
+        assert_eq!(out.probes_used, 20);
+        assert!(out.predicted < NUM_AUDIO_CLASSES);
+    }
+
+    #[test]
+    fn full_execution_matches_direct_classification() {
+        let windows = labelled_windows(2, 9);
+        let detector = SpectralDetector::paper_default();
+        let mut prog = AudioProgram::new(
+            detector.clone(),
+            AudioSource::List(windows.clone()),
+        );
+        for w in &windows {
+            assert!(prog.load_next(0.0));
+            for j in 0..prog.num_steps() {
+                prog.execute_step(j);
+            }
+            let out = prog.output();
+            assert_eq!(out.predicted, detector.classify_with(&w.samples, NUM_PROBES));
+            assert_eq!(out.predicted, w.label, "full resolution is exact");
+            assert_eq!(out.truth, w.label);
+        }
+        // The list source exhausts.
+        assert!(!prog.load_next(0.0));
+    }
+
+    #[test]
+    fn reset_round_clears_partial_state() {
+        let mut prog = program_on_list(1, 2);
+        assert!(prog.load_next(0.0));
+        prog.execute_step(0);
+        assert_eq!(prog.output().probes_used, 1);
+        prog.reset_round();
+        assert_eq!(prog.output().probes_used, 0);
+        assert_eq!(prog.output().predicted, 0, "no probes → silence");
+    }
+
+    #[test]
+    fn script_source_loads_time_dependent_windows() {
+        let script = AudioScript::generate(3600.0, 3);
+        let truth_at_500 = script.class_at(500.0);
+        let mut prog = AudioProgram::new(
+            SpectralDetector::paper_default(),
+            AudioSource::Script(script),
+        );
+        assert!(prog.load_next(500.0));
+        assert_eq!(prog.output().truth, truth_at_500);
+        // Script sources never exhaust.
+        assert!(prog.load_next(2e6));
+    }
+
+    #[test]
+    fn smart_table_monotone_and_priced() {
+        let mcu = McuModel::paper_default();
+        let detector = SpectralDetector::paper_default();
+        let table = smart_table(&detector, &mcu);
+        assert_eq!(table.expected_accuracy.len(), NUM_PROBES + 1);
+        assert!((table.expected_accuracy[NUM_PROBES] - 1.0).abs() < 1e-12);
+        for p in 1..=NUM_PROBES {
+            assert!(table.cumulative_energy[p] > table.cumulative_energy[p - 1]);
+        }
+        // A 50% bound needs strictly fewer probes than a 90% bound.
+        let p50 = table.min_features_for(0.50).unwrap();
+        let p90 = table.min_features_for(0.90).unwrap();
+        assert!(p50 < p90, "p50={p50} p90={p90}");
+        // Tier arithmetic: 60% needs five detectable classes, and the
+        // fifth event bin (22) is probe index 20 → 21 completed steps.
+        assert_eq!(table.min_features_for(0.60), Some(21));
+    }
+
+    #[test]
+    fn pipeline_energy_in_the_anytime_regime() {
+        // The full refinement must cost a substantial fraction of one
+        // buffer charge (≈ 4.2 mJ usable), so the knob actually bites.
+        let prog = program_on_list(1, 1);
+        let mcu = McuModel::paper_default();
+        let total = prog.energy_profile(&mcu).total();
+        assert!(
+            (1e-3..4e-3).contains(&total),
+            "full refinement costs {total} J"
+        );
+    }
+}

@@ -1,0 +1,249 @@
+//! The anytime spectral detector: coarse-to-fine Goertzel probes plus a
+//! threshold classifier.
+//!
+//! ## Refinement schedule
+//!
+//! The 128-point spectrum of a window has 63 usable interior bins
+//! (`1..=63`; DC and Nyquist are excluded — a real sinusoid at the
+//! Nyquist bin has phase-dependent energy). [`probe_schedule`] orders
+//! them coarse-to-fine:
+//!
+//! | tier | probes | bins | cumulative steps |
+//! |---|---|---|---|
+//! | 0 | multiples of 8 | 8, 16, ..., 56 | 7 |
+//! | 1 | remaining multiples of 4 | 4, 12, ..., 60 | 15 |
+//! | 2 | remaining multiples of 2 | 2, 6, ..., 62 | 31 |
+//! | 3 | odd bins | 1, 3, ..., 63 | 63 |
+//!
+//! Tier 0 is the coarse 8-band survey of the band; each later tier
+//! halves the spectral stride until every bin of the full spectrum has
+//! been probed. The tone bins of the event classes
+//! ([`crate::audio::EVENT_BINS`]) are spread across the tiers, so every
+//! tier makes new classes separable.
+//!
+//! ## Why accuracy is monotone in completed steps
+//!
+//! The synthetic streams ([`super::stream`]) build windows as bounded
+//! uniform noise (amplitude ≤ [`NOISE_AMP`]) plus, for event windows, a
+//! sinusoid at an exact integer bin with amplitude ≥ [`MIN_TONE_AMP`].
+//! Two deterministic bounds follow for any window:
+//!
+//! * a noise-only probe can never exceed the detection threshold:
+//!   `|X[k]| ≤ Σ|xᵢ| ≤ N·NOISE_AMP = 6.4`, power ≤ 41 <
+//!   [`DETECT_POWER_THRESHOLD`];
+//! * the tone's own bin always exceeds it: `|X[b]| ≥ A·N/2 − N·NOISE_AMP
+//!   ≥ 38.4`, power ≥ 1474 — and an integer-bin sinusoid contributes
+//!   *zero* to every other integer bin (DFT orthogonality), so no other
+//!   probe can outrank it.
+//!
+//! Hence a window is classified correctly exactly when its tone bin has
+//! been probed (silence windows are correct at every prefix), and the
+//! probe set only grows — per-window correctness is monotone in the
+//! step count, so detection accuracy over any stream is monotonically
+//! non-decreasing in completed refinement steps.
+
+use crate::audio::stream::AudioWindow;
+use crate::audio::{EVENT_BINS, NUM_AUDIO_CLASSES, NUM_PROBES};
+use crate::util::dsp::goertzel_power;
+
+/// Amplitude bound of the ambient noise in the synthetic streams.
+pub const NOISE_AMP: f64 = 0.05;
+
+/// Minimum tone amplitude an event window carries.
+pub const MIN_TONE_AMP: f64 = 0.7;
+
+/// Power threshold separating "a tone lives in this bin" from noise.
+/// Sits a factor ~6 above the worst-case noise power (41) and a factor
+/// ~5.7 below the worst-case tone power (1474) — see the module docs.
+pub const DETECT_POWER_THRESHOLD: f64 = 256.0;
+
+/// The coarse-to-fine probe order over the interior bins `1..=63`.
+pub fn probe_schedule() -> Vec<usize> {
+    let mut order = Vec::with_capacity(NUM_PROBES);
+    // Tier 0: stride 8 (the 8-band survey).
+    order.extend((1..8).map(|i| 8 * i));
+    // Tier 1: stride 4, skipping tier-0 bins.
+    order.extend((0..8).map(|i| 4 + 8 * i));
+    // Tier 2: stride 2, skipping coarser tiers.
+    order.extend((0..16).map(|i| 2 + 4 * i));
+    // Tier 3: the odd bins — full single-bin resolution.
+    order.extend((0..32).map(|i| 1 + 2 * i));
+    debug_assert_eq!(order.len(), NUM_PROBES);
+    order
+}
+
+/// The anytime detector: probe order plus the detection threshold.
+#[derive(Clone, Debug)]
+pub struct SpectralDetector {
+    /// Probe bins in refinement order (step `j` probes `schedule[j]`).
+    pub schedule: Vec<usize>,
+    /// Power threshold of the classifier.
+    pub threshold: f64,
+}
+
+impl SpectralDetector {
+    pub fn paper_default() -> SpectralDetector {
+        SpectralDetector { schedule: probe_schedule(), threshold: DETECT_POWER_THRESHOLD }
+    }
+
+    /// Number of refinement steps a precise execution runs.
+    pub fn num_probes(&self) -> usize {
+        self.schedule.len()
+    }
+
+    /// Execute refinement step `j`: the Goertzel band-energy pass at the
+    /// step's probe bin.
+    pub fn probe(&self, window: &[f64], j: usize) -> f64 {
+        goertzel_power(window, self.schedule[j])
+    }
+
+    /// Threshold classification from the probes completed so far
+    /// (`powers[j]` is the step-`j` probe). Returns the event class, or
+    /// 0 when no probe crosses the threshold.
+    pub fn classify(&self, powers: &[f64]) -> usize {
+        let mut best: Option<(usize, f64)> = None;
+        for (j, &p) in powers.iter().enumerate() {
+            let better = match best {
+                None => p >= self.threshold,
+                Some((_, bp)) => p >= self.threshold && p > bp,
+            };
+            if better {
+                best = Some((self.schedule[j], p));
+            }
+        }
+        match best {
+            None => 0,
+            Some((bin, _)) => {
+                EVENT_BINS.iter().position(|&b| b == bin).map_or(0, |i| i + 1)
+            }
+        }
+    }
+
+    /// Convenience: classify a window using exactly `p` refinement steps.
+    pub fn classify_with(&self, window: &[f64], p: usize) -> usize {
+        let p = p.min(self.num_probes());
+        let powers: Vec<f64> = (0..p).map(|j| self.probe(window, j)).collect();
+        self.classify(&powers)
+    }
+
+    /// Expected detection accuracy per completed step count under a
+    /// uniform class prior: `out[p] = (1 + detectable(p)) / 9`, where
+    /// `detectable(p)` counts event bins among the first `p` probes.
+    /// This is the offline curve SMART's lookup table is built from
+    /// (the audio twin of the Eq. 7 analysis).
+    pub fn expected_accuracy(&self) -> Vec<f64> {
+        let mut out = Vec::with_capacity(self.num_probes() + 1);
+        let mut detectable = 0usize;
+        out.push(1.0 / NUM_AUDIO_CLASSES as f64);
+        for &bin in &self.schedule {
+            if EVENT_BINS.contains(&bin) {
+                detectable += 1;
+            }
+            out.push((1 + detectable) as f64 / NUM_AUDIO_CLASSES as f64);
+        }
+        out
+    }
+
+    /// Measured detection accuracy for each prefix length in `ps` over a
+    /// labelled window set (the audio twin of
+    /// [`crate::svm::anytime::AnytimeSvm::accuracy_curve`]).
+    pub fn accuracy_curve(&self, windows: &[AudioWindow], ps: &[usize]) -> Vec<f64> {
+        let mut correct = vec![0usize; ps.len()];
+        for w in windows {
+            let powers: Vec<f64> =
+                (0..self.num_probes()).map(|j| self.probe(&w.samples, j)).collect();
+            for (pi, &p) in ps.iter().enumerate() {
+                if self.classify(&powers[..p.min(powers.len())]) == w.label {
+                    correct[pi] += 1;
+                }
+            }
+        }
+        correct.iter().map(|&c| c as f64 / windows.len().max(1) as f64).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::audio::stream::labelled_windows;
+
+    #[test]
+    fn schedule_covers_every_interior_bin_once() {
+        let order = probe_schedule();
+        assert_eq!(order.len(), NUM_PROBES);
+        let mut sorted = order.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (1..=63).collect::<Vec<_>>());
+        // Coarse-to-fine: the first tier is the stride-8 survey.
+        assert_eq!(&order[..7], &[8, 16, 24, 32, 40, 48, 56]);
+    }
+
+    #[test]
+    fn event_bins_spread_across_all_tiers() {
+        let order = probe_schedule();
+        let pos = |bin: usize| order.iter().position(|&b| b == bin).unwrap();
+        // Two classes resolve per tier (cumulative steps 7/15/31/63).
+        let tiers = [0..7, 7..15, 15..31, 31..63];
+        for (i, tier) in tiers.iter().enumerate() {
+            let n = EVENT_BINS.iter().filter(|&&b| tier.contains(&pos(b))).count();
+            assert_eq!(n, 2, "tier {i} holds {n} event bins");
+        }
+    }
+
+    #[test]
+    fn expected_accuracy_is_monotone_from_chance_to_one() {
+        let d = SpectralDetector::paper_default();
+        let acc = d.expected_accuracy();
+        assert_eq!(acc.len(), NUM_PROBES + 1);
+        assert!((acc[0] - 1.0 / 9.0).abs() < 1e-12);
+        assert!((acc[NUM_PROBES] - 1.0).abs() < 1e-12);
+        for p in 1..acc.len() {
+            assert!(acc[p] >= acc[p - 1], "expected accuracy dipped at {p}");
+        }
+        // Tier boundaries: 3/9, 5/9, 7/9, 9/9.
+        for (steps, want) in [(7usize, 3.0), (15, 5.0), (31, 7.0), (63, 9.0)] {
+            assert!((acc[steps] - want / 9.0).abs() < 1e-12, "steps {steps}");
+        }
+    }
+
+    #[test]
+    fn measured_accuracy_matches_the_analytic_curve() {
+        let d = SpectralDetector::paper_default();
+        let windows = labelled_windows(4, 0xA0D10);
+        let ps: Vec<usize> = (0..=NUM_PROBES).collect();
+        let measured = d.accuracy_curve(&windows, &ps);
+        let expected = d.expected_accuracy();
+        // The deterministic margins make the analytic curve exact on a
+        // class-balanced window set.
+        for p in 0..=NUM_PROBES {
+            assert!(
+                (measured[p] - expected[p]).abs() < 1e-12,
+                "p={p}: measured {} expected {}",
+                measured[p],
+                expected[p]
+            );
+        }
+    }
+
+    #[test]
+    fn full_resolution_is_perfect_on_labelled_streams() {
+        let d = SpectralDetector::paper_default();
+        for w in labelled_windows(3, 7) {
+            assert_eq!(d.classify_with(&w.samples, NUM_PROBES), w.label);
+        }
+    }
+
+    #[test]
+    fn noise_never_crosses_the_threshold() {
+        let d = SpectralDetector::paper_default();
+        for w in labelled_windows(6, 99).iter().filter(|w| w.label == 0) {
+            let worst = (0..NUM_PROBES)
+                .map(|j| d.probe(&w.samples, j))
+                .fold(0.0f64, f64::max);
+            assert!(
+                worst < DETECT_POWER_THRESHOLD,
+                "noise probe reached {worst}"
+            );
+        }
+    }
+}

@@ -6,6 +6,7 @@
 //! system *throughput* (results per unit time, reported normalised);
 //! and *latency* in power cycles between acquisition and emission.
 
+use crate::audio::app::AudioOutput;
 use crate::exec::{Campaign, RoundResult};
 use crate::har::app::HarOutput;
 use crate::imgproc::app::CornerOutput;
@@ -48,23 +49,36 @@ pub fn harris_reference(picture: Picture, seed: u64, size: usize) -> Arc<Vec<Cor
     )
 }
 
-/// Classification accuracy over emitted results.
-pub fn har_accuracy(campaign: &Campaign<HarOutput>) -> f64 {
+/// Fraction of a campaign's emitted outputs satisfying `correct` — the
+/// quality kernel every workload's accuracy/equivalence metric shares
+/// (empty campaigns report 0.0).
+fn emitted_fraction<O>(campaign: &Campaign<O>, correct: impl Fn(&O) -> bool) -> f64 {
     let mut total = 0usize;
-    let mut correct = 0usize;
+    let mut ok = 0usize;
     for r in campaign.emitted() {
         if let Some(out) = &r.output {
             total += 1;
-            if out.predicted == out.truth as usize {
-                correct += 1;
+            if correct(out) {
+                ok += 1;
             }
         }
     }
     if total == 0 {
         0.0
     } else {
-        correct as f64 / total as f64
+        ok as f64 / total as f64
     }
+}
+
+/// Classification accuracy over emitted results.
+pub fn har_accuracy(campaign: &Campaign<HarOutput>) -> f64 {
+    emitted_fraction(campaign, |out| out.predicted == out.truth as usize)
+}
+
+/// Detection accuracy over emitted audio rounds (predicted event class
+/// against the scene ground truth the output carries).
+pub fn audio_accuracy(campaign: &Campaign<AudioOutput>) -> f64 {
+    emitted_fraction(campaign, |out| out.predicted == out.truth)
 }
 
 /// Align two campaigns' emitted rounds by sampling slot and report the
@@ -170,22 +184,10 @@ pub fn corner_equivalence_by_picture(
 /// the unperforated reference for the same picture. Reference detections
 /// are cached per (picture, seed).
 pub fn corner_equivalence_fraction(campaign: &Campaign<CornerOutput>, size: usize) -> f64 {
-    let mut total = 0usize;
-    let mut ok = 0usize;
-    for r in campaign.emitted() {
-        if let Some(out) = &r.output {
-            let reference = harris_reference(out.picture, out.picture_seed, size);
-            total += 1;
-            if equivalent(&reference, &out.corners) {
-                ok += 1;
-            }
-        }
-    }
-    if total == 0 {
-        0.0
-    } else {
-        ok as f64 / total as f64
-    }
+    emitted_fraction(campaign, |out| {
+        let reference = harris_reference(out.picture, out.picture_seed, size);
+        equivalent(&reference, &out.corners)
+    })
 }
 
 #[cfg(test)]

@@ -6,7 +6,8 @@
 //! * [`experiment`] — the [`experiment::Workload`] abstraction (how a
 //!   workload builds its program, harvester, and SMART table) and the
 //!   generic [`experiment::run_campaign_on`] driver behind every grid
-//!   cell, plus the HAR/imaging workloads and their training context.
+//!   cell, plus the HAR/imaging/audio workloads and the HAR training
+//!   context.
 //! * [`scenario`] — the declarative sweep API: a serialisable
 //!   [`scenario::Scenario`] (workload × harvesters × devices × policies
 //!   × seeds + projection) expands into a deterministic job plan; every

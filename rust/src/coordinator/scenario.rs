@@ -24,8 +24,10 @@
 //! (`to_json_string` → [`Scenario::parse`] → identical plan), which is
 //! what makes scenario files a stable interchange format.
 
+use crate::audio::app::AudioOutput;
 use crate::coordinator::experiment::{
-    run_campaign_on, HarContext, HarRunSpec, HarWorkload, ImgRunSpec, ImgWorkload,
+    run_campaign_on, AudioRunSpec, AudioWorkload, HarContext, HarRunSpec, HarWorkload,
+    ImgRunSpec, ImgWorkload,
 };
 use crate::coordinator::fleet::run_fleet;
 use crate::coordinator::metrics;
@@ -199,6 +201,8 @@ pub enum WorkloadSpec {
     Har,
     /// Harris imaging campaigns: seeds are trace/picture realisations.
     Img,
+    /// Anytime acoustic event detection: seeds are event scripts.
+    Audio,
     /// Fig. 4 offline analysis: expected vs measured accuracy per
     /// anytime prefix length.
     AccuracyCurve { ps: Vec<usize> },
@@ -208,13 +212,14 @@ pub enum WorkloadSpec {
 
 impl WorkloadSpec {
     pub fn is_campaign(&self) -> bool {
-        matches!(self, WorkloadSpec::Har | WorkloadSpec::Img)
+        matches!(self, WorkloadSpec::Har | WorkloadSpec::Img | WorkloadSpec::Audio)
     }
 
     fn to_json(&self) -> Value {
         match self {
             WorkloadSpec::Har => "har".into(),
             WorkloadSpec::Img => "img".into(),
+            WorkloadSpec::Audio => "audio".into(),
             WorkloadSpec::AccuracyCurve { ps } => Value::obj(vec![
                 ("kind", "accuracy-curve".into()),
                 ("ps", Value::Arr(ps.iter().map(|&p| Value::Num(p as f64)).collect())),
@@ -232,7 +237,10 @@ impl WorkloadSpec {
             return match s {
                 "har" => Ok(WorkloadSpec::Har),
                 "img" => Ok(WorkloadSpec::Img),
-                _ => Err(format!("unknown workload '{s}' (expected har|img or an object)")),
+                "audio" => Ok(WorkloadSpec::Audio),
+                _ => {
+                    Err(format!("unknown workload '{s}' (expected har|img|audio or an object)"))
+                }
             };
         }
         let obj = v.as_obj().ok_or("workload must be a string or an object")?;
@@ -435,6 +443,9 @@ pub enum Projection {
     ImgThroughput,
     /// Fig. 15: imaging latency per trace.
     ImgLatency,
+    /// Audio: per-policy detection accuracy, refinement depth and
+    /// latency summary.
+    AudioSummary,
 }
 
 impl Projection {
@@ -451,6 +462,7 @@ impl Projection {
             Projection::ImgEquivalence => "img-equivalence",
             Projection::ImgThroughput => "img-throughput",
             Projection::ImgLatency => "img-latency",
+            Projection::AudioSummary => "audio-summary",
         }
     }
 
@@ -467,6 +479,7 @@ impl Projection {
             Projection::ImgEquivalence,
             Projection::ImgThroughput,
             Projection::ImgLatency,
+            Projection::AudioSummary,
         ]
         .into_iter()
         .find(|p| p.name() == s)
@@ -512,7 +525,7 @@ impl Scenario {
     pub fn new(name: &str, workload: WorkloadSpec) -> Scenario {
         let (horizon, sample_period, harvesters) = match &workload {
             WorkloadSpec::Har => (4.0 * 3600.0, 60.0, vec![HarvesterSpec::Kinetic]),
-            WorkloadSpec::Img => (
+            WorkloadSpec::Img | WorkloadSpec::Audio => (
                 2.0 * 3600.0,
                 30.0,
                 TraceKind::ALL.iter().map(|&k| HarvesterSpec::Ambient(k)).collect(),
@@ -628,7 +641,7 @@ impl Scenario {
     /// ▸ seeds). A pure function of the spec.
     pub fn plan(&self) -> JobPlan {
         match &self.workload {
-            WorkloadSpec::Har | WorkloadSpec::Img => {
+            WorkloadSpec::Har | WorkloadSpec::Img | WorkloadSpec::Audio => {
                 let mut cells = Vec::new();
                 for &harvester in &self.harvesters {
                     for &device in &self.devices {
@@ -700,6 +713,17 @@ impl Scenario {
                         trace_seed: cell.seed,
                     };
                     let workload = ImgWorkload { spec, harvester: cell.harvester };
+                    run_campaign_on(&workload, cell.seed, cell.policy, &cell.device)
+                }))
+            }
+            (WorkloadSpec::Audio, JobPlan::Campaigns(cells)) => {
+                GridData::Audio(run_fleet(cells, workers, |cell| {
+                    let spec = AudioRunSpec {
+                        horizon: s.horizon,
+                        sample_period: s.sample_period,
+                        stream_seed: cell.seed,
+                    };
+                    let workload = AudioWorkload { spec, harvester: cell.harvester };
                     run_campaign_on(&workload, cell.seed, cell.policy, &cell.device)
                 }))
             }
@@ -895,6 +919,7 @@ impl Scenario {
             WorkloadSpec::Img => {
                 matches!(self.projection, Cells | ImgEquivalence | ImgThroughput | ImgLatency)
             }
+            WorkloadSpec::Audio => matches!(self.projection, Cells | AudioSummary),
             WorkloadSpec::AccuracyCurve { .. } => {
                 matches!(self.projection, Cells | AccuracyCurve)
             }
@@ -1041,10 +1066,25 @@ pub struct ImgTraceRow {
     pub chinchilla_latency_mean: f64,
 }
 
+/// Audio summary row — one policy summarised over every (harvester,
+/// device, seed) unit: detection accuracy, throughput against the
+/// continuous ceiling (0 when the grid omits it), refinement depth and
+/// delivery latency.
+#[derive(Clone, Debug)]
+pub struct AudioPolicyRow {
+    pub policy: Policy,
+    pub accuracy: f64,
+    pub throughput_vs_continuous: f64,
+    pub mean_probes: f64,
+    pub same_cycle_fraction: f64,
+    pub mean_latency_cycles: f64,
+}
+
 /// The campaigns (or analysis rows) a sweep produced, in plan order.
 pub enum GridData {
     Har(Vec<Campaign<HarOutput>>),
     Img(Vec<Campaign<CornerOutput>>),
+    Audio(Vec<Campaign<AudioOutput>>),
     Accuracy(Vec<Fig4Row>),
     Perforation(Vec<Fig12Row>),
 }
@@ -1073,6 +1113,13 @@ impl SweepRun {
         match &self.grid {
             GridData::Img(c) => c,
             _ => panic!("scenario '{}' did not produce an imaging grid", self.scenario.name),
+        }
+    }
+
+    pub fn audio_campaigns(&self) -> &[Campaign<AudioOutput>] {
+        match &self.grid {
+            GridData::Audio(c) => c,
+            _ => panic!("scenario '{}' did not produce an audio grid", self.scenario.name),
         }
     }
 
@@ -1174,6 +1221,42 @@ impl SweepRun {
                         } else {
                             c.state_energy / total
                         }
+                    }),
+                }
+            })
+            .collect()
+    }
+
+    /// Audio — per-policy detection accuracy/latency summary over every
+    /// unit; throughput aligns pairwise on the unit against continuous.
+    pub fn audio_policy_rows(&self) -> Vec<AudioPolicyRow> {
+        let sc = &self.scenario;
+        let campaigns = self.audio_campaigns();
+        let units = self.unit_count();
+        let cont = self.policy_index(Policy::Continuous);
+        let at = |p: usize, u: usize| &campaigns[self.campaign_of(p, u)];
+        sc.policies
+            .iter()
+            .enumerate()
+            .map(|(i, &policy)| {
+                let per_unit = |f: &dyn Fn(usize) -> f64| mean((0..units).map(f));
+                AudioPolicyRow {
+                    policy,
+                    accuracy: per_unit(&|u| metrics::audio_accuracy(at(i, u))),
+                    throughput_vs_continuous: match cont {
+                        Some(c) => {
+                            per_unit(&|u| metrics::throughput_ratio(at(i, u), at(c, u)))
+                        }
+                        None => 0.0,
+                    },
+                    mean_probes: per_unit(&|u| {
+                        mean(at(i, u).emitted().map(|r| r.steps_executed as f64))
+                    }),
+                    same_cycle_fraction: per_unit(&|u| {
+                        metrics::same_cycle_fraction(at(i, u))
+                    }),
+                    mean_latency_cycles: per_unit(&|u| {
+                        mean(at(i, u).emitted().map(|r| r.latency_cycles as f64))
                     }),
                 }
             })
@@ -1410,10 +1493,33 @@ impl SweepRun {
                 }
                 vec![t]
             }
+            Projection::AudioSummary => {
+                let mut t = TableData::new(
+                    name,
+                    title,
+                    &[
+                        "policy", "accuracy", "thrpt vs continuous", "mean probes",
+                        "same cycle", "mean latency (cycles)",
+                    ],
+                );
+                for r in self.audio_policy_rows() {
+                    t.push(vec![
+                        r.policy.name(),
+                        pct(r.accuracy),
+                        pct(r.throughput_vs_continuous),
+                        f2(r.mean_probes),
+                        pct(r.same_cycle_fraction),
+                        f2(r.mean_latency_cycles),
+                    ]);
+                }
+                vec![t]
+            }
             Projection::Cells => match &self.grid {
                 GridData::Accuracy(_) => vec![self.accuracy_table(name, title)],
                 GridData::Perforation(_) => vec![self.perforation_table(name, title)],
-                GridData::Har(_) | GridData::Img(_) => vec![self.cells_table(name, title)],
+                GridData::Har(_) | GridData::Img(_) | GridData::Audio(_) => {
+                    vec![self.cells_table(name, title)]
+                }
             },
         }
     }
@@ -1505,6 +1611,20 @@ impl SweepRun {
                     );
                 }
             }
+            GridData::Audio(campaigns) => {
+                for (cell, c) in cells.iter().zip(campaigns) {
+                    push(
+                        cell,
+                        c.emitted().count(),
+                        c.power_cycles,
+                        c.power_failures,
+                        metrics::audio_accuracy(c),
+                        metrics::same_cycle_fraction(c),
+                        c.app_energy,
+                        c.state_energy,
+                    );
+                }
+            }
             _ => unreachable!("cells_table is only called on campaign grids"),
         }
         t
@@ -1577,9 +1697,24 @@ pub fn latency_policies() -> Vec<Policy> {
     vec![Policy::Greedy, Policy::Smart { bound: 0.80 }, Policy::Chinchilla, Policy::Alpaca]
 }
 
-/// Every figure the `aic` CLI knows by name.
-pub const BUILTIN_NAMES: [&str; 10] =
-    ["fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig12", "fig13", "fig14", "fig15"];
+/// The five policies the audio grids compare (the committed
+/// `examples/scenarios/audio_ambient.json` runs the same set).
+pub fn audio_policies() -> Vec<Policy> {
+    vec![
+        Policy::Continuous,
+        Policy::Chinchilla,
+        Policy::Alpaca,
+        Policy::Greedy,
+        Policy::Smart { bound: 0.80 },
+    ]
+}
+
+/// Every figure the `aic` CLI knows by name, plus the audio grid (not a
+/// paper figure — the third workload's builtin scenario).
+pub const BUILTIN_NAMES: [&str; 11] = [
+    "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig12", "fig13", "fig14", "fig15",
+    "audio",
+];
 
 /// The named figure scenarios. `seed` is the CLI base seed: it seeds HAR
 /// training and is the single trace realisation of the imaging figures.
@@ -1666,6 +1801,16 @@ pub fn builtin(name: &str, seed: u64) -> Option<Scenario> {
             "Fig. 15 — latency to produce the corner output (power cycles)",
             Projection::ImgLatency,
         ),
+        "audio" => Scenario::new("audio", WorkloadSpec::Audio)
+            .with_title("Audio — anytime acoustic event detection on the five ambient traces")
+            .with_policies(audio_policies())
+            .with_seeds(vec![seed, seed.wrapping_add(1)])
+            .with_fast(FastMode {
+                horizon: Some(900.0),
+                max_seeds: Some(1),
+                ..FastMode::none()
+            })
+            .with_projection(Projection::AudioSummary),
         _ => return None,
     })
 }
@@ -1683,6 +1828,47 @@ mod tests {
         let img = Scenario::new("i", WorkloadSpec::Img);
         assert_eq!(img.harvesters.len(), 5);
         assert_eq!(img.sample_period, 30.0);
+        let audio = Scenario::new("a", WorkloadSpec::Audio);
+        assert_eq!(audio.harvesters.len(), 5);
+        assert_eq!(audio.sample_period, 30.0);
+        assert_eq!(audio.horizon, 2.0 * 3600.0);
+    }
+
+    #[test]
+    fn audio_projections_fit_the_workload() {
+        let ok = Scenario::new("a", WorkloadSpec::Audio)
+            .with_projection(Projection::AudioSummary);
+        ok.validate().expect("audio-summary fits audio");
+        let bad = Scenario::new("a", WorkloadSpec::Audio)
+            .with_projection(Projection::PolicyAccuracy);
+        assert!(bad.validate().is_err(), "HAR projection must not fit audio");
+        let har_bad =
+            Scenario::new("h", WorkloadSpec::Har).with_projection(Projection::AudioSummary);
+        assert!(har_bad.validate().is_err(), "audio projection must not fit HAR");
+    }
+
+    #[test]
+    fn audio_projections_render_one_row_per_cell_and_policy() {
+        let sc = Scenario::new("mini-audio", WorkloadSpec::Audio)
+            .with_policies(vec![Policy::Greedy, Policy::Continuous])
+            .with_harvesters(vec![HarvesterSpec::Ambient(TraceKind::Som)])
+            .with_seeds(vec![1, 2])
+            .with_horizon(600.0);
+        let run = sc.run(false);
+        let cells = run.tables();
+        assert_eq!(cells.len(), 1);
+        assert_eq!(cells[0].rows.len(), 4, "one row per (policy, seed) cell");
+        assert_eq!(cells[0].rows[0][0], "SOM");
+        assert_eq!(cells[0].rows[0][2], "greedy");
+        let summary = sc.with_projection(Projection::AudioSummary).run(false);
+        let tables = summary.tables();
+        assert_eq!(tables[0].rows.len(), 2, "one summary row per policy");
+        // The continuous ceiling runs every probe; greedy is normalised
+        // against it on the same unit.
+        let rows = summary.audio_policy_rows();
+        let cont = rows.iter().find(|r| r.policy == Policy::Continuous).unwrap();
+        assert!((cont.mean_probes - 63.0).abs() < 1e-9);
+        assert!(cont.accuracy > 0.99, "full refinement is exact");
     }
 
     #[test]

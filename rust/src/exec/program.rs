@@ -1,20 +1,21 @@
 //! The step-program model.
 //!
-//! Both applications — HAR classification and Harris corner detection —
-//! are expressed as a sequence of atomic *steps* with per-step cost
-//! vectors. The approximation knob of the paper (Fig. 10) maps onto the
-//! model uniformly:
+//! All three applications — HAR classification, Harris corner detection
+//! and acoustic event detection — are expressed as a sequence of atomic
+//! *steps* with per-step cost vectors. The approximation knob of the
+//! paper (Fig. 10) maps onto the model uniformly:
 //!
-//! | | Anytime SVM | Loop perforation |
-//! |---|---|---|
-//! | knob | number of features | loop iterations |
-//! | energy estimation | single feature | single loop iteration |
-//! | output | activity class | number/position of corners |
+//! | | Anytime SVM | Loop perforation | Spectral refinement |
+//! |---|---|---|---|
+//! | knob | number of features | loop iterations | spectral probes |
+//! | energy estimation | single feature | single loop iteration | single Goertzel pass |
+//! | output | activity class | number/position of corners | event class |
 //!
 //! [`StepProgram::plan`] selects how many steps the current round will run
-//! (a feature prefix, or a spread subset of loop rows); the runtimes then
-//! execute planned steps one at a time, each atomically charged to the
-//! capacitor by the engine.
+//! (a feature prefix, a spread subset of loop rows, or a probe prefix of
+//! the coarse-to-fine refinement schedule); the runtimes then execute
+//! planned steps one at a time, each atomically charged to the capacitor
+//! by the engine.
 
 use crate::energy::mcu::OpCost;
 

@@ -19,7 +19,8 @@
 //!   [`exec::Runtime`] trait, the energy substrate, the GREEDY/SMART
 //!   approximate runtimes and the Chinchilla / Alpaca / continuous
 //!   baselines, the application pipelines (human activity recognition,
-//!   embedded image processing), the PJRT runtime that loads the AOT
+//!   embedded image processing, anytime acoustic event detection), the
+//!   PJRT runtime that loads the AOT
 //!   artifacts for accelerated batch replay (behind the `pjrt` feature),
 //!   and the declarative scenario coordinator + fleet that regenerate
 //!   every figure of the paper and run arbitrary sweep grids
@@ -34,6 +35,7 @@ pub mod exec;
 pub mod svm;
 pub mod har;
 pub mod imgproc;
+pub mod audio;
 pub mod runtime;
 pub mod coordinator;
 

@@ -6,7 +6,7 @@
 //! subcommands inspect the energy traces, check the AOT artifacts
 //! through PJRT, and run free-form single-device simulations.
 
-use aic::coordinator::experiment::{self, HarContext, HarRunSpec, ImgRunSpec};
+use aic::coordinator::experiment::{self, AudioRunSpec, HarContext, HarRunSpec, ImgRunSpec};
 use aic::coordinator::scenario::{builtin, DeviceSpec, HarvesterSpec, Scenario, BUILTIN_NAMES};
 use aic::coordinator::sink::{self, pct, TableData};
 use aic::energy::traces::{generate, TraceKind};
@@ -29,14 +29,18 @@ COMMANDS:
   fig13           corner equivalence per energy trace
   fig14           imaging throughput per energy trace
   fig15           imaging latency distribution per trace
+  audio           anytime acoustic event detection on the five ambient
+                  traces (the third workload's builtin grid)
   all             every figure in sequence
-  sweep FILE      run a scenario file: any workload x harvester x device
-                  x policy x seed grid (also: --scenario FILE); see
-                  examples/scenarios/*.json
+  sweep FILE      run a scenario file: any workload (har|img|audio) x
+                  harvester x device x policy x seed grid (also:
+                  --scenario FILE); see examples/scenarios/*.json
   traces          synthetic energy trace statistics (Fig. 11)
   artifacts-check load + execute every AOT artifact through PJRT
   simulate        one campaign: --policy greedy|smartNN|chinchilla|alpaca|continuous
                   --trace rf|som|sim|sor|sir|kinetic --horizon secs
+                  --workload har|img|audio (default: har on kinetic,
+                  img on ambient traces)
 
 OPTIONS:
   --out DIR       output directory for CSV/JSON (default: out)
@@ -214,53 +218,70 @@ fn run_simulate(args: &Args, seed: u64, engine: Option<EngineKind>) {
     };
     let horizon = args.get_f64("horizon", 3600.0);
     let trace = args.get_or("trace", "kinetic").to_string();
+    // Like --policy: an unknown trace is an error, not a silent
+    // fallback. Parsed once — every workload runs on any supply.
+    let Some(harvester) = HarvesterSpec::from_name(&trace.to_lowercase()) else {
+        eprintln!("error: unknown trace '{trace}' (expected rf|som|sim|sor|sir|kinetic)\n");
+        eprint!("{USAGE}");
+        std::process::exit(2);
+    };
     let device = DeviceSpec { engine, ..DeviceSpec::default() };
-    if trace == "kinetic" {
-        let ctx = HarContext::build(seed ^ 0xC0FFEE);
-        let spec = HarRunSpec { horizon, sample_period: 60.0, script_seed: seed };
-        let c = experiment::run_har_policy_on(
-            &ctx,
-            &spec,
-            HarvesterSpec::Kinetic,
-            policy,
-            &device,
-        );
-        println!(
-            "HAR {}: {} results, {} cycles, {} failures, acc {}, app {:.2} mJ, state {:.2} mJ",
-            policy.name(),
-            c.emitted().count(),
-            c.power_cycles,
-            c.power_failures,
-            pct(aic::coordinator::metrics::har_accuracy(&c)),
-            c.app_energy * 1e3,
-            c.state_energy * 1e3,
-        );
-    } else {
-        // Like --policy: an unknown trace is an error, not a silent Som.
-        let kind = match TraceKind::from_name(&trace) {
-            Some(kind) => kind,
-            None => {
-                eprintln!("error: unknown trace '{trace}' (expected rf|som|sim|sor|sir|kinetic)\n");
-                eprint!("{USAGE}");
-                std::process::exit(2);
-            }
-        };
-        let spec = ImgRunSpec { horizon, trace_seed: seed, ..Default::default() };
-        let c = experiment::run_img_policy_on(
-            &spec,
-            HarvesterSpec::Ambient(kind),
-            policy,
-            &device,
-        );
-        println!(
-            "IMG {} on {}: {} results, {} cycles, {} failures, app {:.2} mJ, state {:.2} mJ",
-            policy.name(),
-            kind.name(),
-            c.emitted().count(),
-            c.power_cycles,
-            c.power_failures,
-            c.app_energy * 1e3,
-            c.state_energy * 1e3,
-        );
+    let workload = args
+        .get_or(
+            "workload",
+            if harvester == HarvesterSpec::Kinetic { "har" } else { "img" },
+        )
+        .to_string();
+    match workload.as_str() {
+        "audio" => {
+            let spec = AudioRunSpec { horizon, stream_seed: seed, ..Default::default() };
+            let c = experiment::run_audio_policy_on(&spec, harvester, policy, &device);
+            println!(
+                "AUDIO {} on {}: {} results, {} cycles, {} failures, acc {}, app {:.2} mJ, state {:.2} mJ",
+                policy.name(),
+                harvester.name(),
+                c.emitted().count(),
+                c.power_cycles,
+                c.power_failures,
+                pct(aic::coordinator::metrics::audio_accuracy(&c)),
+                c.app_energy * 1e3,
+                c.state_energy * 1e3,
+            );
+        }
+        "har" => {
+            let ctx = HarContext::build(seed ^ 0xC0FFEE);
+            let spec = HarRunSpec { horizon, sample_period: 60.0, script_seed: seed };
+            let c = experiment::run_har_policy_on(&ctx, &spec, harvester, policy, &device);
+            println!(
+                "HAR {} on {}: {} results, {} cycles, {} failures, acc {}, app {:.2} mJ, state {:.2} mJ",
+                policy.name(),
+                harvester.name(),
+                c.emitted().count(),
+                c.power_cycles,
+                c.power_failures,
+                pct(aic::coordinator::metrics::har_accuracy(&c)),
+                c.app_energy * 1e3,
+                c.state_energy * 1e3,
+            );
+        }
+        "img" => {
+            let spec = ImgRunSpec { horizon, trace_seed: seed, ..Default::default() };
+            let c = experiment::run_img_policy_on(&spec, harvester, policy, &device);
+            println!(
+                "IMG {} on {}: {} results, {} cycles, {} failures, app {:.2} mJ, state {:.2} mJ",
+                policy.name(),
+                harvester.name(),
+                c.emitted().count(),
+                c.power_cycles,
+                c.power_failures,
+                c.app_energy * 1e3,
+                c.state_energy * 1e3,
+            );
+        }
+        _ => {
+            eprintln!("error: unknown workload '{workload}' (expected har|img|audio)\n");
+            eprint!("{USAGE}");
+            std::process::exit(2);
+        }
     }
 }

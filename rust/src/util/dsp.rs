@@ -1,9 +1,11 @@
-//! Digital filter primitives: biquad sections and classic designs.
+//! Digital filter primitives: biquad sections, classic designs, and the
+//! Goertzel single-bin DFT.
 //!
 //! Used by the HAR preprocessing chain (3rd-order Butterworth low-pass at
-//! 20 Hz and the gravity-separation low-pass, §4.2) and by the kinetic
+//! 20 Hz and the gravity-separation low-pass, §4.2), by the kinetic
 //! harvester model (resonant transducer = band-pass around the ReVibe
-//! modelQ's customised resonance frequency).
+//! modelQ's customised resonance frequency), and by the acoustic event
+//! detector's anytime band-energy probes ([`goertzel_power`]).
 
 use std::f64::consts::PI;
 
@@ -128,6 +130,25 @@ impl Cascade {
     }
 }
 
+/// Squared DFT magnitude `|X[k]|²` of `x` at integer bin `k` via the
+/// Goertzel recurrence: one O(N) pass with a single multiply per sample,
+/// no twiddle table — the classic way an MCU evaluates a handful of
+/// spectral bins without paying for a full FFT. Exactly equals the
+/// corresponding bin of [`crate::util::fft::dft_naive`] up to float
+/// rounding.
+pub fn goertzel_power(x: &[f64], k: usize) -> f64 {
+    let n = x.len() as f64;
+    let w = 2.0 * PI * k as f64 / n;
+    let coeff = 2.0 * w.cos();
+    let (mut s1, mut s2) = (0.0f64, 0.0f64);
+    for &xi in x {
+        let s0 = xi + coeff * s1 - s2;
+        s2 = s1;
+        s1 = s0;
+    }
+    s1 * s1 + s2 * s2 - coeff * s1 * s2
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -189,5 +210,41 @@ mod tests {
         c.reset();
         let b = c.filter(&[1.0, 1.0, 1.0]);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn goertzel_matches_naive_dft_power() {
+        let mut rng = crate::util::rng::Rng::new(21);
+        let x: Vec<f64> = (0..128).map(|_| rng.gaussian()).collect();
+        let (re, im) = crate::util::fft::dft_naive(&x);
+        for k in [0usize, 1, 5, 16, 29, 51, 63, 64] {
+            let want = re[k] * re[k] + im[k] * im[k];
+            let got = goertzel_power(&x, k);
+            assert!(
+                (got - want).abs() < 1e-6 * want.max(1.0),
+                "bin {k}: goertzel {got} vs dft {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn goertzel_isolates_integer_bin_tones() {
+        // A real sinusoid at integer bin k contributes zero energy to
+        // every other interior integer bin, for any phase — the
+        // orthogonality the audio detector's deterministic margins rely
+        // on.
+        let n = 128;
+        for phase in [0.0, 0.7, 2.3] {
+            let x: Vec<f64> = (0..n)
+                .map(|i| (2.0 * PI * 22.0 * i as f64 / n as f64 + phase).sin())
+                .collect();
+            let want = (n as f64 / 2.0).powi(2);
+            let on = goertzel_power(&x, 22);
+            assert!((on - want).abs() < 1e-6 * want, "on-bin {on}");
+            for k in [1usize, 21, 23, 40, 63] {
+                let off = goertzel_power(&x, k);
+                assert!(off < 1e-9, "phase {phase}: bin {k} leaked {off}");
+            }
+        }
     }
 }

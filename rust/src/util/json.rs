@@ -134,9 +134,15 @@ impl fmt::Display for ParseError {
 }
 impl std::error::Error for ParseError {}
 
+/// Maximum container nesting the parser accepts. The recursive-descent
+/// parser uses the call stack, so unbounded nesting would turn a hostile
+/// document (`[[[[...`) into a stack overflow — an abort, not an `Err`.
+/// No legitimate document in this repo nests beyond a handful of levels.
+const MAX_DEPTH: usize = 128;
+
 /// Parse a JSON document.
 pub fn parse(input: &str) -> Result<Value, ParseError> {
-    let mut p = Parser { bytes: input.as_bytes(), pos: 0 };
+    let mut p = Parser { bytes: input.as_bytes(), pos: 0, depth: 0 };
     p.skip_ws();
     let v = p.value()?;
     p.skip_ws();
@@ -149,6 +155,8 @@ pub fn parse(input: &str) -> Result<Value, ParseError> {
 struct Parser<'a> {
     bytes: &'a [u8],
     pos: usize,
+    /// Current container nesting (bounded by [`MAX_DEPTH`]).
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -198,12 +206,22 @@ impl<'a> Parser<'a> {
         }
     }
 
+    fn enter(&mut self) -> Result<(), ParseError> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(self.err("nesting too deep"));
+        }
+        Ok(())
+    }
+
     fn object(&mut self) -> Result<Value, ParseError> {
         self.expect(b'{')?;
+        self.enter()?;
         let mut map = BTreeMap::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Value::Obj(map));
         }
         loop {
@@ -218,6 +236,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.pos += 1,
                 Some(b'}') => {
                     self.pos += 1;
+                    self.depth -= 1;
                     return Ok(Value::Obj(map));
                 }
                 _ => return Err(self.err("expected ',' or '}'")),
@@ -227,10 +246,12 @@ impl<'a> Parser<'a> {
 
     fn array(&mut self) -> Result<Value, ParseError> {
         self.expect(b'[')?;
+        self.enter()?;
         let mut items = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Value::Arr(items));
         }
         loop {
@@ -240,6 +261,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.pos += 1,
                 Some(b']') => {
                     self.pos += 1;
+                    self.depth -= 1;
                     return Ok(Value::Arr(items));
                 }
                 _ => return Err(self.err("expected ',' or ']'")),
@@ -321,7 +343,14 @@ impl<'a> Parser<'a> {
             }
         }
         let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
-        text.parse::<f64>().map(Value::Num).map_err(|_| self.err("bad number"))
+        match text.parse::<f64>() {
+            // JSON has no Inf/NaN: a literal that overflows f64 (1e999)
+            // must be an error, not a silent infinity that later leaks
+            // into scenario horizons or energy budgets.
+            Ok(n) if n.is_finite() => Ok(Value::Num(n)),
+            Ok(_) => Err(self.err("number out of range")),
+            Err(_) => Err(self.err("bad number")),
+        }
     }
 }
 
@@ -488,6 +517,30 @@ mod tests {
         assert!(parse("tru").is_err());
         assert!(parse("1 2").is_err());
         assert!(parse("\"unterminated").is_err());
+    }
+
+    #[test]
+    fn rejects_hostile_nesting_without_overflowing() {
+        // Just inside the limit parses; past it errors instead of
+        // blowing the stack.
+        let deep_ok = "[".repeat(100) + &"]".repeat(100);
+        assert!(parse(&deep_ok).is_ok());
+        let deep_bad = "[".repeat(100_000) + &"]".repeat(100_000);
+        assert!(parse(&deep_bad).is_err());
+        let mixed = "[{\"k\":".repeat(50_000) + "1" + &"}]".repeat(50_000);
+        assert!(parse(&mixed).is_err());
+    }
+
+    #[test]
+    fn rejects_non_finite_numbers() {
+        assert!(parse("1e999").is_err());
+        assert!(parse("-1e999").is_err());
+        assert!(parse("NaN").is_err());
+        assert!(parse("Infinity").is_err());
+        assert!(parse("-Infinity").is_err());
+        assert!(parse("{\"x\": 1e400}").is_err());
+        // Ordinary large-but-finite numbers still parse.
+        assert_eq!(parse("1e300").unwrap(), Value::Num(1e300));
     }
 
     #[test]

@@ -1,0 +1,182 @@
+//! Property tests for the analytic engine's energy core, on the in-tree
+//! testkit/rng: the closed-form capacitor threshold crossing must
+//! round-trip against brute-force stepped charging, the booster's warm
+//! output must be monotone in input power, and the supply's piecewise
+//! view (the engine's stepping table) must have non-decreasing prefix
+//! energies and agree with point sampling — each across 1k randomized
+//! (capacitance, threshold, trace-segment) draws.
+
+use aic::energy::booster::Booster;
+use aic::energy::capacitor::Capacitor;
+use aic::energy::harvester::Harvester;
+use aic::energy::traces::PowerTrace;
+use aic::util::testkit::{property, Gen};
+
+/// Random but physical capacitor: C in [100 µF, 10 mF], thresholds
+/// ordered 0 < v_off < v_on <= v_max.
+fn random_capacitor(g: &mut Gen) -> Capacitor {
+    let c = g.f64_in(100e-6..10e-3).max(1e-6);
+    let v_off = g.f64_in(0.5..2.0).max(0.1);
+    let v_on = v_off + g.f64_in(0.2..1.5).max(0.01);
+    let v_max = v_on + g.f64_in(0.0..1.0);
+    Capacitor::new(c, v_max, v_on, v_off)
+}
+
+#[test]
+fn time_to_energy_round_trips_against_stepped_charging() {
+    property("time_to_energy vs stepping", 1000, |g: &mut Gen| {
+        let mut cap = random_capacitor(g);
+        // Start somewhere strictly inside [0, e_max].
+        let e0 = g.f64_in(0.0..1.0).clamp(0.0, 1.0) * cap.max_energy();
+        cap.set_energy(e0);
+        let e0 = cap.energy();
+        // Charge toward boot or drain toward brown-out.
+        let charging = g.bool();
+        let (target, net) = if charging {
+            (cap.boot_energy_level(), g.f64_in(1e-6..5e-3).max(1e-9))
+        } else {
+            (cap.brownout_energy_level(), -g.f64_in(1e-6..5e-3).max(1e-9).abs())
+        };
+        match cap.time_to_energy(target, net) {
+            Some(t) => {
+                assert!(t >= 0.0, "negative crossing time {t}");
+                // Brute-force: step e(t) = e0 + net·t in 1000 strides and
+                // find the first stride that crosses the target.
+                let dt = if t > 0.0 { t / 1000.0 } else { 1e-6 };
+                let mut e = e0;
+                let mut stepped = 0.0;
+                let mut crossed = t == 0.0;
+                for _ in 0..1100 {
+                    if (net > 0.0 && e >= target) || (net < 0.0 && e <= target) {
+                        crossed = true;
+                        break;
+                    }
+                    e += net * dt;
+                    stepped += dt;
+                }
+                assert!(crossed, "stepping never crossed the target");
+                assert!(
+                    (stepped - t).abs() <= dt + 1e-12,
+                    "closed form {t} vs stepped {stepped} (dt {dt})"
+                );
+            }
+            None => {
+                // Unreachable means the gap and the net power disagree
+                // in sign (or the power is zero) — stepping must move
+                // away from (or never toward) the target.
+                let gap = target - e0;
+                assert!(
+                    net == 0.0 || (gap > 0.0) != (net > 0.0) || gap == 0.0,
+                    "closed form said unreachable for gap {gap} at net {net}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn time_to_energy_inverts_exactly_on_the_paper_device() {
+    property("time_to_energy inverse", 1000, |g: &mut Gen| {
+        let mut cap = Capacitor::paper_default();
+        cap.set_voltage(g.f64_in(0.0..3.6).clamp(0.0, 3.6));
+        let e0 = cap.energy();
+        let net = g.f64_in(1e-7..2e-3).max(1e-9);
+        let t = g.f64_in(0.0..1e4).abs();
+        // Where does constant-power charging land after t seconds?
+        let target = (e0 + net * t).min(cap.max_energy());
+        if target > e0 {
+            let got = cap.time_to_energy(target, net).expect("reachable");
+            assert!(
+                (got - (target - e0) / net).abs() <= 1e-9 * (1.0 + got),
+                "inverse broke: {got}"
+            );
+        }
+    });
+}
+
+#[test]
+fn booster_warm_output_is_monotone_in_input_power() {
+    property("warm_output_power monotone", 1000, |g: &mut Gen| {
+        // Random but physical booster: efficiency floor below peak,
+        // positive knee, small quiescent draw.
+        let eta_min = g.f64_in(0.05..0.5).clamp(0.01, 0.5);
+        let booster = Booster {
+            eta_min,
+            eta_max: eta_min + g.f64_in(0.0..0.5).clamp(0.0, 0.5),
+            knee_power: g.f64_in(1e-6..500e-6).max(1e-9),
+            quiescent: g.f64_in(0.0..5e-6).max(0.0),
+            cold_start_power: g.f64_in(0.0..50e-6).max(0.0),
+        };
+        let a = g.f64_in(0.0..10e-3).max(0.0);
+        let b = g.f64_in(0.0..10e-3).max(0.0);
+        let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+        assert!(
+            booster.warm_output_power(lo) <= booster.warm_output_power(hi) + 1e-15,
+            "warm output decreased from p={lo} to p={hi}"
+        );
+        // The warm output is what the engine's stepping table bakes in;
+        // above the cold gate it must not depend on the buffer voltage.
+        for v in [0.06, 1.0, 3.0] {
+            assert_eq!(booster.output_power(hi, v), booster.warm_output_power(hi));
+        }
+    });
+}
+
+/// Random wrapping replay trace (zero-biased, like the RF profile).
+fn random_trace(g: &mut Gen) -> PowerTrace {
+    let n = g.usize_in(2..=200).max(2);
+    let dt = g.f64_in(0.01..0.5).max(0.005);
+    let samples: Vec<f64> = (0..n)
+        .map(|_| if g.bool() { 0.0 } else { g.f64_in(0.0..5e-3).max(0.0) })
+        .collect();
+    PowerTrace { dt, samples }
+}
+
+#[test]
+fn supply_prefix_energies_are_non_decreasing() {
+    property("supply prefix energies", 1000, |g: &mut Gen| {
+        let trace = random_trace(g);
+        let h = Harvester::Replay(trace.clone());
+        let pw = h.piecewise();
+        let booster = Booster::paper_default();
+        // Segment ends strictly increase and tile one period exactly.
+        for i in 1..pw.len() {
+            assert!(pw.ends[i] > pw.ends[i - 1], "segment ends not increasing");
+        }
+        assert!((pw.ends[pw.len() - 1] - pw.period).abs() < 1e-12);
+        // The warm prefix energies the engine's stepping table is built
+        // from never decrease (powers are non-negative).
+        let mut acc = 0.0f64;
+        let mut last = 0.0f64;
+        for i in 0..pw.len() {
+            let p_out = booster.warm_output_power(pw.powers[i]);
+            assert!(p_out >= 0.0);
+            acc += p_out * (pw.ends[i] - pw.start(i));
+            assert!(acc >= last, "prefix energy decreased at segment {i}");
+            last = acc;
+        }
+        // Raw per-period energy equals the trace's total energy.
+        assert!(
+            (pw.energy_per_period() - trace.total_energy()).abs()
+                <= 1e-9 * trace.total_energy().max(1e-12),
+            "piecewise energy {} vs trace {}",
+            pw.energy_per_period(),
+            trace.total_energy()
+        );
+        // The piecewise view agrees with point sampling, wraps included.
+        for _ in 0..20 {
+            let t = g.f64_in(0.0..3.0).max(0.0) * pw.period;
+            let (epoch, idx) = pw.locate(t);
+            let seg_start = epoch as f64 * pw.period + pw.start(idx);
+            let seg_end = epoch as f64 * pw.period + pw.ends[idx];
+            assert!(
+                seg_start <= t + 1e-9 && t < seg_end + 1e-9,
+                "locate({t}) gave [{seg_start}, {seg_end})"
+            );
+            // Sample strictly inside the segment (boundaries belong to
+            // the next segment under floor indexing).
+            let mid = 0.5 * (seg_start.max(t) + seg_end);
+            assert_eq!(h.power_at(mid), pw.powers[idx], "t={t} idx={idx}");
+        }
+    });
+}

@@ -230,7 +230,10 @@ fn supplies() -> Vec<(String, Harvester)> {
 
 /// Per-round outcomes, power-cycle counts and ledger totals within the
 /// tolerance the reference's own 0.02 s discretisation introduces.
-fn assert_campaigns_close(name: &str, a: &Campaign<usize>, r: &Campaign<usize>) {
+/// Generic over the output type: the comparison is structural (outputs
+/// may legitimately differ when boot-time jitter shifts an acquisition
+/// across a scene boundary).
+fn assert_campaigns_close<O>(name: &str, a: &Campaign<O>, r: &Campaign<O>) {
     let du = |x: u64, y: u64| x.abs_diff(y);
     assert!(
         du(a.power_cycles, r.power_cycles) <= (r.power_cycles / 7).max(3),
@@ -302,6 +305,34 @@ fn golden_greedy_campaigns_match_reference_on_all_supplies() {
         assert!(
             cr.emitted().count() > 0,
             "{name}: reference GREEDY campaign emitted nothing"
+        );
+        assert_campaigns_close(&name, &ca, &cr);
+    }
+}
+
+#[test]
+fn golden_audio_campaigns_match_reference_on_all_supplies() {
+    // The third workload through the same gate: GREEDY anytime audio on
+    // all five ambient traces plus the kinetic harvester, analytic vs
+    // fixed-step reference.
+    use aic::audio::app::{AudioProgram, AudioSource};
+    use aic::audio::detector::SpectralDetector;
+    use aic::audio::stream::AudioScript;
+    let program = || {
+        AudioProgram::new(
+            SpectralDetector::paper_default(),
+            AudioSource::Script(AudioScript::generate(1800.0, 7)),
+        )
+    };
+    for (name, h) in supplies() {
+        let (mut a, mut r) = engines(&h, 1800.0, 3.0, 0.02);
+        let mut pa = program();
+        let mut pr = program();
+        let ca = run_approx(&mut pa, &mut a, &ApproxConfig::greedy(30.0));
+        let cr = run_approx(&mut pr, &mut r, &ApproxConfig::greedy(30.0));
+        assert!(
+            cr.emitted().count() > 0,
+            "{name}: reference audio campaign emitted nothing"
         );
         assert_campaigns_close(&name, &ca, &cr);
     }

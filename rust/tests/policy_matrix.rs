@@ -1,13 +1,21 @@
 //! Cross-runtime invariants: every `Policy` is driven over the same
-//! `SyntheticProgram` through the `Runtime` trait, and the paper's
-//! structural guarantees are asserted uniformly — plus fleet determinism
-//! across worker-pool sizes.
+//! `SyntheticProgram` through the `Runtime` trait — and over the audio
+//! workload's `AudioProgram` — and the paper's structural guarantees are
+//! asserted uniformly, plus fleet determinism across worker-pool sizes
+//! for both the HAR and audio workloads.
 
-use aic::coordinator::experiment::{run_har_policy, test_context, HarRunSpec};
+use aic::audio::app::{self as audio_app, AudioOutput, AudioProgram, AudioSource};
+use aic::audio::detector::SpectralDetector;
+use aic::audio::stream::AudioScript;
+use aic::audio::NUM_PROBES;
+use aic::coordinator::experiment::{
+    run_audio_policy, run_har_policy, test_context, AudioRunSpec, HarRunSpec,
+};
 use aic::coordinator::fleet::run_fleet;
 use aic::energy::estimator::{EnergyProfile, SmartTable};
 use aic::energy::harvester::Harvester;
 use aic::energy::mcu::{McuModel, OpCost};
+use aic::energy::traces::TraceKind;
 use aic::exec::engine::{Engine, EngineConfig};
 use aic::exec::program::SyntheticProgram;
 #[allow(unused_imports)]
@@ -139,6 +147,105 @@ fn approximate_policies_emit_within_the_acquisition_cycle() {
         let c = run_policy(policy, 0.5e-3);
         for r in c.emitted() {
             assert_eq!(r.latency_cycles, 0, "{}", policy.name());
+        }
+    }
+}
+
+/// The audio twin of [`run_policy`]: every policy over the same seeded
+/// event script on a constant supply.
+fn run_audio(policy: Policy, power: f64) -> Campaign<AudioOutput> {
+    let mut program = AudioProgram::new(
+        SpectralDetector::paper_default(),
+        AudioSource::Script(AudioScript::generate(HORIZON, 3)),
+    );
+    let mut engine = match policy {
+        Policy::Continuous => Engine::powered(McuModel::paper_default(), HORIZON),
+        _ => Engine::new(EngineConfig::paper_default(HORIZON), Harvester::Constant(power)),
+    };
+    let mut spec = RuntimeSpec::new(30.0);
+    if let Policy::Smart { .. } = policy {
+        spec = spec.with_smart_table(audio_app::smart_table(
+            &SpectralDetector::paper_default(),
+            &McuModel::paper_default(),
+        ));
+    }
+    policy.runtime::<AudioProgram>(&spec).run(&mut program, &mut engine)
+}
+
+#[test]
+fn audio_invariants_hold_across_every_policy() {
+    for policy in all_policies() {
+        for power in [0.3e-3, 1.5e-3] {
+            let c = run_audio(policy, power);
+            assert!(
+                c.emitted().count() <= c.rounds.len(),
+                "{}: emitted more than acquired",
+                policy.name()
+            );
+            assert!(c.app_energy > 0.0, "{}: no useful work", policy.name());
+            assert!(c.state_energy >= 0.0, "{}", policy.name());
+        }
+    }
+}
+
+#[test]
+fn audio_precise_policies_emit_full_resolution() {
+    for policy in [Policy::Chinchilla, Policy::Alpaca, Policy::Continuous] {
+        let c = run_audio(policy, 0.8e-3);
+        assert!(c.emitted().count() > 0, "{}: nothing emitted", policy.name());
+        for r in c.emitted() {
+            let out = r.output.as_ref().expect("emitted rounds carry output");
+            assert_eq!(
+                out.probes_used,
+                NUM_PROBES,
+                "{}: emitted a truncated spectrum",
+                policy.name()
+            );
+            assert_eq!(out.predicted, out.truth, "{}: full resolution is exact", policy.name());
+        }
+    }
+}
+
+#[test]
+fn audio_approximate_policies_stay_stateless_and_same_cycle() {
+    for policy in [Policy::Greedy, Policy::Smart { bound: 0.60 }] {
+        let c = run_audio(policy, 0.5e-3);
+        assert_eq!(c.state_energy, 0.0, "{}: managed persistent state", policy.name());
+        for r in c.emitted() {
+            assert_eq!(r.latency_cycles, 0, "{}", policy.name());
+        }
+    }
+}
+
+#[test]
+fn audio_fleet_is_deterministic_across_pool_sizes() {
+    // The any-AIC_WORKERS determinism gate, extended to the third
+    // workload: (policy × seed) audio cells on an ambient supply.
+    let spec = AudioRunSpec { horizon: 900.0, ..Default::default() };
+    let jobs: Vec<(Policy, u64)> = [Policy::Greedy, Policy::Chinchilla]
+        .iter()
+        .flat_map(|&p| [1u64, 2u64].map(|s| (p, s)))
+        .collect();
+    let run_job = |&(p, s): &(Policy, u64)| {
+        run_audio_policy(
+            &AudioRunSpec { stream_seed: s, ..spec.clone() },
+            TraceKind::Som,
+            p,
+        )
+    };
+    let reference = run_fleet(&jobs, Some(1), run_job);
+    for workers in [2, 8] {
+        let got = run_fleet(&jobs, Some(workers), run_job);
+        assert_eq!(got.len(), reference.len());
+        for (i, (a, b)) in reference.iter().zip(got.iter()).enumerate() {
+            assert_eq!(a.rounds.len(), b.rounds.len(), "job {i} workers {workers}");
+            assert_eq!(a.power_cycles, b.power_cycles, "job {i} workers {workers}");
+            assert_eq!(a.app_energy, b.app_energy, "job {i} workers {workers}");
+            for (ra, rb) in a.rounds.iter().zip(b.rounds.iter()) {
+                assert_eq!(ra.emitted_at, rb.emitted_at, "job {i} workers {workers}");
+                assert_eq!(ra.steps_executed, rb.steps_executed);
+                assert_eq!(ra.output, rb.output);
+            }
         }
     }
 }

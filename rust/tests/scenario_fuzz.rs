@@ -1,0 +1,168 @@
+//! Panic-safety fuzz pass for the scenario JSON parser.
+//!
+//! `aic sweep` feeds user-supplied files straight into
+//! `Scenario::parse`; nothing a file contains may panic (or overflow the
+//! stack) — malformed input must come back as `Err`. This suite feeds
+//! the parser truncations and byte-level mutations of every committed
+//! `examples/scenarios/*.json`, hand-built type-swaps, NaN/Inf number
+//! literals, and hostile deep nesting. Whenever a mutation happens to
+//! still parse, the plan expansion and validation must not panic either.
+
+use aic::coordinator::scenario::Scenario;
+use aic::util::rng::Rng;
+
+fn committed_examples() -> Vec<(String, String)> {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/../examples/scenarios");
+    let mut out = Vec::new();
+    for entry in std::fs::read_dir(dir).expect("examples/scenarios missing") {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) == Some("json") {
+            out.push((
+                path.display().to_string(),
+                std::fs::read_to_string(&path).unwrap(),
+            ));
+        }
+    }
+    assert!(!out.is_empty(), "no committed example scenarios found");
+    out
+}
+
+/// Exercise the whole user-facing pipeline on arbitrary text: parse,
+/// and — when the text happens to be a valid scenario — plan/resolve.
+/// Returns whether parsing succeeded. Panics propagate and fail the
+/// test: that is the property under test.
+fn probe(text: &str) -> bool {
+    match Scenario::parse(text) {
+        Ok(sc) => {
+            let _ = sc.validate();
+            let _ = sc.plan().len();
+            let _ = sc.resolve(true).plan().len();
+            true
+        }
+        Err(e) => {
+            assert!(!e.is_empty(), "empty error message");
+            false
+        }
+    }
+}
+
+#[test]
+fn truncations_of_committed_scenarios_error_cleanly() {
+    for (path, text) in committed_examples() {
+        assert!(probe(&text), "{path} stopped parsing");
+        // Any truncation that cuts the document's closing brace is
+        // malformed; beyond it only trailing whitespace is shaved off,
+        // which must keep parsing.
+        let close = text.rfind('}').expect("scenario documents are objects");
+        for len in 0..text.len() {
+            if !text.is_char_boundary(len) {
+                continue;
+            }
+            if len <= close {
+                assert!(
+                    !probe(&text[..len]),
+                    "{path}: truncation to {len} bytes still parsed"
+                );
+            } else {
+                assert!(
+                    probe(&text[..len]),
+                    "{path}: shaving trailing whitespace at {len} broke parsing"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn byte_mutations_of_committed_scenarios_never_panic() {
+    let replacements: &[u8] = b"{}[]\",:x0-\x00\xff";
+    for (_path, text) in committed_examples() {
+        let bytes = text.as_bytes();
+        let mut rng = Rng::new(0xF022);
+        for i in 0..bytes.len() {
+            for &r in replacements {
+                let mut mutated = bytes.to_vec();
+                mutated[i] = r;
+                if let Ok(s) = String::from_utf8(mutated) {
+                    probe(&s); // must not panic; Ok or Err both fine
+                }
+            }
+            // A few random splices (insert/delete) per position.
+            let mut spliced = bytes.to_vec();
+            let at = rng.index(spliced.len());
+            if rng.chance(0.5) {
+                spliced.insert(at, *rng.choose(replacements));
+            } else {
+                spliced.remove(at);
+            }
+            if let Ok(s) = String::from_utf8(spliced) {
+                probe(&s);
+            }
+        }
+    }
+}
+
+#[test]
+fn type_swaps_are_errors_not_panics() {
+    let cases = [
+        // Wrong scalar types in every top-level slot.
+        r#"{"name": 7, "workload": "har"}"#,
+        r#"{"name": "x", "workload": 3}"#,
+        r#"{"name": "x", "workload": "har", "horizon": "900"}"#,
+        r#"{"name": "x", "workload": "har", "sample_period": []}"#,
+        r#"{"name": "x", "workload": "har", "policies": "greedy"}"#,
+        r#"{"name": "x", "workload": "har", "policies": [42]}"#,
+        r#"{"name": "x", "workload": "har", "harvesters": [null]}"#,
+        r#"{"name": "x", "workload": "har", "devices": "paper"}"#,
+        r#"{"name": "x", "workload": "har", "devices": [42]}"#,
+        r#"{"name": "x", "workload": "har", "devices": [{"capacitance": true}]}"#,
+        r#"{"name": "x", "workload": "har", "seeds": [1.5]}"#,
+        r#"{"name": "x", "workload": "har", "seeds": [-1]}"#,
+        r#"{"name": "x", "workload": "har", "seeds": 1}"#,
+        r#"{"name": "x", "workload": "har", "training": []}"#,
+        r#"{"name": "x", "workload": "har", "training": {"windows": "six"}}"#,
+        r#"{"name": "x", "workload": "har", "fast": {"horizon": {}}}"#,
+        r#"{"name": "x", "workload": "har", "projection": 9}"#,
+        r#"{"name": "x", "workload": "audio", "projection": "img-latency"}"#,
+        // Workload objects with swapped field types.
+        r#"{"name": "x", "workload": {"kind": "perforation", "size": "big", "skips": [0.1]}}"#,
+        r#"{"name": "x", "workload": {"kind": "accuracy-curve", "ps": [true]}}"#,
+        // The whole document is the wrong shape.
+        r#"[]"#,
+        r#""har""#,
+        r#"42"#,
+        r#"null"#,
+    ];
+    for text in cases {
+        assert!(!probe(text), "accepted: {text}");
+    }
+}
+
+#[test]
+fn non_finite_number_literals_are_rejected() {
+    for lit in ["NaN", "nan", "Infinity", "-Infinity", "1e999", "-1e999", "1e400"] {
+        let doc = format!(r#"{{"name": "x", "workload": "har", "horizon": {lit}}}"#);
+        assert!(!probe(&doc), "accepted horizon {lit}");
+        let seeds = format!(r#"{{"name": "x", "workload": "har", "seeds": [{lit}]}}"#);
+        assert!(!probe(&seeds), "accepted seed {lit}");
+    }
+}
+
+#[test]
+fn hostile_nesting_errors_instead_of_overflowing_the_stack() {
+    // A recursive-descent parser without a depth cap aborts on these
+    // (stack overflow is not unwinding — the whole test binary dies).
+    let bombs = [
+        "[".repeat(200_000),
+        "[".repeat(200_000) + &"]".repeat(200_000),
+        "{\"a\":".repeat(120_000) + "1" + &"}".repeat(120_000),
+        format!(
+            r#"{{"name": "x", "workload": "har", "fast": {}1{}}}"#,
+            "[".repeat(60_000),
+            "]".repeat(60_000)
+        ),
+    ];
+    for bomb in &bombs {
+        assert!(!probe(bomb), "hostile nesting parsed");
+    }
+}

@@ -1,0 +1,108 @@
+//! Golden-file tests for `coordinator/sink.rs`: the exact bytes each
+//! sink emits for a fixed sweep table are committed under
+//! `rust/tests/golden/` and asserted byte-for-byte, so any formatting
+//! drift (markdown layout, CSV quoting, JSON pretty-printing, trailing
+//! newlines) fails loudly instead of silently changing every artifact
+//! consumers parse.
+//!
+//! The table is a fixed miniature of a sweep's cells view (harvester /
+//! policy / quality / note) with cells chosen to exercise the quoting
+//! paths: a comma cell, a double-quote cell, and the `pct`/`f2`
+//! formatting helpers on exactly-representable values — deliberately
+//! *not* a live campaign, so the goldens pin the sink layer alone and
+//! never move when simulation numerics do.
+//!
+//! Regenerating after an intentional format change:
+//!
+//! ```text
+//! AIC_BLESS=1 cargo test --test sink_golden
+//! ```
+//!
+//! then commit the rewritten files under `rust/tests/golden/`.
+
+use aic::coordinator::sink::{f2, pct, CsvSink, JsonSink, MarkdownSink, Sink, TableData};
+
+fn golden_dir() -> std::path::PathBuf {
+    std::path::Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/tests/golden")).to_path_buf()
+}
+
+fn fixed_table() -> TableData {
+    let mut t = TableData::new(
+        "golden_sweep",
+        "Golden sweep - sink formatting contract",
+        &["harvester", "policy", "quality", "note"],
+    );
+    t.push(vec!["kinetic".into(), "greedy".into(), pct(0.5), "plain".into()]);
+    t.push(vec![
+        "RF".into(),
+        "smart80".into(),
+        pct(0.875),
+        "comma, separated".into(),
+    ]);
+    t.push(vec![
+        "SOM".into(),
+        "chinchilla".into(),
+        f2(1.25),
+        "has \"quotes\"".into(),
+    ]);
+    t
+}
+
+/// Compare `got` against the committed golden, or rewrite the golden
+/// under `AIC_BLESS=1`.
+fn check(name: &str, got: &[u8]) {
+    let path = golden_dir().join(name);
+    if std::env::var("AIC_BLESS").is_ok() {
+        std::fs::create_dir_all(golden_dir()).unwrap();
+        std::fs::write(&path, got).unwrap();
+        return;
+    }
+    let want = std::fs::read(&path).unwrap_or_else(|e| {
+        panic!("missing golden {} ({e}); regenerate with AIC_BLESS=1", path.display())
+    });
+    assert_eq!(
+        got,
+        &want[..],
+        "{name} drifted from the committed golden;\n--- got ---\n{}\n--- want ---\n{}\n\
+         (if the change is intentional, regenerate with AIC_BLESS=1)",
+        String::from_utf8_lossy(got),
+        String::from_utf8_lossy(&want),
+    );
+}
+
+#[test]
+fn markdown_sink_matches_golden() {
+    let t = fixed_table();
+    let mut buf = Vec::new();
+    MarkdownSink::new(&mut buf).table(&t).unwrap();
+    check("golden_sweep.md", &buf);
+    // The streamed sink and the buffered renderer stay in lock-step.
+    assert_eq!(String::from_utf8(buf).unwrap(), t.to_markdown() + "\n");
+}
+
+#[test]
+fn csv_sink_matches_golden() {
+    let t = fixed_table();
+    let dir = std::env::temp_dir().join("aic_sink_golden_csv");
+    let _ = std::fs::remove_dir_all(&dir);
+    CsvSink::new(dir.to_str().unwrap()).table(&t).unwrap();
+    let got = std::fs::read(dir.join("golden_sweep.csv")).unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+    check("golden_sweep.csv", &got);
+    // The file path and the in-memory renderer agree.
+    assert_eq!(String::from_utf8(got).unwrap(), t.to_csv());
+}
+
+#[test]
+fn json_sink_matches_golden() {
+    let t = fixed_table();
+    let dir = std::env::temp_dir().join("aic_sink_golden_json");
+    let _ = std::fs::remove_dir_all(&dir);
+    JsonSink::new(dir.to_str().unwrap()).table(&t).unwrap();
+    let got = std::fs::read(dir.join("golden_sweep.json")).unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+    check("golden_sweep.json", &got);
+    // The golden is also well-formed JSON that round-trips to the table.
+    let v = aic::util::json::parse(std::str::from_utf8(&got).unwrap()).unwrap();
+    assert_eq!(v, t.to_json());
+}
