@@ -23,7 +23,7 @@ fn main() {
         .iter()
         .map(|r| {
             vec![
-                r.harvester.name().to_string(),
+                r.harvester.name(),
                 format!("{:.1}%", 100.0 * r.equivalence_aic),
             ]
         })

@@ -28,7 +28,7 @@ fn main() {
             let gain = r.throughput_aic_vs_continuous
                 / r.throughput_chinchilla_vs_continuous.max(1e-9);
             vec![
-                r.harvester.name().to_string(),
+                r.harvester.name(),
                 format!("{:.1}%", 100.0 * r.throughput_aic_vs_continuous),
                 format!("{:.1}%", 100.0 * r.throughput_chinchilla_vs_continuous),
                 format!("{gain:.2}x"),

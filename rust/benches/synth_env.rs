@@ -1,0 +1,56 @@
+//! Synthetic-environment hotpath bench.
+//!
+//! Times the two costs a synth sweep adds on top of a replay sweep:
+//! realising an environment family member (`SynthSpec::build` — the
+//! per-cell generation step a 100-seed grid pays 100 times), and the
+//! analytic engine stepping over the generated composite (charge ramps
+//! and hour-long sleeps on a multi-source switchover supply). The
+//! engine legs honour `AIC_ENGINE`, so `AIC_ENGINE=step` measures the
+//! fixed-step reference on the same supplies.
+
+use aic::energy::harvester::Harvester;
+use aic::energy::synth::SynthSpec;
+use aic::exec::engine::{Engine, EngineConfig};
+use aic::util::bench::{black_box, Bench};
+
+fn main() {
+    let b = Bench::new("synth_env");
+
+    // Generation: single-source and 4-source composite families.
+    let solar = SynthSpec::builtin_solar();
+    b.bench("synth/build_solar_1800s", || {
+        black_box(solar.build(1));
+    });
+    let multi = SynthSpec::builtin_multi();
+    b.bench("synth/build_multi_1800s", || {
+        black_box(multi.build(1));
+    });
+
+    // Engine: recharge ramp on the composite supply (the synth twin of
+    // engine/charge_until_boot).
+    {
+        let mut cfg = EngineConfig::paper_default(1e9);
+        cfg.initial_voltage = 0.0;
+        let mut e = Engine::new(cfg, Harvester::Synth(multi.build(2)));
+        b.bench_throughput("synth/charge_until_boot", 1, || {
+            e.cap.set_voltage(0.5);
+            e.now = 0.0;
+            black_box(e.charge_until_boot());
+        });
+    }
+
+    // Engine: one hour of LPM3 sleep over the composite segments (the
+    // O(events) claim under test — a sampled supply would be ~100x the
+    // events).
+    {
+        let mut e = Engine::new(
+            EngineConfig::paper_default(1e12),
+            Harvester::Synth(multi.build(3)),
+        );
+        b.bench_throughput("synth/sleep_3600s", 3600, || {
+            e.cap.set_voltage(3.3);
+            e.now = 0.0;
+            black_box(e.sleep(3600.0));
+        });
+    }
+}

@@ -34,6 +34,7 @@ use crate::coordinator::metrics;
 use crate::coordinator::sink::{f2, pct, ratio, TableData};
 use crate::energy::capacitor::Capacitor;
 use crate::energy::harvester::{kinetic_power_trace, Harvester, KineticConfig};
+use crate::energy::synth::SynthSpec;
 use crate::energy::traces::{generate, TraceKind};
 use crate::exec::engine::{EngineConfig, EngineKind};
 use crate::exec::{Campaign, Policy};
@@ -41,7 +42,7 @@ use crate::har::app::HarOutput;
 use crate::har::dataset::{ActivityScript, Corpus, CorpusSpec};
 use crate::imgproc::app::CornerOutput;
 use crate::imgproc::images::{Picture, EVAL_SIZE};
-use crate::util::json::{self, Value};
+use crate::util::json::{self, opt_arr, opt_bool, opt_f64, opt_str, opt_u64, opt_usize, Value};
 use crate::util::stats::Histogram;
 
 // ---------------------------------------------------------------------
@@ -49,23 +50,31 @@ use crate::util::stats::Histogram;
 // ---------------------------------------------------------------------
 
 /// Which energy supply powers a device cell.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Debug, PartialEq)]
 pub enum HarvesterSpec {
     /// Kinetic energy of the volunteer's wrist motion; the seed selects
     /// the activity script (the paper's §5 HAR supply).
     Kinetic,
     /// One of the §6 ambient traces; the seed selects the realisation.
     Ambient(TraceKind),
+    /// A generated stochastic environment (`energy::synth`); the seed
+    /// selects the family member. Serialised in scenario files as
+    /// `{"synth": {...spec...}}`.
+    Synth(SynthSpec),
 }
 
 impl HarvesterSpec {
-    pub fn name(&self) -> &'static str {
+    pub fn name(&self) -> String {
         match self {
-            HarvesterSpec::Kinetic => "kinetic",
-            HarvesterSpec::Ambient(kind) => kind.name(),
+            HarvesterSpec::Kinetic => "kinetic".to_string(),
+            HarvesterSpec::Ambient(kind) => kind.name().to_string(),
+            HarvesterSpec::Synth(spec) => spec.name.clone(),
         }
     }
 
+    /// The named (non-synth) supplies; synthetic environments have no
+    /// bare-name spelling — they come from a spec object or a
+    /// `synth:<file>` CLI reference.
     pub fn from_name(s: &str) -> Option<HarvesterSpec> {
         if s == "kinetic" {
             Some(HarvesterSpec::Kinetic)
@@ -78,7 +87,8 @@ impl HarvesterSpec {
     /// kinetic arm derives the trace from the same activity script that
     /// feeds the HAR classifier; ambient traces are capped at one 30-min
     /// realisation and replayed periodically, as the imaging figures
-    /// always did.
+    /// always did; synth environments realise their family member for
+    /// the seed, emitting segments natively (no sampling grid).
     pub fn build(&self, horizon: f64, seed: u64) -> Harvester {
         match self {
             HarvesterSpec::Kinetic => {
@@ -89,7 +99,32 @@ impl HarvesterSpec {
             HarvesterSpec::Ambient(kind) => {
                 Harvester::Replay(generate(*kind, horizon.min(1800.0), 0.01, seed))
             }
+            HarvesterSpec::Synth(spec) => Harvester::Synth(spec.build(seed)),
         }
+    }
+
+    fn to_json(&self) -> Value {
+        match self {
+            HarvesterSpec::Synth(spec) => Value::obj(vec![("synth", spec.to_json())]),
+            other => other.name().into(),
+        }
+    }
+
+    fn from_json(v: &Value) -> Result<HarvesterSpec, String> {
+        if let Some(name) = v.as_str() {
+            return HarvesterSpec::from_name(name).ok_or_else(|| {
+                format!("unknown harvester '{name}' (expected kinetic|rf|som|sim|sor|sir)")
+            });
+        }
+        if let Some(obj) = v.as_obj() {
+            for key in obj.keys() {
+                if key != "synth" {
+                    return Err(format!("unknown harvester key '{key}'"));
+                }
+            }
+            return SynthSpec::from_json(v.get("synth")).map(HarvesterSpec::Synth);
+        }
+        Err("harvester must be a supply name or a {\"synth\": {...}} object".to_string())
     }
 }
 
@@ -643,11 +678,16 @@ impl Scenario {
         match &self.workload {
             WorkloadSpec::Har | WorkloadSpec::Img | WorkloadSpec::Audio => {
                 let mut cells = Vec::new();
-                for &harvester in &self.harvesters {
+                for harvester in &self.harvesters {
                     for &device in &self.devices {
                         for &policy in &self.policies {
                             for &seed in &self.seeds {
-                                cells.push(CampaignCell { harvester, device, policy, seed });
+                                cells.push(CampaignCell {
+                                    harvester: harvester.clone(),
+                                    device,
+                                    policy,
+                                    seed,
+                                });
                             }
                         }
                     }
@@ -701,7 +741,8 @@ impl Scenario {
                         sample_period: s.sample_period,
                         script_seed: cell.seed,
                     };
-                    let workload = HarWorkload { ctx, spec, harvester: cell.harvester };
+                    let workload =
+                        HarWorkload { ctx, spec, harvester: cell.harvester.clone() };
                     run_campaign_on(&workload, cell.seed, cell.policy, &cell.device)
                 }))
             }
@@ -712,7 +753,7 @@ impl Scenario {
                         sample_period: s.sample_period,
                         trace_seed: cell.seed,
                     };
-                    let workload = ImgWorkload { spec, harvester: cell.harvester };
+                    let workload = ImgWorkload { spec, harvester: cell.harvester.clone() };
                     run_campaign_on(&workload, cell.seed, cell.policy, &cell.device)
                 }))
             }
@@ -723,7 +764,7 @@ impl Scenario {
                         sample_period: s.sample_period,
                         stream_seed: cell.seed,
                     };
-                    let workload = AudioWorkload { spec, harvester: cell.harvester };
+                    let workload = AudioWorkload { spec, harvester: cell.harvester.clone() };
                     run_campaign_on(&workload, cell.seed, cell.policy, &cell.device)
                 }))
             }
@@ -758,7 +799,7 @@ impl Scenario {
             ),
             (
                 "harvesters",
-                Value::Arr(self.harvesters.iter().map(|h| h.name().into()).collect()),
+                Value::Arr(self.harvesters.iter().map(|h| h.to_json()).collect()),
             ),
             ("devices", Value::Arr(self.devices.iter().map(|d| d.to_json()).collect())),
             (
@@ -823,13 +864,7 @@ impl Scenario {
         if let Some(items) = opt_arr(v, "harvesters")? {
             s.harvesters = items
                 .iter()
-                .map(|h| {
-                    let name =
-                        h.as_str().ok_or_else(|| "'harvesters' entries must be strings".to_string())?;
-                    HarvesterSpec::from_name(name).ok_or_else(|| format!(
-                        "unknown harvester '{name}' (expected kinetic|rf|som|sim|sor|sir)"
-                    ))
-                })
+                .map(HarvesterSpec::from_json)
                 .collect::<Result<Vec<HarvesterSpec>, String>>()?;
         }
         if let Some(items) = opt_arr(v, "devices")? {
@@ -887,6 +922,13 @@ impl Scenario {
             if self.sample_period <= 0.0 {
                 return Err("sample_period must be positive".to_string());
             }
+            // Synth environments: a structurally broken spec must fail
+            // here (parse/validate time), never inside a fleet worker.
+            for (i, h) in self.harvesters.iter().enumerate() {
+                if let HarvesterSpec::Synth(spec) = h {
+                    spec.validate().map_err(|e| format!("harvester {i}: {e}"))?;
+                }
+            }
             // Device physics: catch impossible knob combinations here,
             // not as a Capacitor::new assert inside a fleet worker.
             let base = Capacitor::paper_default();
@@ -936,7 +978,7 @@ impl Scenario {
 }
 
 /// One campaign cell of the grid.
-#[derive(Clone, Copy, Debug, PartialEq)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct CampaignCell {
     pub harvester: HarvesterSpec,
     pub device: DeviceSpec,
@@ -966,54 +1008,8 @@ impl JobPlan {
     }
 }
 
-fn opt_str<'a>(v: &'a Value, key: &str) -> Result<Option<&'a str>, String> {
-    match v.get(key) {
-        Value::Null => Ok(None),
-        other => other.as_str().map(Some).ok_or_else(|| format!("'{key}' must be a string")),
-    }
-}
-
-// Typed optional accessors: a present-but-mistyped value is a hard error,
-// never a silent fall-back to the default (same contract as unknown keys).
-fn opt_f64(v: &Value, key: &str) -> Result<Option<f64>, String> {
-    match v.get(key) {
-        Value::Null => Ok(None),
-        other => other.as_f64().map(Some).ok_or_else(|| format!("'{key}' must be a number")),
-    }
-}
-
-fn opt_usize(v: &Value, key: &str) -> Result<Option<usize>, String> {
-    match v.get(key) {
-        Value::Null => Ok(None),
-        other => other
-            .as_u64()
-            .map(|n| Some(n as usize))
-            .ok_or_else(|| format!("'{key}' must be an unsigned integer")),
-    }
-}
-
-fn opt_u64(v: &Value, key: &str) -> Result<Option<u64>, String> {
-    match v.get(key) {
-        Value::Null => Ok(None),
-        other => {
-            other.as_u64().map(Some).ok_or_else(|| format!("'{key}' must be an unsigned integer"))
-        }
-    }
-}
-
-fn opt_bool(v: &Value, key: &str) -> Result<Option<bool>, String> {
-    match v.get(key) {
-        Value::Null => Ok(None),
-        other => other.as_bool().map(Some).ok_or_else(|| format!("'{key}' must be a boolean")),
-    }
-}
-
-fn opt_arr<'a>(v: &'a Value, key: &str) -> Result<Option<&'a [Value]>, String> {
-    match v.get(key) {
-        Value::Null => Ok(None),
-        other => other.as_arr().map(Some).ok_or_else(|| format!("'{key}' must be an array")),
-    }
-}
+// (The typed optional JSON accessors live in `util::json` — shared with
+// the synth-spec reader.)
 
 // ---------------------------------------------------------------------
 // Grid results and projections.
@@ -1296,7 +1292,8 @@ impl SweepRun {
         sc.harvesters
             .iter()
             .enumerate()
-            .map(|(hi, &harvester)| {
+            .map(|(hi, harvester)| {
+                let harvester = harvester.clone();
                 let local_units = d_n * s_n;
                 let at = |p: usize, lu: usize| {
                     let d = lu / s_n;
@@ -1453,7 +1450,7 @@ impl SweepRun {
                     &["trace", "equivalent corner info"],
                 );
                 for r in self.img_trace_rows() {
-                    per_trace.push(vec![r.harvester.name().to_string(), pct(r.equivalence_aic)]);
+                    per_trace.push(vec![r.harvester.name(), pct(r.equivalence_aic)]);
                 }
                 vec![t, per_trace]
             }
@@ -1470,7 +1467,7 @@ impl SweepRun {
                         f64::INFINITY
                     };
                     t.push(vec![
-                        r.harvester.name().to_string(),
+                        r.harvester.name(),
                         pct(r.throughput_aic_vs_continuous),
                         pct(r.throughput_chinchilla_vs_continuous),
                         ratio(gain),
@@ -1486,7 +1483,7 @@ impl SweepRun {
                 );
                 for r in self.img_trace_rows() {
                     t.push(vec![
-                        r.harvester.name().to_string(),
+                        r.harvester.name(),
                         pct(r.aic_same_cycle),
                         f2(r.chinchilla_latency_mean),
                     ]);
@@ -1569,7 +1566,7 @@ impl SweepRun {
             |cell: &CampaignCell, emitted: usize, cycles: u64, failures: u64, quality: f64,
              same_cycle: f64, app: f64, state: f64| {
                 t.push(vec![
-                    cell.harvester.name().to_string(),
+                    cell.harvester.name(),
                     cell.device.label(),
                     cell.policy.name(),
                     cell.seed.to_string(),
@@ -1709,12 +1706,20 @@ pub fn audio_policies() -> Vec<Policy> {
     ]
 }
 
-/// Every figure the `aic` CLI knows by name, plus the audio grid (not a
-/// paper figure — the third workload's builtin scenario).
-pub const BUILTIN_NAMES: [&str; 11] = [
+/// Every figure the `aic` CLI knows by name, plus the audio grid (the
+/// third workload's builtin scenario) and the three synthetic-environment
+/// grids (`synth_*`: generated supplies × all policies × ≥10 environment
+/// seeds — one builtin per workload).
+pub const BUILTIN_NAMES: [&str; 14] = [
     "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig12", "fig13", "fig14", "fig15",
-    "audio",
+    "audio", "synth_solar", "synth_rf", "synth_multi",
 ];
+
+/// The environment-seed axis of the builtin synth grids: ten independent
+/// members of each generated family.
+pub fn synth_seeds() -> Vec<u64> {
+    (1..=10).collect()
+}
 
 /// The named figure scenarios. `seed` is the CLI base seed: it seeds HAR
 /// training and is the single trace realisation of the imaging figures.
@@ -1811,6 +1816,47 @@ pub fn builtin(name: &str, seed: u64) -> Option<Scenario> {
                 ..FastMode::none()
             })
             .with_projection(Projection::AudioSummary),
+        "synth_solar" => Scenario::new("synth_solar", WorkloadSpec::Img)
+            .with_title("Synth — imaging on generated diurnal solar with cloud occlusion")
+            .with_policies(har_policies())
+            .with_harvesters(vec![HarvesterSpec::Synth(SynthSpec::builtin_solar())])
+            .with_seeds(synth_seeds())
+            .with_horizon(3600.0)
+            .with_fast(FastMode {
+                horizon: Some(600.0),
+                max_seeds: Some(2),
+                ..FastMode::none()
+            })
+            .with_projection(Projection::Cells),
+        "synth_rf" => Scenario::new("synth_rf", WorkloadSpec::Audio)
+            .with_title("Synth — audio on generated duty-cycled RF bursts")
+            .with_policies(audio_policies())
+            .with_harvesters(vec![HarvesterSpec::Synth(SynthSpec::builtin_rf())])
+            .with_seeds(synth_seeds())
+            .with_horizon(3600.0)
+            .with_fast(FastMode {
+                horizon: Some(600.0),
+                max_seeds: Some(2),
+                ..FastMode::none()
+            })
+            .with_projection(Projection::AudioSummary),
+        "synth_multi" => Scenario::new("synth_multi", WorkloadSpec::Har)
+            .with_title(
+                "Synth — HAR on an amalgamated multi-source device \
+                 (solar + RF + kinetic + thermal, switchover)",
+            )
+            .with_policies(har_policies())
+            .with_harvesters(vec![HarvesterSpec::Synth(SynthSpec::builtin_multi())])
+            .with_seeds(synth_seeds())
+            .with_horizon(3600.0)
+            .with_training(Training::full(seed))
+            .with_fast(FastMode {
+                horizon: Some(900.0),
+                max_seeds: Some(2),
+                tiny_corpus: true,
+                img_size: None,
+            })
+            .with_projection(Projection::Cells),
         _ => return None,
     })
 }
@@ -1961,6 +2007,69 @@ mod tests {
             r#"{"name":"x","workload":"har","devices":[{"v_on":4.0}]}"#
         )
         .is_err());
+    }
+
+    #[test]
+    fn synth_harvesters_round_trip_and_validate() {
+        let sc = Scenario::new("synth-custom", WorkloadSpec::Audio)
+            .with_policies(vec![Policy::Greedy, Policy::Continuous])
+            .with_harvesters(vec![
+                HarvesterSpec::Synth(SynthSpec::builtin_multi()),
+                HarvesterSpec::Ambient(TraceKind::Rf),
+            ])
+            .with_seeds(vec![1, 2, 3])
+            .with_horizon(900.0);
+        let parsed = Scenario::parse(&sc.to_json_string()).expect("round trip");
+        assert_eq!(parsed, sc);
+        assert_eq!(parsed.plan(), sc.plan());
+        // An embedded synth object parses from raw JSON too.
+        let doc = r#"{
+            "name": "inline-synth",
+            "workload": "audio",
+            "harvesters": [{"synth": {
+                "name": "rf-family",
+                "seed": 5,
+                "duration": 600,
+                "combine": "sum",
+                "sources": [{"kind": "rf", "burst_power": 0.0016,
+                             "mean_on": 0.5, "mean_off": 4.5, "jitter": 0.35}]
+            }}]
+        }"#;
+        let sc2 = Scenario::parse(doc).expect("inline synth parses");
+        assert_eq!(sc2.harvesters.len(), 1);
+        assert_eq!(sc2.harvesters[0].name(), "rf-family");
+        // A broken embedded spec is a parse error, not a fleet panic.
+        assert!(Scenario::parse(
+            r#"{"name":"x","workload":"audio","harvesters":[{"synth":{
+                "name":"bad","seed":1,"duration":0,"combine":"sum",
+                "sources":[{"kind":"rf","burst_power":0.001,"mean_on":0.5,
+                            "mean_off":4.5,"jitter":0}]}}]}"#
+        )
+        .is_err());
+        assert!(Scenario::parse(
+            r#"{"name":"x","workload":"audio","harvesters":[{"bogus":{}}]}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn synth_builtins_are_one_per_workload() {
+        let solar = builtin("synth_solar", 42).unwrap();
+        assert_eq!(solar.workload, WorkloadSpec::Img);
+        let rf = builtin("synth_rf", 42).unwrap();
+        assert_eq!(rf.workload, WorkloadSpec::Audio);
+        let multi = builtin("synth_multi", 42).unwrap();
+        assert_eq!(multi.workload, WorkloadSpec::Har);
+        for sc in [&solar, &rf, &multi] {
+            assert!(sc.seeds.len() >= 10, "{}: {} environment seeds", sc.name, sc.seeds.len());
+            assert!(
+                matches!(sc.harvesters[0], HarvesterSpec::Synth(_)),
+                "{}: synthetic supply expected",
+                sc.name
+            );
+            // Fast mode keeps the grids CI-sized.
+            assert!(sc.resolve(true).seeds.len() <= 2, "{}", sc.name);
+        }
     }
 
     #[test]

@@ -7,6 +7,10 @@
 //! * [`Harvester::Constant`] — bench/test source.
 //! * [`Harvester::Replay`] — replays a [`PowerTrace`] (the paper's Renesas
 //!   trace-replay supply, §6.3).
+//! * [`Harvester::Synth`] — a pre-generated run-length [`Piecewise`]
+//!   pattern, wrapping at its period. The `energy::synth` environment
+//!   generator emits these natively, so synthetic supplies reach the
+//!   analytic engine with no sampled intermediate.
 //! * [`kinetic_power_trace`] — converts a wrist-acceleration signal into
 //!   the output of a resonant electromagnetic transducer (ReVibe modelQ,
 //!   §4.1): band-pass around the customised resonance frequency, power
@@ -23,6 +27,9 @@ pub enum Harvester {
     Constant(f64),
     /// Replay a trace, wrapping at the end.
     Replay(PowerTrace),
+    /// A generated segment pattern, wrapping at its period (the
+    /// `energy::synth` stochastic environments).
+    Synth(Piecewise),
 }
 
 impl Harvester {
@@ -32,6 +39,7 @@ impl Harvester {
         match self {
             Harvester::Constant(p) => *p,
             Harvester::Replay(trace) => trace.power_at(t),
+            Harvester::Synth(pw) => pw.power_at(t),
         }
     }
 
@@ -40,6 +48,7 @@ impl Harvester {
         match self {
             Harvester::Constant(p) => *p,
             Harvester::Replay(trace) => trace.mean_power(),
+            Harvester::Synth(pw) => pw.mean_power(),
         }
     }
 
@@ -50,6 +59,7 @@ impl Harvester {
         match self {
             Harvester::Constant(p) => Piecewise::constant(*p),
             Harvester::Replay(trace) => trace.piecewise(),
+            Harvester::Synth(pw) => pw.clone(),
         }
     }
 
@@ -224,6 +234,22 @@ mod tests {
         // Seeking past one period wraps.
         let wrapped = h.segments(2.7).next().unwrap();
         assert_eq!(wrapped, Segment { start: 2.0, end: 3.0, power: 1.0 });
+    }
+
+    #[test]
+    fn synth_harvester_wraps_like_replay() {
+        let pw = Piecewise { ends: vec![1.0, 3.0], powers: vec![2e-3, 0.0], period: 3.0 };
+        let h = Harvester::Synth(pw.clone());
+        assert_eq!(h.power_at(0.5), 2e-3);
+        assert_eq!(h.power_at(2.0), 0.0);
+        assert_eq!(h.power_at(3.5), 2e-3); // wrapped
+        assert!((h.mean_power() - 2e-3 / 3.0).abs() < 1e-18);
+        // The engine-facing views agree with the stored pattern.
+        assert_eq!(h.piecewise().ends, pw.ends);
+        let segs: Vec<Segment> = h.segments(0.0).take(3).collect();
+        assert_eq!(segs[0], Segment { start: 0.0, end: 1.0, power: 2e-3 });
+        assert_eq!(segs[1], Segment { start: 1.0, end: 3.0, power: 0.0 });
+        assert_eq!(segs[2], Segment { start: 3.0, end: 4.0, power: 2e-3 });
     }
 
     #[test]

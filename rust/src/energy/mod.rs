@@ -6,8 +6,11 @@
 //! This module models that chain:
 //!
 //! * [`harvester`] — ambient power sources (trace replay, kinetic
-//!   transducer, constant), fed by [`traces`] (synthetic RF / solar
-//!   profiles matching the paper's five traces).
+//!   transducer, constant, generated synthetic environments), fed by
+//!   [`traces`] (synthetic RF / solar profiles matching the paper's five
+//!   traces) and [`synth`] (the seeded stochastic environment generator:
+//!   parametric solar/RF/thermal/kinetic families and multi-source
+//!   composites, emitted as native run-length segments).
 //! * [`booster`] — BQ25505-like boost charger efficiency model.
 //! * [`capacitor`] — the energy buffer: ½CV², turn-on / brown-out
 //!   thresholds, usable-energy queries (the "ADC read" the SMART policy
@@ -24,4 +27,5 @@ pub mod capacitor;
 pub mod estimator;
 pub mod harvester;
 pub mod mcu;
+pub mod synth;
 pub mod traces;

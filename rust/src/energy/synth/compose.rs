@@ -1,0 +1,170 @@
+//! Multi-source composition — amalgamated harvesting.
+//!
+//! Devices that draw from several transducers at once combine them in
+//! one of three ways, mirrored here as pointwise operators over the
+//! sources' piecewise patterns:
+//!
+//! * [`Combine::Sum`] — independent converters, outputs added (each
+//!   source has its own charger feeding the shared buffer).
+//! * [`Combine::Max`] — ideal power-ORing: a lossless switch always
+//!   connects the strongest source.
+//! * [`Combine::Switchover`] — power-ORing through a real switch
+//!   matrix: the strongest source scaled by a conversion efficiency.
+//!
+//! [`merge`] is a k-way boundary merge: the output has one segment per
+//! *union* boundary, adjacent equal powers are re-coalesced, and the
+//! result is again a native [`Piecewise`] — composition never introduces
+//! a sample grid, so composite environments stay O(events) through the
+//! analytic engine.
+
+use super::sources::SegBuf;
+use crate::energy::traces::Piecewise;
+
+/// How a multi-source environment combines its sources.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Combine {
+    /// Outputs added.
+    Sum,
+    /// Ideal power-ORing: pointwise maximum.
+    Max,
+    /// Power-ORing through a switch matrix: maximum scaled by
+    /// `switch_efficiency`.
+    Switchover,
+}
+
+impl Combine {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Combine::Sum => "sum",
+            Combine::Max => "max",
+            Combine::Switchover => "switchover",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Combine> {
+        match s {
+            "sum" => Some(Combine::Sum),
+            "max" => Some(Combine::Max),
+            "switchover" => Some(Combine::Switchover),
+            _ => None,
+        }
+    }
+}
+
+/// Merge the sources' patterns into one composite pattern over
+/// `[0, period)`. Every input must span exactly `period` (the synth
+/// builder generates all sources over the spec's duration, so their
+/// last ends are bit-equal to it). `switch_efficiency` only applies to
+/// [`Combine::Switchover`].
+///
+/// # Panics
+///
+/// Panics when `parts` is empty or an input's last segment does not end
+/// exactly at `period` — a hard assert (not `debug_assert`): a
+/// violating input would otherwise pin the boundary cursor below
+/// `period` and spin this loop forever in release builds.
+pub fn merge(
+    parts: &[Piecewise],
+    combine: Combine,
+    switch_efficiency: f64,
+    period: f64,
+) -> Piecewise {
+    assert!(!parts.is_empty(), "merge needs at least one source pattern");
+    for p in parts {
+        assert_eq!(p.period, period, "merge inputs must share the period");
+        assert_eq!(*p.ends.last().unwrap(), period, "merge inputs must span the period");
+    }
+    let mut idx = vec![0usize; parts.len()];
+    let mut buf = SegBuf::new();
+    let mut t = 0.0;
+    while t < period {
+        let power = match combine {
+            Combine::Sum => parts.iter().zip(&idx).map(|(p, &j)| p.powers[j]).sum(),
+            Combine::Max => {
+                parts.iter().zip(&idx).map(|(p, &j)| p.powers[j]).fold(0.0, f64::max)
+            }
+            Combine::Switchover => {
+                switch_efficiency
+                    * parts.iter().zip(&idx).map(|(p, &j)| p.powers[j]).fold(0.0, f64::max)
+            }
+        };
+        // Next union boundary strictly after t (each part's last end is
+        // exactly `period`, so the fold can never exceed it).
+        let next = parts
+            .iter()
+            .zip(&idx)
+            .map(|(p, &j)| p.ends[j])
+            .fold(period, f64::min);
+        buf.push(next - t, power);
+        t = next;
+        for (p, j) in parts.iter().zip(idx.iter_mut()) {
+            while *j + 1 < p.len() && p.ends[*j] <= t {
+                *j += 1;
+            }
+        }
+    }
+    buf.finish(period)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn a() -> Piecewise {
+        Piecewise { ends: vec![2.0, 6.0, 10.0], powers: vec![1.0e-3, 0.0, 2.0e-3], period: 10.0 }
+    }
+
+    fn b() -> Piecewise {
+        Piecewise { ends: vec![5.0, 10.0], powers: vec![0.5e-3, 1.5e-3], period: 10.0 }
+    }
+
+    #[test]
+    fn sum_merges_union_boundaries() {
+        let m = merge(&[a(), b()], Combine::Sum, 1.0, 10.0);
+        assert_eq!(m.ends, vec![2.0, 5.0, 6.0, 10.0]);
+        assert_eq!(m.powers, vec![1.5e-3, 0.5e-3, 1.5e-3, 3.5e-3]);
+        // Energy is additive under Sum.
+        let want = a().energy_per_period() + b().energy_per_period();
+        assert!((m.energy_per_period() - want).abs() < 1e-15);
+    }
+
+    #[test]
+    fn max_selects_the_strongest_source() {
+        let m = merge(&[a(), b()], Combine::Max, 1.0, 10.0);
+        assert_eq!(m.ends, vec![2.0, 5.0, 6.0, 10.0]);
+        assert_eq!(m.powers, vec![1.0e-3, 0.5e-3, 1.5e-3, 2.0e-3]);
+        // Pointwise: max dominates each source, never exceeds the sum.
+        for t in [0.5, 3.0, 5.5, 8.0] {
+            assert!(m.power_at(t) >= a().power_at(t).max(b().power_at(t)) - 1e-18);
+            assert!(m.power_at(t) <= a().power_at(t) + b().power_at(t) + 1e-18);
+        }
+    }
+
+    #[test]
+    fn switchover_scales_the_max_by_the_switch_efficiency() {
+        let m = merge(&[a(), b()], Combine::Switchover, 0.5, 10.0);
+        assert_eq!(m.powers, vec![0.5e-3, 0.25e-3, 0.75e-3, 1.0e-3]);
+        let ideal = merge(&[a(), b()], Combine::Max, 1.0, 10.0);
+        for (got, want) in m.powers.iter().zip(&ideal.powers) {
+            assert_eq!(*got, 0.5 * want);
+        }
+    }
+
+    #[test]
+    fn single_source_sum_is_identity() {
+        let m = merge(&[a()], Combine::Sum, 1.0, 10.0);
+        assert_eq!(m.ends, a().ends);
+        assert_eq!(m.powers, a().powers);
+    }
+
+    #[test]
+    fn equal_powers_recoalesce_across_boundaries() {
+        // Two complementary square waves sum to a constant: the merge
+        // must coalesce back to a single segment.
+        let x = Piecewise { ends: vec![1.0, 2.0], powers: vec![1e-3, 2e-3], period: 2.0 };
+        let y = Piecewise { ends: vec![1.0, 2.0], powers: vec![2e-3, 1e-3], period: 2.0 };
+        let m = merge(&[x, y], Combine::Sum, 1.0, 2.0);
+        assert_eq!(m.ends, vec![2.0]);
+        assert_eq!(m.powers, vec![3e-3]);
+    }
+}

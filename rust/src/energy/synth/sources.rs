@@ -1,0 +1,749 @@
+//! Parametric ambient-energy source models.
+//!
+//! Each model turns a handful of physical knobs plus a seeded [`Rng`]
+//! stream into run-length-coalesced constant-power segments — the
+//! [`Piecewise`] representation the analytic engine steps over — with
+//! **no sampled intermediate**: segment boundaries fall only where the
+//! model actually changes (envelope quantisation ticks, Markov state
+//! flips, burst edges), so a generated environment costs the engine
+//! O(events), never O(seconds/dt).
+//!
+//! The four models cover the harvesting families the paper and the
+//! related amalgamated-harvesting literature draw from:
+//!
+//! * [`SolarSpec`] — diurnal irradiance envelope (sin² day arc, dark
+//!   night) with Markov-modulated two-state cloud occlusion.
+//! * [`RfBurstSpec`] — duty-cycled RF: exponential off gaps interleaved
+//!   with short bursts, optional per-burst field-strength jitter.
+//! * [`ThermalSpec`] — slow thermal-gradient ramp: a raised-cosine cycle
+//!   quantised at a coarse tick, with optional per-tick noise.
+//! * [`KineticSurrogateSpec`] — shaped-noise surrogate of a wrist
+//!   transducer: two-state activity bouts whose in-bout intensity is an
+//!   Ornstein-Uhlenbeck level sampled per tick, saturating at the rated
+//!   output.
+
+use crate::energy::traces::Piecewise;
+use crate::util::json::{self, opt_f64, Value};
+use crate::util::rng::Rng;
+use std::f64::consts::PI;
+
+/// Dwell floor, seconds: no generated state (burst, gap, cloud dwell)
+/// is shorter than this, which bounds worst-case segment counts.
+pub const MIN_DWELL: f64 = 0.05;
+
+/// Segment accumulator: push `(duration, power)` spans, adjacent equal
+/// powers are run-length coalesced, and [`SegBuf::finish`] pins the last
+/// end to the exact pattern duration (no float-accumulation drift at the
+/// wrap seam).
+pub(crate) struct SegBuf {
+    ends: Vec<f64>,
+    powers: Vec<f64>,
+    t: f64,
+}
+
+impl SegBuf {
+    pub(crate) fn new() -> SegBuf {
+        SegBuf { ends: Vec::new(), powers: Vec::new(), t: 0.0 }
+    }
+
+    pub(crate) fn push(&mut self, duration: f64, power: f64) {
+        if duration <= 0.0 {
+            return;
+        }
+        let end = self.t + duration;
+        if let Some(&last_end) = self.ends.last() {
+            if end <= last_end {
+                // A sub-ulp span: `t + duration` rounded back onto the
+                // previous end. Dropping it keeps ends strictly
+                // increasing; the energy lost is below float resolution.
+                return;
+            }
+            if *self.powers.last().unwrap() == power {
+                self.t = end;
+                *self.ends.last_mut().unwrap() = end;
+                return;
+            }
+        }
+        self.t = end;
+        self.ends.push(end);
+        self.powers.push(power);
+    }
+
+    /// Close the pattern at exactly `duration` seconds. The accumulated
+    /// end may differ from `duration` by float noise; the final segment
+    /// absorbs it so `ends.last() == duration` holds bit-exactly (the
+    /// invariant [`Piecewise`] wrapping relies on).
+    pub(crate) fn finish(mut self, duration: f64) -> Piecewise {
+        if self.ends.is_empty() {
+            return Piecewise { ends: vec![duration], powers: vec![0.0], period: duration };
+        }
+        *self.ends.last_mut().unwrap() = duration;
+        // Float drift could leave the penultimate end at/above the pinned
+        // last end; drop any such degenerate tail segments.
+        while self.ends.len() >= 2 && self.ends[self.ends.len() - 2] >= duration {
+            let last = self.ends.len() - 1;
+            self.ends.remove(last - 1);
+            self.powers.remove(last - 1);
+            *self.ends.last_mut().unwrap() = duration;
+        }
+        Piecewise { ends: self.ends, powers: self.powers, period: duration }
+    }
+}
+
+/// One ambient source inside a [`super::SynthSpec`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum SourceSpec {
+    Solar(SolarSpec),
+    Rf(RfBurstSpec),
+    Thermal(ThermalSpec),
+    Kinetic(KineticSurrogateSpec),
+}
+
+/// Diurnal solar with Markov-modulated cloud occlusion.
+///
+/// The clear-sky envelope over one diurnal `period` is a sin² arc across
+/// the daylight window (`day_fraction` of the period) and exactly zero at
+/// night. A two-state Markov chain (exponential dwells `mean_clear` /
+/// `mean_cloud`) multiplies the envelope by 1 or `cloud_attenuation`.
+/// The envelope is quantised at `env_dt` ticks (segment power = envelope
+/// at the tick midpoint), so a generated day is O(period/env_dt)
+/// segments — nights coalesce to single zero segments.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SolarSpec {
+    /// Clear-sky peak output at solar noon, watts.
+    pub peak: f64,
+    /// Fraction of the diurnal period with daylight, (0, 1].
+    pub day_fraction: f64,
+    /// Diurnal period, seconds. Builtin scenarios compress the day so a
+    /// campaign horizon sees several light/dark cycles.
+    pub period: f64,
+    /// Envelope quantisation tick, seconds.
+    pub env_dt: f64,
+    /// Fraction of power surviving an occlusion, [0, 1].
+    pub cloud_attenuation: f64,
+    /// Mean clear-sky dwell, seconds (exponential).
+    pub mean_clear: f64,
+    /// Mean occluded dwell, seconds (exponential).
+    pub mean_cloud: f64,
+}
+
+/// Duty-cycled RF bursts (Mementos/WISP-like): exponential off gaps of
+/// mean `mean_off` interleaved with bursts of mean `mean_on` at
+/// `burst_power`, each burst's level jittered by `1 + jitter·N(0,1)`
+/// (clamped at zero). One burst is one segment.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RfBurstSpec {
+    /// Nominal in-burst output, watts.
+    pub burst_power: f64,
+    /// Mean burst length, seconds (exponential).
+    pub mean_on: f64,
+    /// Mean gap length, seconds (exponential).
+    pub mean_off: f64,
+    /// Relative per-burst amplitude jitter (0 disables).
+    pub jitter: f64,
+}
+
+/// Slow thermal-gradient ramp: `base + amplitude·½(1 − cos 2πt/period)`
+/// quantised at `env_dt`, with optional relative per-tick noise — the
+/// day-scale TEG drift of a device strapped to a warm machine.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ThermalSpec {
+    /// Output floor, watts.
+    pub base: f64,
+    /// Peak rise above the floor, watts.
+    pub amplitude: f64,
+    /// Ramp cycle, seconds.
+    pub period: f64,
+    /// Quantisation tick, seconds.
+    pub env_dt: f64,
+    /// Relative per-tick noise (0 disables).
+    pub noise: f64,
+}
+
+/// Shaped-noise kinetic surrogate: two-state activity (exponential
+/// `mean_active` / `mean_rest` bouts); within a bout the intensity is an
+/// Ornstein-Uhlenbeck level around `mean_power` (relaxation `tau`,
+/// relative std-dev `rel_sigma`) sampled every `env_dt` and clamped to
+/// `[0, max_power]`; rest bouts are exactly zero. A statistical stand-in
+/// for the band-passed wrist-acceleration transducer that needs no
+/// recorded acceleration signal.
+#[derive(Clone, Debug, PartialEq)]
+pub struct KineticSurrogateSpec {
+    /// Mean in-bout output, watts.
+    pub mean_power: f64,
+    /// Transducer rated (saturation) output, watts.
+    pub max_power: f64,
+    /// Mean activity bout, seconds (exponential).
+    pub mean_active: f64,
+    /// Mean rest bout, seconds (exponential).
+    pub mean_rest: f64,
+    /// OU relaxation time, seconds.
+    pub tau: f64,
+    /// OU relative std-dev.
+    pub rel_sigma: f64,
+    /// Intensity sampling tick, seconds.
+    pub env_dt: f64,
+}
+
+impl SourceSpec {
+    /// JSON discriminator.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            SourceSpec::Solar(_) => "solar",
+            SourceSpec::Rf(_) => "rf",
+            SourceSpec::Thermal(_) => "thermal",
+            SourceSpec::Kinetic(_) => "kinetic",
+        }
+    }
+
+    /// Analytic expectation of the source's long-horizon mean power,
+    /// watts — the centre of the statistical band `tests/
+    /// synth_properties.rs` gates generated environments against.
+    pub fn expected_mean_power(&self) -> f64 {
+        match self {
+            SourceSpec::Solar(s) => {
+                // sin² averages to ½ over the day arc; the Markov gain
+                // averages to its stationary mix.
+                let gain = (s.mean_clear + s.cloud_attenuation * s.mean_cloud)
+                    / (s.mean_clear + s.mean_cloud);
+                s.peak * 0.5 * s.day_fraction * gain
+            }
+            SourceSpec::Rf(s) => s.burst_power * s.mean_on / (s.mean_on + s.mean_off),
+            SourceSpec::Thermal(s) => s.base + 0.5 * s.amplitude,
+            SourceSpec::Kinetic(s) => {
+                s.mean_power * s.mean_active / (s.mean_active + s.mean_rest)
+            }
+        }
+    }
+
+    /// Expected number of segments a `duration`-second pattern emits —
+    /// what [`super::SynthSpec::validate`] budgets against so a hostile
+    /// spec cannot demand unbounded generation work.
+    pub fn expected_segments(&self, duration: f64) -> f64 {
+        match self {
+            SourceSpec::Solar(s) => {
+                duration / s.env_dt
+                    + 2.0 * duration / s.mean_clear.min(s.mean_cloud)
+                    + 4.0
+            }
+            SourceSpec::Rf(s) => 2.0 * duration / s.mean_on.min(s.mean_off) + 4.0,
+            SourceSpec::Thermal(s) => duration / s.env_dt + 4.0,
+            SourceSpec::Kinetic(s) => {
+                duration / s.env_dt + 2.0 * duration / s.mean_active.min(s.mean_rest) + 4.0
+            }
+        }
+    }
+
+    /// Parameter validation (everything the JSON parser's finiteness
+    /// guarantee does not already cover).
+    pub fn validate(&self) -> Result<(), String> {
+        fn range(name: &str, x: f64, lo: f64, hi: f64) -> Result<(), String> {
+            if (lo..=hi).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("{name} must be in [{lo}, {hi}] (got {x})"))
+            }
+        }
+        match self {
+            SourceSpec::Solar(s) => {
+                range("solar peak", s.peak, 0.0, 10.0)?;
+                if !(s.day_fraction > 0.0 && s.day_fraction <= 1.0) {
+                    return Err(format!(
+                        "solar day_fraction must be in (0, 1] (got {})",
+                        s.day_fraction
+                    ));
+                }
+                range("solar period", s.period, 10.0, 604800.0)?;
+                range("solar env_dt", s.env_dt, MIN_DWELL, s.period)?;
+                range("solar cloud_attenuation", s.cloud_attenuation, 0.0, 1.0)?;
+                range("solar mean_clear", s.mean_clear, 0.5, 1e6)?;
+                range("solar mean_cloud", s.mean_cloud, 0.5, 1e6)?;
+            }
+            SourceSpec::Rf(s) => {
+                range("rf burst_power", s.burst_power, 0.0, 10.0)?;
+                range("rf mean_on", s.mean_on, MIN_DWELL, 1e6)?;
+                range("rf mean_off", s.mean_off, MIN_DWELL, 1e6)?;
+                range("rf jitter", s.jitter, 0.0, 3.0)?;
+            }
+            SourceSpec::Thermal(s) => {
+                range("thermal base", s.base, 0.0, 10.0)?;
+                range("thermal amplitude", s.amplitude, 0.0, 10.0)?;
+                range("thermal period", s.period, 10.0, 604800.0)?;
+                range("thermal env_dt", s.env_dt, MIN_DWELL, s.period)?;
+                range("thermal noise", s.noise, 0.0, 3.0)?;
+            }
+            SourceSpec::Kinetic(s) => {
+                range("kinetic mean_power", s.mean_power, 0.0, 10.0)?;
+                if !(s.max_power > 0.0 && s.max_power <= 10.0) {
+                    return Err(format!(
+                        "kinetic max_power must be in (0, 10] (got {})",
+                        s.max_power
+                    ));
+                }
+                range("kinetic mean_active", s.mean_active, 0.5, 1e6)?;
+                range("kinetic mean_rest", s.mean_rest, 0.5, 1e6)?;
+                range("kinetic tau", s.tau, MIN_DWELL, 1e6)?;
+                range("kinetic rel_sigma", s.rel_sigma, 0.0, 3.0)?;
+                range("kinetic env_dt", s.env_dt, MIN_DWELL, 1e6)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Generate one `duration`-second pattern from this source's own
+    /// seeded stream. Callers pass a stream forked per source index by
+    /// [`super::SynthSpec::build`].
+    pub fn generate(&self, duration: f64, rng: &mut Rng) -> Piecewise {
+        match self {
+            SourceSpec::Solar(s) => generate_solar(s, duration, rng),
+            SourceSpec::Rf(s) => generate_rf(s, duration, rng),
+            SourceSpec::Thermal(s) => generate_thermal(s, duration, rng),
+            SourceSpec::Kinetic(s) => generate_kinetic(s, duration, rng),
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        match self {
+            SourceSpec::Solar(s) => Value::obj(vec![
+                ("kind", "solar".into()),
+                ("peak", s.peak.into()),
+                ("day_fraction", s.day_fraction.into()),
+                ("period", s.period.into()),
+                ("env_dt", s.env_dt.into()),
+                ("cloud_attenuation", s.cloud_attenuation.into()),
+                ("mean_clear", s.mean_clear.into()),
+                ("mean_cloud", s.mean_cloud.into()),
+            ]),
+            SourceSpec::Rf(s) => Value::obj(vec![
+                ("kind", "rf".into()),
+                ("burst_power", s.burst_power.into()),
+                ("mean_on", s.mean_on.into()),
+                ("mean_off", s.mean_off.into()),
+                ("jitter", s.jitter.into()),
+            ]),
+            SourceSpec::Thermal(s) => Value::obj(vec![
+                ("kind", "thermal".into()),
+                ("base", s.base.into()),
+                ("amplitude", s.amplitude.into()),
+                ("period", s.period.into()),
+                ("env_dt", s.env_dt.into()),
+                ("noise", s.noise.into()),
+            ]),
+            SourceSpec::Kinetic(s) => Value::obj(vec![
+                ("kind", "kinetic".into()),
+                ("mean_power", s.mean_power.into()),
+                ("max_power", s.max_power.into()),
+                ("mean_active", s.mean_active.into()),
+                ("mean_rest", s.mean_rest.into()),
+                ("tau", s.tau.into()),
+                ("rel_sigma", s.rel_sigma.into()),
+                ("env_dt", s.env_dt.into()),
+            ]),
+        }
+    }
+
+    pub fn from_json(v: &Value) -> Result<SourceSpec, String> {
+        let obj = v.as_obj().ok_or("source must be a JSON object")?;
+        let kind = v.get("kind").as_str().ok_or("source needs a string 'kind'")?;
+        let keys: &[&str] = match kind {
+            "solar" => &[
+                "kind", "peak", "day_fraction", "period", "env_dt", "cloud_attenuation",
+                "mean_clear", "mean_cloud",
+            ],
+            "rf" => &["kind", "burst_power", "mean_on", "mean_off", "jitter"],
+            "thermal" => &["kind", "base", "amplitude", "period", "env_dt", "noise"],
+            "kinetic" => &[
+                "kind", "mean_power", "max_power", "mean_active", "mean_rest", "tau",
+                "rel_sigma", "env_dt",
+            ],
+            _ => {
+                return Err(format!(
+                    "unknown source kind '{kind}' (expected solar|rf|thermal|kinetic)"
+                ))
+            }
+        };
+        for key in obj.keys() {
+            if !keys.contains(&key.as_str()) {
+                return Err(format!("unknown {kind} source key '{key}'"));
+            }
+        }
+        // Every numeric field is required: a synth source is a physical
+        // model, and silent defaults would make two specs that look
+        // different generate identical environments.
+        let req = |key: &str| -> Result<f64, String> {
+            opt_f64(v, key)?.ok_or_else(|| format!("{kind} source needs a number '{key}'"))
+        };
+        let spec = match kind {
+            "solar" => SourceSpec::Solar(SolarSpec {
+                peak: req("peak")?,
+                day_fraction: req("day_fraction")?,
+                period: req("period")?,
+                env_dt: req("env_dt")?,
+                cloud_attenuation: req("cloud_attenuation")?,
+                mean_clear: req("mean_clear")?,
+                mean_cloud: req("mean_cloud")?,
+            }),
+            "rf" => SourceSpec::Rf(RfBurstSpec {
+                burst_power: req("burst_power")?,
+                mean_on: req("mean_on")?,
+                mean_off: req("mean_off")?,
+                jitter: req("jitter")?,
+            }),
+            "thermal" => SourceSpec::Thermal(ThermalSpec {
+                base: req("base")?,
+                amplitude: req("amplitude")?,
+                period: req("period")?,
+                env_dt: req("env_dt")?,
+                noise: req("noise")?,
+            }),
+            _ => SourceSpec::Kinetic(KineticSurrogateSpec {
+                mean_power: req("mean_power")?,
+                max_power: req("max_power")?,
+                mean_active: req("mean_active")?,
+                mean_rest: req("mean_rest")?,
+                tau: req("tau")?,
+                rel_sigma: req("rel_sigma")?,
+                env_dt: req("env_dt")?,
+            }),
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Round-trip helper for diagnostics.
+    pub fn to_json_string(&self) -> String {
+        json::to_string_pretty(&self.to_json())
+    }
+}
+
+/// Diurnal clear-sky envelope at phase `t ∈ [0, period)`.
+fn solar_envelope(s: &SolarSpec, phase: f64) -> f64 {
+    let day_len = s.day_fraction * s.period;
+    if phase < day_len {
+        let x = phase / day_len;
+        s.peak * (PI * x).sin().powi(2)
+    } else {
+        0.0
+    }
+}
+
+fn generate_solar(s: &SolarSpec, duration: f64, rng: &mut Rng) -> Piecewise {
+    let day_len = s.day_fraction * s.period;
+    // Start in the stationary state mix so short patterns are unbiased.
+    let p_cloud = s.mean_cloud / (s.mean_clear + s.mean_cloud);
+    let mut clear = !rng.chance(p_cloud);
+    let dwell = |rng: &mut Rng, clear: bool| -> f64 {
+        let mean = if clear { s.mean_clear } else { s.mean_cloud };
+        rng.exponential(1.0 / mean).max(MIN_DWELL)
+    };
+    let mut flip_at = dwell(rng, clear);
+    let mut buf = SegBuf::new();
+    let mut t = 0.0;
+    while t < duration {
+        let phase = t - (t / s.period).floor() * s.period;
+        // Next model event: envelope tick, cloud flip, or day/night edge.
+        let day_edge = if phase < day_len {
+            t + (day_len - phase)
+        } else {
+            t + (s.period - phase)
+        };
+        let mut end = (t + s.env_dt).min(flip_at).min(day_edge).min(duration);
+        if end <= t {
+            end = (t + MIN_DWELL).min(duration);
+        }
+        let mid = 0.5 * (t + end);
+        let pm = mid - (mid / s.period).floor() * s.period;
+        let gain = if clear { 1.0 } else { s.cloud_attenuation };
+        buf.push(end - t, (solar_envelope(s, pm) * gain).max(0.0));
+        t = end;
+        if t >= flip_at {
+            clear = !clear;
+            flip_at = t + dwell(rng, clear);
+        }
+    }
+    buf.finish(duration)
+}
+
+fn generate_rf(s: &RfBurstSpec, duration: f64, rng: &mut Rng) -> Piecewise {
+    let mut buf = SegBuf::new();
+    let mut t = 0.0;
+    let mut on = false; // gaps lead, matching the committed RF trace
+    while t < duration {
+        let remaining = duration - t;
+        let mean = if on { s.mean_on } else { s.mean_off };
+        let drawn = rng.exponential(1.0 / mean).max(MIN_DWELL);
+        // The ≥ MIN_DWELL floor guarantees strict progress; a draw that
+        // reaches the end closes the pattern exactly at `duration`.
+        let (len, next_t) =
+            if drawn >= remaining { (remaining, duration) } else { (drawn, t + drawn) };
+        let power = if on {
+            (s.burst_power * (1.0 + s.jitter * rng.gaussian())).max(0.0)
+        } else {
+            0.0
+        };
+        buf.push(len, power);
+        t = next_t;
+        on = !on;
+    }
+    buf.finish(duration)
+}
+
+fn generate_thermal(s: &ThermalSpec, duration: f64, rng: &mut Rng) -> Piecewise {
+    let mut buf = SegBuf::new();
+    let mut t = 0.0;
+    while t < duration {
+        let end = (t + s.env_dt).min(duration);
+        let mid = 0.5 * (t + end);
+        let pm = mid - (mid / s.period).floor() * s.period;
+        let curve = s.base + 0.5 * s.amplitude * (1.0 - (2.0 * PI * pm / s.period).cos());
+        let noisy = if s.noise > 0.0 { curve * (1.0 + s.noise * rng.gaussian()) } else { curve };
+        buf.push(end - t, noisy.max(0.0));
+        t = end;
+    }
+    buf.finish(duration)
+}
+
+fn generate_kinetic(s: &KineticSurrogateSpec, duration: f64, rng: &mut Rng) -> Piecewise {
+    let duty = s.mean_active / (s.mean_active + s.mean_rest);
+    let mut active = rng.chance(duty);
+    let bout = |rng: &mut Rng, active: bool| -> f64 {
+        let mean = if active { s.mean_active } else { s.mean_rest };
+        rng.exponential(1.0 / mean).max(MIN_DWELL)
+    };
+    let mut bout_end = bout(rng, active);
+    let sigma = s.rel_sigma * s.mean_power;
+    let mut level = s.mean_power;
+    let mut buf = SegBuf::new();
+    let mut t = 0.0;
+    while t < duration {
+        if active {
+            let end = (t + s.env_dt).min(bout_end).min(duration);
+            let dt = end - t;
+            // OU step toward the bout mean (same discretisation as the
+            // committed solar traces). The *state* is clamped, not just
+            // the emitted power: with env_dt > 2·tau the explicit Euler
+            // step is amplifying (|1 − dt/τ| > 1) and an unclamped level
+            // would diverge to ±inf — physically the transducer
+            // saturates, so the state pins to the rails instead.
+            level += (s.mean_power - level) * dt / s.tau
+                + sigma * (2.0 * dt / s.tau).sqrt() * rng.gaussian();
+            level = level.clamp(0.0, s.max_power);
+            buf.push(dt, level);
+            t = end;
+        } else {
+            let end = bout_end.min(duration);
+            buf.push(end - t, 0.0);
+            t = end;
+        }
+        if t >= bout_end && t < duration {
+            active = !active;
+            bout_end = t + bout(rng, active);
+            level = s.mean_power; // each bout re-centres the intensity
+        }
+    }
+    buf.finish(duration)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn segbuf_coalesces_and_pins_the_end() {
+        let mut b = SegBuf::new();
+        b.push(1.0, 0.0);
+        b.push(2.0, 0.0); // coalesces
+        b.push(1.5, 2e-3);
+        b.push(0.0, 9.0); // zero-length: dropped
+        b.push(0.5, 2e-3); // coalesces
+        let pw = b.finish(5.0);
+        assert_eq!(pw.ends, vec![3.0, 5.0]);
+        assert_eq!(pw.powers, vec![0.0, 2e-3]);
+        assert_eq!(pw.period, 5.0);
+    }
+
+    #[test]
+    fn empty_buf_finishes_as_zero_pattern() {
+        let pw = SegBuf::new().finish(7.0);
+        assert_eq!(pw.ends, vec![7.0]);
+        assert_eq!(pw.powers, vec![0.0]);
+    }
+
+    #[test]
+    fn solar_night_is_dark_and_day_peaks_at_noon() {
+        let s = SolarSpec {
+            peak: 3e-3,
+            day_fraction: 0.5,
+            period: 600.0,
+            env_dt: 5.0,
+            cloud_attenuation: 1.0, // clouds change nothing: pure envelope
+            mean_clear: 100.0,
+            mean_cloud: 100.0,
+        };
+        let pw = generate_solar(&s, 600.0, &mut Rng::new(1));
+        // Night half of the cycle is exactly zero.
+        assert_eq!(pw.power_at(450.0), 0.0);
+        assert_eq!(pw.power_at(599.0), 0.0);
+        // Noon (t=150) beats morning (t=30) and is near the peak.
+        assert!(pw.power_at(150.0) > 0.9 * s.peak);
+        assert!(pw.power_at(150.0) > pw.power_at(30.0));
+        assert!(pw.power_at(150.0) <= s.peak + 1e-15);
+    }
+
+    #[test]
+    fn solar_clouds_attenuate() {
+        let clear = SolarSpec {
+            peak: 3e-3,
+            day_fraction: 1.0,
+            period: 600.0,
+            env_dt: 5.0,
+            cloud_attenuation: 1.0,
+            mean_clear: 1e6,
+            mean_cloud: 0.5,
+            // mean_clear ≫: effectively always clear
+        };
+        let cloudy = SolarSpec {
+            cloud_attenuation: 0.2,
+            mean_clear: 10.0,
+            mean_cloud: 30.0,
+            ..clear.clone()
+        };
+        let a = generate_solar(&clear, 1800.0, &mut Rng::new(3)).mean_power();
+        let b = generate_solar(&cloudy, 1800.0, &mut Rng::new(3)).mean_power();
+        assert!(b < 0.8 * a, "clouds must bite: clear={a} cloudy={b}");
+    }
+
+    #[test]
+    fn rf_bursts_are_sparse_segments() {
+        let s = RfBurstSpec { burst_power: 1.6e-3, mean_on: 0.5, mean_off: 4.5, jitter: 0.35 };
+        let pw = generate_rf(&s, 1800.0, &mut Rng::new(5));
+        // ~2 segments per on/off pair: far fewer than a 10 ms sample grid.
+        assert!(pw.len() < 3000, "{} segments", pw.len());
+        assert!(pw.powers.iter().all(|&p| p >= 0.0));
+        // Mean lands near the duty-cycled expectation.
+        let expect = SourceSpec::Rf(s).expected_mean_power();
+        let got = pw.mean_power();
+        assert!((0.5 * expect..2.0 * expect).contains(&got), "mean {got} vs {expect}");
+        // Off time dominates: the zero segments cover most of the pattern.
+        let zero_time: f64 = (0..pw.len())
+            .filter(|&i| pw.powers[i] == 0.0)
+            .map(|i| pw.ends[i] - pw.start(i))
+            .sum();
+        assert!(zero_time > 0.7 * 1800.0, "zero time {zero_time}");
+    }
+
+    #[test]
+    fn thermal_ramp_cycles_between_base_and_peak() {
+        let s = ThermalSpec {
+            base: 1e-4,
+            amplitude: 4e-4,
+            period: 600.0,
+            env_dt: 10.0,
+            noise: 0.0,
+        };
+        let pw = generate_thermal(&s, 600.0, &mut Rng::new(7));
+        assert_eq!(pw.len(), 60);
+        // Trough near the base, crest near base+amplitude.
+        assert!(pw.power_at(5.0) < s.base + 0.1 * s.amplitude);
+        assert!(pw.power_at(300.0) > s.base + 0.9 * s.amplitude);
+    }
+
+    #[test]
+    fn kinetic_rests_are_zero_and_bouts_saturate() {
+        let s = KineticSurrogateSpec {
+            mean_power: 1.2e-3,
+            max_power: 2e-3,
+            mean_active: 60.0,
+            mean_rest: 60.0,
+            tau: 10.0,
+            rel_sigma: 1.0, // violent: exercises both clamps
+            env_dt: 2.0,
+        };
+        let pw = generate_kinetic(&s, 3600.0, &mut Rng::new(9));
+        assert!(pw.powers.iter().all(|&p| (0.0..=s.max_power).contains(&p)));
+        assert!(pw.powers.iter().any(|&p| p == 0.0), "no rest bout in an hour");
+        assert!(pw.powers.iter().any(|&p| p > 0.5e-3), "no active bout in an hour");
+    }
+
+    #[test]
+    fn kinetic_stays_finite_when_the_euler_step_is_amplifying() {
+        // env_dt ≫ tau makes the explicit OU step amplifying
+        // (|1 − dt/τ| ≫ 1); the clamped state must pin to the rails
+        // instead of diverging to ±inf/NaN.
+        let s = KineticSurrogateSpec {
+            mean_power: 1e-3,
+            max_power: 8e-3,
+            mean_active: 1000.0,
+            mean_rest: 0.5,
+            tau: 0.05,
+            rel_sigma: 0.5,
+            env_dt: 10.0,
+        };
+        let pw = generate_kinetic(&s, 1800.0, &mut Rng::new(13));
+        assert!(
+            pw.powers.iter().all(|&p| p.is_finite() && (0.0..=s.max_power).contains(&p)),
+            "amplifying OU step escaped the rails"
+        );
+    }
+
+    #[test]
+    fn source_json_round_trips() {
+        let sources = [
+            SourceSpec::Solar(SolarSpec {
+                peak: 3e-3,
+                day_fraction: 0.5,
+                period: 900.0,
+                env_dt: 5.0,
+                cloud_attenuation: 0.25,
+                mean_clear: 90.0,
+                mean_cloud: 30.0,
+            }),
+            SourceSpec::Rf(RfBurstSpec {
+                burst_power: 1.6e-3,
+                mean_on: 0.5,
+                mean_off: 4.5,
+                jitter: 0.35,
+            }),
+            SourceSpec::Thermal(ThermalSpec {
+                base: 1e-4,
+                amplitude: 3e-4,
+                period: 450.0,
+                env_dt: 10.0,
+                noise: 0.1,
+            }),
+            SourceSpec::Kinetic(KineticSurrogateSpec {
+                mean_power: 1.2e-3,
+                max_power: 8e-3,
+                mean_active: 120.0,
+                mean_rest: 90.0,
+                tau: 10.0,
+                rel_sigma: 0.5,
+                env_dt: 2.0,
+            }),
+        ];
+        for src in sources {
+            let v = src.to_json();
+            let back = SourceSpec::from_json(&v).expect("round trip");
+            assert_eq!(back, src);
+        }
+    }
+
+    #[test]
+    fn source_json_rejects_bad_input() {
+        let bad = [
+            r#"{"kind": "plasma"}"#,
+            r#"{"kind": "rf", "burst_power": 0.001, "mean_on": 0.5, "mean_off": 4.5}"#,
+            r#"{"kind": "rf", "burst_power": 0.001, "mean_on": 0.5, "mean_off": 4.5, "jitter": 0.1, "extra": 1}"#,
+            r#"{"kind": "rf", "burst_power": -1, "mean_on": 0.5, "mean_off": 4.5, "jitter": 0}"#,
+            r#"{"kind": "rf", "burst_power": "x", "mean_on": 0.5, "mean_off": 4.5, "jitter": 0}"#,
+            r#"{"kind": "thermal", "base": 0.0001, "amplitude": 0.0003, "period": 1, "env_dt": 10, "noise": 0}"#,
+            r#"{"kind": "solar", "peak": 0.003, "day_fraction": 0, "period": 600, "env_dt": 5, "cloud_attenuation": 0.3, "mean_clear": 60, "mean_cloud": 20}"#,
+            r#"{"kind": "kinetic", "mean_power": 0.001, "max_power": 0, "mean_active": 60, "mean_rest": 60, "tau": 10, "rel_sigma": 0.5, "env_dt": 2}"#,
+            r#"[]"#,
+        ];
+        for text in bad {
+            let v = json::parse(text).expect("valid JSON");
+            assert!(SourceSpec::from_json(&v).is_err(), "accepted: {text}");
+        }
+    }
+}

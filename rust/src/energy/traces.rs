@@ -167,6 +167,32 @@ impl Piecewise {
         }
         (0..self.len()).map(|i| self.powers[i] * (self.ends[i] - self.start(i))).sum()
     }
+
+    /// Power at absolute time `t`, wrapping with the period — the
+    /// segment-native twin of [`PowerTrace::power_at`]. Generators that
+    /// emit `Piecewise` directly (the `energy::synth` environments) have
+    /// no sample grid to fall back on, so point sampling lives here.
+    #[inline]
+    pub fn power_at(&self, t: f64) -> f64 {
+        if self.is_empty() {
+            return 0.0;
+        }
+        let (_, idx) = self.locate(t.max(0.0));
+        self.powers[idx]
+    }
+
+    /// Mean power over one period, watts (the segment power itself for a
+    /// constant source).
+    pub fn mean_power(&self) -> f64 {
+        if self.is_empty() {
+            return 0.0;
+        }
+        if self.period.is_finite() && self.period > 0.0 {
+            self.energy_per_period() / self.period
+        } else {
+            self.powers[0]
+        }
+    }
 }
 
 /// The five paper traces.

@@ -31,6 +31,10 @@ COMMANDS:
   fig15           imaging latency distribution per trace
   audio           anytime acoustic event detection on the five ambient
                   traces (the third workload's builtin grid)
+  synth_solar     imaging on a generated diurnal-solar environment family
+  synth_rf        audio on a generated duty-cycled RF environment family
+  synth_multi     HAR on a generated multi-source (amalgamated) device
+                  (10 environment seeds each; see energy/synth)
   all             every figure in sequence
   sweep FILE      run a scenario file: any workload (har|img|audio) x
                   harvester x device x policy x seed grid (also:
@@ -38,9 +42,10 @@ COMMANDS:
   traces          synthetic energy trace statistics (Fig. 11)
   artifacts-check load + execute every AOT artifact through PJRT
   simulate        one campaign: --policy greedy|smartNN|chinchilla|alpaca|continuous
-                  --trace rf|som|sim|sor|sir|kinetic --horizon secs
+                  --supply rf|som|sim|sor|sir|kinetic|synth:SPEC.json
+                  (--trace is an alias) --horizon secs
                   --workload har|img|audio (default: har on kinetic,
-                  img on ambient traces)
+                  img on everything else)
 
 OPTIONS:
   --out DIR       output directory for CSV/JSON (default: out)
@@ -217,13 +222,38 @@ fn run_simulate(args: &Args, seed: u64, engine: Option<EngineKind>) {
         }
     };
     let horizon = args.get_f64("horizon", 3600.0);
-    let trace = args.get_or("trace", "kinetic").to_string();
-    // Like --policy: an unknown trace is an error, not a silent
-    // fallback. Parsed once — every workload runs on any supply.
-    let Some(harvester) = HarvesterSpec::from_name(&trace.to_lowercase()) else {
-        eprintln!("error: unknown trace '{trace}' (expected rf|som|sim|sor|sir|kinetic)\n");
-        eprint!("{USAGE}");
-        std::process::exit(2);
+    let supply =
+        args.get("supply").or_else(|| args.get("trace")).unwrap_or("kinetic").to_string();
+    // Like --policy: an unknown supply is an error, not a silent
+    // fallback. Parsed once — every workload runs on any supply,
+    // including generated synth environments (`synth:<spec.json>`).
+    let harvester = if let Some(path) = supply.strip_prefix("synth:") {
+        let text = match std::fs::read_to_string(path) {
+            Ok(text) => text,
+            Err(e) => {
+                eprintln!("error: cannot read synth spec '{path}': {e}");
+                std::process::exit(2);
+            }
+        };
+        match aic::energy::synth::SynthSpec::parse(&text) {
+            Ok(spec) => HarvesterSpec::Synth(spec),
+            Err(e) => {
+                eprintln!("error: synth spec '{path}': {e}");
+                std::process::exit(2);
+            }
+        }
+    } else {
+        match HarvesterSpec::from_name(&supply.to_lowercase()) {
+            Some(h) => h,
+            None => {
+                eprintln!(
+                    "error: unknown supply '{supply}' \
+                     (expected rf|som|sim|sor|sir|kinetic|synth:SPEC.json)\n"
+                );
+                eprint!("{USAGE}");
+                std::process::exit(2);
+            }
+        }
     };
     let device = DeviceSpec { engine, ..DeviceSpec::default() };
     let workload = args
@@ -235,7 +265,7 @@ fn run_simulate(args: &Args, seed: u64, engine: Option<EngineKind>) {
     match workload.as_str() {
         "audio" => {
             let spec = AudioRunSpec { horizon, stream_seed: seed, ..Default::default() };
-            let c = experiment::run_audio_policy_on(&spec, harvester, policy, &device);
+            let c = experiment::run_audio_policy_on(&spec, harvester.clone(), policy, &device);
             println!(
                 "AUDIO {} on {}: {} results, {} cycles, {} failures, acc {}, app {:.2} mJ, state {:.2} mJ",
                 policy.name(),
@@ -251,7 +281,8 @@ fn run_simulate(args: &Args, seed: u64, engine: Option<EngineKind>) {
         "har" => {
             let ctx = HarContext::build(seed ^ 0xC0FFEE);
             let spec = HarRunSpec { horizon, sample_period: 60.0, script_seed: seed };
-            let c = experiment::run_har_policy_on(&ctx, &spec, harvester, policy, &device);
+            let c =
+                experiment::run_har_policy_on(&ctx, &spec, harvester.clone(), policy, &device);
             println!(
                 "HAR {} on {}: {} results, {} cycles, {} failures, acc {}, app {:.2} mJ, state {:.2} mJ",
                 policy.name(),
@@ -266,7 +297,7 @@ fn run_simulate(args: &Args, seed: u64, engine: Option<EngineKind>) {
         }
         "img" => {
             let spec = ImgRunSpec { horizon, trace_seed: seed, ..Default::default() };
-            let c = experiment::run_img_policy_on(&spec, harvester, policy, &device);
+            let c = experiment::run_img_policy_on(&spec, harvester.clone(), policy, &device);
             println!(
                 "IMG {} on {}: {} results, {} cycles, {} failures, app {:.2} mJ, state {:.2} mJ",
                 policy.name(),

@@ -120,6 +120,58 @@ impl From<bool> for Value {
     }
 }
 
+// Typed optional accessors shared by every JSON-spec reader (scenarios,
+// synth environments): a missing key is `Ok(None)`, a present-but-
+// mistyped value is a hard error — never a silent fall-back to a
+// default (the same contract unknown-key checks enforce).
+
+pub fn opt_str<'a>(v: &'a Value, key: &str) -> Result<Option<&'a str>, String> {
+    match v.get(key) {
+        Value::Null => Ok(None),
+        other => other.as_str().map(Some).ok_or_else(|| format!("'{key}' must be a string")),
+    }
+}
+
+pub fn opt_f64(v: &Value, key: &str) -> Result<Option<f64>, String> {
+    match v.get(key) {
+        Value::Null => Ok(None),
+        other => other.as_f64().map(Some).ok_or_else(|| format!("'{key}' must be a number")),
+    }
+}
+
+pub fn opt_usize(v: &Value, key: &str) -> Result<Option<usize>, String> {
+    match v.get(key) {
+        Value::Null => Ok(None),
+        other => other
+            .as_u64()
+            .map(|n| Some(n as usize))
+            .ok_or_else(|| format!("'{key}' must be an unsigned integer")),
+    }
+}
+
+pub fn opt_u64(v: &Value, key: &str) -> Result<Option<u64>, String> {
+    match v.get(key) {
+        Value::Null => Ok(None),
+        other => {
+            other.as_u64().map(Some).ok_or_else(|| format!("'{key}' must be an unsigned integer"))
+        }
+    }
+}
+
+pub fn opt_bool(v: &Value, key: &str) -> Result<Option<bool>, String> {
+    match v.get(key) {
+        Value::Null => Ok(None),
+        other => other.as_bool().map(Some).ok_or_else(|| format!("'{key}' must be a boolean")),
+    }
+}
+
+pub fn opt_arr<'a>(v: &'a Value, key: &str) -> Result<Option<&'a [Value]>, String> {
+    match v.get(key) {
+        Value::Null => Ok(None),
+        other => other.as_arr().map(Some).ok_or_else(|| format!("'{key}' must be an array")),
+    }
+}
+
 /// Parse error with byte offset.
 #[derive(Debug)]
 pub struct ParseError {

@@ -132,6 +132,81 @@ pub fn property<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(
     }
 }
 
+/// Assert two campaigns of the same cell agree within the tolerance the
+/// fixed-step reference integrator's own `charge_dt = 0.02` s
+/// discretisation introduces: per-round outcomes, power-cycle counts and
+/// ledger totals. Generic over the output type — the comparison is
+/// structural (outputs may legitimately differ when boot-time jitter
+/// shifts an acquisition across a scene boundary).
+///
+/// This is the engine-equivalence gate shared by
+/// `tests/engine_equivalence.rs` (replay and kinetic supplies) and
+/// `tests/synth_properties.rs` (generated synthetic environments).
+pub fn assert_campaigns_close<O>(
+    name: &str,
+    a: &crate::exec::Campaign<O>,
+    r: &crate::exec::Campaign<O>,
+) {
+    let du = |x: u64, y: u64| x.abs_diff(y);
+    assert!(
+        du(a.power_cycles, r.power_cycles) <= (r.power_cycles / 7).max(3),
+        "{name}: power cycles {} (analytic) vs {} (reference)",
+        a.power_cycles,
+        r.power_cycles
+    );
+    assert!(
+        du(a.power_failures, r.power_failures) <= (r.power_failures / 7).max(3),
+        "{name}: failures {} vs {}",
+        a.power_failures,
+        r.power_failures
+    );
+    assert!(
+        (a.rounds.len() as i64 - r.rounds.len() as i64).abs() <= 3,
+        "{name}: rounds {} vs {}",
+        a.rounds.len(),
+        r.rounds.len()
+    );
+    let ea = a.app_energy + a.state_energy;
+    let er = r.app_energy + r.state_energy;
+    assert!(
+        (ea - er).abs() / er.max(1e-12) < 0.08,
+        "{name}: ledger total {ea} vs {er}"
+    );
+    let emitted_a = a.emitted().count() as i64;
+    let emitted_r = r.emitted().count() as i64;
+    assert!(
+        (emitted_a - emitted_r).abs() <= 3,
+        "{name}: emitted {emitted_a} vs {emitted_r}"
+    );
+    let aligned = a.rounds.len().min(r.rounds.len());
+    let mut outcome_mismatches = 0usize;
+    for (i, (ra, rr)) in a.rounds.iter().zip(r.rounds.iter()).enumerate() {
+        if ra.emitted_at.is_some() != rr.emitted_at.is_some() {
+            outcome_mismatches += 1;
+        }
+        assert!(
+            (ra.steps_executed as i64 - rr.steps_executed as i64).abs() <= 12,
+            "{name} round {i}: steps {} vs {}",
+            ra.steps_executed,
+            rr.steps_executed
+        );
+        // Boot-time jitter bounds the acquisition skew: one stride of
+        // discretisation, amplified at worst by one burst gap on the
+        // bursty traces (waiting out the next burst). Slot sleeps
+        // re-align the engines every round, so skew does not compound.
+        assert!(
+            (ra.acquired_at - rr.acquired_at).abs() <= 30.0,
+            "{name} round {i}: acquired at {} vs {}",
+            ra.acquired_at,
+            rr.acquired_at
+        );
+    }
+    assert!(
+        outcome_mismatches * 5 <= aligned.max(1),
+        "{name}: {outcome_mismatches}/{aligned} rounds flipped emitted/dropped"
+    );
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

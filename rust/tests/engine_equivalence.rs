@@ -24,9 +24,8 @@ use aic::exec::approx::{run as run_approx, ApproxConfig};
 use aic::exec::chinchilla::{run as run_chinchilla, ChinchillaConfig};
 use aic::exec::engine::{Engine, EngineConfig, EngineKind, Ledger};
 use aic::exec::program::SyntheticProgram;
-use aic::exec::Campaign;
 use aic::util::rng::Rng;
-use aic::util::testkit::{property, Gen};
+use aic::util::testkit::{assert_campaigns_close, property, Gen};
 use std::f64::consts::PI;
 
 /// An (analytic, fixed-step reference) engine pair on the same device.
@@ -228,71 +227,9 @@ fn supplies() -> Vec<(String, Harvester)> {
     out
 }
 
-/// Per-round outcomes, power-cycle counts and ledger totals within the
-/// tolerance the reference's own 0.02 s discretisation introduces.
-/// Generic over the output type: the comparison is structural (outputs
-/// may legitimately differ when boot-time jitter shifts an acquisition
-/// across a scene boundary).
-fn assert_campaigns_close<O>(name: &str, a: &Campaign<O>, r: &Campaign<O>) {
-    let du = |x: u64, y: u64| x.abs_diff(y);
-    assert!(
-        du(a.power_cycles, r.power_cycles) <= (r.power_cycles / 7).max(3),
-        "{name}: power cycles {} (analytic) vs {} (reference)",
-        a.power_cycles,
-        r.power_cycles
-    );
-    assert!(
-        du(a.power_failures, r.power_failures) <= (r.power_failures / 7).max(3),
-        "{name}: failures {} vs {}",
-        a.power_failures,
-        r.power_failures
-    );
-    assert!(
-        (a.rounds.len() as i64 - r.rounds.len() as i64).abs() <= 3,
-        "{name}: rounds {} vs {}",
-        a.rounds.len(),
-        r.rounds.len()
-    );
-    let ea = a.app_energy + a.state_energy;
-    let er = r.app_energy + r.state_energy;
-    assert!(
-        (ea - er).abs() / er.max(1e-12) < 0.08,
-        "{name}: ledger total {ea} vs {er}"
-    );
-    let emitted_a = a.emitted().count() as i64;
-    let emitted_r = r.emitted().count() as i64;
-    assert!(
-        (emitted_a - emitted_r).abs() <= 3,
-        "{name}: emitted {emitted_a} vs {emitted_r}"
-    );
-    let aligned = a.rounds.len().min(r.rounds.len());
-    let mut outcome_mismatches = 0usize;
-    for (i, (ra, rr)) in a.rounds.iter().zip(r.rounds.iter()).enumerate() {
-        if ra.emitted_at.is_some() != rr.emitted_at.is_some() {
-            outcome_mismatches += 1;
-        }
-        assert!(
-            (ra.steps_executed as i64 - rr.steps_executed as i64).abs() <= 12,
-            "{name} round {i}: steps {} vs {}",
-            ra.steps_executed,
-            rr.steps_executed
-        );
-        // Boot-time jitter bounds the acquisition skew: one stride of
-        // discretisation, amplified at worst by one burst gap on the
-        // bursty traces (waiting out the next burst). Slot sleeps
-        // re-align the engines every round, so skew does not compound.
-        assert!(
-            (ra.acquired_at - rr.acquired_at).abs() <= 30.0,
-            "{name} round {i}: acquired at {} vs {}",
-            ra.acquired_at,
-            rr.acquired_at
-        );
-    }
-    assert!(
-        outcome_mismatches * 5 <= aligned.max(1),
-        "{name}: {outcome_mismatches}/{aligned} rounds flipped emitted/dropped"
-    );
-}
+// `assert_campaigns_close` moved to `util::testkit` so the synthetic-
+// environment suite (`tests/synth_properties.rs`) gates its supplies
+// through the exact same tolerance contract.
 
 #[test]
 fn golden_greedy_campaigns_match_reference_on_all_supplies() {

@@ -4,11 +4,16 @@
 //! `Scenario::parse`; nothing a file contains may panic (or overflow the
 //! stack) — malformed input must come back as `Err`. This suite feeds
 //! the parser truncations and byte-level mutations of every committed
-//! `examples/scenarios/*.json`, hand-built type-swaps, NaN/Inf number
-//! literals, and hostile deep nesting. Whenever a mutation happens to
-//! still parse, the plan expansion and validation must not panic either.
+//! `examples/scenarios/*.json` (which now includes the embedded-synth
+//! grids), hand-built type-swaps, NaN/Inf number literals, and hostile
+//! deep nesting. Whenever a mutation happens to still parse, the plan
+//! expansion and validation must not panic either. Standalone
+//! `SynthSpec` documents (`aic simulate --supply synth:<file>`) get the
+//! same treatment, with the extra guarantee that any spec that parses
+//! builds an environment with finite, non-negative powers.
 
 use aic::coordinator::scenario::Scenario;
+use aic::energy::synth::SynthSpec;
 use aic::util::rng::Rng;
 
 fn committed_examples() -> Vec<(String, String)> {
@@ -145,6 +150,110 @@ fn non_finite_number_literals_are_rejected() {
         assert!(!probe(&doc), "accepted horizon {lit}");
         let seeds = format!(r#"{{"name": "x", "workload": "har", "seeds": [{lit}]}}"#);
         assert!(!probe(&seeds), "accepted seed {lit}");
+    }
+}
+
+/// Parse a candidate synth spec; when it parses, build one environment
+/// and enforce the no-panic / no-infinity contract. Building is capped
+/// per call site — mutated durations can legitimately grow the pattern.
+fn probe_synth(text: &str, builds_left: &mut usize) -> bool {
+    match SynthSpec::parse(text) {
+        Ok(spec) => {
+            if *builds_left > 0 {
+                *builds_left -= 1;
+                let pw = spec.build(1);
+                assert!(
+                    pw.powers.iter().all(|&p| p.is_finite() && p >= 0.0),
+                    "mutated spec built a non-finite or negative power"
+                );
+            }
+            true
+        }
+        Err(e) => {
+            assert!(!e.is_empty(), "empty error message");
+            false
+        }
+    }
+}
+
+#[test]
+fn synth_spec_truncations_error_cleanly() {
+    let text = SynthSpec::builtin_multi().to_json_string();
+    let mut builds = 1usize;
+    assert!(probe_synth(&text, &mut builds), "builtin multi spec stopped parsing");
+    let close = text.rfind('}').expect("synth documents are objects");
+    for len in 0..text.len() {
+        if !text.is_char_boundary(len) {
+            continue;
+        }
+        let mut builds = 0usize;
+        if len <= close {
+            assert!(
+                !probe_synth(&text[..len], &mut builds),
+                "truncation to {len} bytes still parsed"
+            );
+        }
+    }
+}
+
+#[test]
+fn synth_spec_byte_mutations_never_panic_or_emit_infinities() {
+    let replacements: &[u8] = b"{}[]\",:x09-.e\x00";
+    for spec in [SynthSpec::builtin_rf(), SynthSpec::builtin_multi()] {
+        let text = spec.to_json_string();
+        let bytes = text.as_bytes();
+        let mut rng = Rng::new(0x5F2A);
+        // Cap environment builds: most mutations fail to parse, but a
+        // digit flip can survive and drive generation — a bounded sample
+        // of those is enough to assert the finite-power contract.
+        let mut builds = 64usize;
+        for i in 0..bytes.len() {
+            for &r in replacements {
+                let mut mutated = bytes.to_vec();
+                mutated[i] = r;
+                if let Ok(s) = String::from_utf8(mutated) {
+                    probe_synth(&s, &mut builds);
+                }
+            }
+            let mut spliced = bytes.to_vec();
+            let at = rng.index(spliced.len());
+            if rng.chance(0.5) {
+                spliced.insert(at, *rng.choose(replacements));
+            } else {
+                spliced.remove(at);
+            }
+            if let Ok(s) = String::from_utf8(spliced) {
+                probe_synth(&s, &mut builds);
+            }
+        }
+    }
+}
+
+#[test]
+fn synth_spec_rejects_hostile_values() {
+    let bad = [
+        // NaN/Inf seeds and parameters are JSON-level errors.
+        r#"{"name":"x","seed":NaN,"duration":60,"combine":"sum","sources":[]}"#,
+        r#"{"name":"x","seed":1,"duration":Infinity,"combine":"sum","sources":[]}"#,
+        r#"{"name":"x","seed":1,"duration":1e999,"combine":"sum","sources":[]}"#,
+        // Fractional / negative seeds are type errors.
+        r#"{"name":"x","seed":1.5,"duration":60,"combine":"sum","sources":[{"kind":"rf","burst_power":0.001,"mean_on":0.5,"mean_off":4.5,"jitter":0}]}"#,
+        r#"{"name":"x","seed":-1,"duration":60,"combine":"sum","sources":[{"kind":"rf","burst_power":0.001,"mean_on":0.5,"mean_off":4.5,"jitter":0}]}"#,
+        // Structural hostility: no sources, unknown combine, bad kind,
+        // unknown keys, wrong shapes.
+        r#"{"name":"x","seed":1,"duration":60,"combine":"sum","sources":[]}"#,
+        r#"{"name":"x","seed":1,"duration":60,"combine":"xor","sources":[{"kind":"rf","burst_power":0.001,"mean_on":0.5,"mean_off":4.5,"jitter":0}]}"#,
+        r#"{"name":"x","seed":1,"duration":60,"combine":"sum","sources":[{"kind":"fusion"}]}"#,
+        r#"{"name":"x","seed":1,"duration":60,"combine":"sum","sources":[{"kind":"rf","burst_power":0.001,"mean_on":0.5,"mean_off":4.5,"jitter":0}],"extra":1}"#,
+        r#"{"name":"x","seed":1,"duration":60,"combine":"sum","sources":"rf"}"#,
+        r#"[]"#,
+        r#""synth""#,
+        // Resource hostility: a segment budget far beyond the cap.
+        r#"{"name":"x","seed":1,"duration":604800,"combine":"sum","sources":[{"kind":"thermal","base":0.0001,"amplitude":0.0003,"period":450,"env_dt":0.05,"noise":0}]}"#,
+    ];
+    let mut builds = 0usize;
+    for text in bad {
+        assert!(!probe_synth(text, &mut builds), "accepted: {text}");
     }
 }
 

@@ -12,6 +12,13 @@
 //! *not* a live campaign, so the goldens pin the sink layer alone and
 //! never move when simulation numerics do.
 //!
+//! The `golden_synth_*` files extend the same contract to the synthetic
+//! environment generator: the spec-JSON bytes of the builtin
+//! `synth_multi` family (schema drift detector) and a hand-computable
+//! composite-merge segment table (compose-layer drift detector). Both
+//! use exactly-representable inputs, so the committed bytes are stable
+//! across platforms.
+//!
 //! Regenerating after an intentional format change:
 //!
 //! ```text
@@ -21,6 +28,8 @@
 //! then commit the rewritten files under `rust/tests/golden/`.
 
 use aic::coordinator::sink::{f2, pct, CsvSink, JsonSink, MarkdownSink, Sink, TableData};
+use aic::energy::synth::{merge, Combine, SynthSpec};
+use aic::energy::traces::Piecewise;
 
 fn golden_dir() -> std::path::PathBuf {
     std::path::Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/tests/golden")).to_path_buf()
@@ -68,6 +77,65 @@ fn check(name: &str, got: &[u8]) {
         String::from_utf8_lossy(got),
         String::from_utf8_lossy(&want),
     );
+}
+
+/// The compose-layer golden table: two hand-written source patterns
+/// (exact binary fractions of a milliwatt on integer boundaries) pushed
+/// through every combinator. Each cell is exactly representable, so the
+/// rendered bytes pin the merge semantics — union boundaries, sum/max
+/// arithmetic, switchover efficiency scaling — without depending on any
+/// platform-sensitive rounding.
+fn synth_compose_table() -> TableData {
+    let a = Piecewise {
+        ends: vec![2.0, 6.0, 10.0],
+        powers: vec![1.0e-3, 0.0, 2.0e-3],
+        period: 10.0,
+    };
+    let b = Piecewise { ends: vec![5.0, 10.0], powers: vec![0.5e-3, 1.5e-3], period: 10.0 };
+    let sum = merge(&[a.clone(), b.clone()], Combine::Sum, 1.0, 10.0);
+    let max = merge(&[a.clone(), b.clone()], Combine::Max, 1.0, 10.0);
+    let sw = merge(&[a, b], Combine::Switchover, 0.5, 10.0);
+    assert_eq!(sum.ends, max.ends);
+    assert_eq!(sum.ends, sw.ends);
+    let mut t = TableData::new(
+        "golden_synth_compose",
+        "Synth compose layer - segment contract",
+        &["start_s", "end_s", "sum_uW", "max_uW", "switchover_uW"],
+    );
+    for i in 0..sum.len() {
+        t.push(vec![
+            format!("{:.1}", sum.start(i)),
+            format!("{:.1}", sum.ends[i]),
+            format!("{:.3}", sum.powers[i] * 1e6),
+            format!("{:.3}", max.powers[i] * 1e6),
+            format!("{:.3}", sw.powers[i] * 1e6),
+        ]);
+    }
+    t
+}
+
+#[test]
+fn synth_compose_matches_goldens() {
+    let t = synth_compose_table();
+    check("golden_synth_compose.md", (t.to_markdown() + "\n").as_bytes());
+    check("golden_synth_compose.csv", t.to_csv().as_bytes());
+    check(
+        "golden_synth_compose.json",
+        aic::util::json::to_string_pretty(&t.to_json()).as_bytes(),
+    );
+}
+
+#[test]
+fn synth_multi_spec_json_matches_golden() {
+    // The committed spec bytes of the `synth_multi` builtin family: any
+    // schema change (field rename, serialisation order, number
+    // formatting) or parameter drift in the builtin is byte-detectable,
+    // and the golden itself must parse back to the identical spec.
+    let spec = SynthSpec::builtin_multi();
+    let text = spec.to_json_string();
+    check("golden_synth_multi_spec.json", text.as_bytes());
+    let back = SynthSpec::parse(&text).expect("builtin spec round-trips");
+    assert_eq!(back, spec);
 }
 
 #[test]

@@ -1,0 +1,297 @@
+//! The statistical test layer gating the `energy::synth` generator.
+//!
+//! Three layers of evidence, mirroring the engine-equivalence suite:
+//!
+//! 1. **Seeded determinism** — the same `SynthSpec` realises the same
+//!    `Piecewise` bit for bit, on any thread, and a synth sweep is
+//!    bitwise identical for any fleet worker count (`AIC_WORKERS`
+//!    equivalent).
+//! 2. **Statistical invariants** — every generated environment is
+//!    physically sane (finite non-negative powers, strictly increasing
+//!    segment ends closing exactly at the pattern duration, prefix
+//!    energies consistent with `energy_per_period`), and realised mean
+//!    power stays within a sampling tolerance of the spec's analytic
+//!    [`mean_power_band`](aic::energy::synth::SynthSpec::mean_power_band).
+//! 3. **Engine equivalence** — GREEDY campaigns on one supply per
+//!    source model (plus the multi-source composite) agree between the
+//!    analytic engine and the fixed-step reference within the shared
+//!    [`assert_campaigns_close`] tolerance contract.
+
+use aic::coordinator::scenario::{HarvesterSpec, Scenario, WorkloadSpec};
+use aic::energy::harvester::Harvester;
+use aic::energy::synth::{
+    Combine, KineticSurrogateSpec, SourceSpec, SynthSpec, ThermalSpec,
+};
+use aic::exec::approx::{run as run_approx, ApproxConfig};
+use aic::exec::engine::{Engine, EngineConfig, EngineKind};
+use aic::exec::program::SyntheticProgram;
+use aic::exec::Policy;
+use aic::util::testkit::assert_campaigns_close;
+
+/// One single-source spec per model, plus the builtin composite — the
+/// family set every test sweeps.
+fn family_specs() -> Vec<SynthSpec> {
+    let single = |name: &str, seed: u64, source: SourceSpec| SynthSpec {
+        name: name.to_string(),
+        seed,
+        duration: 1800.0,
+        combine: Combine::Sum,
+        switch_efficiency: 1.0,
+        sources: vec![source],
+    };
+    vec![
+        SynthSpec::builtin_solar(),
+        SynthSpec::builtin_rf(),
+        single(
+            "thermal-only",
+            41,
+            SourceSpec::Thermal(ThermalSpec {
+                base: 1e-4,
+                amplitude: 4e-4,
+                period: 600.0,
+                env_dt: 10.0,
+                noise: 0.1,
+            }),
+        ),
+        single(
+            "kinetic-only",
+            43,
+            SourceSpec::Kinetic(KineticSurrogateSpec {
+                mean_power: 1.2e-3,
+                max_power: 8e-3,
+                mean_active: 120.0,
+                mean_rest: 90.0,
+                tau: 10.0,
+                rel_sigma: 0.5,
+                env_dt: 2.0,
+            }),
+        ),
+        SynthSpec::builtin_multi(),
+    ]
+}
+
+#[test]
+fn builds_are_bit_identical_across_threads() {
+    for spec in family_specs() {
+        let reference = spec.build(7);
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let spec = spec.clone();
+                std::thread::spawn(move || spec.build(7))
+            })
+            .collect();
+        for h in handles {
+            let pw = h.join().expect("builder thread panicked");
+            assert_eq!(pw.ends, reference.ends, "{}", spec.name);
+            assert_eq!(pw.powers, reference.powers, "{}", spec.name);
+            assert_eq!(pw.period, reference.period, "{}", spec.name);
+        }
+    }
+}
+
+#[test]
+fn synth_sweep_is_bitwise_identical_for_any_worker_count() {
+    // The full scenario path (plan → fleet → grid) on a generated
+    // supply: a 1-worker pool and a wide pool must produce the same
+    // campaigns bit for bit — generation happens inside fleet workers,
+    // so this is the "same Piecewise across AIC_WORKERS values" gate.
+    let sc = Scenario::new("synth-workers", WorkloadSpec::Audio)
+        .with_policies(vec![Policy::Greedy, Policy::Chinchilla])
+        .with_harvesters(vec![HarvesterSpec::Synth(SynthSpec::builtin_multi())])
+        .with_seeds(vec![1, 2, 3])
+        .with_horizon(600.0);
+    let solo = sc.run_with(false, None, Some(1));
+    let wide = sc.run_with(false, None, Some(4));
+    let (a, b) = (solo.audio_campaigns(), wide.audio_campaigns());
+    assert_eq!(a.len(), b.len());
+    for (i, (ca, cb)) in a.iter().zip(b).enumerate() {
+        assert_eq!(ca.power_cycles, cb.power_cycles, "cell {i}");
+        assert_eq!(ca.power_failures, cb.power_failures, "cell {i}");
+        assert_eq!(ca.app_energy.to_bits(), cb.app_energy.to_bits(), "cell {i}");
+        assert_eq!(ca.state_energy.to_bits(), cb.state_energy.to_bits(), "cell {i}");
+        assert_eq!(ca.rounds.len(), cb.rounds.len(), "cell {i}");
+        for (ra, rb) in ca.rounds.iter().zip(&cb.rounds) {
+            assert_eq!(ra.acquired_at.to_bits(), rb.acquired_at.to_bits(), "cell {i}");
+            assert_eq!(ra.emitted_at.is_some(), rb.emitted_at.is_some(), "cell {i}");
+            assert_eq!(ra.steps_executed, rb.steps_executed, "cell {i}");
+        }
+    }
+}
+
+#[test]
+fn generated_environments_are_physically_sane() {
+    for spec in family_specs() {
+        for seed in 1..=8 {
+            let pw = spec.build(seed);
+            let name = format!("{} seed {seed}", spec.name);
+            assert_eq!(pw.period, spec.duration, "{name}");
+            assert_eq!(*pw.ends.last().unwrap(), spec.duration, "{name}");
+            assert!(
+                pw.powers.iter().all(|&p| p.is_finite() && p >= 0.0),
+                "{name}: non-finite or negative power"
+            );
+            let mut prev = 0.0;
+            for &e in &pw.ends {
+                assert!(e > prev, "{name}: segment ends not strictly increasing");
+                prev = e;
+            }
+            // Prefix energies over one period sum to energy_per_period,
+            // and the segment iterator tiles time against point samples.
+            let h = Harvester::Synth(pw.clone());
+            let mut prefix = 0.0;
+            let mut cursor = 0.0;
+            for seg in h.segments(0.0) {
+                if seg.start >= spec.duration {
+                    break;
+                }
+                assert_eq!(seg.start, cursor, "{name}: segment seam");
+                let end = seg.end.min(spec.duration);
+                prefix += seg.power * (end - seg.start);
+                let mid = 0.5 * (seg.start + end);
+                assert_eq!(seg.power, pw.power_at(mid), "{name}: point sample");
+                cursor = seg.end;
+            }
+            let per_period = pw.energy_per_period();
+            assert!(
+                (prefix - per_period).abs() <= 1e-12 * per_period.max(1e-9),
+                "{name}: prefix energy {prefix} vs period energy {per_period}"
+            );
+            assert!(
+                (pw.mean_power() - per_period / spec.duration).abs() < 1e-18,
+                "{name}"
+            );
+        }
+    }
+}
+
+#[test]
+fn realised_mean_power_stays_in_the_spec_band() {
+    // Sampling tolerance: 1800 s patterns averaged over 8 family
+    // members put even the slowest process (kinetic bouts, ~10 per
+    // pattern) near its expectation; the [0.5, 1.6] factors leave room
+    // for the clamping bias the analytic band ignores.
+    for spec in family_specs() {
+        let (lo, hi) = spec.mean_power_band();
+        assert!(lo > 0.0 && lo <= hi, "{}: degenerate band", spec.name);
+        let seeds = 1..=8u64;
+        let n = 8.0;
+        let mean: f64 = seeds.map(|s| spec.build(s).mean_power()).sum::<f64>() / n;
+        assert!(
+            mean >= 0.5 * lo && mean <= 1.6 * hi,
+            "{}: realised mean {mean} outside band [{lo}, {hi}]",
+            spec.name
+        );
+    }
+}
+
+#[test]
+fn environment_seeds_are_decorrelated() {
+    // Different cell seeds give different family members — and not just
+    // one differing segment: the realised means themselves spread.
+    let spec = SynthSpec::builtin_rf();
+    let means: Vec<f64> = (1..=6).map(|s| spec.build(s).mean_power()).collect();
+    for i in 0..means.len() {
+        for j in (i + 1)..means.len() {
+            assert_ne!(
+                means[i].to_bits(),
+                means[j].to_bits(),
+                "seeds {} and {} realised identical environments",
+                i + 1,
+                j + 1
+            );
+        }
+    }
+}
+
+#[test]
+fn analytic_engine_matches_reference_on_every_source_model() {
+    // The synth twin of the engine-equivalence campaign goldens: GREEDY
+    // anytime campaigns on each generated family, analytic vs the
+    // fixed-step reference, through the shared tolerance contract.
+    for spec in family_specs() {
+        let h = Harvester::Synth(spec.build(5));
+        let mut ac = EngineConfig::paper_default(1800.0);
+        ac.kind = EngineKind::Analytic;
+        ac.initial_voltage = 3.0;
+        let mut rc = EngineConfig::reference(1800.0);
+        rc.initial_voltage = 3.0;
+        let mut a = Engine::new(ac, h.clone());
+        let mut r = Engine::new(rc, h);
+        let mut pa = SyntheticProgram::new(1000, 140, 300_000);
+        let mut pr = SyntheticProgram::new(1000, 140, 300_000);
+        let ca = run_approx(&mut pa, &mut a, &ApproxConfig::greedy(60.0));
+        let cr = run_approx(&mut pr, &mut r, &ApproxConfig::greedy(60.0));
+        assert!(
+            cr.emitted().count() > 0,
+            "{}: reference campaign emitted nothing",
+            spec.name
+        );
+        assert_campaigns_close(&spec.name, &ca, &cr);
+    }
+}
+
+#[test]
+fn ten_environment_seed_grid_completes_on_the_analytic_engine() {
+    // The acceptance grid in miniature: ten generated family members,
+    // explicitly pinned to the analytic engine (no AIC_ENGINE fallback),
+    // run end to end through plan -> fleet -> projection. The generator
+    // emits `Piecewise` natively, so nothing on this path touches a
+    // sampling grid.
+    use aic::coordinator::scenario::DeviceSpec;
+    let sc = Scenario::new("synth-ten", WorkloadSpec::Audio)
+        .with_policies(vec![Policy::Greedy])
+        .with_harvesters(vec![HarvesterSpec::Synth(SynthSpec::builtin_rf())])
+        .with_devices(vec![DeviceSpec {
+            engine: Some(EngineKind::Analytic),
+            ..DeviceSpec::default()
+        }])
+        .with_seeds((1..=10).collect())
+        .with_horizon(300.0);
+    let run = sc.run(false);
+    let campaigns = run.audio_campaigns();
+    assert_eq!(campaigns.len(), 10);
+    for (i, c) in campaigns.iter().enumerate() {
+        assert!(!c.rounds.is_empty(), "environment seed {} produced no rounds", i + 1);
+    }
+    let tables = run.tables();
+    assert_eq!(tables[0].rows.len(), 10, "one row per environment seed");
+}
+
+#[test]
+fn committed_synth_examples_stay_in_lockstep_with_the_builtins() {
+    // The example scenario files embed the same specs the `synth_*`
+    // builtin registry and the benches construct in code; if either
+    // side drifts, a sweep of the committed file would silently stop
+    // reproducing `aic synth_*`.
+    use aic::coordinator::scenario::builtin;
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/../examples/scenarios");
+    for (file, name) in [
+        ("synth_solar.json", "synth_solar"),
+        ("synth_rf.json", "synth_rf"),
+        ("synth_multi.json", "synth_multi"),
+    ] {
+        let text = std::fs::read_to_string(format!("{dir}/{file}"))
+            .unwrap_or_else(|e| panic!("{file}: {e}"));
+        let sc = Scenario::parse(&text).unwrap_or_else(|e| panic!("{file}: {e}"));
+        let want = builtin(name, 42).expect("registered builtin");
+        // Everything that defines the grid and its realisation must
+        // match the builtin — the file may word its title differently,
+        // but a drift in supplies, policies, seeds, timing, fast-mode
+        // scaling or projection would make `aic sweep <file>` silently
+        // stop reproducing `aic <name>`.
+        assert_eq!(sc.harvesters, want.harvesters, "{file}: supply drifted");
+        assert_eq!(sc.policies, want.policies, "{file}: policies drifted");
+        assert_eq!(sc.seeds, want.seeds, "{file}: seeds drifted");
+        assert_eq!(sc.horizon, want.horizon, "{file}: horizon drifted");
+        assert_eq!(sc.sample_period, want.sample_period, "{file}: period drifted");
+        assert_eq!(sc.devices, want.devices, "{file}: devices drifted");
+        assert_eq!(sc.fast, want.fast, "{file}: fast mode drifted");
+        assert_eq!(sc.projection, want.projection, "{file}: projection drifted");
+        assert_eq!(sc.training, want.training, "{file}: training drifted");
+        assert!(sc.seeds.len() >= 10, "{file}: fewer than 10 environment seeds");
+        let HarvesterSpec::Synth(spec) = &sc.harvesters[0] else {
+            panic!("{file}: expected a synth harvester");
+        };
+        spec.validate().unwrap_or_else(|e| panic!("{file}: {e}"));
+    }
+}
