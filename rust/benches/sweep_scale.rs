@@ -1,0 +1,70 @@
+//! Sweep-scale benchmark (the §Perf deliverable, sweep side).
+//!
+//! Times the full scenario pipeline — plan expansion and the fleet run
+//! of an audio campaign grid over built-in synthetic environments —
+//! with the per-sweep supply cache on and off. The grid is shaped so
+//! supply materialisation matters: every (policy) cell of a
+//! (harvester, seed) unit resolves to the same supply, so the cached
+//! run builds half as many harvesters/stepping tables as the uncached
+//! one (`AIC_SUPPLY_CACHE=off` reaches the same uncached path through
+//! `Scenario::run`; here both modes are driven programmatically).
+//!
+//! Honours `AIC_ENGINE` (the CI matrix times both integrators),
+//! `AIC_BENCH_FAST` (CI smoke) and `AIC_BENCH_OUT` (JSON artifact).
+
+use aic::coordinator::experiment::SupplyCache;
+use aic::coordinator::scenario::{HarvesterSpec, Projection, Scenario, WorkloadSpec};
+use aic::energy::synth::SynthSpec;
+use aic::exec::Policy;
+use aic::util::bench::{black_box, Bench};
+
+fn grid() -> Scenario {
+    let fast = std::env::var("AIC_BENCH_FAST").is_ok();
+    Scenario::new("sweep_scale", WorkloadSpec::Audio)
+        .with_title("sweep-scale timing grid")
+        .with_harvesters(vec![
+            HarvesterSpec::Synth(SynthSpec::builtin_multi()),
+            HarvesterSpec::Synth(SynthSpec::builtin_solar()),
+        ])
+        .with_policies(vec![Policy::Greedy, Policy::Chinchilla])
+        .with_seeds(if fast { vec![1] } else { vec![1, 2, 3] })
+        .with_horizon(if fast { 300.0 } else { 900.0 })
+        .with_sample_period(30.0)
+        .with_projection(Projection::AudioSummary)
+}
+
+fn main() {
+    let b = Bench::new("sweep_scale");
+    let scenario = grid();
+
+    // Plan expansion: the pure-spec side of the pipeline.
+    b.bench("plan", || {
+        black_box(scenario.plan().len());
+    });
+
+    // Fleet with the per-sweep supply cache (the `Scenario::run`
+    // default): distinct (harvester, seed, booster) supplies are
+    // materialised once and shared across policy cells and workers.
+    let mut builds_cached = 0;
+    b.bench("fleet_synth_grid_cached", || {
+        let cache = SupplyCache::new();
+        let run = scenario.run_cached(false, None, None, &cache);
+        builds_cached = cache.builds();
+        black_box(run.audio_campaigns().len());
+    });
+
+    // Same grid with sharing disabled: every cell builds its own supply
+    // (the `AIC_SUPPLY_CACHE=off` behaviour).
+    let mut builds_uncached = 0;
+    b.bench("fleet_synth_grid_uncached", || {
+        let cache = SupplyCache::disabled();
+        let run = scenario.run_cached(false, None, None, &cache);
+        builds_uncached = cache.builds();
+        black_box(run.audio_campaigns().len());
+    });
+
+    let cells = scenario.plan().len();
+    println!(
+        "(supply builds: cached {builds_cached} vs uncached {builds_uncached} over {cells} cells)"
+    );
+}

@@ -62,13 +62,14 @@ pub struct AudioProgram {
 
 impl AudioProgram {
     pub fn new(detector: SpectralDetector, source: AudioSource) -> AudioProgram {
+        let num_probes = detector.num_probes();
         AudioProgram {
             detector,
             source,
             cursor: 0,
             window: Vec::new(),
             truth: 0,
-            powers: Vec::new(),
+            powers: Vec::with_capacity(num_probes),
             planned: 0,
         }
     }
@@ -96,19 +97,23 @@ impl StepProgram for AudioProgram {
     type Output = AudioOutput;
 
     fn load_next(&mut self, now: f64) -> bool {
-        let w = match &self.source {
+        // Assemble the window into the program's own buffer: the
+        // steady-state round loop stays allocation-free.
+        match &self.source {
             AudioSource::List(list) => {
                 if self.cursor >= list.len() {
                     return false;
                 }
-                let w = list[self.cursor].clone();
+                let w = &list[self.cursor];
+                self.window.clear();
+                self.window.extend_from_slice(&w.samples);
+                self.truth = w.label;
                 self.cursor += 1;
-                w
             }
-            AudioSource::Script(script) => script.window_at(now),
-        };
-        self.window = w.samples;
-        self.truth = w.label;
+            AudioSource::Script(script) => {
+                self.truth = script.window_into(now, &mut self.window);
+            }
+        }
         self.powers.clear();
         self.planned = self.detector.num_probes();
         true

@@ -31,6 +31,16 @@ pub struct AudioWindow {
 /// state): bounded uniform noise, plus a tone at the class bin with a
 /// per-occurrence amplitude and phase.
 pub fn synth_window(class: usize, rng: &mut Rng) -> AudioWindow {
+    let mut samples = Vec::new();
+    synth_window_into(class, rng, &mut samples);
+    AudioWindow { samples, label: class }
+}
+
+/// [`synth_window`] into a caller-owned sample buffer: identical RNG
+/// draw order and bitwise-identical samples, no allocation once the
+/// buffer has warmed to `AUDIO_WINDOW_LEN`. The per-round acquisition
+/// path uses this to keep the steady-state loop allocation-free.
+pub fn synth_window_into(class: usize, rng: &mut Rng, samples: &mut Vec<f64>) {
     debug_assert!(class < NUM_AUDIO_CLASSES);
     let n = AUDIO_WINDOW_LEN;
     let (amp, phase) = if class > 0 {
@@ -38,18 +48,17 @@ pub fn synth_window(class: usize, rng: &mut Rng) -> AudioWindow {
     } else {
         (0.0, 0.0)
     };
-    let samples: Vec<f64> = (0..n)
-        .map(|i| {
-            let noise = rng.range(-NOISE_AMP, NOISE_AMP);
-            if class > 0 {
-                let bin = EVENT_BINS[class - 1] as f64;
-                noise + amp * (2.0 * PI * bin * i as f64 / n as f64 + phase).sin()
-            } else {
-                noise
-            }
-        })
-        .collect();
-    AudioWindow { samples, label: class }
+    samples.clear();
+    samples.reserve(n);
+    for i in 0..n {
+        let noise = rng.range(-NOISE_AMP, NOISE_AMP);
+        samples.push(if class > 0 {
+            let bin = EVENT_BINS[class - 1] as f64;
+            noise + amp * (2.0 * PI * bin * i as f64 / n as f64 + phase).sin()
+        } else {
+            noise
+        });
+    }
 }
 
 /// A class-balanced labelled window set: `per_class` windows of each of
@@ -117,9 +126,19 @@ impl AudioScript {
     /// The labelled window acquired at time `t` (deterministic in `t`,
     /// like `ActivityScript::window_at`).
     pub fn window_at(&self, t: f64) -> AudioWindow {
+        let mut samples = Vec::new();
+        let label = self.window_into(t, &mut samples);
+        AudioWindow { samples, label }
+    }
+
+    /// [`AudioScript::window_at`] into a caller-owned sample buffer;
+    /// returns the ground-truth label. Bitwise-identical samples, no
+    /// allocation once the buffer has warmed.
+    pub fn window_into(&self, t: f64, samples: &mut Vec<f64>) -> usize {
         let class = self.class_at(t);
         let mut rng = Rng::new(self.seed ^ (t * 1000.0) as u64);
-        synth_window(class, &mut rng)
+        synth_window_into(class, &mut rng, samples);
+        class
     }
 }
 

@@ -12,12 +12,16 @@ use crate::audio::app::{self as audio_app, AudioOutput, AudioProgram, AudioSourc
 use crate::audio::detector::SpectralDetector;
 use crate::audio::stream::AudioScript;
 use crate::coordinator::scenario::{DeviceSpec, HarvesterSpec};
+use crate::energy::booster::Booster;
 use crate::energy::estimator::{EnergyProfile, SmartTable};
 use crate::energy::harvester::Harvester;
 use crate::energy::mcu::{McuModel, OpCost};
 use crate::energy::traces::TraceKind;
-use crate::exec::engine::Engine;
+use crate::exec::engine::{Engine, SharedSupply};
 use crate::exec::{Campaign, Policy, Runtime, RuntimeSpec, StepProgram};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
 use crate::har::app::{smart_table, HarOutput, HarProgram, WindowSource};
 use crate::har::dataset::{ActivityScript, Corpus, CorpusSpec};
 use crate::har::NUM_FEATURES;
@@ -79,6 +83,135 @@ impl Default for HarRunSpec {
     }
 }
 
+/// Shares resolved supplies across the cells of a sweep.
+///
+/// A grid of P policies × D devices over one harvester seed resolves to
+/// one identical supply, yet the naive path materialises the
+/// [`Harvester`] (for a synth family, the full run-length-coalesced
+/// `Piecewise` composition) and builds the analytic stepping table P×D
+/// times. The cache keys on the *resolved supply identity* —
+/// [`HarvesterSpec`] + horizon + environment seed + booster config — and
+/// hands every matching cell the same [`SharedSupply`], so the harvester
+/// is materialised once and the [`SupplyTable`](crate::exec::engine::SupplyTable)
+/// is built once (lazily, by the first analytic engine), whatever the
+/// cell count or `AIC_WORKERS`.
+///
+/// Sharing is sound because the table is immutable and each engine walks
+/// it through a private cursor; `tests/policy_matrix.rs` asserts cached
+/// and uncached sweeps are bitwise-identical for any worker count.
+///
+/// The `AIC_SUPPLY_CACHE=off` escape hatch (honoured by
+/// [`SupplyCache::from_env`], which the scenario runner uses) disables
+/// sharing for A/B timing and bisection; tests needing a specific mode
+/// construct [`SupplyCache::new`] / [`SupplyCache::disabled`] directly
+/// instead of mutating the process environment.
+pub struct SupplyCache {
+    enabled: bool,
+    map: RwLock<HashMap<String, Arc<SharedSupply>>>,
+    /// Instrumentation: how many `SharedSupply` values this cache has
+    /// materialised. With sharing enabled this equals the number of
+    /// *distinct* supplies resolved, not the number of cells.
+    builds: AtomicU64,
+}
+
+impl SupplyCache {
+    /// A fresh, enabled cache (one per sweep is the intended scope).
+    pub fn new() -> SupplyCache {
+        SupplyCache { enabled: true, map: RwLock::new(HashMap::new()), builds: AtomicU64::new(0) }
+    }
+
+    /// A cache that never shares: every [`SupplyCache::resolve`] call
+    /// materialises a fresh supply (the pre-cache behaviour).
+    pub fn disabled() -> SupplyCache {
+        SupplyCache { enabled: false, ..SupplyCache::new() }
+    }
+
+    /// Honour the `AIC_SUPPLY_CACHE` environment variable: `off`, `0`
+    /// or `false` disable sharing; anything else (or unset) enables it.
+    pub fn from_env() -> SupplyCache {
+        match std::env::var("AIC_SUPPLY_CACHE") {
+            Ok(s) if matches!(s.as_str(), "off" | "0" | "false") => SupplyCache::disabled(),
+            _ => SupplyCache::new(),
+        }
+    }
+
+    /// Whether this cache shares supplies at all.
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// How many supplies this cache has materialised so far.
+    pub fn builds(&self) -> u64 {
+        self.builds.load(Ordering::SeqCst)
+    }
+
+    /// How many distinct supplies the cache currently holds.
+    pub fn len(&self) -> usize {
+        self.map.read().expect("supply cache poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The full identity a supply is shared under. `Debug` on f64 prints
+    /// the shortest exact round-trip form, so distinct parameter values
+    /// always yield distinct keys.
+    fn key(spec: &HarvesterSpec, horizon: f64, seed: u64, booster: &Booster) -> String {
+        format!(
+            "{spec:?}|h={:x}|s={seed}|b={:x},{:x},{:x},{:x},{:x}",
+            horizon.to_bits(),
+            booster.eta_max.to_bits(),
+            booster.knee_power.to_bits(),
+            booster.eta_min.to_bits(),
+            booster.quiescent.to_bits(),
+            booster.cold_start_power.to_bits(),
+        )
+    }
+
+    fn build(&self, spec: &HarvesterSpec, horizon: f64, seed: u64) -> Arc<SharedSupply> {
+        self.builds.fetch_add(1, Ordering::SeqCst);
+        Arc::new(SharedSupply::new(spec.build(horizon, seed)))
+    }
+
+    /// The shared supply for one resolved identity, materialising it on
+    /// first request. Post-population lookups take only the shared read
+    /// lock, so fleet workers resolving a warm cache never serialise;
+    /// a miss re-checks under the write lock, so concurrent workers
+    /// racing on a cold key still build exactly once.
+    pub fn resolve(
+        &self,
+        spec: &HarvesterSpec,
+        horizon: f64,
+        seed: u64,
+        booster: &Booster,
+    ) -> Arc<SharedSupply> {
+        if !self.enabled {
+            return self.build(spec, horizon, seed);
+        }
+        let key = SupplyCache::key(spec, horizon, seed, booster);
+        {
+            let map = self.map.read().expect("supply cache poisoned");
+            if let Some(shared) = map.get(&key) {
+                return Arc::clone(shared);
+            }
+        }
+        let mut map = self.map.write().expect("supply cache poisoned");
+        if let Some(shared) = map.get(&key) {
+            return Arc::clone(shared);
+        }
+        let shared = self.build(spec, horizon, seed);
+        map.insert(key, Arc::clone(&shared));
+        shared
+    }
+}
+
+impl Default for SupplyCache {
+    fn default() -> SupplyCache {
+        SupplyCache::new()
+    }
+}
+
 /// A simulated application the coordinator can campaign with: how to
 /// build the program, the harvester powering the device, and the knobs
 /// the runtimes need. Implementing this — nothing else — is what it
@@ -98,6 +231,15 @@ pub trait Workload: Sync {
     /// Build the energy harvester for one device (deterministic in
     /// `seed`). Not called for `Policy::Continuous` devices.
     fn harvester(&self, seed: u64) -> Harvester;
+
+    /// The declarative identity of this workload's supply, when it has
+    /// one — what a [`SupplyCache`] keys sharing on. Returning `Some`
+    /// promises that [`Workload::harvester`] equals
+    /// `spec.build(self.horizon(), seed)` for every seed; workloads whose
+    /// supply has no spec form return `None` and opt out of sharing.
+    fn supply_spec(&self) -> Option<&HarvesterSpec> {
+        None
+    }
 
     /// SMART's offline lookup table for the device built from `seed`
     /// (it must price the same program [`Workload::program`] returns).
@@ -121,13 +263,35 @@ pub fn run_campaign_on<W: Workload>(
     policy: Policy,
     device: &DeviceSpec,
 ) -> Campaign<<W::Prog as StepProgram>::Output> {
+    run_campaign_cached(workload, seed, policy, device, &SupplyCache::disabled())
+}
+
+/// [`run_campaign_on`] resolving the supply through a [`SupplyCache`]:
+/// grid cells handed the same (enabled) cache share one harvester and
+/// one analytic stepping table per distinct supply. Continuous devices
+/// run on a battery and touch neither the cache nor a supply.
+pub fn run_campaign_cached<W: Workload>(
+    workload: &W,
+    seed: u64,
+    policy: Policy,
+    device: &DeviceSpec,
+    cache: &SupplyCache,
+) -> Campaign<<W::Prog as StepProgram>::Output> {
     let mut program = workload.program(seed);
     let mut engine = match policy {
         Policy::Continuous => Engine::powered(McuModel::paper_default(), workload.horizon()),
-        _ => Engine::new(
-            device.engine_config(workload.horizon()),
-            workload.harvester(seed),
-        ),
+        _ => {
+            let cfg = device.engine_config(workload.horizon());
+            match workload.supply_spec() {
+                Some(spec) => {
+                    let shared = cache.resolve(spec, workload.horizon(), seed, &cfg.booster);
+                    Engine::from_shared(cfg, &shared)
+                }
+                // No declarative supply identity: build an owning engine
+                // (nothing to share under).
+                None => Engine::new(cfg, workload.harvester(seed)),
+            }
+        }
     };
     let mut spec = RuntimeSpec::new(workload.sample_period());
     if let Policy::Smart { .. } = policy {
@@ -176,6 +340,10 @@ impl Workload for HarWorkload<'_> {
         // the classifier also shakes the harvester; an ambient spec swaps
         // the supply while the program keeps its script.
         self.harvester.build(self.spec.horizon, seed)
+    }
+
+    fn supply_spec(&self) -> Option<&HarvesterSpec> {
+        Some(&self.harvester)
     }
 
     fn smart_table(&self, _seed: u64) -> Option<SmartTable> {
@@ -254,6 +422,10 @@ impl Workload for ImgWorkload {
 
     fn harvester(&self, seed: u64) -> Harvester {
         self.harvester.build(self.spec.horizon, seed)
+    }
+
+    fn supply_spec(&self) -> Option<&HarvesterSpec> {
+        Some(&self.harvester)
     }
 
     fn smart_table(&self, seed: u64) -> Option<SmartTable> {
@@ -338,6 +510,10 @@ impl Workload for AudioWorkload {
 
     fn harvester(&self, seed: u64) -> Harvester {
         self.harvester.build(self.spec.horizon, seed)
+    }
+
+    fn supply_spec(&self) -> Option<&HarvesterSpec> {
+        Some(&self.harvester)
     }
 
     fn smart_table(&self, _seed: u64) -> Option<SmartTable> {
@@ -475,5 +651,66 @@ mod tests {
         // The reference integrator agrees on round structure (the
         // engine-equivalence suite holds it much tighter).
         assert_eq!(stepped.rounds.len(), paper.rounds.len());
+    }
+
+    #[test]
+    fn supply_cache_shares_by_identity() {
+        let cache = SupplyCache::new();
+        let booster = Booster::paper_default();
+        let spec = HarvesterSpec::Ambient(TraceKind::Som);
+        let a = cache.resolve(&spec, 900.0, 1, &booster);
+        let b = cache.resolve(&spec, 900.0, 1, &booster);
+        assert!(Arc::ptr_eq(&a, &b), "identical identity must share");
+        assert_eq!(cache.builds(), 1);
+        // Any component of the identity diverging splits the entry.
+        let c = cache.resolve(&spec, 900.0, 2, &booster);
+        assert!(!Arc::ptr_eq(&a, &c), "a different seed is a different supply");
+        let d = cache.resolve(&spec, 1800.0, 1, &booster);
+        assert!(!Arc::ptr_eq(&a, &d), "a different horizon is a different supply");
+        let e = cache.resolve(&HarvesterSpec::Ambient(TraceKind::Rf), 900.0, 1, &booster);
+        assert!(!Arc::ptr_eq(&a, &e), "a different spec is a different supply");
+        let mut other = booster;
+        other.eta_max *= 0.99;
+        let f = cache.resolve(&spec, 900.0, 1, &other);
+        assert!(!Arc::ptr_eq(&a, &f), "a different booster is a different supply");
+        assert_eq!(cache.builds(), 5);
+        assert_eq!(cache.len(), 5);
+    }
+
+    #[test]
+    fn disabled_cache_never_shares() {
+        let cache = SupplyCache::disabled();
+        let booster = Booster::paper_default();
+        let spec = HarvesterSpec::Ambient(TraceKind::Som);
+        let a = cache.resolve(&spec, 900.0, 1, &booster);
+        let b = cache.resolve(&spec, 900.0, 1, &booster);
+        assert!(!Arc::ptr_eq(&a, &b));
+        assert_eq!(cache.builds(), 2);
+        assert!(cache.is_empty(), "a disabled cache retains nothing");
+    }
+
+    #[test]
+    fn cached_campaign_is_bitwise_identical_to_uncached() {
+        let cache = SupplyCache::new();
+        let spec = AudioRunSpec { horizon: 900.0, ..Default::default() };
+        let workload =
+            AudioWorkload { spec: spec.clone(), harvester: HarvesterSpec::Ambient(TraceKind::Som) };
+        let plain = run_campaign_on(&workload, spec.stream_seed, Policy::Greedy, &DeviceSpec::default());
+        let cached = run_campaign_cached(
+            &workload,
+            spec.stream_seed,
+            Policy::Greedy,
+            &DeviceSpec::default(),
+            &cache,
+        );
+        assert_eq!(cache.builds(), 1);
+        assert_eq!(plain.rounds.len(), cached.rounds.len());
+        assert_eq!(plain.app_energy, cached.app_energy);
+        assert_eq!(plain.power_cycles, cached.power_cycles);
+        for (p, c) in plain.rounds.iter().zip(&cached.rounds) {
+            assert_eq!(p.emitted_at, c.emitted_at);
+            assert_eq!(p.steps_executed, c.steps_executed);
+            assert_eq!(p.output, c.output);
+        }
     }
 }

@@ -16,7 +16,8 @@ use crate::imgproc::images::{render, Picture};
 use crate::imgproc::Corner;
 use crate::util::stats::Histogram;
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex, OnceLock};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock, RwLock};
 
 /// Process-wide memo of full-precision Harris reference maps, keyed by
 /// `(picture, seed, size)`. Figs. 13-15 evaluate every emitted round of
@@ -25,28 +26,47 @@ use std::sync::{Arc, Mutex, OnceLock};
 /// `harris_full(render(...))` per campaign. The map is tiny (corner
 /// lists for the synthetic picture pool) and rendering is deterministic,
 /// so sharing across fleet threads is safe.
-static HARRIS_REFS: OnceLock<Mutex<HashMap<(&'static str, u64, usize), Arc<Vec<Corner>>>>> =
-    OnceLock::new();
+///
+/// Layout: an `RwLock` index of per-key `OnceLock` slots. Once a key's
+/// slot exists, lookups take only the read lock (shared, uncontended),
+/// and the `OnceLock` guarantees each reference is rendered exactly once
+/// — the old single-`Mutex` memo serialised every fleet worker's lookup
+/// through one lock and could render the same picture twice under a
+/// first-call race.
+type HarrisKey = (&'static str, u64, usize);
+type HarrisSlot = Arc<OnceLock<Arc<Vec<Corner>>>>;
+static HARRIS_REFS: OnceLock<RwLock<HashMap<HarrisKey, HarrisSlot>>> = OnceLock::new();
+
+/// How many times a reference was actually rendered (diagnostics: with
+/// the per-key slots this equals the number of distinct keys requested).
+static HARRIS_RENDERS: AtomicU64 = AtomicU64::new(0);
+
+/// Number of full-precision reference renders performed so far in this
+/// process.
+pub fn harris_reference_renders() -> u64 {
+    HARRIS_RENDERS.load(Ordering::Relaxed)
+}
 
 /// The full-precision Harris detections for `(picture, seed)` rendered at
 /// `size`, computed once per process.
 pub fn harris_reference(picture: Picture, seed: u64, size: usize) -> Arc<Vec<Corner>> {
-    let cache = HARRIS_REFS.get_or_init(|| Mutex::new(HashMap::new()));
+    let index = HARRIS_REFS.get_or_init(|| RwLock::new(HashMap::new()));
     let key = (picture.name(), seed, size);
-    if let Some(found) = cache.lock().expect("harris memo poisoned").get(&key) {
-        return Arc::clone(found);
-    }
-    // Render outside the lock: first-comers may race, but the result is
-    // deterministic and only one insertion wins.
-    let computed =
-        Arc::new(harris_full(&render(picture, size, size, seed), &HarrisConfig::default()));
-    Arc::clone(
-        cache
-            .lock()
-            .expect("harris memo poisoned")
-            .entry(key)
-            .or_insert(computed),
-    )
+    // Fast path: shared read lock, dropped before any rendering.
+    let slot = {
+        let map = index.read().expect("harris memo poisoned");
+        map.get(&key).map(Arc::clone)
+    };
+    let slot = slot.unwrap_or_else(|| {
+        let mut map = index.write().expect("harris memo poisoned");
+        Arc::clone(map.entry(key).or_default())
+    });
+    // Render outside both map locks; the OnceLock admits one renderer
+    // per key and blocks only same-key callers.
+    Arc::clone(slot.get_or_init(|| {
+        HARRIS_RENDERS.fetch_add(1, Ordering::Relaxed);
+        Arc::new(harris_full(&render(picture, size, size, seed), &HarrisConfig::default()))
+    }))
 }
 
 /// Fraction of a campaign's emitted outputs satisfying `correct` — the
@@ -255,6 +275,29 @@ mod tests {
             180.0,
         );
         assert!((har_coherence(&a, &b, 60.0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn harris_reference_memo_is_shared_across_threads() {
+        // A seed no other test uses: this test owns the key outright.
+        const SEED: u64 = 0xC0FFEE;
+        let renders_before = harris_reference_renders();
+        let handles: Vec<_> = (0..16)
+            .map(|_| {
+                std::thread::spawn(|| harris_reference(Picture::Checker, SEED, 48))
+            })
+            .collect();
+        let refs: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        // Every thread sees the same memoised corner list.
+        for r in &refs[1..] {
+            assert!(Arc::ptr_eq(&refs[0], r));
+        }
+        // The key was rendered (other keys may render concurrently in
+        // parallel tests, so only a lower bound is race-free; the
+        // pointer equality above rules out duplicate renders here).
+        assert!(harris_reference_renders() > renders_before);
+        // Later lookups keep returning the same allocation.
+        assert!(Arc::ptr_eq(&refs[0], &harris_reference(Picture::Checker, SEED, 48)));
     }
 
     #[test]

@@ -26,8 +26,8 @@
 
 use crate::audio::app::AudioOutput;
 use crate::coordinator::experiment::{
-    run_campaign_on, AudioRunSpec, AudioWorkload, HarContext, HarRunSpec, HarWorkload,
-    ImgRunSpec, ImgWorkload,
+    run_campaign_cached, AudioRunSpec, AudioWorkload, HarContext, HarRunSpec, HarWorkload,
+    ImgRunSpec, ImgWorkload, SupplyCache,
 };
 use crate::coordinator::fleet::run_fleet;
 use crate::coordinator::metrics;
@@ -726,6 +726,23 @@ impl Scenario {
         ctx: Option<&HarContext>,
         workers: Option<usize>,
     ) -> SweepRun {
+        // One supply cache per sweep: every grid cell resolving to the
+        // same (harvester, seed, booster) shares one materialised supply
+        // and one analytic stepping table. `AIC_SUPPLY_CACHE=off` keeps
+        // the uncached path reachable for A/B timing and bisection.
+        self.run_cached(fast, ctx, workers, &SupplyCache::from_env())
+    }
+
+    /// [`run_with`](Scenario::run_with) with an explicit [`SupplyCache`]
+    /// — the programmatic cache-mode entry point (tests and benches must
+    /// not steer sharing through the process environment).
+    pub fn run_cached(
+        &self,
+        fast: bool,
+        ctx: Option<&HarContext>,
+        workers: Option<usize>,
+        cache: &SupplyCache,
+    ) -> SweepRun {
         let s = self.resolve(fast);
         let plan = s.plan();
         let grid = match (&s.workload, &plan) {
@@ -743,7 +760,7 @@ impl Scenario {
                     };
                     let workload =
                         HarWorkload { ctx, spec, harvester: cell.harvester.clone() };
-                    run_campaign_on(&workload, cell.seed, cell.policy, &cell.device)
+                    run_campaign_cached(&workload, cell.seed, cell.policy, &cell.device, cache)
                 }))
             }
             (WorkloadSpec::Img, JobPlan::Campaigns(cells)) => {
@@ -754,7 +771,7 @@ impl Scenario {
                         trace_seed: cell.seed,
                     };
                     let workload = ImgWorkload { spec, harvester: cell.harvester.clone() };
-                    run_campaign_on(&workload, cell.seed, cell.policy, &cell.device)
+                    run_campaign_cached(&workload, cell.seed, cell.policy, &cell.device, cache)
                 }))
             }
             (WorkloadSpec::Audio, JobPlan::Campaigns(cells)) => {
@@ -765,7 +782,7 @@ impl Scenario {
                         stream_seed: cell.seed,
                     };
                     let workload = AudioWorkload { spec, harvester: cell.harvester.clone() };
-                    run_campaign_on(&workload, cell.seed, cell.policy, &cell.device)
+                    run_campaign_cached(&workload, cell.seed, cell.policy, &cell.device, cache)
                 }))
             }
             (WorkloadSpec::AccuracyCurve { ps }, _) => {

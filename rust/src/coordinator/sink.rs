@@ -39,20 +39,28 @@ impl TableData {
 
     /// Render as a markdown table.
     pub fn to_markdown(&self) -> String {
-        let mut s = format!("### {}\n\n", self.title);
-        s += &format!("| {} |\n", self.header.join(" | "));
-        s += &format!("|{}|\n", self.header.iter().map(|_| "---").collect::<Vec<_>>().join("|"));
+        let mut s = String::new();
+        s.push_str("### ");
+        s.push_str(&self.title);
+        s.push_str("\n\n");
+        push_md_row(&mut s, &self.header);
+        s.push('|');
+        for _ in &self.header {
+            s.push_str("---|");
+        }
+        s.push('\n');
         for row in &self.rows {
-            s += &format!("| {} |\n", row.join(" | "));
+            push_md_row(&mut s, row);
         }
         s
     }
 
     /// Render as CSV.
     pub fn to_csv(&self) -> String {
-        let mut s = self.header.iter().map(|h| csv_escape(h)).collect::<Vec<_>>().join(",") + "\n";
+        let mut s = String::new();
+        push_csv_row(&mut s, &self.header);
         for row in &self.rows {
-            s += &(row.iter().map(|c| csv_escape(c)).collect::<Vec<_>>().join(",") + "\n");
+            push_csv_row(&mut s, row);
         }
         s
     }
@@ -78,12 +86,40 @@ impl TableData {
     }
 }
 
-fn csv_escape(cell: &str) -> String {
-    if cell.contains(',') || cell.contains('"') {
-        format!("\"{}\"", cell.replace('"', "\"\""))
-    } else {
-        cell.to_string()
+/// Append `| a | b |\n` to a line buffer — the markdown row shape,
+/// built without per-row vectors or joins.
+fn push_md_row(s: &mut String, cells: &[String]) {
+    s.push('|');
+    for c in cells {
+        s.push(' ');
+        s.push_str(c);
+        s.push_str(" |");
     }
+    s.push('\n');
+}
+
+/// Append one CSV record (with trailing newline) to a line buffer,
+/// escaping in place: cells containing `,` or `"` are quoted with
+/// doubled quotes, exactly the dialect the retired `csv_escape` wrote.
+fn push_csv_row(s: &mut String, cells: &[String]) {
+    for (i, cell) in cells.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        if cell.contains(',') || cell.contains('"') {
+            s.push('"');
+            for ch in cell.chars() {
+                if ch == '"' {
+                    s.push('"');
+                }
+                s.push(ch);
+            }
+            s.push('"');
+        } else {
+            s.push_str(cell);
+        }
+    }
+    s.push('\n');
 }
 
 /// A destination for table rows. `begin` opens a table, `row` streams one
@@ -130,12 +166,20 @@ impl<W: Write> Sink for MarkdownSink<W> {
     fn begin(&mut self, _stem: &str, title: &str, header: &[String]) -> io::Result<()> {
         writeln!(self.out, "### {title}")?;
         writeln!(self.out)?;
-        writeln!(self.out, "| {} |", header.join(" | "))?;
-        writeln!(self.out, "|{}|", header.iter().map(|_| "---").collect::<Vec<_>>().join("|"))
+        self.row(header)?;
+        write!(self.out, "|")?;
+        for _ in header {
+            write!(self.out, "---|")?;
+        }
+        writeln!(self.out)
     }
 
     fn row(&mut self, cells: &[String]) -> io::Result<()> {
-        writeln!(self.out, "| {} |", cells.join(" | "))
+        write!(self.out, "|")?;
+        for c in cells {
+            write!(self.out, " {c} |")?;
+        }
+        writeln!(self.out)
     }
 
     fn finish(&mut self) -> io::Result<()> {
@@ -147,28 +191,32 @@ impl<W: Write> Sink for MarkdownSink<W> {
 pub struct CsvSink {
     dir: PathBuf,
     file: Option<io::BufWriter<std::fs::File>>,
+    /// Reusable record buffer: streaming a row allocates nothing once
+    /// the buffer has warmed to the table's row width.
+    line: String,
 }
 
 impl CsvSink {
     pub fn new(dir: &str) -> CsvSink {
-        CsvSink { dir: PathBuf::from(dir), file: None }
+        CsvSink { dir: PathBuf::from(dir), file: None, line: String::new() }
     }
 }
 
 impl Sink for CsvSink {
     fn begin(&mut self, stem: &str, _title: &str, header: &[String]) -> io::Result<()> {
         std::fs::create_dir_all(&self.dir)?;
-        let mut f = io::BufWriter::new(std::fs::File::create(
+        let f = io::BufWriter::new(std::fs::File::create(
             self.dir.join(format!("{stem}.csv")),
         )?);
-        writeln!(f, "{}", header.iter().map(|h| csv_escape(h)).collect::<Vec<_>>().join(","))?;
         self.file = Some(f);
-        Ok(())
+        self.row(header)
     }
 
     fn row(&mut self, cells: &[String]) -> io::Result<()> {
+        self.line.clear();
+        push_csv_row(&mut self.line, cells);
         let f = self.file.as_mut().expect("CsvSink::row before begin");
-        writeln!(f, "{}", cells.iter().map(|c| csv_escape(c)).collect::<Vec<_>>().join(","))
+        f.write_all(self.line.as_bytes())
     }
 
     fn finish(&mut self) -> io::Result<()> {

@@ -39,6 +39,7 @@ use crate::energy::capacitor::Capacitor;
 use crate::energy::harvester::Harvester;
 use crate::energy::mcu::{McuModel, OpCost};
 use crate::energy::traces::Piecewise;
+use std::sync::{Arc, OnceLock};
 
 /// Which ledger an energy expense belongs to (Fig. 1's split between
 /// "useful computations" and "managing persistent state").
@@ -170,9 +171,13 @@ const PEG_EPS: f64 = 1e-12;
 
 /// The analytic engine's stepping table: the harvester's run-length
 /// piecewise view with the booster transform and prefix energies baked
-/// in, plus a monotone cursor. Built once per engine.
+/// in. The table is **immutable** once built — each engine walks it
+/// through its own private [`Cursor`] — so one table can be shared
+/// `Arc`-style by every cell of a sweep that resolves to the same
+/// supply (same harvester, seed and booster config; see
+/// [`SupplyCache`](crate::coordinator::experiment::SupplyCache)).
 #[derive(Clone, Debug)]
-struct Supply {
+pub struct SupplyTable {
     /// The harvester's run-length piecewise view (segment end times, raw
     /// powers, repetition period — ∞ for a constant source).
     pw: Piecewise,
@@ -187,16 +192,24 @@ struct Supply {
     blk_min: Vec<f64>,
     /// Per-block "contains a cold-gated segment".
     blk_cold: Vec<bool>,
-    /// Cursor: current segment within the period ...
-    idx: usize,
-    /// ... and how many whole periods have elapsed before it.
-    epoch: u64,
-    /// Absolute time the cursor state corresponds to.
-    cursor_time: f64,
 }
 
-impl Supply {
-    fn new(harvester: &Harvester, booster: &Booster) -> Supply {
+/// A per-engine position within a [`SupplyTable`]: current segment,
+/// elapsed whole periods, and the absolute time that state corresponds
+/// to. Keeping the cursor out of the shared table is what makes sharing
+/// sound: concurrent engines never write to the table itself.
+#[derive(Clone, Copy, Debug, Default)]
+struct Cursor {
+    /// Current segment within the period.
+    idx: usize,
+    /// How many whole periods have elapsed before it.
+    epoch: u64,
+    /// Absolute time the cursor state corresponds to.
+    time: f64,
+}
+
+impl SupplyTable {
+    fn new(harvester: &Harvester, booster: &Booster) -> SupplyTable {
         let pw = harvester.piecewise();
         let n = pw.len();
         let p_out: Vec<f64> =
@@ -220,25 +233,15 @@ impl Supply {
             blk_min[b] = blk_min[b].min(p_out[i]);
             blk_cold[b] = blk_cold[b] || cold[i];
         }
-        Supply {
-            pw,
-            p_out,
-            cold,
-            cum,
-            blk_min,
-            blk_cold,
-            idx: 0,
-            epoch: 0,
-            cursor_time: 0.0,
-        }
+        SupplyTable { pw, p_out, cold, cum, blk_min, blk_cold }
     }
 
     #[inline]
-    fn epoch_start(&self) -> f64 {
-        if self.epoch == 0 {
+    fn epoch_start(&self, cur: &Cursor) -> f64 {
+        if cur.epoch == 0 {
             0.0
         } else {
-            self.epoch as f64 * self.pw.period
+            cur.epoch as f64 * self.pw.period
         }
     }
 
@@ -246,63 +249,102 @@ impl Supply {
     /// period ends exactly at `(epoch+1)·period` so consecutive periods
     /// tile with no float seam.
     #[inline]
-    fn seg_end_abs(&self) -> f64 {
-        if self.pw.period.is_finite() && self.idx + 1 == self.pw.len() {
-            (self.epoch + 1) as f64 * self.pw.period
+    fn seg_end_abs(&self, cur: &Cursor) -> f64 {
+        if self.pw.period.is_finite() && cur.idx + 1 == self.pw.len() {
+            (cur.epoch + 1) as f64 * self.pw.period
         } else {
-            self.epoch_start() + self.pw.ends[self.idx]
+            self.epoch_start(cur) + self.pw.ends[cur.idx]
         }
     }
 
     /// Advance to the next segment (wrapping a finite period; a constant
     /// source stays on its single infinite segment).
     #[inline]
-    fn advance(&mut self) {
-        if self.idx + 1 < self.pw.len() {
-            self.idx += 1;
+    fn advance(&self, cur: &mut Cursor) {
+        if cur.idx + 1 < self.pw.len() {
+            cur.idx += 1;
         } else if self.pw.period.is_finite() {
-            self.idx = 0;
-            self.epoch += 1;
+            cur.idx = 0;
+            cur.epoch += 1;
         }
     }
 
     /// Re-derive the cursor from an absolute time (O(log n), via
     /// [`Piecewise::locate`]); a no-op when the engine left it exactly
     /// here, which is the steady state.
-    fn seek(&mut self, t: f64) {
-        if t == self.cursor_time {
+    fn seek(&self, cur: &mut Cursor, t: f64) {
+        if t == cur.time {
             return;
         }
         let (epoch, idx) = self.pw.locate(t);
-        self.epoch = epoch;
-        self.idx = idx;
-        self.cursor_time = t;
+        cur.epoch = epoch;
+        cur.idx = idx;
+        cur.time = t;
     }
 
     /// Warm energy, absolute end time, minimum output power, and
     /// cold-gate presence for the remainder of the block containing the
     /// current segment, measured from `now` (inside the current segment).
     #[inline]
-    fn rest_of_block(&self, now: f64) -> (f64, f64, f64, bool) {
-        let b = self.idx / SEGS_PER_BLOCK;
+    fn rest_of_block(&self, cur: &Cursor, now: f64) -> (f64, f64, f64, bool) {
+        let b = cur.idx / SEGS_PER_BLOCK;
         let last = ((b + 1) * SEGS_PER_BLOCK).min(self.pw.len()) - 1;
-        let p = self.p_out[self.idx];
-        let cur = if p > 0.0 { p * (self.seg_end_abs() - now).max(0.0) } else { 0.0 };
-        let energy = cur + self.cum[last] - self.cum[self.idx];
+        let p = self.p_out[cur.idx];
+        let rem = if p > 0.0 { p * (self.seg_end_abs(cur) - now).max(0.0) } else { 0.0 };
+        let energy = rem + self.cum[last] - self.cum[cur.idx];
         let end_abs = if self.pw.period.is_finite() && last + 1 == self.pw.len() {
-            (self.epoch + 1) as f64 * self.pw.period
+            (cur.epoch + 1) as f64 * self.pw.period
         } else {
-            self.epoch_start() + self.pw.ends[last]
+            self.epoch_start(cur) + self.pw.ends[last]
         };
         (energy, end_abs, self.blk_min[b], self.blk_cold[b])
     }
 
     /// Move the cursor to the first segment after the current block.
     #[inline]
-    fn jump_to_block_end(&mut self) {
-        let b = self.idx / SEGS_PER_BLOCK;
-        self.idx = ((b + 1) * SEGS_PER_BLOCK).min(self.pw.len()) - 1;
-        self.advance();
+    fn jump_to_block_end(&self, cur: &mut Cursor) {
+        let b = cur.idx / SEGS_PER_BLOCK;
+        cur.idx = ((b + 1) * SEGS_PER_BLOCK).min(self.pw.len()) - 1;
+        self.advance(cur);
+    }
+}
+
+/// A materialised harvester plus its lazily-built analytic stepping
+/// table, shared across engines. One `SharedSupply` feeds every cell of
+/// a sweep grid that resolves to the same supply: the harvester is
+/// materialised once, and the [`SupplyTable`] is built at most once (on
+/// first use by an analytic engine — fixed-step engines never build
+/// one), whatever the number of cells or fleet workers.
+#[derive(Debug)]
+pub struct SharedSupply {
+    harvester: Arc<Harvester>,
+    table: OnceLock<Arc<SupplyTable>>,
+}
+
+impl SharedSupply {
+    pub fn new(harvester: Harvester) -> SharedSupply {
+        SharedSupply { harvester: Arc::new(harvester), table: OnceLock::new() }
+    }
+
+    /// The shared harvester.
+    pub fn harvester(&self) -> &Arc<Harvester> {
+        &self.harvester
+    }
+
+    /// The stepping table under `booster`, built on the first call and
+    /// shared thereafter. Everyone sharing one `SharedSupply` must use
+    /// one booster config — the supply cache keys on it.
+    pub fn table(&self, booster: &Booster) -> Arc<SupplyTable> {
+        Arc::clone(
+            self.table
+                .get_or_init(|| Arc::new(SupplyTable::new(&self.harvester, booster))),
+        )
+    }
+
+    /// Whether the stepping table has been built yet (it never is for a
+    /// supply only fixed-step engines have used).
+    pub fn table_built(&self) -> bool {
+        self.table.get().is_some()
     }
 }
 
@@ -311,7 +353,7 @@ pub struct Engine {
     pub cap: Capacitor,
     pub booster: Booster,
     pub mcu: McuModel,
-    pub harvester: Harvester,
+    pub harvester: Arc<Harvester>,
     /// Absolute simulation time, seconds.
     pub now: f64,
     /// Power cycles so far (boot events; the first boot is cycle 1).
@@ -329,23 +371,36 @@ pub struct Engine {
     charge_dt: f64,
     max_time: f64,
     kind: EngineKind,
-    /// Analytic stepping table; `None` on the fixed-step reference path.
-    supply: Option<Supply>,
+    /// Analytic stepping table (possibly shared with other engines);
+    /// `None` on the fixed-step reference path and in battery mode.
+    supply: Option<Arc<SupplyTable>>,
+    /// This engine's private position within the shared table.
+    cursor: Cursor,
 }
 
 impl Engine {
+    /// Build an engine owning its supply. For sweep grids where many
+    /// cells share one supply, prefer [`Engine::from_shared`] so the
+    /// harvester and stepping table are materialised once.
     pub fn new(cfg: EngineConfig, harvester: Harvester) -> Engine {
+        Engine::from_shared(cfg, &SharedSupply::new(harvester))
+    }
+
+    /// Build an engine on a shared supply: the harvester `Arc` is cloned
+    /// and the analytic stepping table is built once per
+    /// [`SharedSupply`], however many engines it feeds.
+    pub fn from_shared(cfg: EngineConfig, shared: &SharedSupply) -> Engine {
         let mut cap = cfg.capacitor;
         cap.set_voltage(cfg.initial_voltage);
         let supply = match cfg.kind {
-            EngineKind::Analytic => Some(Supply::new(&harvester, &cfg.booster)),
+            EngineKind::Analytic => Some(shared.table(&cfg.booster)),
             EngineKind::FixedStep => None,
         };
         Engine {
             cap,
             booster: cfg.booster,
             mcu: cfg.mcu,
-            harvester,
+            harvester: Arc::clone(shared.harvester()),
             now: 0.0,
             cycles: if cfg.initial_voltage > 0.0 { 1 } else { 0 },
             failures: 0,
@@ -356,6 +411,7 @@ impl Engine {
             max_time: cfg.max_time,
             kind: cfg.kind,
             supply,
+            cursor: Cursor::default(),
         }
     }
 
@@ -365,14 +421,31 @@ impl Engine {
     /// — there are no boot events on a battery.
     pub fn powered(mcu: McuModel, max_time: f64) -> Engine {
         // Same paper-default device as the harvesting engines — one
-        // source of truth for the hardware constants.
+        // source of truth for the hardware constants. A battery never
+        // reaches the harvesting branches, so no stepping table is built
+        // (and none is counted against a sweep's supply builds).
         let mut cfg = EngineConfig::paper_default(max_time);
         cfg.mcu = mcu;
         cfg.initial_voltage = cfg.capacitor.v_max;
-        let mut engine = Engine::new(cfg, Harvester::Constant(0.0));
-        engine.powered = true;
-        engine.cycles = 0; // a battery counts no boot events
-        engine
+        let mut cap = cfg.capacitor;
+        cap.set_voltage(cfg.initial_voltage);
+        Engine {
+            cap,
+            booster: cfg.booster,
+            mcu: cfg.mcu,
+            harvester: Arc::new(Harvester::Constant(0.0)),
+            now: 0.0,
+            cycles: 0, // a battery counts no boot events
+            failures: 0,
+            app_energy: 0.0,
+            state_energy: 0.0,
+            powered: true,
+            charge_dt: cfg.charge_dt,
+            max_time: cfg.max_time,
+            kind: cfg.kind,
+            supply: None,
+            cursor: Cursor::default(),
+        }
     }
 
     /// Which integrator this engine runs.
@@ -494,8 +567,9 @@ impl Engine {
         let cold_e = self.cap.energy_at(Booster::COLD_GATE_V);
         let mut e = self.cap.energy();
         let mut now = self.now;
-        let sup = self.supply.as_mut().expect("analytic engine without supply");
-        sup.seek(now);
+        let tab = Arc::clone(self.supply.as_ref().expect("analytic engine without supply"));
+        let mut cur = self.cursor;
+        tab.seek(&mut cur, now);
         let booted = loop {
             if e >= e_on {
                 break true;
@@ -505,17 +579,17 @@ impl Engine {
             }
             // O(1) block skip: the rest of this block cannot reach V_on
             // (charging is monotone — no load, rail above V_on).
-            let (be, bend, _min, bcold) = sup.rest_of_block(now);
+            let (be, bend, _min, bcold) = tab.rest_of_block(&cur, now);
             if bend <= self.max_time && (e > cold_e || !bcold) && e + be < e_on {
                 e += be;
                 now = bend;
-                sup.jump_to_block_end();
+                tab.jump_to_block_end(&mut cur);
                 continue;
             }
-            let seg_end = sup.seg_end_abs();
+            let seg_end = tab.seg_end_abs(&cur);
             let limit = if seg_end < self.max_time { seg_end } else { self.max_time };
-            let gated = e <= cold_e && sup.cold[sup.idx];
-            let p = if gated { 0.0 } else { sup.p_out[sup.idx] };
+            let gated = e <= cold_e && tab.cold[cur.idx];
+            let p = if gated { 0.0 } else { tab.p_out[cur.idx] };
             if p > 0.0 && e + p * (limit - now) >= e_on {
                 // Closed-form V_on crossing inside this segment.
                 now += (e_on - e) / p;
@@ -525,10 +599,11 @@ impl Engine {
             e += p * (limit - now);
             now = limit;
             if limit == seg_end {
-                sup.advance();
+                tab.advance(&mut cur);
             }
         };
-        sup.cursor_time = now;
+        cur.time = now;
+        self.cursor = cur;
         self.now = now;
         self.cap.set_energy(e);
         booted
@@ -541,25 +616,27 @@ impl Engine {
         let e_max = self.cap.max_energy();
         let mut e = self.cap.energy();
         let mut now = self.now;
-        let sup = self.supply.as_mut().expect("analytic engine without supply");
-        sup.seek(now);
+        let tab = Arc::clone(self.supply.as_ref().expect("analytic engine without supply"));
+        let mut cur = self.cursor;
+        tab.seek(&mut cur, now);
         while now < until {
-            let (be, bend, _min, _cold) = sup.rest_of_block(now);
+            let (be, bend, _min, _cold) = tab.rest_of_block(&cur, now);
             if bend <= until && e + be <= e_max {
                 e += be;
                 now = bend;
-                sup.jump_to_block_end();
+                tab.jump_to_block_end(&mut cur);
                 continue;
             }
-            let seg_end = sup.seg_end_abs();
+            let seg_end = tab.seg_end_abs(&cur);
             let limit = if seg_end < until { seg_end } else { until };
-            e = (e + sup.p_out[sup.idx] * (limit - now)).min(e_max);
+            e = (e + tab.p_out[cur.idx] * (limit - now)).min(e_max);
             now = limit;
             if limit == seg_end {
-                sup.advance();
+                tab.advance(&mut cur);
             }
         }
-        sup.cursor_time = now;
+        cur.time = now;
+        self.cursor = cur;
         self.now = now;
         self.cap.set_energy(e);
     }
@@ -576,8 +653,9 @@ impl Engine {
         let p_load = self.mcu.sleep_power;
         let mut e = self.cap.energy();
         let mut now = self.now;
-        let sup = self.supply.as_mut().expect("analytic engine without supply");
-        sup.seek(now);
+        let tab = Arc::clone(self.supply.as_ref().expect("analytic engine without supply"));
+        let mut cur = self.cursor;
+        tab.seek(&mut cur, now);
         if e < e_off && now < stop {
             // Dead on entry (e.g. sleeping off a failed emission). The
             // reference integrator takes one stride before noticing —
@@ -585,24 +663,25 @@ impl Engine {
             // buffer back over V_off and the sleep continues; otherwise
             // it is an immediate brown-out. Mirror both outcomes.
             let dt = self.charge_dt.min(stop - now);
-            e = (e + sup.p_out[sup.idx] * dt).min(e_max) - p_load * dt;
+            e = (e + tab.p_out[cur.idx] * dt).min(e_max) - p_load * dt;
             now += dt;
             if e < e_off {
-                sup.cursor_time = now;
+                cur.time = now;
+                self.cursor = cur;
                 self.now = now;
                 self.brown_out();
                 return false;
             }
-            sup.seek(now);
+            tab.seek(&mut cur, now);
         }
         while now < stop {
-            let (be, bend, bmin, _cold) = sup.rest_of_block(now);
+            let (be, bend, bmin, _cold) = tab.rest_of_block(&cur, now);
             if bend <= stop {
                 if e + PEG_EPS >= e_max && bmin >= p_load {
                     // Pegged at the rail, never outdrawn: stays pegged.
                     e = e_max;
                     now = bend;
-                    sup.jump_to_block_end();
+                    tab.jump_to_block_end(&mut cur);
                     continue;
                 }
                 let dur = bend - now;
@@ -610,14 +689,14 @@ impl Engine {
                     // No clamp, no brown-out possible: exact linear jump.
                     e += be - p_load * dur;
                     now = bend;
-                    sup.jump_to_block_end();
+                    tab.jump_to_block_end(&mut cur);
                     continue;
                 }
             }
-            let seg_end = sup.seg_end_abs();
+            let seg_end = tab.seg_end_abs(&cur);
             let limit = if seg_end < stop { seg_end } else { stop };
             let dt = limit - now;
-            let net = sup.p_out[sup.idx] - p_load;
+            let net = tab.p_out[cur.idx] - p_load;
             if net >= 0.0 {
                 e = (e + net * dt).min(e_max);
             } else if e + net * dt >= e_off {
@@ -625,17 +704,19 @@ impl Engine {
             } else {
                 // Closed-form V_off crossing: the device dies here.
                 now += ((e - e_off) / -net).max(0.0);
-                sup.cursor_time = now;
+                cur.time = now;
+                self.cursor = cur;
                 self.now = now;
                 self.brown_out();
                 return false;
             }
             now = limit;
             if limit == seg_end {
-                sup.advance();
+                tab.advance(&mut cur);
             }
         }
-        sup.cursor_time = now;
+        cur.time = now;
+        self.cursor = cur;
         self.now = now;
         self.cap.set_energy(e);
         true
@@ -972,5 +1053,72 @@ mod tests {
             e.now,
             first_boot
         );
+    }
+
+    #[test]
+    fn shared_supply_builds_its_table_exactly_once() {
+        let shared = SharedSupply::new(Harvester::Constant(1e-3));
+        assert!(!shared.table_built(), "table must be lazy");
+        let booster = Booster::paper_default();
+        let t1 = shared.table(&booster);
+        let t2 = shared.table(&booster);
+        assert!(Arc::ptr_eq(&t1, &t2), "second call must reuse the table");
+        let cfg = EngineConfig::paper_default(3600.0);
+        let a = Engine::from_shared(cfg.clone(), &shared);
+        let b = Engine::from_shared(cfg, &shared);
+        if a.kind() == EngineKind::Analytic {
+            assert!(Arc::ptr_eq(
+                a.supply.as_ref().unwrap(),
+                b.supply.as_ref().unwrap()
+            ));
+        }
+        assert!(Arc::ptr_eq(&a.harvester, &b.harvester));
+    }
+
+    #[test]
+    fn fixed_step_engines_never_build_a_table() {
+        let shared = SharedSupply::new(Harvester::Constant(1e-3));
+        let _e = Engine::from_shared(EngineConfig::reference(3600.0), &shared);
+        assert!(!shared.table_built());
+    }
+
+    #[test]
+    fn powered_engine_builds_no_supply() {
+        let e = Engine::powered(McuModel::paper_default(), 3600.0);
+        assert!(e.supply.is_none());
+    }
+
+    #[test]
+    fn shared_engines_match_owning_engines_bitwise() {
+        // Two engines on one shared supply must each reproduce exactly
+        // what an owning engine does: the cursor is private, so sharing
+        // introduces no cross-engine state bleed.
+        let trace = crate::energy::traces::generate(
+            crate::energy::traces::TraceKind::Sim,
+            120.0,
+            0.01,
+            7,
+        );
+        let shared = SharedSupply::new(Harvester::Replay(trace.clone()));
+        let mut cfg = EngineConfig::paper_default(1e6);
+        cfg.kind = EngineKind::Analytic;
+        let script = |e: &mut Engine| {
+            let mut log = Vec::new();
+            for _ in 0..12 {
+                if !e.cap.alive() && !e.charge_until_boot() {
+                    break;
+                }
+                let _ = e.run_op(&OpCost::cycles(600_000), Ledger::App);
+                let _ = e.sleep(45.0);
+                log.push((e.now, e.cap.energy(), e.cycles, e.failures));
+            }
+            log
+        };
+        let mut s1 = Engine::from_shared(cfg.clone(), &shared);
+        let mut s2 = Engine::from_shared(cfg.clone(), &shared);
+        let mut own = Engine::new(cfg, Harvester::Replay(trace));
+        let want = script(&mut own);
+        assert_eq!(script(&mut s1), want);
+        assert_eq!(script(&mut s2), want);
     }
 }

@@ -86,7 +86,15 @@ impl RoundDriver {
         P: StepProgram,
         S: RoundStrategy<P> + ?Sized,
     {
+        // One slot per sample period bounds the round count; reserving
+        // up front keeps the steady-state loop free of reallocation.
+        // Capped so degenerate horizon/period ratios (perf benches use
+        // 1e12-second horizons) cannot demand absurd reservations.
         let mut rounds: Vec<RoundResult<P::Output>> = Vec::new();
+        if self.sample_period > 0.0 {
+            let est = (engine.horizon() / self.sample_period).ceil() as usize + 2;
+            rounds.reserve(est.min(1 << 16));
+        }
         let mut sample_id = 0u64;
         while !engine.out_of_time() {
             if !engine.cap.alive() && !engine.charge_until_boot() {

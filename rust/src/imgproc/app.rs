@@ -10,9 +10,9 @@
 use crate::energy::mcu::OpCost;
 use crate::exec::program::StepProgram;
 use crate::imgproc::harris::{
-    detect, gradients, response_row, row_schedule, HarrisConfig, ResponseMap,
+    detect, gradients_into, response_row_with, row_schedule, HarrisConfig, ResponseMap, RowScratch,
 };
-use crate::imgproc::images::{render, Picture, EVAL_SIZE};
+use crate::imgproc::images::{render_into, Picture, EVAL_SIZE};
 use crate::imgproc::{Corner, Image};
 use crate::util::rng::Rng;
 
@@ -43,6 +43,8 @@ pub struct CornerProgram {
     ix: Vec<f64>,
     iy: Vec<f64>,
     map: ResponseMap,
+    scratch: RowScratch,
+    /// Row order — a pure function of `size`, computed once.
     schedule: Vec<usize>,
     executed: usize,
     planned: usize,
@@ -66,7 +68,8 @@ impl CornerProgram {
             ix: Vec::new(),
             iy: Vec::new(),
             map: ResponseMap::new(1, 1),
-            schedule: Vec::new(),
+            scratch: RowScratch::default(),
+            schedule: row_schedule(size),
             executed: 0,
             planned: 0,
         }
@@ -93,12 +96,9 @@ impl StepProgram for CornerProgram {
 
     fn load_next(&mut self, _now: f64) -> bool {
         self.picture = *self.rng.choose(&self.pool);
-        self.image = render(self.picture.0, self.size, self.size, self.picture.1);
-        let (ix, iy) = gradients(&self.image);
-        self.ix = ix;
-        self.iy = iy;
-        self.map = ResponseMap::new(self.size, self.size);
-        self.schedule = row_schedule(self.size);
+        render_into(self.picture.0, self.size, self.size, self.picture.1, &mut self.image);
+        gradients_into(&self.image, &mut self.ix, &mut self.iy);
+        self.map.reset(self.size, self.size);
         self.executed = 0;
         self.planned = self.size;
         true
@@ -135,7 +135,7 @@ impl StepProgram for CornerProgram {
     fn execute_step(&mut self, j: usize) {
         debug_assert_eq!(j, self.executed, "rows run in schedule order");
         let y = self.schedule[j];
-        response_row(&self.ix, &self.iy, &mut self.map, y, &self.cfg);
+        response_row_with(&self.ix, &self.iy, &mut self.map, y, &self.cfg, &mut self.scratch);
         self.executed += 1;
     }
 
@@ -166,7 +166,7 @@ impl StepProgram for CornerProgram {
     }
 
     fn reset_round(&mut self) {
-        self.map = ResponseMap::new(self.size, self.size);
+        self.map.reset(self.size, self.size);
         self.executed = 0;
     }
 }

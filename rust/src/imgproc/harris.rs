@@ -30,8 +30,63 @@ impl Default for HarrisConfig {
     }
 }
 
-/// Sobel gradient images (Ix, Iy).
+/// Sobel gradient images (Ix, Iy). Allocates fresh output buffers; the
+/// per-round path reuses buffers via [`gradients_into`].
 pub fn gradients(img: &Image) -> (Vec<f64>, Vec<f64>) {
+    let mut ix = Vec::new();
+    let mut iy = Vec::new();
+    gradients_into(img, &mut ix, &mut iy);
+    (ix, iy)
+}
+
+/// Sobel gradients into caller-owned buffers (no allocation once the
+/// buffers have warmed to the image size). The inner loop runs on
+/// straight row slices — no per-pixel clamping closure — so the
+/// compiler can unroll and vectorise it; border columns use the same
+/// clamped expressions as the scalar reference. Per pixel the operand
+/// order matches [`gradients_scalar`] exactly, so the results are
+/// bitwise identical (asserted by `tests/kernel_equivalence.rs`).
+pub fn gradients_into(img: &Image, ix: &mut Vec<f64>, iy: &mut Vec<f64>) {
+    let (w, h) = (img.width, img.height);
+    ix.clear();
+    ix.resize(w * h, 0.0);
+    iy.clear();
+    iy.resize(w * h, 0.0);
+    for y in 0..h {
+        let ym = y.saturating_sub(1);
+        let yp = (y + 1).min(h - 1);
+        let t = &img.data[ym * w..ym * w + w];
+        let m = &img.data[y * w..y * w + w];
+        let b = &img.data[yp * w..yp * w + w];
+        let ox = &mut ix[y * w..y * w + w];
+        let oy = &mut iy[y * w..y * w + w];
+        let last = w - 1;
+        // Border columns: x±1 clamps to the edge.
+        let edge = |x: usize| {
+            let xm = x.saturating_sub(1);
+            let xp = (x + 1).min(last);
+            (
+                (t[xp] + 2.0 * m[xp] + b[xp]) - (t[xm] + 2.0 * m[xm] + b[xm]),
+                (b[xm] + 2.0 * b[x] + b[xp]) - (t[xm] + 2.0 * t[x] + t[xp]),
+            )
+        };
+        (ox[0], oy[0]) = edge(0);
+        if last > 0 {
+            (ox[last], oy[last]) = edge(last);
+        }
+        // Interior: branch-free shifted-slice loop.
+        for x in 1..last {
+            ox[x] = (t[x + 1] + 2.0 * m[x + 1] + b[x + 1])
+                - (t[x - 1] + 2.0 * m[x - 1] + b[x - 1]);
+            oy[x] = (b[x - 1] + 2.0 * b[x] + b[x + 1]) - (t[x - 1] + 2.0 * t[x] + t[x + 1]);
+        }
+    }
+}
+
+/// The scalar reference for [`gradients`]: per-pixel clamped lookups,
+/// exactly as originally written. Retained so the sliced kernel is
+/// verified against it rather than eyeballed.
+pub fn gradients_scalar(img: &Image) -> (Vec<f64>, Vec<f64>) {
     let (w, h) = (img.width, img.height);
     let mut ix = vec![0.0; w * h];
     let mut iy = vec![0.0; w * h];
@@ -63,14 +118,123 @@ impl ResponseMap {
         ResponseMap { width, height, r: vec![0.0; width * height], row_done: vec![false; height] }
     }
 
+    /// Clear back to the all-rows-pending state in place (same result
+    /// as a fresh [`ResponseMap::new`], without reallocating when the
+    /// dimensions are unchanged).
+    pub fn reset(&mut self, width: usize, height: usize) {
+        self.width = width;
+        self.height = height;
+        self.r.clear();
+        self.r.resize(width * height, 0.0);
+        self.row_done.clear();
+        self.row_done.resize(height, false);
+    }
+
     /// Fraction of rows computed.
     pub fn coverage(&self) -> f64 {
         self.row_done.iter().filter(|&&d| d).count() as f64 / self.height.max(1) as f64
     }
 }
 
+/// Reusable buffers for the separable response-row kernel: per-column
+/// vertical sums of the three structure-tensor products. One scratch
+/// per program/worker keeps the per-step path allocation-free once the
+/// buffers have warmed to the row width.
+#[derive(Clone, Debug, Default)]
+pub struct RowScratch {
+    vxx: Vec<f64>,
+    vxy: Vec<f64>,
+    vyy: Vec<f64>,
+}
+
 /// Compute one row of the Harris response from the gradient images.
+/// Convenience wrapper over [`response_row_with`] with a throwaway
+/// scratch; hot per-step paths hold a [`RowScratch`] and call
+/// [`response_row_with`] directly.
 pub fn response_row(
+    ix: &[f64],
+    iy: &[f64],
+    map: &mut ResponseMap,
+    y: usize,
+    cfg: &HarrisConfig,
+) {
+    response_row_with(ix, iy, map, y, cfg, &mut RowScratch::default());
+}
+
+/// One row of the Harris response, separably: first the vertical sums
+/// of `gx²`, `gx·gy`, `gy²` over the (clamped) 3-row band — three
+/// elementwise passes over row slices the compiler can vectorise —
+/// then a horizontal 3-tap sum and the response `det − k·tr²` per
+/// column. Equal to [`response_row_scalar`] up to summation
+/// reassociation (the 9-term tensor sums are regrouped column-first);
+/// `tests/kernel_equivalence.rs` bounds the difference.
+pub fn response_row_with(
+    ix: &[f64],
+    iy: &[f64],
+    map: &mut ResponseMap,
+    y: usize,
+    cfg: &HarrisConfig,
+    scratch: &mut RowScratch,
+) {
+    let (w, h) = (map.width, map.height);
+    debug_assert!(y < h);
+    scratch.vxx.clear();
+    scratch.vxx.resize(w, 0.0);
+    scratch.vxy.clear();
+    scratch.vxy.resize(w, 0.0);
+    scratch.vyy.clear();
+    scratch.vyy.resize(w, 0.0);
+    let ym = y.saturating_sub(1);
+    let yp = (y + 1).min(h - 1);
+    for row in [ym, y, yp] {
+        let gx = &ix[row * w..row * w + w];
+        let gy = &iy[row * w..row * w + w];
+        for x in 0..w {
+            scratch.vxx[x] += gx[x] * gx[x];
+            scratch.vxy[x] += gx[x] * gy[x];
+            scratch.vyy[x] += gy[x] * gy[x];
+        }
+    }
+    let (vxx, vxy, vyy) = (&scratch.vxx, &scratch.vxy, &scratch.vyy);
+    let k = cfg.k;
+    let resp = |sxx: f64, sxy: f64, syy: f64| {
+        let det = sxx * syy - sxy * sxy;
+        let tr = sxx + syy;
+        det - k * tr * tr
+    };
+    let row = &mut map.r[y * w..y * w + w];
+    let last = w - 1;
+    {
+        // Left border: x−1 clamps onto x.
+        let xp = 1.min(last);
+        row[0] = resp(
+            vxx[0] + vxx[0] + vxx[xp],
+            vxy[0] + vxy[0] + vxy[xp],
+            vyy[0] + vyy[0] + vyy[xp],
+        );
+    }
+    for x in 1..last {
+        row[x] = resp(
+            vxx[x - 1] + vxx[x] + vxx[x + 1],
+            vxy[x - 1] + vxy[x] + vxy[x + 1],
+            vyy[x - 1] + vyy[x] + vyy[x + 1],
+        );
+    }
+    if last > 0 {
+        // Right border: x+1 clamps onto x.
+        row[last] = resp(
+            vxx[last - 1] + vxx[last] + vxx[last],
+            vxy[last - 1] + vxy[last] + vxy[last],
+            vyy[last - 1] + vyy[last] + vyy[last],
+        );
+    }
+    map.row_done[y] = true;
+}
+
+/// The scalar reference for [`response_row_with`]: the per-pixel 3×3
+/// structure-tensor loop, exactly as originally written. Retained for
+/// the kernel-equivalence suite.
+pub fn response_row_scalar(
     ix: &[f64],
     iy: &[f64],
     map: &mut ResponseMap,
@@ -173,8 +337,9 @@ pub fn row_schedule(height: usize) -> Vec<usize> {
 pub fn harris_full(img: &Image, cfg: &HarrisConfig) -> Vec<Corner> {
     let (ix, iy) = gradients(img);
     let mut map = ResponseMap::new(img.width, img.height);
+    let mut scratch = RowScratch::default();
     for y in 0..img.height {
-        response_row(&ix, &iy, &mut map, y, cfg);
+        response_row_with(&ix, &iy, &mut map, y, cfg, &mut scratch);
     }
     detect(&map, cfg)
 }
@@ -184,8 +349,9 @@ pub fn harris_full(img: &Image, cfg: &HarrisConfig) -> Vec<Corner> {
 pub fn harris_perforated(img: &Image, cfg: &HarrisConfig, rows_to_run: usize) -> Vec<Corner> {
     let (ix, iy) = gradients(img);
     let mut map = ResponseMap::new(img.width, img.height);
+    let mut scratch = RowScratch::default();
     for &y in row_schedule(img.height).iter().take(rows_to_run.min(img.height)) {
-        response_row(&ix, &iy, &mut map, y, cfg);
+        response_row_with(&ix, &iy, &mut map, y, cfg, &mut scratch);
     }
     detect(&map, cfg)
 }

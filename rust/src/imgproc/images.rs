@@ -35,10 +35,19 @@ impl Picture {
 
 /// Render a test picture at the given size.
 pub fn render(kind: Picture, width: usize, height: usize, seed: u64) -> Image {
+    let mut img = Image::new(width, height);
+    render_into(kind, width, height, seed, &mut img);
+    img
+}
+
+/// Render a test picture into a caller-owned image, reusing its pixel
+/// buffer (no allocation once the buffer has warmed to the size).
+/// Identical output to [`render`].
+pub fn render_into(kind: Picture, width: usize, height: usize, seed: u64, img: &mut Image) {
     match kind {
-        Picture::Checker => checkerboard(width, height, 8),
-        Picture::Polygons => polygons(width, height, seed, 5),
-        Picture::Cluttered => cluttered(width, height, seed),
+        Picture::Checker => checkerboard(width, height, 8, img),
+        Picture::Polygons => polygons(width, height, seed, 5, img),
+        Picture::Cluttered => cluttered(width, height, seed, img),
     }
 }
 
@@ -46,8 +55,8 @@ pub fn render(kind: Picture, width: usize, height: usize, seed: u64) -> Image {
 /// 160×160 at 8 bpp).
 pub const EVAL_SIZE: usize = 160;
 
-fn checkerboard(width: usize, height: usize, cells: usize) -> Image {
-    let mut img = Image::new(width, height);
+fn checkerboard(width: usize, height: usize, cells: usize, img: &mut Image) {
+    img.reset(width, height, 0.0);
     let cw = width / cells;
     let ch = height / cells;
     for y in 0..height {
@@ -56,7 +65,6 @@ fn checkerboard(width: usize, height: usize, cells: usize) -> Image {
             img.set(x, y, v as f64);
         }
     }
-    img
 }
 
 /// Fill a convex polygon given vertices (scanline test via cross products).
@@ -94,37 +102,29 @@ fn fill_convex(img: &mut Image, pts: &[(f64, f64)], value: f64) {
     }
 }
 
-fn polygons(width: usize, height: usize, seed: u64, count: usize) -> Image {
+fn polygons(width: usize, height: usize, seed: u64, count: usize, img: &mut Image) {
     let mut rng = Rng::new(seed ^ 0x90170);
-    let mut img = Image::new(width, height);
     // Mid-gray background so both darker and lighter shapes give edges.
-    for v in img.data.iter_mut() {
-        *v = 0.5;
-    }
+    img.reset(width, height, 0.5);
     for i in 0..count {
         let cx = rng.range(0.2, 0.8) * width as f64;
         let cy = rng.range(0.2, 0.8) * height as f64;
         let r = rng.range(0.08, 0.22) * width as f64;
         let sides = 3 + rng.index(3); // triangles to pentagons
         let phase = rng.range(0.0, std::f64::consts::TAU);
-        let pts: Vec<(f64, f64)> = (0..sides)
-            .map(|k| {
-                let a = phase + std::f64::consts::TAU * k as f64 / sides as f64;
-                (cx + r * a.cos(), cy + r * a.sin())
-            })
-            .collect();
+        let mut pts = [(0.0, 0.0); 5];
+        for (k, p) in pts.iter_mut().enumerate().take(sides) {
+            let a = phase + std::f64::consts::TAU * k as f64 / sides as f64;
+            *p = (cx + r * a.cos(), cy + r * a.sin());
+        }
         let shade = if i % 2 == 0 { 0.95 } else { 0.05 };
-        fill_convex(&mut img, &pts, shade);
+        fill_convex(img, &pts[..sides], shade);
     }
-    img
 }
 
-fn cluttered(width: usize, height: usize, seed: u64) -> Image {
+fn cluttered(width: usize, height: usize, seed: u64, img: &mut Image) {
     let mut rng = Rng::new(seed ^ 0xC1077);
-    let mut img = Image::new(width, height);
-    for v in img.data.iter_mut() {
-        *v = 0.5;
-    }
+    img.reset(width, height, 0.5);
     // Overlapping axis-aligned rectangles: dense corner population.
     for _ in 0..14 {
         let x0 = rng.index(width * 3 / 4);
@@ -142,7 +142,6 @@ fn cluttered(width: usize, height: usize, seed: u64) -> Image {
     for v in img.data.iter_mut() {
         *v = (*v + 0.02 * rng.gaussian()).clamp(0.0, 1.0);
     }
-    img
 }
 
 #[cfg(test)]
@@ -159,6 +158,17 @@ mod tests {
     }
 
     #[test]
+    fn render_into_reused_buffer_matches_fresh_render() {
+        // A buffer warmed by a different (larger) picture must produce
+        // bitwise-identical output when re-rendered into.
+        let mut img = render(Picture::Cluttered, 96, 96, 1);
+        for kind in Picture::ALL {
+            render_into(kind, 64, 64, 5, &mut img);
+            assert_eq!(img, render(kind, 64, 64, 5), "{kind:?}");
+        }
+    }
+
+    #[test]
     fn values_in_unit_range() {
         for kind in Picture::ALL {
             let img = render(kind, 80, 80, 9);
@@ -168,7 +178,8 @@ mod tests {
 
     #[test]
     fn checkerboard_alternates() {
-        let img = checkerboard(64, 64, 8);
+        let mut img = Image::new(64, 64);
+        checkerboard(64, 64, 8, &mut img);
         assert_eq!(img.at(0, 0), 0.0);
         assert_eq!(img.at(8, 0), 1.0);
         assert_eq!(img.at(8, 8), 0.0);
@@ -194,7 +205,8 @@ mod tests {
 
     #[test]
     fn clamped_access() {
-        let img = checkerboard(16, 16, 4);
+        let mut img = Image::new(16, 16);
+        checkerboard(16, 16, 4, &mut img);
         assert_eq!(img.at_clamped(-5, -5), img.at(0, 0));
         assert_eq!(img.at_clamped(100, 100), img.at(15, 15));
     }

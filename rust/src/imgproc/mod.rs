@@ -29,6 +29,15 @@ impl Image {
         Image { width, height, data: vec![0.0; width * height] }
     }
 
+    /// Re-shape in place to `width × height` filled with `fill`,
+    /// reusing the existing buffer when large enough.
+    pub fn reset(&mut self, width: usize, height: usize, fill: f64) {
+        self.width = width;
+        self.height = height;
+        self.data.clear();
+        self.data.resize(width * height, fill);
+    }
+
     #[inline]
     pub fn at(&self, x: usize, y: usize) -> f64 {
         self.data[y * self.width + x]

@@ -131,12 +131,55 @@ impl Cascade {
 }
 
 /// Squared DFT magnitude `|X[k]|²` of `x` at integer bin `k` via the
-/// Goertzel recurrence: one O(N) pass with a single multiply per sample,
-/// no twiddle table — the classic way an MCU evaluates a handful of
-/// spectral bins without paying for a full FFT. Exactly equals the
-/// corresponding bin of [`crate::util::fft::dft_naive`] up to float
-/// rounding.
+/// Goertzel recurrence: one O(N) pass, no twiddle table — the classic
+/// way an MCU evaluates a handful of spectral bins without paying for a
+/// full FFT. Exactly equals the corresponding bin of
+/// [`crate::util::fft::dft_naive`] up to float rounding.
+///
+/// The recurrence `s₀ = x + a·s₁ − s₂` is serially dependent, so the
+/// plain loop cannot vectorise. This version expands the state
+/// transition over four samples: with `a = 2cos(w)` the 2×2 companion
+/// matrix powers have Chebyshev-recurrence entries `c₂ = a²−1`,
+/// `c₃ = a·c₂−a`, `c₄ = a·c₃−c₂`, giving
+///
+/// ```text
+/// s₁' = x₃ + a·x₂ + c₂·x₁ + c₃·x₀ + c₄·s₁ − c₃·s₂
+/// s₂' = x₂ + a·x₁ + c₂·x₀ + c₃·s₁ − c₂·s₂
+/// ```
+///
+/// per 4-sample chunk — two independent fused dot products the compiler
+/// can schedule wide (safe code, no `unsafe`). The scalar reference is
+/// retained as [`goertzel_power_scalar`]; `tests/kernel_equivalence.rs`
+/// bounds the (reassociation-only) difference between the two.
 pub fn goertzel_power(x: &[f64], k: usize) -> f64 {
+    let n = x.len() as f64;
+    let w = 2.0 * PI * k as f64 / n;
+    let a = 2.0 * w.cos();
+    let c2 = a * a - 1.0;
+    let c3 = a * c2 - a;
+    let c4 = a * c3 - c2;
+    let (mut s1, mut s2) = (0.0f64, 0.0f64);
+    let mut chunks = x.chunks_exact(4);
+    for c in &mut chunks {
+        let (x0, x1, x2, x3) = (c[0], c[1], c[2], c[3]);
+        let t1 = x3 + a * x2 + c2 * x1 + c3 * x0 + c4 * s1 - c3 * s2;
+        let t2 = x2 + a * x1 + c2 * x0 + c3 * s1 - c2 * s2;
+        s1 = t1;
+        s2 = t2;
+    }
+    for &xi in chunks.remainder() {
+        let s0 = xi + a * s1 - s2;
+        s2 = s1;
+        s1 = s0;
+    }
+    s1 * s1 + s2 * s2 - a * s1 * s2
+}
+
+/// The scalar reference for [`goertzel_power`]: the textbook
+/// one-sample-at-a-time recurrence. Kept (and kept exercised by the
+/// kernel-equivalence suite) so the chunked kernel is verified against
+/// it rather than eyeballed.
+pub fn goertzel_power_scalar(x: &[f64], k: usize) -> f64 {
     let n = x.len() as f64;
     let w = 2.0 * PI * k as f64 / n;
     let coeff = 2.0 * w.cos();
@@ -224,6 +267,23 @@ mod tests {
                 (got - want).abs() < 1e-6 * want.max(1.0),
                 "bin {k}: goertzel {got} vs dft {want}"
             );
+        }
+    }
+
+    #[test]
+    fn chunked_goertzel_matches_scalar_across_remainders() {
+        // Lengths 1..16 cover every chunks_exact(4) remainder shape.
+        let mut rng = crate::util::rng::Rng::new(9);
+        for n in 1..16usize {
+            let x: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+            for k in 0..n {
+                let scalar = goertzel_power_scalar(&x, k);
+                let chunked = goertzel_power(&x, k);
+                assert!(
+                    (chunked - scalar).abs() <= 1e-10 * scalar.abs().max(1.0),
+                    "n={n} k={k}: chunked {chunked} vs scalar {scalar}"
+                );
+            }
         }
     }
 

@@ -1,0 +1,143 @@
+//! Steady-state allocation hygiene.
+//!
+//! The per-round hot paths — the round driver, audio window assembly,
+//! and the Harris row kernel — are required to stop allocating once
+//! their reusable buffers have warmed. A counting global allocator
+//! measures exactly that: warm a program up, then assert further
+//! rounds perform zero heap allocations (driver: an allocation count
+//! independent of the round count).
+//!
+//! Deliberately a single `#[test]` in its own integration binary: the
+//! allocation counter is process-global, so concurrent tests in the
+//! same binary would race it.
+
+use aic::audio::app::{AudioProgram, AudioSource};
+use aic::audio::detector::SpectralDetector;
+use aic::audio::stream::AudioScript;
+use aic::energy::harvester::Harvester;
+use aic::exec::engine::{Engine, EngineConfig};
+use aic::exec::program::{StepProgram, SyntheticProgram};
+use aic::exec::runtime::RuntimeSpec;
+use aic::exec::Policy;
+use aic::imgproc::app::CornerProgram;
+use aic::imgproc::harris::HarrisConfig;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static COUNTER: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOCS.load(Ordering::SeqCst)
+}
+
+/// One full audio round: acquire, run every refinement step, classify.
+fn audio_round(prog: &mut AudioProgram, t: f64) -> usize {
+    assert!(prog.load_next(t));
+    for j in 0..prog.num_steps() {
+        prog.execute_step(j);
+    }
+    let out = prog.output();
+    prog.reset_round();
+    out.predicted
+}
+
+/// One Harris round through the step loop (output/detect excluded: the
+/// emitted corner list is a fresh per-round allocation by design).
+fn harris_round(prog: &mut CornerProgram, t: f64) {
+    assert!(prog.load_next(t));
+    for j in 0..prog.num_steps() {
+        prog.execute_step(j);
+    }
+    prog.reset_round();
+}
+
+#[test]
+fn steady_state_round_loops_do_not_allocate() {
+    // --- Audio: window assembly + Goertzel probes. -------------------
+    let script = AudioScript::generate(3600.0, 11);
+    let mut audio = AudioProgram::new(SpectralDetector::paper_default(), AudioSource::Script(script));
+    // Warm-up: first rounds grow the window/powers buffers.
+    for t in [0.0, 30.0] {
+        audio_round(&mut audio, t);
+    }
+    let before = allocs();
+    let mut sink = 0usize;
+    for t in [60.0, 90.0, 120.0, 150.0, 180.0] {
+        sink += audio_round(&mut audio, t);
+    }
+    let audio_delta = allocs() - before;
+    assert_eq!(
+        audio_delta, 0,
+        "audio steady-state rounds allocated {audio_delta} times (sink {sink})"
+    );
+
+    // --- Imaging: render, gradients and the response-row kernel. ----
+    let mut harris = CornerProgram::new(HarrisConfig::default(), 32, &[3, 4], 2);
+    for t in [0.0, 30.0, 60.0] {
+        harris_round(&mut harris, t);
+    }
+    let before = allocs();
+    for t in [90.0, 120.0, 150.0] {
+        harris_round(&mut harris, t);
+    }
+    let harris_delta = allocs() - before;
+    assert_eq!(
+        harris_delta, 0,
+        "harris steady-state rounds allocated {harris_delta} times"
+    );
+
+    // --- Round driver: allocation count independent of round count. --
+    // The rounds vector is reserved once up front, and the GREEDY round
+    // path is allocation-free, so doubling the horizon (≈ doubling the
+    // number of rounds) must not change how many allocations one
+    // campaign performs.
+    let spec = RuntimeSpec::new(60.0);
+    let rt = Policy::Greedy.runtime::<SyntheticProgram>(&spec);
+    let mut run = |horizon: f64| -> (u64, usize) {
+        let mut program = SyntheticProgram::new(10_000, 5, 5_000);
+        let mut engine =
+            Engine::new(EngineConfig::paper_default(horizon), Harvester::Constant(2e-3));
+        let before = allocs();
+        let campaign = rt.run(&mut program, &mut engine);
+        let delta = allocs() - before;
+        (delta, campaign.rounds.len())
+    };
+    let (short_allocs, short_rounds) = run(3600.0);
+    let (long_allocs, long_rounds) = run(7200.0);
+    assert!(
+        long_rounds > short_rounds,
+        "horizon doubling must add rounds ({short_rounds} -> {long_rounds})"
+    );
+    assert_eq!(
+        short_allocs, long_allocs,
+        "driver allocations must not scale with rounds \
+         ({short_rounds} rounds: {short_allocs} allocs, \
+          {long_rounds} rounds: {long_allocs} allocs)"
+    );
+}

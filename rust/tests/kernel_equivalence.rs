@@ -1,0 +1,130 @@
+//! Vectorised-kernel equivalence suite.
+//!
+//! The chunked Goertzel recurrence and the sliced Harris kernels are
+//! rewrites of straightforward scalar loops; the scalar originals are
+//! retained in the crate precisely so this suite can hold the rewrites
+//! to them:
+//!
+//! * `gradients` must be **bitwise identical** to `gradients_scalar`
+//!   (the sliced loop keeps the per-pixel operand order).
+//! * `goertzel_power` and `response_row_with` regroup summation order,
+//!   so they are held to tight relative bounds instead:
+//!   `|v − s| ≤ tol · max(1, |s|)` with tol 1e-10 (short Goertzel
+//!   windows) / 1e-9 (longer windows and the Harris response — the
+//!   9-term tensor sums are re-bracketed column-first over values
+//!   bounded by the 3×3 Sobel tensor scale).
+
+use aic::imgproc::harris::{
+    gradients, gradients_scalar, response_row, response_row_scalar, response_row_with,
+    HarrisConfig, ResponseMap, RowScratch,
+};
+use aic::imgproc::images::{render, Picture};
+use aic::imgproc::Image;
+use aic::util::dsp::{goertzel_power, goertzel_power_scalar};
+use aic::util::rng::Rng;
+
+fn noise_image(w: usize, h: usize, seed: u64) -> Image {
+    let mut rng = Rng::new(seed);
+    let mut img = Image::new(w, h);
+    for v in img.data.iter_mut() {
+        *v = rng.range(0.0, 1.0);
+    }
+    img
+}
+
+#[test]
+fn goertzel_matches_scalar_on_random_windows() {
+    let mut rng = Rng::new(0x60E7);
+    for trial in 0..40 {
+        let n = 1 + rng.index(256);
+        let x: Vec<f64> = (0..n).map(|_| rng.range(-1.5, 1.5)).collect();
+        for k in [0, n / 4, n / 2, n.saturating_sub(1)] {
+            let s = goertzel_power_scalar(&x, k);
+            let v = goertzel_power(&x, k);
+            // Windows up to 256 samples accumulate more reassociation
+            // rounding than the short in-module cases; 1e-9 relative
+            // still sits ~3 decades above the observed drift.
+            let bound = 1e-9 * s.abs().max(1.0);
+            assert!(
+                (v - s).abs() <= bound,
+                "trial {trial}: n={n} k={k}: chunked {v} vs scalar {s}"
+            );
+        }
+    }
+}
+
+#[test]
+fn goertzel_matches_scalar_on_every_remainder_length() {
+    // Lengths 1..=9 cover every chunks_exact(4) remainder shape twice.
+    let mut rng = Rng::new(0x60E8);
+    for n in 1..=9usize {
+        let x: Vec<f64> = (0..n).map(|_| rng.range(-1.0, 1.0)).collect();
+        for k in 0..n {
+            let s = goertzel_power_scalar(&x, k);
+            let v = goertzel_power(&x, k);
+            assert!(
+                (v - s).abs() <= 1e-10 * s.abs().max(1.0),
+                "n={n} k={k}: chunked {v} vs scalar {s}"
+            );
+        }
+    }
+}
+
+#[test]
+fn gradients_bitwise_identical_to_scalar() {
+    let mut images = vec![noise_image(33, 17, 9), noise_image(1, 5, 3), noise_image(7, 1, 4)];
+    for kind in Picture::ALL {
+        images.push(render(kind, 64, 64, 5));
+    }
+    for img in &images {
+        let (vx, vy) = gradients(img);
+        let (sx, sy) = gradients_scalar(img);
+        // Exact equality: the sliced kernel preserves operand order.
+        assert_eq!(vx, sx, "Ix differs on {}x{}", img.width, img.height);
+        assert_eq!(vy, sy, "Iy differs on {}x{}", img.width, img.height);
+    }
+}
+
+#[test]
+fn response_rows_match_scalar_within_bound() {
+    let cfg = HarrisConfig::default();
+    let mut images = vec![noise_image(48, 31, 21), noise_image(2, 2, 8), noise_image(1, 6, 2)];
+    for kind in Picture::ALL {
+        images.push(render(kind, 80, 80, 7));
+    }
+    for img in &images {
+        let (ix, iy) = gradients_scalar(img);
+        let mut vec_map = ResponseMap::new(img.width, img.height);
+        let mut ref_map = ResponseMap::new(img.width, img.height);
+        let mut scratch = RowScratch::default();
+        for y in 0..img.height {
+            response_row_with(&ix, &iy, &mut vec_map, y, &cfg, &mut scratch);
+            response_row_scalar(&ix, &iy, &mut ref_map, y, &cfg);
+        }
+        assert_eq!(vec_map.row_done, ref_map.row_done);
+        for (i, (&v, &s)) in vec_map.r.iter().zip(&ref_map.r).enumerate() {
+            let bound = 1e-9 * s.abs().max(1.0);
+            assert!(
+                (v - s).abs() <= bound,
+                "{}x{} pixel {i}: separable {v} vs scalar {s}",
+                img.width,
+                img.height
+            );
+        }
+    }
+}
+
+#[test]
+fn response_row_wrapper_equals_scratch_variant() {
+    let img = render(Picture::Cluttered, 40, 40, 3);
+    let cfg = HarrisConfig::default();
+    let (ix, iy) = gradients(&img);
+    let mut a = ResponseMap::new(40, 40);
+    let mut b = ResponseMap::new(40, 40);
+    let mut scratch = RowScratch::default();
+    for y in 0..40 {
+        response_row(&ix, &iy, &mut a, y, &cfg);
+        response_row_with(&ix, &iy, &mut b, y, &cfg, &mut scratch);
+    }
+    assert_eq!(a.r, b.r);
+}

@@ -9,9 +9,11 @@ use aic::audio::detector::SpectralDetector;
 use aic::audio::stream::AudioScript;
 use aic::audio::NUM_PROBES;
 use aic::coordinator::experiment::{
-    run_audio_policy, run_har_policy, test_context, AudioRunSpec, HarRunSpec,
+    run_audio_policy, run_har_policy, test_context, AudioRunSpec, HarRunSpec, SupplyCache,
 };
 use aic::coordinator::fleet::run_fleet;
+use aic::coordinator::scenario::{DeviceSpec, HarvesterSpec, Scenario, WorkloadSpec};
+use aic::energy::synth::SynthSpec;
 use aic::energy::estimator::{EnergyProfile, SmartTable};
 use aic::energy::harvester::Harvester;
 use aic::energy::mcu::{McuModel, OpCost};
@@ -278,6 +280,98 @@ fn shared_har_context_fleet_is_deterministic_across_pool_sizes() {
             }
         }
     }
+}
+
+/// Bitwise campaign comparison for the cached-sweep gates below.
+fn assert_audio_grids_identical(
+    reference: &[Campaign<AudioOutput>],
+    got: &[Campaign<AudioOutput>],
+    label: &str,
+) {
+    assert_eq!(reference.len(), got.len(), "{label}: grid size");
+    for (i, (a, b)) in reference.iter().zip(got.iter()).enumerate() {
+        assert_eq!(a.rounds.len(), b.rounds.len(), "{label} cell {i}: rounds");
+        assert_eq!(a.power_cycles, b.power_cycles, "{label} cell {i}");
+        assert_eq!(a.power_failures, b.power_failures, "{label} cell {i}");
+        assert_eq!(a.app_energy, b.app_energy, "{label} cell {i}");
+        assert_eq!(a.state_energy, b.state_energy, "{label} cell {i}");
+        for (ra, rb) in a.rounds.iter().zip(b.rounds.iter()) {
+            assert_eq!(ra.acquired_at, rb.acquired_at, "{label} cell {i}");
+            assert_eq!(ra.emitted_at, rb.emitted_at, "{label} cell {i}");
+            assert_eq!(ra.steps_executed, rb.steps_executed, "{label} cell {i}");
+            assert_eq!(ra.output, rb.output, "{label} cell {i}");
+        }
+    }
+}
+
+#[test]
+fn cached_mixed_harvester_sweep_is_bitwise_identical_for_any_pool_size() {
+    // The tentpole determinism gate: one scenario mixing all three
+    // harvester families, run uncached single-threaded as the reference,
+    // then with a shared supply cache under several worker-pool sizes.
+    // Sharing one materialised supply across cells must change nothing
+    // in any campaign, bit for bit — and the cache must build exactly
+    // one supply per distinct (harvester, seed) pair, not per cell.
+    let scenario = Scenario::new("cache_matrix", WorkloadSpec::Audio)
+        .with_harvesters(vec![
+            HarvesterSpec::Synth(SynthSpec::builtin_solar()),
+            HarvesterSpec::Ambient(TraceKind::Rf),
+            HarvesterSpec::Kinetic,
+        ])
+        .with_policies(vec![Policy::Greedy, Policy::Chinchilla])
+        .with_seeds(vec![1, 2])
+        .with_horizon(600.0)
+        .with_sample_period(30.0);
+    let distinct_supplies = 3 * 2; // harvesters × seeds (policies share)
+    let cells = scenario.plan().len();
+    assert_eq!(cells, 3 * 2 * 2, "grid shape changed under this test");
+
+    let reference = scenario.run_cached(false, None, Some(1), &SupplyCache::disabled());
+    for workers in [1usize, 2, 8] {
+        let cache = SupplyCache::new();
+        let got = scenario.run_cached(false, None, Some(workers), &cache);
+        assert_audio_grids_identical(
+            reference.audio_campaigns(),
+            got.audio_campaigns(),
+            &format!("workers={workers}"),
+        );
+        assert_eq!(
+            cache.builds(),
+            distinct_supplies as u64,
+            "workers={workers}: builds must equal distinct supplies, not {cells} cells"
+        );
+        assert_eq!(cache.len(), distinct_supplies, "workers={workers}: cache entries");
+    }
+}
+
+#[test]
+fn supply_builds_track_distinct_supplies_across_a_device_grid() {
+    // Devices vary capacitor sizing, not the energy environment, so a
+    // P×D×S grid must still build one supply per (harvester, seed) —
+    // and re-running the sweep on the same cache must build nothing new.
+    let scenario = Scenario::new("cache_devices", WorkloadSpec::Audio)
+        .with_harvesters(vec![HarvesterSpec::Synth(SynthSpec::builtin_rf())])
+        .with_devices(vec![
+            DeviceSpec::default(),
+            DeviceSpec { capacitance: Some(1000e-6), ..DeviceSpec::default() },
+        ])
+        .with_policies(vec![Policy::Greedy, Policy::Chinchilla])
+        .with_seeds(vec![1, 2])
+        .with_horizon(600.0)
+        .with_sample_period(30.0);
+    assert_eq!(scenario.plan().len(), 1 * 2 * 2 * 2);
+
+    let cache = SupplyCache::new();
+    let first = scenario.run_cached(false, None, None, &cache);
+    assert_eq!(cache.builds(), 2, "one build per (harvester, seed), devices share");
+
+    let second = scenario.run_cached(false, None, None, &cache);
+    assert_eq!(cache.builds(), 2, "a warm cache must not rebuild supplies");
+    assert_audio_grids_identical(
+        first.audio_campaigns(),
+        second.audio_campaigns(),
+        "warm-cache rerun",
+    );
 }
 
 #[test]

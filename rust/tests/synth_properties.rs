@@ -119,6 +119,44 @@ fn synth_sweep_is_bitwise_identical_for_any_worker_count() {
 }
 
 #[test]
+fn shared_supplies_do_not_perturb_synth_campaigns() {
+    // Supply sharing is an allocation optimisation, not a modelling
+    // change: a generated-environment sweep must realise bit-identical
+    // campaigns whether every cell builds its own `Piecewise` or all
+    // cells of a (harvester, seed) share one cached supply. Environment
+    // generation is the expensive, stateful part of these sweeps, so
+    // this is where a cache that leaked cursor state would show first.
+    use aic::coordinator::experiment::SupplyCache;
+    let sc = Scenario::new("synth-cache", WorkloadSpec::Audio)
+        .with_policies(vec![Policy::Greedy, Policy::Chinchilla])
+        .with_harvesters(vec![
+            HarvesterSpec::Synth(SynthSpec::builtin_multi()),
+            HarvesterSpec::Synth(SynthSpec::builtin_solar()),
+        ])
+        .with_seeds(vec![1, 2])
+        .with_horizon(600.0);
+    let cache = SupplyCache::new();
+    let shared = sc.run_cached(false, None, None, &cache);
+    let private = sc.run_cached(false, None, None, &SupplyCache::disabled());
+    assert_eq!(cache.builds(), 4, "2 synth families x 2 seeds");
+    let (a, b) = (shared.audio_campaigns(), private.audio_campaigns());
+    assert_eq!(a.len(), b.len());
+    for (i, (ca, cb)) in a.iter().zip(b).enumerate() {
+        assert_eq!(ca.power_cycles, cb.power_cycles, "cell {i}");
+        assert_eq!(ca.power_failures, cb.power_failures, "cell {i}");
+        assert_eq!(ca.app_energy.to_bits(), cb.app_energy.to_bits(), "cell {i}");
+        assert_eq!(ca.state_energy.to_bits(), cb.state_energy.to_bits(), "cell {i}");
+        assert_eq!(ca.rounds.len(), cb.rounds.len(), "cell {i}");
+        for (ra, rb) in ca.rounds.iter().zip(&cb.rounds) {
+            assert_eq!(ra.acquired_at.to_bits(), rb.acquired_at.to_bits(), "cell {i}");
+            assert_eq!(ra.emitted_at, rb.emitted_at, "cell {i}");
+            assert_eq!(ra.steps_executed, rb.steps_executed, "cell {i}");
+            assert_eq!(ra.output, rb.output, "cell {i}");
+        }
+    }
+}
+
+#[test]
 fn generated_environments_are_physically_sane() {
     for spec in family_specs() {
         for seed in 1..=8 {
