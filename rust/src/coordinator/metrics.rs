@@ -240,6 +240,7 @@ mod tests {
             power_cycles: 1,
             app_energy: 0.0,
             state_energy: 0.0,
+            violations: Vec::new(),
         }
     }
 

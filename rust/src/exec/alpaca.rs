@@ -22,7 +22,16 @@
 use crate::energy::mcu::OpCost;
 use crate::exec::engine::{Engine, Ledger, OpOutcome};
 use crate::exec::runtime::{RoundDriver, RoundOutcome, RoundStrategy, Runtime};
+use crate::exec::tracked::RuntimeProfile;
 use crate::exec::{Campaign, StepProgram};
+
+/// The invariant profile the correctness harness holds Alpaca to: tasks
+/// redo across power cycles (replays must stay within the committed
+/// prefix, monotone, idempotent) and persistent task-shared state is
+/// managed — so every WAR-prone step must privatize before executing.
+pub fn profile() -> RuntimeProfile {
+    RuntimeProfile { name: "alpaca", replays: true, persists: true }
+}
 
 /// Alpaca tuning knobs.
 #[derive(Clone, Debug)]

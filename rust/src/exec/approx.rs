@@ -18,7 +18,17 @@
 use crate::energy::estimator::SmartTable;
 use crate::exec::engine::{Engine, Ledger, OpOutcome};
 use crate::exec::runtime::{RoundDriver, RoundOutcome, RoundStrategy, Runtime};
+use crate::exec::tracked::RuntimeProfile;
 use crate::exec::{Campaign, StepProgram};
+
+/// The invariant profile the correctness harness holds GREEDY and SMART
+/// to: every round completes (and emits) within a single power cycle,
+/// no replay ever happens, and **no persistent state exists at all** —
+/// any State-ledger operation is a violation. This is the paper's
+/// headline guarantee, checked mechanically.
+pub fn profile() -> RuntimeProfile {
+    RuntimeProfile { name: "approx", replays: false, persists: false }
+}
 
 /// Approximate runtime configuration.
 #[derive(Clone, Debug)]

@@ -18,7 +18,17 @@
 use crate::energy::mcu::OpCost;
 use crate::exec::engine::{Engine, Ledger, OpOutcome};
 use crate::exec::runtime::{RoundDriver, RoundOutcome, RoundStrategy, Runtime};
+use crate::exec::tracked::RuntimeProfile;
 use crate::exec::{Campaign, StepProgram};
+
+/// The invariant profile the correctness harness holds Chinchilla to: it
+/// stretches rounds across power cycles by replaying from checkpoints
+/// (replays must stay within billed progress, monotone, idempotent) and
+/// manages persistent state — so every non-idempotent step must carry
+/// its WAR versioning write before executing.
+pub fn profile() -> RuntimeProfile {
+    RuntimeProfile { name: "chinchilla", replays: true, persists: true }
+}
 
 /// Chinchilla tuning knobs.
 #[derive(Clone, Debug)]

@@ -10,7 +10,16 @@
 use crate::energy::mcu::McuModel;
 use crate::exec::engine::{Engine, Ledger, OpOutcome};
 use crate::exec::runtime::{RoundDriver, RoundOutcome, RoundStrategy, Runtime};
+use crate::exec::tracked::RuntimeProfile;
 use crate::exec::{Campaign, StepProgram};
+
+/// The invariant profile the correctness harness holds the continuous
+/// baseline to: a battery-powered run never replays and never manages
+/// persistent state — any State-ledger operation or cross-cycle round
+/// is a violation.
+pub fn profile() -> RuntimeProfile {
+    RuntimeProfile { name: "continuous", replays: false, persists: false }
+}
 
 /// The continuous (battery-powered) executor in [`Runtime`] form. Pair
 /// it with an [`Engine::powered`] engine; on a harvesting engine it

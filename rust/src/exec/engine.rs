@@ -39,6 +39,8 @@ use crate::energy::capacitor::Capacitor;
 use crate::energy::harvester::Harvester;
 use crate::energy::mcu::{McuModel, OpCost};
 use crate::energy::traces::Piecewise;
+use crate::exec::faultplan::{FaultInjector, FaultPlan};
+use crate::exec::tracked::{Event, Probe};
 use std::sync::{Arc, OnceLock};
 
 /// Which ledger an energy expense belongs to (Fig. 1's split between
@@ -376,6 +378,15 @@ pub struct Engine {
     supply: Option<Arc<SupplyTable>>,
     /// This engine's private position within the shared table.
     cursor: Cursor,
+    /// Operations attempted so far — the fault-point ordinal space the
+    /// correctness harness enumerates. Counted unconditionally (one
+    /// u64 increment on the hot path).
+    op_count: u64,
+    /// Deterministic power-failure injection; `None` = physics only.
+    fault: Option<FaultInjector>,
+    /// Execution-trace probe (correctness harness); `None` in
+    /// production runs.
+    probe: Option<Probe>,
 }
 
 impl Engine {
@@ -412,6 +423,9 @@ impl Engine {
             kind: cfg.kind,
             supply,
             cursor: Cursor::default(),
+            op_count: 0,
+            fault: None,
+            probe: None,
         }
     }
 
@@ -445,6 +459,9 @@ impl Engine {
             kind: cfg.kind,
             supply: None,
             cursor: Cursor::default(),
+            op_count: 0,
+            fault: None,
+            probe: None,
         }
     }
 
@@ -742,6 +759,10 @@ impl Engine {
             return false;
         }
         self.cycles += 1;
+        if let Some(p) = &self.probe {
+            p.set_cycle(self.cycles);
+            p.record(Event::Boot { cycle: self.cycles, now: self.now });
+        }
         // Boot/runtime-init cost; billed to App (every runtime pays it).
         let boot = self.mcu.boot_energy;
         self.app_energy += boot;
@@ -753,7 +774,15 @@ impl Engine {
     /// withdraw its energy. On brown-out the operation is void and the
     /// buffer is left just below the brown-out threshold (the device
     /// consumed down to V_off and died).
+    ///
+    /// When a [`FaultPlan`] is armed (see [`Engine::arm_faults`]), the
+    /// injector is consulted once per operation; a hit behaves exactly
+    /// like a physical failure at the end of the op's window — time and
+    /// harvesting advance, nothing is billed, the op is void. The
+    /// powered (battery) engine never injects: a battery cannot fail.
     pub fn run_op(&mut self, cost: &OpCost, ledger: Ledger) -> OpOutcome {
+        let ordinal = self.op_count;
+        self.op_count += 1;
         let duration = self.mcu.duration(cost);
         let energy = self.mcu.energy(cost);
         if self.powered {
@@ -762,24 +791,39 @@ impl Engine {
                 Ledger::App => self.app_energy += energy,
                 Ledger::State => self.state_energy += energy,
             }
+            self.record_op(cost, ledger, OpOutcome::Done, false, ordinal);
             return OpOutcome::Done;
         }
         if !self.cap.alive() {
-            return self.brown_out();
+            let out = self.brown_out();
+            self.record_op(cost, ledger, out, false, ordinal);
+            return out;
         }
+        let injected = match self.fault.as_mut() {
+            Some(f) => f.strike(ordinal),
+            None => false,
+        };
         // Harvest while the op runs.
         match self.kind {
             EngineKind::Analytic => self.an_harvest_span(self.now + duration),
             EngineKind::FixedStep => self.step_harvest_op(duration),
         }
+        if injected {
+            let out = self.brown_out();
+            self.record_op(cost, ledger, out, true, ordinal);
+            return out;
+        }
         let ok = self.cap.discharge(energy);
         if !ok || !self.cap.alive() {
-            return self.brown_out();
+            let out = self.brown_out();
+            self.record_op(cost, ledger, out, false, ordinal);
+            return out;
         }
         match ledger {
             Ledger::App => self.app_energy += energy,
             Ledger::State => self.state_energy += energy,
         }
+        self.record_op(cost, ledger, OpOutcome::Done, false, ordinal);
         OpOutcome::Done
     }
 
@@ -788,7 +832,65 @@ impl Engine {
         // Physically the device dies crossing V_off; the residual charge
         // sits just below the threshold.
         self.cap.set_voltage(self.cap.v_off * 0.995);
+        if let Some(p) = &self.probe {
+            p.record(Event::Fail { failures: self.failures, now: self.now });
+        }
         OpOutcome::BrownOut
+    }
+
+    /// Arm deterministic power-failure injection for the rest of the
+    /// campaign (correctness harness; see
+    /// [`faultplan`](crate::exec::faultplan)). Sleep and recharge are
+    /// not fault points — a failure there is indistinguishable from a
+    /// longer recharge — so injection targets `run_op` ordinals only.
+    pub fn arm_faults(&mut self, plan: FaultPlan) {
+        self.fault = Some(FaultInjector::new(plan));
+    }
+
+    /// Attach an execution-trace probe (correctness harness). The probe
+    /// is also handed to a [`crate::exec::tracked::TrackedProgram`] so
+    /// program events interleave with op events in one totally ordered
+    /// log.
+    pub fn attach_probe(&mut self, probe: Probe) {
+        probe.set_cycle(self.cycles);
+        self.probe = Some(probe);
+    }
+
+    /// Operations attempted so far: each `run_op` call is one fault
+    /// point, whatever its outcome.
+    pub fn ops_attempted(&self) -> u64 {
+        self.op_count
+    }
+
+    /// Failures forced by the armed fault plan (a subset of
+    /// `self.failures`).
+    pub fn injected_faults(&self) -> u64 {
+        self.fault.as_ref().map_or(0, |f| f.injected())
+    }
+
+    fn record_op(
+        &self,
+        cost: &OpCost,
+        ledger: Ledger,
+        outcome: OpOutcome,
+        injected: bool,
+        ordinal: u64,
+    ) {
+        if let Some(p) = &self.probe {
+            p.record(Event::Op {
+                ordinal,
+                ledger,
+                cycles: cost.cycles,
+                fram_reads: cost.fram_reads,
+                fram_writes: cost.fram_writes,
+                ble_bytes: cost.ble_bytes,
+                adc_reads: cost.adc_reads,
+                sensor: cost.sensor_secs > 0.0,
+                outcome,
+                injected,
+                cycle: self.cycles,
+            });
+        }
     }
 
     /// Sleep in LPM3 for `secs` (harvesting continues, sleep current is

@@ -1,0 +1,145 @@
+//! Deterministic power-failure injection.
+//!
+//! A [`FaultPlan`] describes *where* the correctness harness forces the
+//! device to brown out, in the coordinate system the engine already has:
+//! the ordinal of each [`Engine::run_op`](crate::exec::engine::Engine::run_op)
+//! call. Every operation the runtime issues — acquisition, a step's CPU
+//! burst, a WAR versioning write, a checkpoint, a commit, the BLE
+//! emission, a restore — is one fault point, so enumerating ordinals
+//! `0..ops_attempted()` systematically covers every cycle boundary a
+//! short campaign can reach (mid-step, between execute and commit,
+//! during emit, during restore). Randomised schedules are seeded
+//! Bernoulli processes over the same ordinals and are bitwise
+//! reproducible: the same plan on the same campaign yields the same
+//! trace.
+//!
+//! An injected failure behaves exactly like a physical brown-out: time
+//! still advances over the doomed operation's window (harvesting
+//! included), nothing is billed, the buffer is left just under the
+//! brown-out threshold, and the runtime must recharge to boot.
+
+use crate::util::rng::Rng;
+
+/// Where to force power failures, in `run_op` ordinals.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub enum FaultPlan {
+    /// Physics only — no injected failures.
+    #[default]
+    None,
+    /// Brown out exactly at these op ordinals (0-based, sorted
+    /// ascending; ordinals already passed when armed are ignored).
+    AtOps(Vec<u64>),
+    /// Seeded Bernoulli schedule: each op browns out with probability
+    /// `rate`, up to `max_faults` injections.
+    Random { seed: u64, rate: f64, max_faults: u64 },
+    /// Every `period`-th op starting at `offset` (a metronome of
+    /// adversity for soak runs).
+    EveryN { period: u64, offset: u64 },
+}
+
+impl FaultPlan {
+    /// A single forced failure at op `ordinal`.
+    pub fn single(ordinal: u64) -> FaultPlan {
+        FaultPlan::AtOps(vec![ordinal])
+    }
+
+    /// An unbounded seeded Bernoulli schedule.
+    pub fn random(seed: u64, rate: f64) -> FaultPlan {
+        FaultPlan::Random { seed, rate, max_faults: u64::MAX }
+    }
+}
+
+/// The stateful, engine-side form of a [`FaultPlan`]: consulted once per
+/// operation, in order.
+#[derive(Clone, Debug)]
+pub struct FaultInjector {
+    plan: FaultPlan,
+    rng: Rng,
+    cursor: usize,
+    injected: u64,
+}
+
+impl FaultInjector {
+    pub fn new(plan: FaultPlan) -> FaultInjector {
+        let rng = match &plan {
+            FaultPlan::Random { seed, .. } => Rng::new(seed ^ 0xFA17_0B57_AC1E_5EED),
+            _ => Rng::new(0),
+        };
+        FaultInjector { plan, rng, cursor: 0, injected: 0 }
+    }
+
+    /// Decide whether operation `ordinal` browns out. Must be called
+    /// exactly once per operation with strictly increasing ordinals —
+    /// the engine is the only intended caller.
+    pub fn strike(&mut self, ordinal: u64) -> bool {
+        let hit = match &self.plan {
+            FaultPlan::None => false,
+            FaultPlan::AtOps(ops) => {
+                let mut c = self.cursor;
+                while c < ops.len() && ops[c] < ordinal {
+                    c += 1;
+                }
+                let hit = c < ops.len() && ops[c] == ordinal;
+                self.cursor = if hit { c + 1 } else { c };
+                hit
+            }
+            FaultPlan::Random { rate, max_faults, .. } => {
+                // Draw unconditionally so the schedule depends only on
+                // the ordinal sequence, not on how many faults fired.
+                let draw = self.rng.chance(*rate);
+                draw && self.injected < *max_faults
+            }
+            FaultPlan::EveryN { period, offset } => {
+                *period > 0 && ordinal >= *offset && (ordinal - offset) % period == 0
+            }
+        };
+        if hit {
+            self.injected += 1;
+        }
+        hit
+    }
+
+    /// Failures injected so far.
+    pub fn injected(&self) -> u64 {
+        self.injected
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn at_ops_fires_exactly_once_per_listed_ordinal() {
+        let mut inj = FaultInjector::new(FaultPlan::AtOps(vec![2, 5, 5, 9]));
+        let fired: Vec<u64> = (0..12).filter(|&i| inj.strike(i)).collect();
+        // Duplicate entries cannot double-fire a single ordinal pass.
+        assert_eq!(fired, vec![2, 5, 9]);
+        assert_eq!(inj.injected(), 3);
+    }
+
+    #[test]
+    fn random_is_reproducible_and_capped() {
+        let plan = FaultPlan::Random { seed: 7, rate: 0.3, max_faults: 4 };
+        let mut a = FaultInjector::new(plan.clone());
+        let mut b = FaultInjector::new(plan);
+        let fa: Vec<bool> = (0..200).map(|i| a.strike(i)).collect();
+        let fb: Vec<bool> = (0..200).map(|i| b.strike(i)).collect();
+        assert_eq!(fa, fb, "same seed, same schedule");
+        assert_eq!(a.injected(), 4, "max_faults caps the schedule");
+    }
+
+    #[test]
+    fn every_n_is_a_metronome() {
+        let mut inj = FaultInjector::new(FaultPlan::EveryN { period: 4, offset: 3 });
+        let fired: Vec<u64> = (0..14).filter(|&i| inj.strike(i)).collect();
+        assert_eq!(fired, vec![3, 7, 11]);
+    }
+
+    #[test]
+    fn none_never_fires() {
+        let mut inj = FaultInjector::new(FaultPlan::None);
+        assert!((0..100).all(|i| !inj.strike(i)));
+        assert_eq!(inj.injected(), 0);
+    }
+}

@@ -22,17 +22,33 @@
 //! * [`approx`] — the paper's contribution: the GREEDY and SMART
 //!   approximate-intermittent runtimes that finish (and emit) within the
 //!   current power cycle, needing no persistent state at all.
+//! * [`faultplan`] / [`tracked`] — the correctness layer: deterministic
+//!   power-failure injection over the engine's op ordinals, shadow
+//!   access tracking, and the invariant checker (WAR freedom, replay
+//!   idempotence, monotone commit, volatility discipline) every runtime
+//!   is gated on. [`mutants`] holds the deliberately broken runtime
+//!   variants the checker must flag (the mutation gate proving the
+//!   harness has teeth).
 
 pub mod alpaca;
 pub mod approx;
 pub mod chinchilla;
 pub mod continuous;
 pub mod engine;
+pub mod faultplan;
+pub mod mutants;
 pub mod program;
 pub mod runtime;
+pub mod tracked;
 
+pub use faultplan::FaultPlan;
 pub use program::StepProgram;
-pub use runtime::{RoundDriver, RoundOutcome, RoundStrategy, Runtime, RuntimeSpec};
+pub use runtime::{
+    DriverViolation, RoundDriver, RoundOutcome, RoundStrategy, Runtime, RuntimeSpec,
+};
+pub use tracked::{
+    check_trace, run_checked, CheckedRun, Probe, RuntimeProfile, Trace, TrackedProgram, Violation,
+};
 
 /// Which runtime drives the device.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -100,6 +116,17 @@ impl Policy {
             }
         }
     }
+
+    /// The invariant profile the correctness harness checks this
+    /// policy's runtime against (see [`tracked::check_trace`]).
+    pub fn profile(&self) -> RuntimeProfile {
+        match self {
+            Policy::Continuous => continuous::profile(),
+            Policy::Chinchilla => chinchilla::profile(),
+            Policy::Alpaca => alpaca::profile(),
+            Policy::Greedy | Policy::Smart { .. } => approx::profile(),
+        }
+    }
 }
 
 use approx::ApproxConfig;
@@ -164,6 +191,9 @@ pub struct Campaign<O> {
     pub app_energy: f64,
     /// Joules spent on state management (checkpoint/restore/WAR on NVM).
     pub state_energy: f64,
+    /// Malformed strategy outcomes the driver refused to account
+    /// (empty for every well-behaved runtime; see [`DriverViolation`]).
+    pub violations: Vec<DriverViolation>,
 }
 
 impl<O> Campaign<O> {

@@ -1,0 +1,445 @@
+//! Deliberately broken runtime variants — the mutation gate.
+//!
+//! A correctness harness that never fires is indistinguishable from one
+//! that cannot fire. Each runtime here reproduces a real intermittent-
+//! computing bug class from the literature (WAR hazards, premature
+//! commit, non-idempotent output) by taking a shipping runtime's
+//! structure and removing exactly one protection. The fault-injection
+//! suite (`tests/fault_injection.rs`) gates every change on the checker
+//! flagging each mutant with its expected [`Violation`] kind while the
+//! shipping runtimes stay clean under the very same fault schedules.
+//!
+//! | mutant | removed protection | expected violation |
+//! |---|---|---|
+//! | [`NoWarChinchillaRuntime`] | WAR versioning write before each step | `unversioned-war-write` |
+//! | [`EarlyCommitAlpacaRuntime`] | commit *after* the task's write-back | `replay-beyond-commit` |
+//! | [`EmitBeforeCommitRuntime`] | commit *before* the emission | `double-emit` |
+//! | [`PersistentGreedyRuntime`] | "no persistent state" discipline | `stateful-volatile-runtime` |
+//!
+//! The first and last misbehave on every round — no fault needed; the
+//! middle two are only wrong *under power failure*, which is exactly
+//! what makes them good mutants: they prove the harness catches bugs
+//! that are invisible in fault-free runs.
+
+use crate::energy::mcu::OpCost;
+use crate::exec::engine::{Engine, Ledger, OpOutcome};
+use crate::exec::runtime::{RoundDriver, RoundOutcome, RoundStrategy, Runtime};
+use crate::exec::{Campaign, StepProgram};
+
+/// Reboot recovery shared by the persistent mutants: pay the restore
+/// cost, then rebuild program state by replaying the prefix the runtime
+/// *believes* is committed (for the broken variants that belief is the
+/// bug — the checker compares it against billed progress).
+fn reenter<P: StepProgram>(
+    program: &mut P,
+    engine: &mut Engine,
+    restore_cycles: u64,
+    committed: usize,
+) {
+    let cost = OpCost {
+        cycles: restore_cycles,
+        fram_reads: program.state_words(committed),
+        ..Default::default()
+    };
+    let _ = engine.run_op(&cost, Ledger::State);
+    program.reset_round();
+    for j in 0..committed {
+        program.execute_step(j);
+    }
+}
+
+/// Acquire the sensor window and persist it to FRAM, retrying across
+/// power failures (the shared prologue of the persistent mutants).
+/// Returns `false` when the campaign horizon expires first.
+fn acquire_and_persist<P: StepProgram>(program: &mut P, engine: &mut Engine) -> bool {
+    loop {
+        if engine.run_op(&program.acquire_cost(), Ledger::App) == OpOutcome::Done {
+            let persist =
+                OpCost { fram_writes: program.state_words(0), ..Default::default() };
+            if engine.run_op(&persist, Ledger::State) == OpOutcome::Done {
+                return true;
+            }
+        }
+        program.reset_round();
+        if !engine.charge_until_boot() {
+            return false;
+        }
+    }
+}
+
+/// Chinchilla with the WAR versioning write removed: checkpoints are
+/// taken, but non-idempotent steps run without persisting the words they
+/// overwrite — after a reboot, replay re-reads already-overwritten
+/// state (the classic intermittence anomaly). Expected violation:
+/// `unversioned-war-write`, on every billed step with `war_words > 0`,
+/// faults or no faults.
+pub struct NoWarChinchillaRuntime {
+    pub sample_period: f64,
+}
+
+impl<P: StepProgram> RoundStrategy<P> for NoWarChinchillaRuntime {
+    fn round(&self, program: &mut P, engine: &mut Engine) -> RoundOutcome<P::Output> {
+        program.plan(program.num_steps());
+        if !acquire_and_persist(program, engine) {
+            return RoundOutcome::Expired;
+        }
+        let total = program.planned_steps();
+        let mut k = 0usize;
+        let mut last_ckpt = 0usize;
+        'process: loop {
+            if k >= total {
+                match engine.run_op(&program.emit_cost(), Ledger::App) {
+                    OpOutcome::Done => {
+                        return RoundOutcome::Emitted {
+                            emitted_at: engine.now,
+                            steps: total,
+                            output: program.output(),
+                        };
+                    }
+                    OpOutcome::BrownOut => {
+                        if !engine.charge_until_boot() {
+                            return RoundOutcome::Expired;
+                        }
+                        reenter(program, engine, 300, last_ckpt);
+                        k = last_ckpt;
+                        continue 'process;
+                    }
+                }
+            }
+            // Step k: application burst, then execution — with NO WAR
+            // versioning write in between (the removed protection).
+            match engine.run_op(&program.step_cost(k), Ledger::App) {
+                OpOutcome::Done => {
+                    program.execute_step(k);
+                    k += 1;
+                    // Checkpoint after every step (maximally conservative
+                    // — the bug is isolated to the missing WAR write).
+                    let ckpt = OpCost {
+                        cycles: 400,
+                        fram_writes: program.state_words(k),
+                        ..Default::default()
+                    };
+                    if engine.run_op(&ckpt, Ledger::State) == OpOutcome::Done {
+                        last_ckpt = k;
+                    } else {
+                        if !engine.charge_until_boot() {
+                            return RoundOutcome::Expired;
+                        }
+                        reenter(program, engine, 300, last_ckpt);
+                        k = last_ckpt;
+                    }
+                }
+                OpOutcome::BrownOut => {
+                    if !engine.charge_until_boot() {
+                        return RoundOutcome::Expired;
+                    }
+                    reenter(program, engine, 300, last_ckpt);
+                    k = last_ckpt;
+                }
+            }
+        }
+    }
+}
+
+impl<P: StepProgram> Runtime<P> for NoWarChinchillaRuntime {
+    fn run(&self, program: &mut P, engine: &mut Engine) -> Campaign<P::Output> {
+        RoundDriver::new(self.sample_period).drive(program, engine, self)
+    }
+}
+
+/// Alpaca with the two-phase commit moved *before* the task body: the
+/// runtime marks the task committed, then executes it. Fault-free runs
+/// are indistinguishable from the real thing; a power failure inside a
+/// task makes the reboot path "restore" work that was never done —
+/// replaying a prefix longer than anything ever billed. Expected
+/// violation: `replay-beyond-commit` (under fault injection).
+pub struct EarlyCommitAlpacaRuntime {
+    pub steps_per_task: usize,
+    pub sample_period: f64,
+}
+
+impl<P: StepProgram> RoundStrategy<P> for EarlyCommitAlpacaRuntime {
+    fn round(&self, program: &mut P, engine: &mut Engine) -> RoundOutcome<P::Output> {
+        program.plan(program.num_steps());
+        if !acquire_and_persist(program, engine) {
+            return RoundOutcome::Expired;
+        }
+        let total = program.planned_steps();
+        let mut committed = 0usize;
+        let mut k = 0usize;
+        'tasks: while committed < total {
+            let task_end = (committed + self.steps_per_task.max(1)).min(total);
+            // BUG: commit the task boundary before running its steps.
+            let delta = program
+                .state_words(task_end)
+                .saturating_sub(program.state_words(committed))
+                .max(1);
+            let commit =
+                OpCost { cycles: 300, fram_writes: delta, ..Default::default() };
+            match engine.run_op(&commit, Ledger::State) {
+                OpOutcome::Done => committed = task_end,
+                OpOutcome::BrownOut => {
+                    if !engine.charge_until_boot() {
+                        return RoundOutcome::Expired;
+                    }
+                    reenter(program, engine, 250, committed);
+                    k = committed;
+                    continue 'tasks;
+                }
+            }
+            while k < task_end {
+                if engine.run_op(&program.step_cost(k), Ledger::App) == OpOutcome::BrownOut {
+                    if !engine.charge_until_boot() {
+                        return RoundOutcome::Expired;
+                    }
+                    // `committed` already covers this unfinished task:
+                    // the reboot replays steps that never ran.
+                    reenter(program, engine, 250, committed);
+                    k = committed;
+                    continue 'tasks;
+                }
+                let war = program.war_words(k);
+                if war > 0 {
+                    let privatize = OpCost { fram_writes: war, ..Default::default() };
+                    if engine.run_op(&privatize, Ledger::State) == OpOutcome::BrownOut {
+                        if !engine.charge_until_boot() {
+                            return RoundOutcome::Expired;
+                        }
+                        reenter(program, engine, 250, committed);
+                        k = committed;
+                        continue 'tasks;
+                    }
+                }
+                program.execute_step(k);
+                k += 1;
+            }
+        }
+        loop {
+            match engine.run_op(&program.emit_cost(), Ledger::App) {
+                OpOutcome::Done => {
+                    return RoundOutcome::Emitted {
+                        emitted_at: engine.now,
+                        steps: total,
+                        output: program.output(),
+                    };
+                }
+                OpOutcome::BrownOut => {
+                    if !engine.charge_until_boot() {
+                        return RoundOutcome::Expired;
+                    }
+                    reenter(program, engine, 250, total);
+                }
+            }
+        }
+    }
+}
+
+impl<P: StepProgram> Runtime<P> for EarlyCommitAlpacaRuntime {
+    fn run(&self, program: &mut P, engine: &mut Engine) -> Campaign<P::Output> {
+        RoundDriver::new(self.sample_period).drive(program, engine, self)
+    }
+}
+
+/// A task runtime that emits the result *before* committing it: a fault
+/// between the emission and the commit reboots into a state that does
+/// not know the result left the device, so the whole round redoes — and
+/// emits again. Fault-free runs look correct. Expected violation:
+/// `double-emit` (under fault injection).
+pub struct EmitBeforeCommitRuntime {
+    pub sample_period: f64,
+}
+
+impl<P: StepProgram> RoundStrategy<P> for EmitBeforeCommitRuntime {
+    fn round(&self, program: &mut P, engine: &mut Engine) -> RoundOutcome<P::Output> {
+        program.plan(program.num_steps());
+        if !acquire_and_persist(program, engine) {
+            return RoundOutcome::Expired;
+        }
+        let total = program.planned_steps();
+        let mut k = 0usize;
+        'round: loop {
+            while k < total {
+                if engine.run_op(&program.step_cost(k), Ledger::App) == OpOutcome::BrownOut {
+                    if !engine.charge_until_boot() {
+                        return RoundOutcome::Expired;
+                    }
+                    reenter(program, engine, 250, 0);
+                    k = 0;
+                    continue 'round;
+                }
+                let war = program.war_words(k);
+                if war > 0 {
+                    let privatize = OpCost { fram_writes: war, ..Default::default() };
+                    if engine.run_op(&privatize, Ledger::State) == OpOutcome::BrownOut {
+                        if !engine.charge_until_boot() {
+                            return RoundOutcome::Expired;
+                        }
+                        reenter(program, engine, 250, 0);
+                        k = 0;
+                        continue 'round;
+                    }
+                }
+                program.execute_step(k);
+                k += 1;
+            }
+            // BUG: the result leaves the device before the commit that
+            // would make the emission durable knowledge.
+            let emitted_at = match engine.run_op(&program.emit_cost(), Ledger::App) {
+                OpOutcome::Done => engine.now,
+                OpOutcome::BrownOut => {
+                    if !engine.charge_until_boot() {
+                        return RoundOutcome::Expired;
+                    }
+                    reenter(program, engine, 250, 0);
+                    k = 0;
+                    continue 'round;
+                }
+            };
+            let commit = OpCost {
+                cycles: 300,
+                fram_writes: program.state_words(total),
+                ..Default::default()
+            };
+            match engine.run_op(&commit, Ledger::State) {
+                OpOutcome::Done => {
+                    return RoundOutcome::Emitted {
+                        emitted_at,
+                        steps: total,
+                        output: program.output(),
+                    };
+                }
+                OpOutcome::BrownOut => {
+                    // The reboot forgot the emission: redo everything.
+                    if !engine.charge_until_boot() {
+                        return RoundOutcome::Expired;
+                    }
+                    reenter(program, engine, 250, 0);
+                    k = 0;
+                }
+            }
+        }
+    }
+}
+
+impl<P: StepProgram> Runtime<P> for EmitBeforeCommitRuntime {
+    fn run(&self, program: &mut P, engine: &mut Engine) -> Campaign<P::Output> {
+        RoundDriver::new(self.sample_period).drive(program, engine, self)
+    }
+}
+
+/// GREEDY with a per-step FRAM checkpoint bolted on — breaking the
+/// paper's headline "no persistent state at all" guarantee while still
+/// completing every round within one power cycle. Expected violation:
+/// `stateful-volatile-runtime` (under the approx profile), on every
+/// round, faults or no faults.
+pub struct PersistentGreedyRuntime {
+    pub sample_period: f64,
+}
+
+impl<P: StepProgram> RoundStrategy<P> for PersistentGreedyRuntime {
+    fn round(&self, program: &mut P, engine: &mut Engine) -> RoundOutcome<P::Output> {
+        if engine.run_op(&program.acquire_cost(), Ledger::App) == OpOutcome::BrownOut {
+            return RoundOutcome::Dropped { steps: 0, sleep: false };
+        }
+        program.plan(program.num_steps());
+        for j in 0..program.planned_steps() {
+            if engine.run_op(&program.step_cost(j), Ledger::App) == OpOutcome::BrownOut {
+                return RoundOutcome::Dropped { steps: j, sleep: false };
+            }
+            // BUG: persistent-state management in a runtime whose whole
+            // point is that none exists.
+            let ckpt = OpCost {
+                fram_writes: program.state_words(j + 1),
+                ..Default::default()
+            };
+            if engine.run_op(&ckpt, Ledger::State) == OpOutcome::BrownOut {
+                return RoundOutcome::Dropped { steps: j, sleep: false };
+            }
+            program.execute_step(j);
+        }
+        match engine.run_op(&program.emit_cost(), Ledger::App) {
+            OpOutcome::Done => RoundOutcome::Emitted {
+                emitted_at: engine.now,
+                steps: program.planned_steps(),
+                output: program.output(),
+            },
+            OpOutcome::BrownOut => {
+                RoundOutcome::Dropped { steps: program.planned_steps(), sleep: true }
+            }
+        }
+    }
+}
+
+impl<P: StepProgram> Runtime<P> for PersistentGreedyRuntime {
+    fn run(&self, program: &mut P, engine: &mut Engine) -> Campaign<P::Output> {
+        RoundDriver::new(self.sample_period).drive(program, engine, self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energy::harvester::Harvester;
+    use crate::exec::engine::EngineConfig;
+    use crate::exec::program::SyntheticProgram;
+    use crate::exec::tracked::run_checked;
+    use crate::exec::{alpaca, approx, chinchilla, FaultPlan};
+
+    fn engine(power: f64, max_time: f64) -> Engine {
+        Engine::new(EngineConfig::paper_default(max_time), Harvester::Constant(power))
+    }
+
+    #[test]
+    fn no_war_mutant_is_flagged_without_any_fault() {
+        let run = run_checked(
+            SyntheticProgram::new(2, 6, 10_000),
+            engine(2e-3, 600.0),
+            &NoWarChinchillaRuntime { sample_period: 60.0 },
+            FaultPlan::None,
+            &chinchilla::profile(),
+        );
+        assert!(
+            run.violations.iter().any(|v| v.kind() == "unversioned-war-write"),
+            "{:?}",
+            run.violations
+        );
+    }
+
+    #[test]
+    fn persistent_greedy_mutant_is_flagged_without_any_fault() {
+        let run = run_checked(
+            SyntheticProgram::new(2, 6, 10_000),
+            engine(2e-3, 600.0),
+            &PersistentGreedyRuntime { sample_period: 60.0 },
+            FaultPlan::None,
+            &approx::profile(),
+        );
+        assert!(
+            run.violations.iter().any(|v| v.kind() == "stateful-volatile-runtime"),
+            "{:?}",
+            run.violations
+        );
+    }
+
+    #[test]
+    fn fault_hidden_mutants_are_clean_without_faults() {
+        // The early-commit and emit-before-commit bugs only manifest
+        // under power failure — exactly what makes them good mutants.
+        let early = run_checked(
+            SyntheticProgram::new(2, 8, 10_000),
+            engine(2e-3, 600.0),
+            &EarlyCommitAlpacaRuntime { steps_per_task: 4, sample_period: 60.0 },
+            FaultPlan::None,
+            &alpaca::profile(),
+        );
+        assert!(early.violations.is_empty(), "{:?}", early.violations);
+        let emitter = run_checked(
+            SyntheticProgram::new(2, 8, 10_000),
+            engine(2e-3, 600.0),
+            &EmitBeforeCommitRuntime { sample_period: 60.0 },
+            FaultPlan::None,
+            &alpaca::profile(),
+        );
+        assert!(emitter.violations.is_empty(), "{:?}", emitter.violations);
+    }
+}

@@ -39,7 +39,17 @@ pub trait StepProgram {
     /// Restrict this round to `k <= num_steps()` steps. For HAR this is
     /// the anytime feature prefix; for imaging a uniformly-spread subset
     /// of loop iterations. May be called again mid-round with a larger
-    /// `k` (GREEDY refining as energy arrives); never smaller mid-round.
+    /// `k` (GREEDY refining as energy arrives).
+    ///
+    /// Contract: once execution has begun (`execute_step` ran and no
+    /// `load_next`/`reset_round` since), `k` must not shrink below the
+    /// accepted plan — already-executed steps cannot be unplanned.
+    /// Programs enforce this with `debug_assert!`;
+    /// [`TrackedProgram`](crate::exec::tracked::TrackedProgram) makes
+    /// both bounds always-on in release builds too, rejecting the call
+    /// and recording a
+    /// [`Violation`](crate::exec::tracked::Violation) instead of
+    /// forwarding it.
     fn plan(&mut self, k: usize);
 
     /// Steps currently planned.
@@ -124,7 +134,13 @@ impl StepProgram for SyntheticProgram {
     }
 
     fn plan(&mut self, k: usize) {
-        debug_assert!(k <= self.steps);
+        debug_assert!(k <= self.steps, "plan {k} exceeds {} total steps", self.steps);
+        debug_assert!(
+            self.executed == 0 || k >= self.planned,
+            "plan shrank mid-round: {} -> {k} with {} steps executed",
+            self.planned,
+            self.executed
+        );
         self.planned = k;
     }
 
@@ -186,5 +202,28 @@ mod tests {
     fn state_grows_with_progress() {
         let p = SyntheticProgram::new(1, 10, 100);
         assert!(p.state_words(5) > p.state_words(0));
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "plan shrank mid-round")]
+    fn mid_round_plan_shrink_is_rejected() {
+        let mut p = SyntheticProgram::new(1, 5, 100);
+        assert!(p.load_next(0.0));
+        p.plan(4);
+        p.execute_step(0);
+        p.plan(2); // shrinking after execution began: contract breach
+    }
+
+    #[test]
+    fn round_start_narrowing_is_fine() {
+        let mut p = SyntheticProgram::new(2, 5, 100);
+        assert!(p.load_next(0.0));
+        p.plan(2); // before any execution: allowed (GREEDY round start)
+        p.execute_step(0);
+        p.plan(4); // growth mid-round: allowed (GREEDY refinement)
+        assert!(p.load_next(0.0));
+        p.plan(1); // a new input resets the contract
+        assert_eq!(p.planned_steps(), 1);
     }
 }

@@ -54,6 +54,21 @@ pub enum RoundOutcome<O> {
     Expired,
 }
 
+/// A malformed [`RoundOutcome`] the driver refused to account. Rather
+/// than corrupting the ledgers (negative latencies, phantom steps), the
+/// driver quarantines the round as unemitted and records the breach in
+/// [`Campaign::violations`] — a structured error the correctness
+/// harness and CI can assert on.
+#[derive(Clone, Debug, PartialEq)]
+pub enum DriverViolation {
+    /// `Emitted { emitted_at }` earlier than the round's acquisition —
+    /// a result cannot reach the user before its input exists.
+    EmitBeforeAcquire { sample_id: u64, acquired_at: f64, emitted_at: f64 },
+    /// The strategy claimed more executed steps than the program's
+    /// accepted plan allows.
+    StepsBeyondPlan { sample_id: u64, steps: usize, planned: usize },
+}
+
 /// The per-sample strategy a policy contributes to the shared driver.
 pub trait RoundStrategy<P: StepProgram> {
     /// Drive one sample to an outcome. Called with the input already
@@ -95,6 +110,7 @@ impl RoundDriver {
             let est = (engine.horizon() / self.sample_period).ceil() as usize + 2;
             rounds.reserve(est.min(1 << 16));
         }
+        let mut violations: Vec<DriverViolation> = Vec::new();
         let mut sample_id = 0u64;
         while !engine.out_of_time() {
             if !engine.cap.alive() && !engine.charge_until_boot() {
@@ -107,24 +123,52 @@ impl RoundDriver {
             let acquired_cycle = engine.cycles;
             match strategy.round(program, engine) {
                 RoundOutcome::Emitted { emitted_at, steps, output } => {
+                    // Validate before accounting: a strategy bug must
+                    // not corrupt the ledgers downstream metrics trust.
+                    let planned = program.planned_steps();
+                    let mut valid = true;
+                    if emitted_at < acquired_at {
+                        violations.push(DriverViolation::EmitBeforeAcquire {
+                            sample_id,
+                            acquired_at,
+                            emitted_at,
+                        });
+                        valid = false;
+                    }
+                    if steps > planned {
+                        violations.push(DriverViolation::StepsBeyondPlan {
+                            sample_id,
+                            steps,
+                            planned,
+                        });
+                        valid = false;
+                    }
                     rounds.push(RoundResult {
                         sample_id,
                         acquired_at,
-                        emitted_at: Some(emitted_at),
-                        latency_cycles: engine.cycles - acquired_cycle,
-                        steps_executed: steps,
-                        output: Some(output),
+                        emitted_at: valid.then_some(emitted_at),
+                        latency_cycles: if valid { engine.cycles - acquired_cycle } else { 0 },
+                        steps_executed: steps.min(planned),
+                        output: valid.then_some(output),
                     });
                     sample_id += 1;
                     let _ = engine.sleep_until_next_slot(self.sample_period);
                 }
                 RoundOutcome::Dropped { steps, sleep } => {
+                    let planned = program.planned_steps();
+                    if steps > planned {
+                        violations.push(DriverViolation::StepsBeyondPlan {
+                            sample_id,
+                            steps,
+                            planned,
+                        });
+                    }
                     rounds.push(RoundResult {
                         sample_id,
                         acquired_at,
                         emitted_at: None,
                         latency_cycles: 0,
-                        steps_executed: steps,
+                        steps_executed: steps.min(planned),
                         output: None,
                     });
                     sample_id += 1;
@@ -142,6 +186,7 @@ impl RoundDriver {
             power_cycles: engine.cycles,
             app_energy: engine.app_energy,
             state_energy: engine.state_energy,
+            violations,
         }
     }
 }
@@ -219,5 +264,64 @@ mod tests {
     #[should_panic(expected = "smart_table")]
     fn smart_without_table_is_a_loud_error() {
         let _ = Policy::Smart { bound: 0.8 }.runtime::<SyntheticProgram>(&RuntimeSpec::new(60.0));
+    }
+
+    /// A strategy that lies to the driver: emissions dated before the
+    /// acquisition and step counts beyond the plan.
+    struct RogueStrategy;
+
+    impl RoundStrategy<SyntheticProgram> for RogueStrategy {
+        fn round(
+            &self,
+            program: &mut SyntheticProgram,
+            engine: &mut Engine,
+        ) -> RoundOutcome<usize> {
+            use crate::exec::engine::Ledger;
+            let _ = engine.run_op(&program.acquire_cost(), Ledger::App);
+            RoundOutcome::Emitted {
+                emitted_at: engine.now - 1e3,
+                steps: program.planned_steps() + 5,
+                output: 0,
+            }
+        }
+    }
+
+    #[test]
+    fn driver_quarantines_malformed_outcomes() {
+        let mut p = SyntheticProgram::new(3, 10, 1_000);
+        let mut e = engine(2e-3, 600.0);
+        let c = RoundDriver::new(60.0).drive(&mut p, &mut e, &RogueStrategy);
+        assert_eq!(c.rounds.len(), 3);
+        // No corrupt round reaches the ledgers: quarantined as unemitted,
+        // steps clamped to the plan, zero latency.
+        for r in &c.rounds {
+            assert!(r.emitted_at.is_none());
+            assert!(r.output.is_none());
+            assert_eq!(r.latency_cycles, 0);
+            assert!(r.steps_executed <= 10);
+        }
+        // Both breach kinds are surfaced, once per round.
+        let before = c
+            .violations
+            .iter()
+            .filter(|v| matches!(v, DriverViolation::EmitBeforeAcquire { .. }))
+            .count();
+        let beyond = c
+            .violations
+            .iter()
+            .filter(|v| matches!(v, DriverViolation::StepsBeyondPlan { .. }))
+            .count();
+        assert_eq!((before, beyond), (3, 3), "{:?}", c.violations);
+    }
+
+    #[test]
+    fn well_behaved_strategies_record_no_violations() {
+        for policy in [Policy::Chinchilla, Policy::Alpaca, Policy::Greedy] {
+            let mut p = SyntheticProgram::new(4, 10, 10_000);
+            let mut e = engine(2e-3, 1200.0);
+            let rt = policy.runtime::<SyntheticProgram>(&RuntimeSpec::new(60.0));
+            let c = rt.run(&mut p, &mut e);
+            assert!(c.violations.is_empty(), "{}: {:?}", policy.name(), c.violations);
+        }
     }
 }

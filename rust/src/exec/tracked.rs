@@ -1,0 +1,962 @@
+//! Access-tracking correctness harness for the intermittent runtimes.
+//!
+//! *Towards a Formal Foundation of Intermittent Computing* (PAPERS.md)
+//! shows that the bugs that silently corrupt intermittent systems are
+//! WAR hazards and non-idempotent re-execution — exactly the properties
+//! this repo's results rest on. This module checks them mechanically:
+//!
+//! * [`Probe`] — a shared trace buffer the engine and the program
+//!   wrapper both write into: every operation attempt (with its ledger,
+//!   cost shape, outcome and fault-injection flag), every boot, every
+//!   brown-out, and every program-level event (load / plan / step /
+//!   reset) in one totally ordered log.
+//! * [`TrackedProgram`] — wraps any [`StepProgram`], shadowing each call
+//!   with always-on contract checks (step order, plan bounds, mid-round
+//!   plan shrink). Violating calls are recorded and **not forwarded**,
+//!   so the inner program — and its `debug_assert!`s — stay protected
+//!   while the harness observes the broken runtime misbehaving.
+//! * [`check_trace`] — the invariant checker: WAR-hazard freedom (every
+//!   billed non-idempotent step is preceded by a versioning write of at
+//!   least `war_words`), replay idempotence (replayed prefixes are
+//!   contiguous, never exceed billed progress, rebuild bitwise-identical
+//!   shadow state, and results are never double-emitted), monotone
+//!   commit (the inferred committed prefix never regresses across
+//!   reboots), and volatility discipline (single-cycle runtimes touch no
+//!   persistent state and never stretch a round across power cycles).
+//! * [`run_checked`] — one-call harness: arm a
+//!   [`FaultPlan`](crate::exec::faultplan::FaultPlan), run a campaign
+//!   under any [`Runtime`], return the campaign plus the checked trace.
+//!
+//! How the checker classifies steps: a `Step` event is *billed* when the
+//! most recent engine operation was a successful App-ledger CPU burst
+//! (its "fuel"); brown-outs, reboots and `reset_round` clear fuel, so
+//! the free replay loops inside `ChinchillaRuntime::restore` /
+//! `AlpacaRuntime::reenter` — which issue no per-step ops by design —
+//! are recognised as *replay* and checked against the replay invariants
+//! instead of the billing ones.
+
+use crate::energy::mcu::OpCost;
+use crate::exec::engine::{Engine, Ledger, OpOutcome};
+use crate::exec::faultplan::FaultPlan;
+use crate::exec::program::StepProgram;
+use crate::exec::runtime::Runtime;
+use crate::exec::Campaign;
+use std::sync::{Arc, Mutex};
+
+/// One entry of the totally ordered execution trace.
+#[derive(Clone, Debug)]
+pub enum Event {
+    /// `load_next` succeeded: sample `sample` is live.
+    Load { sample: u64, cycle: u64, now: f64, num_steps: usize },
+    /// `plan(k)` accepted and forwarded.
+    Plan { sample: u64, k: usize },
+    /// `execute_step(j)` forwarded. `war` is the step's declared WAR
+    /// word count; `state` the shadow-state signature after the step
+    /// (`state_words(j + 1)`), used to verify replay idempotence.
+    Step { sample: u64, j: usize, war: u64, state: u64, cycle: u64 },
+    /// `reset_round`: all volatile round state dropped.
+    Reset { sample: u64, cycle: u64 },
+    /// One engine operation attempt (the fault-point ordinal space).
+    Op {
+        ordinal: u64,
+        ledger: Ledger,
+        cycles: u64,
+        fram_reads: u64,
+        fram_writes: u64,
+        ble_bytes: u64,
+        adc_reads: u64,
+        sensor: bool,
+        outcome: OpOutcome,
+        /// True when the brown-out was forced by the armed fault plan.
+        injected: bool,
+        cycle: u64,
+    },
+    /// Successful boot: power cycle `cycle` begins.
+    Boot { cycle: u64, now: f64 },
+    /// Brown-out number `failures` (injected or physical).
+    Fail { failures: u64, now: f64 },
+}
+
+/// An invariant violation — found online by [`TrackedProgram`] or
+/// offline by [`check_trace`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Violation {
+    /// `execute_step(j)` with `j` ≠ the next expected step.
+    OutOfOrderStep { sample: u64, expected: usize, got: usize },
+    /// `execute_step(j)` beyond the accepted plan.
+    StepBeyondPlan { sample: u64, j: usize, planned: usize },
+    /// `plan(k)` with `k > num_steps()`.
+    OversizedPlan { sample: u64, k: usize, total: usize },
+    /// `plan(k)` shrank the plan after execution began.
+    ShrunkPlanMidRound { sample: u64, from: usize, to: usize, executed: usize },
+    /// A billed non-idempotent step ran without a versioning write
+    /// covering its `war_words` (WAR hazard: a reboot replays the step
+    /// against already-overwritten state).
+    UnversionedWarWrite { sample: u64, j: usize, war: u64, covered: u64 },
+    /// A replayed prefix was longer than any prefix ever billed — the
+    /// runtime "restored" work it never did.
+    ReplayBeyondCommit { sample: u64, replayed: usize, executed: usize },
+    /// The inferred committed prefix shrank across reboots.
+    CommitRegression { sample: u64, from: usize, to: usize },
+    /// Re-execution rebuilt different shadow state than first execution.
+    ShadowDivergence { sample: u64, j: usize, first: u64, replayed: u64 },
+    /// More than one successful emission for one sample.
+    DoubleEmit { sample: u64, emits: u64 },
+    /// A single-cycle runtime issued a persistent-state (State-ledger)
+    /// operation.
+    StatefulVolatileRuntime { sample: u64, ordinal: u64 },
+    /// A single-cycle runtime stretched a round across power cycles.
+    CrossCycleRound { sample: u64, j: usize, started: u64, continued: u64 },
+    /// A single-cycle runtime re-executed steps after a reset.
+    ReplayInVolatileRuntime { sample: u64, replayed: usize },
+    /// A step ran with no preceding billed CPU burst and no open replay.
+    UnbilledStep { sample: u64, j: usize },
+    /// A replaying runtime emitted before rebuilding the full result.
+    IncompleteEmit { sample: u64, at: usize, total: usize },
+}
+
+impl Violation {
+    /// Stable short label (mutation-gate assertions key on this).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Violation::OutOfOrderStep { .. } => "out-of-order-step",
+            Violation::StepBeyondPlan { .. } => "step-beyond-plan",
+            Violation::OversizedPlan { .. } => "oversized-plan",
+            Violation::ShrunkPlanMidRound { .. } => "shrunk-plan-mid-round",
+            Violation::UnversionedWarWrite { .. } => "unversioned-war-write",
+            Violation::ReplayBeyondCommit { .. } => "replay-beyond-commit",
+            Violation::CommitRegression { .. } => "commit-regression",
+            Violation::ShadowDivergence { .. } => "shadow-divergence",
+            Violation::DoubleEmit { .. } => "double-emit",
+            Violation::StatefulVolatileRuntime { .. } => "stateful-volatile-runtime",
+            Violation::CrossCycleRound { .. } => "cross-cycle-round",
+            Violation::ReplayInVolatileRuntime { .. } => "replay-in-volatile-runtime",
+            Violation::UnbilledStep { .. } => "unbilled-step",
+            Violation::IncompleteEmit { .. } => "incomplete-emit",
+        }
+    }
+}
+
+/// The collected execution trace of one campaign.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub events: Vec<Event>,
+    /// Contract violations [`TrackedProgram`] caught online (always-on,
+    /// release builds included).
+    pub online: Vec<Violation>,
+}
+
+impl Trace {
+    /// Every replay run in the trace: maximal sequences of `Step` events
+    /// following a `Reset` with no engine operation in between (the free
+    /// state-rebuild loops of restore/reenter), as `(sample, length)`.
+    /// Zero-length runs (a reset not followed by replay) are included.
+    pub fn replay_runs(&self) -> Vec<(u64, usize)> {
+        let mut runs = Vec::new();
+        let mut open: Option<(u64, usize)> = None;
+        for ev in &self.events {
+            match ev {
+                Event::Reset { sample, .. } => {
+                    if let Some(run) = open.take() {
+                        runs.push(run);
+                    }
+                    open = Some((*sample, 0));
+                }
+                Event::Step { .. } => {
+                    if let Some((_, len)) = open.as_mut() {
+                        *len += 1;
+                    }
+                }
+                Event::Op { .. } | Event::Load { .. } => {
+                    if let Some(run) = open.take() {
+                        runs.push(run);
+                    }
+                }
+                _ => {}
+            }
+        }
+        if let Some(run) = open {
+            runs.push(run);
+        }
+        runs
+    }
+
+    /// Successful emissions (Done App ops with BLE payload).
+    pub fn emits(&self) -> usize {
+        self.events
+            .iter()
+            .filter(|e| {
+                matches!(
+                    e,
+                    Event::Op { ledger: Ledger::App, ble_bytes, outcome: OpOutcome::Done, .. }
+                        if *ble_bytes > 0
+                )
+            })
+            .count()
+    }
+}
+
+#[derive(Debug, Default)]
+struct ProbeState {
+    trace: Trace,
+    cycle: u64,
+}
+
+/// Shared handle to the trace buffer: cloned into the engine (op/boot/
+/// fail events) and the [`TrackedProgram`] (program events). `Arc` +
+/// `Mutex` so engines stay `Send` for the fleet threads; the lock is
+/// uncontended (one engine, one program, one thread per campaign).
+#[derive(Clone, Debug, Default)]
+pub struct Probe {
+    state: Arc<Mutex<ProbeState>>,
+}
+
+impl Probe {
+    pub fn new() -> Probe {
+        Probe::default()
+    }
+
+    pub fn record(&self, ev: Event) {
+        self.state.lock().unwrap().trace.events.push(ev);
+    }
+
+    pub fn online_violation(&self, v: Violation) {
+        self.state.lock().unwrap().trace.online.push(v);
+    }
+
+    /// The engine publishes its power-cycle counter here so program
+    /// events can be stamped with the cycle they ran in.
+    pub fn set_cycle(&self, cycle: u64) {
+        self.state.lock().unwrap().cycle = cycle;
+    }
+
+    pub fn cycle(&self) -> u64 {
+        self.state.lock().unwrap().cycle
+    }
+
+    /// Take the trace out (leaves an empty one behind).
+    pub fn take(&self) -> Trace {
+        std::mem::take(&mut self.state.lock().unwrap().trace)
+    }
+}
+
+/// Wraps a [`StepProgram`] with shadow access tracking and always-on
+/// contract enforcement. The inner program only ever sees calls that
+/// respect the `StepProgram` contract: out-of-order steps, oversized
+/// plans and mid-round plan shrinks are recorded as [`Violation`]s and
+/// dropped instead of forwarded (promoting `SyntheticProgram`'s
+/// `debug_assert!`s to release-mode checks, without UB-by-convention).
+pub struct TrackedProgram<P: StepProgram> {
+    inner: P,
+    probe: Probe,
+    sample: u64,
+    any_loaded: bool,
+    executed: usize,
+    planned: usize,
+}
+
+impl<P: StepProgram> TrackedProgram<P> {
+    pub fn new(inner: P, probe: Probe) -> TrackedProgram<P> {
+        TrackedProgram { inner, probe, sample: 0, any_loaded: false, executed: 0, planned: 0 }
+    }
+
+    pub fn inner(&self) -> &P {
+        &self.inner
+    }
+
+    pub fn into_inner(self) -> P {
+        self.inner
+    }
+}
+
+impl<P: StepProgram> StepProgram for TrackedProgram<P> {
+    type Output = P::Output;
+
+    fn load_next(&mut self, now: f64) -> bool {
+        if !self.inner.load_next(now) {
+            return false;
+        }
+        if self.any_loaded {
+            self.sample += 1;
+        } else {
+            self.any_loaded = true;
+        }
+        self.executed = 0;
+        self.planned = self.inner.planned_steps();
+        self.probe.record(Event::Load {
+            sample: self.sample,
+            cycle: self.probe.cycle(),
+            now,
+            num_steps: self.inner.num_steps(),
+        });
+        true
+    }
+
+    fn acquire_cost(&self) -> OpCost {
+        self.inner.acquire_cost()
+    }
+
+    fn num_steps(&self) -> usize {
+        self.inner.num_steps()
+    }
+
+    fn plan(&mut self, k: usize) {
+        let total = self.inner.num_steps();
+        if k > total {
+            self.probe.online_violation(Violation::OversizedPlan {
+                sample: self.sample,
+                k,
+                total,
+            });
+            return;
+        }
+        if k < self.executed || (self.executed > 0 && k < self.planned) {
+            self.probe.online_violation(Violation::ShrunkPlanMidRound {
+                sample: self.sample,
+                from: self.planned,
+                to: k,
+                executed: self.executed,
+            });
+            return;
+        }
+        self.inner.plan(k);
+        self.planned = k;
+        self.probe.record(Event::Plan { sample: self.sample, k });
+    }
+
+    fn planned_steps(&self) -> usize {
+        self.inner.planned_steps()
+    }
+
+    fn step_cost(&self, j: usize) -> OpCost {
+        self.inner.step_cost(j)
+    }
+
+    fn execute_step(&mut self, j: usize) {
+        if j != self.executed {
+            self.probe.online_violation(Violation::OutOfOrderStep {
+                sample: self.sample,
+                expected: self.executed,
+                got: j,
+            });
+            return;
+        }
+        if j >= self.planned {
+            self.probe.online_violation(Violation::StepBeyondPlan {
+                sample: self.sample,
+                j,
+                planned: self.planned,
+            });
+            return;
+        }
+        let war = self.inner.war_words(j);
+        self.inner.execute_step(j);
+        self.executed = j + 1;
+        self.probe.record(Event::Step {
+            sample: self.sample,
+            j,
+            war,
+            state: self.inner.state_words(j + 1),
+            cycle: self.probe.cycle(),
+        });
+    }
+
+    fn state_words(&self, j: usize) -> u64 {
+        self.inner.state_words(j)
+    }
+
+    fn war_words(&self, j: usize) -> u64 {
+        self.inner.war_words(j)
+    }
+
+    fn emit_cost(&self) -> OpCost {
+        self.inner.emit_cost()
+    }
+
+    fn output(&self) -> P::Output {
+        self.inner.output()
+    }
+
+    fn reset_round(&mut self) {
+        self.inner.reset_round();
+        self.executed = 0;
+        self.probe.record(Event::Reset { sample: self.sample, cycle: self.probe.cycle() });
+    }
+}
+
+/// What the checker may assume about a runtime — each shipping runtime
+/// publishes its profile (`approx::profile()`, `chinchilla::profile()`,
+/// …; [`Policy::profile`](crate::exec::Policy::profile) dispatches).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RuntimeProfile {
+    pub name: &'static str,
+    /// May rebuild state by re-executing a committed prefix after a
+    /// reboot and may stretch one sample across power cycles
+    /// (Chinchilla / Alpaca). When false, every round must complete
+    /// within a single power cycle and never replay.
+    pub replays: bool,
+    /// Manages persistent state: State-ledger operations are expected.
+    /// When false, any State-ledger op is a volatility violation (the
+    /// approximate runtimes' "no persistent state at all" guarantee).
+    pub persists: bool,
+}
+
+/// Offline invariant checker: walks the trace and returns every
+/// violation (online contract breaches included).
+pub fn check_trace(trace: &Trace, profile: &RuntimeProfile) -> Vec<Violation> {
+    let mut chk = Checker::new(*profile, trace.online.clone());
+    for ev in &trace.events {
+        match *ev {
+            Event::Load { sample, num_steps, .. } => chk.load(sample, num_steps),
+            Event::Plan { .. } => {}
+            Event::Reset { .. } => chk.reset(),
+            Event::Step { j, war, state, cycle, .. } => chk.step(j, war, state, cycle),
+            Event::Op {
+                ordinal,
+                ledger,
+                cycles,
+                fram_writes,
+                ble_bytes,
+                adc_reads,
+                sensor,
+                outcome,
+                cycle,
+                ..
+            } => chk.op(ordinal, ledger, cycles, fram_writes, ble_bytes, adc_reads, sensor,
+                outcome, cycle),
+            Event::Boot { .. } | Event::Fail { .. } => chk.power_event(),
+        }
+    }
+    chk.finish()
+}
+
+struct Checker {
+    profile: RuntimeProfile,
+    out: Vec<Violation>,
+    sample: u64,
+    num_steps: usize,
+    /// Billed high-water progress: the longest prefix ever executed on
+    /// billed fuel (the energy-accounted ground truth of "work done").
+    progress: usize,
+    /// Largest replay base seen — the inferred committed prefix.
+    commit_floor: usize,
+    emits: u64,
+    /// Current rebuilt position within the round.
+    cur_pos: usize,
+    first_step_cycle: Option<u64>,
+    /// `Some(war_cover)` while an unconsumed App CPU burst is pending.
+    fuel: Option<u64>,
+    /// `Some(len)` while a replay run (post-reset, op-free) is open.
+    replay: Option<usize>,
+    /// Shadow-state signature of each step's first execution.
+    sigs: Vec<(u64, u64)>,
+}
+
+impl Checker {
+    fn new(profile: RuntimeProfile, online: Vec<Violation>) -> Checker {
+        Checker {
+            profile,
+            out: online,
+            sample: 0,
+            num_steps: 0,
+            progress: 0,
+            commit_floor: 0,
+            emits: 0,
+            cur_pos: 0,
+            first_step_cycle: None,
+            fuel: None,
+            replay: None,
+            sigs: Vec::new(),
+        }
+    }
+
+    fn close_replay(&mut self) {
+        if let Some(len) = self.replay.take() {
+            if len > self.progress {
+                self.out.push(Violation::ReplayBeyondCommit {
+                    sample: self.sample,
+                    replayed: len,
+                    executed: self.progress,
+                });
+            }
+            if len > 0 && !self.profile.replays {
+                self.out.push(Violation::ReplayInVolatileRuntime {
+                    sample: self.sample,
+                    replayed: len,
+                });
+            }
+            if len < self.commit_floor {
+                self.out.push(Violation::CommitRegression {
+                    sample: self.sample,
+                    from: self.commit_floor,
+                    to: len,
+                });
+            }
+            self.commit_floor = self.commit_floor.max(len);
+        }
+    }
+
+    fn load(&mut self, sample: u64, num_steps: usize) {
+        self.close_replay();
+        self.sample = sample;
+        self.num_steps = num_steps;
+        self.progress = 0;
+        self.commit_floor = 0;
+        self.emits = 0;
+        self.cur_pos = 0;
+        self.first_step_cycle = None;
+        self.fuel = None;
+        self.sigs.clear();
+    }
+
+    fn reset(&mut self) {
+        self.close_replay();
+        self.cur_pos = 0;
+        self.fuel = None;
+        self.replay = Some(0);
+    }
+
+    fn power_event(&mut self) {
+        self.fuel = None;
+    }
+
+    fn step(&mut self, j: usize, war: u64, state: u64, cycle: u64) {
+        // Shadow idempotence: any re-execution of step j must rebuild
+        // the signature its first execution produced.
+        if j < self.sigs.len() {
+            let (first_state, first_war) = self.sigs[j];
+            if first_state != state || first_war != war {
+                self.out.push(Violation::ShadowDivergence {
+                    sample: self.sample,
+                    j,
+                    first: first_state,
+                    replayed: state,
+                });
+            }
+        } else if j == self.sigs.len() {
+            self.sigs.push((state, war));
+        }
+        if let Some(covered) = self.fuel.take() {
+            // Billed step.
+            self.close_replay();
+            if self.profile.replays && war > 0 && covered < war {
+                self.out.push(Violation::UnversionedWarWrite {
+                    sample: self.sample,
+                    j,
+                    war,
+                    covered,
+                });
+            }
+            if !self.profile.replays {
+                match self.first_step_cycle {
+                    None => self.first_step_cycle = Some(cycle),
+                    Some(c0) if c0 != cycle => self.out.push(Violation::CrossCycleRound {
+                        sample: self.sample,
+                        j,
+                        started: c0,
+                        continued: cycle,
+                    }),
+                    _ => {}
+                }
+            }
+            self.cur_pos = j + 1;
+            self.progress = self.progress.max(j + 1);
+        } else if let Some(len) = self.replay.as_mut() {
+            // Replay step (free rebuild after restore/reenter).
+            *len += 1;
+            self.cur_pos = j + 1;
+        } else {
+            self.out.push(Violation::UnbilledStep { sample: self.sample, j });
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn op(
+        &mut self,
+        ordinal: u64,
+        ledger: Ledger,
+        cycles: u64,
+        fram_writes: u64,
+        ble_bytes: u64,
+        adc_reads: u64,
+        sensor: bool,
+        outcome: OpOutcome,
+        cycle: u64,
+    ) {
+        if ledger == Ledger::State && !self.profile.persists {
+            self.out.push(Violation::StatefulVolatileRuntime {
+                sample: self.sample,
+                ordinal,
+            });
+        }
+        self.close_replay();
+        if outcome == OpOutcome::BrownOut {
+            self.fuel = None;
+            return;
+        }
+        match ledger {
+            Ledger::App => {
+                if ble_bytes > 0 {
+                    // Successful emission.
+                    self.fuel = None;
+                    self.emits += 1;
+                    if self.emits > 1 {
+                        self.out.push(Violation::DoubleEmit {
+                            sample: self.sample,
+                            emits: self.emits,
+                        });
+                    }
+                    if self.profile.replays && self.cur_pos != self.num_steps {
+                        self.out.push(Violation::IncompleteEmit {
+                            sample: self.sample,
+                            at: self.cur_pos,
+                            total: self.num_steps,
+                        });
+                    }
+                    if !self.profile.replays {
+                        if let Some(c0) = self.first_step_cycle {
+                            if c0 != cycle {
+                                self.out.push(Violation::CrossCycleRound {
+                                    sample: self.sample,
+                                    j: self.cur_pos,
+                                    started: c0,
+                                    continued: cycle,
+                                });
+                            }
+                        }
+                    }
+                } else if !sensor && adc_reads == 0 && cycles > 0 {
+                    // An App CPU burst: fuel for exactly one billed step.
+                    self.fuel = Some(0);
+                }
+            }
+            Ledger::State => {
+                // A versioning/privatization write between a step's CPU
+                // burst and its execution covers the step's WAR words.
+                if let Some(cover) = self.fuel.as_mut() {
+                    *cover = (*cover).max(fram_writes);
+                }
+            }
+        }
+    }
+
+    fn finish(mut self) -> Vec<Violation> {
+        self.close_replay();
+        self.out
+    }
+}
+
+/// Outcome of one tracked, fault-injected campaign.
+pub struct CheckedRun<O> {
+    pub campaign: Campaign<O>,
+    pub trace: Trace,
+    /// Online + offline violations, in trace order.
+    pub violations: Vec<Violation>,
+    /// Failures the armed plan actually injected.
+    pub injected: u64,
+    /// Total operations attempted (the fault-point space for
+    /// exhaustive enumeration).
+    pub ops: u64,
+}
+
+/// Run `runtime` over `program` on `engine` with `plan` armed, tracking
+/// every access, and check the trace against `profile`.
+pub fn run_checked<P: StepProgram>(
+    program: P,
+    mut engine: Engine,
+    runtime: &dyn Runtime<TrackedProgram<P>>,
+    plan: FaultPlan,
+    profile: &RuntimeProfile,
+) -> CheckedRun<P::Output> {
+    let probe = Probe::new();
+    engine.attach_probe(probe.clone());
+    engine.arm_faults(plan);
+    let mut tracked = TrackedProgram::new(program, probe.clone());
+    let campaign = runtime.run(&mut tracked, &mut engine);
+    let trace = probe.take();
+    let violations = check_trace(&trace, profile);
+    CheckedRun {
+        campaign,
+        trace,
+        violations,
+        injected: engine.injected_faults(),
+        ops: engine.ops_attempted(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::program::SyntheticProgram;
+
+    fn tracked() -> (TrackedProgram<SyntheticProgram>, Probe) {
+        let probe = Probe::new();
+        let p = TrackedProgram::new(SyntheticProgram::new(3, 10, 1_000), probe.clone());
+        (p, probe)
+    }
+
+    #[test]
+    fn contract_violations_are_recorded_not_forwarded() {
+        let (mut p, probe) = tracked();
+        assert!(p.load_next(0.0));
+        // Oversized plan: rejected, inner plan unchanged.
+        p.plan(11);
+        assert_eq!(p.planned_steps(), 10);
+        // In-order execution is forwarded.
+        p.plan(4);
+        p.execute_step(0);
+        // Out-of-order step: rejected, inner state protected (the inner
+        // debug_assert would have panicked had it been forwarded).
+        p.execute_step(2);
+        assert_eq!(p.output(), 1);
+        // Mid-round shrink: rejected.
+        p.plan(2);
+        assert_eq!(p.planned_steps(), 4);
+        // Beyond-plan step: rejected.
+        p.execute_step(1);
+        p.execute_step(2);
+        p.execute_step(3);
+        p.execute_step(4);
+        assert_eq!(p.output(), 4);
+        let trace = probe.take();
+        let kinds: Vec<&str> = trace.online.iter().map(|v| v.kind()).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                "oversized-plan",
+                "out-of-order-step",
+                "shrunk-plan-mid-round",
+                "step-beyond-plan"
+            ]
+        );
+    }
+
+    #[test]
+    fn growing_replan_is_allowed_and_round_start_shrink_too() {
+        let (mut p, probe) = tracked();
+        assert!(p.load_next(0.0));
+        p.plan(1); // round-start narrowing (GREEDY) is fine
+        p.execute_step(0);
+        p.plan(2); // mid-round growth (GREEDY refinement) is fine
+        p.execute_step(1);
+        assert!(probe.take().online.is_empty());
+    }
+
+    fn approx_profile() -> RuntimeProfile {
+        RuntimeProfile { name: "approx", replays: false, persists: false }
+    }
+
+    fn persistent_profile() -> RuntimeProfile {
+        RuntimeProfile { name: "persistent", replays: true, persists: true }
+    }
+
+    fn cpu_op(ordinal: u64, cycle: u64) -> Event {
+        Event::Op {
+            ordinal,
+            ledger: Ledger::App,
+            cycles: 1_000,
+            fram_reads: 0,
+            fram_writes: 0,
+            ble_bytes: 0,
+            adc_reads: 0,
+            sensor: false,
+            outcome: OpOutcome::Done,
+            injected: false,
+            cycle,
+        }
+    }
+
+    fn state_op(ordinal: u64, fram_writes: u64, cycle: u64) -> Event {
+        Event::Op {
+            ordinal,
+            ledger: Ledger::State,
+            cycles: 100,
+            fram_reads: 0,
+            fram_writes,
+            ble_bytes: 0,
+            adc_reads: 0,
+            sensor: false,
+            outcome: OpOutcome::Done,
+            injected: false,
+            cycle,
+        }
+    }
+
+    fn step(sample: u64, j: usize, war: u64, cycle: u64) -> Event {
+        Event::Step { sample, j, war, state: 100 + j as u64, cycle }
+    }
+
+    #[test]
+    fn checker_flags_unversioned_war_rewrite() {
+        let trace = Trace {
+            events: vec![
+                Event::Load { sample: 0, cycle: 1, now: 0.0, num_steps: 2 },
+                cpu_op(0, 1),
+                state_op(1, 4, 1), // covers war=4
+                step(0, 0, 4, 1),
+                cpu_op(2, 1),
+                step(0, 1, 4, 1), // war=4 with no versioning write
+            ],
+            online: vec![],
+        };
+        let vs = check_trace(&trace, &persistent_profile());
+        assert_eq!(vs.len(), 1, "{vs:?}");
+        assert_eq!(vs[0].kind(), "unversioned-war-write");
+    }
+
+    #[test]
+    fn checker_flags_replay_beyond_billed_progress() {
+        let trace = Trace {
+            events: vec![
+                Event::Load { sample: 0, cycle: 1, now: 0.0, num_steps: 3 },
+                cpu_op(0, 1),
+                step(0, 0, 0, 1),
+                Event::Fail { failures: 1, now: 1.0 },
+                Event::Boot { cycle: 2, now: 2.0 },
+                state_op(1, 0, 2), // restore
+                Event::Reset { sample: 0, cycle: 2 },
+                step(0, 0, 0, 2),
+                step(0, 1, 0, 2), // replayed 2 > billed 1
+                cpu_op(2, 2),
+            ],
+            online: vec![],
+        };
+        let vs = check_trace(&trace, &persistent_profile());
+        assert_eq!(vs.len(), 1, "{vs:?}");
+        assert_eq!(vs[0].kind(), "replay-beyond-commit");
+    }
+
+    #[test]
+    fn checker_flags_commit_regression_and_double_emit() {
+        let emit = |ordinal, cycle| Event::Op {
+            ordinal,
+            ledger: Ledger::App,
+            cycles: 500,
+            fram_reads: 0,
+            fram_writes: 0,
+            ble_bytes: 1,
+            adc_reads: 0,
+            sensor: false,
+            outcome: OpOutcome::Done,
+            injected: false,
+            cycle,
+        };
+        let trace = Trace {
+            events: vec![
+                Event::Load { sample: 0, cycle: 1, now: 0.0, num_steps: 2 },
+                cpu_op(0, 1),
+                step(0, 0, 0, 1),
+                cpu_op(1, 1),
+                step(0, 1, 0, 1),
+                // Replay of the full prefix, then a shorter one: the
+                // committed prefix regressed.
+                Event::Reset { sample: 0, cycle: 2 },
+                step(0, 0, 0, 2),
+                step(0, 1, 0, 2),
+                state_op(2, 0, 2),
+                Event::Reset { sample: 0, cycle: 3 },
+                step(0, 0, 0, 3),
+                state_op(3, 0, 3),
+                // Rebuild and emit twice.
+                Event::Reset { sample: 0, cycle: 3 },
+                step(0, 0, 0, 3),
+                step(0, 1, 0, 3),
+                emit(4, 3),
+                emit(5, 3),
+            ],
+            online: vec![],
+        };
+        let kinds: Vec<&str> =
+            check_trace(&trace, &persistent_profile()).iter().map(|v| v.kind()).collect();
+        assert!(kinds.contains(&"commit-regression"), "{kinds:?}");
+        assert!(kinds.contains(&"double-emit"), "{kinds:?}");
+    }
+
+    #[test]
+    fn checker_flags_persistence_and_cross_cycle_in_volatile_profile() {
+        let trace = Trace {
+            events: vec![
+                Event::Load { sample: 0, cycle: 1, now: 0.0, num_steps: 2 },
+                cpu_op(0, 1),
+                step(0, 0, 2, 1),
+                state_op(1, 8, 1), // State op under a volatile profile
+                Event::Fail { failures: 1, now: 1.0 },
+                Event::Boot { cycle: 2, now: 2.0 },
+                cpu_op(2, 2),
+                step(0, 1, 2, 2), // continued in a later power cycle
+            ],
+            online: vec![],
+        };
+        let kinds: Vec<&str> =
+            check_trace(&trace, &approx_profile()).iter().map(|v| v.kind()).collect();
+        assert!(kinds.contains(&"stateful-volatile-runtime"), "{kinds:?}");
+        assert!(kinds.contains(&"cross-cycle-round"), "{kinds:?}");
+    }
+
+    #[test]
+    fn checker_flags_shadow_divergence_on_replay() {
+        let trace = Trace {
+            events: vec![
+                Event::Load { sample: 0, cycle: 1, now: 0.0, num_steps: 2 },
+                cpu_op(0, 1),
+                Event::Step { sample: 0, j: 0, war: 0, state: 100, cycle: 1 },
+                Event::Reset { sample: 0, cycle: 2 },
+                // Replay rebuilds a different signature.
+                Event::Step { sample: 0, j: 0, war: 0, state: 101, cycle: 2 },
+                cpu_op(1, 2),
+            ],
+            online: vec![],
+        };
+        let vs = check_trace(&trace, &persistent_profile());
+        assert_eq!(vs.len(), 1, "{vs:?}");
+        assert_eq!(vs[0].kind(), "shadow-divergence");
+    }
+
+    #[test]
+    fn clean_single_cycle_trace_passes_both_profiles_appropriately() {
+        let emit = Event::Op {
+            ordinal: 2,
+            ledger: Ledger::App,
+            cycles: 500,
+            fram_reads: 0,
+            fram_writes: 0,
+            ble_bytes: 1,
+            adc_reads: 0,
+            sensor: false,
+            outcome: OpOutcome::Done,
+            injected: false,
+            cycle: 1,
+        };
+        let trace = Trace {
+            events: vec![
+                Event::Load { sample: 0, cycle: 1, now: 0.0, num_steps: 2 },
+                cpu_op(0, 1),
+                step(0, 0, 0, 1),
+                cpu_op(1, 1),
+                step(0, 1, 0, 1),
+                emit,
+            ],
+            online: vec![],
+        };
+        assert!(check_trace(&trace, &approx_profile()).is_empty());
+        assert!(check_trace(&trace, &persistent_profile()).is_empty());
+    }
+
+    #[test]
+    fn replay_runs_helper_extracts_post_reset_runs() {
+        let trace = Trace {
+            events: vec![
+                Event::Load { sample: 0, cycle: 1, now: 0.0, num_steps: 3 },
+                cpu_op(0, 1),
+                step(0, 0, 0, 1),
+                Event::Reset { sample: 0, cycle: 2 },
+                step(0, 0, 0, 2),
+                cpu_op(1, 2),
+                step(0, 1, 0, 2),
+                Event::Reset { sample: 0, cycle: 3 },
+            ],
+            online: vec![],
+        };
+        assert_eq!(trace.replay_runs(), vec![(0, 1), (0, 0)]);
+    }
+}

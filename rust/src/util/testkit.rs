@@ -207,6 +207,30 @@ pub fn assert_campaigns_close<O>(
     );
 }
 
+/// Assert a checked run came back violation-free, with a readable dump
+/// of what fired otherwise. The fault-injection suite calls this once
+/// per (runtime, workload, engine, schedule) cell, so the label carries
+/// the whole cell identity.
+pub fn assert_no_violations(name: &str, violations: &[crate::exec::Violation]) {
+    assert!(
+        violations.is_empty(),
+        "{name}: {} invariant violation(s): {:?}",
+        violations.len(),
+        violations
+    );
+}
+
+/// How many randomized fault schedules per (runtime, workload) cell the
+/// fault-injection suite runs. Defaults to `default`; widen (or narrow,
+/// for a quick local iteration) with the `AIC_FAULT_SEEDS` environment
+/// variable — CI pins it so runs are reproducible.
+pub fn fault_seeds(default: u64) -> u64 {
+    match std::env::var("AIC_FAULT_SEEDS") {
+        Ok(s) => s.parse().unwrap_or(default),
+        Err(_) => default,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -1,0 +1,651 @@
+//! Intermittence fault-injection correctness suite.
+//!
+//! Every shipping runtime — continuous, Chinchilla, Alpaca, GREEDY and
+//! SMART — is driven through [`run_checked`]: the program is wrapped in
+//! a [`TrackedProgram`] shadow, the engine is armed with a [`FaultPlan`],
+//! and the resulting totally-ordered trace is checked for WAR-hazard
+//! freedom, replay idempotence, monotone commit and volatility
+//! discipline. Two fault regimes gate every (runtime, workload, engine)
+//! cell:
+//!
+//! * **Exhaustive enumeration** — one campaign per op ordinal in the
+//!   fault-free run's `0..ops` fault-point space, so every reachable
+//!   cycle boundary (mid-step, between execute and commit, during emit,
+//!   during restore) is forced exactly once.
+//! * **Randomized schedules** — `AIC_FAULT_SEEDS` (default 200) seeded
+//!   Bernoulli schedules per cell, bitwise reproducible by seed.
+//!
+//! The mutation-gate tests (`mutation_gate_*`, selected by name in CI)
+//! prove the harness has teeth: each deliberately broken runtime in
+//! [`aic::exec::mutants`] must be flagged with its expected violation
+//! kind, while the shipping counterpart stays clean under the same
+//! schedules.
+
+use std::sync::OnceLock;
+
+use aic::audio::app::{self as audio_app, AudioOutput, AudioProgram, AudioSource};
+use aic::audio::detector::SpectralDetector;
+use aic::audio::stream::labelled_windows;
+use aic::energy::estimator::{EnergyProfile, SmartTable};
+use aic::energy::harvester::Harvester;
+use aic::energy::mcu::{McuModel, OpCost};
+use aic::exec::alpaca::{AlpacaConfig, AlpacaRuntime};
+use aic::exec::engine::{Engine, EngineConfig, EngineKind};
+use aic::exec::mutants::{
+    EarlyCommitAlpacaRuntime, EmitBeforeCommitRuntime, NoWarChinchillaRuntime,
+    PersistentGreedyRuntime,
+};
+use aic::exec::program::SyntheticProgram;
+use aic::exec::{
+    alpaca, approx, chinchilla, run_checked, CheckedRun, FaultPlan, Policy, RuntimeSpec,
+    TrackedProgram,
+};
+use aic::har::app::{HarOutput, HarProgram, WindowSource};
+use aic::har::dataset::{Corpus, CorpusSpec, LabelledWindow};
+use aic::imgproc::app::{CornerOutput, CornerProgram};
+use aic::imgproc::harris::HarrisConfig;
+use aic::svm::anytime::AnytimeSvm;
+use aic::svm::train::{train_ovr, TrainConfig};
+use aic::util::testkit::{assert_no_violations, fault_seeds};
+
+const PERIOD: f64 = 60.0;
+const POWER: f64 = 2.0e-3;
+const KINDS: [EngineKind; 2] = [EngineKind::Analytic, EngineKind::FixedStep];
+
+/// Both engine legs are exercised explicitly (the `AIC_ENGINE` variable
+/// only picks the default); the CI matrix re-runs the suite under each
+/// leg anyway so the per-leg jobs stay comparable with the other suites.
+fn harvesting(kind: EngineKind, horizon: f64) -> Engine {
+    let mut cfg = EngineConfig::paper_default(horizon);
+    cfg.kind = kind;
+    Engine::new(cfg, Harvester::Constant(POWER))
+}
+
+fn kind_name(kind: EngineKind) -> &'static str {
+    match kind {
+        EngineKind::Analytic => "analytic",
+        EngineKind::FixedStep => "step",
+    }
+}
+
+// ---------------------------------------------------------------------
+// Synthetic workload: the dense fault-point space every policy shares.
+// ---------------------------------------------------------------------
+
+const SYN_INPUTS: u64 = 2;
+const SYN_STEPS: usize = 8;
+const SYN_CYCLES: u64 = 20_000;
+const SYN_HORIZON: f64 = 600.0;
+
+fn synthetic_policies() -> Vec<Policy> {
+    vec![
+        Policy::Continuous,
+        Policy::Chinchilla,
+        Policy::Alpaca,
+        Policy::Greedy,
+        Policy::Smart { bound: 0.60 },
+    ]
+}
+
+/// SMART table for the synthetic program: linear accuracy from chance
+/// to 0.9 over the step count (same shape as `tests/policy_matrix.rs`).
+fn synthetic_table() -> SmartTable {
+    let mcu = McuModel::paper_default();
+    let costs: Vec<OpCost> = (0..SYN_STEPS).map(|_| OpCost::cycles(SYN_CYCLES)).collect();
+    let profile = EnergyProfile::from_costs(&mcu, &costs);
+    let acc: Vec<f64> = (0..=SYN_STEPS)
+        .map(|p| 1.0 / 6.0 + (0.9 - 1.0 / 6.0) * p as f64 / SYN_STEPS as f64)
+        .collect();
+    let emit = mcu.energy(&OpCost { cycles: 500, ble_bytes: 1, ..Default::default() });
+    SmartTable::new(acc, &profile, emit)
+}
+
+fn checked_synthetic(policy: Policy, kind: EngineKind, plan: FaultPlan) -> CheckedRun<usize> {
+    let program = SyntheticProgram::new(SYN_INPUTS, SYN_STEPS, SYN_CYCLES);
+    // The continuous baseline runs on the same harvesting supply here:
+    // under fault injection it behaves as the unprotected runtime the
+    // docs describe, and its profile (no replay, no persistent state,
+    // single-cycle rounds) must still hold.
+    let engine = harvesting(kind, SYN_HORIZON);
+    let mut spec = RuntimeSpec::new(PERIOD);
+    if let Policy::Smart { .. } = policy {
+        spec = spec.with_smart_table(synthetic_table());
+    }
+    let rt = policy.runtime::<TrackedProgram<SyntheticProgram>>(&spec);
+    run_checked(program, engine, rt.as_ref(), plan, &policy.profile())
+}
+
+/// Per-cell structural assertions beyond checker cleanliness: precise
+/// runtimes never drop a recorded round and emit at full precision;
+/// approximate runtimes bill nothing to the state ledger.
+fn assert_cell_invariants(cell: &str, policy: Policy, run: &CheckedRun<usize>) {
+    assert!(run.campaign.violations.is_empty(), "{cell}: driver violations");
+    match policy {
+        Policy::Chinchilla | Policy::Alpaca => {
+            for r in &run.campaign.rounds {
+                assert!(
+                    r.emitted_at.is_some(),
+                    "{cell}: precise runtime dropped round {}",
+                    r.sample_id
+                );
+                assert_eq!(r.output, Some(SYN_STEPS), "{cell}: partial-precision emit");
+            }
+        }
+        Policy::Greedy | Policy::Smart { .. } => {
+            assert_eq!(
+                run.campaign.state_energy, 0.0,
+                "{cell}: approx runtime billed the state ledger"
+            );
+        }
+        Policy::Continuous => {}
+    }
+}
+
+#[test]
+fn exhaustive_single_fault_enumeration_on_synthetic() {
+    for kind in KINDS {
+        for policy in synthetic_policies() {
+            let name = format!("{}/{}", policy.name(), kind_name(kind));
+            let free = checked_synthetic(policy, kind, FaultPlan::None);
+            assert_no_violations(&format!("{name} fault-free"), &free.violations);
+            assert_cell_invariants(&format!("{name} fault-free"), policy, &free);
+            assert!(free.ops > 10, "{name}: implausibly small fault-point space");
+            for t in 0..free.ops {
+                let cell = format!("{name} fault@{t}");
+                let run = checked_synthetic(policy, kind, FaultPlan::single(t));
+                assert_no_violations(&cell, &run.violations);
+                assert_cell_invariants(&cell, policy, &run);
+                assert_eq!(run.injected, 1, "{cell}: the armed fault must fire");
+            }
+        }
+    }
+}
+
+#[test]
+fn randomized_schedules_keep_shipping_runtimes_clean_on_synthetic() {
+    let seeds = fault_seeds(200);
+    for kind in KINDS {
+        for policy in synthetic_policies() {
+            for seed in 0..seeds {
+                let cell =
+                    format!("{}/{} seed {seed}", policy.name(), kind_name(kind));
+                let run = checked_synthetic(policy, kind, FaultPlan::random(seed, 0.05));
+                assert_no_violations(&cell, &run.violations);
+                assert_cell_invariants(&cell, policy, &run);
+            }
+        }
+    }
+}
+
+#[test]
+fn fault_schedules_are_bitwise_reproducible_by_seed() {
+    let mut any_injected = false;
+    for kind in KINDS {
+        for policy in [Policy::Chinchilla, Policy::Greedy] {
+            for seed in 0..5u64 {
+                let a = checked_synthetic(policy, kind, FaultPlan::random(seed, 0.2));
+                let b = checked_synthetic(policy, kind, FaultPlan::random(seed, 0.2));
+                let cell = format!("{}/{} seed {seed}", policy.name(), kind_name(kind));
+                assert_eq!(a.injected, b.injected, "{cell}: injected count");
+                assert_eq!(a.ops, b.ops, "{cell}: op count");
+                assert_eq!(a.trace.events.len(), b.trace.events.len(), "{cell}: trace");
+                assert_eq!(a.trace.emits(), b.trace.emits(), "{cell}: emits");
+                assert_eq!(a.campaign.rounds.len(), b.campaign.rounds.len(), "{cell}");
+                for (ra, rb) in a.campaign.rounds.iter().zip(b.campaign.rounds.iter()) {
+                    assert_eq!(ra.sample_id, rb.sample_id, "{cell}");
+                    assert_eq!(
+                        ra.acquired_at.to_bits(),
+                        rb.acquired_at.to_bits(),
+                        "{cell}: acquisition time not bitwise equal"
+                    );
+                    assert_eq!(
+                        ra.emitted_at.map(f64::to_bits),
+                        rb.emitted_at.map(f64::to_bits),
+                        "{cell}: emission time not bitwise equal"
+                    );
+                    assert_eq!(ra.steps_executed, rb.steps_executed, "{cell}");
+                    assert_eq!(ra.latency_cycles, rb.latency_cycles, "{cell}");
+                    assert_eq!(ra.output, rb.output, "{cell}");
+                }
+                any_injected |= a.injected > 0;
+            }
+        }
+    }
+    assert!(any_injected, "no schedule injected anything at rate 0.2 — plan wiring broken");
+}
+
+// ---------------------------------------------------------------------
+// Workload coverage: HAR, acoustic, Harris — the paper's three apps.
+// ---------------------------------------------------------------------
+
+fn har_fixture() -> &'static (AnytimeSvm, Vec<LabelledWindow>) {
+    static FIXTURE: OnceLock<(AnytimeSvm, Vec<LabelledWindow>)> = OnceLock::new();
+    FIXTURE.get_or_init(|| {
+        let spec = CorpusSpec {
+            train_volunteers: 2,
+            test_volunteers: 1,
+            windows_per_volunteer_per_class: 2,
+        };
+        let corpus = Corpus::generate(&spec, 42);
+        let (rows, labels) = Corpus::features(&corpus.train);
+        let svm = train_ovr(&rows, &labels, 6, &TrainConfig::default());
+        let windows = corpus.test.iter().take(2).cloned().collect();
+        (AnytimeSvm::by_coefficient_magnitude(svm), windows)
+    })
+}
+
+fn checked_har(policy: Policy, kind: EngineKind, plan: FaultPlan) -> CheckedRun<HarOutput> {
+    let (asvm, windows) = har_fixture();
+    let program = HarProgram::new(asvm.clone(), WindowSource::List(windows.clone()));
+    let engine = harvesting(kind, 400.0);
+    let rt = policy.runtime::<TrackedProgram<HarProgram>>(&RuntimeSpec::new(PERIOD));
+    run_checked(program, engine, rt.as_ref(), plan, &policy.profile())
+}
+
+fn checked_audio(policy: Policy, kind: EngineKind, plan: FaultPlan) -> CheckedRun<AudioOutput> {
+    let detector = SpectralDetector::paper_default();
+    let windows: Vec<_> = labelled_windows(1, 3).into_iter().take(2).collect();
+    let program = AudioProgram::new(detector.clone(), AudioSource::List(windows));
+    let engine = harvesting(kind, 400.0);
+    let mut spec = RuntimeSpec::new(PERIOD);
+    if let Policy::Smart { .. } = policy {
+        spec = spec.with_smart_table(audio_app::smart_table(&detector, &McuModel::paper_default()));
+    }
+    let rt = policy.runtime::<TrackedProgram<AudioProgram>>(&spec);
+    run_checked(program, engine, rt.as_ref(), plan, &policy.profile())
+}
+
+fn checked_harris(policy: Policy, kind: EngineKind, plan: FaultPlan) -> CheckedRun<CornerOutput> {
+    // The corner program's input pool never ends, so the horizon bounds
+    // the campaign: three sampling slots at t = 0, 60, 120.
+    let program = CornerProgram::new(HarrisConfig::default(), 24, &[1], 7);
+    let engine = harvesting(kind, 150.0);
+    let rt = policy.runtime::<TrackedProgram<CornerProgram>>(&RuntimeSpec::new(PERIOD));
+    run_checked(program, engine, rt.as_ref(), plan, &policy.profile())
+}
+
+fn workload_policies() -> Vec<Policy> {
+    vec![Policy::Continuous, Policy::Chinchilla, Policy::Alpaca, Policy::Greedy]
+}
+
+fn precise(policy: Policy) -> bool {
+    matches!(policy, Policy::Chinchilla | Policy::Alpaca)
+}
+
+/// Exhaustively enumerate every cycle boundary for one workload runner
+/// and assert checker cleanliness; for the precise runtimes, emitted
+/// outputs must additionally be exactly the fault-free outputs (the
+/// sample streams are index-deterministic lists, so equality per
+/// `sample_id` is the right notion of "the faults changed nothing").
+fn enumerate_workload<O, F>(label: &str, policy: Policy, kind: EngineKind, runner: F)
+where
+    O: Clone + PartialEq + std::fmt::Debug,
+    F: Fn(Policy, EngineKind, FaultPlan) -> CheckedRun<O>,
+{
+    let name = format!("{label}/{}/{}", policy.name(), kind_name(kind));
+    let free = runner(policy, kind, FaultPlan::None);
+    assert_no_violations(&format!("{name} fault-free"), &free.violations);
+    assert!(
+        free.campaign.emitted().count() > 0,
+        "{name}: fault-free campaign emitted nothing — cell mis-sized"
+    );
+    let reference: Vec<(u64, O)> = free
+        .campaign
+        .emitted()
+        .map(|r| (r.sample_id, r.output.clone().expect("emitted")))
+        .collect();
+    for t in 0..free.ops {
+        let cell = format!("{name} fault@{t}");
+        let run = runner(policy, kind, FaultPlan::single(t));
+        assert_no_violations(&cell, &run.violations);
+        assert!(run.campaign.violations.is_empty(), "{cell}: driver violations");
+        if precise(policy) {
+            for r in run.campaign.emitted() {
+                let expected = reference
+                    .iter()
+                    .find(|(id, _)| *id == r.sample_id)
+                    .map(|(_, o)| o);
+                assert_eq!(
+                    r.output.as_ref(),
+                    expected,
+                    "{cell}: faulted output diverged from fault-free output"
+                );
+            }
+        } else if matches!(policy, Policy::Greedy | Policy::Smart { .. }) {
+            assert_eq!(run.campaign.state_energy, 0.0, "{cell}: approx state energy");
+        }
+    }
+}
+
+#[test]
+fn exhaustive_enumeration_covers_har_workload() {
+    for kind in KINDS {
+        for policy in workload_policies() {
+            enumerate_workload("har", policy, kind, checked_har);
+        }
+    }
+}
+
+#[test]
+fn exhaustive_enumeration_covers_audio_workload() {
+    for kind in KINDS {
+        for policy in workload_policies() {
+            enumerate_workload("audio", policy, kind, checked_audio);
+        }
+        // SMART has an offline table for this workload — cover it too.
+        enumerate_workload("audio", Policy::Smart { bound: 0.60 }, kind, checked_audio);
+    }
+}
+
+#[test]
+fn exhaustive_enumeration_covers_harris_workload() {
+    for kind in KINDS {
+        for policy in workload_policies() {
+            // `CornerOutput` carries no `PartialEq`; compare the corner
+            // list and perforation coverage instead.
+            let name = format!("harris/{}/{}", policy.name(), kind_name(kind));
+            let free = checked_harris(policy, kind, FaultPlan::None);
+            assert_no_violations(&format!("{name} fault-free"), &free.violations);
+            assert!(free.campaign.emitted().count() > 0, "{name}: nothing emitted");
+            let reference: Vec<(u64, Vec<aic::imgproc::Corner>, usize)> = free
+                .campaign
+                .emitted()
+                .map(|r| {
+                    let o = r.output.as_ref().expect("emitted");
+                    (r.sample_id, o.corners.clone(), o.rows_computed)
+                })
+                .collect();
+            for t in 0..free.ops {
+                let cell = format!("{name} fault@{t}");
+                let run = checked_harris(policy, kind, FaultPlan::single(t));
+                assert_no_violations(&cell, &run.violations);
+                if precise(policy) {
+                    for r in run.campaign.emitted() {
+                        let o = r.output.as_ref().expect("emitted");
+                        let expected = reference.iter().find(|(id, _, _)| *id == r.sample_id);
+                        if let Some((_, corners, rows)) = expected {
+                            assert_eq!(&o.corners, corners, "{cell}: corners diverged");
+                            assert_eq!(o.rows_computed, *rows, "{cell}: perforation diverged");
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn randomized_schedules_keep_workloads_clean() {
+    let seeds = fault_seeds(200);
+    for kind in KINDS {
+        for policy in workload_policies() {
+            for seed in 0..seeds {
+                let plan = FaultPlan::Random { seed, rate: 0.02, max_faults: u64::MAX };
+                let cell = format!("{}/{} seed {seed}", policy.name(), kind_name(kind));
+                let har = checked_har(policy, kind, plan.clone());
+                assert_no_violations(&format!("har/{cell}"), &har.violations);
+                let audio = checked_audio(policy, kind, plan.clone());
+                assert_no_violations(&format!("audio/{cell}"), &audio.violations);
+                let harris = checked_harris(policy, kind, plan);
+                assert_no_violations(&format!("harris/{cell}"), &harris.violations);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Dropped-round semantics: mid-round failure vs deliberate skip.
+// ---------------------------------------------------------------------
+
+#[test]
+fn dropped_after_mid_round_failure_goes_straight_to_recharging() {
+    for kind in KINDS {
+        // GREEDY op ordinals on the synthetic program: 0 = acquire,
+        // 1.. = steps, last = emit. Fault the second step.
+        let run = checked_synthetic(Policy::Greedy, kind, FaultPlan::single(2));
+        assert_no_violations(&format!("greedy mid-step {}", kind_name(kind)), &run.violations);
+        let rounds = &run.campaign.rounds;
+        assert!(rounds.len() >= 2, "campaign too short: {} rounds", rounds.len());
+        assert!(rounds[0].emitted_at.is_none(), "faulted round must not emit");
+        assert_eq!(rounds[0].steps_executed, 1, "one step billed before the fault");
+        // `sleep: false`: the next acquisition happens as soon as the
+        // capacitor recovers, well before the next sampling slot.
+        let delta = rounds[1].acquired_at - rounds[0].acquired_at;
+        assert!(delta > 0.0, "time must advance over the recharge");
+        assert!(
+            delta < PERIOD,
+            "{}: mid-round drop slept to the next slot (Δ={delta:.1}s)",
+            kind_name(kind)
+        );
+    }
+}
+
+#[test]
+fn dropped_on_deliberate_skip_sleeps_to_the_next_slot() {
+    for kind in KINDS {
+        // A bound above the table's best accuracy makes every round
+        // infeasible: SMART skips deliberately, with `sleep: true`.
+        let run = checked_synthetic(Policy::Smart { bound: 0.95 }, kind, FaultPlan::None);
+        assert_no_violations(&format!("smart skip {}", kind_name(kind)), &run.violations);
+        let rounds = &run.campaign.rounds;
+        assert!(rounds.len() >= 2, "expected several skipped slots");
+        for r in rounds {
+            assert!(r.emitted_at.is_none() && r.steps_executed == 0, "skip does no work");
+        }
+        for (i, r) in rounds.iter().enumerate() {
+            let slot = i as f64 * PERIOD;
+            assert!(
+                (r.acquired_at - slot).abs() < 1.5,
+                "{}: skip {i} acquired at {:.2}s, not slot-aligned to {slot:.0}s",
+                kind_name(kind),
+                r.acquired_at
+            );
+        }
+    }
+}
+
+#[test]
+fn dropped_on_emit_failure_keeps_the_executed_steps() {
+    for kind in KINDS {
+        // Continuous op ordinals: 0 = acquire, 1..=8 = steps, 9 = emit.
+        let run = checked_synthetic(Policy::Continuous, kind, FaultPlan::single(9));
+        assert_no_violations(&format!("continuous emit {}", kind_name(kind)), &run.violations);
+        let r0 = &run.campaign.rounds[0];
+        assert!(r0.emitted_at.is_none(), "emission browned out");
+        assert_eq!(r0.steps_executed, SYN_STEPS, "all steps ran before the lost emit");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Alpaca re-entry: failure at every boundary restores exactly the
+// committed prefix.
+// ---------------------------------------------------------------------
+
+fn alpaca_reenter_run(kind: EngineKind, plan: FaultPlan) -> CheckedRun<usize> {
+    let rt = AlpacaRuntime::new(AlpacaConfig {
+        steps_per_task: 4,
+        sample_period: PERIOD,
+        ..Default::default()
+    });
+    run_checked(
+        SyntheticProgram::new(1, 12, SYN_CYCLES),
+        harvesting(kind, SYN_HORIZON),
+        &rt,
+        plan,
+        &alpaca::profile(),
+    )
+}
+
+#[test]
+fn alpaca_reenter_restores_exactly_the_committed_prefix() {
+    for kind in KINDS {
+        let free = alpaca_reenter_run(kind, FaultPlan::None);
+        assert_no_violations(&format!("alpaca reenter {} fault-free", kind_name(kind)),
+            &free.violations);
+        for t in 0..free.ops {
+            let cell = format!("alpaca reenter {} fault@{t}", kind_name(kind));
+            let run = alpaca_reenter_run(kind, FaultPlan::single(t));
+            assert_no_violations(&cell, &run.violations);
+            // Every re-entry replays a whole-task prefix: 0, 4, 8 or 12
+            // steps — never a partial task, never beyond the program.
+            for (sample, len) in run.trace.replay_runs() {
+                assert!(
+                    len % 4 == 0 && len <= 12,
+                    "{cell}: sample {sample} replayed {len} steps — not a committed task prefix"
+                );
+            }
+            for r in run.campaign.emitted() {
+                assert_eq!(r.output, Some(12), "{cell}: partial-precision emit");
+                assert_eq!(r.steps_executed, 12, "{cell}");
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Mutation gate: the deliberately broken runtimes must be flagged.
+// CI selects these by name: `cargo test --test fault_injection mutation_gate`.
+// ---------------------------------------------------------------------
+
+fn has_kind(run_violations: &[aic::exec::Violation], kind: &str) -> bool {
+    run_violations.iter().any(|v| v.kind() == kind)
+}
+
+#[test]
+fn mutation_gate_missing_war_versioning_is_flagged() {
+    for kind in KINDS {
+        let rt = NoWarChinchillaRuntime { sample_period: PERIOD };
+        let run = run_checked(
+            SyntheticProgram::new(SYN_INPUTS, SYN_STEPS, SYN_CYCLES),
+            harvesting(kind, SYN_HORIZON),
+            &rt,
+            FaultPlan::None,
+            &chinchilla::profile(),
+        );
+        assert!(
+            has_kind(&run.violations, "unversioned-war-write"),
+            "{}: WAR-stripped Chinchilla passed the checker: {:?}",
+            kind_name(kind),
+            run.violations
+        );
+        // The shipping counterpart is clean under identical conditions.
+        let ok = checked_synthetic(Policy::Chinchilla, kind, FaultPlan::None);
+        assert_no_violations("shipping chinchilla", &ok.violations);
+    }
+}
+
+#[test]
+fn mutation_gate_persistent_state_in_volatile_runtime_is_flagged() {
+    for kind in KINDS {
+        let rt = PersistentGreedyRuntime { sample_period: PERIOD };
+        let run = run_checked(
+            SyntheticProgram::new(SYN_INPUTS, SYN_STEPS, SYN_CYCLES),
+            harvesting(kind, SYN_HORIZON),
+            &rt,
+            FaultPlan::None,
+            &approx::profile(),
+        );
+        assert!(
+            has_kind(&run.violations, "stateful-volatile-runtime"),
+            "{}: checkpointing GREEDY passed the volatility check: {:?}",
+            kind_name(kind),
+            run.violations
+        );
+        assert!(run.campaign.state_energy > 0.0, "the mutant must actually persist");
+        let ok = checked_synthetic(Policy::Greedy, kind, FaultPlan::None);
+        assert_no_violations("shipping greedy", &ok.violations);
+        assert_eq!(ok.campaign.state_energy, 0.0);
+    }
+}
+
+#[test]
+fn mutation_gate_commit_before_execution_is_flagged_under_faults() {
+    for kind in KINDS {
+        let make_run = |plan: FaultPlan| {
+            let rt = EarlyCommitAlpacaRuntime { steps_per_task: 4, sample_period: PERIOD };
+            run_checked(
+                SyntheticProgram::new(1, SYN_STEPS, SYN_CYCLES),
+                harvesting(kind, SYN_HORIZON),
+                &rt,
+                plan,
+                &alpaca::profile(),
+            )
+        };
+        // Fault-free the mutant is indistinguishable from the real
+        // thing — the whole point of fault injection.
+        let free = make_run(FaultPlan::None);
+        assert_no_violations("early-commit mutant, fault-free", &free.violations);
+        let mut flagged = 0usize;
+        for t in 0..free.ops {
+            let run = make_run(FaultPlan::single(t));
+            if has_kind(&run.violations, "replay-beyond-commit") {
+                flagged += 1;
+            }
+        }
+        assert!(
+            flagged > 0,
+            "{}: no enumerated fault exposed the early commit",
+            kind_name(kind)
+        );
+    }
+}
+
+#[test]
+fn mutation_gate_emit_before_commit_is_flagged_under_faults() {
+    for kind in KINDS {
+        let make_run = |plan: FaultPlan| {
+            let rt = EmitBeforeCommitRuntime { sample_period: PERIOD };
+            run_checked(
+                SyntheticProgram::new(1, SYN_STEPS, SYN_CYCLES),
+                harvesting(kind, SYN_HORIZON),
+                &rt,
+                plan,
+                &alpaca::profile(),
+            )
+        };
+        let free = make_run(FaultPlan::None);
+        assert_no_violations("emit-before-commit mutant, fault-free", &free.violations);
+        let mut flagged = 0usize;
+        for t in 0..free.ops {
+            let run = make_run(FaultPlan::single(t));
+            if has_kind(&run.violations, "double-emit") {
+                flagged += 1;
+            }
+        }
+        assert!(
+            flagged > 0,
+            "{}: no enumerated fault exposed the early emission",
+            kind_name(kind)
+        );
+        // The shipping precise runtimes survive the same enumeration —
+        // the dense version lives in the exhaustive tests above; here a
+        // single adversarial ordinal (the one most likely to double-emit,
+        // right after the emission) documents the contrast.
+        let emit_ordinal = free.ops.saturating_sub(1);
+        let ok = checked_synthetic(Policy::Alpaca, kind, FaultPlan::single(emit_ordinal));
+        assert_no_violations("shipping alpaca at the emit boundary", &ok.violations);
+    }
+}
+
+// ---------------------------------------------------------------------
+// The fault-point space itself: enumeration must actually cover it.
+// ---------------------------------------------------------------------
+
+#[test]
+fn fault_point_space_is_stable_and_every_ordinal_reachable() {
+    for kind in KINDS {
+        let a = checked_synthetic(Policy::Chinchilla, kind, FaultPlan::None);
+        let b = checked_synthetic(Policy::Chinchilla, kind, FaultPlan::None);
+        assert_eq!(a.ops, b.ops, "fault-free op count must be deterministic");
+        // A fault at the very last fault-free ordinal must still fire:
+        // the space reported by `ops` is fully reachable.
+        let last = a.ops - 1;
+        let run = checked_synthetic(Policy::Chinchilla, kind, FaultPlan::single(last));
+        assert_eq!(run.injected, 1, "{}: ordinal {last} unreachable", kind_name(kind));
+        // Beyond the (now longer) faulted campaign's own op count,
+        // nothing fires.
+        let beyond = checked_synthetic(Policy::Chinchilla, kind, FaultPlan::single(100_000));
+        assert_eq!(beyond.injected, 0);
+        assert_no_violations("beyond-horizon ordinal", &beyond.violations);
+    }
+}
