@@ -1,0 +1,164 @@
+//! Streamed vs legacy campaign sweeps (the streaming-engine perf
+//! deliverable).
+//!
+//! Times the same `cells`-projection audio grid over built-in synthetic
+//! environments three ways — the legacy batch path (`run_cached` +
+//! `tables()`), the streaming pipeline with no store, and the streaming
+//! pipeline committing to / resuming from an experiment store — and
+//! measures each leg's peak live heap through a counting global
+//! allocator. The batch path must hold every campaign of the grid at
+//! once; the streamed legs must peak at one chunk plus the accumulator,
+//! independent of cell count (the `tests/alloc_hygiene.rs` gate, here at
+//! benchmark scale: ~10k cells, or ~100 under `AIC_BENCH_FAST`).
+//!
+//! Honours `AIC_ENGINE`, `AIC_BENCH_FAST` and `AIC_BENCH_OUT` like every
+//! other bench; peak-allocation rows are printed via `report_table`.
+
+use aic::coordinator::experiment::SupplyCache;
+use aic::coordinator::scenario::{HarvesterSpec, Projection, Scenario, WorkloadSpec};
+use aic::coordinator::sink::{emit_all, NullSink};
+use aic::coordinator::store::Store;
+use aic::coordinator::stream::{run_streaming, StreamOptions};
+use aic::energy::synth::SynthSpec;
+use aic::exec::Policy;
+use aic::util::bench::{black_box, Bench};
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+// --- counting allocator: live bytes + high-water mark ----------------
+
+struct PeakAlloc;
+
+static LIVE: AtomicU64 = AtomicU64::new(0);
+static PEAK: AtomicU64 = AtomicU64::new(0);
+
+fn on_alloc(size: usize) {
+    let live = LIVE.fetch_add(size as u64, Ordering::Relaxed) + size as u64;
+    PEAK.fetch_max(live, Ordering::Relaxed);
+}
+
+unsafe impl GlobalAlloc for PeakAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        on_alloc(layout.size());
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        on_alloc(layout.size());
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        LIVE.fetch_sub(layout.size() as u64, Ordering::Relaxed);
+        on_alloc(new_size);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        LIVE.fetch_sub(layout.size() as u64, Ordering::Relaxed);
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static COUNTER: PeakAlloc = PeakAlloc;
+
+/// Run `f` once and return its peak live-byte delta over the baseline.
+fn peak_of(f: impl FnOnce()) -> u64 {
+    let baseline = LIVE.load(Ordering::SeqCst);
+    PEAK.store(baseline, Ordering::SeqCst);
+    f();
+    PEAK.load(Ordering::SeqCst).saturating_sub(baseline)
+}
+
+fn mib(bytes: u64) -> String {
+    format!("{:.2}", bytes as f64 / (1024.0 * 1024.0))
+}
+
+// --- the grid --------------------------------------------------------
+
+fn grid() -> Scenario {
+    let fast = std::env::var("AIC_BENCH_FAST").is_ok();
+    let seeds: Vec<u64> = (1..=if fast { 25 } else { 2500 }).collect();
+    Scenario::new("campaign_stream", WorkloadSpec::Audio)
+        .with_title("streaming-vs-batch campaign grid")
+        .with_harvesters(vec![
+            HarvesterSpec::Synth(SynthSpec::builtin_rf()),
+            HarvesterSpec::Synth(SynthSpec::builtin_multi()),
+        ])
+        .with_policies(vec![Policy::Greedy, Policy::Chinchilla])
+        .with_seeds(seeds)
+        .with_horizon(120.0)
+        .with_sample_period(30.0)
+        .with_projection(Projection::Cells)
+}
+
+fn store_path() -> PathBuf {
+    std::env::temp_dir().join(format!("aic_campaign_stream_{}.aic", std::process::id()))
+}
+
+fn batch_once(sc: &Scenario) {
+    let cache = SupplyCache::new();
+    let run = sc.run_cached(false, None, None, &cache);
+    emit_all(&run.tables(), &mut NullSink).expect("null sink never fails");
+}
+
+fn stream_once(sc: &Scenario, store: Option<&mut Store>) {
+    let cache = SupplyCache::new();
+    let opts = StreamOptions::default();
+    let report = run_streaming(sc, &opts, None, &cache, store, &mut NullSink)
+        .expect("streaming sweep failed");
+    black_box(report.ran + report.reused);
+}
+
+fn main() {
+    let b = Bench::new("campaign_stream");
+    let sc = grid();
+    let cells = sc.plan().len();
+    let path = store_path();
+
+    // --- peak live heap, one run per leg (not timed) -----------------
+    let peak_batch = peak_of(|| batch_once(&sc));
+    let peak_stream = peak_of(|| stream_once(&sc, None));
+    let _ = std::fs::remove_file(&path);
+    let peak_store = peak_of(|| {
+        let mut store = Store::open(&path).expect("open store");
+        stream_once(&sc, Some(&mut store));
+    });
+
+    // --- wall time ---------------------------------------------------
+    b.bench("batch_cells", || batch_once(&sc));
+    b.bench("stream_cells", || stream_once(&sc, None));
+    b.bench("stream_cells_store_cold", || {
+        let _ = std::fs::remove_file(&path);
+        let mut store = Store::open(&path).expect("open store");
+        stream_once(&sc, Some(&mut store));
+    });
+    // Leave the store fully committed, then time the pure-resume replay:
+    // every cell folds from its committed digest, nothing simulates.
+    {
+        let _ = std::fs::remove_file(&path);
+        let mut store = Store::open(&path).expect("open store");
+        stream_once(&sc, Some(&mut store));
+    }
+    b.bench("stream_cells_store_resume", || {
+        let mut store = Store::open(&path).expect("open store");
+        stream_once(&sc, Some(&mut store));
+    });
+    let _ = std::fs::remove_file(&path);
+
+    b.report_table(
+        &format!("peak live heap over a {cells}-cell grid"),
+        &["leg", "peak MiB"],
+        &[
+            vec!["batch run_cached + tables".into(), mib(peak_batch)],
+            vec!["streamed, no store".into(), mib(peak_stream)],
+            vec!["streamed + store".into(), mib(peak_store)],
+        ],
+    );
+    println!(
+        "(batch/stream peak ratio: {:.1}x over {cells} cells)",
+        peak_batch as f64 / peak_stream.max(1) as f64
+    );
+}

@@ -19,7 +19,7 @@ use crate::energy::mcu::{McuModel, OpCost};
 use crate::energy::traces::TraceKind;
 use crate::exec::engine::{Engine, SharedSupply};
 use crate::exec::{Campaign, Policy, Runtime, RuntimeSpec, StepProgram};
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 use crate::har::app::{smart_table, HarOutput, HarProgram, WindowSource};
@@ -105,19 +105,51 @@ impl Default for HarRunSpec {
 /// sharing for A/B timing and bisection; tests needing a specific mode
 /// construct [`SupplyCache::new`] / [`SupplyCache::disabled`] directly
 /// instead of mutating the process environment.
+///
+/// The cache is **bounded**: streaming sweeps walk seeds in the
+/// innermost plan position, so an unbounded map would retain one
+/// resolved supply per (harvester, seed) — O(grid) memory on the
+/// 100k-cell grids the store targets. Once `cap` distinct identities
+/// are held, the oldest entry is evicted FIFO. Plan order finishes all
+/// cells of one seed before moving on, so any cap above one plan row's
+/// working set keeps the hit rate of the unbounded cache; the default
+/// (1024, override via `AIC_SUPPLY_CACHE_CAP`) is far above that.
 pub struct SupplyCache {
     enabled: bool,
-    map: RwLock<HashMap<String, Arc<SharedSupply>>>,
+    /// Maximum distinct supplies held at once (≥ 1).
+    cap: usize,
+    inner: RwLock<CacheInner>,
     /// Instrumentation: how many `SharedSupply` values this cache has
     /// materialised. With sharing enabled this equals the number of
-    /// *distinct* supplies resolved, not the number of cells.
+    /// *distinct* supplies resolved, not the number of cells (modulo
+    /// rebuilds after eviction).
     builds: AtomicU64,
 }
+
+#[derive(Default)]
+struct CacheInner {
+    map: HashMap<String, Arc<SharedSupply>>,
+    /// Insertion order of the keys in `map` — the FIFO eviction queue.
+    order: VecDeque<String>,
+}
+
+/// Default [`SupplyCache`] capacity when `AIC_SUPPLY_CACHE_CAP` is unset.
+pub const SUPPLY_CACHE_CAP: usize = 1024;
 
 impl SupplyCache {
     /// A fresh, enabled cache (one per sweep is the intended scope).
     pub fn new() -> SupplyCache {
-        SupplyCache { enabled: true, map: RwLock::new(HashMap::new()), builds: AtomicU64::new(0) }
+        SupplyCache::with_cap(SUPPLY_CACHE_CAP)
+    }
+
+    /// An enabled cache holding at most `cap` distinct supplies.
+    pub fn with_cap(cap: usize) -> SupplyCache {
+        SupplyCache {
+            enabled: true,
+            cap: cap.max(1),
+            inner: RwLock::new(CacheInner::default()),
+            builds: AtomicU64::new(0),
+        }
     }
 
     /// A cache that never shares: every [`SupplyCache::resolve`] call
@@ -126,13 +158,25 @@ impl SupplyCache {
         SupplyCache { enabled: false, ..SupplyCache::new() }
     }
 
-    /// Honour the `AIC_SUPPLY_CACHE` environment variable: `off`, `0`
-    /// or `false` disable sharing; anything else (or unset) enables it.
+    /// Honour the environment: `AIC_SUPPLY_CACHE` set to `off`, `0` or
+    /// `false` disables sharing; `AIC_SUPPLY_CACHE_CAP=<n>` bounds the
+    /// number of supplies held at once (default [`SUPPLY_CACHE_CAP`]).
     pub fn from_env() -> SupplyCache {
         match std::env::var("AIC_SUPPLY_CACHE") {
             Ok(s) if matches!(s.as_str(), "off" | "0" | "false") => SupplyCache::disabled(),
-            _ => SupplyCache::new(),
+            _ => {
+                let cap = std::env::var("AIC_SUPPLY_CACHE_CAP")
+                    .ok()
+                    .and_then(|s| s.parse::<usize>().ok())
+                    .unwrap_or(SUPPLY_CACHE_CAP);
+                SupplyCache::with_cap(cap)
+            }
         }
+    }
+
+    /// The eviction bound this cache was built with.
+    pub fn cap(&self) -> usize {
+        self.cap
     }
 
     /// Whether this cache shares supplies at all.
@@ -147,7 +191,7 @@ impl SupplyCache {
 
     /// How many distinct supplies the cache currently holds.
     pub fn len(&self) -> usize {
-        self.map.read().expect("supply cache poisoned").len()
+        self.inner.read().expect("supply cache poisoned").map.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -191,17 +235,25 @@ impl SupplyCache {
         }
         let key = SupplyCache::key(spec, horizon, seed, booster);
         {
-            let map = self.map.read().expect("supply cache poisoned");
-            if let Some(shared) = map.get(&key) {
+            let inner = self.inner.read().expect("supply cache poisoned");
+            if let Some(shared) = inner.map.get(&key) {
                 return Arc::clone(shared);
             }
         }
-        let mut map = self.map.write().expect("supply cache poisoned");
-        if let Some(shared) = map.get(&key) {
+        let mut inner = self.inner.write().expect("supply cache poisoned");
+        if let Some(shared) = inner.map.get(&key) {
             return Arc::clone(shared);
         }
         let shared = self.build(spec, horizon, seed);
-        map.insert(key, Arc::clone(&shared));
+        // FIFO-evict before inserting so the map never exceeds `cap`.
+        // Outstanding `Arc`s keep an evicted supply alive for the cells
+        // already using it; the cache just stops handing it out.
+        while inner.map.len() >= self.cap {
+            let oldest = inner.order.pop_front().expect("order tracks map");
+            inner.map.remove(&oldest);
+        }
+        inner.map.insert(key.clone(), Arc::clone(&shared));
+        inner.order.push_back(key);
         shared
     }
 }
@@ -675,6 +727,21 @@ mod tests {
         assert!(!Arc::ptr_eq(&a, &f), "a different booster is a different supply");
         assert_eq!(cache.builds(), 5);
         assert_eq!(cache.len(), 5);
+    }
+
+    #[test]
+    fn bounded_cache_evicts_fifo() {
+        let cache = SupplyCache::with_cap(2);
+        let booster = Booster::paper_default();
+        let spec = HarvesterSpec::Ambient(TraceKind::Som);
+        let a = cache.resolve(&spec, 900.0, 1, &booster);
+        let _b = cache.resolve(&spec, 900.0, 2, &booster);
+        // Seed 3 overflows the cap and evicts the oldest entry (seed 1).
+        let _c = cache.resolve(&spec, 900.0, 3, &booster);
+        assert_eq!(cache.len(), 2, "cap bounds the held set");
+        let a2 = cache.resolve(&spec, 900.0, 1, &booster);
+        assert!(!Arc::ptr_eq(&a, &a2), "evicted identity is rebuilt");
+        assert_eq!(cache.builds(), 4);
     }
 
     #[test]

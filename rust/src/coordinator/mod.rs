@@ -18,9 +18,18 @@
 //!   with deterministic, job-ordered results.
 //! * [`sink`] — where tables go: markdown/CSV/JSON streaming sinks and
 //!   in-memory capture.
+//! * [`store`] — the persistent experiment store: an append-only,
+//!   checksummed record file of per-cell digests keyed by grid identity,
+//!   tolerant of torn tails (the coordinator survives power failures the
+//!   way the paper's devices do).
+//! * [`stream`] — streaming sweeps: lazy chunked cells through the fleet
+//!   pool into O(1)-memory incremental projections, bitwise-identical to
+//!   the batch path and resumable from a [`store::Store`].
 
 pub mod experiment;
 pub mod fleet;
 pub mod metrics;
 pub mod scenario;
 pub mod sink;
+pub mod store;
+pub mod stream;

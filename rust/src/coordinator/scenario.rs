@@ -671,28 +671,45 @@ impl Scenario {
         s
     }
 
+    /// Number of campaign cells the plan expands to (0 for non-campaign
+    /// workloads).
+    pub fn campaign_cell_count(&self) -> usize {
+        if !self.workload.is_campaign() {
+            return 0;
+        }
+        self.harvesters.len() * self.devices.len() * self.policies.len() * self.seeds.len()
+    }
+
+    /// The campaign cell at plan index `idx` — the inverse of the plan's
+    /// harvesters ▸ devices ▸ policies ▸ seeds nesting, computed without
+    /// materialising the grid.
+    pub fn cell_at(&self, idx: usize) -> CampaignCell {
+        let (s_n, p_n, d_n) = (self.seeds.len(), self.policies.len(), self.devices.len());
+        let s = idx % s_n;
+        let p = (idx / s_n) % p_n;
+        let d = (idx / (s_n * p_n)) % d_n;
+        let h = idx / (s_n * p_n * d_n);
+        CampaignCell {
+            harvester: self.harvesters[h].clone(),
+            device: self.devices[d],
+            policy: self.policies[p],
+            seed: self.seeds[s],
+        }
+    }
+
+    /// Lazy plan-order cell iterator — what the streaming sweep chunks
+    /// over. `plan()` is this iterator collected.
+    pub fn cells(&self) -> impl Iterator<Item = CampaignCell> + '_ {
+        (0..self.campaign_cell_count()).map(|i| self.cell_at(i))
+    }
+
     /// Expand into the deterministic job plan: the exact cells, in the
     /// exact order, the fleet will run (harvesters ▸ devices ▸ policies
     /// ▸ seeds). A pure function of the spec.
     pub fn plan(&self) -> JobPlan {
         match &self.workload {
             WorkloadSpec::Har | WorkloadSpec::Img | WorkloadSpec::Audio => {
-                let mut cells = Vec::new();
-                for harvester in &self.harvesters {
-                    for &device in &self.devices {
-                        for &policy in &self.policies {
-                            for &seed in &self.seeds {
-                                cells.push(CampaignCell {
-                                    harvester: harvester.clone(),
-                                    device,
-                                    policy,
-                                    seed,
-                                });
-                            }
-                        }
-                    }
-                }
-                JobPlan::Campaigns(cells)
+                JobPlan::Campaigns(self.cells().collect())
             }
             WorkloadSpec::AccuracyCurve { ps } => JobPlan::Accuracy(ps.clone()),
             WorkloadSpec::Perforation { skips, .. } => JobPlan::Perforation(
@@ -1365,168 +1382,42 @@ impl SweepRun {
             Projection::AccuracyCurve => vec![self.accuracy_table(name, title)],
             Projection::Perforation => vec![self.perforation_table(name, title)],
             Projection::PolicyAccuracy => {
-                let mut t = TableData::new(
-                    name,
-                    title,
-                    &["policy", "accuracy", "thrpt vs continuous", "mean features", "state energy"],
-                );
-                for r in self.policy_rows() {
-                    t.push(vec![
-                        r.policy.name(),
-                        pct(r.accuracy),
-                        pct(r.throughput_vs_continuous),
-                        f2(r.mean_features),
-                        pct(r.state_energy_fraction),
-                    ]);
-                }
-                vec![t]
+                vec![policy_accuracy_table(name, title, &self.policy_rows())]
             }
             Projection::PolicyCoherence => {
-                let mut t = TableData::new(
-                    name,
-                    title,
-                    &["policy", "coherence vs continuous", "thrpt vs continuous"],
-                );
-                for r in self
-                    .policy_rows()
-                    .iter()
-                    .filter(|r| !matches!(r.policy, Policy::Continuous))
-                {
-                    t.push(vec![
-                        r.policy.name(),
-                        pct(r.coherence_vs_continuous),
-                        pct(r.throughput_vs_continuous),
-                    ]);
-                }
-                vec![t]
+                vec![policy_coherence_table(name, title, &self.policy_rows())]
             }
             Projection::PolicyVsChinchilla => {
-                let mut t = TableData::new(
-                    name,
-                    title,
-                    &["policy", "coherence vs chinchilla", "thrpt vs greedy", "thrpt vs chinchilla"],
-                );
-                for r in self
-                    .policy_rows()
-                    .iter()
-                    .filter(|r| !matches!(r.policy, Policy::Continuous))
-                {
-                    t.push(vec![
-                        r.policy.name(),
-                        pct(r.coherence_vs_chinchilla),
-                        pct(r.throughput_vs_greedy),
-                        ratio(r.throughput_vs_chinchilla),
-                    ]);
-                }
-                vec![t]
+                vec![policy_vs_chinchilla_table(name, title, &self.policy_rows())]
             }
             Projection::LatencyEmulation => {
-                let mut t = TableData::new(
+                vec![latency_emulation_table(
                     name,
                     title,
-                    &["policy", "cycle0", "cycle1", "cycle2-5", "cycle6-15", "cycle16+"],
-                );
-                for (policy, h) in self.latency_histograms(LATENCY_CYCLES) {
-                    let range = |a: usize, b: usize| -> f64 {
-                        (a..b.min(h.bins.len())).map(|i| h.frac(i)).sum()
-                    };
-                    t.push(vec![
-                        policy.name(),
-                        pct(h.frac(0)),
-                        pct(h.frac(1)),
-                        pct(range(2, 6)),
-                        pct(range(6, 16)),
-                        pct(range(16, LATENCY_CYCLES)
-                            + h.overflow as f64 / h.count.max(1) as f64),
-                    ]);
-                }
-                vec![t]
+                    &self.latency_histograms(LATENCY_CYCLES),
+                )]
             }
             Projection::LatencyRealWorld => {
-                let mut t =
-                    TableData::new(name, title, &["policy", "same cycle", "1 cycle", "2+ cycles"]);
-                for (policy, h) in self.latency_histograms(LATENCY_CYCLES) {
-                    let rest: f64 = (2..h.bins.len()).map(|i| h.frac(i)).sum::<f64>()
-                        + h.overflow as f64 / h.count.max(1) as f64;
-                    t.push(vec![policy.name(), pct(h.frac(0)), pct(h.frac(1)), pct(rest)]);
-                }
-                vec![t]
-            }
-            Projection::ImgEquivalence => {
-                let mut t = TableData::new(
+                vec![latency_real_world_table(
                     name,
                     title,
-                    &["picture", "equivalent corner info (pooled over traces)"],
-                );
-                for (picture, eq) in self.equivalence_by_picture() {
-                    t.push(vec![picture.name().to_string(), pct(eq)]);
-                }
-                let mut per_trace = TableData::new(
-                    &format!("{name}_per_trace"),
-                    &format!("{title} (suppl.: per energy trace)"),
-                    &["trace", "equivalent corner info"],
-                );
-                for r in self.img_trace_rows() {
-                    per_trace.push(vec![r.harvester.name(), pct(r.equivalence_aic)]);
-                }
-                vec![t, per_trace]
+                    &self.latency_histograms(LATENCY_CYCLES),
+                )]
             }
+            Projection::ImgEquivalence => img_equivalence_tables(
+                name,
+                title,
+                &self.equivalence_by_picture(),
+                &self.img_trace_rows(),
+            ),
             Projection::ImgThroughput => {
-                let mut t = TableData::new(
-                    name,
-                    title,
-                    &["trace", "AIC", "Chinchilla", "AIC/Chinchilla"],
-                );
-                for r in self.img_trace_rows() {
-                    let gain = if r.throughput_chinchilla_vs_continuous > 0.0 {
-                        r.throughput_aic_vs_continuous / r.throughput_chinchilla_vs_continuous
-                    } else {
-                        f64::INFINITY
-                    };
-                    t.push(vec![
-                        r.harvester.name(),
-                        pct(r.throughput_aic_vs_continuous),
-                        pct(r.throughput_chinchilla_vs_continuous),
-                        ratio(gain),
-                    ]);
-                }
-                vec![t]
+                vec![img_throughput_table(name, title, &self.img_trace_rows())]
             }
             Projection::ImgLatency => {
-                let mut t = TableData::new(
-                    name,
-                    title,
-                    &["trace", "AIC same-cycle", "Chinchilla mean latency"],
-                );
-                for r in self.img_trace_rows() {
-                    t.push(vec![
-                        r.harvester.name(),
-                        pct(r.aic_same_cycle),
-                        f2(r.chinchilla_latency_mean),
-                    ]);
-                }
-                vec![t]
+                vec![img_latency_table(name, title, &self.img_trace_rows())]
             }
             Projection::AudioSummary => {
-                let mut t = TableData::new(
-                    name,
-                    title,
-                    &[
-                        "policy", "accuracy", "thrpt vs continuous", "mean probes",
-                        "same cycle", "mean latency (cycles)",
-                    ],
-                );
-                for r in self.audio_policy_rows() {
-                    t.push(vec![
-                        r.policy.name(),
-                        pct(r.accuracy),
-                        pct(r.throughput_vs_continuous),
-                        f2(r.mean_probes),
-                        pct(r.same_cycle_fraction),
-                        f2(r.mean_latency_cycles),
-                    ]);
-                }
-                vec![t]
+                vec![audio_summary_table(name, title, &self.audio_policy_rows())]
             }
             Projection::Cells => match &self.grid {
                 GridData::Accuracy(_) => vec![self.accuracy_table(name, title)],
@@ -1568,33 +1459,23 @@ impl SweepRun {
     /// "quality" is classification accuracy for HAR cells and the §6.3
     /// corner-equivalence fraction for imaging cells.
     fn cells_table(&self, name: &str, title: &str) -> TableData {
-        let mut t = TableData::new(
-            name,
-            title,
-            &[
-                "harvester", "device", "policy", "seed", "emitted", "cycles", "failures",
-                "quality", "same cycle", "app mJ", "state mJ",
-            ],
-        );
+        let mut t = TableData::new(name, title, &CELLS_HEADER);
         let JobPlan::Campaigns(cells) = self.scenario.plan() else {
             unreachable!("cells_table is only called on campaign grids");
         };
         let mut push =
             |cell: &CampaignCell, emitted: usize, cycles: u64, failures: u64, quality: f64,
              same_cycle: f64, app: f64, state: f64| {
-                t.push(vec![
-                    cell.harvester.name(),
-                    cell.device.label(),
-                    cell.policy.name(),
-                    cell.seed.to_string(),
-                    emitted.to_string(),
-                    cycles.to_string(),
-                    failures.to_string(),
-                    pct(quality),
-                    pct(same_cycle),
-                    f2(app * 1e3),
-                    f2(state * 1e3),
-                ]);
+                t.push(cells_row(
+                    cell,
+                    emitted as u64,
+                    cycles,
+                    failures,
+                    quality,
+                    same_cycle,
+                    app,
+                    state,
+                ));
             };
         match &self.grid {
             GridData::Har(campaigns) => {
@@ -1643,6 +1524,228 @@ impl SweepRun {
         }
         t
     }
+}
+
+// ---------------------------------------------------------------------
+// Shared table renderers.
+//
+// Each projection's table layout lives in exactly one function, called
+// by both the batch path (`SweepRun::tables`, via the row structs) and
+// the streaming accumulators (`coordinator::stream`, via incrementally
+// folded digests). Rendered bytes are therefore identical by
+// construction — the incremental-vs-batch bitwise guarantee only has to
+// cover the *numbers*, never the formatting.
+// ---------------------------------------------------------------------
+
+/// Header of the generic per-cell sweep view (`Projection::Cells` and
+/// `aic store table`).
+pub const CELLS_HEADER: [&str; 11] = [
+    "harvester", "device", "policy", "seed", "emitted", "cycles", "failures",
+    "quality", "same cycle", "app mJ", "state mJ",
+];
+
+/// One row of the generic sweep view. "quality" is classification
+/// accuracy for HAR/audio cells and the §6.3 corner-equivalence fraction
+/// for imaging cells.
+pub fn cells_row(
+    cell: &CampaignCell,
+    emitted: u64,
+    cycles: u64,
+    failures: u64,
+    quality: f64,
+    same_cycle: f64,
+    app: f64,
+    state: f64,
+) -> Vec<String> {
+    vec![
+        cell.harvester.name(),
+        cell.device.label(),
+        cell.policy.name(),
+        cell.seed.to_string(),
+        emitted.to_string(),
+        cycles.to_string(),
+        failures.to_string(),
+        pct(quality),
+        pct(same_cycle),
+        f2(app * 1e3),
+        f2(state * 1e3),
+    ]
+}
+
+/// Figs. 5/7/8 layout over per-policy summary rows.
+pub fn policy_accuracy_table(name: &str, title: &str, rows: &[PolicyRow]) -> TableData {
+    let mut t = TableData::new(
+        name,
+        title,
+        &["policy", "accuracy", "thrpt vs continuous", "mean features", "state energy"],
+    );
+    for r in rows {
+        t.push(vec![
+            r.policy.name(),
+            pct(r.accuracy),
+            pct(r.throughput_vs_continuous),
+            f2(r.mean_features),
+            pct(r.state_energy_fraction),
+        ]);
+    }
+    t
+}
+
+pub fn policy_coherence_table(name: &str, title: &str, rows: &[PolicyRow]) -> TableData {
+    let mut t = TableData::new(
+        name,
+        title,
+        &["policy", "coherence vs continuous", "thrpt vs continuous"],
+    );
+    for r in rows.iter().filter(|r| !matches!(r.policy, Policy::Continuous)) {
+        t.push(vec![
+            r.policy.name(),
+            pct(r.coherence_vs_continuous),
+            pct(r.throughput_vs_continuous),
+        ]);
+    }
+    t
+}
+
+pub fn policy_vs_chinchilla_table(name: &str, title: &str, rows: &[PolicyRow]) -> TableData {
+    let mut t = TableData::new(
+        name,
+        title,
+        &["policy", "coherence vs chinchilla", "thrpt vs greedy", "thrpt vs chinchilla"],
+    );
+    for r in rows.iter().filter(|r| !matches!(r.policy, Policy::Continuous)) {
+        t.push(vec![
+            r.policy.name(),
+            pct(r.coherence_vs_chinchilla),
+            pct(r.throughput_vs_greedy),
+            ratio(r.throughput_vs_chinchilla),
+        ]);
+    }
+    t
+}
+
+/// Fig. 6 layout over per-policy pooled latency histograms.
+pub fn latency_emulation_table(
+    name: &str,
+    title: &str,
+    hists: &[(Policy, Histogram)],
+) -> TableData {
+    let mut t = TableData::new(
+        name,
+        title,
+        &["policy", "cycle0", "cycle1", "cycle2-5", "cycle6-15", "cycle16+"],
+    );
+    for (policy, h) in hists {
+        let range =
+            |a: usize, b: usize| -> f64 { (a..b.min(h.bins.len())).map(|i| h.frac(i)).sum() };
+        t.push(vec![
+            policy.name(),
+            pct(h.frac(0)),
+            pct(h.frac(1)),
+            pct(range(2, 6)),
+            pct(range(6, 16)),
+            pct(range(16, LATENCY_CYCLES) + h.overflow as f64 / h.count.max(1) as f64),
+        ]);
+    }
+    t
+}
+
+/// Fig. 9 layout over per-policy pooled latency histograms.
+pub fn latency_real_world_table(
+    name: &str,
+    title: &str,
+    hists: &[(Policy, Histogram)],
+) -> TableData {
+    let mut t = TableData::new(name, title, &["policy", "same cycle", "1 cycle", "2+ cycles"]);
+    for (policy, h) in hists {
+        let rest: f64 = (2..h.bins.len()).map(|i| h.frac(i)).sum::<f64>()
+            + h.overflow as f64 / h.count.max(1) as f64;
+        t.push(vec![policy.name(), pct(h.frac(0)), pct(h.frac(1)), pct(rest)]);
+    }
+    t
+}
+
+/// Fig. 13 layout: the pooled per-picture table plus the supplementary
+/// per-trace table.
+pub fn img_equivalence_tables(
+    name: &str,
+    title: &str,
+    by_picture: &[(Picture, f64)],
+    trace_rows: &[ImgTraceRow],
+) -> Vec<TableData> {
+    let mut t = TableData::new(
+        name,
+        title,
+        &["picture", "equivalent corner info (pooled over traces)"],
+    );
+    for (picture, eq) in by_picture {
+        t.push(vec![picture.name().to_string(), pct(*eq)]);
+    }
+    let mut per_trace = TableData::new(
+        &format!("{name}_per_trace"),
+        &format!("{title} (suppl.: per energy trace)"),
+        &["trace", "equivalent corner info"],
+    );
+    for r in trace_rows {
+        per_trace.push(vec![r.harvester.name(), pct(r.equivalence_aic)]);
+    }
+    vec![t, per_trace]
+}
+
+/// Fig. 14 layout over per-trace summary rows.
+pub fn img_throughput_table(name: &str, title: &str, rows: &[ImgTraceRow]) -> TableData {
+    let mut t = TableData::new(name, title, &["trace", "AIC", "Chinchilla", "AIC/Chinchilla"]);
+    for r in rows {
+        let gain = if r.throughput_chinchilla_vs_continuous > 0.0 {
+            r.throughput_aic_vs_continuous / r.throughput_chinchilla_vs_continuous
+        } else {
+            f64::INFINITY
+        };
+        t.push(vec![
+            r.harvester.name(),
+            pct(r.throughput_aic_vs_continuous),
+            pct(r.throughput_chinchilla_vs_continuous),
+            ratio(gain),
+        ]);
+    }
+    t
+}
+
+/// Fig. 15 layout over per-trace summary rows.
+pub fn img_latency_table(name: &str, title: &str, rows: &[ImgTraceRow]) -> TableData {
+    let mut t =
+        TableData::new(name, title, &["trace", "AIC same-cycle", "Chinchilla mean latency"]);
+    for r in rows {
+        t.push(vec![
+            r.harvester.name(),
+            pct(r.aic_same_cycle),
+            f2(r.chinchilla_latency_mean),
+        ]);
+    }
+    t
+}
+
+/// Audio summary layout over per-policy rows.
+pub fn audio_summary_table(name: &str, title: &str, rows: &[AudioPolicyRow]) -> TableData {
+    let mut t = TableData::new(
+        name,
+        title,
+        &[
+            "policy", "accuracy", "thrpt vs continuous", "mean probes",
+            "same cycle", "mean latency (cycles)",
+        ],
+    );
+    for r in rows {
+        t.push(vec![
+            r.policy.name(),
+            pct(r.accuracy),
+            pct(r.throughput_vs_continuous),
+            f2(r.mean_probes),
+            pct(r.same_cycle_fraction),
+            f2(r.mean_latency_cycles),
+        ]);
+    }
+    t
 }
 
 // ---------------------------------------------------------------------

@@ -305,6 +305,25 @@ impl Sink for MemorySink {
     }
 }
 
+/// Discards everything — memory/time benchmarks of the streaming path
+/// that must not measure formatting I/O.
+#[derive(Default)]
+pub struct NullSink;
+
+impl Sink for NullSink {
+    fn begin(&mut self, _stem: &str, _title: &str, _header: &[String]) -> io::Result<()> {
+        Ok(())
+    }
+
+    fn row(&mut self, _cells: &[String]) -> io::Result<()> {
+        Ok(())
+    }
+
+    fn finish(&mut self) -> io::Result<()> {
+        Ok(())
+    }
+}
+
 /// Fans every call out to several sinks.
 pub struct Fanout {
     pub sinks: Vec<Box<dyn Sink>>,

@@ -1,0 +1,452 @@
+//! Per-cell result digests.
+//!
+//! A [`CellDigest`] is the summary of one campaign cell that the
+//! streaming accumulators fold and the experiment store persists. It is
+//! computed inside the fleet worker — the full `Campaign` (every round's
+//! `RoundResult`) is dropped there, which is what makes streamed sweep
+//! memory independent of cell count.
+//!
+//! Every numeric field is chosen so the accumulators reproduce the batch
+//! `SweepRun` projections *bitwise*:
+//!
+//! * counts and integer sums (emitted rounds, steps, latency cycles) are
+//!   exact in `u64` and far below 2^53, so re-deriving a mean as
+//!   `sum as f64 / count as f64` equals the batch left-to-right fold over
+//!   the same integers;
+//! * latency histogram bins are taken from [`metrics::latency_histogram`]
+//!   — the *same* float-binning code path the batch uses — and summed as
+//!   integers;
+//! * coherence needs cross-cell round alignment, so HAR digests keep the
+//!   `(slot, prediction)` sequence of emitted rounds when the projection
+//!   asks for it ([`Needs::slots`]).
+
+use crate::audio::app::AudioOutput;
+use crate::coordinator::metrics;
+use crate::coordinator::scenario::{Projection, LATENCY_CYCLES};
+use crate::exec::Campaign;
+use crate::har::app::HarOutput;
+use crate::imgproc::app::CornerOutput;
+use crate::imgproc::equivalence::equivalent;
+use crate::imgproc::images::{Picture, EVAL_SIZE};
+use crate::util::json::Value;
+
+/// Which optional digest payloads a projection folds. Encoded into the
+/// experiment hash, so records are only reused by runs that stored the
+/// fields they need.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Needs {
+    /// Per-round `(slot, prediction)` pairs for coherence alignment.
+    pub slots: bool,
+    /// Pooled latency histogram bins.
+    pub latency: bool,
+    /// Per-picture equivalence counts.
+    pub pictures: bool,
+}
+
+impl Needs {
+    pub fn for_projection(p: Projection) -> Needs {
+        Needs {
+            slots: matches!(
+                p,
+                Projection::PolicyCoherence | Projection::PolicyVsChinchilla
+            ),
+            latency: matches!(
+                p,
+                Projection::LatencyEmulation | Projection::LatencyRealWorld
+            ),
+            pictures: matches!(p, Projection::ImgEquivalence),
+        }
+    }
+
+    pub fn none() -> Needs {
+        Needs { slots: false, latency: false, pictures: false }
+    }
+}
+
+/// Pooled latency histogram payload (bins are power-cycle counts; rounds
+/// at `LATENCY_CYCLES` or beyond land in `overflow`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct LatencyBins {
+    pub bins: Vec<u64>,
+    pub overflow: u64,
+}
+
+/// The persistent summary of one campaign cell.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CellDigest {
+    /// Emitted (delivered) rounds.
+    pub emitted: u64,
+    /// Campaign duration, seconds.
+    pub duration: f64,
+    pub power_cycles: u64,
+    pub power_failures: u64,
+    pub app_energy: f64,
+    pub state_energy: f64,
+    /// Quality numerator/denominator over emitted rounds with an output:
+    /// correct classifications (HAR/audio) or equivalent corner maps
+    /// (imaging).
+    pub quality_ok: u64,
+    pub quality_total: u64,
+    /// Emitted rounds delivered in the acquisition power cycle.
+    pub same_cycle: u64,
+    /// Sum of `steps_executed` over emitted rounds.
+    pub steps_sum: u64,
+    /// Sum of `latency_cycles` over emitted rounds.
+    pub latency_sum: u64,
+    /// Latency histogram (when [`Needs::latency`]).
+    pub latency_bins: Option<LatencyBins>,
+    /// `(sampling slot, predicted class)` per emitted round with an
+    /// output, in round order (when [`Needs::slots`]).
+    pub slots: Option<Vec<(i64, u64)>>,
+    /// Per-picture `(equivalent, total)` counts in `Picture::ALL` order
+    /// (when [`Needs::pictures`]).
+    pub pictures: Option<Vec<(u64, u64)>>,
+}
+
+/// The scalar core shared by every workload's digest.
+fn base<O>(c: &Campaign<O>) -> CellDigest {
+    let mut emitted = 0u64;
+    let mut same_cycle = 0u64;
+    let mut steps_sum = 0u64;
+    let mut latency_sum = 0u64;
+    for r in c.emitted() {
+        emitted += 1;
+        if r.latency_cycles == 0 {
+            same_cycle += 1;
+        }
+        steps_sum += r.steps_executed as u64;
+        latency_sum += r.latency_cycles;
+    }
+    CellDigest {
+        emitted,
+        duration: c.duration,
+        power_cycles: c.power_cycles,
+        power_failures: c.power_failures,
+        app_energy: c.app_energy,
+        state_energy: c.state_energy,
+        quality_ok: 0,
+        quality_total: 0,
+        same_cycle,
+        steps_sum,
+        latency_sum,
+        latency_bins: None,
+        slots: None,
+        pictures: None,
+    }
+}
+
+fn latency_bins<O>(c: &Campaign<O>) -> LatencyBins {
+    // Same code path as the batch histograms: float binning on integer
+    // latencies is not safely re-derivable by integer arithmetic.
+    let h = metrics::latency_histogram(c, LATENCY_CYCLES);
+    LatencyBins { bins: h.bins, overflow: h.overflow }
+}
+
+impl CellDigest {
+    /// Digest a HAR campaign. `period` is the resolved scenario's
+    /// sampling period (slot alignment for coherence).
+    pub fn of_har(c: &Campaign<HarOutput>, period: f64, needs: Needs) -> CellDigest {
+        let mut d = base(c);
+        let mut slots = needs.slots.then(Vec::new);
+        for r in c.emitted() {
+            if let Some(out) = &r.output {
+                d.quality_total += 1;
+                if out.predicted == out.truth as usize {
+                    d.quality_ok += 1;
+                }
+                if let Some(slots) = &mut slots {
+                    slots.push(((r.acquired_at / period).floor() as i64, out.predicted as u64));
+                }
+            }
+        }
+        d.slots = slots;
+        if needs.latency {
+            d.latency_bins = Some(latency_bins(c));
+        }
+        d
+    }
+
+    /// Digest an imaging campaign (quality = §6.3 corner equivalence
+    /// against the memoised full-precision reference).
+    pub fn of_img(c: &Campaign<CornerOutput>, needs: Needs) -> CellDigest {
+        let mut d = base(c);
+        let mut pictures = needs.pictures.then(|| vec![(0u64, 0u64); Picture::ALL.len()]);
+        for r in c.emitted() {
+            if let Some(out) = &r.output {
+                d.quality_total += 1;
+                let reference = metrics::harris_reference(out.picture, out.picture_seed, EVAL_SIZE);
+                let ok = equivalent(&reference, &out.corners);
+                if ok {
+                    d.quality_ok += 1;
+                }
+                if let Some(pics) = &mut pictures {
+                    if let Some(pi) =
+                        Picture::ALL.iter().position(|p| p.name() == out.picture.name())
+                    {
+                        pics[pi].1 += 1;
+                        if ok {
+                            pics[pi].0 += 1;
+                        }
+                    }
+                }
+            }
+        }
+        d.pictures = pictures;
+        if needs.latency {
+            d.latency_bins = Some(latency_bins(c));
+        }
+        d
+    }
+
+    /// Digest an audio campaign.
+    pub fn of_audio(c: &Campaign<AudioOutput>, needs: Needs) -> CellDigest {
+        let mut d = base(c);
+        for r in c.emitted() {
+            if let Some(out) = &r.output {
+                d.quality_total += 1;
+                if out.predicted == out.truth {
+                    d.quality_ok += 1;
+                }
+            }
+        }
+        if needs.latency {
+            d.latency_bins = Some(latency_bins(c));
+        }
+        d
+    }
+
+    /// Quality as a fraction — exactly `emitted_fraction`'s arithmetic.
+    pub fn quality(&self) -> f64 {
+        if self.quality_total == 0 {
+            0.0
+        } else {
+            self.quality_ok as f64 / self.quality_total as f64
+        }
+    }
+
+    /// Same-cycle delivery fraction — exactly `same_cycle_fraction`.
+    pub fn same_cycle_fraction(&self) -> f64 {
+        if self.emitted == 0 {
+            0.0
+        } else {
+            self.same_cycle as f64 / self.emitted as f64
+        }
+    }
+
+    /// Emitted results per second — exactly `Campaign::throughput`.
+    pub fn throughput(&self) -> f64 {
+        if self.duration == 0.0 {
+            return 0.0;
+        }
+        self.emitted as f64 / self.duration
+    }
+
+    /// Mean of an integer per-round quantity over emitted rounds —
+    /// bitwise equal to the batch `mean(...)` fold because integer sums
+    /// below 2^53 are exact in f64.
+    pub fn mean_over_emitted(&self, sum: u64) -> f64 {
+        if self.emitted == 0 {
+            0.0
+        } else {
+            sum as f64 / self.emitted as f64
+        }
+    }
+
+    /// Does this digest carry every payload `needs` asks for? A record
+    /// that does not (foreign writer, conflicting format) is treated as
+    /// absent rather than folded.
+    pub fn satisfies(&self, needs: Needs) -> bool {
+        (!needs.slots || self.slots.is_some())
+            && (!needs.latency
+                || self
+                    .latency_bins
+                    .as_ref()
+                    .is_some_and(|lb| lb.bins.len() == LATENCY_CYCLES))
+            && (!needs.pictures
+                || self.pictures.as_ref().is_some_and(|p| p.len() == Picture::ALL.len()))
+    }
+
+    // -----------------------------------------------------------------
+    // JSON (the store's record payload body).
+    // -----------------------------------------------------------------
+
+    pub fn to_json(&self) -> Value {
+        let mut fields: Vec<(&str, Value)> = vec![
+            ("emitted", (self.emitted as f64).into()),
+            ("duration", self.duration.into()),
+            ("cycles", (self.power_cycles as f64).into()),
+            ("failures", (self.power_failures as f64).into()),
+            ("app", self.app_energy.into()),
+            ("state", self.state_energy.into()),
+            ("q_ok", (self.quality_ok as f64).into()),
+            ("q_total", (self.quality_total as f64).into()),
+            ("same", (self.same_cycle as f64).into()),
+            ("steps", (self.steps_sum as f64).into()),
+            ("lat", (self.latency_sum as f64).into()),
+        ];
+        if let Some(lb) = &self.latency_bins {
+            fields.push(("bins", Value::u64s(&lb.bins)));
+            fields.push(("overflow", (lb.overflow as f64).into()));
+        }
+        if let Some(slots) = &self.slots {
+            let flat: Vec<f64> =
+                slots.iter().flat_map(|&(s, p)| [s as f64, p as f64]).collect();
+            fields.push(("slots", Value::nums(&flat)));
+        }
+        if let Some(pics) = &self.pictures {
+            let flat: Vec<u64> = pics.iter().flat_map(|&(ok, t)| [ok, t]).collect();
+            fields.push(("pics", Value::u64s(&flat)));
+        }
+        Value::obj(fields)
+    }
+
+    pub fn from_json(v: &Value) -> Result<CellDigest, String> {
+        let o = v.as_obj().ok_or("cell digest must be a JSON object")?;
+        let num = |k: &str| -> Result<f64, String> {
+            o.get(k)
+                .and_then(Value::as_f64)
+                .ok_or_else(|| format!("digest missing numeric field '{k}'"))
+        };
+        let uint = |k: &str| -> Result<u64, String> {
+            o.get(k)
+                .and_then(Value::as_u64)
+                .ok_or_else(|| format!("digest missing integer field '{k}'"))
+        };
+        let latency_bins = match o.get("bins") {
+            Some(v) => Some(LatencyBins {
+                bins: v
+                    .as_u64s()
+                    .ok_or("digest 'bins' must be a non-negative integer array")?,
+                overflow: uint("overflow")?,
+            }),
+            None => None,
+        };
+        let slots = match o.get("slots") {
+            Some(v) => Some(
+                pair_list(v, |s, p| Some((as_i64(s)?, p.as_u64()?)))
+                    .ok_or("digest 'slots' must be an even array of integers")?,
+            ),
+            None => None,
+        };
+        let pictures = match o.get("pics") {
+            Some(v) => Some(
+                pair_list(v, |ok, t| Some((ok.as_u64()?, t.as_u64()?)))
+                    .ok_or("digest 'pics' must be an even array of counts")?,
+            ),
+            None => None,
+        };
+        Ok(CellDigest {
+            emitted: uint("emitted")?,
+            duration: num("duration")?,
+            power_cycles: uint("cycles")?,
+            power_failures: uint("failures")?,
+            app_energy: num("app")?,
+            state_energy: num("state")?,
+            quality_ok: uint("q_ok")?,
+            quality_total: uint("q_total")?,
+            same_cycle: uint("same")?,
+            steps_sum: uint("steps")?,
+            latency_sum: uint("lat")?,
+            latency_bins,
+            slots,
+            pictures,
+        })
+    }
+}
+
+fn as_i64(v: &Value) -> Option<i64> {
+    let f = v.as_f64()?;
+    (f.fract() == 0.0 && f.abs() <= 9.0e15).then_some(f as i64)
+}
+
+fn pair_list<T>(v: &Value, f: impl Fn(&Value, &Value) -> Option<T>) -> Option<Vec<T>> {
+    let arr = v.as_arr()?;
+    if arr.len() % 2 != 0 {
+        return None;
+    }
+    arr.chunks(2).map(|c| f(&c[0], &c[1])).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    fn sample(needs: Needs) -> CellDigest {
+        CellDigest {
+            emitted: 12,
+            duration: 900.0,
+            power_cycles: 34,
+            power_failures: 33,
+            app_energy: 1.25e-3,
+            state_energy: 2.5e-4,
+            quality_ok: 10,
+            quality_total: 12,
+            same_cycle: 9,
+            steps_sum: 840,
+            latency_sum: 17,
+            latency_bins: needs.latency.then(|| LatencyBins {
+                bins: vec![0; LATENCY_CYCLES],
+                overflow: 2,
+            }),
+            slots: needs.slots.then(|| vec![(0, 3), (1, 3), (5, 0)]),
+            pictures: needs
+                .pictures
+                .then(|| vec![(1u64, 2u64); Picture::ALL.len()]),
+        }
+    }
+
+    #[test]
+    fn json_round_trip_preserves_every_field() {
+        for needs in [
+            Needs::none(),
+            Needs { slots: true, latency: false, pictures: false },
+            Needs { slots: false, latency: true, pictures: false },
+            Needs { slots: false, latency: false, pictures: true },
+            Needs { slots: true, latency: true, pictures: true },
+        ] {
+            let d = sample(needs);
+            let text = json::to_string(&d.to_json());
+            let back = CellDigest::from_json(&json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back, d);
+            assert!(back.satisfies(needs));
+        }
+    }
+
+    #[test]
+    fn satisfies_rejects_missing_or_misshapen_payloads() {
+        let d = sample(Needs::none());
+        assert!(d.satisfies(Needs::none()));
+        assert!(!d.satisfies(Needs { slots: true, latency: false, pictures: false }));
+        let mut short = sample(Needs { slots: false, latency: true, pictures: false });
+        short.latency_bins.as_mut().unwrap().bins.pop();
+        assert!(!short.satisfies(Needs { slots: false, latency: true, pictures: false }));
+    }
+
+    #[test]
+    fn from_json_rejects_malformed_digests() {
+        for text in [
+            "{}",
+            "[1,2]",
+            r#"{"emitted":-1}"#,
+            r#"{"emitted":1,"duration":1.0,"cycles":1,"failures":0,"app":0,"state":0,
+                "q_ok":1,"q_total":1,"same":1,"steps":1,"lat":0,"slots":[1]}"#,
+        ] {
+            let v = json::parse(text).unwrap();
+            assert!(CellDigest::from_json(&v).is_err(), "{text}");
+        }
+    }
+
+    #[test]
+    fn derived_fractions_match_metric_arithmetic() {
+        let d = sample(Needs::none());
+        assert_eq!(d.quality(), 10.0 / 12.0);
+        assert_eq!(d.same_cycle_fraction(), 9.0 / 12.0);
+        assert_eq!(d.throughput(), 12.0 / 900.0);
+        assert_eq!(d.mean_over_emitted(d.steps_sum), 840.0 / 12.0);
+        let empty = CellDigest { emitted: 0, quality_total: 0, ..sample(Needs::none()) };
+        assert_eq!(empty.same_cycle_fraction(), 0.0);
+        assert_eq!(empty.quality(), 0.0);
+        assert_eq!(empty.mean_over_emitted(0), 0.0);
+    }
+}

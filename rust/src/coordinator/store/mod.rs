@@ -1,0 +1,646 @@
+//! The persistent, resumable experiment store.
+//!
+//! A store is **one append-only file** of checksummed records (see
+//! [`record`]) holding labelled experiments and their per-cell result
+//! digests — the shape `bsdinis/bencher` gives benchmark campaigns
+//! (labelled experiments, status/table/export views, dedup on re-run),
+//! rebuilt dependency-free so tier-1 keeps building with zero crates.
+//! An optional `sqlite` feature (see `Cargo.toml`) can push a dump into
+//! rusqlite; the built-in `export --format sql` emits the same schema as
+//! plain SQL text for `sqlite3 runs.db < runs.sql`.
+//!
+//! Two record kinds, both JSON payloads:
+//!
+//! * `{"k":"exp","hash":h,"label":l,"scenario":{...}}` — registers a
+//!   campaign grid: `hash` identifies the resolved scenario (see
+//!   [`grid_hash`]) and `scenario` is its full JSON, kept so `aic store
+//!   table` can reconstruct cell identities without the original file.
+//! * `{"k":"cell","hash":h,"idx":i,"d":{...}}` — the digest of grid cell
+//!   `i` (plan order) of experiment `h`.
+//!
+//! **Dedup key:** `(hash, idx)`. The first committed record for a key
+//! wins; a byte-identical re-append counts as a duplicate, a differing
+//! one as a conflict — neither is ever double-counted. Resume falls out
+//! of dedup: a re-run skips every cell whose key is already committed.
+//!
+//! **Crash safety:** appends are one `write_all` of a length-prefixed,
+//! CRC-checked frame. `open` tolerates a torn tail (and any garbage
+//! after the valid prefix): it indexes the longest valid prefix and the
+//! next append truncates the tail away. Only digest *offsets* are
+//! indexed — digests are re-read lazily — so open cost is one sequential
+//! scan and resident state is O(cells) keys, not O(file).
+
+pub mod digest;
+pub mod record;
+
+// `sqlite` is a declared-but-empty feature by the same policy as `pjrt`
+// (see Cargo.toml): enabling it requires adding the rusqlite dependency
+// locally, which offline tier-1 builds must never resolve.
+#[cfg(feature = "sqlite")]
+pub mod sqlite;
+
+pub use digest::{CellDigest, LatencyBins, Needs};
+pub use record::{encode_record, MAGIC, MAX_RECORD};
+
+use crate::coordinator::scenario::{self, Scenario};
+use crate::coordinator::sink::TableData;
+use crate::util::json::{self, Value};
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
+use std::fs::{File, OpenOptions};
+use std::io::{self, BufReader, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+/// FNV-1a 64-bit hash.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Identity hash of a **resolved** scenario's campaign grid.
+///
+/// Hashes the canonical (sorted-key, compact) JSON of everything that
+/// determines cell results — workload, axes, horizon, period, training —
+/// plus the *effective* engine kind per device (the `AIC_ENGINE`
+/// fallback changes results without appearing in the scenario JSON) and
+/// the digest payload shape ([`Needs`], so records are only reused by
+/// projections they can serve). Presentation-only fields (`name`,
+/// `title`, `projection`) and the already-applied `fast` block are
+/// excluded: renaming a scenario must not orphan its committed cells.
+pub fn grid_hash(s: &Scenario, needs: Needs) -> u64 {
+    let Value::Obj(mut doc) = s.to_json() else {
+        unreachable!("Scenario::to_json always returns an object");
+    };
+    for k in ["name", "title", "projection", "fast"] {
+        doc.remove(k);
+    }
+    doc.insert(
+        "engines".into(),
+        Value::Arr(
+            s.devices
+                .iter()
+                .map(|d| Value::Str(d.engine_config(s.horizon).kind.label().to_string()))
+                .collect(),
+        ),
+    );
+    doc.insert(
+        "needs".into(),
+        Value::obj(vec![
+            ("slots", needs.slots.into()),
+            ("latency", needs.latency.into()),
+            ("pictures", needs.pictures.into()),
+        ]),
+    );
+    doc.insert("store_format".into(), Value::Num(1.0));
+    fnv1a(json::to_string(&Value::Obj(doc)).as_bytes())
+}
+
+/// One registered experiment (campaign grid) in a store.
+#[derive(Clone, Debug)]
+pub struct Experiment {
+    pub label: String,
+    pub hash: u64,
+    /// The resolved scenario's JSON as committed.
+    pub scenario: Value,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct CellLoc {
+    offset: u64,
+    len: u32,
+    crc: u32,
+}
+
+/// An open experiment store.
+pub struct Store {
+    path: PathBuf,
+    file: File,
+    /// Logical end of file: one past the last valid record.
+    end: u64,
+    /// Physical bytes past `end` left by a torn tail (diagnostic; the
+    /// next append truncates them).
+    salvaged_bytes: u64,
+    needs_truncate: bool,
+    index: HashMap<(u64, u32), CellLoc>,
+    experiments: Vec<Experiment>,
+    duplicates: u64,
+    conflicts: u64,
+}
+
+impl Store {
+    /// Open (or create) the store at `path`, indexing the longest valid
+    /// record prefix. A file that exists but does not start with the
+    /// store magic is refused — never silently clobbered.
+    pub fn open(path: &Path) -> io::Result<Store> {
+        let mut file =
+            OpenOptions::new().read(true).write(true).create(true).open(path)?;
+        let file_len = file.metadata()?.len();
+        if file_len == 0 {
+            file.write_all(MAGIC)?;
+            return Ok(Store {
+                path: path.to_path_buf(),
+                file,
+                end: MAGIC.len() as u64,
+                salvaged_bytes: 0,
+                needs_truncate: false,
+                index: HashMap::new(),
+                experiments: Vec::new(),
+                duplicates: 0,
+                conflicts: 0,
+            });
+        }
+        if file_len < MAGIC.len() as u64 {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("{}: not an aic store (short magic)", path.display()),
+            ));
+        }
+        let mut magic = [0u8; 8];
+        file.seek(SeekFrom::Start(0))?;
+        file.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("{}: not an aic store (bad magic)", path.display()),
+            ));
+        }
+        let mut index: HashMap<(u64, u32), CellLoc> = HashMap::new();
+        let mut experiments: Vec<Experiment> = Vec::new();
+        let mut duplicates = 0u64;
+        let mut conflicts = 0u64;
+        let end = {
+            let mut reader = BufReader::new(&mut file);
+            record::scan(&mut reader, MAGIC.len() as u64, |frame| {
+                let Ok(text) = std::str::from_utf8(&frame.payload) else {
+                    return false;
+                };
+                let Ok(v) = json::parse(text) else { return false };
+                let Some(o) = v.as_obj() else { return false };
+                match o.get("k").and_then(Value::as_str) {
+                    Some("exp") => {
+                        let hash = o.get("hash").and_then(Value::as_str).and_then(parse_hash);
+                        let label = o.get("label").and_then(Value::as_str);
+                        let scenario = o.get("scenario");
+                        let (Some(hash), Some(label), Some(scenario)) =
+                            (hash, label, scenario)
+                        else {
+                            return false;
+                        };
+                        if !experiments.iter().any(|e| e.hash == hash) {
+                            experiments.push(Experiment {
+                                label: label.to_string(),
+                                hash,
+                                scenario: scenario.clone(),
+                            });
+                        }
+                        true
+                    }
+                    Some("cell") => {
+                        let hash = o.get("hash").and_then(Value::as_str).and_then(parse_hash);
+                        let idx = o
+                            .get("idx")
+                            .and_then(Value::as_u64)
+                            .filter(|&i| i <= u32::MAX as u64);
+                        let (Some(hash), Some(idx)) = (hash, idx) else { return false };
+                        if o.get("d").and_then(Value::as_obj).is_none() {
+                            return false;
+                        }
+                        match index.entry((hash, idx as u32)) {
+                            Entry::Vacant(e) => {
+                                e.insert(CellLoc {
+                                    offset: frame.offset,
+                                    len: frame.len,
+                                    crc: frame.crc,
+                                });
+                            }
+                            Entry::Occupied(prev) => {
+                                // First record wins, always: a re-run
+                                // must never double-count a cell.
+                                let p = prev.get();
+                                if p.len == frame.len && p.crc == frame.crc {
+                                    duplicates += 1;
+                                } else {
+                                    conflicts += 1;
+                                }
+                            }
+                        }
+                        true
+                    }
+                    // Unknown record kind (newer writer): skip, keep
+                    // scanning — the checksum already vouched for it.
+                    _ => true,
+                }
+            })?
+        };
+        let salvaged_bytes = file_len - end;
+        Ok(Store {
+            path: path.to_path_buf(),
+            file,
+            end,
+            salvaged_bytes,
+            needs_truncate: salvaged_bytes > 0,
+            index,
+            experiments,
+            duplicates,
+            conflicts,
+        })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Experiments in commit order.
+    pub fn experiments(&self) -> &[Experiment] {
+        &self.experiments
+    }
+
+    /// Total committed cell records (across experiments).
+    pub fn cell_count(&self) -> usize {
+        self.index.len()
+    }
+
+    /// Committed cell records for one experiment.
+    pub fn cell_count_for(&self, hash: u64) -> usize {
+        self.index.keys().filter(|(h, _)| *h == hash).count()
+    }
+
+    /// Sorted committed cell indices for one experiment.
+    pub fn cell_indices(&self, hash: u64) -> Vec<u32> {
+        let mut out: Vec<u32> =
+            self.index.keys().filter(|(h, _)| *h == hash).map(|(_, i)| *i).collect();
+        out.sort_unstable();
+        out
+    }
+
+    /// Byte-identical re-appends observed on open (idempotent writers).
+    pub fn duplicates(&self) -> u64 {
+        self.duplicates
+    }
+
+    /// Differing records for an already-committed key observed on open
+    /// (the first record stayed authoritative).
+    pub fn conflicts(&self) -> u64 {
+        self.conflicts
+    }
+
+    /// Torn-tail bytes past the valid prefix found on open.
+    pub fn salvaged_bytes(&self) -> u64 {
+        self.salvaged_bytes
+    }
+
+    pub fn has_cell(&self, hash: u64, idx: u32) -> bool {
+        self.index.contains_key(&(hash, idx))
+    }
+
+    /// Read one committed digest (seek + re-parse; digests are not kept
+    /// resident).
+    pub fn read_cell(&mut self, hash: u64, idx: u32) -> io::Result<Option<CellDigest>> {
+        let Some(loc) = self.index.get(&(hash, idx)).copied() else {
+            return Ok(None);
+        };
+        self.file.seek(SeekFrom::Start(loc.offset + 8))?;
+        let mut payload = vec![0u8; loc.len as usize];
+        self.file.read_exact(&mut payload)?;
+        // The frame was checksum-valid on open; failing here means the
+        // file changed underneath us.
+        let invalid = |m: String| io::Error::new(io::ErrorKind::InvalidData, m);
+        let text = std::str::from_utf8(&payload)
+            .map_err(|e| invalid(format!("store record not UTF-8: {e}")))?;
+        let v = json::parse(text).map_err(|e| invalid(format!("store record: {e:?}")))?;
+        CellDigest::from_json(v.get("d")).map(Some).map_err(invalid)
+    }
+
+    /// Register an experiment (no-op if `hash` is already present; the
+    /// first label sticks).
+    pub fn ensure_experiment(
+        &mut self,
+        label: &str,
+        hash: u64,
+        scenario: &Scenario,
+    ) -> io::Result<()> {
+        if self.experiments.iter().any(|e| e.hash == hash) {
+            return Ok(());
+        }
+        let scenario_json = scenario.to_json();
+        let payload = Value::obj(vec![
+            ("k", "exp".into()),
+            ("hash", format!("{hash:016x}").as_str().into()),
+            ("label", label.into()),
+            ("scenario", scenario_json.clone()),
+        ]);
+        self.append_payload(&payload)?;
+        self.experiments.push(Experiment {
+            label: label.to_string(),
+            hash,
+            scenario: scenario_json,
+        });
+        Ok(())
+    }
+
+    /// Commit one cell digest. Returns `false` (writing nothing) when
+    /// the key is already committed — the resume/dedup path.
+    pub fn append_cell(
+        &mut self,
+        hash: u64,
+        idx: u32,
+        digest: &CellDigest,
+    ) -> io::Result<bool> {
+        if self.has_cell(hash, idx) {
+            return Ok(false);
+        }
+        let payload = Value::obj(vec![
+            ("k", "cell".into()),
+            ("hash", format!("{hash:016x}").as_str().into()),
+            ("idx", (idx as f64).into()),
+            ("d", digest.to_json()),
+        ]);
+        let loc = self.append_payload(&payload)?;
+        self.index.insert((hash, idx), loc);
+        Ok(true)
+    }
+
+    fn append_payload(&mut self, payload: &Value) -> io::Result<CellLoc> {
+        if self.needs_truncate {
+            // Self-heal: drop the torn tail before the first new record.
+            self.file.set_len(self.end)?;
+            self.needs_truncate = false;
+        }
+        let bytes = json::to_string(payload).into_bytes();
+        let frame = encode_record(&bytes);
+        let crc = record::crc32(&bytes);
+        self.file.seek(SeekFrom::Start(self.end))?;
+        self.file.write_all(&frame)?;
+        let loc = CellLoc { offset: self.end, len: bytes.len() as u32, crc };
+        self.end += frame.len() as u64;
+        Ok(loc)
+    }
+
+    /// Flush committed records to stable storage.
+    pub fn sync(&mut self) -> io::Result<()> {
+        self.file.sync_data()
+    }
+
+    // -----------------------------------------------------------------
+    // Views (`aic store status|table|export`).
+    // -----------------------------------------------------------------
+
+    /// The status view: one row per experiment, plus a file-integrity
+    /// table.
+    pub fn status_tables(&self) -> Vec<TableData> {
+        let mut exps = TableData::new(
+            "store_status",
+            &format!("experiments in {}", self.path.display()),
+            &["label", "hash", "scenario", "cells", "grid"],
+        );
+        for e in &self.experiments {
+            let name = e
+                .scenario
+                .get("name")
+                .and_then(Value::as_str)
+                .unwrap_or("?")
+                .to_string();
+            let grid = Scenario::from_json(&e.scenario)
+                .map(|s| s.campaign_cell_count().to_string())
+                .unwrap_or_else(|_| "?".into());
+            exps.push(vec![
+                e.label.clone(),
+                format!("{:016x}", e.hash),
+                name,
+                self.cell_count_for(e.hash).to_string(),
+                grid,
+            ]);
+        }
+        let mut integrity = TableData::new(
+            "store_integrity",
+            "store file integrity",
+            &["bytes", "experiments", "cells", "duplicates", "conflicts", "salvaged bytes"],
+        );
+        integrity.push(vec![
+            self.end.to_string(),
+            self.experiments.len().to_string(),
+            self.index.len().to_string(),
+            self.duplicates.to_string(),
+            self.conflicts.to_string(),
+            self.salvaged_bytes.to_string(),
+        ]);
+        vec![exps, integrity]
+    }
+
+    /// Resolve `selector` (label, full hash, or hash prefix) to an
+    /// experiment; with no selector the store must hold exactly one.
+    pub fn find_experiment(&self, selector: Option<&str>) -> Result<&Experiment, String> {
+        match selector {
+            None => match self.experiments.len() {
+                0 => Err("store holds no experiments".into()),
+                1 => Ok(&self.experiments[0]),
+                n => Err(format!(
+                    "store holds {n} experiments — select one with --label \
+                     ({})",
+                    self.experiments
+                        .iter()
+                        .map(|e| e.label.as_str())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )),
+            },
+            Some(sel) => self
+                .experiments
+                .iter()
+                .find(|e| e.label == sel || format!("{:016x}", e.hash).starts_with(sel))
+                .ok_or_else(|| format!("no experiment labelled or hashed '{sel}'")),
+        }
+    }
+
+    /// The per-cell table of one experiment — same columns (and, for a
+    /// fully committed `cells`-projection grid, the same bytes) as the
+    /// sweep's own cells table. Missing cells are simply absent rows.
+    pub fn cells_table(&mut self, selector: Option<&str>) -> Result<TableData, String> {
+        let (hash, sc) = {
+            let exp = self.find_experiment(selector)?;
+            (exp.hash, Scenario::from_json(&exp.scenario)?)
+        };
+        let mut t = TableData::new(&sc.name, &sc.title, &scenario::CELLS_HEADER);
+        let grid = sc.campaign_cell_count();
+        for idx in self.cell_indices(hash) {
+            if idx as usize >= grid {
+                continue; // foreign record beyond this grid
+            }
+            let d = self
+                .read_cell(hash, idx)
+                .map_err(|e| format!("cell {idx}: {e}"))?
+                .expect("indexed cell must read back");
+            let cell = sc.cell_at(idx as usize);
+            t.push(scenario::cells_row(
+                &cell,
+                d.emitted,
+                d.power_cycles,
+                d.power_failures,
+                d.quality(),
+                d.same_cycle_fraction(),
+                d.app_energy,
+                d.state_energy,
+            ));
+        }
+        Ok(t)
+    }
+
+    /// A plain-SQL dump of the whole store (schema + rows), loadable
+    /// with `sqlite3 runs.db < runs.sql` — the dependency-free half of
+    /// the bencher-style export; the `sqlite` feature can ingest the
+    /// same schema natively.
+    pub fn sql_dump(&mut self) -> io::Result<String> {
+        let mut out = String::new();
+        out.push_str("-- aic experiment store dump; load with: sqlite3 runs.db < dump.sql\n");
+        out.push_str("BEGIN;\n");
+        out.push_str(
+            "CREATE TABLE IF NOT EXISTS experiments (\
+             hash TEXT PRIMARY KEY, label TEXT, scenario TEXT);\n",
+        );
+        out.push_str(
+            "CREATE TABLE IF NOT EXISTS cells (\
+             hash TEXT, idx INTEGER, digest TEXT, PRIMARY KEY (hash, idx));\n",
+        );
+        for e in &self.experiments {
+            out.push_str(&format!(
+                "INSERT OR IGNORE INTO experiments VALUES ('{:016x}', '{}', '{}');\n",
+                e.hash,
+                sql_escape(&e.label),
+                sql_escape(&json::to_string(&e.scenario)),
+            ));
+        }
+        let mut keys: Vec<(u64, u32)> = self.index.keys().copied().collect();
+        keys.sort_unstable();
+        for (hash, idx) in keys {
+            let d = self
+                .read_cell(hash, idx)?
+                .expect("indexed cell must read back");
+            out.push_str(&format!(
+                "INSERT OR IGNORE INTO cells VALUES ('{hash:016x}', {idx}, '{}');\n",
+                sql_escape(&json::to_string(&d.to_json())),
+            ));
+        }
+        out.push_str("COMMIT;\n");
+        Ok(out)
+    }
+}
+
+fn parse_hash(s: &str) -> Option<u64> {
+    (s.len() == 16).then(|| u64::from_str_radix(s, 16).ok()).flatten()
+}
+
+fn sql_escape(s: &str) -> String {
+    s.replace('\'', "''")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::scenario::Projection;
+
+    fn temp_path(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("aic_store_{tag}_{}.aic", std::process::id()))
+    }
+
+    fn digest(seed: u64) -> CellDigest {
+        CellDigest {
+            emitted: 10 + seed,
+            duration: 900.0,
+            power_cycles: 3 * seed,
+            power_failures: seed,
+            app_energy: 1e-3 * seed as f64,
+            state_energy: 1e-4,
+            quality_ok: seed,
+            quality_total: 10 + seed,
+            same_cycle: seed,
+            steps_sum: 100 * seed,
+            latency_sum: seed,
+            latency_bins: None,
+            slots: None,
+            pictures: None,
+        }
+    }
+
+    #[test]
+    fn round_trips_experiments_and_cells_across_reopen() {
+        let path = temp_path("roundtrip");
+        let _ = std::fs::remove_file(&path);
+        let sc = Scenario::new("t", crate::coordinator::scenario::WorkloadSpec::Audio);
+        let hash = grid_hash(&sc, Needs::none());
+        {
+            let mut st = Store::open(&path).unwrap();
+            st.ensure_experiment("first", hash, &sc).unwrap();
+            assert!(st.append_cell(hash, 0, &digest(1)).unwrap());
+            assert!(st.append_cell(hash, 2, &digest(2)).unwrap());
+            // Dedup: second append of a committed key writes nothing.
+            assert!(!st.append_cell(hash, 0, &digest(9)).unwrap());
+            st.sync().unwrap();
+        }
+        let mut st = Store::open(&path).unwrap();
+        assert_eq!(st.experiments().len(), 1);
+        assert_eq!(st.experiments()[0].label, "first");
+        assert_eq!(st.cell_count_for(hash), 2);
+        assert_eq!(st.cell_indices(hash), vec![0, 2]);
+        assert_eq!(st.salvaged_bytes(), 0);
+        // First record stays authoritative.
+        assert_eq!(st.read_cell(hash, 0).unwrap().unwrap(), digest(1));
+        assert_eq!(st.read_cell(hash, 2).unwrap().unwrap(), digest(2));
+        assert_eq!(st.read_cell(hash, 1).unwrap(), None);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn torn_tail_is_salvaged_and_truncated_on_next_append() {
+        let path = temp_path("torn");
+        let _ = std::fs::remove_file(&path);
+        let sc = Scenario::new("t", crate::coordinator::scenario::WorkloadSpec::Audio);
+        let hash = grid_hash(&sc, Needs::none());
+        {
+            let mut st = Store::open(&path).unwrap();
+            st.ensure_experiment("x", hash, &sc).unwrap();
+            st.append_cell(hash, 0, &digest(1)).unwrap();
+        }
+        // A crash mid-append leaves a torn frame.
+        use std::io::Write as _;
+        let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(&[0x55; 13]).unwrap();
+        drop(f);
+        {
+            let mut st = Store::open(&path).unwrap();
+            assert_eq!(st.salvaged_bytes(), 13);
+            assert_eq!(st.cell_count_for(hash), 1);
+            st.append_cell(hash, 1, &digest(2)).unwrap();
+        }
+        let mut st = Store::open(&path).unwrap();
+        assert_eq!(st.salvaged_bytes(), 0, "append must truncate the torn tail");
+        assert_eq!(st.cell_indices(hash), vec![0, 1]);
+        assert_eq!(st.read_cell(hash, 1).unwrap().unwrap(), digest(2));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn refuses_files_with_foreign_magic() {
+        let path = temp_path("magic");
+        std::fs::write(&path, b"NOTASTORE-AT-ALL").unwrap();
+        assert!(Store::open(&path).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn grid_hash_tracks_identity_not_presentation() {
+        let sc = Scenario::new("a", crate::coordinator::scenario::WorkloadSpec::Audio);
+        let base = grid_hash(&sc, Needs::none());
+        let renamed = sc.clone().with_title("pretty").with_projection(Projection::Cells);
+        assert_eq!(grid_hash(&renamed, Needs::none()), base);
+        let other = sc.clone().with_seeds(vec![1, 2]);
+        assert_ne!(grid_hash(&other, Needs::none()), base);
+        assert_ne!(
+            grid_hash(&sc, Needs { slots: true, latency: false, pictures: false }),
+            base
+        );
+    }
+}

@@ -1,0 +1,218 @@
+//! Crash-safe record framing for the experiment store.
+//!
+//! A store file is [`MAGIC`] followed by a flat sequence of records:
+//!
+//! ```text
+//! [payload len: u32 LE][CRC-32 of payload: u32 LE][payload bytes]
+//! ```
+//!
+//! Appends are a single `write_all` of a fully assembled frame, so the
+//! only states a crash can leave behind are "record absent" and "record
+//! torn at the tail". [`scan`] recovers the longest valid prefix: the
+//! first frame with a truncated header/payload, a zero or oversized
+//! length, a checksum mismatch, or a payload the caller rejects ends the
+//! scan, and everything after it is a torn tail the writer may truncate
+//! away on its next append.
+
+use std::io::{self, Read};
+
+/// File signature; bump the trailing digit on incompatible layout changes.
+pub const MAGIC: &[u8; 8] = b"AICSTOR1";
+
+/// Upper bound on a single record payload (16 MiB). Lengths above this
+/// are rejected *before* any buffer is allocated, so a flipped length
+/// byte in a torn tail cannot make `open` allocate gigabytes.
+pub const MAX_RECORD: u32 = 1 << 24;
+
+const CRC_TABLE: [u32; 256] = crc_table();
+
+/// CRC-32 (IEEE 802.3, reflected polynomial 0xEDB88320) lookup table.
+const fn crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+/// CRC-32 checksum of `data`.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in data {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+/// Frame `payload` as one store record. Exposed so the fuzz tests can
+/// craft byte-exact duplicate/conflicting records.
+pub fn encode_record(payload: &[u8]) -> Vec<u8> {
+    assert!(
+        !payload.is_empty() && payload.len() <= MAX_RECORD as usize,
+        "record payload must be 1..={MAX_RECORD} bytes"
+    );
+    let mut out = Vec::with_capacity(8 + payload.len());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&crc32(payload).to_le_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+/// One checksum-valid frame recovered by [`scan`].
+pub struct Frame {
+    /// Byte offset of the frame header within the file.
+    pub offset: u64,
+    /// Payload length in bytes.
+    pub len: u32,
+    /// Stored (and verified) payload checksum.
+    pub crc: u32,
+    /// The payload bytes.
+    pub payload: Vec<u8>,
+}
+
+/// Scan records sequentially from `r`, which must be positioned at byte
+/// offset `start` of the file (just past the magic). `sink` is called per
+/// checksum-valid frame and returns whether the payload is semantically
+/// acceptable; a rejected frame ends the valid prefix exactly like a torn
+/// one. Returns the byte offset one past the last accepted frame.
+pub fn scan<R: Read>(
+    r: &mut R,
+    start: u64,
+    mut sink: impl FnMut(Frame) -> bool,
+) -> io::Result<u64> {
+    let mut offset = start;
+    loop {
+        let mut header = [0u8; 8];
+        if !read_full(r, &mut header)? {
+            return Ok(offset);
+        }
+        let len = u32::from_le_bytes([header[0], header[1], header[2], header[3]]);
+        let crc = u32::from_le_bytes([header[4], header[5], header[6], header[7]]);
+        if len == 0 || len > MAX_RECORD {
+            return Ok(offset);
+        }
+        let mut payload = vec![0u8; len as usize];
+        if !read_full(r, &mut payload)? {
+            return Ok(offset);
+        }
+        if crc32(&payload) != crc {
+            return Ok(offset);
+        }
+        let next = offset + 8 + len as u64;
+        if !sink(Frame { offset, len, crc, payload }) {
+            return Ok(offset);
+        }
+        offset = next;
+    }
+}
+
+/// Fill `buf` from `r`; `Ok(false)` on EOF before the buffer is full
+/// (clean end of file or torn tail — the caller cannot tell, and does
+/// not need to).
+fn read_full<R: Read>(r: &mut R, buf: &mut [u8]) -> io::Result<bool> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => return Ok(false),
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_check_value() {
+        // The CRC-32 check value from the IEEE 802.3 specification.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    fn scan_all(bytes: &[u8]) -> (Vec<Vec<u8>>, u64) {
+        let mut frames = Vec::new();
+        let end = scan(&mut &bytes[..], 0, |f| {
+            frames.push(f.payload);
+            true
+        })
+        .unwrap();
+        (frames, end)
+    }
+
+    #[test]
+    fn frames_round_trip() {
+        let mut file = Vec::new();
+        file.extend_from_slice(&encode_record(b"alpha"));
+        file.extend_from_slice(&encode_record(b"beta"));
+        let (frames, end) = scan_all(&file);
+        assert_eq!(frames, vec![b"alpha".to_vec(), b"beta".to_vec()]);
+        assert_eq!(end, file.len() as u64);
+    }
+
+    #[test]
+    fn torn_tail_keeps_valid_prefix() {
+        let first = encode_record(b"alpha");
+        let mut file = first.clone();
+        file.extend_from_slice(&encode_record(b"beta"));
+        // Every truncation point inside the second record salvages only
+        // the first; truncations inside the first salvage nothing.
+        for cut in 0..file.len() {
+            let (frames, end) = scan_all(&file[..cut]);
+            if cut < first.len() {
+                assert!(frames.is_empty(), "cut {cut}");
+                assert_eq!(end, 0, "cut {cut}");
+            } else if cut < file.len() {
+                assert_eq!(frames.len(), 1, "cut {cut}");
+                assert_eq!(end, first.len() as u64, "cut {cut}");
+            }
+        }
+    }
+
+    #[test]
+    fn oversized_length_stops_without_allocating() {
+        let mut file = encode_record(b"alpha");
+        let tail_at = file.len() as u64;
+        file.extend_from_slice(&u32::MAX.to_le_bytes());
+        file.extend_from_slice(&[0u8; 4]);
+        let (frames, end) = scan_all(&file);
+        assert_eq!(frames.len(), 1);
+        assert_eq!(end, tail_at);
+    }
+
+    #[test]
+    fn checksum_mismatch_stops_scan() {
+        let mut file = encode_record(b"alpha");
+        let second_payload_at = file.len() + 8;
+        file.extend_from_slice(&encode_record(b"beta"));
+        file[second_payload_at] ^= 0x40;
+        let (frames, end) = scan_all(&file);
+        assert_eq!(frames, vec![b"alpha".to_vec()]);
+        assert_eq!(end, 13);
+    }
+
+    #[test]
+    fn rejected_payload_ends_prefix() {
+        let mut file = encode_record(b"good");
+        file.extend_from_slice(&encode_record(b"bad"));
+        let mut seen = 0;
+        let end = scan(&mut &file[..], 0, |f| {
+            seen += 1;
+            f.payload != b"bad"
+        })
+        .unwrap();
+        assert_eq!(seen, 2);
+        assert_eq!(end, (8 + 4) as u64);
+    }
+}

@@ -1,0 +1,31 @@
+//! Optional SQLite mirror of an experiment store (bencher-style).
+//!
+//! The append-only `.aic` file is the source of truth; this module only
+//! *mirrors* it into a relational database for ad-hoc querying, exactly
+//! like `bencher` keeps its runs in SQLite. It is compiled behind the
+//! `sqlite` cargo feature, which — like the accelerator backends — is
+//! declared with an empty dependency list so the default (offline,
+//! dependency-free) build never resolves `rusqlite`. To actually use
+//! it, add `rusqlite` to `[dependencies]` locally and build with
+//! `--features sqlite`; without the crate, enabling the feature is a
+//! compile error by design rather than a silent network fetch.
+//!
+//! Everything the mirror writes is also reachable without the feature:
+//! `aic store export --format sql` emits the identical schema as a SQL
+//! text dump for `sqlite3 runs.db < runs.sql`.
+
+use crate::coordinator::store::Store;
+use std::io;
+
+/// Mirror `store` into a SQLite database at `db_path` using the same
+/// schema as [`Store::sql_dump`]: an `experiments(hash, label,
+/// scenario)` table and a `cells(hash, idx, digest)` table keyed by the
+/// dedup key. Existing rows are kept (`INSERT OR IGNORE`), so mirroring
+/// is idempotent and incremental re-mirrors are cheap.
+pub fn mirror(store: &mut Store, db_path: &str) -> io::Result<()> {
+    let dump = store.sql_dump()?;
+    let conn = rusqlite::Connection::open(db_path)
+        .map_err(|e| io::Error::new(io::ErrorKind::Other, e.to_string()))?;
+    conn.execute_batch(&dump)
+        .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e.to_string()))
+}

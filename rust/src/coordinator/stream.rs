@@ -1,0 +1,704 @@
+//! Streaming campaign sweeps: lazy cells, incremental projections,
+//! resumable stores.
+//!
+//! The batch path (`Scenario::run_cached`) materialises every cell's
+//! full [`Campaign`](crate::exec::Campaign) before projecting — fine
+//! for the paper figures, impossible for the million-cell synth grids
+//! the roadmap targets. [`run_streaming`] keeps the same deterministic
+//! plan order but pulls cells lazily from [`Scenario::cells`] in
+//! bounded chunks, runs each chunk on the fleet pool, reduces every
+//! campaign to a [`CellDigest`] immediately, and folds the digest into
+//! a per-projection accumulator ([`StreamAcc`]). Peak memory is one
+//! chunk of campaigns plus the accumulator — never the grid.
+//!
+//! **Bitwise contract.** Streamed output must equal
+//! `SweepRun::tables()` byte-for-byte, for any `AIC_WORKERS`, chunk
+//! size, or kill/resume history. Three ingredients make that hold:
+//!
+//! 1. Rendering is shared — both paths call the same
+//!    `scenario::*_table` functions, so only numbers need to agree.
+//! 2. Digests store integer event counts (quality hits, latency bins,
+//!    per-slot classes); integer sums are grouping-independent, and the
+//!    final divisions reproduce the batch expressions exactly.
+//! 3. Where the batch path folds f64 means in unit order
+//!    (`stats::mean` over units), the accumulators buffer exactly one
+//!    policy block — all policies of one (harvester, device) — and
+//!    replay it in the batch iteration order, adding into per-column
+//!    running sums. Additions happen in the identical sequence, so the
+//!    f64 results are identical, not merely close.
+//!
+//! **Memory bounds per projection:** `cells` streams rows with O(1)
+//! state (the million-cell mode); latency histograms keep O(policies ×
+//! bins); HAR/audio policy summaries keep one (policies × seeds) block
+//! of digests; imaging keeps one (devices × policies × seeds) harvester
+//! group (pairwise coherence/throughput columns need co-unit cells).
+//! All bounds are independent of the harvester × device extent — and of
+//! total cell count for the acceptance-scale `cells` grids. Note the
+//! digest of a HAR cell with slot payloads is O(rounds); see DESIGN.md
+//! §8 for the full accounting (including the Harris reference memo).
+//!
+//! **Resume.** With a [`Store`], every completed cell is committed
+//! under `(grid_hash, cell index)` before the sweep moves on; a re-run
+//! reads committed digests instead of re-simulating and converges to
+//! the same bytes. A killed campaign therefore loses at most the
+//! in-flight chunk — the repo's own sweeps now tolerate the power
+//! failures the paper's devices do.
+
+use crate::coordinator::experiment::{
+    run_campaign_cached, AudioRunSpec, AudioWorkload, HarContext, HarRunSpec, HarWorkload,
+    ImgRunSpec, ImgWorkload, SupplyCache,
+};
+use crate::coordinator::fleet::run_fleet;
+use crate::coordinator::scenario::{
+    self, audio_summary_table, cells_row, img_equivalence_tables, img_latency_table,
+    img_throughput_table, latency_emulation_table, latency_real_world_table,
+    policy_accuracy_table, policy_coherence_table, policy_vs_chinchilla_table, AudioPolicyRow,
+    CampaignCell, ImgTraceRow, PolicyRow, Projection, Scenario, WorkloadSpec, LATENCY_CYCLES,
+};
+use crate::coordinator::sink::{emit_all, Sink};
+use crate::coordinator::store::{grid_hash, CellDigest, Needs, Store};
+use crate::exec::Policy;
+use crate::imgproc::images::Picture;
+use crate::util::stats::Histogram;
+use std::collections::HashMap;
+use std::io;
+
+/// Default cell-chunk size for streaming sweeps: large enough to keep
+/// every worker busy between merge points, small enough that in-flight
+/// (uncommitted, lost-on-kill) work stays bounded.
+pub const DEFAULT_CHUNK: usize = 256;
+
+/// Knobs of one streaming sweep.
+pub struct StreamOptions {
+    /// Apply the scenario's `--fast` scaling.
+    pub fast: bool,
+    /// Fleet pool override (`None` = `AIC_WORKERS`/cores).
+    pub workers: Option<usize>,
+    /// Cells dispatched per fleet round.
+    pub chunk: usize,
+    /// Experiment label registered in the store.
+    pub label: String,
+    /// Abort (without finishing projections) after committing this many
+    /// *fresh* cells — the CI kill/resume harness; `None` = run to
+    /// completion.
+    pub stop_after: Option<u64>,
+}
+
+impl Default for StreamOptions {
+    fn default() -> StreamOptions {
+        StreamOptions {
+            fast: false,
+            workers: None,
+            chunk: DEFAULT_CHUNK,
+            label: "sweep".to_string(),
+            stop_after: None,
+        }
+    }
+}
+
+/// What a streaming sweep did.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StreamReport {
+    /// Grid size (resolved plan).
+    pub cells: usize,
+    /// Cells folded from committed store records instead of re-running.
+    pub reused: usize,
+    /// Cells actually simulated this run.
+    pub ran: usize,
+    /// True when `stop_after` aborted the sweep before the projections
+    /// were finished (committed records survive for resume).
+    pub partial: bool,
+}
+
+/// Run a sweep as a streaming pipeline. Campaign grids stream cell by
+/// cell (optionally resuming from / committing to `store`);
+/// non-campaign workloads (fig. 4 accuracy curves, fig. 12 perforation)
+/// are small offline analyses and fall back to the batch path
+/// internally, with identical output either way.
+pub fn run_streaming(
+    sc: &Scenario,
+    opts: &StreamOptions,
+    shared_ctx: Option<&HarContext>,
+    cache: &SupplyCache,
+    mut store: Option<&mut Store>,
+    sink: &mut dyn Sink,
+) -> io::Result<StreamReport> {
+    let s = sc.resolve(opts.fast);
+    if !s.workload.is_campaign() {
+        let run = sc.run_cached(opts.fast, shared_ctx, opts.workers, cache);
+        let n = run.scenario.plan().len();
+        emit_all(&run.tables(), sink)?;
+        return Ok(StreamReport { cells: n, reused: 0, ran: n, partial: false });
+    }
+
+    let needs = Needs::for_projection(s.projection);
+    let hash = grid_hash(&s, needs);
+    if let Some(st) = store.as_deref_mut() {
+        st.ensure_experiment(&opts.label, hash, &s)?;
+    }
+
+    let total = s.campaign_cell_count();
+    let chunk = opts.chunk.max(1);
+    let mut acc = StreamAcc::new(&s, sink)?;
+    let mut owned_ctx: Option<HarContext> = None;
+    let mut reused = 0usize;
+    let mut ran = 0usize;
+    let mut fresh = 0u64;
+
+    let mut idx = 0usize;
+    while idx < total {
+        let hi = (idx + chunk).min(total);
+        // Partition the chunk: committed digests fold straight from the
+        // store; the rest go to the fleet. A committed digest missing a
+        // payload this projection needs (written by a narrower
+        // projection) is re-run — the dedup key keeps the old record
+        // authoritative for what it *does* serve, so the re-run only
+        // feeds the accumulator.
+        let mut have: Vec<(usize, CellDigest)> = Vec::new();
+        let mut to_run: Vec<(usize, CampaignCell)> = Vec::new();
+        for i in idx..hi {
+            if let Some(st) = store.as_deref_mut() {
+                if st.has_cell(hash, i as u32) {
+                    let d = st
+                        .read_cell(hash, i as u32)?
+                        .expect("indexed cell must read back");
+                    if d.satisfies(needs) {
+                        have.push((i, d));
+                        continue;
+                    }
+                }
+            }
+            to_run.push((i, s.cell_at(i)));
+        }
+
+        let fresh_digests: Vec<CellDigest> = if to_run.is_empty() {
+            Vec::new()
+        } else {
+            match &s.workload {
+                WorkloadSpec::Har => {
+                    let ctx = match shared_ctx {
+                        Some(c) => c,
+                        None => owned_ctx.get_or_insert_with(|| s.training.context()),
+                    };
+                    run_fleet(&to_run, opts.workers, |(_, cell)| {
+                        let spec = HarRunSpec {
+                            horizon: s.horizon,
+                            sample_period: s.sample_period,
+                            script_seed: cell.seed,
+                        };
+                        let workload =
+                            HarWorkload { ctx, spec, harvester: cell.harvester.clone() };
+                        let c = run_campaign_cached(
+                            &workload, cell.seed, cell.policy, &cell.device, cache,
+                        );
+                        CellDigest::of_har(&c, s.sample_period, needs)
+                    })
+                }
+                WorkloadSpec::Img => run_fleet(&to_run, opts.workers, |(_, cell)| {
+                    let spec = ImgRunSpec {
+                        horizon: s.horizon,
+                        sample_period: s.sample_period,
+                        trace_seed: cell.seed,
+                    };
+                    let workload = ImgWorkload { spec, harvester: cell.harvester.clone() };
+                    let c = run_campaign_cached(
+                        &workload, cell.seed, cell.policy, &cell.device, cache,
+                    );
+                    CellDigest::of_img(&c, needs)
+                }),
+                WorkloadSpec::Audio => run_fleet(&to_run, opts.workers, |(_, cell)| {
+                    let spec = AudioRunSpec {
+                        horizon: s.horizon,
+                        sample_period: s.sample_period,
+                        stream_seed: cell.seed,
+                    };
+                    let workload = AudioWorkload { spec, harvester: cell.harvester.clone() };
+                    let c = run_campaign_cached(
+                        &workload, cell.seed, cell.policy, &cell.device, cache,
+                    );
+                    CellDigest::of_audio(&c, needs)
+                }),
+                _ => unreachable!("non-campaign workloads fell back above"),
+            }
+        };
+
+        // Merge both sources back into plan order and fold.
+        let mut have_it = have.into_iter().peekable();
+        let mut run_it =
+            to_run.iter().map(|(i, _)| *i).zip(fresh_digests.into_iter()).peekable();
+        for i in idx..hi {
+            let (digest, is_fresh) = match (have_it.peek(), run_it.peek()) {
+                (Some((hi_i, _)), _) if *hi_i == i => (have_it.next().unwrap().1, false),
+                (_, Some((ri, _))) if *ri == i => (run_it.next().unwrap().1, true),
+                _ => unreachable!("every chunk index is in exactly one partition"),
+            };
+            if is_fresh {
+                ran += 1;
+                if let Some(st) = store.as_deref_mut() {
+                    st.append_cell(hash, i as u32, &digest)?;
+                    fresh += 1;
+                    if opts.stop_after.is_some_and(|n| fresh >= n) {
+                        st.sync()?;
+                        return Ok(StreamReport {
+                            cells: total,
+                            reused,
+                            ran,
+                            partial: true,
+                        });
+                    }
+                }
+            } else {
+                reused += 1;
+            }
+            acc.fold(&s, i, &digest, sink)?;
+        }
+    }
+
+    acc.finish(&s, sink)?;
+    if let Some(st) = store.as_deref_mut() {
+        st.sync()?;
+    }
+    Ok(StreamReport { cells: total, reused, ran, partial: false })
+}
+
+// ---------------------------------------------------------------------
+// Incremental projection accumulators.
+// ---------------------------------------------------------------------
+
+/// Digest twin of `metrics::throughput_ratio` — bitwise-identical
+/// guard and division.
+fn thr_ratio(a: &CellDigest, b: &CellDigest) -> f64 {
+    let tb = b.throughput();
+    if tb == 0.0 {
+        0.0
+    } else {
+        a.throughput() / tb
+    }
+}
+
+/// Digest twin of `metrics::har_coherence`: replay the recorded
+/// (slot, class) pairs through the same map-then-align algorithm.
+fn coherence(a: &CellDigest, b: &CellDigest) -> f64 {
+    let (Some(sa), Some(sb)) = (&a.slots, &b.slots) else {
+        return 0.0;
+    };
+    let mut by_slot: HashMap<i64, u64> = HashMap::new();
+    for &(slot, class) in sb {
+        by_slot.insert(slot, class);
+    }
+    let mut total = 0usize;
+    let mut same = 0usize;
+    for &(slot, class) in sa {
+        if let Some(&other) = by_slot.get(&slot) {
+            total += 1;
+            if class == other {
+                same += 1;
+            }
+        }
+    }
+    if total == 0 {
+        0.0
+    } else {
+        same as f64 / total as f64
+    }
+}
+
+/// Digest twin of the batch `state_energy_fraction` column expression.
+fn state_fraction(d: &CellDigest) -> f64 {
+    let total = d.app_energy + d.state_energy;
+    if total == 0.0 {
+        0.0
+    } else {
+        d.state_energy / total
+    }
+}
+
+/// Per-policy running column sums for the HAR policy projections
+/// (figs. 5/7/8). One f64 per rendered column; divided by the unit
+/// count at finish.
+#[derive(Clone, Copy, Default)]
+struct PolicySums {
+    accuracy: f64,
+    coh_cont: f64,
+    coh_chin: f64,
+    thr_cont: f64,
+    thr_greedy: f64,
+    thr_chin: f64,
+    same_cycle: f64,
+    mean_features: f64,
+    state_energy: f64,
+}
+
+/// Per-policy running column sums for the audio summary.
+#[derive(Clone, Copy, Default)]
+struct AudioSums {
+    accuracy: f64,
+    thr_cont: f64,
+    mean_probes: f64,
+    same_cycle: f64,
+    mean_latency: f64,
+}
+
+/// Pooled integer latency histogram for one policy.
+#[derive(Clone, Default)]
+struct LatencyPool {
+    bins: Vec<u64>,
+    overflow: u64,
+    count: u64,
+}
+
+/// The per-projection incremental state. `fold` consumes digests in
+/// plan order; `finish` renders through the shared table functions.
+enum StreamAcc {
+    /// `Projection::Cells`: rows stream straight to the sink.
+    Cells,
+    /// Figs. 5/7/8: one (policies × seeds) block + per-policy sums.
+    HarPolicy { block: Vec<Option<CellDigest>>, sums: Vec<PolicySums> },
+    /// Figs. 6/9: per-policy pooled integer bins.
+    Latency { pools: Vec<LatencyPool> },
+    /// Audio summary: one (policies × seeds) block + per-policy sums.
+    Audio { block: Vec<Option<CellDigest>>, sums: Vec<AudioSums> },
+    /// Figs. 13–15: one harvester group + finished trace rows + pooled
+    /// per-picture counts.
+    Img {
+        group: Vec<Option<CellDigest>>,
+        trace_rows: Vec<ImgTraceRow>,
+        pooled: Vec<(u64, u64)>,
+    },
+}
+
+impl StreamAcc {
+    fn new(s: &Scenario, sink: &mut dyn Sink) -> io::Result<StreamAcc> {
+        let p_n = s.policies.len();
+        let s_n = s.seeds.len();
+        Ok(match s.projection {
+            Projection::Cells => {
+                let header: Vec<String> =
+                    scenario::CELLS_HEADER.iter().map(|h| h.to_string()).collect();
+                sink.begin(&s.name, &s.title, &header)?;
+                StreamAcc::Cells
+            }
+            Projection::PolicyAccuracy
+            | Projection::PolicyCoherence
+            | Projection::PolicyVsChinchilla => StreamAcc::HarPolicy {
+                block: vec![None; p_n * s_n],
+                sums: vec![PolicySums::default(); p_n],
+            },
+            Projection::LatencyEmulation | Projection::LatencyRealWorld => StreamAcc::Latency {
+                pools: vec![
+                    LatencyPool { bins: vec![0; LATENCY_CYCLES], ..Default::default() };
+                    p_n
+                ],
+            },
+            Projection::AudioSummary => StreamAcc::Audio {
+                block: vec![None; p_n * s_n],
+                sums: vec![AudioSums::default(); p_n],
+            },
+            Projection::ImgEquivalence | Projection::ImgThroughput | Projection::ImgLatency => {
+                StreamAcc::Img {
+                    group: vec![None; s.devices.len() * p_n * s_n],
+                    trace_rows: Vec::new(),
+                    pooled: vec![(0, 0); Picture::ALL.len()],
+                }
+            }
+            Projection::AccuracyCurve | Projection::Perforation => {
+                unreachable!("non-campaign projections use the batch fallback")
+            }
+        })
+    }
+
+    fn fold(
+        &mut self,
+        s: &Scenario,
+        idx: usize,
+        d: &CellDigest,
+        sink: &mut dyn Sink,
+    ) -> io::Result<()> {
+        let p_n = s.policies.len();
+        let s_n = s.seeds.len();
+        match self {
+            StreamAcc::Cells => sink.row(&cells_row(
+                &s.cell_at(idx),
+                d.emitted,
+                d.power_cycles,
+                d.power_failures,
+                d.quality(),
+                d.same_cycle_fraction(),
+                d.app_energy,
+                d.state_energy,
+            )),
+            StreamAcc::HarPolicy { block, sums } => {
+                let pos = idx % (p_n * s_n);
+                block[pos] = Some(d.clone());
+                if pos == p_n * s_n - 1 {
+                    flush_har_block(s, block, sums);
+                }
+                Ok(())
+            }
+            StreamAcc::Latency { pools } => {
+                let p = (idx / s_n) % p_n;
+                let lb = d
+                    .latency_bins
+                    .as_ref()
+                    .expect("latency digests carry bins (Needs::for_projection)");
+                let pool = &mut pools[p];
+                for (dst, &src) in pool.bins.iter_mut().zip(&lb.bins) {
+                    *dst += src;
+                }
+                pool.overflow += lb.overflow;
+                pool.count += d.emitted;
+                Ok(())
+            }
+            StreamAcc::Audio { block, sums } => {
+                let pos = idx % (p_n * s_n);
+                block[pos] = Some(d.clone());
+                if pos == p_n * s_n - 1 {
+                    flush_audio_block(s, block, sums);
+                }
+                Ok(())
+            }
+            StreamAcc::Img { group, trace_rows, pooled } => {
+                let group_len = s.devices.len() * p_n * s_n;
+                let pos = idx % group_len;
+                // Pool fig. 13's per-picture counts from GREEDY cells as
+                // they arrive: integer sums, grouping-independent.
+                if s.policies.iter().position(|&q| q == Policy::Greedy)
+                    == Some((idx / s_n) % p_n)
+                {
+                    if let Some(pics) = &d.pictures {
+                        for (dst, &(ok, tot)) in pooled.iter_mut().zip(pics) {
+                            dst.0 += ok;
+                            dst.1 += tot;
+                        }
+                    }
+                }
+                group[pos] = Some(d.clone());
+                if pos == group_len - 1 {
+                    let hi = idx / group_len;
+                    trace_rows.push(img_trace_row(s, hi, group));
+                }
+                Ok(())
+            }
+        }
+    }
+
+    fn finish(&mut self, s: &Scenario, sink: &mut dyn Sink) -> io::Result<()> {
+        let name = s.name.as_str();
+        let title = s.title.as_str();
+        let units = (s.harvesters.len() * s.devices.len() * s.seeds.len()) as f64;
+        match self {
+            StreamAcc::Cells => sink.finish(),
+            StreamAcc::HarPolicy { sums, .. } => {
+                let cont = s.policies.iter().position(|&q| q == Policy::Continuous);
+                let chin = s.policies.iter().position(|&q| q == Policy::Chinchilla);
+                let greedy = s.policies.iter().position(|&q| q == Policy::Greedy);
+                // A per-unit mean is its running sum over the unit count;
+                // columns against an absent reference are the constant
+                // 0.0 the batch path emits, not a folded mean.
+                let vs = |present: Option<usize>, sum: f64| match present {
+                    Some(_) => sum / units,
+                    None => 0.0,
+                };
+                let rows: Vec<PolicyRow> = s
+                    .policies
+                    .iter()
+                    .zip(sums.iter())
+                    .map(|(&policy, m)| PolicyRow {
+                        policy,
+                        accuracy: m.accuracy / units,
+                        coherence_vs_continuous: vs(cont, m.coh_cont),
+                        coherence_vs_chinchilla: vs(chin, m.coh_chin),
+                        throughput_vs_continuous: vs(cont, m.thr_cont),
+                        throughput_vs_greedy: vs(greedy, m.thr_greedy),
+                        throughput_vs_chinchilla: vs(chin, m.thr_chin),
+                        same_cycle_fraction: m.same_cycle / units,
+                        mean_features: m.mean_features / units,
+                        state_energy_fraction: m.state_energy / units,
+                    })
+                    .collect();
+                let t = match s.projection {
+                    Projection::PolicyAccuracy => policy_accuracy_table(name, title, &rows),
+                    Projection::PolicyCoherence => policy_coherence_table(name, title, &rows),
+                    _ => policy_vs_chinchilla_table(name, title, &rows),
+                };
+                sink.table(&t)
+            }
+            StreamAcc::Latency { pools } => {
+                let hists: Vec<(Policy, Histogram)> = s
+                    .policies
+                    .iter()
+                    .zip(pools.iter())
+                    .map(|(&policy, pool)| {
+                        (
+                            policy,
+                            Histogram {
+                                lo: 0.0,
+                                hi: LATENCY_CYCLES as f64,
+                                bins: pool.bins.clone(),
+                                underflow: 0,
+                                overflow: pool.overflow,
+                                count: pool.count,
+                            },
+                        )
+                    })
+                    .collect();
+                let t = match s.projection {
+                    Projection::LatencyEmulation => latency_emulation_table(name, title, &hists),
+                    _ => latency_real_world_table(name, title, &hists),
+                };
+                sink.table(&t)
+            }
+            StreamAcc::Audio { sums, .. } => {
+                let cont = s.policies.iter().position(|&q| q == Policy::Continuous);
+                let rows: Vec<AudioPolicyRow> = s
+                    .policies
+                    .iter()
+                    .zip(sums.iter())
+                    .map(|(&policy, m)| AudioPolicyRow {
+                        policy,
+                        accuracy: m.accuracy / units,
+                        throughput_vs_continuous: match cont {
+                            Some(_) => m.thr_cont / units,
+                            None => 0.0,
+                        },
+                        mean_probes: m.mean_probes / units,
+                        same_cycle_fraction: m.same_cycle / units,
+                        mean_latency_cycles: m.mean_latency / units,
+                    })
+                    .collect();
+                sink.table(&audio_summary_table(name, title, &rows))
+            }
+            StreamAcc::Img { trace_rows, pooled, .. } => {
+                let greedy = s.policies.iter().any(|&q| q == Policy::Greedy);
+                let by_picture: Vec<(Picture, f64)> = Picture::ALL
+                    .iter()
+                    .zip(pooled.iter())
+                    .map(|(&p, &(ok, total))| {
+                        // No GREEDY axis → the batch path's constant-0
+                        // rows; otherwise the pooled integer fraction.
+                        let eq = if !greedy || total == 0 {
+                            0.0
+                        } else {
+                            ok as f64 / total as f64
+                        };
+                        (p, eq)
+                    })
+                    .collect();
+                match s.projection {
+                    Projection::ImgEquivalence => {
+                        for t in img_equivalence_tables(name, title, &by_picture, trace_rows) {
+                            sink.table(&t)?;
+                        }
+                        Ok(())
+                    }
+                    Projection::ImgThroughput => {
+                        sink.table(&img_throughput_table(name, title, trace_rows))
+                    }
+                    _ => sink.table(&img_latency_table(name, title, trace_rows)),
+                }
+            }
+        }
+    }
+}
+
+/// Replay one completed (harvester, device) block in the batch
+/// iteration order — for each policy, units (seeds) ascending — adding
+/// each column value into its running sum. The addition sequence per
+/// column is exactly the batch `stats::mean` fold.
+fn flush_har_block(s: &Scenario, block: &mut [Option<CellDigest>], sums: &mut [PolicySums]) {
+    let s_n = s.seeds.len();
+    let cont = s.policies.iter().position(|&q| q == Policy::Continuous);
+    let chin = s.policies.iter().position(|&q| q == Policy::Chinchilla);
+    let greedy = s.policies.iter().position(|&q| q == Policy::Greedy);
+    {
+        let at = |p: usize, u: usize| block[p * s_n + u].as_ref().expect("block is complete");
+        for (i, m) in sums.iter_mut().enumerate() {
+            for u in 0..s_n {
+                let c = at(i, u);
+                m.accuracy += c.quality();
+                if let Some(r) = cont {
+                    m.coh_cont += coherence(c, at(r, u));
+                    m.thr_cont += thr_ratio(c, at(r, u));
+                }
+                if let Some(r) = chin {
+                    m.coh_chin += coherence(c, at(r, u));
+                    m.thr_chin += thr_ratio(c, at(r, u));
+                }
+                if let Some(r) = greedy {
+                    m.thr_greedy += thr_ratio(c, at(r, u));
+                }
+                m.same_cycle += c.same_cycle_fraction();
+                m.mean_features += c.mean_over_emitted(c.steps_sum);
+                m.state_energy += state_fraction(c);
+            }
+        }
+    }
+    block.iter_mut().for_each(|slot| *slot = None);
+}
+
+/// Audio twin of [`flush_har_block`].
+fn flush_audio_block(s: &Scenario, block: &mut [Option<CellDigest>], sums: &mut [AudioSums]) {
+    let s_n = s.seeds.len();
+    let cont = s.policies.iter().position(|&q| q == Policy::Continuous);
+    {
+        let at = |p: usize, u: usize| block[p * s_n + u].as_ref().expect("block is complete");
+        for (i, m) in sums.iter_mut().enumerate() {
+            for u in 0..s_n {
+                let c = at(i, u);
+                m.accuracy += c.quality();
+                if let Some(r) = cont {
+                    m.thr_cont += thr_ratio(c, at(r, u));
+                }
+                m.mean_probes += c.mean_over_emitted(c.steps_sum);
+                m.same_cycle += c.same_cycle_fraction();
+                m.mean_latency += c.mean_over_emitted(c.latency_sum);
+            }
+        }
+    }
+    block.iter_mut().for_each(|slot| *slot = None);
+}
+
+/// Compute one harvester's fig. 13–15 row from its completed group —
+/// the digest twin of `SweepRun::img_trace_rows` for harvester `hi`.
+fn img_trace_row(s: &Scenario, hi: usize, group: &mut [Option<CellDigest>]) -> ImgTraceRow {
+    let (d_n, p_n, s_n) = (s.devices.len(), s.policies.len(), s.seeds.len());
+    let cont = s.policies.iter().position(|&q| q == Policy::Continuous);
+    let chin = s.policies.iter().position(|&q| q == Policy::Chinchilla);
+    let greedy = s.policies.iter().position(|&q| q == Policy::Greedy);
+    let local_units = d_n * s_n;
+    let row = {
+        let at = |p: usize, lu: usize| {
+            let d = lu / s_n;
+            let sd = lu % s_n;
+            group[(d * p_n + p) * s_n + sd].as_ref().expect("group is complete")
+        };
+        let per = |f: &dyn Fn(usize) -> f64| {
+            let mut sum = 0.0;
+            for lu in 0..local_units {
+                sum += f(lu);
+            }
+            sum / local_units as f64
+        };
+        let ratio_of = |a: Option<usize>, b: Option<usize>| match (a, b) {
+            (Some(a), Some(b)) => per(&|u| thr_ratio(at(a, u), at(b, u))),
+            _ => 0.0,
+        };
+        ImgTraceRow {
+            harvester: s.harvesters[hi].clone(),
+            equivalence_aic: greedy.map(|g| per(&|u| at(g, u).quality())).unwrap_or(0.0),
+            throughput_aic_vs_continuous: ratio_of(greedy, cont),
+            throughput_chinchilla_vs_continuous: ratio_of(chin, cont),
+            aic_same_cycle: greedy
+                .map(|g| per(&|u| at(g, u).same_cycle_fraction()))
+                .unwrap_or(0.0),
+            chinchilla_latency_mean: chin
+                .map(|c| per(&|u| {
+                    let d = at(c, u);
+                    d.mean_over_emitted(d.latency_sum)
+                }))
+                .unwrap_or(0.0),
+        }
+    };
+    group.iter_mut().for_each(|slot| *slot = None);
+    row
+}

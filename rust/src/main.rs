@@ -6,13 +6,19 @@
 //! subcommands inspect the energy traces, check the AOT artifacts
 //! through PJRT, and run free-form single-device simulations.
 
-use aic::coordinator::experiment::{self, AudioRunSpec, HarContext, HarRunSpec, ImgRunSpec};
+use aic::coordinator::experiment::{
+    self, AudioRunSpec, HarContext, HarRunSpec, ImgRunSpec, SupplyCache,
+};
 use aic::coordinator::scenario::{builtin, DeviceSpec, HarvesterSpec, Scenario, BUILTIN_NAMES};
 use aic::coordinator::sink::{self, pct, TableData};
+use aic::coordinator::store::Store;
+use aic::coordinator::stream::{run_streaming, StreamOptions, DEFAULT_CHUNK};
 use aic::energy::traces::{generate, TraceKind};
 use aic::exec::engine::EngineKind;
 use aic::exec::Policy;
 use aic::util::cli::Args;
+use aic::util::json;
+use std::path::Path;
 
 const USAGE: &str = "aic — approximate intermittent computing (paper reproduction)
 
@@ -38,7 +44,16 @@ COMMANDS:
   all             every figure in sequence
   sweep FILE      run a scenario file: any workload (har|img|audio) x
                   harvester x device x policy x seed grid (also:
-                  --scenario FILE); see examples/scenarios/*.json
+                  --scenario FILE); see examples/scenarios/*.json.
+                  Campaign grids stream cell by cell; with --store FILE
+                  every finished cell is committed to an append-only
+                  experiment store and a re-run resumes where a killed
+                  one stopped, producing byte-identical outputs
+  store ACTION    inspect an experiment store (--store FILE):
+                  status — experiments + integrity counters
+                  table  — rebuild a grid's cells table (--label L picks
+                           the experiment when the file holds several)
+                  export — dump to stdout: --format csv|json|sql
   traces          synthetic energy trace statistics (Fig. 11)
   artifacts-check load + execute every AOT artifact through PJRT
   simulate        one campaign: --policy greedy|smartNN|chinchilla|alpaca|continuous
@@ -50,6 +65,11 @@ COMMANDS:
 OPTIONS:
   --out DIR       output directory for CSV/JSON (default: out)
   --fast          smaller campaigns (each scenario's own fast-mode scaling)
+  --store FILE    sweep/store: the experiment store file (.aic)
+  --label NAME    sweep: experiment label in the store (default: the
+                  scenario's name); store table/export: experiment selector
+  --chunk N       sweep: cells dispatched per streaming round (default 256)
+  --format F      store export format: csv (default), json, or sql
   --seed N        base seed for figure scenarios and simulate (default 42;
                   sweep takes its seeds from the scenario file)
   --engine E      device integrator: analytic (default, event-driven) or
@@ -81,6 +101,7 @@ fn main() {
     match cmd.as_str() {
         "all" => run_all(seed, fast, engine, &out),
         "sweep" => run_sweep(&args, fast, engine, &out),
+        "store" => run_store(&args),
         "traces" => run_traces(&out, seed),
         "artifacts-check" => run_artifacts_check(args.get_or("artifacts", "artifacts")),
         "simulate" => run_simulate(&args, seed, engine),
@@ -165,8 +186,97 @@ fn run_sweep(args: &Args, fast: bool, engine: Option<EngineKind>, out: &str) {
     if let Some(kind) = engine {
         sc = sc.with_engine(kind);
     }
-    let run = sc.run(fast);
-    emit(&run.tables(), out);
+    let mut store = match args.get("store") {
+        None => None,
+        Some(store_path) => match Store::open(Path::new(store_path)) {
+            Ok(st) => Some(st),
+            Err(e) => {
+                eprintln!("error: cannot open store '{store_path}': {e}");
+                std::process::exit(2);
+            }
+        },
+    };
+    let opts = StreamOptions {
+        fast,
+        workers: None,
+        chunk: args.get_u64("chunk", DEFAULT_CHUNK as u64) as usize,
+        label: args.get("label").unwrap_or(&sc.name).to_string(),
+        // CI kill/resume harness: abort mid-campaign after N committed
+        // cells, exactly like a power failure would.
+        stop_after: std::env::var("AIC_STREAM_KILL_AFTER")
+            .ok()
+            .and_then(|s| s.parse::<u64>().ok()),
+    };
+    let cache = SupplyCache::from_env();
+    let mut sinks = sink::standard(out);
+    let report = run_streaming(&sc, &opts, None, &cache, store.as_mut(), &mut sinks)
+        .expect("write sweep data");
+    if report.partial {
+        eprintln!(
+            "sweep interrupted after {} fresh cells ({} reused); resume with the same --store",
+            report.ran, report.reused
+        );
+        std::process::exit(137);
+    }
+    if report.reused > 0 {
+        eprintln!("resumed: {} of {} cells from the store", report.reused, report.cells);
+    }
+}
+
+fn run_store(args: &Args) {
+    let action = args.positional_at(1).unwrap_or("status").to_string();
+    let Some(path) = args.get("store").or_else(|| args.positional_at(2)) else {
+        eprintln!("error: store needs a store file (aic store {action} --store runs.aic)\n");
+        eprint!("{USAGE}");
+        std::process::exit(2);
+    };
+    let mut store = match Store::open(Path::new(path)) {
+        Ok(st) => st,
+        Err(e) => {
+            eprintln!("error: cannot open store '{path}': {e}");
+            std::process::exit(2);
+        }
+    };
+    let fail = |e: String| -> ! {
+        eprintln!("error: {e}");
+        std::process::exit(2);
+    };
+    match action.as_str() {
+        "status" => {
+            let tables = store.status_tables();
+            let mut md = sink::markdown_stdout();
+            sink::emit_all(&tables, &mut md).expect("write store status");
+        }
+        "table" => {
+            let t = store.cells_table(args.get("label")).unwrap_or_else(|e| fail(e));
+            let mut md = sink::markdown_stdout();
+            sink::emit_all(&[t], &mut md).expect("write store table");
+        }
+        "export" => match args.get_or("format", "csv") {
+            "csv" => {
+                let t = store.cells_table(args.get("label")).unwrap_or_else(|e| fail(e));
+                print!("{}", t.to_csv());
+            }
+            "json" => {
+                let t = store.cells_table(args.get("label")).unwrap_or_else(|e| fail(e));
+                println!("{}", json::to_string_pretty(&t.to_json()));
+            }
+            "sql" => {
+                let dump = store.sql_dump().expect("read store records");
+                print!("{dump}");
+            }
+            other => {
+                eprintln!("error: unknown export format '{other}' (expected csv|json|sql)\n");
+                eprint!("{USAGE}");
+                std::process::exit(2);
+            }
+        },
+        other => {
+            eprintln!("error: unknown store action '{other}' (expected status|table|export)\n");
+            eprint!("{USAGE}");
+            std::process::exit(2);
+        }
+    }
 }
 
 fn run_traces(out: &str, seed: u64) {

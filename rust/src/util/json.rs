@@ -92,6 +92,18 @@ impl Value {
     pub fn nums(xs: &[f64]) -> Value {
         Value::Arr(xs.iter().map(|&x| Value::Num(x)).collect())
     }
+
+    /// An array of non-negative integers (exact in `Num` below 2^53 —
+    /// the experiment store's count payloads).
+    pub fn u64s(xs: &[u64]) -> Value {
+        Value::Arr(xs.iter().map(|&x| Value::Num(x as f64)).collect())
+    }
+
+    /// Strictly-typed `u64` array accessor — `None` unless every element
+    /// is a non-negative integer (the inverse of [`Value::u64s`]).
+    pub fn as_u64s(&self) -> Option<Vec<u64>> {
+        self.as_arr()?.iter().map(Value::as_u64).collect()
+    }
 }
 
 impl From<f64> for Value {

@@ -14,7 +14,12 @@
 use aic::audio::app::{AudioProgram, AudioSource};
 use aic::audio::detector::SpectralDetector;
 use aic::audio::stream::AudioScript;
+use aic::coordinator::experiment::SupplyCache;
+use aic::coordinator::scenario::{HarvesterSpec, Projection, Scenario, WorkloadSpec};
+use aic::coordinator::sink::NullSink;
+use aic::coordinator::stream::{run_streaming, StreamOptions};
 use aic::energy::harvester::Harvester;
+use aic::energy::traces::TraceKind;
 use aic::exec::engine::{Engine, EngineConfig};
 use aic::exec::program::{StepProgram, SyntheticProgram};
 use aic::exec::runtime::RuntimeSpec;
@@ -27,24 +32,38 @@ use std::sync::atomic::{AtomicU64, Ordering};
 struct CountingAlloc;
 
 static ALLOCS: AtomicU64 = AtomicU64::new(0);
+/// Currently-live heap bytes.
+static LIVE: AtomicU64 = AtomicU64::new(0);
+/// High-water mark of `LIVE` since the last `reset_peak`.
+static PEAK: AtomicU64 = AtomicU64::new(0);
+
+fn on_alloc(size: usize) {
+    ALLOCS.fetch_add(1, Ordering::Relaxed);
+    let live = LIVE.fetch_add(size as u64, Ordering::Relaxed) + size as u64;
+    PEAK.fetch_max(live, Ordering::Relaxed);
+}
 
 unsafe impl GlobalAlloc for CountingAlloc {
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
-        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        on_alloc(layout.size());
         System.alloc(layout)
     }
 
     unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
-        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        on_alloc(layout.size());
         System.alloc_zeroed(layout)
     }
 
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
         ALLOCS.fetch_add(1, Ordering::Relaxed);
+        LIVE.fetch_sub(layout.size() as u64, Ordering::Relaxed);
+        let live = LIVE.fetch_add(new_size as u64, Ordering::Relaxed) + new_size as u64;
+        PEAK.fetch_max(live, Ordering::Relaxed);
         System.realloc(ptr, layout, new_size)
     }
 
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        LIVE.fetch_sub(layout.size() as u64, Ordering::Relaxed);
         System.dealloc(ptr, layout)
     }
 }
@@ -54,6 +73,22 @@ static COUNTER: CountingAlloc = CountingAlloc;
 
 fn allocs() -> u64 {
     ALLOCS.load(Ordering::SeqCst)
+}
+
+fn live_bytes() -> u64 {
+    LIVE.load(Ordering::SeqCst)
+}
+
+/// Restart peak tracking from the current live footprint and return
+/// that baseline.
+fn reset_peak() -> u64 {
+    let live = live_bytes();
+    PEAK.store(live, Ordering::SeqCst);
+    live
+}
+
+fn peak_bytes() -> u64 {
+    PEAK.load(Ordering::SeqCst)
 }
 
 /// One full audio round: acquire, run every refinement step, classify.
@@ -139,5 +174,50 @@ fn steady_state_round_loops_do_not_allocate() {
         "driver allocations must not scale with rounds \
          ({short_rounds} rounds: {short_allocs} allocs, \
           {long_rounds} rounds: {long_allocs} allocs)"
+    );
+
+    // --- Streaming sweeps: peak memory independent of cell count. ----
+    // The batch path retains every campaign of the grid (MemorySink/
+    // SweepRun keep O(cells)); the streaming path must not. A 9×-larger
+    // seed axis may not raise the sweep's peak live-byte footprint
+    // beyond per-cell jitter, and the run must hand its memory back.
+    let sweep = |seeds: Vec<u64>| -> (u64, u64) {
+        let sc = Scenario::new("alloc_stream", WorkloadSpec::Audio)
+            .with_harvesters(vec![HarvesterSpec::Ambient(TraceKind::Rf)])
+            .with_policies(vec![Policy::Continuous])
+            .with_seeds(seeds)
+            .with_horizon(3600.0)
+            .with_sample_period(30.0)
+            .with_projection(Projection::Cells);
+        let opts = StreamOptions {
+            workers: Some(1),
+            chunk: 2,
+            ..StreamOptions::default()
+        };
+        // A disabled cache holds nothing; the supply dies with its cell.
+        let cache = SupplyCache::disabled();
+        let mut sink = NullSink;
+        let baseline = reset_peak();
+        let report =
+            run_streaming(&sc, &opts, None, &cache, None, &mut sink).expect("stream sweep");
+        assert_eq!(report.ran, report.cells);
+        let peak = peak_bytes() - baseline;
+        let retained = live_bytes().saturating_sub(baseline);
+        (peak, retained)
+    };
+    // Warm-up: process-global one-time state (trace tables, etc.) must
+    // not be billed to either measured run.
+    let _ = sweep(vec![1, 2]);
+    let (small_peak, _) = sweep((1..=4).collect());
+    let (large_peak, large_retained) = sweep((1..=36).collect());
+    let slack = 256 * 1024;
+    assert!(
+        large_peak <= small_peak + slack,
+        "streaming peak must not scale with cell count \
+         (4 cells: {small_peak} B, 36 cells: {large_peak} B)"
+    );
+    assert!(
+        large_retained < 64 * 1024,
+        "streamed sweep retained {large_retained} B after finishing"
     );
 }

@@ -12,9 +12,12 @@
 //! same treatment, with the extra guarantee that any spec that parses
 //! builds an environment with finite, non-negative powers.
 
-use aic::coordinator::scenario::Scenario;
+use aic::coordinator::scenario::{Scenario, WorkloadSpec};
+use aic::coordinator::store::{encode_record, grid_hash, CellDigest, Needs, Store};
 use aic::energy::synth::SynthSpec;
+use aic::util::json::{self, Value};
 use aic::util::rng::Rng;
+use std::path::PathBuf;
 
 fn committed_examples() -> Vec<(String, String)> {
     let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/../examples/scenarios");
@@ -255,6 +258,177 @@ fn synth_spec_rejects_hostile_values() {
     for text in bad {
         assert!(!probe_synth(text, &mut builds), "accepted: {text}");
     }
+}
+
+// ---------------------------------------------------------------------
+// Experiment-store files get the same hostility treatment: `aic sweep
+// --store` and `aic store` open user-supplied files, so truncations,
+// byte flips, duplicate/conflicting records, and hostile record lengths
+// must come back as `Err` or a salvaged prefix — never a panic, an
+// over-allocation, or a double-counted cell.
+// ---------------------------------------------------------------------
+
+fn store_tmp(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("aic_fuzz_{tag}_{}.aic", std::process::id()))
+}
+
+fn fuzz_digest(seed: u64) -> CellDigest {
+    CellDigest {
+        emitted: 10 + seed,
+        duration: 600.0,
+        power_cycles: 2 * seed,
+        power_failures: seed,
+        app_energy: 1e-3,
+        state_energy: 1e-4,
+        quality_ok: seed,
+        quality_total: 10 + seed,
+        same_cycle: seed,
+        steps_sum: 40 * seed,
+        latency_sum: seed,
+        latency_bins: None,
+        slots: None,
+        pictures: None,
+    }
+}
+
+/// A small committed store (one experiment, cells 0/1/2) plus its hash.
+fn seed_store(path: &PathBuf) -> u64 {
+    let _ = std::fs::remove_file(path);
+    let sc = Scenario::new("fuzz", WorkloadSpec::Audio);
+    let hash = grid_hash(&sc, Needs::none());
+    let mut st = Store::open(path).unwrap();
+    st.ensure_experiment("fuzz", hash, &sc).unwrap();
+    for i in 0..3u32 {
+        assert!(st.append_cell(hash, i, &fuzz_digest(i as u64 + 1)).unwrap());
+    }
+    st.sync().unwrap();
+    hash
+}
+
+/// The exact on-disk frame `append_cell` writes for `(hash, idx, d)` —
+/// for crafting byte-identical duplicates and conflicting twins.
+fn cell_frame(hash: u64, idx: u32, d: &CellDigest) -> Vec<u8> {
+    let payload = Value::obj(vec![
+        ("k", "cell".into()),
+        ("hash", format!("{hash:016x}").as_str().into()),
+        ("idx", (idx as f64).into()),
+        ("d", d.to_json()),
+    ]);
+    encode_record(json::to_string(&payload).into_bytes().as_slice())
+}
+
+#[test]
+fn store_truncations_salvage_a_prefix_or_error_cleanly() {
+    let path = store_tmp("trunc");
+    let hash = seed_store(&path);
+    let bytes = std::fs::read(&path).unwrap();
+    let cut_path = store_tmp("trunc_cut");
+    for len in 0..bytes.len() {
+        std::fs::write(&cut_path, &bytes[..len]).unwrap();
+        match Store::open(&cut_path) {
+            Ok(st) => {
+                assert!(
+                    len == 0 || len >= 8,
+                    "{len}-byte file parsed as a store"
+                );
+                assert!(st.cell_count() <= 3, "truncation grew the cell count");
+                assert!(st.cell_count_for(hash) <= 3);
+            }
+            Err(_) => {
+                // Only a torn magic may refuse to open; past it every
+                // truncation salvages the valid record prefix.
+                assert!(len < 8, "truncation to {len} bytes refused to open");
+            }
+        }
+    }
+    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_file(&cut_path);
+}
+
+#[test]
+fn store_byte_flips_never_panic_or_double_count() {
+    let path = store_tmp("flip");
+    let hash = seed_store(&path);
+    let bytes = std::fs::read(&path).unwrap();
+    let flip_path = store_tmp("flip_mut");
+    for i in 0..bytes.len() {
+        for flip in [0x01u8, 0x80, 0xFF] {
+            let mut mutated = bytes.clone();
+            mutated[i] ^= flip;
+            std::fs::write(&flip_path, &mutated).unwrap();
+            match Store::open(&flip_path) {
+                Ok(mut st) => {
+                    assert!(i >= 8, "flipped magic byte {i} still opened");
+                    // Whatever survived must be readable and ≤ the
+                    // committed set — a flip can only shrink the prefix.
+                    assert!(st.cell_count() <= 3);
+                    for idx in st.cell_indices(hash) {
+                        st.read_cell(hash, idx).unwrap().unwrap();
+                    }
+                }
+                Err(_) => {
+                    assert!(i < 8, "flip at {i} (past the magic) refused to open");
+                }
+            }
+        }
+    }
+    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_file(&flip_path);
+}
+
+#[test]
+fn store_oversized_record_length_is_salvaged_without_allocating() {
+    let path = store_tmp("oversize");
+    let hash = seed_store(&path);
+    // A torn tail whose length field claims 4 GiB: `open` must treat it
+    // as garbage (MAX_RECORD guards the allocation) and keep the prefix.
+    let mut bytes = std::fs::read(&path).unwrap();
+    bytes.extend_from_slice(&u32::MAX.to_le_bytes());
+    bytes.extend_from_slice(&[0xAB; 4]);
+    std::fs::write(&path, &bytes).unwrap();
+    let st = Store::open(&path).unwrap();
+    assert_eq!(st.cell_count_for(hash), 3);
+    assert_eq!(st.salvaged_bytes(), 8);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn store_duplicate_and_conflicting_records_never_double_count() {
+    let path = store_tmp("dup");
+    let hash = seed_store(&path);
+    // Append a byte-identical duplicate of cell 1 and a conflicting twin
+    // of cell 2 — e.g. two racing writers sharing one store file.
+    let mut bytes = std::fs::read(&path).unwrap();
+    bytes.extend_from_slice(&cell_frame(hash, 1, &fuzz_digest(2)));
+    bytes.extend_from_slice(&cell_frame(hash, 2, &fuzz_digest(99)));
+    std::fs::write(&path, &bytes).unwrap();
+    let mut st = Store::open(&path).unwrap();
+    assert_eq!(st.cell_count_for(hash), 3, "re-appends must not add cells");
+    assert_eq!(st.duplicates(), 1);
+    assert_eq!(st.conflicts(), 1);
+    // First record wins: the conflicting twin is never served.
+    assert_eq!(st.read_cell(hash, 2).unwrap().unwrap(), fuzz_digest(3));
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn store_self_heals_a_torn_tail_on_the_next_append() {
+    let path = store_tmp("heal");
+    let hash = seed_store(&path);
+    let mut bytes = std::fs::read(&path).unwrap();
+    bytes.extend_from_slice(&[0x77; 11]); // torn frame
+    std::fs::write(&path, &bytes).unwrap();
+    {
+        let mut st = Store::open(&path).unwrap();
+        assert_eq!(st.salvaged_bytes(), 11);
+        assert!(st.append_cell(hash, 7, &fuzz_digest(7)).unwrap());
+        st.sync().unwrap();
+    }
+    let mut st = Store::open(&path).unwrap();
+    assert_eq!(st.salvaged_bytes(), 0, "append must truncate the torn tail");
+    assert_eq!(st.cell_count_for(hash), 4);
+    assert_eq!(st.read_cell(hash, 7).unwrap().unwrap(), fuzz_digest(7));
+    let _ = std::fs::remove_file(&path);
 }
 
 #[test]

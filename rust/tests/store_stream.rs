@@ -1,0 +1,287 @@
+//! Streaming-sweep equivalence and store-backed resume.
+//!
+//! The streaming pipeline's contract (see `coordinator::stream`) is
+//! *bitwise* equality with the batch path: for every projection, any
+//! worker-pool size, any chunk size, and any kill/resume history, the
+//! tables a streamed sweep emits must equal `SweepRun::tables()` down to
+//! the formatted strings. These tests compare the two paths through
+//! [`MemorySink`] (which reconstructs `TableData` exactly) and then
+//! re-compare every rendered form — CSV, markdown, JSON — so a
+//! float-formatting drift cannot hide behind `PartialEq`.
+
+use aic::coordinator::experiment::{HarContext, SupplyCache};
+use aic::coordinator::scenario::{
+    har_policies, HarvesterSpec, Projection, Scenario, Training, WorkloadSpec,
+};
+use aic::coordinator::sink::{emit_all, MemorySink, TableData};
+use aic::coordinator::store::Store;
+use aic::coordinator::stream::{run_streaming, StreamOptions, StreamReport};
+use aic::energy::traces::TraceKind;
+use aic::exec::Policy;
+use aic::util::json;
+use std::path::PathBuf;
+
+fn temp_store(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("aic_stream_{tag}_{}.aic", std::process::id()))
+}
+
+/// The batch reference: run the sweep eagerly and capture its tables.
+fn batch_tables(sc: &Scenario, ctx: Option<&HarContext>, cache: &SupplyCache) -> Vec<TableData> {
+    let run = sc.run_cached(false, ctx, Some(2), cache);
+    let mut m = MemorySink::new();
+    emit_all(&run.tables(), &mut m).unwrap();
+    m.tables
+}
+
+fn stream_tables(
+    sc: &Scenario,
+    workers: usize,
+    chunk: usize,
+    ctx: Option<&HarContext>,
+    cache: &SupplyCache,
+    store: Option<&mut Store>,
+) -> (Vec<TableData>, StreamReport) {
+    let opts = StreamOptions { workers: Some(workers), chunk, ..StreamOptions::default() };
+    let mut m = MemorySink::new();
+    let report = run_streaming(sc, &opts, ctx, cache, store, &mut m).unwrap();
+    (m.tables, report)
+}
+
+/// Every rendered byte of a table set, concatenated.
+fn render(tables: &[TableData]) -> String {
+    let mut s = String::new();
+    for t in tables {
+        s.push_str(&t.stem);
+        s.push_str(&t.to_csv());
+        s.push_str(&t.to_markdown());
+        s.push_str(&json::to_string(&t.to_json()));
+    }
+    s
+}
+
+fn assert_stream_matches(
+    sc: &Scenario,
+    want: &[TableData],
+    combos: &[(usize, usize)],
+    ctx: Option<&HarContext>,
+    cache: &SupplyCache,
+    label: &str,
+) {
+    let cells = sc.plan().len();
+    for &(workers, chunk) in combos {
+        let (got, report) = stream_tables(sc, workers, chunk, ctx, cache, None);
+        assert_eq!(
+            report,
+            StreamReport { cells, reused: 0, ran: cells, partial: false },
+            "{label} workers={workers} chunk={chunk}: report"
+        );
+        assert_eq!(got, want, "{label} workers={workers} chunk={chunk}: tables");
+        assert_eq!(
+            render(&got),
+            render(want),
+            "{label} workers={workers} chunk={chunk}: rendered bytes"
+        );
+    }
+}
+
+/// Figs. 5/6/7/8/9 plus the raw cells view: the full HAR projection set,
+/// on a grid mixing harvesters so the accumulators must flush more than
+/// one (harvester, device) block.
+#[test]
+fn har_streaming_matches_batch_for_every_projection() {
+    let base = Scenario::new("har_stream", WorkloadSpec::Har)
+        .with_training(Training::tiny())
+        .with_policies(har_policies())
+        .with_harvesters(vec![
+            HarvesterSpec::Kinetic,
+            HarvesterSpec::Ambient(TraceKind::Som),
+        ])
+        .with_seeds(vec![1, 2])
+        .with_horizon(600.0);
+    let ctx = base.har_context();
+    let cache = SupplyCache::new();
+    for proj in [
+        Projection::Cells,
+        Projection::PolicyAccuracy,
+        Projection::PolicyCoherence,
+        Projection::PolicyVsChinchilla,
+        Projection::LatencyEmulation,
+        Projection::LatencyRealWorld,
+    ] {
+        let sc = base.clone().with_projection(proj);
+        let want = batch_tables(&sc, Some(&ctx), &cache);
+        // chunk < block, chunk unaligned to the block, chunk > grid.
+        assert_stream_matches(
+            &sc,
+            &want,
+            &[(1, 1), (3, 5), (2, 64)],
+            Some(&ctx),
+            &cache,
+            &format!("{proj:?}"),
+        );
+    }
+}
+
+#[test]
+fn audio_streaming_matches_batch() {
+    let base = Scenario::new("audio_stream", WorkloadSpec::Audio)
+        .with_harvesters(vec![
+            HarvesterSpec::Ambient(TraceKind::ALL[0]),
+            HarvesterSpec::Ambient(TraceKind::ALL[1]),
+        ])
+        .with_policies(vec![Policy::Continuous, Policy::Greedy, Policy::Chinchilla])
+        .with_seeds(vec![1, 2])
+        .with_horizon(600.0)
+        .with_sample_period(30.0);
+    let cache = SupplyCache::new();
+    for proj in [Projection::AudioSummary, Projection::Cells] {
+        let sc = base.clone().with_projection(proj);
+        let want = batch_tables(&sc, None, &cache);
+        assert_stream_matches(&sc, &want, &[(1, 1), (2, 7)], None, &cache, &format!("{proj:?}"));
+    }
+}
+
+#[test]
+fn img_streaming_matches_batch() {
+    let base = Scenario::new("img_stream", WorkloadSpec::Img)
+        .with_harvesters(vec![
+            HarvesterSpec::Ambient(TraceKind::ALL[0]),
+            HarvesterSpec::Ambient(TraceKind::ALL[1]),
+        ])
+        .with_policies(vec![Policy::Continuous, Policy::Greedy, Policy::Chinchilla])
+        .with_seeds(vec![1])
+        .with_horizon(300.0)
+        .with_sample_period(30.0);
+    let cache = SupplyCache::new();
+    for proj in [
+        Projection::ImgEquivalence,
+        Projection::ImgThroughput,
+        Projection::ImgLatency,
+        Projection::Cells,
+    ] {
+        let sc = base.clone().with_projection(proj);
+        let want = batch_tables(&sc, None, &cache);
+        assert_stream_matches(&sc, &want, &[(1, 1), (2, 4)], None, &cache, &format!("{proj:?}"));
+    }
+}
+
+/// Fig. 4-style offline analyses are not campaigns; `run_streaming`
+/// falls back to the batch path and must emit identical tables.
+#[test]
+fn non_campaign_workloads_fall_back_to_batch() {
+    let sc = Scenario::new("curve_stream", WorkloadSpec::AccuracyCurve { ps: vec![0, 20] })
+        .with_training(Training::tiny())
+        .with_projection(Projection::AccuracyCurve);
+    let cache = SupplyCache::new();
+    let ctx = sc.har_context();
+    let want = batch_tables(&sc, Some(&ctx), &cache);
+    let (got, report) = stream_tables(&sc, 2, 8, Some(&ctx), &cache, None);
+    assert!(!report.partial);
+    assert_eq!(got, want);
+    assert_eq!(render(&got), render(&want));
+}
+
+/// The acceptance gate: a campaign killed mid-sweep, resumed from its
+/// store in a fresh "process" (a reopened `Store`), converges to the
+/// byte-identical projections of an uninterrupted run — and a second
+/// resume re-simulates nothing at all.
+#[test]
+fn killed_campaign_resumes_to_identical_bytes() {
+    let sc = Scenario::new("resume_stream", WorkloadSpec::Audio)
+        .with_harvesters(vec![
+            HarvesterSpec::Ambient(TraceKind::ALL[0]),
+            HarvesterSpec::Ambient(TraceKind::ALL[1]),
+        ])
+        .with_policies(vec![Policy::Continuous, Policy::Greedy, Policy::Chinchilla])
+        .with_seeds(vec![1, 2])
+        .with_horizon(300.0)
+        .with_sample_period(30.0)
+        .with_projection(Projection::AudioSummary);
+    let cells = sc.plan().len();
+    assert_eq!(cells, 12, "grid shape changed under this test");
+    let cache = SupplyCache::new();
+
+    // The uninterrupted references: batch, and store-less streaming.
+    let want = batch_tables(&sc, None, &cache);
+    let (uninterrupted, _) = stream_tables(&sc, 2, 3, None, &cache, None);
+    assert_eq!(uninterrupted, want);
+
+    let path = temp_store("resume");
+    let _ = std::fs::remove_file(&path);
+
+    // Leg 1: "SIGKILL" after 5 committed cells (the same abort point the
+    // CI smoke drives through AIC_STREAM_KILL_AFTER).
+    {
+        let mut store = Store::open(&path).unwrap();
+        let opts = StreamOptions {
+            workers: Some(2),
+            chunk: 3,
+            stop_after: Some(5),
+            ..StreamOptions::default()
+        };
+        let mut m = MemorySink::new();
+        let report =
+            run_streaming(&sc, &opts, None, &cache, Some(&mut store), &mut m).unwrap();
+        assert!(report.partial, "stop_after must abort the sweep");
+    }
+
+    // Leg 2: fresh open, different worker/chunk shape, run to the end.
+    {
+        let mut store = Store::open(&path).unwrap();
+        assert_eq!(store.cell_count(), 5, "killed run must have committed 5 cells");
+        let (got, report) = stream_tables(&sc, 3, 4, None, &cache, Some(&mut store));
+        assert!(!report.partial);
+        assert_eq!(report.reused, 5, "committed cells must not re-run");
+        assert_eq!(report.ran, cells - 5);
+        assert_eq!(got, want, "resumed projections drifted from the clean run");
+        assert_eq!(render(&got), render(&want));
+    }
+
+    // Leg 3: everything is committed now — a re-run simulates nothing.
+    {
+        let mut store = Store::open(&path).unwrap();
+        assert_eq!(store.cell_count(), cells);
+        let (got, report) = stream_tables(&sc, 1, 64, None, &cache, Some(&mut store));
+        assert_eq!(report.reused, cells);
+        assert_eq!(report.ran, 0);
+        assert_eq!(got, want);
+    }
+
+    // Leg 4: a crash mid-append leaves a torn tail; the resume still
+    // converges to the same bytes and heals the file.
+    {
+        use std::io::Write as _;
+        let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(&[0x5A; 9]).unwrap();
+    }
+    {
+        let mut store = Store::open(&path).unwrap();
+        assert_eq!(store.salvaged_bytes(), 9);
+        let (got, report) = stream_tables(&sc, 2, 5, None, &cache, Some(&mut store));
+        assert_eq!(report.reused, cells);
+        assert_eq!(got, want);
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+/// `aic store table` reconstructs — byte for byte — the cells table the
+/// sweep itself emitted, from nothing but the store file.
+#[test]
+fn store_cells_table_matches_the_sweep_output() {
+    let sc = Scenario::new("cells_view", WorkloadSpec::Audio)
+        .with_harvesters(vec![HarvesterSpec::Ambient(TraceKind::ALL[0])])
+        .with_policies(vec![Policy::Greedy, Policy::Chinchilla])
+        .with_seeds(vec![1, 2])
+        .with_horizon(300.0)
+        .with_sample_period(30.0)
+        .with_projection(Projection::Cells);
+    let cache = SupplyCache::new();
+    let path = temp_store("cells_view");
+    let _ = std::fs::remove_file(&path);
+    let mut store = Store::open(&path).unwrap();
+    let (got, report) = stream_tables(&sc, 2, 2, None, &cache, Some(&mut store));
+    assert_eq!(report.ran, sc.plan().len());
+    let table = store.cells_table(None).unwrap();
+    assert_eq!(got, vec![table], "store view must reproduce the sweep's cells table");
+    let _ = std::fs::remove_file(&path);
+}
