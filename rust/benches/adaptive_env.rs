@@ -1,0 +1,78 @@
+//! Adaptive-policy overhead bench (the learner's §Perf deliverable).
+//!
+//! The adaptive runtime adds three costs on top of the static SMART
+//! path: the per-cycle EWMA predictor update, the per-round UCB arm
+//! selection/reward, and the few words of learned state it persists
+//! through the energy ledger. The first two are timed as microbenches
+//! (they run once per power cycle / round, so nanoseconds matter at
+//! sweep scale); the end-to-end cost shows up as the adaptive grid's
+//! fleet time next to an identical grid with the learner swapped for
+//! static SMART.
+//!
+//! Honours `AIC_ENGINE` (the CI matrix times both integrators),
+//! `AIC_BENCH_FAST` (CI smoke) and `AIC_BENCH_OUT` (JSON artifact).
+
+use aic::coordinator::experiment::SupplyCache;
+use aic::coordinator::scenario::{HarvesterSpec, Projection, Scenario, WorkloadSpec};
+use aic::energy::predictor::EwmaPredictor;
+use aic::energy::synth::SynthSpec;
+use aic::exec::adaptive::{LearnedState, DEFAULT_ALPHA, DEFAULT_EXPLORE};
+use aic::exec::Policy;
+use aic::util::bench::{black_box, Bench};
+
+fn grid(policies: Vec<Policy>) -> Scenario {
+    let fast = std::env::var("AIC_BENCH_FAST").is_ok();
+    Scenario::new("adaptive_env", WorkloadSpec::Audio)
+        .with_title("adaptive-learner timing grid")
+        .with_harvesters(vec![HarvesterSpec::Synth(SynthSpec::builtin_rf())])
+        .with_policies(policies)
+        .with_seeds(if fast { vec![1] } else { vec![1, 2, 3] })
+        .with_horizon(if fast { 300.0 } else { 900.0 })
+        .with_sample_period(30.0)
+        .with_projection(Projection::Pareto)
+}
+
+fn main() {
+    let b = Bench::new("adaptive_env");
+
+    // Predictor: one EWMA update per power cycle. A bursty supply can
+    // produce thousands of cycles per simulated hour, so this is on the
+    // sweep hotpath.
+    b.bench_throughput("learner/ewma_observe_1k", 1000, || {
+        let mut p = EwmaPredictor::new(DEFAULT_ALPHA);
+        for i in 0..1000u64 {
+            let budget = 1.2e-4 + 1e-7 * (i % 17) as f64;
+            p.observe(budget, i as f64 * 2.5);
+        }
+        black_box(p.energy_or(0.0));
+    });
+
+    // Bandit: select + reward per emitted round, over the 4-arm depth
+    // menu with the deterministic tie-break.
+    b.bench_throughput("learner/ucb_round_1k", 1000, || {
+        let mut s = LearnedState::new(DEFAULT_ALPHA);
+        for i in 0..1000u64 {
+            let arm = s.select_arm(DEFAULT_EXPLORE);
+            s.reward(arm, 0.6 + 0.1 * (i % 3) as f64);
+        }
+        black_box(s.plays);
+    });
+
+    // End-to-end: the learner's fleet time next to the identical grid
+    // with static SMART in its slot — the delta is what per-cycle
+    // persistence plus the bandit actually cost a sweep.
+    let cache = SupplyCache::new();
+    let adaptive = grid(vec![
+        Policy::Greedy,
+        Policy::Adaptive { alpha: DEFAULT_ALPHA, explore: DEFAULT_EXPLORE },
+    ]);
+    b.bench("fleet_adaptive_grid", || {
+        let run = adaptive.run_cached(false, None, None, &cache);
+        black_box(run.pareto_rows().len());
+    });
+    let stat = grid(vec![Policy::Greedy, Policy::Smart { bound: 0.80 }]);
+    b.bench("fleet_static_grid", || {
+        let run = stat.run_cached(false, None, None, &cache);
+        black_box(run.pareto_rows().len());
+    });
+}

@@ -293,11 +293,11 @@ pub trait Workload: Sync {
         None
     }
 
-    /// SMART's offline lookup table for the device built from `seed`
+    /// The offline lookup table for the device built from `seed`
     /// (it must price the same program [`Workload::program`] returns).
-    /// Only consulted for `Policy::Smart` devices; workloads that cannot
-    /// provision one return `None` and SMART campaigns on them panic
-    /// loudly.
+    /// Only consulted for `Policy::Smart` and `Policy::Adaptive`
+    /// devices; workloads that cannot provision one return `None` and
+    /// campaigns needing it on them panic loudly.
     fn smart_table(&self, seed: u64) -> Option<SmartTable> {
         let _ = seed;
         None
@@ -346,7 +346,10 @@ pub fn run_campaign_cached<W: Workload>(
         }
     };
     let mut spec = RuntimeSpec::new(workload.sample_period());
-    if let Policy::Smart { .. } = policy {
+    // Both table-consulting runtimes: SMART gates on the offline
+    // expected-accuracy bound; ADAPTIVE prices its depth menu with the
+    // same cumulative-energy column.
+    if matches!(policy, Policy::Smart { .. } | Policy::Adaptive { .. }) {
         spec.smart_table = workload.smart_table(seed);
     }
     policy.runtime::<W::Prog>(&spec).run(&mut program, &mut engine)

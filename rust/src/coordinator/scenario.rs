@@ -32,6 +32,7 @@ use crate::coordinator::experiment::{
 use crate::coordinator::fleet::run_fleet;
 use crate::coordinator::metrics;
 use crate::coordinator::sink::{f2, pct, ratio, TableData};
+use crate::coordinator::store::digest::{CellDigest, Needs};
 use crate::energy::capacitor::Capacitor;
 use crate::energy::harvester::{kinetic_power_trace, Harvester, KineticConfig};
 use crate::energy::synth::SynthSpec;
@@ -481,6 +482,10 @@ pub enum Projection {
     /// Audio: per-policy detection accuracy, refinement depth and
     /// latency summary.
     AudioSummary,
+    /// Adaptive-vs-static judgement: one accuracy/throughput point per
+    /// policy with Pareto-frontier and Approxify-style auto-selection
+    /// markers (any campaign workload).
+    Pareto,
 }
 
 impl Projection {
@@ -498,6 +503,7 @@ impl Projection {
             Projection::ImgThroughput => "img-throughput",
             Projection::ImgLatency => "img-latency",
             Projection::AudioSummary => "audio-summary",
+            Projection::Pareto => "pareto",
         }
     }
 
@@ -515,6 +521,7 @@ impl Projection {
             Projection::ImgThroughput,
             Projection::ImgLatency,
             Projection::AudioSummary,
+            Projection::Pareto,
         ]
         .into_iter()
         .find(|p| p.name() == s)
@@ -991,11 +998,15 @@ impl Scenario {
                     | PolicyVsChinchilla
                     | LatencyEmulation
                     | LatencyRealWorld
+                    | Pareto
             ),
             WorkloadSpec::Img => {
-                matches!(self.projection, Cells | ImgEquivalence | ImgThroughput | ImgLatency)
+                matches!(
+                    self.projection,
+                    Cells | ImgEquivalence | ImgThroughput | ImgLatency | Pareto
+                )
             }
-            WorkloadSpec::Audio => matches!(self.projection, Cells | AudioSummary),
+            WorkloadSpec::Audio => matches!(self.projection, Cells | AudioSummary | Pareto),
             WorkloadSpec::AccuracyCurve { .. } => {
                 matches!(self.projection, Cells | AccuracyCurve)
             }
@@ -1108,6 +1119,107 @@ pub struct AudioPolicyRow {
     pub mean_probes: f64,
     pub same_cycle_fraction: f64,
     pub mean_latency_cycles: f64,
+}
+
+/// Pareto row — one policy's pooled accuracy/throughput point plus the
+/// frontier and auto-selection judgement. The Continuous ceiling is
+/// shown but excluded from the frontier: a battery is not a harvesting
+/// policy, it is the normalisation bound every figure plots against.
+#[derive(Clone, Debug)]
+pub struct ParetoRow {
+    pub policy: Policy,
+    /// Pooled quality over every unit (correct / total emitted-with-output).
+    pub accuracy: f64,
+    /// Pooled throughput: emitted results per second of campaign time.
+    pub throughput: f64,
+    /// Pooled joules per delivered result (app + state energy).
+    pub energy_per_result: f64,
+    /// False for the Continuous ceiling.
+    pub harvesting: bool,
+    /// Non-dominated on (accuracy, throughput) among harvesting policies.
+    pub frontier: bool,
+    /// Approxify-style auto-selection: the harvesting policy with the
+    /// best accuracy × throughput product (ties → earlier policy axis).
+    pub pick: bool,
+}
+
+/// Per-policy pooled sums behind a [`ParetoRow`] — integer counts plus
+/// f64 folds in plan order, so the batch path and the streaming
+/// accumulator produce bitwise-identical rows by construction.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ParetoPool {
+    pub quality_ok: u64,
+    pub quality_total: u64,
+    pub emitted: u64,
+    pub duration: f64,
+    pub app_energy: f64,
+    pub state_energy: f64,
+}
+
+impl ParetoPool {
+    /// Fold one cell's digest into the pool (both the batch projection
+    /// and the streaming accumulator call exactly this).
+    pub fn fold(&mut self, d: &CellDigest) {
+        self.quality_ok += d.quality_ok;
+        self.quality_total += d.quality_total;
+        self.emitted += d.emitted;
+        self.duration += d.duration;
+        self.app_energy += d.app_energy;
+        self.state_energy += d.state_energy;
+    }
+}
+
+/// Judge pooled per-policy points: frontier membership (strict Pareto
+/// dominance among harvesting policies) and the auto-selection pick.
+pub fn pareto_rows_from_pools(policies: &[Policy], pools: &[ParetoPool]) -> Vec<ParetoRow> {
+    assert_eq!(policies.len(), pools.len());
+    let point = |p: &ParetoPool| {
+        let acc = if p.quality_total == 0 { 0.0 } else { p.quality_ok as f64 / p.quality_total as f64 };
+        let thr = if p.duration == 0.0 { 0.0 } else { p.emitted as f64 / p.duration };
+        (acc, thr)
+    };
+    let harvesting: Vec<bool> =
+        policies.iter().map(|p| !matches!(p, Policy::Continuous)).collect();
+    let points: Vec<(f64, f64)> = pools.iter().map(point).collect();
+    // The pick maximises accuracy × throughput among harvesting policies.
+    let pick = policies
+        .iter()
+        .enumerate()
+        .filter(|&(i, _)| harvesting[i])
+        .map(|(i, _)| (i, points[i].0 * points[i].1))
+        .fold(None::<(usize, f64)>, |best, (i, score)| match best {
+            Some((_, s)) if s >= score => best,
+            _ => Some((i, score)),
+        })
+        .map(|(i, _)| i);
+    policies
+        .iter()
+        .enumerate()
+        .map(|(i, &policy)| {
+            let (accuracy, throughput) = points[i];
+            let dominated = harvesting[i]
+                && points.iter().enumerate().any(|(j, &(a, t))| {
+                    j != i
+                        && harvesting[j]
+                        && a >= accuracy
+                        && t >= throughput
+                        && (a > accuracy || t > throughput)
+                });
+            ParetoRow {
+                policy,
+                accuracy,
+                throughput,
+                energy_per_result: if pools[i].emitted == 0 {
+                    0.0
+                } else {
+                    (pools[i].app_energy + pools[i].state_energy) / pools[i].emitted as f64
+                },
+                harvesting: harvesting[i],
+                frontier: harvesting[i] && !dominated,
+                pick: pick == Some(i),
+            }
+        })
+        .collect()
 }
 
 /// The campaigns (or analysis rows) a sweep produced, in plan order.
@@ -1293,6 +1405,34 @@ impl SweepRun {
             .collect()
     }
 
+    /// Pareto — one pooled accuracy/throughput point per policy, with
+    /// frontier membership and the Approxify-style pick. Works on any
+    /// campaign grid; pooling goes through the same [`CellDigest`] fold
+    /// the streaming accumulator uses, in the same per-policy cell
+    /// order, so the two paths agree bitwise.
+    pub fn pareto_rows(&self) -> Vec<ParetoRow> {
+        let sc = &self.scenario;
+        let units = self.unit_count();
+        let needs = Needs::none();
+        let mut pools = vec![ParetoPool::default(); sc.policies.len()];
+        for (i, pool) in pools.iter_mut().enumerate() {
+            for u in 0..units {
+                let idx = self.campaign_of(i, u);
+                let d = match &self.grid {
+                    GridData::Har(cs) => CellDigest::of_har(&cs[idx], sc.sample_period, needs),
+                    GridData::Img(cs) => CellDigest::of_img(&cs[idx], needs),
+                    GridData::Audio(cs) => CellDigest::of_audio(&cs[idx], needs),
+                    _ => panic!(
+                        "scenario '{}' did not produce a campaign grid",
+                        self.scenario.name
+                    ),
+                };
+                pool.fold(&d);
+            }
+        }
+        pareto_rows_from_pools(&sc.policies, &pools)
+    }
+
     /// Figs. 6/9 — per-policy latency histogram pooled over every unit.
     pub fn latency_histograms(&self, max_cycles: usize) -> Vec<(Policy, Histogram)> {
         let campaigns = self.har_campaigns();
@@ -1419,6 +1559,7 @@ impl SweepRun {
             Projection::AudioSummary => {
                 vec![audio_summary_table(name, title, &self.audio_policy_rows())]
             }
+            Projection::Pareto => vec![pareto_table(name, title, &self.pareto_rows())],
             Projection::Cells => match &self.grid {
                 GridData::Accuracy(_) => vec![self.accuracy_table(name, title)],
                 GridData::Perforation(_) => vec![self.perforation_table(name, title)],
@@ -1748,6 +1889,34 @@ pub fn audio_summary_table(name: &str, title: &str, rows: &[AudioPolicyRow]) -> 
     t
 }
 
+/// Pareto layout over per-policy pooled points. The continuous ceiling
+/// is rendered as `ceiling` rather than `yes`/`no`: it is shown for
+/// scale but never competes for the frontier.
+pub fn pareto_table(name: &str, title: &str, rows: &[ParetoRow]) -> TableData {
+    let mut t = TableData::new(
+        name,
+        title,
+        &["policy", "accuracy", "thrpt (/h)", "mJ/result", "frontier", "pick"],
+    );
+    for r in rows {
+        t.push(vec![
+            r.policy.name(),
+            pct(r.accuracy),
+            f2(r.throughput * 3600.0),
+            f2(r.energy_per_result * 1e3),
+            if !r.harvesting {
+                "ceiling".to_string()
+            } else if r.frontier {
+                "yes".to_string()
+            } else {
+                "no".to_string()
+            },
+            if r.pick { "<-".to_string() } else { String::new() },
+        ]);
+    }
+    t
+}
+
 // ---------------------------------------------------------------------
 // Offline analyses (figs. 4 and 12).
 // ---------------------------------------------------------------------
@@ -1826,13 +1995,37 @@ pub fn audio_policies() -> Vec<Policy> {
     ]
 }
 
+/// The HAR/Img policy set plus the adaptive learner — the comparison the
+/// `adaptive_*` builtins judge via the Pareto projection.
+pub fn adaptive_policies() -> Vec<Policy> {
+    let mut ps = har_policies();
+    ps.push(Policy::Adaptive {
+        alpha: crate::exec::adaptive::DEFAULT_ALPHA,
+        explore: crate::exec::adaptive::DEFAULT_EXPLORE,
+    });
+    ps
+}
+
+/// The audio policy set plus the adaptive learner.
+pub fn adaptive_audio_policies() -> Vec<Policy> {
+    let mut ps = audio_policies();
+    ps.push(Policy::Adaptive {
+        alpha: crate::exec::adaptive::DEFAULT_ALPHA,
+        explore: crate::exec::adaptive::DEFAULT_EXPLORE,
+    });
+    ps
+}
+
 /// Every figure the `aic` CLI knows by name, plus the audio grid (the
-/// third workload's builtin scenario) and the three synthetic-environment
+/// third workload's builtin scenario), the three synthetic-environment
 /// grids (`synth_*`: generated supplies × all policies × ≥10 environment
-/// seeds — one builtin per workload).
-pub const BUILTIN_NAMES: [&str; 14] = [
+/// seeds — one builtin per workload), and the three adaptive judgements
+/// (`adaptive_*`: the same synth families with the adaptive learner added
+/// and the Pareto projection selecting the per-family winner).
+pub const BUILTIN_NAMES: [&str; 17] = [
     "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig12", "fig13", "fig14", "fig15",
-    "audio", "synth_solar", "synth_rf", "synth_multi",
+    "audio", "synth_solar", "synth_rf", "synth_multi", "adaptive_solar", "adaptive_rf",
+    "adaptive_multi",
 ];
 
 /// The environment-seed axis of the builtin synth grids: ten independent
@@ -1977,6 +2170,46 @@ pub fn builtin(name: &str, seed: u64) -> Option<Scenario> {
                 img_size: None,
             })
             .with_projection(Projection::Cells),
+        "adaptive_solar" => Scenario::new("adaptive_solar", WorkloadSpec::Img)
+            .with_title("Adaptive — imaging on generated solar: learner vs static policies")
+            .with_policies(adaptive_policies())
+            .with_harvesters(vec![HarvesterSpec::Synth(SynthSpec::builtin_solar())])
+            .with_seeds(synth_seeds())
+            .with_horizon(3600.0)
+            .with_fast(FastMode {
+                horizon: Some(600.0),
+                max_seeds: Some(2),
+                ..FastMode::none()
+            })
+            .with_projection(Projection::Pareto),
+        "adaptive_rf" => Scenario::new("adaptive_rf", WorkloadSpec::Audio)
+            .with_title("Adaptive — audio on generated RF bursts: learner vs static policies")
+            .with_policies(adaptive_audio_policies())
+            .with_harvesters(vec![HarvesterSpec::Synth(SynthSpec::builtin_rf())])
+            .with_seeds(synth_seeds())
+            .with_horizon(3600.0)
+            .with_fast(FastMode {
+                horizon: Some(600.0),
+                max_seeds: Some(2),
+                ..FastMode::none()
+            })
+            .with_projection(Projection::Pareto),
+        "adaptive_multi" => Scenario::new("adaptive_multi", WorkloadSpec::Har)
+            .with_title(
+                "Adaptive — HAR on the multi-source composite: learner vs static policies",
+            )
+            .with_policies(adaptive_policies())
+            .with_harvesters(vec![HarvesterSpec::Synth(SynthSpec::builtin_multi())])
+            .with_seeds(synth_seeds())
+            .with_horizon(3600.0)
+            .with_training(Training::full(seed))
+            .with_fast(FastMode {
+                horizon: Some(900.0),
+                max_seeds: Some(2),
+                tiny_corpus: true,
+                img_size: None,
+            })
+            .with_projection(Projection::Pareto),
         _ => return None,
     })
 }
@@ -2190,6 +2423,84 @@ mod tests {
             // Fast mode keeps the grids CI-sized.
             assert!(sc.resolve(true).seeds.len() <= 2, "{}", sc.name);
         }
+    }
+
+    #[test]
+    fn adaptive_builtins_add_the_learner_and_judge_by_pareto() {
+        for (name, workload) in [
+            ("adaptive_solar", WorkloadSpec::Img),
+            ("adaptive_rf", WorkloadSpec::Audio),
+            ("adaptive_multi", WorkloadSpec::Har),
+        ] {
+            let sc = builtin(name, 42).unwrap();
+            assert_eq!(sc.workload, workload, "{name}");
+            assert_eq!(sc.projection, Projection::Pareto, "{name}");
+            assert!(
+                sc.policies.iter().any(|p| matches!(p, Policy::Adaptive { .. })),
+                "{name}: adaptive policy missing from the comparison set"
+            );
+            assert!(
+                sc.policies.iter().any(|p| matches!(p, Policy::Continuous)),
+                "{name}: continuous ceiling missing"
+            );
+            assert!(matches!(sc.harvesters[0], HarvesterSpec::Synth(_)), "{name}");
+            assert!(sc.seeds.len() >= 10, "{name}");
+            sc.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn pareto_frontier_is_strict_dominance_among_harvesters() {
+        let policies = vec![
+            Policy::Continuous,                  // ceiling: excluded from frontier
+            Policy::Greedy,                      // dominated by smart80 below
+            Policy::Smart { bound: 0.80 },       // dominates greedy
+            Policy::Adaptive { alpha: 0.2, explore: 0.5 }, // trades acc for thrpt
+        ];
+        let mk = |ok: u64, total: u64, emitted: u64| ParetoPool {
+            quality_ok: ok,
+            quality_total: total,
+            emitted,
+            duration: 3600.0,
+            app_energy: 1.0e-3 * emitted as f64,
+            state_energy: 0.0,
+        };
+        let pools = vec![
+            mk(100, 100, 500), // continuous: best everywhere, but a ceiling
+            mk(60, 100, 80),   // greedy
+            mk(80, 100, 90),   // smart80: strictly dominates greedy
+            mk(70, 100, 120),  // adaptive: best harvesting throughput
+        ];
+        let rows = pareto_rows_from_pools(&policies, &pools);
+        assert_eq!(rows.len(), 4);
+        assert!(!rows[0].harvesting && !rows[0].frontier && !rows[0].pick);
+        assert!(!rows[1].frontier, "greedy is dominated by smart80");
+        assert!(rows[2].frontier, "smart80 is non-dominated");
+        assert!(rows[3].frontier, "adaptive is non-dominated");
+        // Pick = max accuracy x throughput among harvesters:
+        // smart80 scores 0.8*90, adaptive 0.7*120 -> adaptive wins.
+        assert!(rows[3].pick && !rows[2].pick && !rows[1].pick);
+        let t = pareto_table("pareto", "t", &rows);
+        assert_eq!(t.rows[0][4], "ceiling");
+        assert_eq!(t.rows[2][4], "yes");
+        assert_eq!(t.rows[3][5], "<-");
+    }
+
+    #[test]
+    fn pareto_pick_breaks_score_ties_toward_the_earlier_policy() {
+        let policies = vec![Policy::Greedy, Policy::Smart { bound: 0.80 }];
+        let pool = ParetoPool {
+            quality_ok: 50,
+            quality_total: 100,
+            emitted: 100,
+            duration: 3600.0,
+            app_energy: 0.1,
+            state_energy: 0.0,
+        };
+        let rows = pareto_rows_from_pools(&policies, &[pool, pool]);
+        assert!(rows[0].pick && !rows[1].pick);
+        // Identical points do not strictly dominate each other.
+        assert!(rows[0].frontier && rows[1].frontier);
     }
 
     #[test]

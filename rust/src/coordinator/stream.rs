@@ -52,8 +52,9 @@ use crate::coordinator::fleet::run_fleet;
 use crate::coordinator::scenario::{
     self, audio_summary_table, cells_row, img_equivalence_tables, img_latency_table,
     img_throughput_table, latency_emulation_table, latency_real_world_table,
-    policy_accuracy_table, policy_coherence_table, policy_vs_chinchilla_table, AudioPolicyRow,
-    CampaignCell, ImgTraceRow, PolicyRow, Projection, Scenario, WorkloadSpec, LATENCY_CYCLES,
+    pareto_rows_from_pools, pareto_table, policy_accuracy_table, policy_coherence_table,
+    policy_vs_chinchilla_table, AudioPolicyRow, CampaignCell, ImgTraceRow, ParetoPool, PolicyRow,
+    Projection, Scenario, WorkloadSpec, LATENCY_CYCLES,
 };
 use crate::coordinator::sink::{emit_all, Sink};
 use crate::coordinator::store::{grid_hash, CellDigest, Needs, Store};
@@ -358,6 +359,11 @@ enum StreamAcc {
     Latency { pools: Vec<LatencyPool> },
     /// Audio summary: one (policies × seeds) block + per-policy sums.
     Audio { block: Vec<Option<CellDigest>>, sums: Vec<AudioSums> },
+    /// Pareto judgement: one pooled digest per policy, O(policies)
+    /// state. Each pool adds cells in the policy's plan order — the
+    /// identical addition sequence the batch `pareto_rows` uses — so the
+    /// folded f64 columns are bitwise equal, not merely close.
+    Pareto { pools: Vec<ParetoPool> },
     /// Figs. 13–15: one harvester group + finished trace rows + pooled
     /// per-picture counts.
     Img {
@@ -394,6 +400,7 @@ impl StreamAcc {
                 block: vec![None; p_n * s_n],
                 sums: vec![AudioSums::default(); p_n],
             },
+            Projection::Pareto => StreamAcc::Pareto { pools: vec![ParetoPool::default(); p_n] },
             Projection::ImgEquivalence | Projection::ImgThroughput | Projection::ImgLatency => {
                 StreamAcc::Img {
                     group: vec![None; s.devices.len() * p_n * s_n],
@@ -455,6 +462,10 @@ impl StreamAcc {
                 if pos == p_n * s_n - 1 {
                     flush_audio_block(s, block, sums);
                 }
+                Ok(())
+            }
+            StreamAcc::Pareto { pools } => {
+                pools[(idx / s_n) % p_n].fold(d);
                 Ok(())
             }
             StreamAcc::Img { group, trace_rows, pooled } => {
@@ -567,6 +578,9 @@ impl StreamAcc {
                     })
                     .collect();
                 sink.table(&audio_summary_table(name, title, &rows))
+            }
+            StreamAcc::Pareto { pools } => {
+                sink.table(&pareto_table(name, title, &pareto_rows_from_pools(&s.policies, pools)))
             }
             StreamAcc::Img { trace_rows, pooled, .. } => {
                 let greedy = s.policies.iter().any(|&q| q == Policy::Greedy);

@@ -53,19 +53,27 @@ impl EnergyProfile {
     }
 
     /// Largest `k` such that steps `0..k` plus `reserve` fit in `budget`.
+    ///
+    /// Total on any input: a non-finite or negative available budget
+    /// (NaN/Inf can reach this from hostile scenario JSON via device-spec
+    /// knobs, and `Inf - Inf` is NaN) affords zero steps rather than
+    /// panicking. Tied prefix sums — zero-energy steps, e.g. perforated
+    /// spans priced at 0 — resolve to the *largest* matching `k`, so a
+    /// free step is never refused.
     pub fn max_steps_within(&self, budget: f64, reserve: f64) -> usize {
-        // cumulative is sorted; binary search for budget - reserve.
         let avail = budget - reserve;
-        if avail < 0.0 {
+        // `!(x >= 0)` also catches NaN, which every ordering comparison
+        // answers `false` to; a plain `< 0.0` would fall through into the
+        // search below and (before this guard) panic in `partial_cmp`.
+        if !(avail >= 0.0) {
             return 0;
         }
-        match self
-            .cumulative
-            .binary_search_by(|e| e.partial_cmp(&avail).unwrap())
-        {
-            Ok(k) => k,
-            Err(ins) => ins.saturating_sub(1),
-        }
+        // `cumulative` is non-decreasing (step energies are >= 0), so the
+        // prefix with `e <= avail` is exactly the affordable prefix; its
+        // length minus one is the largest affordable step count. A binary
+        // search's `Ok(k)` would be an arbitrary index among tied entries,
+        // under-reporting the affordable count.
+        self.cumulative.partition_point(|&e| e <= avail).saturating_sub(1)
     }
 }
 
@@ -93,8 +101,28 @@ impl SmartTable {
 
     /// Minimum feature count whose expected accuracy meets `bound`
     /// (None if even all features fall short).
+    ///
+    /// Contract: the returned `p` satisfies `expected_accuracy[q] >= bound`
+    /// for **every** `q >= p` — it is the first index of the curve's
+    /// *monotone upper envelope* at `bound`, not merely the first crossing.
+    /// Measured accuracy curves are not guaranteed monotone (they dip);
+    /// on the first raw crossing, a GREEDY refinement past `p` could land
+    /// in a dip below the bound, and [`SmartTable::energy_for`] would
+    /// quote a cheaper depth that does not actually deliver the accuracy.
+    /// On monotone curves (every analytic table we ship) this is
+    /// identical to the first crossing.
     pub fn min_features_for(&self, bound: f64) -> Option<usize> {
-        self.expected_accuracy.iter().position(|&a| a >= bound)
+        // Scan from the full-depth end: the envelope index is one past
+        // the last entry below the bound.
+        let mut first = None;
+        for (p, &a) in self.expected_accuracy.iter().enumerate().rev() {
+            if a >= bound {
+                first = Some(p);
+            } else {
+                break;
+            }
+        }
+        first
     }
 
     /// Energy required to meet `bound`: features plus the final emission.
@@ -148,6 +176,64 @@ mod tests {
         // Reserve shaves off the last step.
         let reserve = p.step_energy[3];
         assert!(p.max_steps_within(p.total(), reserve + 1e-15) < 4);
+    }
+
+    #[test]
+    fn max_steps_within_is_total_on_non_finite_budgets() {
+        let p = EnergyProfile::from_costs(&mcu(), &costs(4));
+        // NaN anywhere must afford zero steps, never panic.
+        assert_eq!(p.max_steps_within(f64::NAN, 0.0), 0);
+        assert_eq!(p.max_steps_within(1.0, f64::NAN), 0);
+        assert_eq!(p.max_steps_within(f64::NAN, f64::NAN), 0);
+        // Inf - Inf is NaN; same guard.
+        assert_eq!(p.max_steps_within(f64::INFINITY, f64::INFINITY), 0);
+        // An infinite reserve affords nothing, an infinite budget affords
+        // the whole pipeline.
+        assert_eq!(p.max_steps_within(1.0, f64::INFINITY), 0);
+        assert_eq!(p.max_steps_within(f64::INFINITY, 0.0), 4);
+        assert_eq!(p.max_steps_within(f64::NEG_INFINITY, 0.0), 0);
+    }
+
+    #[test]
+    fn max_steps_within_returns_maximal_k_on_tied_prefix_sums() {
+        // Steps 1..=3 are free (perforated spans priced at zero), so the
+        // cumulative grid carries duplicate entries. The affordable step
+        // count must be the largest matching index: the free steps are
+        // affordable whenever their predecessor is.
+        let zero = OpCost::default();
+        let costs = [OpCost::cycles(1000), zero, zero, zero, OpCost::cycles(1000)];
+        let p = EnergyProfile::from_costs(&mcu(), &costs);
+        assert_eq!(p.cumulative[1], p.cumulative[4], "fixture needs tied prefixes");
+        // Exactly the first step's energy: steps 2..4 are free and must
+        // all be granted, not an arbitrary binary-search match.
+        assert_eq!(p.max_steps_within(p.cumulative[1], 0.0), 4);
+        // A zero budget still affords nothing but index 0's empty prefix.
+        assert_eq!(p.max_steps_within(0.0, 0.0), 0);
+        // An all-free pipeline is fully affordable at zero budget.
+        let free = EnergyProfile::from_costs(&mcu(), &[OpCost::default(); 3]);
+        assert_eq!(free.max_steps_within(0.0, 0.0), 3);
+    }
+
+    #[test]
+    fn min_features_for_uses_the_monotone_upper_envelope() {
+        // A measured curve that dips back under the bound after first
+        // crossing it: position() would return 2, but refining past 2
+        // lands on 0.78 < 0.80 — the quoted depth must be 4, the first
+        // index from which the curve never dips below the bound again.
+        let profile = EnergyProfile::from_costs(&mcu(), &costs(4));
+        let acc = vec![0.1, 0.5, 0.82, 0.78, 0.88];
+        let t = SmartTable::new(acc, &profile, 50e-6);
+        assert_eq!(t.min_features_for(0.8), Some(4));
+        let e = t.energy_for(0.8).unwrap();
+        assert!((e - (profile.cumulative[4] + 50e-6)).abs() < 1e-15);
+        // The envelope never under-prices: feasibility at the envelope
+        // depth is the real gate.
+        assert_eq!(t.feasible(e + 1e-9, 0.8), Some(4));
+        assert_eq!(t.feasible(e - 1e-6, 0.8), None);
+        // Bounds the whole curve meets resolve to depth 0, and bounds
+        // nothing meets stay None.
+        assert_eq!(t.min_features_for(0.05), Some(0));
+        assert_eq!(t.min_features_for(0.95), None);
     }
 
     #[test]

@@ -21,11 +21,15 @@
 //! * [`estimator`] — the offline energy-estimation tool (the paper uses
 //!   EPIC): profiles a step program against the MCU model and builds the
 //!   lookup tables the SMART policy consults at run time.
+//! * [`predictor`] — the online counterpart: a tiny EWMA estimator of
+//!   per-cycle harvest and inter-burst gaps that the adaptive policy
+//!   updates once per power cycle from the engine's realised budget.
 
 pub mod booster;
 pub mod capacitor;
 pub mod estimator;
 pub mod harvester;
 pub mod mcu;
+pub mod predictor;
 pub mod synth;
 pub mod traces;

@@ -1,0 +1,169 @@
+//! Online environment prediction for the adaptive policy family.
+//!
+//! The offline [`estimator`](crate::energy::estimator) answers "what
+//! does depth `k` cost?"; this module answers "what will the *next*
+//! power cycle afford?". It is deliberately tiny: the paper's persistence
+//! discipline allows the adaptive runtime only a few words of learned
+//! state per power cycle, so the predictor is a pair of exponentially
+//! weighted moving averages — realised per-cycle energy budget and
+//! inter-boot gap — each one `f64`, updated **once per power cycle**
+//! from the budget the engine actually realised. No trace history, no
+//! allocation, no RNG: the estimate is a pure fold over observations,
+//! which keeps adaptive sweeps bitwise deterministic.
+//!
+//! *Approxify* frames auto-tuning as matching the approximation setting
+//! to the deployment's energy envelope; the EWMA is that envelope,
+//! learned in place. *Intermittent Learning* shows this class of
+//! constant-space online update survives intermittent power as long as
+//! the state is persisted with the same care as application state — the
+//! adaptive runtime bills every predictor word through the state ledger.
+
+/// Exponentially weighted moving average over per-power-cycle
+/// observations of the energy environment.
+///
+/// The whole struct is the adaptive policy's "world model": two floats
+/// of estimate plus the bookkeeping needed to observe each cycle exactly
+/// once. It is `Copy` so the runtime can persist/restore it as a value.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EwmaPredictor {
+    /// Smoothing factor in `(0, 1]`; higher tracks faster, lower
+    /// averages harder. 1.0 degenerates to "last observation wins".
+    pub alpha: f64,
+    /// Estimated usable energy per power cycle, joules (NaN until the
+    /// first observation).
+    pub energy: f64,
+    /// Estimated gap between consecutive boots, seconds (NaN until two
+    /// boots have been seen).
+    pub gap: f64,
+    /// Boot timestamp of the last observed cycle, seconds.
+    pub last_boot: f64,
+    /// Power cycles folded in so far.
+    pub cycles_seen: u64,
+}
+
+impl EwmaPredictor {
+    pub fn new(alpha: f64) -> EwmaPredictor {
+        assert!(
+            alpha.is_finite() && alpha > 0.0 && alpha <= 1.0,
+            "EWMA alpha must be in (0, 1], got {alpha}"
+        );
+        EwmaPredictor { alpha, energy: f64::NAN, gap: f64::NAN, last_boot: f64::NAN, cycles_seen: 0 }
+    }
+
+    /// Fold in one power cycle's realised budget. `budget` is the usable
+    /// energy the engine reported at boot; `now` is the boot time. The
+    /// caller guarantees one call per power cycle (the adaptive runtime
+    /// keys on the engine's cycle counter).
+    ///
+    /// Non-finite observations are ignored rather than poisoning the
+    /// estimate — a NaN budget can only come from a hostile device spec,
+    /// and the estimator layer already clamps what such a budget affords.
+    pub fn observe(&mut self, budget: f64, now: f64) {
+        if budget.is_finite() && budget >= 0.0 {
+            if self.energy.is_nan() {
+                // Seed directly: an EWMA warmed from zero under-predicts
+                // for 1/alpha cycles, which would pin the bandit at the
+                // shallowest arm exactly when it should be exploring.
+                self.energy = budget;
+            } else {
+                self.energy = self.alpha * budget + (1.0 - self.alpha) * self.energy;
+            }
+        }
+        if now.is_finite() {
+            if self.last_boot.is_finite() {
+                let delta = now - self.last_boot;
+                if delta.is_finite() && delta >= 0.0 {
+                    if self.gap.is_nan() {
+                        self.gap = delta;
+                    } else {
+                        self.gap = self.alpha * delta + (1.0 - self.alpha) * self.gap;
+                    }
+                }
+            }
+            self.last_boot = now;
+        }
+        self.cycles_seen = self.cycles_seen.saturating_add(1);
+    }
+
+    /// Best current estimate of next cycle's budget, or `fallback`
+    /// before the first observation.
+    pub fn energy_or(&self, fallback: f64) -> f64 {
+        if self.energy.is_finite() {
+            self.energy
+        } else {
+            fallback
+        }
+    }
+
+    /// Best current estimate of the inter-boot gap, or `fallback` before
+    /// two boots have been seen.
+    pub fn gap_or(&self, fallback: f64) -> f64 {
+        if self.gap.is_finite() {
+            self.gap
+        } else {
+            fallback
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seeds_from_the_first_observation() {
+        let mut p = EwmaPredictor::new(0.2);
+        assert!(p.energy.is_nan());
+        assert_eq!(p.energy_or(7.0), 7.0);
+        p.observe(3.0e-3, 10.0);
+        assert_eq!(p.energy, 3.0e-3, "first observation seeds, not blends");
+        assert_eq!(p.cycles_seen, 1);
+        assert_eq!(p.gap_or(60.0), 60.0, "one boot gives no gap yet");
+    }
+
+    #[test]
+    fn converges_to_a_constant_environment() {
+        let mut p = EwmaPredictor::new(0.2);
+        for cycle in 0..60 {
+            p.observe(2.5e-3, cycle as f64 * 12.0);
+        }
+        assert!((p.energy - 2.5e-3).abs() < 1e-12);
+        assert!((p.gap - 12.0).abs() < 1e-9);
+        assert_eq!(p.cycles_seen, 60);
+    }
+
+    #[test]
+    fn tracks_a_step_change_geometrically() {
+        let mut p = EwmaPredictor::new(0.5);
+        p.observe(1.0e-3, 0.0);
+        p.observe(3.0e-3, 10.0);
+        assert!((p.energy - 2.0e-3).abs() < 1e-12);
+        p.observe(3.0e-3, 20.0);
+        assert!((p.energy - 2.5e-3).abs() < 1e-12);
+        // Half the remaining distance each cycle: within 2% in 6 cycles.
+        for i in 0..4 {
+            p.observe(3.0e-3, 30.0 + 10.0 * i as f64);
+        }
+        assert!((p.energy - 3.0e-3).abs() < 0.02 * 3.0e-3);
+    }
+
+    #[test]
+    fn ignores_non_finite_observations() {
+        let mut p = EwmaPredictor::new(0.3);
+        p.observe(2.0e-3, 0.0);
+        p.observe(f64::NAN, 5.0);
+        p.observe(f64::INFINITY, 10.0);
+        p.observe(-1.0, 15.0);
+        assert_eq!(p.energy, 2.0e-3, "bad budgets must not poison the estimate");
+        // Time still advances, so the gap keeps learning.
+        assert!((p.gap - 5.0).abs() < 1e-9);
+        p.observe(2.0e-3, f64::NAN);
+        assert_eq!(p.last_boot, 15.0, "non-finite clocks are ignored too");
+    }
+
+    #[test]
+    #[should_panic(expected = "alpha")]
+    fn zero_alpha_is_a_wiring_bug() {
+        EwmaPredictor::new(0.0);
+    }
+}

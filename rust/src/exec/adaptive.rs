@@ -1,0 +1,495 @@
+//! ADAPTIVE — environment-learning approximate intermittent computing.
+//!
+//! GREEDY and SMART (see [`approx`](crate::exec::approx)) hand-set the
+//! anytime knob: GREEDY spends whatever is in the capacitor, SMART holds
+//! a fixed user accuracy bound. *Approxify* (PAPERS.md) argues the
+//! energy-accuracy trade-off should instead be auto-tuned to the
+//! deployment's actual energy envelope, and *Intermittent Learning*
+//! shows constant-space online learning survives intermittent power when
+//! its state is persisted as carefully as application state. ADAPTIVE is
+//! that combination inside the paper's single-power-cycle discipline:
+//!
+//! * an [`EwmaPredictor`] learns the realised per-cycle budget and
+//!   inter-boot gap, updated **once per power cycle** from the same ADC
+//!   read SMART performs anyway;
+//! * a deterministic UCB bandit chooses among a fixed menu of refinement
+//!   depths ([`ARM_FRACTIONS`] of the pipeline: feature count for HAR,
+//!   perforation level for imaging, probe tier for audio), rewarded by
+//!   the emitted accuracy proxy discounted by the energy it burned
+//!   (accuracy per joule, not accuracy at any price);
+//! * the whole learned state is a **bounded, tiny record**
+//!   ([`STATE_WORDS`] FRAM words — two packed EWMA estimates, four
+//!   `(count, mean)` arm cells, a pending-arm marker) persisted through
+//!   the energy ledger like any other state write, and restored (and
+//!   billed) at the first round of every power cycle.
+//!
+//! The crash discipline is write-ahead: the chosen arm is persisted as
+//! *pending* before any step runs. If the cycle dies mid-round, the next
+//! boot finds the pending marker and charges the arm a zero reward — a
+//! death certificate for the depth that overreached — so the bandit
+//! learns survivable depths without ever replaying application work.
+//! Application rounds remain strictly single-cycle (the PR 7 checker
+//! profile is `replays: false, persists: true`).
+//!
+//! Everything here is allocation-free and RNG-free per round: arm
+//! selection is argmax with deterministic tie-breaking, so adaptive
+//! sweeps stay bitwise deterministic for any worker count.
+
+use std::cell::RefCell;
+
+use crate::energy::estimator::SmartTable;
+use crate::energy::mcu::OpCost;
+use crate::energy::predictor::EwmaPredictor;
+use crate::exec::engine::{Engine, Ledger, OpOutcome};
+use crate::exec::runtime::{RoundDriver, RoundOutcome, RoundStrategy, Runtime};
+use crate::exec::tracked::RuntimeProfile;
+use crate::exec::{Campaign, StepProgram};
+
+/// Default EWMA smoothing factor (≈ the last five cycles dominate).
+pub const DEFAULT_ALPHA: f64 = 0.2;
+/// Default UCB exploration weight.
+pub const DEFAULT_EXPLORE: f64 = 0.5;
+/// The bandit's depth menu, as fractions of the full pipeline.
+pub const ARM_FRACTIONS: [f64; 4] = [0.25, 0.5, 0.75, 1.0];
+/// Energy discount in the reward: accuracy minus `λ ·
+/// spent/full-pipeline-cost`. Small, so accuracy dominates and the
+/// discount only breaks ties toward cheaper depths.
+pub const REWARD_ENERGY_WEIGHT: f64 = 0.05;
+/// 16-bit FRAM words of persisted learned state: the two EWMA estimates
+/// packed as f32 (4 words), four arm cells as fixed-point mean + count
+/// (8 words), pending-arm marker + play counter + stamps (4 words).
+/// Constant and tiny by construction — the checker-visible bound on the
+/// paper's "a few words of state" discipline.
+pub const STATE_WORDS: u64 = 16;
+
+/// The invariant profile the correctness harness holds ADAPTIVE to:
+/// rounds never replay and never stretch across power cycles (the
+/// paper's guarantee, same as GREEDY/SMART), but unlike them the runtime
+/// *does* manage persistent state — the bounded learned record above —
+/// so State-ledger operations are expected rather than violations.
+pub fn profile() -> RuntimeProfile {
+    RuntimeProfile { name: "adaptive", replays: false, persists: true }
+}
+
+/// Adaptive runtime configuration.
+#[derive(Clone, Debug)]
+pub struct AdaptiveConfig {
+    /// Seconds between sampling slots.
+    pub sample_period: f64,
+    /// Safety margin multiplier on planned (steps + emit + persist)
+    /// energy, as in the approximate runtimes.
+    pub margin: f64,
+    /// EWMA smoothing factor for the environment predictor, `(0, 1]`.
+    pub alpha: f64,
+    /// UCB exploration weight, `>= 0` (0 = pure exploitation).
+    pub explore: f64,
+    /// The offline depth-cost/accuracy table (same artifact SMART uses).
+    pub table: SmartTable,
+}
+
+impl AdaptiveConfig {
+    pub fn new(sample_period: f64, alpha: f64, explore: f64, table: SmartTable) -> AdaptiveConfig {
+        assert!(
+            alpha.is_finite() && alpha > 0.0 && alpha <= 1.0,
+            "adaptive alpha must be in (0, 1], got {alpha}"
+        );
+        assert!(
+            explore.is_finite() && explore >= 0.0,
+            "adaptive explore must be finite and >= 0, got {explore}"
+        );
+        AdaptiveConfig { sample_period, margin: 1.05, alpha, explore, table }
+    }
+}
+
+/// One bandit arm's sufficient statistics.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ArmStat {
+    /// Times this arm completed (emitted or was charged a death).
+    pub count: u64,
+    /// Running mean reward.
+    pub mean: f64,
+}
+
+/// The complete learned state — everything ADAPTIVE persists. `Copy`,
+/// fixed-size, no heap: the in-memory image of the [`STATE_WORDS`] FRAM
+/// record.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LearnedState {
+    /// Environment model (per-cycle energy + inter-boot gap EWMAs).
+    pub predictor: EwmaPredictor,
+    /// Bandit arms over [`ARM_FRACTIONS`].
+    pub arms: [ArmStat; ARM_FRACTIONS.len()],
+    /// Total completed plays across arms (UCB's `t`).
+    pub plays: u64,
+    /// Arm chosen by a round that has not yet completed. Persisted
+    /// *before* the round's first step: if the cycle dies, the next boot
+    /// finds it and charges the arm a zero reward.
+    pub pending: Option<usize>,
+    /// Engine power-cycle stamp of the last restore (volatile guard; a
+    /// mismatch with `engine.cycles` means we rebooted since last round).
+    pub seen_cycle: u64,
+}
+
+impl LearnedState {
+    pub fn new(alpha: f64) -> LearnedState {
+        LearnedState {
+            predictor: EwmaPredictor::new(alpha),
+            arms: [ArmStat::default(); ARM_FRACTIONS.len()],
+            plays: 0,
+            pending: None,
+            seen_cycle: u64::MAX,
+        }
+    }
+
+    /// Deterministic UCB1 arm selection: unplayed arms first in index
+    /// order, then argmax of `mean + explore * sqrt(ln t / n_i)` with
+    /// ties resolved to the lowest index. No RNG — bitwise reproducible.
+    pub fn select_arm(&self, explore: f64) -> usize {
+        if let Some(i) = self.arms.iter().position(|a| a.count == 0) {
+            return i;
+        }
+        let ln_t = (self.plays.max(1) as f64).ln();
+        let mut best = 0usize;
+        let mut best_score = f64::NEG_INFINITY;
+        for (i, a) in self.arms.iter().enumerate() {
+            let score = a.mean + explore * (ln_t / a.count as f64).sqrt();
+            if score > best_score {
+                best = i;
+                best_score = score;
+            }
+        }
+        best
+    }
+
+    /// Fold a completed play's reward into `arm`.
+    pub fn reward(&mut self, arm: usize, r: f64) {
+        let a = &mut self.arms[arm];
+        a.count += 1;
+        a.mean += (r - a.mean) / a.count as f64;
+        self.plays += 1;
+    }
+
+    /// The depth (step count) `arm` asks for on an `total`-step pipeline.
+    pub fn depth_of(arm: usize, total: usize) -> usize {
+        ((ARM_FRACTIONS[arm] * total as f64).ceil() as usize).clamp(1, total.max(1))
+    }
+}
+
+/// The ADAPTIVE executor in [`Runtime`] form.
+pub struct AdaptiveRuntime {
+    pub cfg: AdaptiveConfig,
+}
+
+impl AdaptiveRuntime {
+    pub fn new(cfg: AdaptiveConfig) -> AdaptiveRuntime {
+        AdaptiveRuntime { cfg }
+    }
+}
+
+impl<P: StepProgram> Runtime<P> for AdaptiveRuntime {
+    fn run(&self, program: &mut P, engine: &mut Engine) -> Campaign<P::Output> {
+        // Fresh learned state per campaign: the runtime object stays
+        // reusable and runs stay independent (and deterministic).
+        let session = AdaptiveSession {
+            cfg: &self.cfg,
+            live: RefCell::new(LearnedState::new(self.cfg.alpha)),
+            committed: RefCell::new(LearnedState::new(self.cfg.alpha)),
+        };
+        RoundDriver::new(self.cfg.sample_period).drive(program, engine, &session)
+    }
+}
+
+/// Per-campaign strategy state. `live` is the volatile SRAM image;
+/// `committed` mirrors what is on FRAM and is only updated by a
+/// successful persist, so a brown-out anywhere leaves exactly the
+/// last-persisted record to restore from.
+struct AdaptiveSession<'a> {
+    cfg: &'a AdaptiveConfig,
+    live: RefCell<LearnedState>,
+    committed: RefCell<LearnedState>,
+}
+
+impl AdaptiveSession<'_> {
+    /// Write the learned record to FRAM (state ledger). On success the
+    /// committed mirror catches up; on brown-out it stays behind and the
+    /// next boot restores the older record — write-ahead semantics.
+    fn persist(&self, engine: &mut Engine, live: &LearnedState) -> bool {
+        let cost = OpCost { fram_writes: STATE_WORDS, ..Default::default() };
+        match engine.run_op(&cost, Ledger::State) {
+            OpOutcome::Done => {
+                *self.committed.borrow_mut() = *live;
+                true
+            }
+            OpOutcome::BrownOut => false,
+        }
+    }
+}
+
+impl<P: StepProgram> RoundStrategy<P> for AdaptiveSession<'_> {
+    fn round(&self, program: &mut P, engine: &mut Engine) -> RoundOutcome<P::Output> {
+        let cfg = self.cfg;
+        let mut st = self.live.borrow_mut();
+
+        // ------ Restore: first round of every power cycle -------------
+        let fresh_cycle = st.seen_cycle != engine.cycles;
+        if fresh_cycle {
+            let restore = OpCost { fram_reads: STATE_WORDS, ..Default::default() };
+            if engine.run_op(&restore, Ledger::State) == OpOutcome::BrownOut {
+                return RoundOutcome::Dropped { steps: 0, sleep: false };
+            }
+            *st = *self.committed.borrow();
+            if let Some(arm) = st.pending.take() {
+                // A previous cycle chose this depth and died before
+                // completing: charge the death. Persist immediately so a
+                // crash loop cannot double-charge (restore + zero-reward
+                // + persist is idempotent until the persist lands).
+                st.reward(arm, 0.0);
+                if !self.persist(engine, &st) {
+                    return RoundOutcome::Dropped { steps: 0, sleep: false };
+                }
+            }
+            st.seen_cycle = engine.cycles;
+        }
+
+        // ------ Acquire the sensor window -----------------------------
+        if engine.run_op(&program.acquire_cost(), Ledger::App) == OpOutcome::BrownOut {
+            return RoundOutcome::Dropped { steps: 0, sleep: false };
+        }
+
+        // ------ Introspect the budget (ADC), feed the predictor -------
+        let budget = match engine.read_budget() {
+            Some(b) => b,
+            None => return RoundOutcome::Dropped { steps: 0, sleep: false },
+        };
+        if fresh_cycle {
+            // Exactly one observation per power cycle: the realised
+            // budget at this cycle's first sampling opportunity.
+            st.predictor.observe(budget, engine.now);
+        }
+
+        // ------ Plan: clamp the bandit's ask to what is affordable ----
+        let table = &cfg.table;
+        let total = program.num_steps().min(table.cumulative_energy.len().saturating_sub(1));
+        let emit_energy = engine.mcu.energy(&program.emit_cost());
+        let persist_energy =
+            engine.mcu.energy(&OpCost { fram_writes: STATE_WORDS, ..Default::default() });
+        // Plan against the *pessimistic* of the live reading and the
+        // learned envelope: a transiently full capacitor in a lean
+        // environment should not bait a depth the next cycles cannot
+        // sustain.
+        let planning_budget = budget.min(st.predictor.energy_or(budget));
+        // Largest depth whose steps + emission + the round's two persists
+        // fit the planning budget with margin. `cumulative_energy` is
+        // non-decreasing, so partition_point finds the frontier (and ties
+        // resolve to the deepest index, per the estimator's contract).
+        let reserve = (emit_energy + 2.0 * persist_energy) * cfg.margin;
+        let affordable = if planning_budget.is_finite() && planning_budget > reserve {
+            table.cumulative_energy[..=total]
+                .partition_point(|&e| e * cfg.margin + reserve <= planning_budget)
+                .saturating_sub(1)
+        } else {
+            0
+        };
+        if affordable == 0 {
+            // Not even the shallowest depth survives: skip deliberately
+            // and wait for the next slot. No arm is charged — skipping
+            // is the planner's decision, not a depth's failure.
+            return RoundOutcome::Dropped { steps: 0, sleep: true };
+        }
+        let arm = st.select_arm(cfg.explore);
+        let target = LearnedState::depth_of(arm, total).min(affordable);
+
+        // ------ Write-ahead: persist the pending arm ------------------
+        st.pending = Some(arm);
+        if !self.persist(engine, &st) {
+            st.pending = None;
+            return RoundOutcome::Dropped { steps: 0, sleep: false };
+        }
+
+        // ------ Execute the chosen depth ------------------------------
+        program.plan(target);
+        let mut k = 0usize;
+        while k < program.planned_steps() {
+            let cost = program.step_cost(k);
+            if engine.run_op(&cost, Ledger::App) == OpOutcome::BrownOut {
+                // The pending marker on FRAM settles the score next boot.
+                return RoundOutcome::Dropped { steps: k, sleep: false };
+            }
+            program.execute_step(k);
+            k += 1;
+        }
+
+        // ------ Emit within the same power cycle ----------------------
+        if engine.run_op(&program.emit_cost(), Ledger::App) == OpOutcome::BrownOut {
+            return RoundOutcome::Dropped { steps: k, sleep: true };
+        }
+        let emitted_at = engine.now;
+        let output = program.output();
+
+        // ------ Reward: accuracy per joule, then commit ---------------
+        let acc = table.expected_accuracy[k.min(table.expected_accuracy.len() - 1)];
+        let full_cost = table.cumulative_energy[total] + emit_energy;
+        let spent = table.cumulative_energy[k] + emit_energy;
+        let discount = if full_cost > 0.0 { spent / full_cost } else { 0.0 };
+        let r = (acc - REWARD_ENERGY_WEIGHT * discount).max(0.0);
+        st.reward(arm, r);
+        st.pending = None;
+        // If this persist browns out the emission still happened; the
+        // committed record keeps the pending marker and the arm is
+        // (conservatively) charged a death next boot instead of the
+        // earned reward. Safe, merely pessimistic.
+        let _ = self.persist(engine, &st);
+        RoundOutcome::Emitted { emitted_at, steps: k, output }
+    }
+}
+
+/// Run the adaptive runtime. Thin wrapper over [`AdaptiveRuntime`].
+pub fn run<P: StepProgram>(
+    program: &mut P,
+    engine: &mut Engine,
+    cfg: &AdaptiveConfig,
+) -> Campaign<P::Output> {
+    AdaptiveRuntime::new(cfg.clone()).run(program, engine)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energy::estimator::{EnergyProfile, SmartTable};
+    use crate::energy::harvester::Harvester;
+    use crate::energy::mcu::{McuModel, OpCost};
+    use crate::exec::engine::EngineConfig;
+    use crate::exec::program::SyntheticProgram;
+
+    fn engine(power: f64, max_time: f64) -> Engine {
+        Engine::new(EngineConfig::paper_default(max_time), Harvester::Constant(power))
+    }
+
+    fn table(steps: usize, cycles: u64, acc_at_full: f64) -> SmartTable {
+        let mcu = McuModel::paper_default();
+        let costs: Vec<OpCost> = (0..steps).map(|_| OpCost::cycles(cycles)).collect();
+        let profile = EnergyProfile::from_costs(&mcu, &costs);
+        let acc: Vec<f64> = (0..=steps)
+            .map(|p| 1.0 / 6.0 + (acc_at_full - 1.0 / 6.0) * p as f64 / steps as f64)
+            .collect();
+        let emit = mcu.energy(&OpCost { cycles: 500, ble_bytes: 1, ..Default::default() });
+        SmartTable::new(acc, &profile, emit)
+    }
+
+    fn cfg(steps: usize, cycles: u64) -> AdaptiveConfig {
+        AdaptiveConfig::new(60.0, DEFAULT_ALPHA, DEFAULT_EXPLORE, table(steps, cycles, 0.88))
+    }
+
+    #[test]
+    fn ucb_plays_every_arm_once_then_exploits() {
+        let mut st = LearnedState::new(0.2);
+        // Unplayed arms drain in index order.
+        for want in 0..ARM_FRACTIONS.len() {
+            let arm = st.select_arm(0.5);
+            assert_eq!(arm, want);
+            st.reward(arm, if want == 2 { 0.9 } else { 0.1 });
+        }
+        // With exploration off, the best mean wins deterministically.
+        assert_eq!(st.select_arm(0.0), 2);
+        // With exploration on, repeated best-arm plays still converge to
+        // the best arm (its bonus shrinks slower than the others' only
+        // logarithmically).
+        for _ in 0..200 {
+            let arm = st.select_arm(0.5);
+            st.reward(arm, if arm == 2 { 0.9 } else { 0.1 });
+        }
+        assert_eq!(st.select_arm(0.5), 2);
+        assert!(st.arms[2].count > 150, "exploitation dominates: {:?}", st.arms);
+    }
+
+    #[test]
+    fn depth_menu_spans_the_pipeline() {
+        assert_eq!(LearnedState::depth_of(0, 140), 35);
+        assert_eq!(LearnedState::depth_of(3, 140), 140);
+        // Tiny pipelines still get a valid, distinct-ish menu.
+        assert_eq!(LearnedState::depth_of(0, 1), 1);
+        assert_eq!(LearnedState::depth_of(3, 1), 1);
+    }
+
+    #[test]
+    fn adaptive_emits_single_cycle_with_bounded_state() {
+        let mut p = SyntheticProgram::new(30, 140, 400_000);
+        let mut e = engine(1.5e-3, 3600.0 * 2.0);
+        let c = run(&mut p, &mut e, &cfg(140, 400_000));
+        let emitted: Vec<_> = c.rounds.iter().filter(|r| r.emitted_at.is_some()).collect();
+        assert!(!emitted.is_empty(), "adaptive must emit under a paper-scale harvest");
+        // The paper's guarantee carries over: zero-cycle latency.
+        assert!(emitted.iter().all(|r| r.latency_cycles == 0));
+        // Unlike GREEDY/SMART the runtime does persist — but only the
+        // bounded learned record: at most restore + three persists per
+        // round (pending, death settlement, commit).
+        assert!(c.state_energy > 0.0, "learned state must be billed");
+        let mcu = McuModel::paper_default();
+        let per_round = mcu.energy(&OpCost { fram_writes: STATE_WORDS, ..Default::default() })
+            * 3.0
+            + mcu.energy(&OpCost { fram_reads: STATE_WORDS, ..Default::default() });
+        assert!(
+            c.state_energy <= per_round * c.rounds.len() as f64 + 1e-12,
+            "state energy {} exceeds the bounded-record ceiling {}",
+            c.state_energy,
+            per_round * c.rounds.len() as f64
+        );
+        assert!(c.violations.is_empty(), "{:?}", c.violations);
+    }
+
+    #[test]
+    fn adaptive_converges_on_a_stationary_environment() {
+        // Constant harvest: the affordable depth is stable, so the
+        // bandit must settle. Assert the tail of the campaign stops
+        // wobbling between depths (the convergence property the issue
+        // asks for; N = one UCB sweep + slack).
+        let mut p = SyntheticProgram::new(100_000, 140, 400_000);
+        let mut e = engine(1.0e-3, 3600.0 * 4.0);
+        let c = run(&mut p, &mut e, &cfg(140, 400_000));
+        let depths: Vec<usize> = c
+            .rounds
+            .iter()
+            .filter(|r| r.emitted_at.is_some())
+            .map(|r| r.steps_executed)
+            .collect();
+        assert!(depths.len() >= 20, "need a campaign to converge over, got {}", depths.len());
+        // UCB keeps a logarithmic trickle of exploration forever, so the
+        // settled regime is modal dominance, not strict constancy: in the
+        // tail one depth must account for at least 70% of emissions.
+        let tail = &depths[depths.len() / 2..];
+        let mode = *tail
+            .iter()
+            .max_by_key(|&&d| tail.iter().filter(|&&x| x == d).count())
+            .unwrap();
+        let share = tail.iter().filter(|&&d| d == mode).count() as f64 / tail.len() as f64;
+        assert!(share >= 0.7, "no dominant depth in the tail: {tail:?}");
+    }
+
+    #[test]
+    fn adaptive_skips_when_nothing_is_affordable() {
+        // Starvation-level harvest: planning must skip, not die mid-round.
+        let mut p = SyntheticProgram::new(10, 140, 400_000);
+        let mut e = engine(5e-6, 3600.0);
+        let c = run(&mut p, &mut e, &cfg(140, 400_000));
+        let skipped = c.rounds.iter().filter(|r| r.emitted_at.is_none()).count();
+        assert!(skipped > 0, "adaptive should skip under starvation");
+        assert!(c.violations.is_empty(), "{:?}", c.violations);
+    }
+
+    #[test]
+    fn two_identical_runs_are_bitwise_identical() {
+        let run_once = || {
+            let mut p = SyntheticProgram::new(50, 140, 400_000);
+            let mut e = engine(0.8e-3, 3600.0);
+            run(&mut p, &mut e, &cfg(140, 400_000))
+        };
+        let (a, b) = (run_once(), run_once());
+        assert_eq!(a.rounds.len(), b.rounds.len());
+        for (x, y) in a.rounds.iter().zip(&b.rounds) {
+            assert_eq!(x.emitted_at, y.emitted_at);
+            assert_eq!(x.steps_executed, y.steps_executed);
+        }
+        assert_eq!(a.app_energy, b.app_energy);
+        assert_eq!(a.state_energy, b.state_energy);
+    }
+}

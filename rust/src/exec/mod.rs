@@ -22,6 +22,10 @@
 //! * [`approx`] — the paper's contribution: the GREEDY and SMART
 //!   approximate-intermittent runtimes that finish (and emit) within the
 //!   current power cycle, needing no persistent state at all.
+//! * [`adaptive`] — the environment-learning extension: an EWMA energy
+//!   predictor plus a UCB bandit over refinement depth that tunes the
+//!   anytime knob online, persisting only a few words of learned state
+//!   per power cycle (billed through the state ledger).
 //! * [`faultplan`] / [`tracked`] — the correctness layer: deterministic
 //!   power-failure injection over the engine's op ordinals, shadow
 //!   access tracking, and the invariant checker (WAR freedom, replay
@@ -30,6 +34,7 @@
 //!   variants the checker must flag (the mutation gate proving the
 //!   harness has teeth).
 
+pub mod adaptive;
 pub mod alpaca;
 pub mod approx;
 pub mod chinchilla;
@@ -66,16 +71,45 @@ pub enum Policy {
     /// Approximate intermittent computing with an accuracy lower bound:
     /// skip samples the current budget cannot classify at `bound`.
     Smart { bound: f64 },
+    /// Environment-learning approximate intermittent computing: an EWMA
+    /// harvest predictor (smoothing factor `alpha`) plus a UCB bandit
+    /// (exploration weight `explore`) choose the refinement depth online.
+    Adaptive { alpha: f64, explore: f64 },
 }
 
 impl Policy {
+    /// Canonical policy name. The store's grid hash and every sink table
+    /// key on this string, so `name()` ↔ [`FromStr`] must round-trip
+    /// **losslessly**: `parse(name(p)) == p` for every representable
+    /// parameter. Whole-percent SMART bounds keep the legacy `smartNN`
+    /// spelling (so existing goldens, grid hashes and stored campaigns
+    /// stay byte-identical); any other bound falls back to Rust's
+    /// shortest-round-trip float formatting (`smart:0.8300000000000001`),
+    /// which `FromStr` parses back to the identical bits.
     pub fn name(&self) -> String {
         match self {
             Policy::Continuous => "continuous".into(),
             Policy::Chinchilla => "chinchilla".into(),
             Policy::Alpaca => "alpaca".into(),
             Policy::Greedy => "greedy".into(),
-            Policy::Smart { bound } => format!("smart{:02}", (bound * 100.0).round() as u32),
+            Policy::Smart { bound } => {
+                let pct = (bound * 100.0).round();
+                // The legacy spelling is exact only when the percent grid
+                // reproduces the bound bit-for-bit (the parser computes
+                // `pct / 100.0`, so compare against that same expression).
+                if (0.0..=100.0).contains(&pct) && pct / 100.0 == *bound {
+                    format!("smart{:02}", pct as u32)
+                } else {
+                    format!("smart:{bound}")
+                }
+            }
+            Policy::Adaptive { alpha, explore } => {
+                if *alpha == adaptive::DEFAULT_ALPHA && *explore == adaptive::DEFAULT_EXPLORE {
+                    "adaptive".into()
+                } else {
+                    format!("adaptive:{alpha}:{explore}")
+                }
+            }
         }
     }
 
@@ -83,8 +117,9 @@ impl Policy {
     ///
     /// The [`RuntimeSpec`] carries the workload-provided knobs: the
     /// sampling period for every policy, and the offline lookup table
-    /// SMART consults (panics if a `Smart` policy is constructed without
-    /// one — that is a wiring bug, not a runtime condition).
+    /// SMART and ADAPTIVE consult (panics if a `Smart` or `Adaptive`
+    /// policy is constructed without one — that is a wiring bug, not a
+    /// runtime condition).
     pub fn runtime<P: StepProgram>(&self, spec: &RuntimeSpec) -> Box<dyn Runtime<P>> {
         match *self {
             Policy::Continuous => {
@@ -114,6 +149,18 @@ impl Policy {
                     table,
                 )))
             }
+            Policy::Adaptive { alpha, explore } => {
+                let table = spec
+                    .smart_table
+                    .clone()
+                    .expect("Policy::Adaptive needs RuntimeSpec::smart_table");
+                Box::new(adaptive::AdaptiveRuntime::new(adaptive::AdaptiveConfig::new(
+                    spec.sample_period,
+                    alpha,
+                    explore,
+                    table,
+                )))
+            }
         }
     }
 
@@ -125,6 +172,7 @@ impl Policy {
             Policy::Chinchilla => chinchilla::profile(),
             Policy::Alpaca => alpaca::profile(),
             Policy::Greedy | Policy::Smart { .. } => approx::profile(),
+            Policy::Adaptive { .. } => adaptive::profile(),
         }
     }
 }
@@ -135,27 +183,57 @@ impl std::str::FromStr for Policy {
     type Err = String;
 
     /// Parse a CLI policy name: `continuous`, `chinchilla`, `alpaca`,
-    /// `greedy`, or `smartNN` (`NN` = accuracy bound in percent, e.g.
-    /// `smart60`, `smart80`). Unknown names are an error — no silent
-    /// fallback.
+    /// `greedy`, `smartNN` (`NN` = accuracy bound in percent, e.g.
+    /// `smart60`, `smart80`), `smart:BOUND` (exact fractional bound,
+    /// shortest-round-trip float), `adaptive` (default learning knobs),
+    /// or `adaptive:ALPHA:EXPLORE`. Unknown names are an error — no
+    /// silent fallback.
     fn from_str(s: &str) -> Result<Policy, String> {
+        let err = || {
+            format!(
+                "unknown policy '{s}' (expected greedy|smartNN|smart:BOUND|\
+                 adaptive[:ALPHA:EXPLORE]|chinchilla|alpaca|continuous)"
+            )
+        };
         match s {
-            "continuous" => Ok(Policy::Continuous),
-            "chinchilla" => Ok(Policy::Chinchilla),
-            "alpaca" => Ok(Policy::Alpaca),
-            "greedy" => Ok(Policy::Greedy),
-            _ => s
-                .strip_prefix("smart")
-                .and_then(|pct| pct.parse::<u32>().ok())
-                .filter(|&pct| pct <= 100)
-                .map(|pct| Policy::Smart { bound: pct as f64 / 100.0 })
-                .ok_or_else(|| {
-                    format!(
-                        "unknown policy '{s}' \
-                         (expected greedy|smartNN|chinchilla|alpaca|continuous)"
-                    )
-                }),
+            "continuous" => return Ok(Policy::Continuous),
+            "chinchilla" => return Ok(Policy::Chinchilla),
+            "alpaca" => return Ok(Policy::Alpaca),
+            "greedy" => return Ok(Policy::Greedy),
+            "adaptive" => {
+                return Ok(Policy::Adaptive {
+                    alpha: adaptive::DEFAULT_ALPHA,
+                    explore: adaptive::DEFAULT_EXPLORE,
+                })
+            }
+            _ => {}
         }
+        if let Some(rest) = s.strip_prefix("adaptive:") {
+            let (a, e) = rest.split_once(':').ok_or_else(err)?;
+            let alpha: f64 = a.parse().map_err(|_| err())?;
+            let explore: f64 = e.parse().map_err(|_| err())?;
+            if alpha.is_finite()
+                && alpha > 0.0
+                && alpha <= 1.0
+                && explore.is_finite()
+                && explore >= 0.0
+            {
+                return Ok(Policy::Adaptive { alpha, explore });
+            }
+            return Err(err());
+        }
+        if let Some(rest) = s.strip_prefix("smart:") {
+            let bound: f64 = rest.parse().map_err(|_| err())?;
+            if bound.is_finite() && (0.0..=1.0).contains(&bound) {
+                return Ok(Policy::Smart { bound });
+            }
+            return Err(err());
+        }
+        s.strip_prefix("smart")
+            .and_then(|pct| pct.parse::<u32>().ok())
+            .filter(|&pct| pct <= 100)
+            .map(|pct| Policy::Smart { bound: pct as f64 / 100.0 })
+            .ok_or_else(err)
     }
 }
 
@@ -224,9 +302,52 @@ mod tests {
             Policy::Greedy,
             Policy::Smart { bound: 0.60 },
             Policy::Smart { bound: 0.80 },
+            Policy::Adaptive {
+                alpha: adaptive::DEFAULT_ALPHA,
+                explore: adaptive::DEFAULT_EXPLORE,
+            },
+            Policy::Adaptive { alpha: 0.25, explore: 1.5 },
         ] {
             let parsed: Policy = policy.name().parse().expect("round trip");
             assert_eq!(parsed, policy, "{}", policy.name());
+        }
+    }
+
+    #[test]
+    fn smart_bounds_round_trip_losslessly() {
+        // The store's grid hash and the sink tables key on name(), so a
+        // lossy round-trip silently forks resumed campaigns. Exercise the
+        // full legacy percent grid plus bounds the grid cannot represent
+        // (the issue's 0.8300000000000001 is the double right above 0.83).
+        let mut bounds: Vec<f64> = (0..=100).map(|i| i as f64 / 100.0).collect();
+        bounds.extend([
+            0.8300000000000001,
+            0.835,
+            1.0 / 3.0,
+            0.605,
+            f64::EPSILON,
+            1.0 - f64::EPSILON,
+        ]);
+        for bound in bounds {
+            let p = Policy::Smart { bound };
+            let name = p.name();
+            let parsed: Policy = name.parse().unwrap_or_else(|e| panic!("{e}"));
+            assert_eq!(parsed, p, "bound {bound:?} via '{name}'");
+        }
+        // Whole percents keep the legacy spelling: goldens and stored
+        // grid hashes must not change under the lossless fallback.
+        assert_eq!(Policy::Smart { bound: 0.60 }.name(), "smart60");
+        assert_eq!(Policy::Smart { bound: 0.80 }.name(), "smart80");
+        assert_eq!(Policy::Smart { bound: 0.05 }.name(), "smart05");
+        assert_eq!(
+            Policy::Smart { bound: 0.8300000000000001 }.name(),
+            "smart:0.8300000000000001"
+        );
+        // Adaptive knobs ride the same shortest-round-trip formatting.
+        for (alpha, explore) in [(0.3, 0.7), (0.1 + 0.2, 1.0 / 7.0), (1.0, 0.0)] {
+            let p = Policy::Adaptive { alpha, explore };
+            let parsed: Policy = p.name().parse().unwrap_or_else(|e| panic!("{e}"));
+            assert_eq!(parsed, p, "{}", p.name());
         }
     }
 
@@ -236,5 +357,15 @@ mod tests {
         assert!("".parse::<Policy>().is_err());
         assert!("smartly".parse::<Policy>().is_err());
         assert!("smart999".parse::<Policy>().is_err());
+        // Malformed parametrised spellings are hard errors too.
+        assert!("smart:".parse::<Policy>().is_err());
+        assert!("smart:1.5".parse::<Policy>().is_err());
+        assert!("smart:-0.1".parse::<Policy>().is_err());
+        assert!("smart:nan".parse::<Policy>().is_err());
+        assert!("adaptive:".parse::<Policy>().is_err());
+        assert!("adaptive:0.5".parse::<Policy>().is_err());
+        assert!("adaptive:0:1".parse::<Policy>().is_err());
+        assert!("adaptive:0.5:-1".parse::<Policy>().is_err());
+        assert!("adaptive:inf:1".parse::<Policy>().is_err());
     }
 }

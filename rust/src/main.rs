@@ -41,6 +41,10 @@ COMMANDS:
   synth_rf        audio on a generated duty-cycled RF environment family
   synth_multi     HAR on a generated multi-source (amalgamated) device
                   (10 environment seeds each; see energy/synth)
+  adaptive_solar  adaptive learner vs static policies on the solar family
+  adaptive_rf     adaptive learner vs static policies on the RF family
+  adaptive_multi  adaptive learner vs static policies on the multi-source
+                  family (Pareto projection: frontier + auto-selection)
   all             every figure in sequence
   sweep FILE      run a scenario file: any workload (har|img|audio) x
                   harvester x device x policy x seed grid (also:
@@ -56,7 +60,8 @@ COMMANDS:
                   export — dump to stdout: --format csv|json|sql
   traces          synthetic energy trace statistics (Fig. 11)
   artifacts-check load + execute every AOT artifact through PJRT
-  simulate        one campaign: --policy greedy|smartNN|chinchilla|alpaca|continuous
+  simulate        one campaign: --policy greedy|smartNN|smart:BOUND|
+                  adaptive[:ALPHA:EXPLORE]|chinchilla|alpaca|continuous
                   --supply rf|som|sim|sor|sir|kinetic|synth:SPEC.json
                   (--trace is an alias) --horizon secs
                   --workload har|img|audio (default: har on kinetic,

@@ -1,7 +1,7 @@
 //! Intermittence fault-injection correctness suite.
 //!
-//! Every shipping runtime — continuous, Chinchilla, Alpaca, GREEDY and
-//! SMART — is driven through [`run_checked`]: the program is wrapped in
+//! Every shipping runtime — continuous, Chinchilla, Alpaca, GREEDY,
+//! SMART and ADAPTIVE — is driven through [`run_checked`]: the program is wrapped in
 //! a [`TrackedProgram`] shadow, the engine is armed with a [`FaultPlan`],
 //! and the resulting totally-ordered trace is checked for WAR-hazard
 //! freedom, replay idempotence, monotone commit and volatility
@@ -35,6 +35,7 @@ use aic::exec::mutants::{
     EarlyCommitAlpacaRuntime, EmitBeforeCommitRuntime, NoWarChinchillaRuntime,
     PersistentGreedyRuntime,
 };
+use aic::exec::adaptive::STATE_WORDS;
 use aic::exec::program::SyntheticProgram;
 use aic::exec::{
     alpaca, approx, chinchilla, run_checked, CheckedRun, FaultPlan, Policy, RuntimeSpec,
@@ -84,6 +85,7 @@ fn synthetic_policies() -> Vec<Policy> {
         Policy::Alpaca,
         Policy::Greedy,
         Policy::Smart { bound: 0.60 },
+        Policy::Adaptive { alpha: 0.2, explore: 0.5 },
     ]
 }
 
@@ -108,7 +110,7 @@ fn checked_synthetic(policy: Policy, kind: EngineKind, plan: FaultPlan) -> Check
     // single-cycle rounds) must still hold.
     let engine = harvesting(kind, SYN_HORIZON);
     let mut spec = RuntimeSpec::new(PERIOD);
-    if let Policy::Smart { .. } = policy {
+    if matches!(policy, Policy::Smart { .. } | Policy::Adaptive { .. }) {
         spec = spec.with_smart_table(synthetic_table());
     }
     let rt = policy.runtime::<TrackedProgram<SyntheticProgram>>(&spec);
@@ -136,6 +138,27 @@ fn assert_cell_invariants(cell: &str, policy: Policy, run: &CheckedRun<usize>) {
                 run.campaign.state_energy, 0.0,
                 "{cell}: approx runtime billed the state ledger"
             );
+        }
+        Policy::Adaptive { .. } => {
+            // The learner persists a bounded few-words state: at most
+            // one restore read plus three persists of `STATE_WORDS` per
+            // round, every one billed through the state ledger.
+            let mcu = McuModel::paper_default();
+            let per_round = mcu.energy(&OpCost {
+                fram_reads: STATE_WORDS,
+                fram_writes: 3 * STATE_WORDS,
+                ..Default::default()
+            });
+            let ceiling = per_round * run.campaign.rounds.len().max(1) as f64;
+            assert!(
+                run.campaign.state_energy <= ceiling + 1e-12,
+                "{cell}: state energy {} above the bounded-state ceiling {}",
+                run.campaign.state_energy,
+                ceiling
+            );
+            for r in run.campaign.emitted() {
+                assert_eq!(r.latency_cycles, 0, "{cell}: adaptive emit crossed a cycle");
+            }
         }
         Policy::Continuous => {}
     }
