@@ -1,0 +1,79 @@
+//! Fleet delta-sync bench (the sync layer's §Perf deliverable).
+//!
+//! Three costs matter at sweep scale: the per-observation column write
+//! (version bump + cell upsert + log append), the pairwise exchange
+//! (delta extraction, join, ack gossip, GC), and the end-to-end fleet
+//! cell (event loop over observations and rendezvous). The first two
+//! are microbenches — a 600-meeting cell performs thousands of them —
+//! and the cell bench is the number a `fleet_*` sweep multiplies by its
+//! grid size.
+//!
+//! Honours `AIC_BENCH_FAST` (CI smoke) and `AIC_BENCH_OUT` (JSON
+//! artifact). The sync layer never touches the device integrator, so
+//! there is no `AIC_ENGINE` axis here.
+
+use aic::coordinator::sync::{exchange, run_fleet_cell, FleetSpec, Replica};
+use aic::energy::harvester::Harvester;
+use aic::util::bench::{black_box, Bench};
+
+fn main() {
+    let fast = std::env::var("AIC_BENCH_FAST").is_ok();
+    let b = Bench::new("fleet_sync");
+
+    // Column writes: one version bump + cell upsert + log append each.
+    // Every observation a device makes lands here.
+    b.bench_throughput("sync/write_1k", 1000, || {
+        let mut r = Replica::new(0, 4);
+        for i in 0..1000u32 {
+            r.write(i % 64, (i % 3) as u8, i as f64 * 0.5);
+        }
+        black_box(r.log_entries());
+    });
+
+    // One rendezvous between two replicas with fresh divergence: delta
+    // extraction both ways, join, ack gossip, GC.
+    b.bench_throughput("sync/exchange_100", 100, || {
+        let mut a = Replica::new(0, 2);
+        let mut c = Replica::new(1, 2);
+        let mut bytes = 0u64;
+        for round in 0..100u32 {
+            for w in 0..8u32 {
+                a.write(round * 8 + w, 0, w as f64);
+                c.write(round * 8 + w, 1, w as f64 + 0.5);
+            }
+            bytes += exchange(&mut a, &mut c).bytes;
+        }
+        black_box(bytes);
+    });
+
+    // GC pressure: a triangle where one replica lags, then catches up —
+    // the ack matrix and prune walk at their least favourable.
+    b.bench_throughput("sync/gc_triangle_100", 100, || {
+        let mut pruned = 0u64;
+        for _ in 0..100 {
+            let mut fleet: Vec<Replica> = (0..3).map(|i| Replica::new(i, 3)).collect();
+            for i in 0..3usize {
+                for w in 0..16u32 {
+                    fleet[i].write(w, i as u8, w as f64);
+                }
+            }
+            for &(i, j) in &[(0, 1), (0, 1), (1, 2), (0, 2), (0, 1), (1, 2)] {
+                let (lo, hi) = fleet.split_at_mut(j);
+                exchange(&mut lo[i], &mut hi[0]);
+            }
+            pruned += fleet.iter().map(|r| r.gc_pruned).sum::<u64>();
+        }
+        black_box(pruned);
+    });
+
+    // End-to-end: one fleet cell on constant supplies (every meeting
+    // happens, so this is the dense upper bound a sweep cell costs).
+    let spec = FleetSpec { devices: if fast { 4 } else { 8 }, ..FleetSpec::default() };
+    let horizon = if fast { 600.0 } else { 1800.0 };
+    let supplies: Vec<Harvester> =
+        (0..spec.devices).map(|_| Harvester::Constant(2.0e-3)).collect();
+    b.bench("fleet_cell_constant", || {
+        let f = run_fleet_cell(&spec, &supplies, horizon, 42);
+        black_box((f.meetings, f.bytes));
+    });
+}

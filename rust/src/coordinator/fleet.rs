@@ -27,11 +27,25 @@ pub fn max_workers() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
 }
 
+/// The pool size `run_fleet` will actually spawn for `requested` workers
+/// over `jobs` jobs.
+///
+/// An explicit request wins: `Some(n)` yields a pool of `max(n, 1)`
+/// threads (capped only by the job count — more threads than jobs would
+/// just idle). The `AIC_WORKERS` / core-count cap from [`max_workers`]
+/// applies **only** to the default `None` path; a caller asserting
+/// "run this with 8 workers" (e.g. a determinism gate sweeping pool
+/// sizes) must get 8 even when the environment pins the default to 2.
+pub fn resolve_workers(requested: Option<usize>, jobs: usize) -> usize {
+    requested.unwrap_or_else(max_workers).max(1).min(jobs.max(1))
+}
+
 /// Run `run` over every job on a bounded worker pool and return the
 /// results **in job order**.
 ///
-/// `workers` requests a pool size; it is clamped to
-/// `[1, available_parallelism]` and never exceeds the job count. Workers
+/// `workers` requests a pool size, realised by [`resolve_workers`]: an
+/// explicit `Some(n)` is honoured as-is (never env-clamped), `None`
+/// falls back to the `AIC_WORKERS` / core-count default. Workers
 /// pull job indices from a shared counter, so an expensive job never
 /// head-of-line-blocks the rest of the fleet; each result lands in the
 /// slot of its job index, which makes the output independent of both the
@@ -42,8 +56,7 @@ where
     T: Send,
     F: Fn(&J) -> T + Sync,
 {
-    let cap = max_workers();
-    let workers = workers.unwrap_or(cap).clamp(1, cap).min(jobs.len().max(1));
+    let workers = resolve_workers(workers, jobs.len());
     let next = AtomicUsize::new(0);
     let slots: Vec<Mutex<Option<T>>> = jobs.iter().map(|_| Mutex::new(None)).collect();
     std::thread::scope(|scope| {
@@ -85,6 +98,74 @@ mod tests {
             let got = run_fleet(&jobs, Some(workers), |&j| j * j);
             assert_eq!(got, reference, "workers={workers}");
         }
+    }
+
+    /// Regression: an explicit worker request used to be clamped to
+    /// `max_workers()`, which reads `AIC_WORKERS` — so with the CI pin
+    /// `AIC_WORKERS=2`, gates claiming "workers ∈ {1,2,8}" silently
+    /// exercised pool size 2 three times. `Some(n)` must win over env.
+    #[test]
+    fn explicit_worker_requests_beat_the_env_cap() {
+        let saved = std::env::var("AIC_WORKERS").ok();
+        std::env::set_var("AIC_WORKERS", "2");
+        let resolved = resolve_workers(Some(8), 100);
+        let default = resolve_workers(None, 100);
+        // Restore before asserting so a failure can't leak the pin into
+        // other tests (results are pool-size independent anyway).
+        match saved {
+            Some(v) => std::env::set_var("AIC_WORKERS", v),
+            None => std::env::remove_var("AIC_WORKERS"),
+        }
+        assert_eq!(resolved, 8, "explicit Some(8) was clamped by AIC_WORKERS");
+        assert_eq!(default, 2, "None must still take the env default");
+    }
+
+    #[test]
+    fn resolved_pool_never_exceeds_jobs_and_never_hits_zero() {
+        assert_eq!(resolve_workers(Some(8), 3), 3, "more threads than jobs just idle");
+        assert_eq!(resolve_workers(Some(0), 10), 1, "a zero request still runs");
+        assert_eq!(resolve_workers(Some(5), 0), 1, "empty plans keep a worker");
+    }
+
+    /// The realised pool really spawns what was requested: each job
+    /// parks until all `n` workers have checked in, so any clamp below
+    /// `n` would deadlock (caught by the watchdog) instead of passing
+    /// silently.
+    #[test]
+    fn explicit_pool_size_is_realised_by_run_fleet() {
+        use std::sync::atomic::AtomicBool;
+        use std::sync::Condvar;
+        let n = 4usize;
+        let jobs: Vec<usize> = (0..n).collect();
+        let arrivals = Mutex::new(0usize);
+        let all_in = Condvar::new();
+        let failed = AtomicBool::new(false);
+        let got = run_fleet(&jobs, Some(n), |&j| {
+            let mut count = arrivals.lock().unwrap();
+            *count += 1;
+            if *count == n {
+                all_in.notify_all();
+            } else {
+                // Wait for the other workers; a pool smaller than n can
+                // never fill the barrier, so time out and flag instead
+                // of hanging the suite.
+                let deadline = std::time::Duration::from_secs(10);
+                while *count < n {
+                    let (guard, timeout) = all_in.wait_timeout(count, deadline).unwrap();
+                    count = guard;
+                    if timeout.timed_out() {
+                        failed.store(true, Ordering::Relaxed);
+                        break;
+                    }
+                }
+            }
+            j
+        });
+        assert!(
+            !failed.load(Ordering::Relaxed),
+            "run_fleet(Some({n})) realised a smaller pool: {n} jobs never ran concurrently"
+        );
+        assert_eq!(got, jobs);
     }
 
     #[test]

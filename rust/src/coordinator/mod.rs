@@ -25,6 +25,11 @@
 //! * [`stream`] — streaming sweeps: lazy chunked cells through the fleet
 //!   pool into O(1)-memory incremental projections, bitwise-identical to
 //!   the batch path and resumable from a [`store::Store`].
+//! * [`sync`] — simulated multi-device fleets with coordination-free
+//!   delta sync: per-column-versioned replicas exchanging only changed
+//!   columns at deterministic powered-overlap rendezvous, with symmetric
+//!   tiebreakers and gossip-acked GC (merge order never changes the
+//!   converged state).
 
 pub mod experiment;
 pub mod fleet;
@@ -33,3 +38,4 @@ pub mod scenario;
 pub mod sink;
 pub mod store;
 pub mod stream;
+pub mod sync;

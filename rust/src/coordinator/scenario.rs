@@ -32,7 +32,8 @@ use crate::coordinator::experiment::{
 use crate::coordinator::fleet::run_fleet;
 use crate::coordinator::metrics;
 use crate::coordinator::sink::{f2, pct, ratio, TableData};
-use crate::coordinator::store::digest::{CellDigest, Needs};
+use crate::coordinator::store::digest::{CellDigest, FleetDigest, Needs};
+use crate::coordinator::sync::{self, FleetSpec};
 use crate::energy::capacitor::Capacitor;
 use crate::energy::harvester::{kinetic_power_trace, Harvester, KineticConfig};
 use crate::energy::synth::SynthSpec;
@@ -244,11 +245,18 @@ pub enum WorkloadSpec {
     AccuracyCurve { ps: Vec<usize> },
     /// Fig. 12 offline analysis: corner output per perforation rate.
     Perforation { size: usize, skips: Vec<f64> },
+    /// Multi-device fleet with coordination-free delta sync: each cell
+    /// simulates N devices on per-seed substreams of the cell's supply,
+    /// meeting opportunistically ([`sync::run_fleet_cell`]).
+    Fleet(FleetSpec),
 }
 
 impl WorkloadSpec {
     pub fn is_campaign(&self) -> bool {
-        matches!(self, WorkloadSpec::Har | WorkloadSpec::Img | WorkloadSpec::Audio)
+        matches!(
+            self,
+            WorkloadSpec::Har | WorkloadSpec::Img | WorkloadSpec::Audio | WorkloadSpec::Fleet(_)
+        )
     }
 
     fn to_json(&self) -> Value {
@@ -256,6 +264,7 @@ impl WorkloadSpec {
             WorkloadSpec::Har => "har".into(),
             WorkloadSpec::Img => "img".into(),
             WorkloadSpec::Audio => "audio".into(),
+            WorkloadSpec::Fleet(fs) => fs.to_json(),
             WorkloadSpec::AccuracyCurve { ps } => Value::obj(vec![
                 ("kind", "accuracy-curve".into()),
                 ("ps", Value::Arr(ps.iter().map(|&p| Value::Num(p as f64)).collect())),
@@ -320,7 +329,8 @@ impl WorkloadSpec {
                     .collect::<Result<Vec<f64>, String>>()?;
                 Ok(WorkloadSpec::Perforation { size, skips })
             }
-            _ => Err("workload object needs kind: accuracy-curve|perforation".to_string()),
+            Some("fleet") => Ok(WorkloadSpec::Fleet(FleetSpec::from_json(v)?)),
+            _ => Err("workload object needs kind: accuracy-curve|perforation|fleet".to_string()),
         }
     }
 }
@@ -486,6 +496,15 @@ pub enum Projection {
     /// policy with Pareto-frontier and Approxify-style auto-selection
     /// markers (any campaign workload).
     Pareto,
+    /// Fleet-level detection latency: coverage and mean time from a
+    /// detection to fleet-wide knowledge, per cell.
+    FleetLatency,
+    /// Convergence time vs duty cycle: when the fleet's replicas last
+    /// diverged, against how often its devices were powered.
+    FleetConvergence,
+    /// Wire-cost accounting: bytes synced, per-exchange cost, GC
+    /// effectiveness.
+    FleetBytes,
 }
 
 impl Projection {
@@ -504,6 +523,9 @@ impl Projection {
             Projection::ImgLatency => "img-latency",
             Projection::AudioSummary => "audio-summary",
             Projection::Pareto => "pareto",
+            Projection::FleetLatency => "fleet-latency",
+            Projection::FleetConvergence => "fleet-convergence",
+            Projection::FleetBytes => "fleet-bytes",
         }
     }
 
@@ -522,6 +544,9 @@ impl Projection {
             Projection::ImgLatency,
             Projection::AudioSummary,
             Projection::Pareto,
+            Projection::FleetLatency,
+            Projection::FleetConvergence,
+            Projection::FleetBytes,
         ]
         .into_iter()
         .find(|p| p.name() == s)
@@ -571,6 +596,11 @@ impl Scenario {
                 2.0 * 3600.0,
                 30.0,
                 TraceKind::ALL.iter().map(|&k| HarvesterSpec::Ambient(k)).collect(),
+            ),
+            WorkloadSpec::Fleet(_) => (
+                3600.0,
+                60.0,
+                vec![HarvesterSpec::Synth(SynthSpec::builtin_solar())],
             ),
             _ => (0.0, 0.0, Vec::new()),
         };
@@ -715,9 +745,10 @@ impl Scenario {
     /// ▸ seeds). A pure function of the spec.
     pub fn plan(&self) -> JobPlan {
         match &self.workload {
-            WorkloadSpec::Har | WorkloadSpec::Img | WorkloadSpec::Audio => {
-                JobPlan::Campaigns(self.cells().collect())
-            }
+            WorkloadSpec::Har
+            | WorkloadSpec::Img
+            | WorkloadSpec::Audio
+            | WorkloadSpec::Fleet(_) => JobPlan::Campaigns(self.cells().collect()),
             WorkloadSpec::AccuracyCurve { ps } => JobPlan::Accuracy(ps.clone()),
             WorkloadSpec::Perforation { skips, .. } => JobPlan::Perforation(
                 Picture::ALL
@@ -807,6 +838,11 @@ impl Scenario {
                     };
                     let workload = AudioWorkload { spec, harvester: cell.harvester.clone() };
                     run_campaign_cached(&workload, cell.seed, cell.policy, &cell.device, cache)
+                }))
+            }
+            (WorkloadSpec::Fleet(fs), JobPlan::Campaigns(cells)) => {
+                GridData::Fleet(run_fleet(cells, workers, |cell| {
+                    fleet_cell_digest(fs, cell, s.horizon)
                 }))
             }
             (WorkloadSpec::AccuracyCurve { ps }, _) => {
@@ -988,6 +1024,18 @@ impl Scenario {
                     ));
                 }
             }
+            if let WorkloadSpec::Fleet(fs) = &self.workload {
+                // Execution policies are per-device knobs; the fleet axis
+                // multiplies devices, not policies.
+                if self.policies.len() != 1 {
+                    return Err(format!(
+                        "fleet scenarios take exactly one policy, got {}",
+                        self.policies.len()
+                    ));
+                }
+                fs.validate()?;
+                fs.validate_with_horizon(self.horizon)?;
+            }
         }
         let ok = match &self.workload {
             WorkloadSpec::Har => matches!(
@@ -1011,6 +1059,10 @@ impl Scenario {
                 matches!(self.projection, Cells | AccuracyCurve)
             }
             WorkloadSpec::Perforation { .. } => matches!(self.projection, Cells | Perforation),
+            WorkloadSpec::Fleet(..) => matches!(
+                self.projection,
+                Cells | FleetLatency | FleetConvergence | FleetBytes
+            ),
         };
         if !ok {
             return Err(format!(
@@ -1051,6 +1103,20 @@ impl JobPlan {
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
+}
+
+/// Run one fleet cell and digest it. The cell's harvester spec is the
+/// *family*: each of the N devices builds its own correlated-but-distinct
+/// member via [`sync::device_seed`] substreams, so a `fleet_solar` fleet
+/// shares the weather but not the exact clouds. Shared by the batch grid
+/// ([`Scenario::run_cached`]) and the streaming sweep — one code path is
+/// what makes their outputs bitwise-identical.
+pub fn fleet_cell_digest(fs: &FleetSpec, cell: &CampaignCell, horizon: f64) -> CellDigest {
+    let supplies: Vec<Harvester> = (0..fs.devices)
+        .map(|d| cell.harvester.build(horizon, sync::device_seed(cell.seed, d)))
+        .collect();
+    let f = sync::run_fleet_cell(fs, &supplies, horizon, cell.seed);
+    CellDigest::of_fleet(&f, horizon)
 }
 
 // (The typed optional JSON accessors live in `util::json` — shared with
@@ -1229,6 +1295,10 @@ pub enum GridData {
     Audio(Vec<Campaign<AudioOutput>>),
     Accuracy(Vec<Fig4Row>),
     Perforation(Vec<Fig12Row>),
+    /// Fleet cells digest in the worker (N replicas are dropped there),
+    /// so the batch grid holds exactly what the stream accumulators and
+    /// the store hold — bitwise agreement by construction.
+    Fleet(Vec<CellDigest>),
 }
 
 /// A completed sweep: the resolved scenario plus its grid, with the
@@ -1276,6 +1346,13 @@ impl SweepRun {
         match &self.grid {
             GridData::Perforation(r) => r,
             _ => panic!("scenario '{}' did not produce a perforation sweep", self.scenario.name),
+        }
+    }
+
+    pub fn fleet_digests(&self) -> &[CellDigest] {
+        match &self.grid {
+            GridData::Fleet(d) => d,
+            _ => panic!("scenario '{}' did not produce a fleet grid", self.scenario.name),
         }
     }
 
@@ -1560,10 +1637,14 @@ impl SweepRun {
                 vec![audio_summary_table(name, title, &self.audio_policy_rows())]
             }
             Projection::Pareto => vec![pareto_table(name, title, &self.pareto_rows())],
+            Projection::FleetLatency
+            | Projection::FleetConvergence
+            | Projection::FleetBytes => vec![self.fleet_table(name, title)],
             Projection::Cells => match &self.grid {
                 GridData::Accuracy(_) => vec![self.accuracy_table(name, title)],
                 GridData::Perforation(_) => vec![self.perforation_table(name, title)],
-                GridData::Har(_) | GridData::Img(_) | GridData::Audio(_) => {
+                GridData::Har(_) | GridData::Img(_) | GridData::Audio(_)
+                | GridData::Fleet(_) => {
                     vec![self.cells_table(name, title)]
                 }
             },
@@ -1661,7 +1742,37 @@ impl SweepRun {
                     );
                 }
             }
+            GridData::Fleet(digests) => {
+                for (cell, d) in cells.iter().zip(digests) {
+                    push(
+                        cell,
+                        d.emitted as usize,
+                        d.power_cycles,
+                        d.power_failures,
+                        d.quality(),
+                        d.same_cycle_fraction(),
+                        d.app_energy,
+                        d.state_energy,
+                    );
+                }
+            }
             _ => unreachable!("cells_table is only called on campaign grids"),
+        }
+        t
+    }
+
+    /// The fleet projections: one row per grid cell, rendered by the
+    /// shared [`fleet_header`]/[`fleet_row`] pair (the streaming
+    /// accumulator calls exactly the same functions).
+    fn fleet_table(&self, name: &str, title: &str) -> TableData {
+        let p = self.scenario.projection;
+        let mut t = TableData::new(name, title, fleet_header(p));
+        let JobPlan::Campaigns(cells) = self.scenario.plan() else {
+            unreachable!("fleet_table is only called on fleet grids");
+        };
+        for (cell, d) in cells.iter().zip(self.fleet_digests()) {
+            let f = d.fleet.as_ref().expect("fleet digests carry the fleet payload");
+            t.push(fleet_row(p, cell, f));
         }
         t
     }
@@ -1711,6 +1822,62 @@ pub fn cells_row(
         f2(app * 1e3),
         f2(state * 1e3),
     ]
+}
+
+/// Header of each fleet projection — shared by the batch table and the
+/// streaming accumulator so the two render identical bytes.
+pub fn fleet_header(p: Projection) -> &'static [&'static str] {
+    match p {
+        Projection::FleetLatency => &[
+            "harvester", "device", "seed", "devices", "detections", "propagated",
+            "coverage", "mean latency s", "duty cycle",
+        ],
+        Projection::FleetConvergence => &[
+            "harvester", "device", "seed", "devices", "duty cycle", "converged",
+            "converged at s", "exchanges",
+        ],
+        Projection::FleetBytes => &[
+            "harvester", "device", "seed", "devices", "meetings", "dropped",
+            "exchanges", "bytes", "bytes/exch", "gc pruned",
+        ],
+        _ => unreachable!("not a fleet projection"),
+    }
+}
+
+/// One fleet-projection row for a grid cell — the single rendering path
+/// for batch tables, streaming accumulators, and store views.
+pub fn fleet_row(p: Projection, cell: &CampaignCell, f: &FleetDigest) -> Vec<String> {
+    let mut row = vec![
+        cell.harvester.name(),
+        cell.device.label(),
+        cell.seed.to_string(),
+        f.devices.to_string(),
+    ];
+    match p {
+        Projection::FleetLatency => row.extend([
+            f.detections.to_string(),
+            f.propagated.to_string(),
+            pct(f.coverage()),
+            f2(f.mean_latency()),
+            pct(f.duty_cycle()),
+        ]),
+        Projection::FleetConvergence => row.extend([
+            pct(f.duty_cycle()),
+            f.converged.to_string(),
+            f2(f.converged_at),
+            f.exchanges.to_string(),
+        ]),
+        Projection::FleetBytes => row.extend([
+            f.meetings.to_string(),
+            f.dropped.to_string(),
+            f.exchanges.to_string(),
+            f.bytes.to_string(),
+            f2(f.bytes_per_exchange()),
+            f.gc_pruned.to_string(),
+        ]),
+        _ => unreachable!("not a fleet projection"),
+    }
+    row
 }
 
 /// Figs. 5/7/8 layout over per-policy summary rows.
@@ -2019,13 +2186,15 @@ pub fn adaptive_audio_policies() -> Vec<Policy> {
 /// Every figure the `aic` CLI knows by name, plus the audio grid (the
 /// third workload's builtin scenario), the three synthetic-environment
 /// grids (`synth_*`: generated supplies × all policies × ≥10 environment
-/// seeds — one builtin per workload), and the three adaptive judgements
+/// seeds — one builtin per workload), the three adaptive judgements
 /// (`adaptive_*`: the same synth families with the adaptive learner added
-/// and the Pareto projection selecting the per-family winner).
-pub const BUILTIN_NAMES: [&str; 17] = [
+/// and the Pareto projection selecting the per-family winner), and the
+/// two multi-device fleet grids (`fleet_*`: N devices per cell with
+/// coordination-free delta sync).
+pub const BUILTIN_NAMES: [&str; 19] = [
     "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig12", "fig13", "fig14", "fig15",
     "audio", "synth_solar", "synth_rf", "synth_multi", "adaptive_solar", "adaptive_rf",
-    "adaptive_multi",
+    "adaptive_multi", "fleet_solar", "fleet_multi",
 ];
 
 /// The environment-seed axis of the builtin synth grids: ten independent
@@ -2210,6 +2379,38 @@ pub fn builtin(name: &str, seed: u64) -> Option<Scenario> {
                 img_size: None,
             })
             .with_projection(Projection::Pareto),
+        "fleet_solar" => Scenario::new(
+            "fleet_solar",
+            WorkloadSpec::Fleet(FleetSpec::default()),
+        )
+        .with_title("Fleet — 4 devices on correlated solar, delta sync at powered overlap")
+        .with_seeds(synth_seeds())
+        .with_fast(FastMode {
+            horizon: Some(600.0),
+            max_seeds: Some(2),
+            ..FastMode::none()
+        })
+        .with_projection(Projection::FleetLatency),
+        "fleet_multi" => Scenario::new(
+            "fleet_multi",
+            WorkloadSpec::Fleet(FleetSpec {
+                devices: 6,
+                drop_rate: 0.2,
+                clock_skew: 3.0,
+                ..FleetSpec::default()
+            }),
+        )
+        .with_title(
+            "Fleet — 6 devices on the multi-source composite with drop-out and clock skew",
+        )
+        .with_harvesters(vec![HarvesterSpec::Synth(SynthSpec::builtin_multi())])
+        .with_seeds(synth_seeds())
+        .with_fast(FastMode {
+            horizon: Some(600.0),
+            max_seeds: Some(2),
+            ..FastMode::none()
+        })
+        .with_projection(Projection::FleetConvergence),
         _ => return None,
     })
 }
@@ -2231,6 +2432,86 @@ mod tests {
         assert_eq!(audio.harvesters.len(), 5);
         assert_eq!(audio.sample_period, 30.0);
         assert_eq!(audio.horizon, 2.0 * 3600.0);
+        let fleet = Scenario::new("f", WorkloadSpec::Fleet(FleetSpec::default()));
+        assert_eq!(fleet.horizon, 3600.0);
+        assert_eq!(fleet.harvesters.len(), 1, "fleet defaults to one synth family");
+        assert!(matches!(fleet.harvesters[0], HarvesterSpec::Synth(_)));
+        fleet.validate().expect("fleet defaults validate");
+    }
+
+    #[test]
+    fn fleet_projections_fit_the_workload() {
+        let base = || Scenario::new("f", WorkloadSpec::Fleet(FleetSpec::default()));
+        for p in [
+            Projection::Cells,
+            Projection::FleetLatency,
+            Projection::FleetConvergence,
+            Projection::FleetBytes,
+        ] {
+            base().with_projection(p).validate().expect("fleet projection fits");
+        }
+        assert!(base().with_projection(Projection::PolicyAccuracy).validate().is_err());
+        assert!(
+            Scenario::new("h", WorkloadSpec::Har)
+                .with_projection(Projection::FleetLatency)
+                .validate()
+                .is_err(),
+            "fleet projections must not fit single-device workloads"
+        );
+        assert!(
+            base().with_policies(vec![Policy::Greedy, Policy::Continuous]).validate().is_err(),
+            "fleet scenarios take exactly one policy"
+        );
+    }
+
+    #[test]
+    fn fleet_scenarios_run_and_render_deterministically() {
+        let sc = Scenario::new("mini-fleet", WorkloadSpec::Fleet(FleetSpec::default()))
+            .with_seeds(vec![1, 2])
+            .with_horizon(600.0)
+            .with_projection(Projection::FleetLatency);
+        let run = sc.run(false);
+        let digests = run.fleet_digests();
+        assert_eq!(digests.len(), 2, "one digest per seed cell");
+        for d in digests {
+            let f = d.fleet.expect("fleet cells carry the fleet payload");
+            assert_eq!(f.devices, 4);
+            assert!(f.meetings > 0, "devices must meet within the horizon");
+        }
+        let tables = run.tables();
+        assert_eq!(tables.len(), 1);
+        assert_eq!(tables[0].rows.len(), 2);
+        assert_eq!(tables[0].header, fleet_header(Projection::FleetLatency));
+        // Same spec, fresh run: bitwise-identical tables.
+        let again = sc.run(false);
+        assert_eq!(again.tables()[0].rows, tables[0].rows);
+        // Every fleet projection renders on the same grid.
+        for p in [Projection::Cells, Projection::FleetConvergence, Projection::FleetBytes] {
+            let t = sc.clone().with_projection(p).run(false).tables();
+            assert_eq!(t[0].rows.len(), 2, "{}", p.name());
+        }
+    }
+
+    #[test]
+    fn fleet_json_round_trips_through_scenario_parse() {
+        let sc = Scenario::new(
+            "fleet-json",
+            WorkloadSpec::Fleet(FleetSpec {
+                devices: 3,
+                drop_rate: 0.1,
+                clock_skew: 2.0,
+                overlap: Some(vec![
+                    vec![1.0, 0.5, 0.25],
+                    vec![0.5, 1.0, 0.75],
+                    vec![0.25, 0.75, 1.0],
+                ]),
+                ..FleetSpec::default()
+            }),
+        )
+        .with_seeds(vec![7])
+        .with_projection(Projection::FleetBytes);
+        let parsed = Scenario::parse(&sc.to_json_string()).expect("fleet round trip");
+        assert_eq!(parsed, sc);
     }
 
     #[test]

@@ -41,6 +41,8 @@ pub struct Needs {
     pub latency: bool,
     /// Per-picture equivalence counts.
     pub pictures: bool,
+    /// Fleet sync counters (convergence, bytes, propagation latency).
+    pub fleet: bool,
 }
 
 impl Needs {
@@ -55,11 +57,17 @@ impl Needs {
                 Projection::LatencyEmulation | Projection::LatencyRealWorld
             ),
             pictures: matches!(p, Projection::ImgEquivalence),
+            fleet: matches!(
+                p,
+                Projection::FleetLatency
+                    | Projection::FleetConvergence
+                    | Projection::FleetBytes
+            ),
         }
     }
 
     pub fn none() -> Needs {
-        Needs { slots: false, latency: false, pictures: false }
+        Needs { slots: false, latency: false, pictures: false, fleet: false }
     }
 }
 
@@ -69,6 +77,125 @@ impl Needs {
 pub struct LatencyBins {
     pub bins: Vec<u64>,
     pub overflow: u64,
+}
+
+/// The summary of one fleet-sync cell: N devices, opportunistic
+/// changed-column exchanges, convergence and wire-cost accounting.
+/// Attached to [`CellDigest::fleet`] so fleet cells stream, dedup, and
+/// resume through the same store machinery as every other campaign.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FleetDigest {
+    /// Fleet size.
+    pub devices: u64,
+    /// Rendezvous where both endpoints were powered.
+    pub meetings: u64,
+    /// Powered rendezvous lost to the drop-out / overlap draw.
+    pub dropped: u64,
+    /// Rendezvous that actually exchanged deltas.
+    pub exchanges: u64,
+    /// Modelled wire bytes across all exchanges.
+    pub bytes: u64,
+    /// Detection events recorded fleet-wide.
+    pub detections: u64,
+    /// Detections that reached every replica within the horizon.
+    pub propagated: u64,
+    /// Sum of full-propagation latencies, seconds (over `propagated`).
+    pub latency_sum: f64,
+    /// Sum of per-device powered-time fractions (0..=devices).
+    pub duty_sum: f64,
+    /// All replicas bitwise-identical at the horizon?
+    pub converged: bool,
+    /// Time of the last state-changing exchange (horizon when not
+    /// converged).
+    pub converged_at: f64,
+    /// Retransmission-log entries retired by coordination-free GC.
+    pub gc_pruned: u64,
+}
+
+impl FleetDigest {
+    /// Fraction of detections known fleet-wide by the horizon.
+    pub fn coverage(&self) -> f64 {
+        if self.detections == 0 {
+            0.0
+        } else {
+            self.propagated as f64 / self.detections as f64
+        }
+    }
+
+    /// Mean detection-to-fleet-wide latency, seconds.
+    pub fn mean_latency(&self) -> f64 {
+        if self.propagated == 0 {
+            0.0
+        } else {
+            self.latency_sum / self.propagated as f64
+        }
+    }
+
+    /// Mean per-device powered-time fraction.
+    pub fn duty_cycle(&self) -> f64 {
+        if self.devices == 0 {
+            0.0
+        } else {
+            self.duty_sum / self.devices as f64
+        }
+    }
+
+    /// Mean wire bytes per realised exchange.
+    pub fn bytes_per_exchange(&self) -> f64 {
+        if self.exchanges == 0 {
+            0.0
+        } else {
+            self.bytes as f64 / self.exchanges as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("dev", (self.devices as f64).into()),
+            ("meet", (self.meetings as f64).into()),
+            ("drop", (self.dropped as f64).into()),
+            ("exch", (self.exchanges as f64).into()),
+            ("bytes", (self.bytes as f64).into()),
+            ("det", (self.detections as f64).into()),
+            ("prop", (self.propagated as f64).into()),
+            ("lat_s", self.latency_sum.into()),
+            ("duty", self.duty_sum.into()),
+            ("conv", self.converged.into()),
+            ("conv_at", self.converged_at.into()),
+            ("gc", (self.gc_pruned as f64).into()),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<FleetDigest, String> {
+        let o = v.as_obj().ok_or("fleet digest must be a JSON object")?;
+        let num = |k: &str| -> Result<f64, String> {
+            o.get(k)
+                .and_then(Value::as_f64)
+                .ok_or_else(|| format!("fleet digest missing numeric field '{k}'"))
+        };
+        let uint = |k: &str| -> Result<u64, String> {
+            o.get(k)
+                .and_then(Value::as_u64)
+                .ok_or_else(|| format!("fleet digest missing integer field '{k}'"))
+        };
+        Ok(FleetDigest {
+            devices: uint("dev")?,
+            meetings: uint("meet")?,
+            dropped: uint("drop")?,
+            exchanges: uint("exch")?,
+            bytes: uint("bytes")?,
+            detections: uint("det")?,
+            propagated: uint("prop")?,
+            latency_sum: num("lat_s")?,
+            duty_sum: num("duty")?,
+            converged: o
+                .get("conv")
+                .and_then(Value::as_bool)
+                .ok_or("fleet digest missing boolean field 'conv'")?,
+            converged_at: num("conv_at")?,
+            gc_pruned: uint("gc")?,
+        })
+    }
 }
 
 /// The persistent summary of one campaign cell.
@@ -101,6 +228,8 @@ pub struct CellDigest {
     /// Per-picture `(equivalent, total)` counts in `Picture::ALL` order
     /// (when [`Needs::pictures`]).
     pub pictures: Option<Vec<(u64, u64)>>,
+    /// Fleet-sync counters (when [`Needs::fleet`]).
+    pub fleet: Option<FleetDigest>,
 }
 
 /// The scalar core shared by every workload's digest.
@@ -132,6 +261,7 @@ fn base<O>(c: &Campaign<O>) -> CellDigest {
         latency_bins: None,
         slots: None,
         pictures: None,
+        fleet: None,
     }
 }
 
@@ -196,6 +326,32 @@ impl CellDigest {
             d.latency_bins = Some(latency_bins(c));
         }
         d
+    }
+
+    /// Digest a fleet-sync cell. The scalar core is mapped so the plain
+    /// `cells` projection stays meaningful on fleet grids: emitted =
+    /// detections, power cycles = powered rendezvous, failures = dropped
+    /// rendezvous, quality = fleet-wide propagation coverage, steps =
+    /// realised exchanges. The full [`FleetDigest`] rides along for the
+    /// fleet projections.
+    pub fn of_fleet(f: &FleetDigest, horizon: f64) -> CellDigest {
+        CellDigest {
+            emitted: f.detections,
+            duration: horizon,
+            power_cycles: f.meetings,
+            power_failures: f.dropped,
+            app_energy: 0.0,
+            state_energy: 0.0,
+            quality_ok: f.propagated,
+            quality_total: f.detections,
+            same_cycle: 0,
+            steps_sum: f.exchanges,
+            latency_sum: 0,
+            latency_bins: None,
+            slots: None,
+            pictures: None,
+            fleet: Some(*f),
+        }
     }
 
     /// Digest an audio campaign.
@@ -264,6 +420,7 @@ impl CellDigest {
                     .is_some_and(|lb| lb.bins.len() == LATENCY_CYCLES))
             && (!needs.pictures
                 || self.pictures.as_ref().is_some_and(|p| p.len() == Picture::ALL.len()))
+            && (!needs.fleet || self.fleet.is_some())
     }
 
     // -----------------------------------------------------------------
@@ -296,6 +453,9 @@ impl CellDigest {
         if let Some(pics) = &self.pictures {
             let flat: Vec<u64> = pics.iter().flat_map(|&(ok, t)| [ok, t]).collect();
             fields.push(("pics", Value::u64s(&flat)));
+        }
+        if let Some(f) = &self.fleet {
+            fields.push(("fleet", f.to_json()));
         }
         Value::obj(fields)
     }
@@ -335,6 +495,10 @@ impl CellDigest {
             ),
             None => None,
         };
+        let fleet = match o.get("fleet") {
+            Some(v) => Some(FleetDigest::from_json(v)?),
+            None => None,
+        };
         Ok(CellDigest {
             emitted: uint("emitted")?,
             duration: num("duration")?,
@@ -350,6 +514,7 @@ impl CellDigest {
             latency_bins,
             slots,
             pictures,
+            fleet,
         })
     }
 }
@@ -372,6 +537,23 @@ mod tests {
     use super::*;
     use crate::util::json;
 
+    fn sample_fleet() -> FleetDigest {
+        FleetDigest {
+            devices: 4,
+            meetings: 120,
+            dropped: 12,
+            exchanges: 108,
+            bytes: 86_400,
+            detections: 40,
+            propagated: 36,
+            latency_sum: 512.25,
+            duty_sum: 2.75,
+            converged: true,
+            converged_at: 3_420.5,
+            gc_pruned: 96,
+        }
+    }
+
     fn sample(needs: Needs) -> CellDigest {
         CellDigest {
             emitted: 12,
@@ -393,6 +575,7 @@ mod tests {
             pictures: needs
                 .pictures
                 .then(|| vec![(1u64, 2u64); Picture::ALL.len()]),
+            fleet: needs.fleet.then(sample_fleet),
         }
     }
 
@@ -400,10 +583,11 @@ mod tests {
     fn json_round_trip_preserves_every_field() {
         for needs in [
             Needs::none(),
-            Needs { slots: true, latency: false, pictures: false },
-            Needs { slots: false, latency: true, pictures: false },
-            Needs { slots: false, latency: false, pictures: true },
-            Needs { slots: true, latency: true, pictures: true },
+            Needs { slots: true, latency: false, pictures: false, fleet: false },
+            Needs { slots: false, latency: true, pictures: false, fleet: false },
+            Needs { slots: false, latency: false, pictures: true, fleet: false },
+            Needs { slots: false, latency: false, pictures: false, fleet: true },
+            Needs { slots: true, latency: true, pictures: true, fleet: true },
         ] {
             let d = sample(needs);
             let text = json::to_string(&d.to_json());
@@ -417,10 +601,71 @@ mod tests {
     fn satisfies_rejects_missing_or_misshapen_payloads() {
         let d = sample(Needs::none());
         assert!(d.satisfies(Needs::none()));
-        assert!(!d.satisfies(Needs { slots: true, latency: false, pictures: false }));
-        let mut short = sample(Needs { slots: false, latency: true, pictures: false });
+        assert!(!d.satisfies(Needs { slots: true, ..Needs::none() }));
+        assert!(!d.satisfies(Needs { fleet: true, ..Needs::none() }));
+        let fleet_needs = Needs { fleet: true, ..Needs::none() };
+        assert!(sample(fleet_needs).satisfies(fleet_needs));
+        let lat_needs = Needs { latency: true, ..Needs::none() };
+        let mut short = sample(lat_needs);
         short.latency_bins.as_mut().unwrap().bins.pop();
-        assert!(!short.satisfies(Needs { slots: false, latency: true, pictures: false }));
+        assert!(!short.satisfies(lat_needs));
+    }
+
+    #[test]
+    fn fleet_digest_round_trips_and_rejects_malformed_payloads() {
+        let f = sample_fleet();
+        let text = json::to_string(&f.to_json());
+        let back = FleetDigest::from_json(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, f);
+        for text in [
+            "{}",
+            "7",
+            r#"{"dev":4,"meet":1,"drop":0,"exch":1,"bytes":64,"det":0,"prop":0,
+                "lat_s":0.0,"duty":1.0,"conv":1,"conv_at":0.0,"gc":0}"#,
+            r#"{"dev":-4,"meet":1,"drop":0,"exch":1,"bytes":64,"det":0,"prop":0,
+                "lat_s":0.0,"duty":1.0,"conv":true,"conv_at":0.0,"gc":0}"#,
+        ] {
+            let v = json::parse(text).unwrap();
+            assert!(FleetDigest::from_json(&v).is_err(), "{text}");
+        }
+    }
+
+    #[test]
+    fn fleet_derivations_are_zero_guarded() {
+        let f = sample_fleet();
+        assert_eq!(f.coverage(), 36.0 / 40.0);
+        assert_eq!(f.mean_latency(), 512.25 / 36.0);
+        assert_eq!(f.duty_cycle(), 2.75 / 4.0);
+        assert_eq!(f.bytes_per_exchange(), 86_400.0 / 108.0);
+        let empty = FleetDigest {
+            detections: 0,
+            propagated: 0,
+            exchanges: 0,
+            devices: 0,
+            ..sample_fleet()
+        };
+        assert_eq!(empty.coverage(), 0.0);
+        assert_eq!(empty.mean_latency(), 0.0);
+        assert_eq!(empty.duty_cycle(), 0.0);
+        assert_eq!(empty.bytes_per_exchange(), 0.0);
+    }
+
+    #[test]
+    fn fleet_scalar_core_maps_the_cells_projection() {
+        let f = sample_fleet();
+        let d = CellDigest::of_fleet(&f, 3600.0);
+        assert_eq!(d.emitted, f.detections);
+        assert_eq!(d.duration, 3600.0);
+        assert_eq!(d.power_cycles, f.meetings);
+        assert_eq!(d.power_failures, f.dropped);
+        assert_eq!(d.quality(), f.coverage());
+        assert_eq!(d.steps_sum, f.exchanges);
+        assert_eq!(d.fleet, Some(f));
+        assert!(d.satisfies(Needs { fleet: true, ..Needs::none() }));
+        // And it survives the store's JSON framing.
+        let text = json::to_string(&d.to_json());
+        let back = CellDigest::from_json(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, d);
     }
 
     #[test]

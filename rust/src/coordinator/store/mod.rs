@@ -87,14 +87,18 @@ pub fn grid_hash(s: &Scenario, needs: Needs) -> u64 {
                 .collect(),
         ),
     );
-    doc.insert(
-        "needs".into(),
-        Value::obj(vec![
-            ("slots", needs.slots.into()),
-            ("latency", needs.latency.into()),
-            ("pictures", needs.pictures.into()),
-        ]),
-    );
+    let mut needs_fields = vec![
+        ("slots", needs.slots.into()),
+        ("latency", needs.latency.into()),
+        ("pictures", needs.pictures.into()),
+    ];
+    // Only present when set: pre-fleet stores hashed a three-key needs
+    // object, and an unconditional fourth key would orphan every
+    // committed cell of every existing experiment.
+    if needs.fleet {
+        needs_fields.push(("fleet", true.into()));
+    }
+    doc.insert("needs".into(), Value::obj(needs_fields));
     doc.insert("store_format".into(), Value::Num(1.0));
     fnv1a(json::to_string(&Value::Obj(doc)).as_bytes())
 }
@@ -562,6 +566,7 @@ mod tests {
             latency_bins: None,
             slots: None,
             pictures: None,
+            fleet: None,
         }
     }
 
@@ -639,8 +644,11 @@ mod tests {
         let other = sc.clone().with_seeds(vec![1, 2]);
         assert_ne!(grid_hash(&other, Needs::none()), base);
         assert_ne!(
-            grid_hash(&sc, Needs { slots: true, latency: false, pictures: false }),
+            grid_hash(&sc, Needs { slots: true, ..Needs::none() }),
             base
         );
+        // The fleet needs key is only hashed when set, so pre-fleet
+        // grids keep their committed identity.
+        assert_ne!(grid_hash(&sc, Needs { fleet: true, ..Needs::none() }), base);
     }
 }

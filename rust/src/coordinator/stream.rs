@@ -219,6 +219,9 @@ pub fn run_streaming(
                     );
                     CellDigest::of_audio(&c, needs)
                 }),
+                WorkloadSpec::Fleet(fs) => run_fleet(&to_run, opts.workers, |(_, cell)| {
+                    scenario::fleet_cell_digest(fs, cell, s.horizon)
+                }),
                 _ => unreachable!("non-campaign workloads fell back above"),
             }
         };
@@ -371,6 +374,10 @@ enum StreamAcc {
         trace_rows: Vec<ImgTraceRow>,
         pooled: Vec<(u64, u64)>,
     },
+    /// Fleet projections: one row per cell, rendered by the same
+    /// `fleet_header`/`fleet_row` pair as the batch table — rows stream
+    /// straight to the sink with O(1) state, like `Cells`.
+    Fleet,
 }
 
 impl StreamAcc {
@@ -407,6 +414,16 @@ impl StreamAcc {
                     trace_rows: Vec::new(),
                     pooled: vec![(0, 0); Picture::ALL.len()],
                 }
+            }
+            Projection::FleetLatency
+            | Projection::FleetConvergence
+            | Projection::FleetBytes => {
+                let header: Vec<String> = scenario::fleet_header(s.projection)
+                    .iter()
+                    .map(|h| h.to_string())
+                    .collect();
+                sink.begin(&s.name, &s.title, &header)?;
+                StreamAcc::Fleet
             }
             Projection::AccuracyCurve | Projection::Perforation => {
                 unreachable!("non-campaign projections use the batch fallback")
@@ -490,6 +507,13 @@ impl StreamAcc {
                 }
                 Ok(())
             }
+            StreamAcc::Fleet => sink.row(&scenario::fleet_row(
+                s.projection,
+                &s.cell_at(idx),
+                d.fleet
+                    .as_ref()
+                    .expect("fleet digests carry the fleet payload (Needs::for_projection)"),
+            )),
         }
     }
 
@@ -611,6 +635,7 @@ impl StreamAcc {
                     _ => sink.table(&img_latency_table(name, title, trace_rows)),
                 }
             }
+            StreamAcc::Fleet => sink.finish(),
         }
     }
 }

@@ -1,0 +1,1072 @@
+//! Coordination-free multi-device fleet sync.
+//!
+//! Every scenario before this module simulated one device at a time.
+//! Real deployments of the paper's prototypes are *fleets* of
+//! batteryless nodes that must reconcile observations opportunistically:
+//! two endpoints can exchange data only in the instants both happen to
+//! be powered, there is no coordinator, and merge order is whatever the
+//! energy environment dictates. This module simulates exactly that —
+//! N devices on correlated-but-distinct synth environments, each
+//! keeping a **per-column-versioned** table of detection results, and
+//! exchanging **only changed columns** at deterministic powered-overlap
+//! rendezvous.
+//!
+//! The replication layer is a delta-state CRDT in the dag-CRR style the
+//! roadmap names:
+//!
+//! * **Per-column versioning.** Every `(row, column)` cell carries a
+//!   [`Stamp`] — a Lamport-style version plus the writer id. A local
+//!   write bumps the locally known version, so later writes dominate
+//!   earlier ones wherever they meet.
+//! * **Symmetric tiebreakers.** Concurrent writes at the same version
+//!   are ordered by the total order `(version, value bits, writer)`.
+//!   Join = max under that order: commutative, associative, idempotent
+//!   — so the converged state is independent of merge order, which
+//!   `tests/fleet_sync.rs` checks bitwise over distinct schedules.
+//! * **Delta sync of changed columns only.** Each replica keeps a
+//!   per-writer sequence log with the *prefix invariant*: it holds a
+//!   contiguous prefix `1..=vv[w]` of every writer `w`'s updates. A
+//!   meeting exchanges version vectors (8 bytes per device) and then
+//!   only the log entries the peer has not covered — columns untouched
+//!   since the peers last aligned are never re-shipped.
+//! * **Coordination-free GC.** Each replica gossips an ack matrix
+//!   (`acked[peer][writer]`: a lower bound on what `peer` holds from
+//!   `writer`). Log entries at or below the minimum over all other
+//!   peers can never be requested again and are pruned locally — no
+//!   round, no leader, no handshake. Safety: acks only ever
+//!   under-report, and version vectors only grow, so a pruned sequence
+//!   is provably covered at every peer that could ask for it.
+//!
+//! The meeting model is deterministic: a device is *up* when its raw
+//! harvester power clears `up_fraction` x its own mean power; a pair
+//! meets on a fixed rendezvous grid when both are up, thinned by a
+//! per-(cell, slot, pair) seeded drop-out draw and an optional
+//! asymmetric-overlap matrix. Clock skew shifts each device's local
+//! observation windows. Everything — observation, detection, meeting,
+//! exchange — is a pure function of `(spec, supplies, horizon, seed)`,
+//! so fleet sweeps stream, dedup, and resume like any other campaign.
+
+use crate::coordinator::store::digest::FleetDigest;
+use crate::energy::harvester::Harvester;
+use crate::util::json::{opt_f64, opt_usize, Value};
+use crate::util::rng::Rng;
+use std::collections::{BTreeMap, VecDeque};
+
+/// Column index of the quantised window energy a detection observed.
+pub const COL_ENERGY: u8 = 0;
+/// Column index of the detection flag (always 1.0 when present).
+pub const COL_DETECT: u8 = 1;
+/// Column of the shared fleet-aggregate row: every device writes its own
+/// running detection count here, which makes concurrent same-column
+/// writes — the symmetric-tiebreak path — a permanent part of every run.
+pub const COL_COUNT: u8 = 2;
+/// Row id of the shared aggregate row (all devices write it).
+pub const AGG_ROW: u32 = u32::MAX;
+
+/// Wire cost of one shipped column: key (5) + stamp (11) + value (8).
+pub const BYTES_PER_ENTRY: u64 = 24;
+/// Fixed per-direction message overhead before the version vector.
+pub const EXCHANGE_OVERHEAD: u64 = 16;
+/// A window whose harvested energy clears this multiple of the device's
+/// mean window energy counts as a detection event.
+pub const DETECT_FACTOR: f64 = 1.1;
+
+/// Fleet axis caps: row ids pack `(device, window)` into 16+16 bits.
+pub const MAX_DEVICES: usize = 64;
+const MAX_WINDOWS_PER_DEVICE: f64 = 65536.0;
+/// Per-cell rendezvous budget (slots x pairs): a hostile spec must fail
+/// validation, not allocate an unbounded event list in a fleet worker.
+const MAX_MEETINGS_PER_CELL: f64 = 2_000_000.0;
+
+// ---------------------------------------------------------------------
+// Fleet spec.
+// ---------------------------------------------------------------------
+
+/// The fleet axes of a `WorkloadSpec::Fleet` scenario.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FleetSpec {
+    /// Fleet size (2..=64 devices).
+    pub devices: usize,
+    /// A device is powered when raw harvester power >= `up_fraction` x
+    /// its own mean power.
+    pub up_fraction: f64,
+    /// Rendezvous grid period, seconds: pairs may meet at `k x period`.
+    pub meeting_period: f64,
+    /// Local observation window length, seconds.
+    pub obs_period: f64,
+    /// Probability a powered-overlap rendezvous is lost anyway
+    /// (deterministic per-(cell, slot, pair) draw), in `[0, 1)`.
+    pub drop_rate: f64,
+    /// Maximum per-device clock offset, seconds (>= 0): shifts each
+    /// device's observation windows by a seeded draw in `[0, skew]`.
+    pub clock_skew: f64,
+    /// Optional symmetric `devices x devices` matrix in `[0, 1]` scaling
+    /// each pair's rendezvous success (asymmetric harvest topologies);
+    /// `None` = all pairs at 1.
+    pub overlap: Option<Vec<Vec<f64>>>,
+}
+
+impl Default for FleetSpec {
+    fn default() -> FleetSpec {
+        FleetSpec {
+            devices: 4,
+            up_fraction: 1.0,
+            meeting_period: 15.0,
+            obs_period: 60.0,
+            drop_rate: 0.0,
+            clock_skew: 0.0,
+            overlap: None,
+        }
+    }
+}
+
+impl FleetSpec {
+    /// Structural validation (everything that does not need the
+    /// horizon).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.devices < 2 || self.devices > MAX_DEVICES {
+            return Err(format!(
+                "fleet needs 2..={MAX_DEVICES} devices, got {}",
+                self.devices
+            ));
+        }
+        if !(self.up_fraction.is_finite() && self.up_fraction > 0.0 && self.up_fraction <= 100.0)
+        {
+            return Err(format!(
+                "fleet up_fraction must be finite in (0, 100], got {}",
+                self.up_fraction
+            ));
+        }
+        if !(self.meeting_period.is_finite() && self.meeting_period > 0.0) {
+            return Err(format!(
+                "fleet meeting_period must be finite and positive, got {}",
+                self.meeting_period
+            ));
+        }
+        if !(self.obs_period.is_finite() && self.obs_period > 0.0) {
+            return Err(format!(
+                "fleet obs_period must be finite and positive, got {}",
+                self.obs_period
+            ));
+        }
+        if !(self.drop_rate.is_finite() && (0.0..1.0).contains(&self.drop_rate)) {
+            return Err(format!(
+                "fleet drop_rate must be finite in [0, 1), got {}",
+                self.drop_rate
+            ));
+        }
+        if !(self.clock_skew.is_finite() && self.clock_skew >= 0.0) {
+            return Err(format!(
+                "fleet clock_skew must be finite and non-negative, got {}",
+                self.clock_skew
+            ));
+        }
+        if let Some(m) = &self.overlap {
+            if m.len() != self.devices {
+                return Err(format!(
+                    "fleet overlap must be a {0}x{0} matrix, got {1} rows",
+                    self.devices,
+                    m.len()
+                ));
+            }
+            // Shape and range first, symmetry second: the transpose
+            // lookup below may only index rows already proven square.
+            for (i, row) in m.iter().enumerate() {
+                if row.len() != self.devices {
+                    return Err(format!(
+                        "fleet overlap row {i} has {} entries (need {})",
+                        row.len(),
+                        self.devices
+                    ));
+                }
+                for (j, &x) in row.iter().enumerate() {
+                    if !(x.is_finite() && (0.0..=1.0).contains(&x)) {
+                        return Err(format!(
+                            "fleet overlap[{i}][{j}] must be finite in [0, 1], got {x}"
+                        ));
+                    }
+                }
+            }
+            for (i, row) in m.iter().enumerate() {
+                for (j, &x) in row.iter().enumerate() {
+                    if m[j][i] != x {
+                        return Err(format!(
+                            "fleet overlap must be symmetric: [{i}][{j}]={x} but [{j}][{i}]={}",
+                            m[j][i]
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Resource validation against the (unresolved, i.e. largest)
+    /// campaign horizon — hostile specs must fail at parse/validate
+    /// time, never inside a fleet worker.
+    pub fn validate_with_horizon(&self, horizon: f64) -> Result<(), String> {
+        let windows = horizon / self.obs_period;
+        if windows > MAX_WINDOWS_PER_DEVICE {
+            return Err(format!(
+                "fleet horizon/obs_period = {windows:.0} windows per device \
+                 (max {MAX_WINDOWS_PER_DEVICE:.0}: row ids pack device and window)"
+            ));
+        }
+        let pairs = (self.devices * (self.devices - 1) / 2) as f64;
+        let meetings = (horizon / self.meeting_period) * pairs;
+        if meetings > MAX_MEETINGS_PER_CELL {
+            return Err(format!(
+                "fleet rendezvous budget {meetings:.0} exceeds {MAX_MEETINGS_PER_CELL:.0} \
+                 (horizon/meeting_period x device pairs)"
+            ));
+        }
+        Ok(())
+    }
+
+    /// Pair meeting-success scale from the overlap matrix (1 without
+    /// one).
+    pub fn overlap_at(&self, i: usize, j: usize) -> f64 {
+        self.overlap.as_ref().map_or(1.0, |m| m[i][j])
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut fields: Vec<(&str, Value)> = vec![
+            ("kind", "fleet".into()),
+            ("devices", (self.devices as f64).into()),
+            ("up_fraction", self.up_fraction.into()),
+            ("meeting_period", self.meeting_period.into()),
+            ("obs_period", self.obs_period.into()),
+            ("drop_rate", self.drop_rate.into()),
+            ("clock_skew", self.clock_skew.into()),
+        ];
+        if let Some(m) = &self.overlap {
+            fields.push((
+                "overlap",
+                Value::Arr(m.iter().map(|row| Value::nums(row)).collect()),
+            ));
+        }
+        Value::obj(fields)
+    }
+
+    /// Parse the `{"kind": "fleet", ...}` workload object. Strict: an
+    /// unknown key is an error, matching the scenario parser's policy.
+    pub fn from_json(v: &Value) -> Result<FleetSpec, String> {
+        const KEYS: [&str; 8] = [
+            "kind",
+            "devices",
+            "up_fraction",
+            "meeting_period",
+            "obs_period",
+            "drop_rate",
+            "clock_skew",
+            "overlap",
+        ];
+        let obj = v.as_obj().ok_or("fleet workload must be a JSON object")?;
+        for key in obj.keys() {
+            if !KEYS.contains(&key.as_str()) {
+                return Err(format!("unknown fleet key '{key}'"));
+            }
+        }
+        let mut spec = FleetSpec::default();
+        if let Some(n) = opt_usize(v, "devices")? {
+            spec.devices = n;
+        }
+        if let Some(x) = opt_f64(v, "up_fraction")? {
+            spec.up_fraction = x;
+        }
+        if let Some(x) = opt_f64(v, "meeting_period")? {
+            spec.meeting_period = x;
+        }
+        if let Some(x) = opt_f64(v, "obs_period")? {
+            spec.obs_period = x;
+        }
+        if let Some(x) = opt_f64(v, "drop_rate")? {
+            spec.drop_rate = x;
+        }
+        if let Some(x) = opt_f64(v, "clock_skew")? {
+            spec.clock_skew = x;
+        }
+        if !matches!(v.get("overlap"), Value::Null) {
+            let rows = v
+                .get("overlap")
+                .as_arr()
+                .ok_or("fleet 'overlap' must be an array of number arrays")?;
+            let m = rows
+                .iter()
+                .map(|row| {
+                    row.as_arr()
+                        .ok_or("fleet 'overlap' rows must be arrays")?
+                        .iter()
+                        .map(|x| {
+                            x.as_f64()
+                                .ok_or_else(|| "fleet 'overlap' entries must be numbers".to_string())
+                        })
+                        .collect::<Result<Vec<f64>, String>>()
+                })
+                .collect::<Result<Vec<Vec<f64>>, String>>()?;
+            spec.overlap = Some(m);
+        }
+        // Structural validation happens here (parse time); the horizon
+        // budget re-checks in Scenario::validate where the horizon is
+        // known.
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+// ---------------------------------------------------------------------
+// The per-column-versioned replica.
+// ---------------------------------------------------------------------
+
+/// A table coordinate: `(row, column)`.
+pub type Key = (u32, u8);
+
+/// Per-column version stamp: Lamport-style version + writer id.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Stamp {
+    pub version: u64,
+    pub writer: u16,
+}
+
+/// One versioned table cell.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ColCell {
+    pub stamp: Stamp,
+    pub value: f64,
+}
+
+/// The symmetric total order both endpoints of a merge agree on:
+/// version first, then the value's bit pattern, then the writer id.
+/// Join = max under this order, which makes the merge commutative,
+/// associative, and idempotent — the converged state cannot depend on
+/// exchange order.
+fn rank(c: &ColCell) -> (u64, u64, u16) {
+    (c.stamp.version, c.value.to_bits(), c.stamp.writer)
+}
+
+/// One shipped delta entry: a writer-sequence slot plus the sender's
+/// current (already-merged) cell for that key. Shipping the *current*
+/// cell keeps relays monotone: anyone who applied sequence `seq` holds a
+/// cell at least as high in the join order as the write that created it.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DeltaEntry {
+    pub writer: u16,
+    pub seq: u64,
+    pub key: Key,
+    pub cell: ColCell,
+}
+
+/// What `Replica::apply` did with a delta.
+pub struct ApplyOutcome {
+    /// Entries that extended this replica's version vector.
+    pub applied: u64,
+    /// Keys this replica had never seen before (any column).
+    pub new_keys: Vec<Key>,
+}
+
+/// What one bidirectional exchange moved.
+pub struct ExchangeOutcome {
+    /// Log entries shipped in both directions.
+    pub entries: u64,
+    /// Modelled wire bytes: two message headers + version vectors +
+    /// `BYTES_PER_ENTRY` per shipped column.
+    pub bytes: u64,
+    /// Keys newly known to the first endpoint.
+    pub new_a: Vec<Key>,
+    /// Keys newly known to the second endpoint.
+    pub new_b: Vec<Key>,
+}
+
+/// One device's replica of the fleet's detection/result table.
+#[derive(Clone, Debug)]
+pub struct Replica {
+    id: u16,
+    n: usize,
+    /// The versioned table: join-of-writes per column.
+    cells: BTreeMap<Key, ColCell>,
+    /// Version vector: `vv[w]` = highest contiguous sequence applied
+    /// from writer `w` (the prefix invariant).
+    vv: Vec<u64>,
+    /// Retransmission log per writer: `(seq, key)` in ascending `seq`,
+    /// front-pruned by [`Replica::gc`].
+    logs: Vec<VecDeque<(u64, Key)>>,
+    /// Gossiped ack matrix: `acked[p][w]` is a lower bound on peer `p`'s
+    /// `vv[w]`.
+    acked: Vec<Vec<u64>>,
+    /// Log entries retired by coordination-free GC.
+    pub gc_pruned: u64,
+}
+
+impl Replica {
+    pub fn new(id: usize, n: usize) -> Replica {
+        assert!(id < n, "replica id {id} out of range for fleet of {n}");
+        Replica {
+            id: id as u16,
+            n,
+            cells: BTreeMap::new(),
+            vv: vec![0; n],
+            logs: vec![VecDeque::new(); n],
+            acked: vec![vec![0; n]; n],
+            gc_pruned: 0,
+        }
+    }
+
+    pub fn id(&self) -> usize {
+        self.id as usize
+    }
+
+    pub fn vv(&self) -> &[u64] {
+        &self.vv
+    }
+
+    /// Retained retransmission-log entries (all writers) — what GC is
+    /// bounding.
+    pub fn log_entries(&self) -> usize {
+        self.logs.iter().map(|l| l.len()).sum()
+    }
+
+    /// The converged-comparable view: every cell with its stamp, in key
+    /// order. Value compared by bit pattern so `-0.0 != 0.0` and state
+    /// equality is exact.
+    pub fn state(&self) -> Vec<(Key, u64, u16, u64)> {
+        self.cells
+            .iter()
+            .map(|(&k, c)| (k, c.stamp.version, c.stamp.writer, c.value.to_bits()))
+            .collect()
+    }
+
+    /// FNV-1a fingerprint of [`state`](Replica::state) — a compact
+    /// equality witness for tests and benches.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        let mut fold = |x: u64| {
+            for b in x.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+        };
+        for ((row, col), version, writer, bits) in self.state() {
+            fold(((row as u64) << 8) | col as u64);
+            fold(version);
+            fold(writer as u64);
+            fold(bits);
+        }
+        h
+    }
+
+    /// Local write: bump the locally known column version, append to the
+    /// own-writer log.
+    pub fn write(&mut self, row: u32, col: u8, value: f64) {
+        let key = (row, col);
+        let version = self.cells.get(&key).map(|c| c.stamp.version).unwrap_or(0) + 1;
+        self.cells.insert(
+            key,
+            ColCell { stamp: Stamp { version, writer: self.id }, value },
+        );
+        let me = self.id as usize;
+        let seq = self.vv[me] + 1;
+        self.vv[me] = seq;
+        self.logs[me].push_back((seq, key));
+    }
+
+    /// The changed-columns-only delta for a peer at `peer_vv`: for every
+    /// writer, the log entries past the peer's prefix, each carrying the
+    /// sender's current cell.
+    pub fn delta_for(&self, peer_vv: &[u64]) -> Vec<DeltaEntry> {
+        let mut out = Vec::new();
+        for w in 0..self.n {
+            let mut sent = 0u64;
+            for &(seq, key) in &self.logs[w] {
+                if seq > peer_vv[w] {
+                    let cell = *self.cells.get(&key).expect("logged key is present");
+                    out.push(DeltaEntry { writer: w as u16, seq, key, cell });
+                    sent += 1;
+                }
+            }
+            // GC safety: everything the peer lacks must still be in the
+            // log (acks never over-report, so pruned seqs are covered).
+            debug_assert_eq!(
+                sent,
+                self.vv[w].saturating_sub(peer_vv[w].min(self.vv[w])),
+                "retransmission log lost entries the peer still needs"
+            );
+        }
+        out
+    }
+
+    /// Apply a delta: extend the per-writer prefixes and join each
+    /// shipped cell into the table.
+    pub fn apply(&mut self, delta: &[DeltaEntry]) -> ApplyOutcome {
+        let mut applied = 0u64;
+        let mut new_keys = Vec::new();
+        for e in delta {
+            let w = e.writer as usize;
+            if e.seq <= self.vv[w] {
+                continue; // already covered (idempotent)
+            }
+            debug_assert_eq!(
+                e.seq,
+                self.vv[w] + 1,
+                "delta must extend writer {w}'s prefix contiguously"
+            );
+            self.vv[w] = e.seq;
+            self.logs[w].push_back((e.seq, e.key));
+            applied += 1;
+            match self.cells.get(&e.key) {
+                None => {
+                    self.cells.insert(e.key, e.cell);
+                    new_keys.push(e.key);
+                }
+                Some(cur) => {
+                    if rank(&e.cell) > rank(cur) {
+                        self.cells.insert(e.key, e.cell);
+                    }
+                }
+            }
+        }
+        ApplyOutcome { applied, new_keys }
+    }
+
+    /// Coordination-free GC: prune log entries every *other* replica is
+    /// known (lower bound) to hold. Purely local — no round, no leader.
+    pub fn gc(&mut self) {
+        if self.n < 2 {
+            return;
+        }
+        for w in 0..self.n {
+            let mut threshold = u64::MAX;
+            for p in 0..self.n {
+                if p != self.id as usize {
+                    threshold = threshold.min(self.acked[p][w]);
+                }
+            }
+            while let Some(&(seq, _)) = self.logs[w].front() {
+                if seq <= threshold {
+                    self.logs[w].pop_front();
+                    self.gc_pruned += 1;
+                } else {
+                    break;
+                }
+            }
+        }
+    }
+}
+
+/// One bidirectional powered-overlap exchange: swap version vectors,
+/// ship both changed-column deltas, gossip ack knowledge, GC both ends.
+pub fn exchange(a: &mut Replica, b: &mut Replica) -> ExchangeOutcome {
+    assert_eq!(a.n, b.n, "replicas belong to different fleets");
+    let n = a.n;
+    let d_ab = a.delta_for(&b.vv);
+    let d_ba = b.delta_for(&a.vv);
+    let out_b = b.apply(&d_ab);
+    let out_a = a.apply(&d_ba);
+    debug_assert_eq!(a.vv, b.vv, "a bidirectional exchange must align the version vectors");
+    let (ai, bi) = (a.id as usize, b.id as usize);
+    for w in 0..n {
+        // Direct knowledge: each endpoint now provably holds the joined
+        // prefix.
+        a.acked[bi][w] = a.acked[bi][w].max(a.vv[w]);
+        b.acked[ai][w] = b.acked[ai][w].max(b.vv[w]);
+        // Gossip: merge what each endpoint knows about third parties.
+        for p in 0..n {
+            let m = a.acked[p][w].max(b.acked[p][w]);
+            a.acked[p][w] = m;
+            b.acked[p][w] = m;
+        }
+    }
+    a.gc();
+    b.gc();
+    let entries = (d_ab.len() + d_ba.len()) as u64;
+    ExchangeOutcome {
+        entries,
+        bytes: 2 * (EXCHANGE_OVERHEAD + 8 * n as u64) + BYTES_PER_ENTRY * entries,
+        new_a: out_a.new_keys,
+        new_b: out_b.new_keys,
+    }
+}
+
+// ---------------------------------------------------------------------
+// The deterministic fleet cell simulation.
+// ---------------------------------------------------------------------
+
+/// Seed of device `d`'s supply within a fleet cell: the same synth
+/// family (the spec), a distinct member per device — correlated but not
+/// identical environments.
+pub fn device_seed(cell_seed: u64, device: usize) -> u64 {
+    cell_seed ^ (device as u64 + 1).wrapping_mul(0xD134_2543_DE82_EF95)
+}
+
+/// Seed of the drop-out draw for rendezvous `slot` of pair `(i, j)` —
+/// keyed by identity, not processing order, so the schedule is a pure
+/// function of the cell.
+fn meet_seed(cell_seed: u64, slot: u64, i: usize, j: usize) -> u64 {
+    let mut x = cell_seed ^ 0xA076_1D64_78BD_642F;
+    x ^= slot.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    x = x.wrapping_mul(0xD134_2543_DE82_EF95);
+    x ^= ((i as u64) << 32) | j as u64;
+    x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+}
+
+/// Quantise a window energy the way a fixed-point ADC accumulator would
+/// (nanojoule steps) — keeps shipped values platform-independent.
+fn quantise(energy: f64) -> f64 {
+    (energy * 1e9).round() / 1e9
+}
+
+/// Forward-only integrator over one harvester's piecewise-constant
+/// segments: total energy of `[a, b)` in O(segments advanced), amortised
+/// O(1) per observation window because windows arrive in time order.
+struct EnergyCursor {
+    segs: crate::energy::harvester::Segments,
+    cur: crate::energy::harvester::Segment,
+}
+
+impl EnergyCursor {
+    fn new(h: &Harvester) -> EnergyCursor {
+        let mut segs = h.segments(0.0);
+        let cur = segs.next().expect("harvester segments tile all of time");
+        EnergyCursor { segs, cur }
+    }
+
+    fn energy(&mut self, a: f64, b: f64) -> f64 {
+        let mut e = 0.0;
+        loop {
+            if self.cur.end <= a {
+                self.cur = self.segs.next().expect("harvester segments tile all of time");
+                continue;
+            }
+            let lo = self.cur.start.max(a);
+            let hi = self.cur.end.min(b);
+            if hi > lo {
+                e += self.cur.power * (hi - lo);
+            }
+            if self.cur.end >= b {
+                return e;
+            }
+            self.cur = self.segs.next().expect("harvester segments tile all of time");
+        }
+    }
+}
+
+/// Seconds of `[0, horizon)` a supply spends at or above `threshold`.
+fn powered_time(h: &Harvester, threshold: f64, horizon: f64) -> f64 {
+    let mut up = 0.0;
+    for (guard, seg) in h.segments(0.0).enumerate() {
+        if seg.start >= horizon || guard > 4_000_000 {
+            break;
+        }
+        if seg.power >= threshold {
+            up += seg.end.min(horizon) - seg.start.max(0.0);
+        }
+        if seg.end >= horizon {
+            break;
+        }
+    }
+    up
+}
+
+/// The merged event timeline of one fleet cell. Observations sort before
+/// meetings at equal times (a detection made "now" can ship "now"), and
+/// ties break on identity — the order is a pure function of the cell.
+enum Event {
+    Obs { device: usize, window: u32 },
+    Meet { slot: u64, i: usize, j: usize },
+}
+
+/// Run one fleet cell: N replicas on `supplies`, opportunistic delta
+/// sync, convergence and bytes accounting. Pure and deterministic in
+/// `(spec, supplies, horizon, cell_seed)`.
+pub fn run_fleet_cell(
+    spec: &FleetSpec,
+    supplies: &[Harvester],
+    horizon: f64,
+    cell_seed: u64,
+) -> FleetDigest {
+    let n = spec.devices;
+    assert_eq!(supplies.len(), n, "fleet cell needs one supply per device");
+    let means: Vec<f64> = supplies.iter().map(|h| h.mean_power()).collect();
+    let thresholds: Vec<f64> = means.iter().map(|m| spec.up_fraction * m).collect();
+    let skews: Vec<f64> = {
+        let root = Rng::new(cell_seed ^ 0x5EED_F1EE_7B0A_D5E5);
+        (0..n)
+            .map(|d| root.clone().fork(d as u64 + 1).uniform() * spec.clock_skew)
+            .collect()
+    };
+    let powered =
+        |d: usize, t: f64| -> bool { supplies[d].power_at(t) >= thresholds[d] };
+
+    // Build the merged timeline.
+    let mut events: Vec<(f64, Event)> = Vec::new();
+    for d in 0..n {
+        let mut w = 0u32;
+        loop {
+            let t1 = (w as f64 + 1.0) * spec.obs_period + skews[d];
+            if t1 > horizon {
+                break;
+            }
+            events.push((t1, Event::Obs { device: d, window: w }));
+            w += 1;
+        }
+    }
+    let mut slot = 0u64;
+    loop {
+        let t = (slot as f64 + 1.0) * spec.meeting_period;
+        if t > horizon {
+            break;
+        }
+        for i in 0..n {
+            for j in (i + 1)..n {
+                events.push((t, Event::Meet { slot, i, j }));
+            }
+        }
+        slot += 1;
+    }
+    events.sort_by(|(ta, ea), (tb, eb)| {
+        ta.total_cmp(tb).then_with(|| event_order(ea).cmp(&event_order(eb)))
+    });
+
+    let mut replicas: Vec<Replica> = (0..n).map(|d| Replica::new(d, n)).collect();
+    let mut cursors: Vec<EnergyCursor> = supplies.iter().map(EnergyCursor::new).collect();
+    let mut det_count = vec![0u64; n];
+    let mut detect_time: BTreeMap<Key, f64> = BTreeMap::new();
+    let mut known: BTreeMap<Key, u32> = BTreeMap::new();
+
+    let mut meetings = 0u64;
+    let mut dropped = 0u64;
+    let mut exchanges = 0u64;
+    let mut bytes = 0u64;
+    let mut detections = 0u64;
+    let mut propagated = 0u64;
+    let mut latency_sum = 0.0f64;
+    let mut last_change = 0.0f64;
+
+    for (t, ev) in events {
+        match ev {
+            Event::Obs { device: d, window: w } => {
+                // A device can only sample and record while powered.
+                if !powered(d, t) {
+                    continue;
+                }
+                let e = cursors[d].energy(t - spec.obs_period, t);
+                if e <= DETECT_FACTOR * means[d] * spec.obs_period {
+                    continue;
+                }
+                detections += 1;
+                det_count[d] += 1;
+                let row = ((d as u32) << 16) | (w & 0xFFFF);
+                replicas[d].write(row, COL_ENERGY, quantise(e));
+                replicas[d].write(row, COL_DETECT, 1.0);
+                // Every device churns the shared aggregate row: the
+                // symmetric tiebreak is exercised in every run, not just
+                // contrived tests.
+                replicas[d].write(AGG_ROW, COL_COUNT, det_count[d] as f64);
+                detect_time.insert((row, COL_DETECT), t);
+                known.insert((row, COL_DETECT), 1);
+            }
+            Event::Meet { slot, i, j } => {
+                if !(powered(i, t) && powered(j, t)) {
+                    continue;
+                }
+                meetings += 1;
+                let p = (1.0 - spec.drop_rate) * spec.overlap_at(i, j);
+                let mut draw = Rng::new(meet_seed(cell_seed, slot, i, j));
+                if !draw.chance(p) {
+                    dropped += 1;
+                    continue;
+                }
+                exchanges += 1;
+                let (lo, hi) = replicas.split_at_mut(j);
+                let out = exchange(&mut lo[i], &mut hi[0]);
+                bytes += out.bytes;
+                if out.entries > 0 {
+                    last_change = t;
+                }
+                for key in out.new_a.iter().chain(out.new_b.iter()) {
+                    if key.1 != COL_DETECT || key.0 == AGG_ROW {
+                        continue;
+                    }
+                    let c = known.get_mut(key).expect("detections are registered at origin");
+                    *c += 1;
+                    if *c == n as u32 {
+                        propagated += 1;
+                        latency_sum += t - detect_time[key];
+                    }
+                }
+            }
+        }
+    }
+
+    let reference = replicas[0].state();
+    let converged = replicas
+        .iter()
+        .all(|r| r.state() == reference && r.vv() == replicas[0].vv());
+    let duty_sum: f64 = (0..n)
+        .map(|d| powered_time(&supplies[d], thresholds[d], horizon) / horizon)
+        .sum();
+    FleetDigest {
+        devices: n as u64,
+        meetings,
+        dropped,
+        exchanges,
+        bytes,
+        detections,
+        propagated,
+        latency_sum,
+        duty_sum,
+        converged,
+        converged_at: if converged { last_change } else { horizon },
+        gc_pruned: replicas.iter().map(|r| r.gc_pruned).sum(),
+    }
+}
+
+fn event_order(e: &Event) -> (u8, u64, u64) {
+    match e {
+        Event::Obs { device, window } => (0, *device as u64, *window as u64),
+        Event::Meet { slot, i, j } => (1, ((*i as u64) << 32) | *j as u64, *slot),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn local_writes_version_per_column() {
+        let mut r = Replica::new(0, 2);
+        r.write(1, COL_ENERGY, 5.0);
+        r.write(1, COL_ENERGY, 7.0);
+        r.write(1, COL_DETECT, 1.0);
+        let state = r.state();
+        assert_eq!(state.len(), 2);
+        assert_eq!(state[0], ((1, COL_ENERGY), 2, 0, 7.0f64.to_bits()));
+        assert_eq!(state[1], ((1, COL_DETECT), 1, 0, 1.0f64.to_bits()));
+        assert_eq!(r.vv(), &[3, 0]);
+    }
+
+    #[test]
+    fn exchange_ships_only_changed_columns() {
+        let mut a = Replica::new(0, 2);
+        let mut b = Replica::new(1, 2);
+        a.write(1, COL_ENERGY, 5.0);
+        a.write(1, COL_DETECT, 1.0);
+        let out = exchange(&mut a, &mut b);
+        assert_eq!(out.entries, 2);
+        assert_eq!(out.new_b.len(), 2);
+        assert_eq!(a.state(), b.state());
+        // Nothing changed since: the next meeting ships version vectors
+        // only.
+        let out = exchange(&mut a, &mut b);
+        assert_eq!(out.entries, 0);
+        assert_eq!(out.bytes, 2 * (EXCHANGE_OVERHEAD + 16));
+        // One new column -> exactly one entry, not the whole table.
+        b.write(2, COL_DETECT, 1.0);
+        let out = exchange(&mut a, &mut b);
+        assert_eq!(out.entries, 1);
+        assert_eq!(out.new_a, vec![(2, COL_DETECT)]);
+    }
+
+    #[test]
+    fn concurrent_writes_resolve_symmetrically() {
+        // Both write the same column concurrently at the same version:
+        // the (version, value bits, writer) order must pick the same
+        // winner regardless of which side merges first.
+        let mut a = Replica::new(0, 2);
+        let mut b = Replica::new(1, 2);
+        a.write(AGG_ROW, COL_COUNT, 3.0);
+        b.write(AGG_ROW, COL_COUNT, 5.0);
+        let (mut a2, mut b2) = (a.clone(), b.clone());
+        exchange(&mut a, &mut b);
+        exchange(&mut b2, &mut a2);
+        assert_eq!(a.state(), b.state());
+        assert_eq!(a.state(), a2.state());
+        assert_eq!(a2.state(), b2.state());
+        // Higher value bits win the version tie.
+        let winner = a.state()[0];
+        assert_eq!(winner.3, 5.0f64.to_bits());
+        assert_eq!(winner.2, 1, "writer 1 wrote the winning value");
+    }
+
+    #[test]
+    fn equal_values_tiebreak_on_writer() {
+        let mut a = Replica::new(0, 2);
+        let mut b = Replica::new(1, 2);
+        a.write(7, COL_DETECT, 1.0);
+        b.write(7, COL_DETECT, 1.0);
+        exchange(&mut a, &mut b);
+        let s = a.state();
+        assert_eq!(s.len(), 1);
+        assert_eq!(s[0].2, 1, "equal version+value must fall to the higher writer id");
+        assert_eq!(a.state(), b.state());
+    }
+
+    #[test]
+    fn relay_through_a_third_party_converges() {
+        let mut r: Vec<Replica> = (0..3).map(|d| Replica::new(d, 3)).collect();
+        r[0].write(1, COL_DETECT, 1.0);
+        // 0 never meets 2; the update travels 0 -> 1 -> 2.
+        let (a, rest) = r.split_at_mut(1);
+        exchange(&mut a[0], &mut rest[0]);
+        let (b, c) = rest.split_at_mut(1);
+        let out = exchange(&mut b[0], &mut c[0]);
+        assert_eq!(out.new_b, vec![(1, COL_DETECT)]);
+        assert_eq!(r[2].state(), r[0].state());
+    }
+
+    #[test]
+    fn gc_prunes_fully_acknowledged_entries_and_only_those() {
+        let mut a = Replica::new(0, 2);
+        let mut b = Replica::new(1, 2);
+        a.write(1, COL_ENERGY, 5.0);
+        a.write(1, COL_DETECT, 1.0);
+        assert_eq!(a.log_entries(), 2);
+        exchange(&mut a, &mut b);
+        // Two-device fleet: one exchange proves the peer holds
+        // everything, so both logs drain completely.
+        assert_eq!(a.log_entries(), 0, "acknowledged entries must be pruned");
+        assert_eq!(b.log_entries(), 0);
+        assert!(a.gc_pruned >= 2);
+        // New local writes are retained until the peer acks again.
+        a.write(2, COL_ENERGY, 3.0);
+        a.gc();
+        assert_eq!(a.log_entries(), 1, "unacked entries must survive GC");
+    }
+
+    #[test]
+    fn gc_in_a_triangle_waits_for_the_slowest_peer() {
+        let mut r: Vec<Replica> = (0..3).map(|d| Replica::new(d, 3)).collect();
+        r[0].write(1, COL_DETECT, 1.0);
+        let (a, rest) = r.split_at_mut(1);
+        exchange(&mut a[0], &mut rest[0]);
+        // Replica 2 has not acked: both 0 and 1 must retain the entry.
+        assert_eq!(r[0].log_entries(), 1, "entry retained while a peer lags");
+        assert_eq!(r[1].log_entries(), 1);
+        let (b, c) = rest.split_at_mut(1);
+        exchange(&mut b[0], &mut c[0]);
+        // 1 now knows 2 has it; 0 still does not know that.
+        assert_eq!(r[1].log_entries(), 0);
+        assert_eq!(r[2].log_entries(), 1, "2 cannot know 0 already holds it");
+        assert_eq!(r[0].log_entries(), 1);
+        // The ack matrix gossips back: 0 learns via its next meeting.
+        let (a, rest) = r.split_at_mut(1);
+        exchange(&mut a[0], &mut rest[0]);
+        assert_eq!(r[0].log_entries(), 0, "gossiped acks must eventually free the log");
+    }
+
+    #[test]
+    fn merge_order_never_changes_the_converged_state() {
+        // Three replicas, overlapping writes including a same-column
+        // conflict, three structurally different exchange schedules.
+        let build = || {
+            let mut r: Vec<Replica> = (0..3).map(|d| Replica::new(d, 3)).collect();
+            r[0].write(1, COL_ENERGY, 4.5);
+            r[0].write(1, COL_DETECT, 1.0);
+            r[1].write(2, COL_DETECT, 1.0);
+            r[1].write(AGG_ROW, COL_COUNT, 1.0);
+            r[2].write(AGG_ROW, COL_COUNT, 2.0);
+            r[2].write(3, COL_ENERGY, 0.25);
+            r
+        };
+        let run = |schedule: &[(usize, usize)]| -> Vec<_> {
+            let mut r = build();
+            for &(i, j) in schedule {
+                let (lo, hi) = r.split_at_mut(j.max(i));
+                let (x, y) = (i.min(j), 0);
+                exchange(&mut lo[x], &mut hi[y]);
+            }
+            assert_eq!(r[0].state(), r[1].state());
+            assert_eq!(r[1].state(), r[2].state());
+            r[0].state()
+        };
+        let s1 = run(&[(0, 1), (1, 2), (0, 1)]);
+        let s2 = run(&[(1, 2), (0, 2), (1, 2), (0, 1)]);
+        let s3 = run(&[(0, 2), (0, 1), (1, 2), (0, 2)]);
+        assert_eq!(s1, s2, "schedules must converge to identical state");
+        assert_eq!(s2, s3);
+    }
+
+    #[test]
+    fn spec_validation_rejects_hostile_fields() {
+        assert!(FleetSpec::default().validate().is_ok());
+        let bad = |f: &dyn Fn(&mut FleetSpec)| {
+            let mut s = FleetSpec::default();
+            f(&mut s);
+            s.validate()
+        };
+        assert!(bad(&|s| s.devices = 1).is_err());
+        assert!(bad(&|s| s.devices = 1000).is_err());
+        assert!(bad(&|s| s.drop_rate = 1.0).is_err());
+        assert!(bad(&|s| s.drop_rate = -0.1).is_err());
+        assert!(bad(&|s| s.clock_skew = f64::NAN).is_err());
+        assert!(bad(&|s| s.clock_skew = -1.0).is_err());
+        assert!(bad(&|s| s.meeting_period = 0.0).is_err());
+        assert!(bad(&|s| s.obs_period = f64::INFINITY).is_err());
+        assert!(bad(&|s| s.up_fraction = 0.0).is_err());
+        // Overlap: wrong shape, out-of-range, asymmetric.
+        assert!(bad(&|s| s.overlap = Some(vec![vec![1.0; 4]; 3])).is_err());
+        assert!(bad(&|s| s.overlap = Some(vec![vec![2.0; 4]; 4])).is_err());
+        let mut asym = vec![vec![1.0; 4]; 4];
+        asym[0][1] = 0.5;
+        assert!(bad(&|s| s.overlap = Some(asym.clone())).is_err());
+        // Budget caps against the horizon.
+        let s = FleetSpec { meeting_period: 1e-4, ..FleetSpec::default() };
+        assert!(s.validate_with_horizon(3600.0).is_err());
+        let s = FleetSpec { obs_period: 1e-3, ..FleetSpec::default() };
+        assert!(s.validate_with_horizon(3600.0).is_err());
+        assert!(FleetSpec::default().validate_with_horizon(3600.0).is_ok());
+    }
+
+    #[test]
+    fn spec_json_round_trips() {
+        let spec = FleetSpec {
+            devices: 3,
+            up_fraction: 0.8,
+            meeting_period: 10.0,
+            obs_period: 30.0,
+            drop_rate: 0.25,
+            clock_skew: 2.0,
+            overlap: Some(vec![
+                vec![1.0, 0.5, 0.1],
+                vec![0.5, 1.0, 0.9],
+                vec![0.1, 0.9, 1.0],
+            ]),
+        };
+        let text = crate::util::json::to_string(&spec.to_json());
+        let back = FleetSpec::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, spec);
+        assert!(FleetSpec::from_json(
+            &crate::util::json::parse(r#"{"kind":"fleet","sneaky":1}"#).unwrap()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn fleet_cell_is_deterministic_and_converges_on_constant_supplies() {
+        let spec = FleetSpec { devices: 3, ..FleetSpec::default() };
+        let supplies: Vec<Harvester> =
+            (0..3).map(|d| Harvester::Constant(1e-3 * (d + 1) as f64)).collect();
+        let a = run_fleet_cell(&spec, &supplies, 600.0, 7);
+        let b = run_fleet_cell(&spec, &supplies, 600.0, 7);
+        assert_eq!(a, b, "fleet cells must be pure functions of their inputs");
+        // Constant supplies: always powered, every meeting connects.
+        assert!(a.converged, "an always-up fleet must converge");
+        assert_eq!(a.dropped, 0);
+        assert!((a.duty_sum - 3.0).abs() < 1e-9);
+        // Constant supplies never clear the detection threshold, so the
+        // only traffic is version vectors.
+        assert_eq!(a.detections, 0);
+        assert!(a.bytes > 0, "vv exchange costs bytes even with no deltas");
+    }
+
+    #[test]
+    fn dropout_loses_rendezvous_but_not_correctness() {
+        let spec =
+            FleetSpec { devices: 3, drop_rate: 0.5, clock_skew: 5.0, ..FleetSpec::default() };
+        let supplies: Vec<Harvester> =
+            (0..3).map(|d| Harvester::Constant(1e-3 * (d + 1) as f64)).collect();
+        let d = run_fleet_cell(&spec, &supplies, 900.0, 11);
+        assert!(d.dropped > 0, "a 50% drop rate must lose some rendezvous");
+        assert_eq!(d.meetings, d.exchanges + d.dropped);
+        assert!(d.converged, "enough meetings survive to converge");
+    }
+}

@@ -58,8 +58,14 @@ impl EwmaPredictor {
     /// Non-finite observations are ignored rather than poisoning the
     /// estimate — a NaN budget can only come from a hostile device spec,
     /// and the estimator layer already clamps what such a budget affords.
+    ///
+    /// A non-finite clock also invalidates `last_boot`: the delta from
+    /// the boot *before* the bad cycle to the boot *after* it spans two
+    /// cycles, so folding it would inflate the gap estimate. The next
+    /// finite boot re-anchors instead.
     pub fn observe(&mut self, budget: f64, now: f64) {
-        if budget.is_finite() && budget >= 0.0 {
+        let budget_ok = budget.is_finite() && budget >= 0.0;
+        if budget_ok {
             if self.energy.is_nan() {
                 // Seed directly: an EWMA warmed from zero under-predicts
                 // for 1/alpha cycles, which would pin the bandit at the
@@ -81,8 +87,15 @@ impl EwmaPredictor {
                 }
             }
             self.last_boot = now;
+        } else {
+            self.last_boot = f64::NAN;
         }
-        self.cycles_seen = self.cycles_seen.saturating_add(1);
+        // Count only cycles that actually folded something in: a cycle
+        // whose budget and clock were both ignored left no trace in the
+        // estimate, so it must not advance "power cycles folded in".
+        if budget_ok || now.is_finite() {
+            self.cycles_seen = self.cycles_seen.saturating_add(1);
+        }
     }
 
     /// Best current estimate of next cycle's budget, or `fallback`
@@ -158,7 +171,48 @@ mod tests {
         // Time still advances, so the gap keeps learning.
         assert!((p.gap - 5.0).abs() < 1e-9);
         p.observe(2.0e-3, f64::NAN);
-        assert_eq!(p.last_boot, 15.0, "non-finite clocks are ignored too");
+        assert!(
+            p.last_boot.is_nan(),
+            "a non-finite clock must invalidate the boot anchor, got {}",
+            p.last_boot
+        );
+    }
+
+    #[test]
+    fn hostile_clock_cycle_does_not_inflate_the_gap() {
+        let mut p = EwmaPredictor::new(0.3);
+        p.observe(1.0e-3, 0.0);
+        p.observe(1.0e-3, 5.0);
+        assert!((p.gap - 5.0).abs() < 1e-12, "gap seeded from the first delta");
+        // One hostile-clock cycle in the middle: the 5.0 → 15.0 span
+        // covers *two* cycles, so the pre-fix fold of delta = 10.0 would
+        // read as a doubled gap. It must be skipped entirely.
+        p.observe(1.0e-3, f64::NAN);
+        p.observe(1.0e-3, 15.0);
+        assert!(
+            (p.gap - 5.0).abs() < 1e-12,
+            "the spanning delta across a bad clock must not be folded, gap={}",
+            p.gap
+        );
+        // Learning resumes from the re-anchored boot.
+        p.observe(1.0e-3, 20.0);
+        assert!((p.gap - 5.0).abs() < 1e-12);
+        assert_eq!(p.last_boot, 20.0);
+    }
+
+    #[test]
+    fn fully_ignored_cycles_are_not_counted() {
+        let mut p = EwmaPredictor::new(0.3);
+        p.observe(1.0e-3, 0.0);
+        assert_eq!(p.cycles_seen, 1);
+        // Budget and clock both hostile: nothing was folded in.
+        p.observe(f64::NAN, f64::NAN);
+        assert_eq!(p.cycles_seen, 1, "a fully ignored cycle must not count");
+        // One usable half is enough to count the cycle.
+        p.observe(f64::NAN, 5.0);
+        assert_eq!(p.cycles_seen, 2);
+        p.observe(1.0e-3, f64::NAN);
+        assert_eq!(p.cycles_seen, 3);
     }
 
     #[test]

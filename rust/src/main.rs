@@ -45,6 +45,12 @@ COMMANDS:
   adaptive_rf     adaptive learner vs static policies on the RF family
   adaptive_multi  adaptive learner vs static policies on the multi-source
                   family (Pareto projection: frontier + auto-selection)
+  fleet [NAME]    simulated multi-device fleet with coordination-free
+                  delta sync (default: fleet_solar; also a builtin name)
+  fleet_solar     4-device fleet on the diurnal-solar family (latency
+                  projection: detection propagation across the fleet)
+  fleet_multi     6-device lossy fleet (20% drop, 3 s clock skew) on the
+                  multi-source family (convergence projection)
   all             every figure in sequence
   sweep FILE      run a scenario file: any workload (har|img|audio) x
                   harvester x device x policy x seed grid (also:
@@ -110,6 +116,17 @@ fn main() {
         "traces" => run_traces(&out, seed),
         "artifacts-check" => run_artifacts_check(args.get_or("artifacts", "artifacts")),
         "simulate" => run_simulate(&args, seed, engine),
+        "fleet" => {
+            // `aic fleet` runs a named fleet builtin (default fleet_solar);
+            // the builtin names themselves also dispatch directly below.
+            let name = args.positional_at(1).unwrap_or("fleet_solar");
+            if !BUILTIN_NAMES.contains(&name) {
+                eprintln!("error: unknown fleet scenario '{name}' (try fleet_solar|fleet_multi)\n");
+                eprint!("{USAGE}");
+                std::process::exit(2);
+            }
+            run_figure(name, seed, fast, engine, &out, None)
+        }
         name if BUILTIN_NAMES.contains(&name) => {
             run_figure(name, seed, fast, engine, &out, None)
         }

@@ -74,6 +74,33 @@ fn render(tables: &[TableData]) -> String {
     s
 }
 
+/// The predictor the learner leans on must survive a hostile clock: a
+/// cycle whose boot timestamp is non-finite invalidates the boot anchor,
+/// so the next finite boot re-anchors instead of folding a two-cycle
+/// span into the gap EWMA (the pre-fix behaviour doubled the estimate,
+/// which halves the bandit's perceived duty cycle). Fully ignored
+/// cycles must not count as "folded in" either.
+#[test]
+fn predictor_survives_a_hostile_clock_cycle() {
+    use aic::energy::predictor::EwmaPredictor;
+    let mut p = EwmaPredictor::new(0.3);
+    p.observe(1.0e-3, 0.0);
+    p.observe(1.0e-3, 5.0);
+    assert!((p.gap_or(0.0) - 5.0).abs() < 1e-12);
+    p.observe(1.0e-3, f64::NAN); // hostile clock, usable budget
+    p.observe(1.0e-3, 15.0); // spans two cycles — must not fold
+    assert!(
+        (p.gap_or(0.0) - 5.0).abs() < 1e-12,
+        "hostile-clock span inflated the gap to {}",
+        p.gap_or(0.0)
+    );
+    p.observe(1.0e-3, 20.0); // learning resumes from the new anchor
+    assert!((p.gap_or(0.0) - 5.0).abs() < 1e-12);
+    assert_eq!(p.cycles_seen, 5, "the hostile cycle still folded its budget");
+    p.observe(f64::NAN, f64::NAN); // nothing usable at all
+    assert_eq!(p.cycles_seen, 5, "a fully ignored cycle must not count");
+}
+
 #[test]
 fn adaptive_sweeps_are_bitwise_identical_across_pool_sizes_and_engines() {
     for kind in KINDS {

@@ -1,0 +1,277 @@
+//! Acceptance gates for the multi-device fleet layer.
+//!
+//! Three contracts, mirroring the repo's other sweep suites:
+//!
+//! * **Merge-order independence** — the delta-sync replicas are a
+//!   delta-state CRDT: any pairwise exchange schedule that reaches
+//!   version-vector closure converges every replica to the identical
+//!   state (and fingerprint), regardless of the order meetings happened.
+//! * **Determinism** — fleet sweeps are bitwise identical across worker
+//!   pools {1, 2, 8} and on both integrator legs (the fleet simulation
+//!   never touches the device engine, so the legs must agree with each
+//!   other too).
+//! * **Streaming/store parity** — fleet grids stream to the same bytes
+//!   as the batch path, survive a mid-sweep kill, and resume from the
+//!   store without re-simulating committed cells.
+
+use aic::coordinator::scenario::{builtin, DeviceSpec, Projection, Scenario};
+use aic::coordinator::sink::{emit_all, MemorySink, TableData};
+use aic::coordinator::store::Store;
+use aic::coordinator::stream::{run_streaming, StreamOptions};
+use aic::coordinator::sync::{exchange, Replica};
+use aic::exec::engine::EngineKind;
+use aic::util::json;
+use std::path::PathBuf;
+
+const KINDS: [EngineKind; 2] = [EngineKind::Analytic, EngineKind::FixedStep];
+
+// ---------------------------------------------------------------------
+// Merge-order independence.
+// ---------------------------------------------------------------------
+
+/// A fixed workload of concurrent writes: every replica touches shared
+/// rows (forcing tiebreaks), its own rows, and re-writes a shared
+/// aggregate column several times (forcing version dominance).
+fn seed_writes(fleet: &mut [Replica]) {
+    let n = fleet.len();
+    for (i, r) in fleet.iter_mut().enumerate() {
+        for w in 0..4u32 {
+            r.write(w, 0, (i as f64 + 1.0) * 0.125 + w as f64);
+            r.write(w, 1, 1.0);
+        }
+        r.write(100 + i as u32, 0, i as f64);
+        for round in 0..3u64 {
+            r.write(u32::MAX, 2, (round * n as u64 + i as u64) as f64);
+        }
+    }
+}
+
+/// Run one exchange schedule (a list of (i, j) meetings) on a fresh
+/// fleet and return the converged state + fingerprints. The schedule
+/// must reach closure: every replica ends bitwise equal to replica 0.
+fn run_schedule(n: usize, schedule: &[(usize, usize)]) -> (Vec<(u64, Vec<u8>)>, usize) {
+    let mut fleet: Vec<Replica> = (0..n).map(|i| Replica::new(i, n)).collect();
+    seed_writes(&mut fleet);
+    for &(i, j) in schedule {
+        assert_ne!(i, j);
+        let (lo, hi) = fleet.split_at_mut(i.max(j));
+        exchange(&mut lo[i.min(j)], &mut hi[0]);
+    }
+    let states: Vec<(u64, Vec<u8>)> = fleet
+        .iter()
+        .map(|r| {
+            (r.fingerprint(), format!("{:?}{:?}", r.state(), r.vv()).into_bytes())
+        })
+        .collect();
+    for (i, s) in states.iter().enumerate() {
+        assert_eq!(s, &states[0], "replica {i} did not converge under {schedule:?}");
+    }
+    let residue = fleet.iter().map(|r| r.log_entries()).sum();
+    (states, residue)
+}
+
+#[test]
+fn any_exchange_schedule_converges_to_the_same_state() {
+    let n = 4;
+    // Three structurally different closures of the same write set:
+    // a ring swept twice, a star through replica 0, and a "gossip storm"
+    // that hits every pair in both orders.
+    let ring: Vec<(usize, usize)> =
+        (0..2 * n).map(|k| (k % n, (k + 1) % n)).collect();
+    let star: Vec<(usize, usize)> = (1..n)
+        .map(|i| (0, i))
+        .chain((1..n).map(|i| (i, 0)))
+        .chain((1..n).map(|i| (0, i)))
+        .collect();
+    let mut storm: Vec<(usize, usize)> = Vec::new();
+    for round in 0..3 {
+        for i in 0..n {
+            for j in (i + 1)..n {
+                if round % 2 == 0 {
+                    storm.push((i, j));
+                } else {
+                    storm.push((j, i));
+                }
+            }
+        }
+    }
+    let (want, _) = run_schedule(n, &ring);
+    for (label, schedule) in [("star", &star), ("storm", &storm)] {
+        let (got, _) = run_schedule(n, schedule);
+        assert_eq!(got, want, "{label} schedule diverged from the ring closure");
+    }
+    // GC is coordination-free but still complete: once every pair has
+    // gossiped twice more, every log entry is acknowledged everywhere
+    // and pruned — no unbounded growth.
+    let full: Vec<(usize, usize)> = storm.iter().chain(storm.iter()).copied().collect();
+    let (got, residue) = run_schedule(n, &full);
+    assert_eq!(got, want, "extra gossip changed the converged state");
+    assert_eq!(residue, 0, "fully acknowledged logs must be pruned");
+}
+
+// ---------------------------------------------------------------------
+// Sweep determinism across pools and engine legs.
+// ---------------------------------------------------------------------
+
+/// The `fleet_multi` builtin in fast mode: 6 devices with drop-out and
+/// clock skew on the multi-source composite — the hardest deterministic
+/// surface (every stochastic knob active), still CI-cheap at 600 s.
+fn fleet_scenario(kind: EngineKind) -> Scenario {
+    builtin("fleet_multi", 42)
+        .unwrap()
+        .with_devices(vec![DeviceSpec { engine: Some(kind), ..DeviceSpec::default() }])
+        .resolve(true)
+}
+
+fn tables_with_workers(sc: &Scenario, workers: usize) -> Vec<TableData> {
+    let run = sc.run_with(false, None, Some(workers));
+    let mut m = MemorySink::new();
+    emit_all(&run.tables(), &mut m).unwrap();
+    m.tables
+}
+
+/// Every rendered byte of a table set, concatenated — so a formatting
+/// drift cannot hide behind `PartialEq`.
+fn render(tables: &[TableData]) -> String {
+    let mut s = String::new();
+    for t in tables {
+        s.push_str(&t.stem);
+        s.push_str(&t.to_csv());
+        s.push_str(&t.to_markdown());
+        s.push_str(&json::to_string(&t.to_json()));
+    }
+    s
+}
+
+#[test]
+fn fleet_sweeps_are_bitwise_identical_across_pool_sizes_and_engines() {
+    let mut legs: Vec<Vec<TableData>> = Vec::new();
+    for kind in KINDS {
+        let sc = fleet_scenario(kind);
+        let reference = tables_with_workers(&sc, 1);
+        for workers in [2usize, 8] {
+            let got = tables_with_workers(&sc, workers);
+            assert_eq!(got, reference, "{kind:?} workers={workers}: tables drifted");
+            assert_eq!(
+                render(&got),
+                render(&reference),
+                "{kind:?} workers={workers}: rendered bytes drifted"
+            );
+        }
+        legs.push(reference);
+    }
+    // The fleet simulation never runs the device integrator, so the two
+    // engine legs must agree on every result as well. Only the "device"
+    // label column (which spells the engine override) may differ.
+    let strip_device = |tables: &[TableData]| -> Vec<Vec<Vec<String>>> {
+        tables
+            .iter()
+            .map(|t| {
+                let col = t.header.iter().position(|h| h == "device");
+                t.rows
+                    .iter()
+                    .map(|row| {
+                        row.iter()
+                            .enumerate()
+                            .filter(|&(i, _)| Some(i) != col)
+                            .map(|(_, c)| c.clone())
+                            .collect()
+                    })
+                    .collect()
+            })
+            .collect()
+    };
+    assert_eq!(
+        strip_device(&legs[0]),
+        strip_device(&legs[1]),
+        "engine legs disagree on fleet results"
+    );
+}
+
+#[test]
+fn every_fleet_projection_renders_on_both_builtins() {
+    for name in ["fleet_solar", "fleet_multi"] {
+        let base = builtin(name, 42).unwrap().resolve(true);
+        for proj in [
+            Projection::FleetLatency,
+            Projection::FleetConvergence,
+            Projection::FleetBytes,
+            Projection::Cells,
+        ] {
+            let sc = base.clone().with_projection(proj);
+            sc.validate().unwrap_or_else(|e| panic!("{name}/{proj:?}: {e}"));
+            let tables = tables_with_workers(&sc, 2);
+            assert!(!tables.is_empty(), "{name}/{proj:?}: no tables");
+            for t in &tables {
+                assert!(!t.rows.is_empty(), "{name}/{proj:?}: empty table {}", t.stem);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Streaming, kill/resume, and store dedup on a fleet grid.
+// ---------------------------------------------------------------------
+
+#[test]
+fn fleet_streaming_matches_batch_and_resumes_to_identical_bytes() {
+    let sc = fleet_scenario(EngineKind::Analytic);
+    let cells = sc.plan().len();
+    assert_eq!(cells, 2, "grid shape changed under this test");
+    let cache = aic::coordinator::experiment::SupplyCache::new();
+    let want = tables_with_workers(&sc, 2);
+
+    // Store-less streaming equals batch for chunk shapes below,
+    // unaligned to, and above the grid.
+    for (workers, chunk) in [(1usize, 1usize), (2, 3), (8, 64)] {
+        let opts = StreamOptions { workers: Some(workers), chunk, ..StreamOptions::default() };
+        let mut m = MemorySink::new();
+        let report = run_streaming(&sc, &opts, None, &cache, None, &mut m).unwrap();
+        assert!(!report.partial);
+        assert_eq!(report.ran, cells);
+        assert_eq!(m.tables, want, "workers={workers} chunk={chunk}");
+        assert_eq!(render(&m.tables), render(&want), "workers={workers} chunk={chunk}");
+    }
+
+    // Kill after 1 committed cell, reopen, resume to identical bytes.
+    let path: PathBuf =
+        std::env::temp_dir().join(format!("aic_fleet_resume_{}.aic", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    {
+        let mut store = Store::open(&path).unwrap();
+        let opts = StreamOptions {
+            workers: Some(2),
+            chunk: 1,
+            stop_after: Some(1),
+            ..StreamOptions::default()
+        };
+        let mut m = MemorySink::new();
+        let report = run_streaming(&sc, &opts, None, &cache, Some(&mut store), &mut m).unwrap();
+        assert!(report.partial, "stop_after must abort the sweep");
+    }
+    {
+        let mut store = Store::open(&path).unwrap();
+        assert_eq!(store.cell_count(), 1, "killed run must have committed 1 cell");
+        let opts = StreamOptions { workers: Some(3), chunk: 5, ..StreamOptions::default() };
+        let mut m = MemorySink::new();
+        let report = run_streaming(&sc, &opts, None, &cache, Some(&mut store), &mut m).unwrap();
+        assert!(!report.partial);
+        assert_eq!(report.reused, 1, "committed fleet cells must not re-run");
+        assert_eq!(report.ran, cells - 1);
+        assert_eq!(m.tables, want, "resumed fleet projections drifted from the clean run");
+        assert_eq!(render(&m.tables), render(&want));
+    }
+    // Everything committed: a re-run simulates nothing and still emits
+    // the same bytes (the store round-trips the fleet digest payload).
+    {
+        let mut store = Store::open(&path).unwrap();
+        let opts = StreamOptions { workers: Some(1), chunk: 64, ..StreamOptions::default() };
+        let mut m = MemorySink::new();
+        let report = run_streaming(&sc, &opts, None, &cache, Some(&mut store), &mut m).unwrap();
+        assert_eq!(report.reused, cells);
+        assert_eq!(report.ran, 0);
+        assert_eq!(m.tables, want);
+        assert_eq!(render(&m.tables), render(&want));
+    }
+    let _ = std::fs::remove_file(&path);
+}

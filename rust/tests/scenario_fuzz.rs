@@ -146,6 +146,71 @@ fn type_swaps_are_errors_not_panics() {
     }
 }
 
+/// Hostile fleet workload objects: every one must come back as `Err`
+/// from `Scenario::parse` (or fail validation), never panic — the fleet
+/// spec carries enough numeric knobs (device counts, overlap matrices,
+/// skew) to make unchecked arithmetic or allocation a real hazard.
+#[test]
+fn hostile_fleet_specs_are_errors_not_panics() {
+    let wrap = |workload: &str| format!(r#"{{"name": "x", "workload": {workload}}}"#);
+    let bad = [
+        // Degenerate and resource-hostile device counts.
+        r#"{"kind": "fleet", "devices": 0}"#,
+        r#"{"kind": "fleet", "devices": 1}"#,
+        r#"{"kind": "fleet", "devices": 1000}"#,
+        r#"{"kind": "fleet", "devices": 18446744073709551615}"#,
+        r#"{"kind": "fleet", "devices": -4}"#,
+        r#"{"kind": "fleet", "devices": 4.5}"#,
+        r#"{"kind": "fleet", "devices": "four"}"#,
+        // Periods and fractions out of range or non-finite.
+        r#"{"kind": "fleet", "meeting_period": 0}"#,
+        r#"{"kind": "fleet", "meeting_period": -15}"#,
+        r#"{"kind": "fleet", "obs_period": 0}"#,
+        r#"{"kind": "fleet", "obs_period": 1e999}"#,
+        r#"{"kind": "fleet", "up_fraction": 0}"#,
+        r#"{"kind": "fleet", "up_fraction": -0.5}"#,
+        r#"{"kind": "fleet", "up_fraction": 101}"#,
+        // Drop rates at or past certain loss, hostile skew.
+        r#"{"kind": "fleet", "drop_rate": 1}"#,
+        r#"{"kind": "fleet", "drop_rate": 1.5}"#,
+        r#"{"kind": "fleet", "drop_rate": -0.1}"#,
+        r#"{"kind": "fleet", "clock_skew": -1}"#,
+        r#"{"kind": "fleet", "clock_skew": NaN}"#,
+        r#"{"kind": "fleet", "clock_skew": 1e999}"#,
+        // Overlap matrices: wrong shape, asymmetric, out of range,
+        // wrong element types.
+        r#"{"kind": "fleet", "devices": 3, "overlap": [[1, 1], [1, 1]]}"#,
+        r#"{"kind": "fleet", "devices": 2, "overlap": [[1, 1], [1]]}"#,
+        // Ragged beyond the transpose's reach: validation must reject
+        // the shape before the symmetry check indexes row 2 column 1.
+        r#"{"kind": "fleet", "devices": 3, "overlap": [[1, 1, 1], [1, 1, 1], [1]]}"#,
+        r#"{"kind": "fleet", "devices": 2, "overlap": [[1, 0.2], [0.8, 1]]}"#,
+        r#"{"kind": "fleet", "devices": 2, "overlap": [[1, 1.5], [1.5, 1]]}"#,
+        r#"{"kind": "fleet", "devices": 2, "overlap": [[1, -0.5], [-0.5, 1]]}"#,
+        r#"{"kind": "fleet", "devices": 2, "overlap": [["a", "b"], ["c", "d"]]}"#,
+        r#"{"kind": "fleet", "devices": 2, "overlap": 1}"#,
+        // Unknown keys and type-swapped fields are strict errors.
+        r#"{"kind": "fleet", "sneaky": 1}"#,
+        r#"{"kind": "fleet", "devices": {}}"#,
+        r#"{"kind": "fleet", "drop_rate": "low"}"#,
+    ];
+    for workload in bad {
+        let doc = wrap(workload);
+        assert!(!probe(&doc), "accepted: {doc}");
+    }
+    // The well-formed baseline parses — the rejections above are real.
+    assert!(probe(&wrap(r#"{"kind": "fleet", "devices": 3}"#)));
+    // A fleet grid whose horizon implies a meeting count past the cap
+    // must fail validation, not allocate.
+    let flood = r#"{"name": "x", "workload": {"kind": "fleet", "devices": 64,
+        "meeting_period": 0.001}, "horizon": 3600}"#;
+    assert!(!probe(flood), "accepted a meeting-count flood");
+    // Fleet workloads only fit the fleet/cells projections.
+    let mismatch =
+        r#"{"name": "x", "workload": {"kind": "fleet"}, "projection": "policy-accuracy"}"#;
+    assert!(!probe(mismatch), "accepted a non-fleet projection on a fleet workload");
+}
+
 #[test]
 fn non_finite_number_literals_are_rejected() {
     for lit in ["NaN", "nan", "Infinity", "-Infinity", "1e999", "-1e999", "1e400"] {
@@ -288,6 +353,7 @@ fn fuzz_digest(seed: u64) -> CellDigest {
         latency_bins: None,
         slots: None,
         pictures: None,
+        fleet: None,
     }
 }
 
